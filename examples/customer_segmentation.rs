@@ -1,0 +1,64 @@
+//! TPC-AI customer segmentation (paper Fig. 8): KMeans clustering of a
+//! behavioural mixture, compared across the backend ladder.
+//!
+//! The paper runs TPCx-AI use case 1 (customer segmentation, K-means,
+//! 1 GB synthetic). At f64 the analogous in-memory footprint is reached
+//! around 500k × 10; pass `small` for a quick run.
+//!
+//! ```bash
+//! cargo run --release --example customer_segmentation [-- small]
+//! ```
+
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::tables::synth;
+use std::time::Instant;
+
+fn main() -> onedal_sve::error::Result<()> {
+    let small = std::env::args().any(|a| a == "small");
+    let (n, d, k) = if small { (50_000, 10, 8) } else { (500_000, 10, 8) };
+    println!("== Fig. 8 reproduction: TPC-AI customer segmentation ==");
+    println!("dataset: {n} rows × {d} features, k = {k}\n");
+
+    let mut engine = Mt19937::new(8);
+    let x = synth::make_segmentation(&mut engine, n, d, k);
+
+    let mut backends: Vec<(&'static str, Context)> = vec![
+        ("sklearn-analogue (naive)", Context::with_backend(Backend::Naive)?),
+        ("x86-MKL-analogue (reference)", Context::with_backend(Backend::Reference)?),
+        ("ARM-SVE-optimized (vectorized)", Context::with_backend(Backend::Vectorized)?),
+    ];
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        backends.push(("AOT Pallas (artifact)", Context::with_backend(Backend::Artifact)?));
+    }
+
+    let mut results = Vec::new();
+    for (name, ctx) in &backends {
+        let t = Instant::now();
+        let model = KMeans::params().k(k).max_iter(25).seed(1).train(ctx, &x)?;
+        let train = t.elapsed();
+        let t = Instant::now();
+        let assign = model.infer(ctx, &x)?;
+        let infer = t.elapsed();
+        println!(
+            "{name:<32} train {train:>10.3?}   infer {infer:>10.3?}   inertia {:.4e} ({} iters)",
+            model.inertia, model.iterations
+        );
+        let occupied = {
+            let mut seen = vec![false; k];
+            for &a in &assign {
+                seen[a] = true;
+            }
+            seen.iter().filter(|&&s| s).count()
+        };
+        assert_eq!(occupied, k, "all clusters must be used");
+        results.push((name, train, infer));
+    }
+
+    println!("\nreduction in training time (the Fig. 8 comparison):");
+    let base = results[0].1.as_secs_f64();
+    for (name, train, _) in &results[1..] {
+        println!("  vs naive: {name:<32} −{:.1} %", 100.0 * (1.0 - train.as_secs_f64() / base));
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! DataPerf Selection-for-Speech (paper Fig. 7): a data-selection
+//! pipeline over keyword-spotting embeddings for three "languages"
+//! (en/id/pt), timed across backends.
+//!
+//! The DataPerf challenge scores *training-set selection* algorithms: a
+//! selector ranks candidate utterances, a downstream classifier is
+//! trained on the selected subset and evaluated. We reproduce the
+//! pipeline shape with MSWC-like synthetic embeddings (DESIGN.md §2):
+//! per-language candidate pools of different sizes, a logistic-regression
+//! scorer, top-K selection, then a KNN evaluation model.
+//!
+//! ```bash
+//! cargo run --release --example dataperf_speech
+//! ```
+
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::metrics;
+use onedal_sve::prelude::*;
+use onedal_sve::tables::{synth, DenseTable};
+use std::time::{Duration, Instant};
+
+/// One language's selection task.
+struct Task {
+    lang: &'static str,
+    pool: DenseTable<f64>,
+    labels: Vec<f64>,
+}
+
+fn make_tasks(seed: u32) -> Vec<Task> {
+    // Pool sizes mirror the MSWC language imbalance (en ≫ pt > id).
+    let mut e = Mt19937::new(seed);
+    [("en", 25_000usize), ("id", 8_000), ("pt", 12_000)]
+        .into_iter()
+        .map(|(lang, n)| {
+            let (pool, labels) = synth::make_speech_embeddings(&mut e, n, 40, 12, 0.35);
+            Task { lang, pool, labels }
+        })
+        .collect()
+}
+
+fn run_selection(ctx: &Context, t: &Task) -> onedal_sve::error::Result<(Duration, Duration, f64)> {
+    // --- training phase: fit the selector + build the eval model ---
+    let t0 = Instant::now();
+    let scorer = LogisticRegression::params().epochs(12).lr(0.3).train(ctx, &t.pool, &t.labels)?;
+    let scores = scorer.predict_proba(ctx, &t.pool)?;
+    // top 20 % by score
+    let mut idx: Vec<usize> = (0..t.pool.rows()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx.truncate(t.pool.rows() / 5);
+    let selected = t.pool.gather_rows(&idx);
+    let sel_labels: Vec<f64> = idx.iter().map(|&i| t.labels[i]).collect();
+    let eval_model = KnnClassifier::params().k(5).train(ctx, &selected, &sel_labels)?;
+    let train = t0.elapsed();
+
+    // --- inference phase: score a held-out query set ---
+    let mut e = Mt19937::new(99);
+    let (queries, qlabels) = synth::make_speech_embeddings(&mut e, 2_000, 40, 12, 0.35);
+    let t0 = Instant::now();
+    let pred = eval_model.infer(ctx, &queries)?;
+    let infer = t0.elapsed();
+    let acc = metrics::accuracy(&pred, &qlabels);
+    Ok((train, infer, acc))
+}
+
+fn main() -> onedal_sve::error::Result<()> {
+    println!("== Fig. 7 reproduction: DataPerf selection-for-speech ==\n");
+    let tasks = make_tasks(7);
+    let mut backends: Vec<(&'static str, Context)> = vec![
+        ("sklearn-analogue (naive)", Context::with_backend(Backend::Naive)?),
+        ("x86-MKL-analogue (reference)", Context::with_backend(Backend::Reference)?),
+        ("ARM-SVE-optimized (vectorized)", Context::with_backend(Backend::Vectorized)?),
+    ];
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        backends.push(("AOT Pallas (artifact)", Context::with_backend(Backend::Artifact)?));
+    }
+
+    println!("{:<6} {:<32} {:>12} {:>12} {:>8}", "lang", "backend", "train", "infer", "acc");
+    let mut naive_train = std::collections::HashMap::new();
+    for task in &tasks {
+        for (name, ctx) in &backends {
+            let (train, infer, acc) = run_selection(ctx, task)?;
+            println!("{:<6} {:<32} {:>12.3?} {:>12.3?} {:>8.3}", task.lang, name, train, infer, acc);
+            if name.starts_with("sklearn") {
+                naive_train.insert(task.lang, train.as_secs_f64());
+            } else {
+                let red = 100.0 * (1.0 - train.as_secs_f64() / naive_train[task.lang]);
+                println!("{:<6} {:<32} training-time reduction vs naive: {red:.0} %", "", "");
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Covers the oneDAL-style `params() → train → infer` flow, the backend
+//! dispatch ladder, the VSL statistics, and CSV round-tripping.
+
+use onedal_sve::algorithms::covariance::Covariance;
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::tables::{csv, synth};
+
+fn main() -> onedal_sve::error::Result<()> {
+    // A context resolves the dispatch ladder once (Auto picks the
+    // artifact rung when `make artifacts` has been run).
+    let ctx = Context::builder().backend(Backend::Auto).build()?;
+    println!("backend: {}", ctx.backend().name());
+
+    // --- data: synthetic blobs, saved + reloaded through CSV ---
+    let mut engine = Mt19937::new(42);
+    let (x, _) = synth::make_blobs(&mut engine, 5_000, 8, 4, 1.0);
+    let path = std::env::temp_dir().join("onedal_sve_quickstart.csv");
+    csv::save_csv(&x, &path)?;
+    let x = DenseTable::from_csv(&path)?;
+    println!("loaded {} rows × {} features from {}", x.rows(), x.cols(), path.display());
+
+    // --- clustering ---
+    let kmeans = KMeans::params().k(4).max_iter(100).train(&ctx, &x)?;
+    println!(
+        "kmeans: inertia {:.1} after {} iterations",
+        kmeans.inertia, kmeans.iterations
+    );
+    let labels = kmeans.infer(&ctx, &x)?;
+
+    // --- summary statistics (the paper's VSL substrate) ---
+    let cov = Covariance::params().train(&ctx, &x)?;
+    println!("covariance diagonal: {:?}", (0..4).map(|i| cov.matrix.get(i, i)).collect::<Vec<_>>());
+
+    // --- PCA on top of the same xcp machinery ---
+    let pca = Pca::params().n_components(2).train(&ctx, &x)?;
+    let projected = pca.transform(&ctx, &x)?;
+    println!(
+        "pca: explained variance {:?}, projected to {} cols",
+        pca.explained_variance,
+        projected.cols()
+    );
+
+    // --- supervised: SVM with the SVE-style WSS on the blobs' parity ---
+    let y: Vec<f64> = labels.iter().map(|&c| f64::from(c % 2 == 0)).collect();
+    let svm = Svc::params().solver(SvmSolver::Thunder).train(&ctx, &x, &y)?;
+    let acc = onedal_sve::metrics::accuracy(&svm.infer(&ctx, &x)?, &y);
+    println!("svm: {} support vectors, train accuracy {:.3}", svm.n_support(), acc);
+
+    let _ = std::fs::remove_file(&path);
+    Ok(())
+}

@@ -1,0 +1,95 @@
+"""Pallas kernels for distance computations (Layer 1).
+
+The paper's SVE insight — one vector-length-agnostic loop with predicated
+tails — maps to Pallas as: one kernel over a BlockSpec tile whose bounds
+masks (`iota < n_valid`) play the role of `svwhilelt` predicates, with
+the centroid/point contraction targeted at the MXU (`jnp.dot` on f32).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both the pytest
+oracle checks and the Rust runtime execute (see DESIGN.md §3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.4e38  # +inf stand-in as a python float (pallas kernels must not capture arrays)
+
+
+def _kmeans_assign_kernel(x_ref, c_ref, valid_ref, assign_ref, dist_ref):
+    """Single-tile nearest-centroid kernel.
+
+    VMEM footprint (default variant 1024×128 + 32×128 f32) ≈ 544 KiB —
+    comfortably inside a TPU core's ~16 MiB VMEM; the whole tile is one
+    block so HBM↔VMEM traffic is one load per operand, one store per
+    output.
+    """
+    x = x_ref[...]                       # [n, d]
+    c = c_ref[...]                       # [k, d]
+    k_valid = valid_ref[1]
+    xsq = jnp.sum(x * x, axis=1, keepdims=True)
+    csq = jnp.sum(c * c, axis=1)[None, :]
+    # MXU contraction: [n,d] @ [d,k].
+    cross = jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    d2 = xsq - 2.0 * cross + csq
+    # Predicate on the centroid axis: padded centroids never win.
+    kmask = jnp.arange(c.shape[0], dtype=jnp.float32)[None, :] < k_valid
+    d2 = jnp.where(kmask, d2, BIG)
+    assign_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.float32)
+    dist_ref[...] = jnp.min(d2, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kmeans_assign(x, c, valid, interpret=True):
+    """Pallas-called nearest-centroid assignment.
+
+    x: f32[n, d], c: f32[k, d], valid: f32[2] → (assign f32[n], dist f32[n])
+    """
+    n = x.shape[0]
+    return pl.pallas_call(
+        _kmeans_assign_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x, c, valid)
+
+
+def _pairwise_kernel(q_ref, x_ref, out_ref):
+    """Tiled pairwise squared distance; grid over query tiles."""
+    q = q_ref[...]                       # [tq, d]
+    x = x_ref[...]                       # [n, d]
+    qsq = jnp.sum(q * q, axis=1, keepdims=True)
+    xsq = jnp.sum(x * x, axis=1)[None, :]
+    cross = jnp.dot(q, x.T, preferred_element_type=jnp.float32)
+    out_ref[...] = jnp.maximum(qsq - 2.0 * cross + xsq, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "interpret"))
+def pairwise_sqdist(q, x, tile_q=128, interpret=True):
+    """q: f32[m, d], x: f32[n, d] → f32[m, n].
+
+    The query axis is gridded in `tile_q` blocks (the BlockSpec expresses
+    the HBM→VMEM schedule the paper writes with threadblocks on GPU);
+    the reference set is re-streamed per tile, which is the right
+    trade-off while n·d fits VMEM.
+    """
+    m, d = q.shape
+    n = x.shape[0]
+    assert m % tile_q == 0, "pad the query tile before calling"
+    grid = (m // tile_q,)
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(q, x)

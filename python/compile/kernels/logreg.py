@@ -1,0 +1,44 @@
+"""Pallas kernel: fused logistic-regression gradient step (Layer 1).
+
+Forward (X·w + b → sigmoid) and backward (Xᵀ·err) fused into one tile
+kernel so a training step is a single HBM round-trip: the pattern the
+paper gets on ARM by keeping the working set in SVE registers across
+the fused loop. The batch-axis validity mask is the loop-tail predicate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _logreg_step_kernel(x_ref, y_ref, w_ref, scal_ref, gw_ref, gb_ref):
+    x = x_ref[...]                       # [b, p]
+    y = y_ref[...]                       # [b]
+    w = w_ref[...]                       # [p]
+    bias = scal_ref[0]
+    n_valid = scal_ref[1]
+    b = x.shape[0]
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32) + bias  # MXU
+    prob = 1.0 / (1.0 + jnp.exp(-z))
+    rmask = jnp.arange(b, dtype=jnp.float32) < n_valid
+    err = jnp.where(rmask, prob - y, 0.0)
+    inv = 1.0 / jnp.maximum(n_valid, 1.0)
+    gw_ref[...] = jnp.dot(x.T, err, preferred_element_type=jnp.float32) * inv
+    gb_ref[...] = jnp.sum(err)[None] * inv
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def logreg_step(x, y, w, scalars, interpret=True):
+    """x: f32[b, p], y: f32[b], w: f32[p], scalars: f32[2] = (bias, n)
+    → (grad_w f32[p], grad_b f32[1])."""
+    p = x.shape[1]
+    return pl.pallas_call(
+        _logreg_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x, y, w, scalars)

@@ -1,0 +1,85 @@
+"""Pallas kernels for the VSL statistics (Layer 1, paper §IV-C).
+
+`x2c_mom` — eq. 3's single-pass raw-moment variance: both running sums
+are computed in one sweep of the tile (two VPU reductions), with the
+observation-axis mask as the loop-tail predicate.
+
+`xcp_update` — eq. 6's batched cross-product update. The X·Xᵀ term is
+the MXU contraction; the rank-1 S·Sᵀ corrections are outer products on
+the VPU. State (C', S') flows through the kernel unchanged in layout so
+the Rust coordinator can chain calls batch after batch.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _x2c_mom_kernel(x_ref, valid_ref, s1_ref, s2_ref, mean_ref, var_ref):
+    x = x_ref[...]                       # [p, n]
+    nv = valid_ref[0]
+    n = x.shape[1]
+    cmask = (jnp.arange(n, dtype=jnp.float32) < nv)[None, :]
+    xm = jnp.where(cmask, x, 0.0)
+    s1 = jnp.sum(xm, axis=1)
+    s2 = jnp.sum(xm * xm, axis=1)
+    s1_ref[...] = s1
+    s2_ref[...] = s2
+    mean_ref[...] = s1 / nv
+    nm1 = jnp.maximum(nv - 1.0, 1.0)
+    var_ref[...] = s2 / nm1 - (s1 * s1) / (nv * nm1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def x2c_mom(x, valid, interpret=True):
+    """x: f32[p, n], valid: f32[1] → (sum, sumsq, mean, variance) f32[p]."""
+    p = x.shape[0]
+    shp = jax.ShapeDtypeStruct((p,), jnp.float32)
+    return pl.pallas_call(
+        _x2c_mom_kernel,
+        out_shape=(shp, shp, shp, shp),
+        interpret=interpret,
+    )(x, valid)
+
+
+def _xcp_update_kernel(x_ref, c_ref, s_ref, scal_ref, c_out_ref, s_out_ref):
+    x = x_ref[...]                       # [p, n]
+    c_prev = c_ref[...]                  # [p, p]
+    s_prev = s_ref[...]                  # [p]
+    n_old = scal_ref[0]
+    n_b = scal_ref[1]
+    n = x.shape[1]
+    cmask = (jnp.arange(n, dtype=jnp.float32) < n_b)[None, :]
+    xm = jnp.where(cmask, x, 0.0)
+    s_new = s_prev + jnp.sum(xm, axis=1)
+    n_new = n_old + n_b
+    # eq. 6: C ← C' + S'(S')ᵀ/n' − S·Sᵀ/n + X·Xᵀ  (first batch: n'=0 term
+    # vanishes — guarded multiply instead of a branch, SVE-style).
+    corr_old = jnp.where(
+        n_old > 0.0,
+        s_prev[:, None] * s_prev[None, :] / jnp.maximum(n_old, 1.0),
+        jnp.zeros_like(c_prev),
+    )
+    xxt = jnp.dot(xm, xm.T, preferred_element_type=jnp.float32)  # MXU
+    c_out_ref[...] = c_prev + corr_old + xxt - s_new[:, None] * s_new[None, :] / n_new
+    s_out_ref[...] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def xcp_update(x, c_prev, s_prev, scalars, interpret=True):
+    """Batched eq. 6 update.
+
+    x: f32[p, n], c_prev: f32[p, p], s_prev: f32[p], scalars: f32[2]
+    → (c_new f32[p, p], s_new f32[p])
+    """
+    p = x.shape[0]
+    return pl.pallas_call(
+        _xcp_update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((p, p), jnp.float32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x, c_prev, s_prev, scalars)

@@ -1,0 +1,141 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness references the pytest suite checks the Pallas
+kernels against (the same role the paper's scalar implementations play
+for its SVE loops — §IV-E validates the vectorized WSSj "bitwise"
+against the scalar base).
+"""
+
+import jax.numpy as jnp
+
+BIG = jnp.float32(3.4e38)  # +inf stand-in that survives f32 arithmetic
+
+
+def kmeans_assign_ref(x, c, valid):
+    """Nearest-centroid assignment with masked padding.
+
+    x: [n, d] points (rows >= valid[0] are padding)
+    c: [k, d] centroids (rows >= valid[1] are padding)
+    valid: [2] = (n_valid, k_valid) as f32
+    returns (assign [n] f32, mindist [n] f32)
+    """
+    k = c.shape[0]
+    xsq = jnp.sum(x * x, axis=1, keepdims=True)          # [n,1]
+    csq = jnp.sum(c * c, axis=1)[None, :]                # [1,k]
+    cross = x @ c.T                                      # [n,k] (MXU)
+    d2 = xsq - 2.0 * cross + csq
+    kmask = jnp.arange(k, dtype=jnp.float32)[None, :] < valid[1]
+    d2 = jnp.where(kmask, d2, BIG)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.float32)
+    mindist = jnp.min(d2, axis=1)
+    return assign, mindist
+
+
+def pairwise_sqdist_ref(q, x):
+    """Squared euclidean distances q[m,d] × x[n,d] → [m,n]."""
+    qsq = jnp.sum(q * q, axis=1, keepdims=True)
+    xsq = jnp.sum(x * x, axis=1)[None, :]
+    return jnp.maximum(qsq - 2.0 * (q @ x.T) + xsq, 0.0)
+
+
+def logreg_step_ref(x, y, w, scalars):
+    """Fused logistic-regression gradient step.
+
+    x: [b, p], y: [b], w: [p], scalars: [2] = (bias, n_valid)
+    returns (grad_w [p], grad_b [1])
+    """
+    b = x.shape[0]
+    bias, n_valid = scalars[0], scalars[1]
+    z = x @ w + bias
+    prob = 1.0 / (1.0 + jnp.exp(-z))
+    rmask = jnp.arange(b, dtype=jnp.float32) < n_valid
+    err = jnp.where(rmask, prob - y, 0.0)
+    inv = 1.0 / jnp.maximum(n_valid, 1.0)
+    grad_w = (x.T @ err) * inv
+    grad_b = jnp.sum(err)[None] * inv
+    return grad_w, grad_b
+
+
+def x2c_mom_ref(x, valid):
+    """Raw-moment variance (paper eq. 3) over a p×n tile.
+
+    x: [p, n] (columns >= valid[0] are padding)
+    valid: [1] = (n_valid,)
+    returns (sum [p], sumsq [p], mean [p], variance [p])
+    """
+    n = x.shape[1]
+    nv = valid[0]
+    cmask = (jnp.arange(n, dtype=jnp.float32) < nv)[None, :]
+    xm = jnp.where(cmask, x, 0.0)
+    s1 = jnp.sum(xm, axis=1)
+    s2 = jnp.sum(xm * xm, axis=1)
+    mean = s1 / nv
+    # v = S2/(n−1) − S1²/(n(n−1))   (eq. 3)
+    nm1 = jnp.maximum(nv - 1.0, 1.0)
+    var = s2 / nm1 - (s1 * s1) / (nv * nm1)
+    return s1, s2, mean, var
+
+
+def xcp_update_ref(x, c_prev, s_prev, scalars):
+    """Batched cross-product update (paper eq. 6).
+
+    x: [p, n] new batch (columns >= scalars[1] are padding)
+    c_prev: [p, p] previous cross-product
+    s_prev: [p] previous raw sum
+    scalars: [2] = (n_old, n_batch)
+    returns (c_new [p,p], s_new [p])
+    """
+    n = x.shape[1]
+    n_old, n_b = scalars[0], scalars[1]
+    cmask = (jnp.arange(n, dtype=jnp.float32) < n_b)[None, :]
+    xm = jnp.where(cmask, x, 0.0)
+    s_new = s_prev + jnp.sum(xm, axis=1)
+    n_new = n_old + n_b
+    # C' + S'S'ᵀ/n' (guarded for the first batch) − SSᵀ/n + XXᵀ
+    corr_old = jnp.where(
+        n_old > 0.0,
+        jnp.outer(s_prev, s_prev) / jnp.maximum(n_old, 1.0),
+        jnp.zeros_like(c_prev),
+    )
+    c_new = c_prev + corr_old + xm @ xm.T - jnp.outer(s_new, s_new) / n_new
+    return c_new, s_new
+
+
+def wss_select_ref(grad, flags, diag, ki, scalars):
+    """WSS3 j-selection (paper Listing 1) as masked reductions.
+
+    grad:  [n] signed gradient
+    flags: [n] f32 flag encoding: 8=LOW, 4=UP, 1/2=sign bits (Rust order)
+    diag:  [n] K(j,j)
+    ki:    [n] plain kernel row K(i,j) (the curvature along the feasible
+           direction is Kii + Kjj − 2·Kij)
+    scalars: [4] = (gmin, kii, tau, n_valid)
+    returns (bj [1], obj [1], gmax2 [1], delta [1]); bj = −1 when no
+    candidate passes (mirrors the Option<usize> on the Rust side).
+    """
+    n = grad.shape[0]
+    gmin, kii, tau, n_valid = scalars[0], scalars[1], scalars[2], scalars[3]
+    idx = jnp.arange(n, dtype=jnp.float32)
+    in_range = idx < n_valid
+    fl = flags.astype(jnp.int32)
+    low_ok = (fl & 8) == 8
+    sign_ok = (fl & 3) != 0
+    pass_ = in_range & low_ok & sign_ok
+    gmax2 = jnp.max(jnp.where(pass_, grad, -BIG))
+    active = pass_ & (grad >= gmin)
+    b = gmin - grad
+    a_raw = kii + diag - 2.0 * ki
+    a = jnp.where(a_raw <= 0.0, tau, a_raw)
+    dt = b / a
+    obj = b * dt
+    objm = jnp.where(active, obj, -BIG)
+    best = jnp.argmax(objm)  # first max index — matches scalar tie-break
+    obj_best = objm[best]
+    has = obj_best > -BIG
+    bj = jnp.where(has, idx[best], -1.0)[None]
+    return (
+        bj,
+        jnp.where(has, obj_best, -BIG)[None],
+        gmax2[None],
+        jnp.where(has, -dt[best], 0.0)[None],
+    )

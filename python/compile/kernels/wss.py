@@ -1,0 +1,77 @@
+"""Pallas kernel for the SVM WSS3 j-selection (Layer 1, paper §IV-E).
+
+This is the direct TPU translation of the paper's Listing 2: every
+`continue` of the scalar loop (Listing 1) becomes a lane predicate, the
+arithmetic runs unconditionally on all lanes with −BIG as the neutral
+element, and the selection is an argmax reduction whose first-index
+tie-breaking matches the scalar loop's strict-`>` update.
+
+SVE concept → Pallas realization used here:
+  svwhilelt_b32(j, jEnd)      → iota < n_valid bounds mask
+  svand/svcmpeq flag predicate → (flags & LOW) == LOW, (flags & SIGN) != 0
+  predicated continue          → jnp.where(mask, value, neutral)
+  VLA vector width             → the whole tile is one logical vector;
+                                 the artifact variant fixes its length
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.4e38  # +inf stand-in as a python float (pallas kernels must not capture arrays)
+
+
+def _wss_select_kernel(grad_ref, flags_ref, diag_ref, ki_ref, scal_ref,
+                       bj_ref, obj_ref, gmax2_ref, delta_ref):
+    grad = grad_ref[...]                 # [n]
+    flags = flags_ref[...].astype(jnp.int32)
+    diag = diag_ref[...]
+    ki = ki_ref[...]
+    gmin = scal_ref[0]
+    kii = scal_ref[1]
+    tau = scal_ref[2]
+    n_valid = scal_ref[3]
+    n = grad.shape[0]
+    idx = jnp.arange(n, dtype=jnp.float32)
+
+    # --- fused predicates (Listing 2's svand_s32_m / svcmpeq_s32) ---
+    in_range = idx < n_valid
+    low_ok = (flags & 8) == 8
+    sign_ok = (flags & 3) != 0
+    pass_ = in_range & low_ok & sign_ok
+
+    # GMax2: max gradient over the low set (pre-threshold lanes).
+    gmax2_ref[...] = jnp.max(jnp.where(pass_, grad, -BIG))[None]
+
+    # Threshold predicate folds in; dead lanes compute on neutral data.
+    active = pass_ & (grad >= gmin)
+    b = gmin - grad
+    a_raw = kii + diag - 2.0 * ki
+    a = jnp.where(a_raw <= 0.0, tau, a_raw)
+    dt = b / a
+    obj = b * dt
+    objm = jnp.where(active, obj, -BIG)
+
+    best = jnp.argmax(objm)              # first max — scalar tie-break
+    obj_best = objm[best]
+    has = obj_best > -BIG
+    bj_ref[...] = jnp.where(has, idx[best], -1.0)[None]
+    obj_ref[...] = jnp.where(has, obj_best, -BIG)[None]
+    delta_ref[...] = jnp.where(has, -dt[best], 0.0)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wss_select(grad, flags, diag, ki, scalars, interpret=True):
+    """WSS3 j-selection over one tile.
+
+    grad/flags/diag/ki: f32[n]; scalars: f32[4] = (gmin, kii, tau, n_valid)
+    → (bj f32[1], obj f32[1], gmax2 f32[1], delta f32[1])
+    """
+    one = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return pl.pallas_call(
+        _wss_select_kernel,
+        out_shape=(one, one, one, one),
+        interpret=interpret,
+    )(grad, flags, diag, ki, scalars)

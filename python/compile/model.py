@@ -1,0 +1,39 @@
+"""Layer 2 — the JAX compute graphs the artifacts are lowered from.
+
+Each function is a thin jit-able wrapper that calls the Layer-1 Pallas
+kernel(s) so kernel + surrounding graph lower into ONE HLO module per
+(kernel, shape-variant). The Rust coordinator executes these modules via
+PJRT; python never runs at request time.
+"""
+
+from .kernels import distance, logreg, moments, wss
+
+
+def kmeans_assign_graph(x, c, valid):
+    """Nearest-centroid assignment (Fig. 6/8 hot path)."""
+    return distance.kmeans_assign(x, c, valid)
+
+
+def pairwise_sqdist_graph(q, x):
+    """KNN / DBSCAN distance tiles (Fig. 3/5/6 hot path)."""
+    return (distance.pairwise_sqdist(q, x),)
+
+
+def logreg_step_graph(x, y, w, scalars):
+    """Fused logistic-regression step (Fig. 9 hot path)."""
+    return logreg.logreg_step(x, y, w, scalars)
+
+
+def x2c_mom_graph(x, valid):
+    """VSL variance kernel (paper §IV-C eq. 3)."""
+    return moments.x2c_mom(x, valid)
+
+
+def xcp_update_graph(x, c_prev, s_prev, scalars):
+    """VSL streaming cross-product kernel (paper §IV-C eq. 6)."""
+    return moments.xcp_update(x, c_prev, s_prev, scalars)
+
+
+def wss_select_graph(grad, flags, diag, ki, scalars):
+    """SVM WSS3 j-selection (paper §IV-E Listing 2)."""
+    return wss.wss_select(grad, flags, diag, ki, scalars)

@@ -1,0 +1,326 @@
+"""Layer-1 correctness: every Pallas kernel (interpret mode) against its
+pure-jnp oracle, plus hypothesis sweeps over shapes and value ranges —
+the build-time gate `make artifacts` depends on.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance, logreg, moments, ref, wss
+
+RNG = np.random.default_rng(0)
+
+
+def f32(a):
+    return jnp.asarray(np.asarray(a, dtype=np.float32))
+
+
+# ---------------------------------------------------------------- kmeans
+class TestKmeansAssign:
+    def _case(self, n, d, k, n_valid, k_valid, seed=0):
+        rng = np.random.default_rng(seed)
+        x = f32(rng.normal(size=(n, d)))
+        c = f32(rng.normal(size=(k, d)))
+        valid = f32([n_valid, k_valid])
+        return x, c, valid
+
+    def test_matches_ref(self):
+        x, c, valid = self._case(64, 8, 8, 50, 5)
+        got = distance.kmeans_assign(x, c, valid)
+        want = ref.kmeans_assign_ref(x, c, valid)
+        np.testing.assert_array_equal(got[0][:50], want[0][:50])
+        np.testing.assert_allclose(got[1][:50], want[1][:50], rtol=1e-5, atol=1e-5)
+
+    def test_padded_centroids_never_selected(self):
+        x, c, valid = self._case(32, 4, 8, 32, 3)
+        assign, _ = distance.kmeans_assign(x, c, valid)
+        assert np.all(np.asarray(assign) < 3)
+
+    def test_exact_centroid_hit(self):
+        # A point equal to a centroid must map to it with ~0 distance.
+        rng = np.random.default_rng(1)
+        c = f32(rng.normal(size=(4, 6)))
+        x = jnp.tile(c, (2, 1))  # 8 points, each equal to a centroid
+        valid = f32([8, 4])
+        assign, dist = distance.kmeans_assign(x, c, valid)
+        np.testing.assert_array_equal(np.asarray(assign), [0, 1, 2, 3, 0, 1, 2, 3])
+        assert np.all(np.asarray(dist) < 1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(4, 64),
+        d=st.integers(1, 16),
+        k=st.integers(2, 12),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_matches_ref(self, n, d, k, seed):
+        x, c, valid = self._case(n, d, k, n, k, seed)
+        got = distance.kmeans_assign(x, c, valid)
+        want = ref.kmeans_assign_ref(x, c, valid)
+        np.testing.assert_array_equal(got[0], want[0])
+        np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- pairwise
+class TestPairwise:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(2)
+        q = f32(rng.normal(size=(128, 8)))
+        x = f32(rng.normal(size=(40, 8)))
+        got = distance.pairwise_sqdist(q, x, tile_q=64)
+        want = ref.pairwise_sqdist_ref(q, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_self_distance_zero(self):
+        rng = np.random.default_rng(3)
+        x = f32(rng.normal(size=(64, 5)))
+        d = distance.pairwise_sqdist(x, x, tile_q=64)
+        assert np.all(np.abs(np.diag(np.asarray(d))) < 1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        tiles=st.integers(1, 4),
+        n=st.integers(1, 50),
+        d=st.integers(1, 12),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_matches_ref(self, tiles, n, d, seed):
+        rng = np.random.default_rng(seed)
+        q = f32(rng.normal(size=(32 * tiles, d)))
+        x = f32(rng.normal(size=(n, d)))
+        got = distance.pairwise_sqdist(q, x, tile_q=32)
+        want = ref.pairwise_sqdist_ref(q, x)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------- logreg
+class TestLogregStep:
+    def _case(self, b, p, n_valid, seed=0):
+        rng = np.random.default_rng(seed)
+        x = f32(rng.normal(size=(b, p)))
+        y = f32(rng.integers(0, 2, size=b))
+        w = f32(rng.normal(size=p) * 0.1)
+        scal = f32([0.05, n_valid])
+        return x, y, w, scal
+
+    def test_matches_ref(self):
+        x, y, w, scal = self._case(64, 8, 50)
+        gw, gb = logreg.logreg_step(x, y, w, scal)
+        rw, rb = ref.logreg_step_ref(x, y, w, scal)
+        np.testing.assert_allclose(gw, rw, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(gb, rb, rtol=1e-5, atol=1e-6)
+
+    def test_padding_rows_ignored(self):
+        x, y, w, scal = self._case(32, 4, 20)
+        gw1, gb1 = logreg.logreg_step(x, y, w, scal)
+        # Corrupt the padding rows: gradient must not change.
+        x2 = np.asarray(x).copy()
+        x2[20:] = 1e3
+        gw2, gb2 = logreg.logreg_step(f32(x2), y, w, scal)
+        np.testing.assert_allclose(gw1, gw2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gb1, gb2, rtol=1e-5, atol=1e-5)
+
+    def test_gradient_descends_loss(self):
+        # Numerical check: a small step along −grad reduces the loss.
+        x, y, w, scal = self._case(64, 6, 64, seed=7)
+
+        def loss(wv, bv):
+            z = np.asarray(x) @ wv + bv
+            p = 1.0 / (1.0 + np.exp(-z))
+            p = np.clip(p, 1e-7, 1 - 1e-7)
+            yv = np.asarray(y)
+            return -np.mean(yv * np.log(p) + (1 - yv) * np.log(1 - p))
+
+        gw, gb = logreg.logreg_step(x, y, w, scal)
+        l0 = loss(np.asarray(w), 0.05)
+        l1 = loss(np.asarray(w) - 0.1 * np.asarray(gw), 0.05 - 0.1 * float(gb[0]))
+        assert l1 < l0
+
+    @settings(max_examples=20, deadline=None)
+    @given(b=st.integers(2, 64), p=st.integers(1, 24), seed=st.integers(0, 2**16))
+    def test_hypothesis_matches_ref(self, b, p, seed):
+        x, y, w, scal = self._case(b, p, b, seed)
+        gw, gb = logreg.logreg_step(x, y, w, scal)
+        rw, rb = ref.logreg_step_ref(x, y, w, scal)
+        np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gb, rb, rtol=1e-4, atol=1e-5)
+
+
+# -------------------------------------------------------------- moments
+class TestX2cMom:
+    def test_matches_ref_and_numpy(self):
+        rng = np.random.default_rng(4)
+        x = f32(rng.normal(loc=2.0, scale=3.0, size=(8, 256)))
+        valid = f32([200.0])
+        got = moments.x2c_mom(x, valid)
+        want = ref.x2c_mom_ref(x, valid)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-3)
+        # And against numpy's unbiased variance on the valid region.
+        xv = np.asarray(x)[:, :200].astype(np.float64)
+        np.testing.assert_allclose(got[3], xv.var(axis=1, ddof=1), rtol=1e-3)
+
+    def test_constant_rows(self):
+        x = f32(np.full((4, 64), 7.0))
+        s1, s2, mean, var = moments.x2c_mom(x, f32([64.0]))
+        np.testing.assert_allclose(mean, 7.0, rtol=1e-6)
+        np.testing.assert_allclose(var, 0.0, atol=1e-2)
+
+    @settings(max_examples=20, deadline=None)
+    @given(p=st.integers(1, 16), n=st.integers(2, 128), seed=st.integers(0, 2**16))
+    def test_hypothesis_matches_numpy(self, p, n, seed):
+        rng = np.random.default_rng(seed)
+        x = f32(rng.normal(size=(p, n)))
+        got = moments.x2c_mom(x, f32([float(n)]))
+        xv = np.asarray(x).astype(np.float64)
+        np.testing.assert_allclose(got[2], xv.mean(axis=1), rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(got[3], xv.var(axis=1, ddof=1), rtol=1e-2, atol=1e-4)
+
+
+# ------------------------------------------------------------------ xcp
+class TestXcpUpdate:
+    def test_single_batch_matches_centered(self):
+        rng = np.random.default_rng(5)
+        p, n = 6, 64
+        x = f32(rng.normal(size=(p, n)))
+        c0 = f32(np.zeros((p, p)))
+        s0 = f32(np.zeros(p))
+        c1, s1 = moments.xcp_update(x, c0, s0, f32([0.0, float(n)]))
+        xv = np.asarray(x).astype(np.float64)
+        mu = xv.mean(axis=1, keepdims=True)
+        want = (xv - mu) @ (xv - mu).T
+        np.testing.assert_allclose(c1, want, rtol=1e-3, atol=1e-2)
+        np.testing.assert_allclose(s1, xv.sum(axis=1), rtol=1e-4)
+
+    def test_two_batches_match_whole_eq6(self):
+        rng = np.random.default_rng(6)
+        p = 5
+        xa = rng.normal(size=(p, 40))
+        xb = rng.normal(size=(p, 24))
+        whole = np.concatenate([xa, xb], axis=1)
+        mu = whole.mean(axis=1, keepdims=True)
+        want = (whole - mu) @ (whole - mu).T
+        c, s = moments.xcp_update(f32(xa), f32(np.zeros((p, p))), f32(np.zeros(p)), f32([0.0, 40.0]))
+        c, s = moments.xcp_update(f32(xb), c, s, f32([40.0, 24.0]))
+        np.testing.assert_allclose(c, want, rtol=1e-3, atol=1e-2)
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(7)
+        p, n = 8, 32
+        x = f32(rng.normal(size=(p, n)))
+        cp = f32(rng.normal(size=(p, p)))
+        cp = (cp + cp.T) / 2
+        sp = f32(rng.normal(size=p))
+        scal = f32([16.0, float(n)])
+        got = moments.xcp_update(x, cp, sp, scal)
+        want = ref.xcp_update_ref(x, cp, sp, scal)
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got[1], want[1], rtol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        p=st.integers(2, 12),
+        n1=st.integers(2, 40),
+        n2=st.integers(2, 40),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_batching_invariance(self, p, n1, n2, seed):
+        rng = np.random.default_rng(seed)
+        xa, xb = rng.normal(size=(p, n1)), rng.normal(size=(p, n2))
+        whole = np.concatenate([xa, xb], axis=1)
+        mu = whole.mean(axis=1, keepdims=True)
+        want = (whole - mu) @ (whole - mu).T
+        c, s = moments.xcp_update(f32(xa), f32(np.zeros((p, p))), f32(np.zeros(p)), f32([0.0, float(n1)]))
+        c, _ = moments.xcp_update(f32(xb), c, s, f32([float(n1), float(n2)]))
+        np.testing.assert_allclose(c, want, rtol=1e-2, atol=5e-2)
+
+
+# ------------------------------------------------------------------ wss
+class TestWssSelect:
+    def _case(self, n, seed=0):
+        rng = np.random.default_rng(seed)
+        grad = rng.normal(size=n)
+        flags = np.zeros(n)
+        for i in range(n):
+            f = 1 if rng.random() < 0.5 else 2
+            if rng.random() < 0.7:
+                f |= 8  # LOW
+            if rng.random() < 0.7:
+                f |= 4  # UP
+            flags[i] = f
+        diag = 1.0 + rng.random(size=n)
+        ki = rng.normal(size=n) * 0.5
+        scal = [rng.normal(), 1.0 + rng.random(), 1e-9, float(n)]
+        return f32(grad), f32(flags), f32(diag), f32(ki), f32(scal)
+
+    def _scalar_oracle(self, grad, flags, diag, ki, scal):
+        """Literal port of the paper's Listing 1 (branchy loop)."""
+        gmin, kii, tau, n_valid = [float(v) for v in np.asarray(scal)]
+        gmax = -np.inf
+        gmax2 = -np.inf
+        bj, delta = -1, 0.0
+        for j in range(int(n_valid)):
+            gradj = float(grad[j])
+            fl = int(flags[j])
+            if fl & 3 == 0:
+                continue
+            if fl & 8 != 8:
+                continue
+            if gradj > gmax2:
+                gmax2 = gradj
+            if gradj < gmin:
+                continue
+            b = gmin - gradj
+            a = kii + float(diag[j]) - 2.0 * float(ki[j])
+            if a <= 0.0:
+                a = tau
+            dt = b / a
+            obj = b * dt
+            if obj > gmax:
+                gmax, bj, delta = obj, j, -dt
+        return bj, gmax, gmax2, delta
+
+    def test_matches_ref(self):
+        args = self._case(64, seed=1)
+        got = wss.wss_select(*args)
+        want = ref.wss_select_ref(*args)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+    def test_matches_listing1_scalar_loop(self):
+        # The paper's fidelity claim: predicated kernel == branchy loop.
+        for seed in range(5):
+            grad, flags, diag, ki, scal = self._case(96, seed=seed)
+            bj, obj, gmax2, delta = wss.wss_select(grad, flags, diag, ki, scal)
+            sbj, sobj, sgmax2, sdelta = self._scalar_oracle(grad, flags, diag, ki, scal)
+            assert int(bj[0]) == sbj, f"seed={seed}"
+            if sbj >= 0:
+                np.testing.assert_allclose(float(obj[0]), sobj, rtol=1e-5)
+                np.testing.assert_allclose(float(delta[0]), sdelta, rtol=1e-5)
+            np.testing.assert_allclose(float(gmax2[0]), sgmax2, rtol=1e-5)
+
+    def test_no_candidate_returns_minus_one(self):
+        n = 16
+        grad = f32(np.zeros(n))
+        flags = f32(np.full(n, 4.0))  # UP only — nothing in LOW
+        diag = f32(np.ones(n))
+        ki = f32(np.zeros(n))
+        scal = f32([0.0, 1.0, 1e-9, float(n)])
+        bj, obj, gmax2, delta = wss.wss_select(grad, flags, diag, ki, scal)
+        assert int(bj[0]) == -1
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 256), seed=st.integers(0, 2**16))
+    def test_hypothesis_matches_scalar(self, n, seed):
+        grad, flags, diag, ki, scal = self._case(n, seed=seed)
+        bj, obj, gmax2, delta = wss.wss_select(grad, flags, diag, ki, scal)
+        sbj, sobj, sgmax2, sdelta = self._scalar_oracle(grad, flags, diag, ki, scal)
+        assert int(bj[0]) == sbj
+        if sbj >= 0:
+            np.testing.assert_allclose(float(obj[0]), sobj, rtol=1e-4)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

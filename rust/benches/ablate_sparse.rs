@@ -1,0 +1,64 @@
+//! §IV-B ablation — the Sparse BLAS substrate: csrmm / csrmv / csrmultd
+//! against dense gemm/gemv across a density sweep, plus the AᵀB vs AB
+//! loop-order comparison the paper analyzes.
+//!
+//! The paper's claim: the reference sparse routines "do not yet match
+//! MKL" but win over dense once sparsity is high enough — the crossover
+//! is what this bench locates.
+
+use onedal_sve::blas::{gemm, gemv, Transpose};
+use onedal_sve::prelude::*;
+use onedal_sve::profiling::Bencher;
+use onedal_sve::sparse::{csrmm, csrmultd, csrmv, SparseOp};
+use onedal_sve::tables::synth;
+
+fn main() {
+    let mut e = Mt19937::new(10);
+    let mut b = Bencher::new(200, 9);
+    let (m, k, n) = (2_000usize, 1_000usize, 32usize);
+
+    for density in [0.01, 0.05, 0.2] {
+        let a = synth::make_sparse_csr(&mut e, m, k, density);
+        let ad = a.to_dense();
+        let bm: Vec<f64> = (0..k * n).map(|i| (i % 17) as f64 * 0.1).collect();
+        let tag = format!("d{:03}", (density * 100.0) as u32);
+
+        // csrmm vs dense gemm
+        let mut c = vec![0.0f64; m * n];
+        b.bench(&format!("sparse/csrmm-{tag}/sparse"), || {
+            csrmm(SparseOp::NoTranspose, 1.0, &a, &bm, n, 0.0, &mut c).unwrap();
+            std::hint::black_box(c[0]);
+        });
+        b.bench(&format!("sparse/csrmm-{tag}/dense"), || {
+            gemm(Transpose::No, Transpose::No, m, n, k, 1.0, ad.data(), &bm, 0.0, &mut c);
+            std::hint::black_box(c[0]);
+        });
+
+        // csrmv vs dense gemv
+        let xv: Vec<f64> = (0..k).map(|i| (i as f64).cos()).collect();
+        let mut yv = vec![0.0f64; m];
+        b.bench(&format!("sparse/csrmv-{tag}/sparse"), || {
+            csrmv(SparseOp::NoTranspose, 1.0, &a, &xv, 0.0, &mut yv).unwrap();
+            std::hint::black_box(yv[0]);
+        });
+        b.bench(&format!("sparse/csrmv-{tag}/dense"), || {
+            gemv(false, m, k, 1.0, ad.data(), &xv, 0.0, &mut yv);
+            std::hint::black_box(yv[0]);
+        });
+    }
+
+    // csrmultd loop orders: AB (j-k-i) vs AᵀB (i-j-k) at fixed density.
+    let a = synth::make_sparse_csr(&mut e, 800, 800, 0.05);
+    let bs = synth::make_sparse_csr(&mut e, 800, 200, 0.05);
+    let mut c = vec![0.0f64; 800 * 200];
+    b.bench("sparse/csrmultd/ab-jki", || {
+        csrmultd(SparseOp::NoTranspose, &a, &bs, &mut c).unwrap();
+        std::hint::black_box(c[0]);
+    });
+    b.bench("sparse/csrmultd/atb-ijk", || {
+        csrmultd(SparseOp::Transpose, &a, &bs, &mut c).unwrap();
+        std::hint::black_box(c[0]);
+    });
+
+    b.speedup_table("Sparse substrate vs dense (crossover sweep)", "dense");
+}

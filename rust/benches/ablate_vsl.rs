@@ -1,0 +1,85 @@
+//! §IV-C ablation — the VSL substrate: the raw-moment x2c_mom (eq. 3,
+//! one pass) vs the two-pass textbook variance (eqs. 1–2), and the
+//! batched xcp update (eq. 6, BLAS-backed) vs a direct eq. 4 evaluation.
+//! These are exactly the reformulations the paper credits for the VSL
+//! speedups.
+
+use onedal_sve::prelude::*;
+use onedal_sve::profiling::Bencher;
+use onedal_sve::rng::{Distribution, Gaussian};
+use onedal_sve::tables::DenseTable;
+use onedal_sve::vsl::{x2c_mom, x2c_mom_naive, XcpState};
+
+fn dataset(seed: u32, p: usize, n: usize) -> DenseTable<f64> {
+    let mut e = Mt19937::new(seed);
+    let mut g = Gaussian::new(1.0, 2.0);
+    let mut d = vec![0.0; p * n];
+    g.fill(&mut e, &mut d);
+    DenseTable::from_vec(d, p, n).unwrap()
+}
+
+/// Direct eq. 4: centered cross-product without the eq. 6 reformulation.
+fn xcp_direct(x: &DenseTable<f64>) -> Vec<f64> {
+    let p = x.rows();
+    let n = x.cols();
+    let mu: Vec<f64> = (0..p).map(|i| x.row(i).iter().sum::<f64>() / n as f64).collect();
+    let mut c = vec![0.0; p * p];
+    for i in 0..p {
+        for j in 0..p {
+            let (ri, rj) = (x.row(i), x.row(j));
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += (ri[k] - mu[i]) * (rj[k] - mu[j]);
+            }
+            c[i * p + j] = acc;
+        }
+    }
+    c
+}
+
+fn main() {
+    let mut b = Bencher::new(200, 9);
+
+    // x2c_mom: eq. 3 single-pass vs two-pass, across widths.
+    for (p, n) in [(16usize, 100_000usize), (64, 100_000), (64, 500_000)] {
+        let x = dataset(1, p, n);
+        let tag = format!("p{p}-n{}k", n / 1000);
+        b.bench(&format!("vsl/x2c_mom-{tag}/twopass"), || {
+            std::hint::black_box(x2c_mom_naive(&x).unwrap().variance[0]);
+        });
+        b.bench(&format!("vsl/x2c_mom-{tag}/rawmoment"), || {
+            std::hint::black_box(x2c_mom(&x).unwrap().variance[0]);
+        });
+    }
+
+    // xcp: eq. 6 streaming (syrk-backed) vs direct eq. 4.
+    for p in [16usize, 48] {
+        let x = dataset(2, p, 50_000);
+        let tag = format!("p{p}");
+        b.bench(&format!("vsl/xcp-{tag}/direct-eq4"), || {
+            std::hint::black_box(xcp_direct(&x)[0]);
+        });
+        b.bench(&format!("vsl/xcp-{tag}/eq6-blas"), || {
+            let mut st = XcpState::new(p);
+            st.update(&x).unwrap();
+            std::hint::black_box(st.cross_product()[0]);
+        });
+        // Streaming in 10 batches must cost ≈ the single batch (the
+        // memory-efficiency claim of §IV-C-2).
+        b.bench(&format!("vsl/xcp-{tag}/eq6-10batches"), || {
+            let mut st = XcpState::new(p);
+            let step = 5_000;
+            for s in (0..50_000).step_by(step) {
+                let mut part = DenseTable::zeros(p, step);
+                for i in 0..p {
+                    part.row_mut(i).copy_from_slice(&x.row(i)[s..s + step]);
+                }
+                st.update(&part).unwrap();
+            }
+            std::hint::black_box(st.cross_product()[0]);
+        });
+    }
+
+    b.speedup_table("VSL eq. 3 reformulation", "twopass");
+    b.speedup_table("VSL eq. 6 reformulation", "direct-eq4");
+}

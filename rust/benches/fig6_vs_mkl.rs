@@ -1,0 +1,89 @@
+//! Fig. 6 — "ARM SVE optimized oneDAL vs. x86 oneDAL (MKL)":
+//! the optimized rung against the well-optimized incumbent (reference
+//! rung = blocked native BLAS, the MKL stand-in), plus the artifact rung
+//! when available.
+//!
+//! Paper shape: training up to 2.75× (KMeans), DBSCAN 1.92×, KNN ≤1.5×,
+//! inference parity to 1.83×, SVM/forest ≈ parity.
+
+use onedal_sve::algorithms::svm::kernel::SvmKernel;
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::profiling::Bencher;
+use onedal_sve::tables::synth;
+
+fn main() {
+    let reference = Context::with_backend(Backend::Reference).unwrap();
+    let opt = Context::with_backend(Backend::Vectorized).unwrap();
+    let artifact = if std::path::Path::new("artifacts/manifest.txt").exists() {
+        Context::with_backend(Backend::Artifact).ok()
+    } else {
+        None
+    };
+    let mut rungs: Vec<(&Context, &str)> = vec![(&reference, "mkl-analogue"), (&opt, "sve-optimized")];
+    if let Some(a) = artifact.as_ref() {
+        rungs.push((a, "aot-artifact"));
+    }
+    let mut e = Mt19937::new(6);
+    let mut b = Bencher::new(200, 7);
+
+    // KMeans (paper: 2.75×)
+    let (xk, _) = synth::make_blobs(&mut e, 30_000, 20, 10, 1.0);
+    for (ctx, rung) in &rungs {
+        b.bench(&format!("fig6/kmeans-train/{rung}"), || {
+            std::hint::black_box(KMeans::params().k(10).seed(1).max_iter(15).train(ctx, &xk).unwrap().inertia);
+        });
+    }
+
+    // DBSCAN (paper: 1.92×)
+    let (xd, _) = synth::make_blobs(&mut e, 4_000, 8, 10, 0.8);
+    for (ctx, rung) in &rungs {
+        b.bench(&format!("fig6/dbscan-train/{rung}"), || {
+            std::hint::black_box(Dbscan::params().eps(2.0).min_pts(5).train(ctx, &xd).unwrap().n_clusters);
+        });
+    }
+
+    // KNN (paper: ≤1.5×)
+    let (xn, labels) = synth::make_blobs(&mut e, 10_000, 16, 5, 1.5);
+    let yn: Vec<f64> = labels.iter().map(|&c| c as f64).collect();
+    let knn = KnnClassifier::params().k(5).train(&opt, &xn, &yn).unwrap();
+    let (q, _) = synth::make_blobs(&mut e, 500, 16, 5, 1.5);
+    for (ctx, rung) in &rungs {
+        b.bench(&format!("fig6/knn-infer/{rung}"), || {
+            std::hint::black_box(knn.infer(ctx, &q).unwrap());
+        });
+    }
+
+    // Logistic + linear regression inference (paper: up to 1.83×)
+    let (xl, yl) = synth::make_classification(&mut e, 50_000, 64, 1.5);
+    let lr = LogisticRegression::params().epochs(2).train(&opt, &xl, &yl).unwrap();
+    for (ctx, rung) in &rungs {
+        b.bench(&format!("fig6/logreg-infer/{rung}"), || {
+            std::hint::black_box(lr.infer(ctx, &xl).unwrap());
+        });
+    }
+    let (xr, yr, _) = synth::make_regression(&mut e, 100_000, 20, 0.1);
+    let lin = LinearRegression::params().train(&opt, &xr, &yr).unwrap();
+    for (ctx, rung) in &rungs {
+        b.bench(&format!("fig6/linreg-infer/{rung}"), || {
+            std::hint::black_box(lin.infer(ctx, &xr).unwrap());
+        });
+    }
+
+    // SVM + forest (paper: comparable)
+    let (xs, ys) = synth::make_classification(&mut e, 2_000, 40, 1.0);
+    for (ctx, rung) in &rungs {
+        b.bench(&format!("fig6/svm-train/{rung}"), || {
+            let m = Svc::params().kernel(SvmKernel::Rbf { gamma: 0.025 }).train(ctx, &xs, &ys).unwrap();
+            std::hint::black_box(m.n_support());
+        });
+    }
+    for (ctx, rung) in &rungs {
+        b.bench(&format!("fig6/forest-train/{rung}"), || {
+            let m = RandomForestClassifier::params().n_trees(8).max_depth(8).sample_frac(0.3).train(ctx, &xs, &ys).unwrap();
+            std::hint::black_box(m.n_trees());
+        });
+    }
+
+    b.speedup_table("Fig. 6: vs the MKL-analogue reference backend", "mkl-analogue");
+}

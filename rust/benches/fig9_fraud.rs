@@ -1,0 +1,39 @@
+//! Fig. 9 — credit-card fraud detection: random-forest and
+//! logistic-regression training, optimized rung vs the stock-sklearn
+//! analogue (paper: 31× and 40× on Graviton3; our single-core Rust
+//! baseline is far stronger than interpreted sklearn, so expect the
+//! same ordering at smaller magnitude — EXPERIMENTS.md discusses).
+
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::profiling::Bencher;
+use onedal_sve::tables::synth;
+
+fn main() {
+    let naive = Context::builder().backend(Backend::Naive).threads(1).build().unwrap();
+    let opt = Context::with_backend(Backend::Vectorized).unwrap();
+    let mut e = Mt19937::new(9);
+    let (x, y) = synth::make_fraud(&mut e, 60_000, 30, 200);
+    let mut b = Bencher::new(300, 5);
+
+    for (ctx, rung) in [(&naive, "sklearn-arm"), (&opt, "arm-sve")] {
+        b.bench(&format!("fig9/logreg-train/{rung}"), || {
+            let m = LogisticRegression::params().epochs(5).lr(0.3).train(ctx, &x, &y).unwrap();
+            std::hint::black_box(m.intercept);
+        });
+    }
+    for (ctx, rung) in [(&naive, "sklearn-arm"), (&opt, "arm-sve")] {
+        b.bench(&format!("fig9/forest-train/{rung}"), || {
+            let m = RandomForestClassifier::params()
+                .n_trees(10)
+                .max_depth(10)
+                .sample_frac(0.2)
+                .train(ctx, &x, &y)
+                .unwrap();
+            std::hint::black_box(m.n_trees());
+        });
+    }
+
+    b.speedup_table("Fig. 9: fraud detection", "sklearn-arm");
+    println!("\nPaper shape: logreg 40×, forest 31× over interpreted sklearn-on-ARM.");
+}

@@ -1,0 +1,159 @@
+//! Covariance / correlation estimation — the first consumer of the VSL
+//! substrate (§IV-C): batch and online modes both reduce to the `xcp`
+//! streaming cross-product.
+
+use crate::coordinator::Context;
+use crate::error::{Error, Result};
+use crate::tables::DenseTable;
+use crate::vsl::XcpState;
+
+/// Result type selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CovarianceOutput {
+    Covariance,
+    Correlation,
+}
+
+#[derive(Clone, Debug)]
+pub struct CovarianceParams {
+    pub output: CovarianceOutput,
+}
+
+pub struct Covariance;
+
+impl Covariance {
+    pub fn params() -> CovarianceParams {
+        CovarianceParams { output: CovarianceOutput::Covariance }
+    }
+}
+
+/// Trained (computed) result.
+#[derive(Clone, Debug)]
+pub struct CovarianceModel {
+    /// p×p covariance or correlation matrix.
+    pub matrix: DenseTable<f64>,
+    /// Per-coordinate means.
+    pub means: Vec<f64>,
+    pub n: usize,
+}
+
+impl CovarianceParams {
+    pub fn output(mut self, o: CovarianceOutput) -> Self {
+        self.output = o;
+        self
+    }
+
+    /// Batch mode over an `n×p` observations-in-rows table (the oneDAL
+    /// convention; internally transposed to the VSL p×n layout).
+    pub fn train(&self, _ctx: &Context, x: &DenseTable<f64>) -> Result<CovarianceModel> {
+        if x.rows() < 2 {
+            return Err(Error::Param("covariance: need ≥ 2 observations".into()));
+        }
+        let mut st = OnlineCovariance::new(x.cols());
+        st.partial_fit(x)?;
+        st.finalize(self.output)
+    }
+}
+
+/// Online mode (oneDAL `covariance::Online` analogue) — feed row batches,
+/// finalize once. Internally this is exactly eq. 6's streaming update.
+pub struct OnlineCovariance {
+    state: XcpState<f64>,
+}
+
+impl OnlineCovariance {
+    pub fn new(p: usize) -> Self {
+        Self { state: XcpState::new(p) }
+    }
+
+    /// Fold a batch of observations (rows).
+    pub fn partial_fit(&mut self, x: &DenseTable<f64>) -> Result<()> {
+        // VSL layout is p×n (coordinates × observations).
+        let xt = x.transposed();
+        self.state.update(&xt)
+    }
+
+    pub fn n(&self) -> usize {
+        self.state.n()
+    }
+
+    pub fn finalize(&self, output: CovarianceOutput) -> Result<CovarianceModel> {
+        let matrix = match output {
+            CovarianceOutput::Covariance => self.state.covariance()?,
+            CovarianceOutput::Correlation => self.state.correlation()?,
+        };
+        let n = self.state.n();
+        let means = self.state.sum().iter().map(|&s| s / n as f64).collect();
+        Ok(CovarianceModel { matrix, means, n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+    use crate::rng::{Distribution, Gaussian, Mt19937};
+
+    fn ctx() -> Context {
+        Context::builder().artifact_dir("/nonexistent").backend(Backend::Vectorized).build().unwrap()
+    }
+
+    fn dataset(seed: u32, n: usize, p: usize) -> DenseTable<f64> {
+        let mut e = Mt19937::new(seed);
+        let mut g = Gaussian::new(0.5, 1.5);
+        let mut d = vec![0.0; n * p];
+        g.fill(&mut e, &mut d);
+        DenseTable::from_vec(d, n, p).unwrap()
+    }
+
+    #[test]
+    fn batch_matches_textbook() {
+        let x = dataset(1, 300, 4);
+        let m = Covariance::params().train(&ctx(), &x).unwrap();
+        // Textbook covariance.
+        let means = x.col_means();
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut acc = 0.0;
+                for r in 0..300 {
+                    acc += (x.get(r, i) - means[i]) * (x.get(r, j) - means[j]);
+                }
+                acc /= 299.0;
+                assert!((m.matrix.get(i, j) - acc).abs() < 1e-9);
+            }
+        }
+        assert_eq!(m.n, 300);
+    }
+
+    #[test]
+    fn online_equals_batch() {
+        let x = dataset(2, 500, 6);
+        let batch = Covariance::params().train(&ctx(), &x).unwrap();
+        let mut online = OnlineCovariance::new(6);
+        online.partial_fit(&x.slice_rows(0, 123).unwrap()).unwrap();
+        online.partial_fit(&x.slice_rows(123, 345).unwrap()).unwrap();
+        online.partial_fit(&x.slice_rows(345, 500).unwrap()).unwrap();
+        let m = online.finalize(CovarianceOutput::Covariance).unwrap();
+        for (a, b) in m.matrix.data().iter().zip(batch.matrix.data()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn correlation_unit_diagonal() {
+        let x = dataset(3, 200, 5);
+        let m = Covariance::params()
+            .output(CovarianceOutput::Correlation)
+            .train(&ctx(), &x)
+            .unwrap();
+        for i in 0..5 {
+            assert!((m.matrix.get(i, i) - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn too_few_rows_rejected() {
+        let x = dataset(4, 1, 3);
+        assert!(Covariance::params().train(&ctx(), &x).is_err());
+    }
+}

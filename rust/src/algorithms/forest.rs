@@ -1,0 +1,253 @@
+//! Random-forest classifier — the Fig. 9 workload (31× on fraud
+//! detection) and the algorithm the paper singles out in §IV-D as the
+//! beneficiary of parallel RNG streams ("adding mt2203 could further
+//! improve performance for algorithms like Random Forests").
+//!
+//! Per-tree randomness comes from the RNG substrate's **Family method**
+//! (decorrelated per-tree streams), so trees can be trained on worker
+//! threads with zero RNG coordination — exactly the OpenRNG pattern.
+
+use super::tree::{DecisionTree, TreeParams};
+use crate::coordinator::Context;
+use crate::error::{Error, Result};
+use crate::rng::{family_streams, Distribution, UniformInt};
+use crate::tables::DenseTable;
+
+#[derive(Clone, Debug)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Features per node; 0 = √p.
+    pub max_features: usize,
+    /// Bootstrap sample size as a fraction of n.
+    pub sample_frac: f64,
+    pub seed: u64,
+}
+
+pub struct RandomForestClassifier;
+
+impl RandomForestClassifier {
+    pub fn params() -> ForestParams {
+        ForestParams {
+            n_trees: 50,
+            max_depth: 12,
+            min_samples_split: 2,
+            max_features: 0,
+            sample_frac: 1.0,
+            seed: 20_240_401,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ForestModel {
+    trees: Vec<DecisionTree>,
+    pub n_classes: usize,
+}
+
+impl ForestParams {
+    pub fn n_trees(mut self, n: usize) -> Self {
+        self.n_trees = n;
+        self
+    }
+
+    pub fn max_depth(mut self, d: usize) -> Self {
+        self.max_depth = d;
+        self
+    }
+
+    pub fn max_features(mut self, m: usize) -> Self {
+        self.max_features = m;
+        self
+    }
+
+    pub fn sample_frac(mut self, f: f64) -> Self {
+        self.sample_frac = f;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn train(&self, ctx: &Context, x: &DenseTable<f64>, y: &[f64]) -> Result<ForestModel> {
+        let n = x.rows();
+        let p = x.cols();
+        if n != y.len() {
+            return Err(Error::Shape("forest: label count mismatch".into()));
+        }
+        if self.n_trees == 0 {
+            return Err(Error::Param("forest: need ≥ 1 tree".into()));
+        }
+        if !(0.0..=1.0).contains(&self.sample_frac) || self.sample_frac == 0.0 {
+            return Err(Error::Param("forest: sample_frac must be in (0, 1]".into()));
+        }
+        let n_classes = y.iter().fold(0.0f64, |a, &b| a.max(b)) as usize + 1;
+        let max_features = if self.max_features == 0 {
+            ((p as f64).sqrt().round() as usize).max(1)
+        } else {
+            self.max_features
+        };
+        let tree_params = TreeParams {
+            max_depth: self.max_depth,
+            min_samples_split: self.min_samples_split,
+            max_features,
+            n_classes,
+        };
+        let sample_n = ((n as f64 * self.sample_frac) as usize).max(1);
+        // Family method: one decorrelated stream per tree.
+        let streams = family_streams(self.seed, self.n_trees);
+        let n_threads = ctx.threads().min(self.n_trees).max(1);
+        // Static round-robin sharding of trees over worker threads.
+        let mut tree_results: Vec<Option<Result<DecisionTree>>> =
+            (0..self.n_trees).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (shard, chunk) in streams.into_iter().enumerate().collect::<Vec<_>>().chunks(self.n_trees.div_ceil(n_threads)).map(|c| c.to_vec()).enumerate() {
+                let tp = tree_params.clone();
+                handles.push((shard, scope.spawn(move || {
+                    let mut local = Vec::new();
+                    for (tree_idx, mut engine) in chunk {
+                        let mut ui = UniformInt::new(0, n as u64);
+                        let idx: Vec<usize> =
+                            (0..sample_n).map(|_| ui.sample(engine.as_mut()) as usize).collect();
+                        let t = DecisionTree::fit(&tp, x, y, &idx, engine.as_mut());
+                        local.push((tree_idx, t));
+                    }
+                    local
+                })));
+            }
+            for (_, h) in handles {
+                for (tree_idx, t) in h.join().expect("forest worker panicked") {
+                    tree_results[tree_idx] = Some(t);
+                }
+            }
+        });
+        let mut trees = Vec::with_capacity(self.n_trees);
+        for t in tree_results {
+            trees.push(t.expect("tree slot unfilled")?);
+        }
+        Ok(ForestModel { trees, n_classes })
+    }
+}
+
+impl ForestModel {
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Soft voting: mean of per-tree class probabilities.
+    pub fn predict_proba(&self, _ctx: &Context, x: &DenseTable<f64>) -> Result<DenseTable<f64>> {
+        let mut out = DenseTable::zeros(x.rows(), self.n_classes);
+        let inv = 1.0 / self.trees.len() as f64;
+        for i in 0..x.rows() {
+            let row = x.row(i);
+            let orow = out.row_mut(i);
+            for t in &self.trees {
+                for (o, &p) in orow.iter_mut().zip(t.predict_proba_row(row)) {
+                    *o += p;
+                }
+            }
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn infer(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<f64>> {
+        let proba = self.predict_proba(ctx, x)?;
+        Ok((0..x.rows())
+            .map(|i| {
+                let row = proba.row(i);
+                let mut best = 0usize;
+                for (c, &p) in row.iter().enumerate() {
+                    if p > row[best] {
+                        best = c;
+                    }
+                }
+                best as f64
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+    use crate::rng::Mt19937;
+    use crate::tables::synth::{make_classification, make_fraud};
+
+    fn ctx() -> Context {
+        Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Vectorized)
+            .threads(4)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn learns_separable_task() {
+        let mut e = Mt19937::new(1);
+        let (x, y) = make_classification(&mut e, 600, 8, 1.5);
+        let c = ctx();
+        let m = RandomForestClassifier::params().n_trees(20).train(&c, &x, &y).unwrap();
+        let pred = m.infer(&c, &x).unwrap();
+        let acc = crate::metrics::accuracy(&pred, &y);
+        assert!(acc > 0.95, "acc={acc}");
+        assert_eq!(m.n_trees(), 20);
+    }
+
+    #[test]
+    fn deterministic_given_seed_regardless_of_threads() {
+        let mut e = Mt19937::new(2);
+        let (x, y) = make_classification(&mut e, 300, 5, 1.0);
+        let c1 = Context::builder().artifact_dir("/nonexistent").backend(Backend::Vectorized).threads(1).build().unwrap();
+        let c4 = Context::builder().artifact_dir("/nonexistent").backend(Backend::Vectorized).threads(4).build().unwrap();
+        let m1 = RandomForestClassifier::params().n_trees(8).seed(99).train(&c1, &x, &y).unwrap();
+        let m4 = RandomForestClassifier::params().n_trees(8).seed(99).train(&c4, &x, &y).unwrap();
+        // Family streams are per-tree, so thread count must not change
+        // the model (the OpenRNG reproducibility property).
+        let p1 = m1.predict_proba(&c1, &x).unwrap();
+        let p4 = m4.predict_proba(&c4, &x).unwrap();
+        assert_eq!(p1.data(), p4.data());
+    }
+
+    #[test]
+    fn detects_fraud_minority() {
+        let mut e = Mt19937::new(3);
+        let (x, y) = make_fraud(&mut e, 4000, 10, 200);
+        let c = ctx();
+        let m = RandomForestClassifier::params().n_trees(30).train(&c, &x, &y).unwrap();
+        let pred = m.infer(&c, &x).unwrap();
+        let (_, recall, f1) = crate::metrics::precision_recall_f1(&pred, &y);
+        assert!(recall > 0.5, "recall={recall}");
+        assert!(f1 > 0.6, "f1={f1}");
+    }
+
+    #[test]
+    fn probabilities_rows_sum_to_one() {
+        let mut e = Mt19937::new(4);
+        let (x, y) = make_classification(&mut e, 200, 4, 1.0);
+        let c = ctx();
+        let m = RandomForestClassifier::params().n_trees(5).train(&c, &x, &y).unwrap();
+        let proba = m.predict_proba(&c, &x).unwrap();
+        for i in 0..200 {
+            let s: f64 = proba.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn param_validation() {
+        let c = ctx();
+        let x = DenseTable::<f64>::zeros(10, 2);
+        let y = vec![0.0; 10];
+        assert!(RandomForestClassifier::params().n_trees(0).train(&c, &x, &y).is_err());
+        assert!(RandomForestClassifier::params().sample_frac(0.0).train(&c, &x, &y).is_err());
+    }
+}

@@ -1,0 +1,409 @@
+//! KMeans (Lloyd's algorithm + kmeans++ seeding) — the clustering
+//! workload of Fig. 3 (RNG backends), Fig. 6 (2.75× over MKL) and the
+//! TPC-AI customer-segmentation case of Fig. 8.
+//!
+//! Backend ladder:
+//! * naive      — per-point per-centroid scalar distance loop with a
+//!                fresh allocation per point (stock-sklearn analogue);
+//! * reference  — `‖x−c‖² = ‖x‖² − 2x·c + ‖c‖²` with the blocked BLAS
+//!                gemm for the cross term;
+//! * vectorized — the gemm expansion plus fused argmin and incremental
+//!                centroid accumulation in one pass;
+//! * artifact   — the `kmeans_assign` Pallas kernel via PJRT, tiled by
+//!                the coordinator's fixed-shape batcher.
+
+use crate::blas::{gemm, sqdist, Transpose};
+use crate::coordinator::{batch, Backend, Context};
+use crate::error::{Error, Result};
+use crate::rng::{distributions::sample_indices, Engine, Mt19937, Uniform};
+use crate::rng::Distribution;
+use crate::tables::DenseTable;
+
+/// Centroid initialization strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KMeansInit {
+    /// Uniform random rows (the paper's Fig. 3 RNG-sensitive path).
+    Random,
+    /// kmeans++ D² weighting.
+    PlusPlus,
+}
+
+/// Parameter object (oneDAL `kmeans::Batch` analogue).
+#[derive(Clone, Debug)]
+pub struct KMeansParams {
+    pub k: usize,
+    pub max_iter: usize,
+    pub tol: f64,
+    pub seed: u32,
+    pub init: KMeansInit,
+}
+
+/// Entry point: `KMeans::params()`.
+pub struct KMeans;
+
+impl KMeans {
+    pub fn params() -> KMeansParams {
+        KMeansParams { k: 8, max_iter: 100, tol: 1e-6, seed: 7777, init: KMeansInit::PlusPlus }
+    }
+}
+
+/// Trained model.
+#[derive(Clone, Debug)]
+pub struct KMeansModel {
+    pub centroids: DenseTable<f64>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+impl KMeansParams {
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    pub fn max_iter(mut self, it: usize) -> Self {
+        self.max_iter = it;
+        self
+    }
+
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn init(mut self, init: KMeansInit) -> Self {
+        self.init = init;
+        self
+    }
+
+    /// Initialize centroids with a caller-supplied engine (Fig. 3 swaps
+    /// the engine here: `StdCxxRng` vs OpenRNG-style `Mt19937`/`Mcg59`).
+    pub fn init_centroids(&self, e: &mut dyn Engine, x: &DenseTable<f64>) -> Result<DenseTable<f64>> {
+        let n = x.rows();
+        if self.k == 0 || self.k > n {
+            return Err(Error::Param(format!("k={} must be in 1..={n}", self.k)));
+        }
+        match self.init {
+            KMeansInit::Random => {
+                let idx = sample_indices(e, n, self.k);
+                Ok(x.gather_rows(&idx))
+            }
+            KMeansInit::PlusPlus => {
+                let mut centers: Vec<usize> = Vec::with_capacity(self.k);
+                let mut u = Uniform::new(0.0, 1.0);
+                centers.push((u.sample(e) * n as f64) as usize % n);
+                let mut d2: Vec<f64> =
+                    (0..n).map(|i| sqdist(x.row(i), x.row(centers[0]))).collect();
+                while centers.len() < self.k {
+                    let total: f64 = d2.iter().sum();
+                    let next = if total <= 0.0 {
+                        // All points coincide with a center: fall back to uniform.
+                        (u.sample(e) * n as f64) as usize % n
+                    } else {
+                        let mut target = u.sample(e) * total;
+                        let mut pick = n - 1;
+                        for (i, &w) in d2.iter().enumerate() {
+                            target -= w;
+                            if target <= 0.0 {
+                                pick = i;
+                                break;
+                            }
+                        }
+                        pick
+                    };
+                    centers.push(next);
+                    for i in 0..n {
+                        d2[i] = d2[i].min(sqdist(x.row(i), x.row(next)));
+                    }
+                }
+                Ok(x.gather_rows(&centers))
+            }
+        }
+    }
+
+    /// Train with the default engine derived from `seed`.
+    pub fn train(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<KMeansModel> {
+        let mut e = Mt19937::new(self.seed);
+        self.train_with_engine(ctx, x, &mut e)
+    }
+
+    /// Train with an explicit RNG engine (Fig. 3 entry point).
+    pub fn train_with_engine(
+        &self,
+        ctx: &Context,
+        x: &DenseTable<f64>,
+        e: &mut dyn Engine,
+    ) -> Result<KMeansModel> {
+        let n = x.rows();
+        let d = x.cols();
+        let mut centroids = self.init_centroids(e, x)?;
+        let mut assign = vec![0usize; n];
+        let mut inertia = f64::INFINITY;
+        let mut iterations = 0;
+        for it in 0..self.max_iter {
+            iterations = it + 1;
+            let new_inertia = assign_step(ctx, x, &centroids, &mut assign)?;
+            // Update step: mean of assigned points per cluster.
+            let mut counts = vec![0usize; self.k];
+            let mut sums = vec![0.0f64; self.k * d];
+            for i in 0..n {
+                let c = assign[i];
+                counts[c] += 1;
+                let srow = &mut sums[c * d..(c + 1) * d];
+                for (s, &v) in srow.iter_mut().zip(x.row(i)) {
+                    *s += v;
+                }
+            }
+            for c in 0..self.k {
+                if counts[c] == 0 {
+                    continue; // keep empty cluster's previous centroid
+                }
+                let inv = 1.0 / counts[c] as f64;
+                let crow = centroids.row_mut(c);
+                let srow = &sums[c * d..(c + 1) * d];
+                for (cv, &sv) in crow.iter_mut().zip(srow) {
+                    *cv = sv * inv;
+                }
+            }
+            if inertia.is_finite() && (inertia - new_inertia).abs() <= self.tol * inertia.max(1.0) {
+                inertia = new_inertia;
+                break;
+            }
+            inertia = new_inertia;
+        }
+        Ok(KMeansModel { centroids, inertia, iterations })
+    }
+}
+
+impl KMeansModel {
+    /// Assign each row of `x` to its nearest centroid.
+    pub fn infer(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<usize>> {
+        let mut assign = vec![0usize; x.rows()];
+        assign_step(ctx, x, &self.centroids, &mut assign)?;
+        Ok(assign)
+    }
+}
+
+/// One assignment pass; returns the inertia. Dispatches on the ladder.
+fn assign_step(
+    ctx: &Context,
+    x: &DenseTable<f64>,
+    centroids: &DenseTable<f64>,
+    assign: &mut [usize],
+) -> Result<f64> {
+    let d = x.cols();
+    if centroids.cols() != d {
+        return Err(Error::Shape("kmeans: centroid dim mismatch".into()));
+    }
+    match ctx.dispatch("kmeans_assign", &[x.rows(), d, centroids.rows()]) {
+        Backend::Naive => Ok(assign_naive(x, centroids, assign)),
+        Backend::Reference => Ok(assign_gemm(x, centroids, assign, false)),
+        Backend::Vectorized | Backend::Auto => Ok(assign_gemm(x, centroids, assign, true)),
+        Backend::Artifact => assign_artifact(ctx, x, centroids, assign),
+    }
+}
+
+/// Naive rung: scalar distance loop, fresh Vec per row (intentional —
+/// this is the allocation-heavy style of unvectorized Python-era code).
+fn assign_naive(x: &DenseTable<f64>, c: &DenseTable<f64>, assign: &mut [usize]) -> f64 {
+    let k = c.rows();
+    let mut inertia = 0.0;
+    for i in 0..x.rows() {
+        let dists: Vec<f64> = (0..k).map(|j| sqdist(x.row(i), c.row(j))).collect();
+        let (mut best, mut bestv) = (0usize, f64::INFINITY);
+        for (j, &v) in dists.iter().enumerate() {
+            if v < bestv {
+                best = j;
+                bestv = v;
+            }
+        }
+        assign[i] = best;
+        inertia += bestv;
+    }
+    inertia
+}
+
+/// Reference / vectorized rungs: expand ‖x−c‖² and use gemm for X·Cᵀ.
+/// `fused` additionally computes the argmin in the same pass over the
+/// distance tile (the vectorized rung's branch-free min-reduction).
+fn assign_gemm(x: &DenseTable<f64>, c: &DenseTable<f64>, assign: &mut [usize], fused: bool) -> f64 {
+    let n = x.rows();
+    let d = x.cols();
+    let k = c.rows();
+    let cnorm: Vec<f64> = (0..k).map(|j| crate::blas::dot(c.row(j), c.row(j))).collect();
+    let mut inertia = 0.0;
+    // Tile rows to keep the cross-term block in cache.
+    const TILE: usize = 256;
+    let mut cross = vec![0.0f64; TILE * k];
+    for (start, len) in batch::tiles(n, TILE) {
+        let xblock = &x.data()[start * d..(start + len) * d];
+        gemm(Transpose::No, Transpose::Yes, len, k, d, 1.0, xblock, c.data(), 0.0, &mut cross[..len * k]);
+        for i in 0..len {
+            let xi = &x.data()[(start + i) * d..(start + i + 1) * d];
+            let xnorm = crate::blas::dot(xi, xi);
+            let row = &cross[i * k..(i + 1) * k];
+            let (mut best, mut bestv) = (0usize, f64::INFINITY);
+            if fused {
+                // Branch-free two-accumulator min scan (vectorizable).
+                for (j, &xc) in row.iter().enumerate() {
+                    let dist = xnorm - 2.0 * xc + cnorm[j];
+                    let better = dist < bestv;
+                    bestv = if better { dist } else { bestv };
+                    best = if better { j } else { best };
+                }
+            } else {
+                for (j, &xc) in row.iter().enumerate() {
+                    let dist = xnorm - 2.0 * xc + cnorm[j];
+                    if dist < bestv {
+                        bestv = dist;
+                        best = j;
+                    }
+                }
+            }
+            assign[start + i] = best;
+            inertia += bestv.max(0.0);
+        }
+    }
+    inertia
+}
+
+/// Artifact rung: run the Pallas `kmeans_assign` kernel via PJRT on
+/// fixed-shape padded tiles.
+fn assign_artifact(
+    ctx: &Context,
+    x: &DenseTable<f64>,
+    c: &DenseTable<f64>,
+    assign: &mut [usize],
+) -> Result<f64> {
+    let n = x.rows();
+    let d = x.cols();
+    let k = c.rows();
+    // Small inputs take the tightest tile (least padding waste); large
+    // inputs take the biggest row tile to amortize PJRT dispatch (§Perf).
+    let registry = ctx.registry();
+    let art = if n > 1024 {
+        registry.largest_tile_fit("kmeans_assign", &[n, d, k])
+    } else {
+        registry.best_fit("kmeans_assign", &[n, d, k])
+    }
+    .or_else(|| registry.best_fit("kmeans_assign", &[n.min(1024), d, k]))
+    .ok_or_else(|| Error::MissingArtifact("kmeans_assign".into()))?
+    .clone();
+    let rt = ctx.runtime().ok_or_else(|| Error::Runtime("artifact backend without runtime".into()))?;
+    let (tn, td, tk) = (art.dims[0], art.dims[1], art.dims[2]);
+    // Pad centroids once per call. Padding centroids sit at +inf distance
+    // via the kernel's k-mask, so they are never selected.
+    let cf: Vec<f32> = c.data().iter().map(|&v| v as f32).collect();
+    let cpad = batch::pad_to(&cf, k, d, tk, td);
+    let mut inertia = 0.0f64;
+    let xf: Vec<f32> = x.data().iter().map(|&v| v as f32).collect();
+    for (start, len) in batch::tiles(n, tn) {
+        let xpad = batch::pad_to(&xf[start * d..(start + len) * d], len, d, tn, td);
+        let valid = [len as f32, k as f32];
+        let outs = rt.execute_f32(
+            &art.name,
+            &[
+                (&xpad.data, &[tn, td]),
+                (&cpad.data, &[tk, td]),
+                (&valid, &[2]),
+            ],
+        )?;
+        // outputs: assignments f32[tn], min-distances f32[tn]
+        let a = &outs[0];
+        let dist = &outs[1];
+        for i in 0..len {
+            assign[start + i] = a[i] as usize;
+            inertia += f64::from(dist[i]).max(0.0);
+        }
+    }
+    Ok(inertia)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::synth::make_blobs;
+
+    fn ctx(b: Backend) -> Context {
+        Context::builder().artifact_dir("/nonexistent").backend(b).build().unwrap()
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let mut e = Mt19937::new(1);
+        let (x, truth) = make_blobs(&mut e, 600, 5, 3, 0.3);
+        let ctx = ctx(Backend::Vectorized);
+        let model = KMeans::params().k(3).seed(5).train(&ctx, &x).unwrap();
+        let assign = model.infer(&ctx, &x).unwrap();
+        // Cluster purity: every predicted cluster maps to one true label.
+        let mut purity = 0usize;
+        for c in 0..3 {
+            let mut counts = [0usize; 3];
+            for i in 0..600 {
+                if assign[i] == c {
+                    counts[truth[i]] += 1;
+                }
+            }
+            purity += counts.iter().max().unwrap();
+        }
+        assert!(purity as f64 / 600.0 > 0.95, "purity {}", purity as f64 / 600.0);
+    }
+
+    #[test]
+    fn backends_agree_on_assignment() {
+        let mut e = Mt19937::new(2);
+        let (x, _) = make_blobs(&mut e, 300, 7, 4, 1.0);
+        let naive = ctx(Backend::Naive);
+        let refr = ctx(Backend::Reference);
+        let vect = ctx(Backend::Vectorized);
+        let model = KMeans::params().k(4).seed(9).train(&vect, &x).unwrap();
+        let a1 = model.infer(&naive, &x).unwrap();
+        let a2 = model.infer(&refr, &x).unwrap();
+        let a3 = model.infer(&vect, &x).unwrap();
+        assert_eq!(a1, a2);
+        assert_eq!(a2, a3);
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_clusters() {
+        let mut e = Mt19937::new(3);
+        let (x, _) = make_blobs(&mut e, 400, 4, 5, 1.5);
+        let ctx = ctx(Backend::Vectorized);
+        let m2 = KMeans::params().k(2).seed(1).train(&ctx, &x).unwrap();
+        let m8 = KMeans::params().k(8).seed(1).train(&ctx, &x).unwrap();
+        assert!(m8.inertia < m2.inertia);
+    }
+
+    #[test]
+    fn k_larger_than_n_rejected() {
+        let ctx = ctx(Backend::Naive);
+        let x = DenseTable::from_vec(vec![0.0; 10], 5, 2).unwrap();
+        assert!(KMeans::params().k(6).train(&ctx, &x).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut e = Mt19937::new(4);
+        let (x, _) = make_blobs(&mut e, 200, 3, 3, 1.0);
+        let ctx = ctx(Backend::Vectorized);
+        let a = KMeans::params().k(3).seed(42).train(&ctx, &x).unwrap();
+        let b = KMeans::params().k(3).seed(42).train(&ctx, &x).unwrap();
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn random_init_works_too() {
+        let mut e = Mt19937::new(5);
+        let (x, _) = make_blobs(&mut e, 200, 3, 3, 0.5);
+        let ctx = ctx(Backend::Vectorized);
+        let m = KMeans::params().k(3).init(KMeansInit::Random).train(&ctx, &x).unwrap();
+        assert!(m.inertia.is_finite());
+        assert_eq!(m.centroids.rows(), 3);
+    }
+}

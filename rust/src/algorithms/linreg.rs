@@ -1,0 +1,206 @@
+//! Linear and ridge regression via the normal equations — the workloads
+//! where the paper *honestly reports losses* (Fig. 5: 0.24× / 0.45× —
+//! memory-bound linear algebra where vectorization of the solver cannot
+//! compensate), and inference wins on Fig. 6.
+//!
+//! `XᵀX` is computed with the VSL `xcp` machinery's BLAS path (syrk on
+//! the transposed layout), the solve with the Cholesky substrate.
+
+use crate::blas::{gemv, syrk};
+use crate::coordinator::{Backend, Context};
+use crate::error::{Error, Result};
+use crate::linalg::cholesky_solve;
+use crate::tables::DenseTable;
+
+#[derive(Clone, Debug)]
+pub struct LinRegParams {
+    /// L2 penalty (0 = ordinary least squares).
+    pub alpha: f64,
+    pub fit_intercept: bool,
+}
+
+pub struct LinearRegression;
+
+impl LinearRegression {
+    pub fn params() -> LinRegParams {
+        LinRegParams { alpha: 0.0, fit_intercept: true }
+    }
+}
+
+/// Ridge is the same estimator with a nonzero penalty (oneDAL exposes
+/// both; the paper benches them separately on the 10M×20 grid).
+pub struct RidgeRegression;
+
+impl RidgeRegression {
+    pub fn params() -> LinRegParams {
+        LinRegParams { alpha: 1.0, fit_intercept: true }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LinRegModel {
+    pub coef: Vec<f64>,
+    pub intercept: f64,
+}
+
+impl LinRegParams {
+    pub fn alpha(mut self, a: f64) -> Self {
+        self.alpha = a;
+        self
+    }
+
+    pub fn fit_intercept(mut self, b: bool) -> Self {
+        self.fit_intercept = b;
+        self
+    }
+
+    pub fn train(&self, ctx: &Context, x: &DenseTable<f64>, y: &[f64]) -> Result<LinRegModel> {
+        let n = x.rows();
+        let p = x.cols();
+        if y.len() != n {
+            return Err(Error::Shape("linreg: label count mismatch".into()));
+        }
+        if n <= p {
+            return Err(Error::Param(format!("linreg: need n > p (n={n}, p={p})")));
+        }
+        if self.alpha < 0.0 {
+            return Err(Error::Param("linreg: alpha must be ≥ 0".into()));
+        }
+        // Center to absorb the intercept.
+        let (xc, yc, xmeans, ymean) = if self.fit_intercept {
+            let xm = x.col_means();
+            let ym = y.iter().sum::<f64>() / n as f64;
+            let mut xc = x.clone();
+            for i in 0..n {
+                for (v, &m) in xc.row_mut(i).iter_mut().zip(&xm) {
+                    *v -= m;
+                }
+            }
+            let yc: Vec<f64> = y.iter().map(|&v| v - ym).collect();
+            (xc, yc, xm, ym)
+        } else {
+            (x.clone(), y.to_vec(), vec![0.0; p], 0.0)
+        };
+        // Normal equations: (XᵀX + αI) w = Xᵀy.
+        let mut xtx = vec![0.0f64; p * p];
+        match ctx.backend() {
+            Backend::Naive => {
+                // Textbook triple loop.
+                for i in 0..p {
+                    for j in 0..p {
+                        let mut acc = 0.0;
+                        for r in 0..n {
+                            acc += xc.get(r, i) * xc.get(r, j);
+                        }
+                        xtx[i * p + j] = acc;
+                    }
+                }
+            }
+            _ => {
+                // XᵀX = syrk over the transposed (p×n) layout.
+                let xt = xc.transposed();
+                syrk(p, n, 1.0, xt.data(), 0.0, &mut xtx);
+            }
+        }
+        for i in 0..p {
+            xtx[i * p + i] += self.alpha;
+        }
+        let mut xty = vec![0.0f64; p];
+        gemv(true, n, p, 1.0, xc.data(), &yc, 0.0, &mut xty);
+        let coef = cholesky_solve(&xtx, p, &xty)?;
+        let intercept = if self.fit_intercept {
+            ymean - coef.iter().zip(&xmeans).map(|(c, m)| c * m).sum::<f64>()
+        } else {
+            0.0
+        };
+        Ok(LinRegModel { coef, intercept })
+    }
+}
+
+impl LinRegModel {
+    pub fn infer(&self, _ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<f64>> {
+        if x.cols() != self.coef.len() {
+            return Err(Error::Shape("linreg: dim mismatch".into()));
+        }
+        let mut out = vec![self.intercept; x.rows()];
+        gemv(false, x.rows(), x.cols(), 1.0, x.data(), &self.coef, 1.0, &mut out);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Mt19937;
+    use crate::tables::synth::make_regression;
+
+    fn ctx(b: Backend) -> Context {
+        Context::builder().artifact_dir("/nonexistent").backend(b).build().unwrap()
+    }
+
+    #[test]
+    fn recovers_true_weights() {
+        let mut e = Mt19937::new(1);
+        let (x, y, w) = make_regression(&mut e, 2000, 8, 0.01);
+        let m = LinearRegression::params().train(&ctx(Backend::Vectorized), &x, &y).unwrap();
+        for (a, b) in m.coef.iter().zip(&w) {
+            assert!((a - b).abs() < 0.01, "{a} vs {b}");
+        }
+        assert!(m.intercept.abs() < 0.05);
+    }
+
+    #[test]
+    fn naive_and_blas_backends_agree() {
+        let mut e = Mt19937::new(2);
+        let (x, y, _) = make_regression(&mut e, 500, 6, 0.1);
+        let a = LinearRegression::params().train(&ctx(Backend::Naive), &x, &y).unwrap();
+        let b = LinearRegression::params().train(&ctx(Backend::Vectorized), &x, &y).unwrap();
+        for (u, v) in a.coef.iter().zip(&b.coef) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn ridge_shrinks_towards_zero() {
+        let mut e = Mt19937::new(3);
+        let (x, y, _) = make_regression(&mut e, 300, 5, 0.5);
+        let ols = LinearRegression::params().train(&ctx(Backend::Vectorized), &x, &y).unwrap();
+        let ridge = RidgeRegression::params().alpha(1000.0).train(&ctx(Backend::Vectorized), &x, &y).unwrap();
+        let n_ols: f64 = ols.coef.iter().map(|c| c * c).sum();
+        let n_ridge: f64 = ridge.coef.iter().map(|c| c * c).sum();
+        assert!(n_ridge < n_ols);
+    }
+
+    #[test]
+    fn inference_r2_high_on_train() {
+        let mut e = Mt19937::new(4);
+        let (x, y, _) = make_regression(&mut e, 1000, 10, 0.1);
+        let c = ctx(Backend::Vectorized);
+        let m = LinearRegression::params().train(&c, &x, &y).unwrap();
+        let pred = m.infer(&c, &x).unwrap();
+        assert!(crate::metrics::r2(&pred, &y) > 0.99);
+    }
+
+    #[test]
+    fn intercept_handled() {
+        // y = 2x + 5
+        let x = DenseTable::from_vec((0..50).map(|i| i as f64).collect(), 50, 1).unwrap();
+        let y: Vec<f64> = (0..50).map(|i| 2.0 * i as f64 + 5.0).collect();
+        let c = ctx(Backend::Vectorized);
+        let m = LinearRegression::params().train(&c, &x, &y).unwrap();
+        assert!((m.coef[0] - 2.0).abs() < 1e-8);
+        assert!((m.intercept - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn validation_errors() {
+        let c = ctx(Backend::Vectorized);
+        let x = DenseTable::<f64>::zeros(5, 8);
+        let y = vec![0.0; 5];
+        assert!(LinearRegression::params().train(&c, &x, &y).is_err()); // n <= p
+        let x2 = DenseTable::<f64>::zeros(10, 2);
+        assert!(LinearRegression::params().train(&c, &x2, &y).is_err()); // len mismatch
+        let (x3, y3) = (DenseTable::from_vec((0..20).map(|i| (i % 7) as f64).collect(), 10, 2).unwrap(), vec![1.0; 10]);
+        assert!(LinearRegression::params().alpha(-1.0).train(&c, &x3, &y3).is_err());
+    }
+}

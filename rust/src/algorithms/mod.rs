@@ -1,0 +1,16 @@
+//! The ML algorithms of the paper's evaluation (Figs. 5–9): each exposes
+//! oneDAL's `params() → train(&ctx, …) → Model → infer(&ctx, …)` shape
+//! and implements the backend ladder (naive / reference / vectorized /
+//! artifact) so the benches can sweep exactly the comparisons the paper
+//! plots.
+
+pub mod covariance;
+pub mod dbscan;
+pub mod forest;
+pub mod kmeans;
+pub mod knn;
+pub mod linreg;
+pub mod logreg;
+pub mod pca;
+pub mod svm;
+pub mod tree;

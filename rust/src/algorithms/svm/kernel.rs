@@ -1,0 +1,182 @@
+//! SVM kernel functions, gram-row computation and the LRU row cache the
+//! Thunder method amortizes row computation with.
+
+use crate::blas::{dot, gemv, sqdist};
+use crate::tables::DenseTable;
+use std::collections::{HashMap, VecDeque};
+
+/// Kernel function.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SvmKernel {
+    Linear,
+    /// `exp(−γ‖x−y‖²)`.
+    Rbf { gamma: f64 },
+}
+
+impl SvmKernel {
+    /// k(x, y) for two rows.
+    #[inline]
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        match *self {
+            SvmKernel::Linear => dot(x, y),
+            SvmKernel::Rbf { gamma } => (-gamma * sqdist(x, y)).exp(),
+        }
+    }
+
+    /// Full gram row `K(i, ·)` against every training row, written into
+    /// `out` (length n). Uses gemv for the linear/RBF cross terms.
+    pub fn gram_row(&self, x: &DenseTable<f64>, i: usize, norms: &[f64], out: &mut [f64]) {
+        let n = x.rows();
+        let d = x.cols();
+        debug_assert_eq!(out.len(), n);
+        match *self {
+            SvmKernel::Linear => {
+                gemv(false, n, d, 1.0, x.data(), x.row(i), 0.0, out);
+            }
+            SvmKernel::Rbf { gamma } => {
+                // ‖xi−xj‖² = ‖xi‖² + ‖xj‖² − 2 xi·xj, cross term via gemv.
+                gemv(false, n, d, 1.0, x.data(), x.row(i), 0.0, out);
+                let ni = norms[i];
+                for (j, v) in out.iter_mut().enumerate() {
+                    let d2 = (ni + norms[j] - 2.0 * *v).max(0.0);
+                    *v = (-gamma * d2).exp();
+                }
+            }
+        }
+    }
+
+    /// Diagonal `K(i, i)` values for all rows.
+    pub fn diag(&self, x: &DenseTable<f64>, norms: &[f64]) -> Vec<f64> {
+        match *self {
+            SvmKernel::Linear => norms.to_vec(),
+            SvmKernel::Rbf { .. } => vec![1.0; x.rows()],
+        }
+    }
+}
+
+/// LRU cache of gram rows keyed by training index — the Thunder method's
+/// working-set amortization (§IV-E discussion of `KiBlock`). Rows are
+/// shared out as `Arc`s so the solver holds two rows (i and j) while
+/// updating the gradient without copying O(n) data per iteration.
+pub struct RowCache {
+    capacity: usize,
+    rows: HashMap<usize, std::sync::Arc<Vec<f64>>>,
+    order: VecDeque<usize>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl RowCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(2),
+            rows: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Fetch row `i`, computing it with `compute` on a miss.
+    pub fn get<F: FnOnce(&mut [f64])>(
+        &mut self,
+        i: usize,
+        n: usize,
+        compute: F,
+    ) -> std::sync::Arc<Vec<f64>> {
+        if self.rows.contains_key(&i) {
+            self.hits += 1;
+            // refresh LRU position
+            if let Some(pos) = self.order.iter().position(|&k| k == i) {
+                self.order.remove(pos);
+            }
+            self.order.push_back(i);
+            return self.rows.get(&i).unwrap().clone();
+        }
+        self.misses += 1;
+        let mut buf = vec![0.0f64; n];
+        compute(&mut buf);
+        if self.rows.len() >= self.capacity {
+            if let Some(evict) = self.order.pop_front() {
+                self.rows.remove(&evict);
+            }
+        }
+        self.order.push_back(i);
+        let arc = std::sync::Arc::new(buf);
+        self.rows.insert(i, arc.clone());
+        arc
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Gaussian, Mt19937};
+
+    fn dataset(n: usize, d: usize) -> DenseTable<f64> {
+        let mut e = Mt19937::new(9);
+        let mut g = Gaussian::<f64>::standard();
+        let mut v = vec![0.0; n * d];
+        g.fill(&mut e, &mut v);
+        DenseTable::from_vec(v, n, d).unwrap()
+    }
+
+    #[test]
+    fn gram_row_matches_eval() {
+        let x = dataset(40, 6);
+        let norms: Vec<f64> = (0..40).map(|i| dot(x.row(i), x.row(i))).collect();
+        for k in [SvmKernel::Linear, SvmKernel::Rbf { gamma: 0.3 }] {
+            let mut row = vec![0.0; 40];
+            k.gram_row(&x, 7, &norms, &mut row);
+            for j in 0..40 {
+                let expect = k.eval(x.row(7), x.row(j));
+                assert!((row[j] - expect).abs() < 1e-10, "{k:?} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_diag_is_one_linear_diag_is_norm() {
+        let x = dataset(10, 4);
+        let norms: Vec<f64> = (0..10).map(|i| dot(x.row(i), x.row(i))).collect();
+        let dr = SvmKernel::Rbf { gamma: 1.0 }.diag(&x, &norms);
+        assert!(dr.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+        let dl = SvmKernel::Linear.diag(&x, &norms);
+        assert_eq!(dl, norms);
+    }
+
+    #[test]
+    fn cache_hits_and_eviction() {
+        let mut c = RowCache::new(2);
+        c.get(0, 4, |b| b.fill(0.0));
+        c.get(1, 4, |b| b.fill(1.0));
+        assert_eq!(c.misses, 2);
+        c.get(0, 4, |_| panic!("must be cached"));
+        assert_eq!(c.hits, 1);
+        // Insert third row → evicts LRU (row 1, since row 0 was refreshed).
+        c.get(2, 4, |b| b.fill(2.0));
+        assert_eq!(c.len(), 2);
+        c.get(1, 4, |b| b.fill(1.0)); // recompute = miss
+        assert_eq!(c.misses, 4);
+    }
+
+    #[test]
+    fn rbf_self_similarity_max() {
+        let x = dataset(20, 3);
+        let k = SvmKernel::Rbf { gamma: 0.7 };
+        for i in 0..20 {
+            assert!((k.eval(x.row(i), x.row(i)) - 1.0).abs() < 1e-12);
+            for j in 0..20 {
+                assert!(k.eval(x.row(i), x.row(j)) <= 1.0 + 1e-12);
+            }
+        }
+    }
+}

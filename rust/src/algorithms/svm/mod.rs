@@ -1,0 +1,22 @@
+//! Support Vector Machine classification — the paper's flagship
+//! optimization target (§IV-E, Fig. 4: +22 % Boser / +5 % Thunder from
+//! the SVE-predicated `WSSj`, and Fig. 5's headline 134×/217× over stock
+//! sklearn on a9a/gisette-shaped data).
+//!
+//! Structure:
+//! * [`kernel`] — linear / RBF kernel functions + gram-row computation
+//!   and the Thunder row cache;
+//! * [`wss`]    — the WSS3 working-set selection: `wss_j_scalar` is the
+//!   paper's Listing 1 (branchy, blocks auto-vectorization), and
+//!   `wss_j_vectorized` is Listing 2 rebuilt as branch-free masked
+//!   blocks (the SVE-predicate → mask mapping of DESIGN.md §3);
+//! * [`solver`] — the SMO dual solver with the paper's two training
+//!   methods: **Boser** (classic 2-index SMO, WSS every iteration) and
+//!   **Thunder** (working-set batches solved on cached kernel rows).
+
+pub mod kernel;
+pub mod solver;
+pub mod wss;
+
+pub use kernel::SvmKernel;
+pub use solver::{Svc, SvcModel, SvmParams, SvmSolver};

@@ -1,0 +1,329 @@
+//! WSS3 working-set selection (§IV-E).
+//!
+//! The solver maintains `grad[t] = y_t·G_t` (the label-signed dual
+//! gradient — with it the i/j optimality conditions and the gradient
+//! update are label-free) and per-point membership flags. The `WSSj`
+//! selection of the paper's Listing 1/2 picks the second index of the
+//! violating pair by maximizing the second-order objective `b²/a`.
+//!
+//! Two implementations with **identical results** (the paper validated
+//! its SVE loop bitwise against the scalar one):
+//!
+//! * [`wss_j_scalar`] — the branchy Listing 1 loop: two flag guards and
+//!   a threshold guard, each a `continue` that defeats compiler
+//!   auto-vectorization;
+//! * [`wss_j_vectorized`] — Listing 2 restructured for masked lanes:
+//!   fixed-width blocks, every condition evaluated as a lane mask
+//!   (the Pallas/SVE predicate analogue), arithmetic executed
+//!   unconditionally on all lanes with neutral values (−∞) for dead
+//!   lanes, then a block-local reduction with first-index tie-breaking
+//!   to preserve the scalar loop's semantics exactly.
+
+/// Flag bits (the paper's `I[]` array).
+pub const SIGN_POS: u8 = 0b0001;
+/// Negative-class sign bit.
+pub const SIGN_NEG: u8 = 0b0010;
+/// Membership in the "up" set `I_up`.
+pub const UP: u8 = 0b0100;
+/// Membership in the "low" set `I_low`.
+pub const LOW: u8 = 0b1000;
+/// `sign` mask accepting both classes (the solver selects per-class
+/// subsets only during shrinking, which oneDAL enables separately).
+pub const SIGN_ANY: u8 = SIGN_POS | SIGN_NEG;
+
+/// Result of a `WSSj` scan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WssJResult {
+    /// Selected second index (`Bj`), or `None` when no candidate passed.
+    pub bj: Option<usize>,
+    /// Best second-order objective value (`GMax`).
+    pub obj: f64,
+    /// `GMax2`: max gradient over the low set — the stopping-gap term.
+    pub gmax2: f64,
+    /// Unclipped step `delta = −b/a` for the selected pair.
+    pub delta: f64,
+}
+
+/// First-index selection (`WSSi`): the most violating index in `I_up`,
+/// i.e. argmin of the signed gradient. Returns `(Bi, GMin)`.
+pub fn wss_i(grad: &[f64], flags: &[u8]) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for (t, (&g, &fl)) in grad.iter().zip(flags).enumerate() {
+        if fl & UP == 0 {
+            continue;
+        }
+        if best.map(|(_, bg)| g < bg).unwrap_or(true) {
+            best = Some((t, g));
+        }
+    }
+    best
+}
+
+/// Paper Listing 1: the scalar branchy `WSSj` loop, verbatim semantics.
+///
+/// * `grad`        — signed gradient, full length;
+/// * `flags`       — `I[]` bit array, full length;
+/// * `sign`/`low`  — the two guard masks of the listing;
+/// * `gmin`        — `GMin` from [`wss_i`] (= −Gmax);
+/// * `kii`         — `K(i, i)`;
+/// * `kernel_diag` — `K(j, j)` for all j, full length;
+/// * `ki_block`    — plain kernel row `K(i, j)` (the curvature along the
+///   feasible direction (αᵢ += yᵢτ, αⱼ −= yⱼτ) is `Kii + Kjj − 2Kij`) for
+///   `j ∈ [j_start, j_end)`, indexed `j − j_start` (the `KiBlock` of
+///   the listing);
+/// * `tau`         — denominator guard.
+#[allow(clippy::too_many_arguments)]
+pub fn wss_j_scalar(
+    grad: &[f64],
+    flags: &[u8],
+    sign: u8,
+    low: u8,
+    gmin: f64,
+    kii: f64,
+    kernel_diag: &[f64],
+    ki_block: &[f64],
+    j_start: usize,
+    j_end: usize,
+    tau: f64,
+) -> WssJResult {
+    let two = 2.0f64;
+    let zero = 0.0f64;
+    let mut gmax = f64::NEG_INFINITY;
+    let mut gmax2 = f64::NEG_INFINITY;
+    let mut bj: Option<usize> = None;
+    let mut delta = 0.0f64;
+    for j in j_start..j_end {
+        let gradj = grad[j];
+        if flags[j] & sign == 0 {
+            continue;
+        }
+        if (flags[j] & low) != low {
+            continue;
+        }
+        if gradj > gmax2 {
+            gmax2 = gradj;
+        }
+        if gradj < gmin {
+            continue;
+        }
+        let b = gmin - gradj;
+        let mut a = kii + kernel_diag[j] - two * ki_block[j - j_start];
+        if a <= zero {
+            a = tau;
+        }
+        let dt = b / a;
+        let obj_func = b * dt;
+        if obj_func > gmax {
+            gmax = obj_func;
+            bj = Some(j);
+            delta = -dt;
+        }
+    }
+    WssJResult { bj, obj: gmax, gmax2, delta }
+}
+
+/// Lane width of the vectorized scan — the stand-in for SVE's runtime
+/// vector length (a 512-bit SVE implementation holds 8 f64 lanes; we use
+/// 16 to give the autovectorizer two registers of headroom).
+pub const WSS_LANES: usize = 16;
+
+/// Paper Listing 2: branch-free masked `WSSj`.
+///
+/// All guards become one boolean mask per lane; arithmetic runs on every
+/// lane with dead lanes forced to the neutral element; the final
+/// reduction scans each block in index order so ties resolve exactly as
+/// in the scalar loop (strict `>` keeps the earliest maximizer).
+#[allow(clippy::too_many_arguments)]
+pub fn wss_j_vectorized(
+    grad: &[f64],
+    flags: &[u8],
+    sign: u8,
+    low: u8,
+    gmin: f64,
+    kii: f64,
+    kernel_diag: &[f64],
+    ki_block: &[f64],
+    j_start: usize,
+    j_end: usize,
+    tau: f64,
+) -> WssJResult {
+    let mut gmax = f64::NEG_INFINITY;
+    let mut gmax2 = f64::NEG_INFINITY;
+    let mut bj: Option<usize> = None;
+    let mut delta = 0.0f64;
+
+    let mut obj_lane = [f64::NEG_INFINITY; WSS_LANES];
+    let mut dt_lane = [0.0f64; WSS_LANES];
+
+    let mut base = j_start;
+    while base < j_end {
+        let len = WSS_LANES.min(j_end - base);
+        // --- predicated block body (every lane, no branches) ---
+        let mut block_gmax2 = f64::NEG_INFINITY;
+        for l in 0..len {
+            let j = base + l;
+            let gradj = grad[j];
+            let fl = flags[j];
+            // svwhilelt is implicit in `len`; the two guards fuse into
+            // one predicate exactly as Listing 2's svand/svcmpeq pair.
+            let pass = (fl & sign != 0) & ((fl & low) == low);
+            // GMax2 update counts every `pass` lane (pre-threshold).
+            let g2 = if pass { gradj } else { f64::NEG_INFINITY };
+            block_gmax2 = if g2 > block_gmax2 { g2 } else { block_gmax2 };
+            // Threshold predicate folds in: lanes below GMin go neutral.
+            let active = pass & (gradj >= gmin);
+            let b = gmin - gradj;
+            let a_raw = kii + kernel_diag[j] - 2.0 * ki_block[j - j_start];
+            let a = if a_raw <= 0.0 { tau } else { a_raw };
+            let dt = b / a;
+            let obj = b * dt;
+            obj_lane[l] = if active { obj } else { f64::NEG_INFINITY };
+            dt_lane[l] = dt;
+        }
+        gmax2 = gmax2.max(block_gmax2);
+        // --- block reduction, index order preserves scalar tie-breaks ---
+        for l in 0..len {
+            if obj_lane[l] > gmax {
+                gmax = obj_lane[l];
+                bj = Some(base + l);
+                delta = -dt_lane[l];
+            }
+        }
+        base += len;
+    }
+    WssJResult { bj, obj: gmax, gmax2, delta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Engine, Gaussian, Mt19937, Uniform};
+
+    /// Random-but-valid WSS inputs.
+    fn random_case(seed: u32, n: usize) -> (Vec<f64>, Vec<u8>, f64, f64, Vec<f64>, Vec<f64>) {
+        let mut e = Mt19937::new(seed);
+        let mut g = Gaussian::<f64>::standard();
+        let mut u = Uniform::new(0.0, 1.0);
+        let grad: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
+        let flags: Vec<u8> = (0..n)
+            .map(|_| {
+                let mut f = if u.sample(&mut e) < 0.5 { SIGN_POS } else { SIGN_NEG };
+                if u.sample(&mut e) < 0.7 {
+                    f |= LOW;
+                }
+                if u.sample(&mut e) < 0.7 {
+                    f |= UP;
+                }
+                f
+            })
+            .collect();
+        let gmin = g.sample(&mut e);
+        let kii = 1.0 + u.sample(&mut e);
+        let diag: Vec<f64> = (0..n).map(|_| 1.0 + u.sample(&mut e)).collect();
+        let ki: Vec<f64> = (0..n).map(|_| g.sample(&mut e) * 0.5).collect();
+        (grad, flags, gmin, kii, diag, ki)
+    }
+
+    #[test]
+    fn vectorized_matches_scalar_bitwise() {
+        // The paper's key validation claim: the SVE loop is bitwise
+        // identical to the scalar one. Sweep sizes covering full blocks,
+        // ragged tails and sub-block inputs.
+        for (seed, n) in [(1u32, 1usize), (2, 7), (3, 16), (4, 17), (5, 100), (6, 1024), (7, 1023)] {
+            let (grad, flags, gmin, kii, diag, ki) = random_case(seed, n);
+            let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
+            let v = wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
+            assert_eq!(s.bj, v.bj, "n={n}");
+            assert_eq!(s.obj.to_bits(), v.obj.to_bits(), "n={n}");
+            assert_eq!(s.gmax2.to_bits(), v.gmax2.to_bits(), "n={n}");
+            assert_eq!(s.delta.to_bits(), v.delta.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn subrange_scan_matches() {
+        let (grad, flags, gmin, kii, diag, ki) = random_case(8, 200);
+        // KiBlock indexed from j_start.
+        let (j0, j1) = (37, 161);
+        let ki_block = &ki[j0..j1];
+        let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, ki_block, j0, j1, 1e-12);
+        let v = wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, ki_block, j0, j1, 1e-12);
+        assert_eq!(s, v);
+        if let Some(bj) = s.bj {
+            assert!((j0..j1).contains(&bj));
+        }
+    }
+
+    #[test]
+    fn respects_low_mask() {
+        let grad = vec![5.0, 10.0, 3.0];
+        // Only index 2 is in the low set.
+        let flags = vec![SIGN_POS | UP, SIGN_POS | UP, SIGN_POS | LOW];
+        let diag = vec![1.0; 3];
+        let ki = vec![0.0; 3];
+        let r = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, 0.0, 1.0, &diag, &ki, 0, 3, 1e-12);
+        assert_eq!(r.bj, Some(2));
+        assert_eq!(r.gmax2, 3.0);
+    }
+
+    #[test]
+    fn below_gmin_updates_gmax2_but_not_bj() {
+        let grad = vec![-1.0, -2.0];
+        let flags = vec![SIGN_POS | LOW, SIGN_NEG | LOW];
+        let diag = vec![1.0; 2];
+        let ki = vec![0.0; 2];
+        let r = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, 0.5, 1.0, &diag, &ki, 0, 2, 1e-12);
+        assert_eq!(r.bj, None);
+        assert_eq!(r.gmax2, -1.0);
+        assert_eq!(r.obj, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn denominator_guard_uses_tau() {
+        // a = kii + diag − 2·ki = 1 + 1 − 2·1 = 0 → guarded to tau.
+        let grad = vec![2.0];
+        let flags = vec![SIGN_POS | LOW];
+        let r = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, 0.0, 1.0, &[1.0], &[1.0], 0, 1, 0.5);
+        // b = −2, a = 0.5 → dt = −4, obj = 8, delta = 4.
+        assert_eq!(r.bj, Some(0));
+        assert!((r.obj - 8.0).abs() < 1e-12);
+        assert!((r.delta - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tie_breaks_to_first_index() {
+        // Two identical candidates: scalar keeps the first (strict >).
+        let grad = vec![1.0, 1.0];
+        let flags = vec![SIGN_POS | LOW; 2];
+        let diag = vec![2.0; 2];
+        let ki = vec![0.0; 2];
+        let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, 0.0, 1.0, &diag, &ki, 0, 2, 1e-12);
+        let v = wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, 0.0, 1.0, &diag, &ki, 0, 2, 1e-12);
+        assert_eq!(s.bj, Some(0));
+        assert_eq!(v.bj, Some(0));
+    }
+
+    #[test]
+    fn wss_i_picks_min_over_up() {
+        let grad = vec![3.0, -1.0, -5.0, 0.0];
+        let flags = vec![UP, UP, 0, UP];
+        let (bi, gmin) = wss_i(&grad, &flags).unwrap();
+        assert_eq!(bi, 1); // index 2 is not in UP
+        assert_eq!(gmin, -1.0);
+        assert!(wss_i(&grad, &[0; 4]).is_none());
+    }
+
+    /// Property sweep across many random shapes — the hypothesis-style
+    /// invariant test for the bitwise-equality claim.
+    #[test]
+    fn property_bitwise_equality_sweep() {
+        let mut meta = Mt19937::new(999);
+        for trial in 0..50u32 {
+            let n = 1 + (meta.next_u32() % 600) as usize;
+            let (grad, flags, gmin, kii, diag, ki) = random_case(1000 + trial, n);
+            let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
+            let v = wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
+            assert_eq!(s, v, "trial={trial} n={n}");
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! CART decision-tree classifier — the base learner of the random
+//! forest (Fig. 9's 31× fraud-detection workload). Gini-impurity splits
+//! on sorted feature scans, depth/leaf-size limited, with optional
+//! per-node feature subsampling driven by an RNG engine (the hook the
+//! forest uses with its Family-method streams).
+
+use crate::error::{Error, Result};
+use crate::rng::{distributions::sample_indices, Engine};
+use crate::tables::DenseTable;
+
+#[derive(Clone, Debug)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Features inspected per node; 0 = all (single trees) or √p (forest).
+    pub max_features: usize,
+    pub n_classes: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        Self { max_depth: 16, min_samples_split: 2, max_features: 0, n_classes: 2 }
+    }
+}
+
+/// Flattened tree node.
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf {
+        /// Class-probability vector.
+        proba: Vec<f64>,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+/// A trained decision tree.
+#[derive(Clone, Debug)]
+pub struct DecisionTree {
+    nodes: Vec<Node>,
+    pub n_classes: usize,
+}
+
+impl DecisionTree {
+    /// Fit on the rows of `x` indexed by `idx` (bootstrap support).
+    pub fn fit(
+        params: &TreeParams,
+        x: &DenseTable<f64>,
+        y: &[f64],
+        idx: &[usize],
+        engine: &mut dyn Engine,
+    ) -> Result<Self> {
+        if x.rows() != y.len() {
+            return Err(Error::Shape("tree: label count mismatch".into()));
+        }
+        if idx.is_empty() {
+            return Err(Error::Param("tree: empty training subset".into()));
+        }
+        let mut t = DecisionTree { nodes: Vec::new(), n_classes: params.n_classes };
+        let mut indices = idx.to_vec();
+        t.build(params, x, y, &mut indices, 0, engine)?;
+        Ok(t)
+    }
+
+    fn leaf(&mut self, y: &[f64], idx: &[usize], n_classes: usize) -> usize {
+        let mut proba = vec![0.0; n_classes];
+        for &i in idx {
+            proba[y[i] as usize] += 1.0;
+        }
+        let total: f64 = proba.iter().sum();
+        for p in proba.iter_mut() {
+            *p /= total;
+        }
+        self.nodes.push(Node::Leaf { proba });
+        self.nodes.len() - 1
+    }
+
+    /// Recursive builder; `idx` is reordered in place (partition).
+    fn build(
+        &mut self,
+        params: &TreeParams,
+        x: &DenseTable<f64>,
+        y: &[f64],
+        idx: &mut [usize],
+        depth: usize,
+        engine: &mut dyn Engine,
+    ) -> Result<usize> {
+        let n = idx.len();
+        // Stop conditions: depth, size, purity.
+        let first_class = y[idx[0]];
+        let pure = idx.iter().all(|&i| y[i] == first_class);
+        if depth >= params.max_depth || n < params.min_samples_split || pure {
+            return Ok(self.leaf(y, idx, params.n_classes));
+        }
+        // Candidate features.
+        let p = x.cols();
+        let m = if params.max_features == 0 { p } else { params.max_features.min(p) };
+        let feats: Vec<usize> =
+            if m == p { (0..p).collect() } else { sample_indices(engine, p, m) };
+        // Best Gini split across candidates.
+        let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, score)
+        let mut col: Vec<(f64, usize)> = Vec::with_capacity(n);
+        let parent_counts = class_counts(y, idx, params.n_classes);
+        for &f in &feats {
+            col.clear();
+            col.extend(idx.iter().map(|&i| (x.get(i, f), y[i] as usize)));
+            col.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mut left = vec![0.0f64; params.n_classes];
+            let mut right = parent_counts.clone();
+            for w in 0..n - 1 {
+                let (v, c) = col[w];
+                left[c] += 1.0;
+                right[c] -= 1.0;
+                let next_v = col[w + 1].0;
+                if next_v <= v {
+                    continue; // cannot split between equal values
+                }
+                let nl = (w + 1) as f64;
+                let nr = (n - w - 1) as f64;
+                let score = nl * gini(&left, nl) + nr * gini(&right, nr);
+                if best.map(|(_, _, s)| score < s).unwrap_or(true) {
+                    best = Some((f, 0.5 * (v + next_v), score));
+                }
+            }
+        }
+        let Some((feature, threshold, _)) = best else {
+            return Ok(self.leaf(y, idx, params.n_classes));
+        };
+        // Partition idx.
+        let mid = partition(idx, |&i| x.get(i, feature) <= threshold);
+        if mid == 0 || mid == n {
+            return Ok(self.leaf(y, idx, params.n_classes));
+        }
+        // Reserve the split slot, then build children.
+        let slot = self.nodes.len();
+        self.nodes.push(Node::Leaf { proba: Vec::new() }); // placeholder
+        let (li, ri) = idx.split_at_mut(mid);
+        let left = self.build(params, x, y, li, depth + 1, engine)?;
+        let right = self.build(params, x, y, ri, depth + 1, engine)?;
+        self.nodes[slot] = Node::Split { feature, threshold, left, right };
+        Ok(slot)
+    }
+
+    /// Class-probability prediction for one row.
+    pub fn predict_proba_row(&self, row: &[f64]) -> &[f64] {
+        let mut cur = 0usize;
+        loop {
+            match &self.nodes[cur] {
+                Node::Leaf { proba } => return proba,
+                Node::Split { feature, threshold, left, right } => {
+                    cur = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+fn class_counts(y: &[f64], idx: &[usize], n_classes: usize) -> Vec<f64> {
+    let mut c = vec![0.0; n_classes];
+    for &i in idx {
+        c[y[i] as usize] += 1.0;
+    }
+    c
+}
+
+#[inline]
+fn gini(counts: &[f64], n: f64) -> f64 {
+    let mut g = 1.0;
+    for &c in counts {
+        let p = c / n;
+        g -= p * p;
+    }
+    g
+}
+
+/// Stable-ish in-place partition; returns the split point.
+fn partition<F: Fn(&usize) -> bool>(idx: &mut [usize], pred: F) -> usize {
+    let mut next = 0usize;
+    for i in 0..idx.len() {
+        if pred(&idx[i]) {
+            idx.swap(next, i);
+            next += 1;
+        }
+    }
+    next
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Mt19937;
+    use crate::tables::synth::make_classification;
+
+    #[test]
+    fn fits_axis_aligned_split() {
+        // 1-D threshold task: x<0 → class 0, x≥0 → class 1.
+        let data: Vec<f64> = (-50..50).map(|i| i as f64 / 10.0).collect();
+        let y: Vec<f64> = data.iter().map(|&v| f64::from(v >= 0.0)).collect();
+        let x = DenseTable::from_vec(data, 100, 1).unwrap();
+        let idx: Vec<usize> = (0..100).collect();
+        let mut e = Mt19937::new(1);
+        let t = DecisionTree::fit(&TreeParams::default(), &x, &y, &idx, &mut e).unwrap();
+        for i in 0..100 {
+            let proba = t.predict_proba_row(x.row(i));
+            let pred = f64::from(proba[1] >= 0.5);
+            assert_eq!(pred, y[i], "row {i}");
+        }
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let mut e = Mt19937::new(2);
+        let (x, y) = make_classification(&mut e, 400, 6, 0.8);
+        let idx: Vec<usize> = (0..400).collect();
+        let shallow = DecisionTree::fit(
+            &TreeParams { max_depth: 1, ..Default::default() },
+            &x,
+            &y,
+            &idx,
+            &mut e,
+        )
+        .unwrap();
+        // Depth-1 tree = 1 split + 2 leaves max.
+        assert!(shallow.node_count() <= 3);
+    }
+
+    #[test]
+    fn pure_subset_is_single_leaf() {
+        let x = DenseTable::from_vec(vec![1.0, 2.0, 3.0, 4.0], 4, 1).unwrap();
+        let y = vec![1.0, 1.0, 1.0, 1.0];
+        let idx = vec![0, 1, 2, 3];
+        let mut e = Mt19937::new(3);
+        let t = DecisionTree::fit(&TreeParams::default(), &x, &y, &idx, &mut e).unwrap();
+        assert_eq!(t.node_count(), 1);
+        assert_eq!(t.predict_proba_row(&[2.0])[1], 1.0);
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let mut e = Mt19937::new(4);
+        let (x, y) = make_classification(&mut e, 200, 4, 0.5);
+        let idx: Vec<usize> = (0..200).collect();
+        let t = DecisionTree::fit(&TreeParams::default(), &x, &y, &idx, &mut e).unwrap();
+        for i in 0..200 {
+            let s: f64 = t.predict_proba_row(x.row(i)).iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_subset_rejected() {
+        let x = DenseTable::<f64>::zeros(3, 1);
+        let y = vec![0.0; 3];
+        let mut e = Mt19937::new(5);
+        assert!(DecisionTree::fit(&TreeParams::default(), &x, &y, &[], &mut e).is_err());
+    }
+}

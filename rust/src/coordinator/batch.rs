@@ -1,0 +1,101 @@
+//! Fixed-shape batching: XLA executables are shape-monomorphic, so the
+//! coordinator tiles dynamic workloads into the padded shapes the AOT
+//! artifacts were compiled for. Padding rows are masked out by the
+//! kernels themselves (the Pallas kernels carry validity masks — the
+//! TPU analogue of SVE's `svwhilelt` loop-tail predication).
+
+use crate::dtype::Float;
+
+/// A zero-padded, fixed-shape copy of a logical `rows × cols` block.
+#[derive(Debug, Clone)]
+pub struct PaddedBatch<T> {
+    /// Padded row-major buffer (`pad_rows × pad_cols`).
+    pub data: Vec<T>,
+    pub pad_rows: usize,
+    pub pad_cols: usize,
+    /// Valid (un-padded) extent.
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl<T: Float> PaddedBatch<T> {
+    /// Extract the valid region of a padded row-major result.
+    pub fn unpad(result: &[T], pad_cols: usize, rows: usize, cols: usize) -> Vec<T> {
+        let mut out = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            out.extend_from_slice(&result[i * pad_cols..i * pad_cols + cols]);
+        }
+        out
+    }
+}
+
+/// Pad a row-major `rows × cols` block up to `pad_rows × pad_cols` with
+/// zeros (zeros are neutral for the distance/moment kernels; the mask
+/// handles the rest).
+pub fn pad_to<T: Float>(
+    data: &[T],
+    rows: usize,
+    cols: usize,
+    pad_rows: usize,
+    pad_cols: usize,
+) -> PaddedBatch<T> {
+    assert!(pad_rows >= rows && pad_cols >= cols, "padding must grow the block");
+    debug_assert_eq!(data.len(), rows * cols);
+    let mut out = vec![T::ZERO; pad_rows * pad_cols];
+    for i in 0..rows {
+        out[i * pad_cols..i * pad_cols + cols].copy_from_slice(&data[i * cols..(i + 1) * cols]);
+    }
+    PaddedBatch { data: out, pad_rows, pad_cols, rows, cols }
+}
+
+/// Split `n` items into tiles of at most `tile` (the row-batching loop
+/// that drives artifact execution). Returns `(start, len)` pairs.
+pub fn tiles(n: usize, tile: usize) -> Vec<(usize, usize)> {
+    assert!(tile > 0);
+    let mut out = Vec::with_capacity(n.div_ceil(tile));
+    let mut start = 0;
+    while start < n {
+        let len = tile.min(n - start);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_and_unpad_round_trip() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect(); // 2x3
+        let p = pad_to(&data, 2, 3, 4, 8);
+        assert_eq!(p.data.len(), 32);
+        assert_eq!(p.data[0..3], [0.0, 1.0, 2.0]);
+        assert_eq!(p.data[3], 0.0); // padding
+        assert_eq!(p.data[8..11], [3.0, 4.0, 5.0]);
+        let back = PaddedBatch::unpad(&p.data, 8, 2, 3);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn pad_identity_when_shapes_match() {
+        let data = vec![1.0f64, 2.0, 3.0, 4.0];
+        let p = pad_to(&data, 2, 2, 2, 2);
+        assert_eq!(p.data, data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_cannot_shrink() {
+        pad_to(&[1.0f64; 4], 2, 2, 1, 2);
+    }
+
+    #[test]
+    fn tiles_cover_exactly() {
+        assert_eq!(tiles(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(tiles(8, 4), vec![(0, 4), (4, 4)]);
+        assert_eq!(tiles(3, 10), vec![(0, 3)]);
+        assert_eq!(tiles(0, 4), Vec::<(usize, usize)>::new());
+    }
+}

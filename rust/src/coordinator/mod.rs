@@ -1,0 +1,247 @@
+//! Execution coordinator — the reproduction of the paper's ARM
+//! enablement layer (§IV-A): the dynamic CPU-dispatch mechanism, the
+//! per-algorithm backend ladder, and the fixed-shape batching that feeds
+//! the AOT artifacts.
+//!
+//! The paper's dispatch selects NEON vs SVE code paths from CPU
+//! capabilities at runtime; here the ladder is
+//!
+//! ```text
+//!   Naive  <  Reference  <  Vectorized  <  Artifact
+//! ```
+//!
+//! * **Naive** — branchy, allocation-heavy scalar code: the "stock
+//!   scikit-learn on ARM" baseline of Fig. 5.
+//! * **Reference** — the native blocked-BLAS backend: the "x86 oneDAL
+//!   with MKL" stand-in of Fig. 6.
+//! * **Vectorized** — branch-free, unit-stride, multi-accumulator
+//!   kernels (the SVE-style rewrites of §IV-E) — this is the paper's
+//!   contribution rung.
+//! * **Artifact** — the AOT-compiled XLA/Pallas path executed via PJRT.
+//!
+//! `Backend::Auto` resolves at context build time from artifact
+//! availability and the `ONEDAL_SVE_BACKEND` environment override,
+//! mirroring oneDAL's `daal::services::Environment::getCpuId` probe.
+
+pub mod batch;
+
+pub use batch::{pad_to, PaddedBatch};
+
+use crate::error::{Error, Result};
+use crate::runtime::{ArtifactRegistry, PjRtRuntime};
+use std::sync::Arc;
+
+/// Backend rungs (see module docs). Ordering is the dispatch preference.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, PartialOrd, Ord)]
+pub enum Backend {
+    Naive,
+    Reference,
+    Vectorized,
+    Artifact,
+    /// Resolve at `Context::build` time.
+    Auto,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Ok(Backend::Naive),
+            "reference" => Ok(Backend::Reference),
+            "vectorized" => Ok(Backend::Vectorized),
+            "artifact" => Ok(Backend::Artifact),
+            "auto" => Ok(Backend::Auto),
+            other => Err(Error::Param(format!("unknown backend {other:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Naive => "naive",
+            Backend::Reference => "reference",
+            Backend::Vectorized => "vectorized",
+            Backend::Artifact => "artifact",
+            Backend::Auto => "auto",
+        }
+    }
+}
+
+/// Shared execution context handed to every `train`/`infer` call —
+/// oneDAL's environment + execution-context object rolled into one.
+pub struct Context {
+    backend: Backend,
+    runtime: Option<Arc<PjRtRuntime>>,
+    registry: ArtifactRegistry,
+    threads: usize,
+}
+
+/// Builder for [`Context`].
+pub struct ContextBuilder {
+    backend: Backend,
+    artifact_dir: String,
+    threads: usize,
+}
+
+impl Default for ContextBuilder {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Auto,
+            artifact_dir: "artifacts".into(),
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+}
+
+impl ContextBuilder {
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn artifact_dir<S: Into<String>>(mut self, dir: S) -> Self {
+        self.artifact_dir = dir.into();
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Resolve the dispatch ladder and (for the artifact rung) create the
+    /// PJRT runtime.
+    pub fn build(self) -> Result<Context> {
+        // Environment override — the "disable SVE" switch of the paper's
+        // conditional-compilation story, but at runtime.
+        let mut requested = self.backend;
+        if let Ok(env) = std::env::var("ONEDAL_SVE_BACKEND") {
+            requested = Backend::parse(&env)?;
+        }
+        let registry = ArtifactRegistry::load(&self.artifact_dir);
+        let resolved = match requested {
+            Backend::Auto => {
+                if !registry.is_empty() {
+                    Backend::Artifact
+                } else {
+                    Backend::Vectorized
+                }
+            }
+            b => b,
+        };
+        let runtime = if resolved == Backend::Artifact {
+            match PjRtRuntime::new(&self.artifact_dir) {
+                Ok(rt) => Some(Arc::new(rt)),
+                Err(e) => {
+                    if requested == Backend::Artifact {
+                        // Explicit request must not silently degrade.
+                        return Err(e);
+                    }
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        let resolved = if runtime.is_none() && resolved == Backend::Artifact {
+            Backend::Vectorized
+        } else {
+            resolved
+        };
+        Ok(Context { backend: resolved, runtime, registry, threads: self.threads })
+    }
+}
+
+impl Context {
+    pub fn builder() -> ContextBuilder {
+        ContextBuilder::default()
+    }
+
+    /// A context pinned to a specific rung (used by the benches to sweep
+    /// the ladder).
+    pub fn with_backend(b: Backend) -> Result<Self> {
+        Self::builder().backend(b).build()
+    }
+
+    /// The resolved backend (never `Auto`).
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// PJRT runtime, present only on the artifact rung.
+    pub fn runtime(&self) -> Option<&PjRtRuntime> {
+        self.runtime.as_deref()
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Effective rung for a kernel needing `dims`: artifact if a variant
+    /// fits *and* the runtime is up, else the vectorized rung — the
+    /// per-call dispatch the paper performs per algorithm kernel.
+    pub fn dispatch(&self, kernel: &str, dims: &[usize]) -> Backend {
+        if self.backend == Backend::Artifact {
+            if self.runtime.is_some() && self.registry.best_fit(kernel, dims).is_some() {
+                return Backend::Artifact;
+            }
+            return Backend::Vectorized;
+        }
+        self.backend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_round_trip() {
+        for b in [Backend::Naive, Backend::Reference, Backend::Vectorized, Backend::Artifact] {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+        assert!(Backend::parse("sve").is_err());
+    }
+
+    #[test]
+    fn explicit_rungs_resolve_as_requested() {
+        for b in [Backend::Naive, Backend::Reference, Backend::Vectorized] {
+            let ctx = Context::builder().artifact_dir("/nonexistent").backend(b).build().unwrap();
+            assert_eq!(ctx.backend(), b);
+            assert!(ctx.runtime().is_none());
+        }
+    }
+
+    #[test]
+    fn auto_without_artifacts_is_vectorized() {
+        let ctx = Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Auto)
+            .build()
+            .unwrap();
+        assert_eq!(ctx.backend(), Backend::Vectorized);
+    }
+
+    #[test]
+    fn dispatch_falls_back_for_unknown_kernel() {
+        let ctx = Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Vectorized)
+            .build()
+            .unwrap();
+        assert_eq!(ctx.dispatch("kmeans_assign", &[100, 10, 5]), Backend::Vectorized);
+    }
+
+    #[test]
+    fn threads_clamped_to_one() {
+        let ctx = Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Naive)
+            .threads(0)
+            .build()
+            .unwrap();
+        assert_eq!(ctx.threads(), 1);
+    }
+}

@@ -1,0 +1,154 @@
+//! Floating-point abstraction mirroring oneDAL's `algorithmFPType`
+//! template parameter: every numeric substrate is generic over [`Float`]
+//! so both `f32` and `f64` pipelines exist, as in the original library.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Scalar trait covering what the kernels need from `f32`/`f64`.
+pub trait Float:
+    Copy
+    + Debug
+    + Display
+    + PartialOrd
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    const TWO: Self;
+    /// Machine epsilon.
+    const EPSILON: Self;
+    /// `tau` regularizer used by the SVM WSS denominator guard (paper §IV-E).
+    const TAU: Self;
+
+    fn from_f64(v: f64) -> Self;
+    fn from_usize(v: usize) -> Self;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    fn infinity() -> Self;
+    fn neg_infinity() -> Self;
+    fn is_finite(self) -> bool;
+    fn maxf(self, o: Self) -> Self;
+    fn minf(self, o: Self) -> Self;
+}
+
+macro_rules! impl_float {
+    ($t:ty) => {
+        impl Float for $t {
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const TWO: Self = 2.0;
+            const EPSILON: Self = <$t>::EPSILON;
+            const TAU: Self = 1.0e-6;
+
+            #[inline(always)]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+            #[inline(always)]
+            fn from_usize(v: usize) -> Self {
+                v as $t
+            }
+            #[inline(always)]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+            #[inline(always)]
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            #[inline(always)]
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            #[inline(always)]
+            fn exp(self) -> Self {
+                <$t>::exp(self)
+            }
+            #[inline(always)]
+            fn ln(self) -> Self {
+                <$t>::ln(self)
+            }
+            #[inline(always)]
+            fn powi(self, n: i32) -> Self {
+                <$t>::powi(self, n)
+            }
+            #[inline(always)]
+            fn mul_add(self, a: Self, b: Self) -> Self {
+                <$t>::mul_add(self, a, b)
+            }
+            #[inline(always)]
+            fn infinity() -> Self {
+                <$t>::INFINITY
+            }
+            #[inline(always)]
+            fn neg_infinity() -> Self {
+                <$t>::NEG_INFINITY
+            }
+            #[inline(always)]
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            #[inline(always)]
+            fn maxf(self, o: Self) -> Self {
+                <$t>::max(self, o)
+            }
+            #[inline(always)]
+            fn minf(self, o: Self) -> Self {
+                <$t>::min(self, o)
+            }
+        }
+    };
+}
+
+impl_float!(f32);
+impl_float!(f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn generic_sum<T: Float>(xs: &[T]) -> T {
+        xs.iter().copied().sum()
+    }
+
+    #[test]
+    fn float_trait_f32_f64_agree() {
+        let a32: Vec<f32> = vec![1.0, 2.5, -0.5];
+        let a64: Vec<f64> = vec![1.0, 2.5, -0.5];
+        assert_eq!(generic_sum(&a32).to_f64(), generic_sum(&a64));
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(f32::ZERO + f32::ONE, 1.0f32);
+        assert_eq!(f64::TWO, 2.0);
+        assert!(f64::TAU > 0.0 && f64::TAU < 1e-3);
+    }
+
+    #[test]
+    fn minmax_and_infinities() {
+        assert_eq!(2.0f64.maxf(3.0), 3.0);
+        assert_eq!(2.0f64.minf(3.0), 2.0);
+        assert!(f64::infinity() > 1e300);
+        assert!(f32::neg_infinity() < -1e30);
+    }
+}

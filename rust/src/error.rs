@@ -1,0 +1,36 @@
+//! Crate-wide error type.
+
+/// Errors surfaced by the public API.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Shape or dimension mismatch between inputs.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    /// Invalid algorithm parameter.
+    #[error("invalid parameter: {0}")]
+    Param(String),
+    /// Numerical failure (singular matrix, non-convergence, ...).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+    /// I/O failure (CSV load, artifact read, ...).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// CSV parse failure.
+    #[error("parse error: {0}")]
+    Parse(String),
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Requested artifact missing from the registry (run `make artifacts`).
+    #[error("missing artifact: {0} (run `make artifacts`)")]
+    MissingArtifact(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,64 @@
+//! # onedal-sve
+//!
+//! A Rust + JAX + Pallas reproduction of *"oneDAL Optimization for ARM
+//! Scalable Vector Extension: Maximizing Efficiency for High-Performance
+//! Data Science"* (CS.DC 2025, Fujitsu Research).
+//!
+//! The crate rebuilds the paper's whole stack on a three-layer
+//! architecture:
+//!
+//! * **Layer 3 (this crate)** — the data-analytics library itself: tables,
+//!   the CPU-dispatch ladder (the paper's NEON/SVE dynamic dispatch),
+//!   every substrate oneDAL took from MKL (Sparse BLAS, VSL statistics,
+//!   RNG engines) and the ML algorithms the paper benchmarks.
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
+//!   hot paths, AOT-lowered once to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing
+//!   the paper's SVE-predicated loops as masked tile reductions.
+//!
+//! Python never runs at request time: `runtime` loads the pre-built HLO
+//! artifacts through the PJRT C API (`xla` crate) and executes them from
+//! Rust.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use onedal_sve::prelude::*;
+//!
+//! let ctx = Context::builder().backend(Backend::Auto).build().unwrap();
+//! let (x, _y) = onedal_sve::tables::synth::make_blobs(&mut Mt19937::new(42), 1000, 8, 4, 1.0);
+//! let model = KMeans::params().k(4).max_iter(50).train(&ctx, &x).unwrap();
+//! let labels = model.infer(&ctx, &x).unwrap();
+//! assert_eq!(labels.len(), 1000);
+//! ```
+
+pub mod algorithms;
+pub mod blas;
+pub mod coordinator;
+pub mod dtype;
+pub mod error;
+pub mod linalg;
+pub mod metrics;
+pub mod profiling;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+pub mod tables;
+pub mod vsl;
+
+/// Convenience re-exports covering the common public API surface.
+pub mod prelude {
+    pub use crate::algorithms::covariance::Covariance;
+    pub use crate::algorithms::dbscan::Dbscan;
+    pub use crate::algorithms::forest::RandomForestClassifier;
+    pub use crate::algorithms::kmeans::KMeans;
+    pub use crate::algorithms::knn::KnnClassifier;
+    pub use crate::algorithms::linreg::{LinearRegression, RidgeRegression};
+    pub use crate::algorithms::logreg::LogisticRegression;
+    pub use crate::algorithms::pca::Pca;
+    pub use crate::algorithms::svm::{Svc, SvmSolver};
+    pub use crate::coordinator::{Backend, Context};
+    pub use crate::error::{Error, Result};
+    pub use crate::rng::{Engine, Mcg59, Mt19937};
+    pub use crate::tables::DenseTable;
+}

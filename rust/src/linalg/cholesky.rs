@@ -1,0 +1,122 @@
+//! Cholesky factorization and SPD solves (LAPACK `potrf`/`potrs` slice).
+
+use crate::dtype::Float;
+use crate::error::{Error, Result};
+
+/// Factor a symmetric positive-definite `n×n` row-major matrix as
+/// `A = L·Lᵀ`; returns the lower factor `L` (row-major, upper part zero).
+pub fn cholesky_factor<T: Float>(a: &[T], n: usize) -> Result<Vec<T>> {
+    if a.len() != n * n {
+        return Err(Error::Shape(format!("cholesky: buffer {} != {n}x{n}", a.len())));
+    }
+    let mut l = vec![T::ZERO; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= T::ZERO {
+                    return Err(Error::Numerical(format!(
+                        "cholesky: non-positive pivot {s} at {i} (matrix not SPD)"
+                    )));
+                }
+                l[i * n + j] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A·x = b` for SPD `A` via Cholesky (forward + back substitution).
+pub fn cholesky_solve<T: Float>(a: &[T], n: usize, b: &[T]) -> Result<Vec<T>> {
+    if b.len() != n {
+        return Err(Error::Shape(format!("cholesky_solve: rhs {} != {n}", b.len())));
+    }
+    let l = cholesky_factor(a, n)?;
+    // L·y = b
+    let mut y = vec![T::ZERO; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    // Lᵀ·x = y
+    let mut x = vec![T::ZERO; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{gemm, Transpose};
+    use crate::rng::{Distribution, Mt19937, Uniform};
+
+    /// Random SPD matrix A = MᵀM + n·I.
+    fn random_spd(seed: u32, n: usize) -> Vec<f64> {
+        let mut e = Mt19937::new(seed);
+        let mut u = Uniform::new(-1.0, 1.0);
+        let m: Vec<f64> = (0..n * n).map(|_| u.sample(&mut e)).collect();
+        let mut a = vec![0.0; n * n];
+        gemm(Transpose::Yes, Transpose::No, n, n, n, 1.0, &m, &m, 0.0, &mut a);
+        for i in 0..n {
+            a[i * n + i] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let n = 12;
+        let a = random_spd(1, n);
+        let l = cholesky_factor(&a, n).unwrap();
+        let mut rec = vec![0.0; n * n];
+        gemm(Transpose::No, Transpose::Yes, n, n, n, 1.0, &l, &l, 0.0, &mut rec);
+        for (u, v) in a.iter().zip(&rec) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn solve_recovers_solution() {
+        let n = 9;
+        let a = random_spd(2, n);
+        let x_true: Vec<f64> = (0..n).map(|i| i as f64 - 4.0).collect();
+        let mut b = vec![0.0; n];
+        crate::blas::gemv(false, n, n, 1.0, &a, &x_true, 0.0, &mut b);
+        let x = cholesky_solve(&a, n, &b).unwrap();
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        // Negative-definite 2x2.
+        let a = vec![-1.0, 0.0, 0.0, -1.0];
+        assert!(cholesky_factor(&a, 2).is_err());
+    }
+
+    #[test]
+    fn identity_factor_is_identity() {
+        let n = 5;
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let l = cholesky_factor(&a, n).unwrap();
+        assert_eq!(l, a);
+    }
+}

@@ -1,0 +1,170 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices (LAPACK `syev`
+//! slice) — the decomposition behind PCA's correlation/covariance method.
+
+use crate::dtype::Float;
+use crate::error::{Error, Result};
+
+/// Eigen-decomposition of a symmetric row-major `n×n` matrix.
+///
+/// Returns `(eigenvalues, eigenvectors)` sorted by **descending**
+/// eigenvalue (PCA order); eigenvectors are rows of the returned matrix.
+pub fn jacobi_eigen<T: Float>(a_in: &[T], n: usize) -> Result<(Vec<T>, Vec<T>)> {
+    if a_in.len() != n * n {
+        return Err(Error::Shape(format!("jacobi: buffer {} != {n}x{n}", a_in.len())));
+    }
+    let mut a = a_in.to_vec();
+    // V starts as identity; accumulates rotations (columns are eigenvectors).
+    let mut v = vec![T::ZERO; n * n];
+    for i in 0..n {
+        v[i * n + i] = T::ONE;
+    }
+    let max_sweeps = 64;
+    let tol = T::EPSILON.sqrt() * T::from_f64(1e-4);
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = T::ZERO;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += a[i * n + j] * a[i * n + j];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = a[p * n + q];
+                if apq.abs() <= T::EPSILON {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                // Rotation angle: tan(2θ) = 2a_pq / (a_pp − a_qq).
+                let theta = (aqq - app) / (T::TWO * apq);
+                let t = {
+                    let sign = if theta >= T::ZERO { T::ONE } else { -T::ONE };
+                    sign / (theta.abs() + (T::ONE + theta * theta).sqrt())
+                };
+                let c = T::ONE / (T::ONE + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation to rows/cols p and q.
+                for k in 0..n {
+                    let akp = a[k * n + p];
+                    let akq = a[k * n + q];
+                    a[k * n + p] = c * akp - s * akq;
+                    a[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p * n + k];
+                    let aqk = a[q * n + k];
+                    a[p * n + k] = c * apk - s * aqk;
+                    a[q * n + k] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Extract eigenpairs and sort descending.
+    let mut pairs: Vec<(T, usize)> = (0..n).map(|i| (a[i * n + i], i)).collect();
+    pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    let eigenvalues: Vec<T> = pairs.iter().map(|&(val, _)| val).collect();
+    let mut eigenvectors = vec![T::ZERO; n * n];
+    for (row, &(_, col)) in pairs.iter().enumerate() {
+        for k in 0..n {
+            eigenvectors[row * n + k] = v[k * n + col];
+        }
+    }
+    Ok((eigenvalues, eigenvectors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{gemm, Transpose};
+    use crate::rng::{Distribution, Mt19937, Uniform};
+
+    fn random_symmetric(seed: u32, n: usize) -> Vec<f64> {
+        let mut e = Mt19937::new(seed);
+        let mut u = Uniform::new(-2.0, 2.0);
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = u.sample(&mut e);
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let a = vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0];
+        let (vals, vecs) = jacobi_eigen(&a, 3).unwrap();
+        assert!((vals[0] - 3.0).abs() < 1e-12);
+        assert!((vals[1] - 2.0).abs() < 1e-12);
+        assert!((vals[2] - 1.0).abs() < 1e-12);
+        // First eigenvector is ±e0.
+        assert!((vecs[0].abs() - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigenvalues 3 and 1.
+        let a = vec![2.0, 1.0, 1.0, 2.0];
+        let (vals, _) = jacobi_eigen(&a, 2).unwrap();
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_and_orthonormality() {
+        let n = 10;
+        let a = random_symmetric(3, n);
+        let (vals, vecs) = jacobi_eigen(&a, n).unwrap();
+        // Vᵀ·diag(λ)·V reconstruction: rows of `vecs` are eigenvectors.
+        let mut lv = vec![0.0; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                lv[i * n + k] = vals[i] * vecs[i * n + k];
+            }
+        }
+        let mut rec = vec![0.0; n * n];
+        gemm(Transpose::Yes, Transpose::No, n, n, n, 1.0, &vecs, &lv, 0.0, &mut rec);
+        for (u, v) in a.iter().zip(&rec) {
+            assert!((u - v).abs() < 1e-8);
+        }
+        // Orthonormal rows.
+        let mut gram = vec![0.0; n * n];
+        gemm(Transpose::No, Transpose::Yes, n, n, n, 1.0, &vecs, &vecs, 0.0, &mut gram);
+        for i in 0..n {
+            for j in 0..n {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((gram[i * n + j] - expect).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_descending() {
+        let a = random_symmetric(4, 8);
+        let (vals, _) = jacobi_eigen(&a, 8).unwrap();
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let n = 7;
+        let a = random_symmetric(5, n);
+        let trace: f64 = (0..n).map(|i| a[i * n + i]).sum();
+        let (vals, _) = jacobi_eigen(&a, n).unwrap();
+        assert!((vals.iter().sum::<f64>() - trace).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Dense linear-algebra substrate (the LAPACK slice oneDAL pulls from
+//! OpenBLAS/MKL): Cholesky factorization + SPD solve for the normal
+//! equations of linear/ridge regression, and a Jacobi symmetric
+//! eigensolver for PCA.
+
+pub mod cholesky;
+pub mod jacobi;
+
+pub use cholesky::{cholesky_factor, cholesky_solve};
+pub use jacobi::jacobi_eigen;

@@ -1,0 +1,168 @@
+//! `onedal-sve` launcher — the CLI front end of the library (clap is not
+//! vendored offline; the parser is a small hand-rolled subcommand
+//! dispatcher).
+//!
+//! ```text
+//! onedal-sve info                         # dispatch ladder + artifact status
+//! onedal-sve train  <algo> [options]      # train on synthetic or CSV data
+//! onedal-sve bench-all                    # quick smoke across the suite
+//! ```
+
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::profiling::ScopedTimer;
+use onedal_sve::tables::synth;
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn build_ctx(flags: &HashMap<String, String>) -> Context {
+    let backend = flags
+        .get("backend")
+        .map(|b| Backend::parse(b).expect("bad --backend"))
+        .unwrap_or(Backend::Auto);
+    Context::builder()
+        .backend(backend)
+        .artifact_dir(flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()))
+        .build()
+        .expect("context build failed")
+}
+
+fn cmd_info(flags: &HashMap<String, String>) {
+    let ctx = build_ctx(flags);
+    println!("onedal-sve — ARM-SVE-optimized oneDAL reproduction (Rust+JAX+Pallas)");
+    println!("resolved backend : {}", ctx.backend().name());
+    println!("threads          : {}", ctx.threads());
+    println!("artifacts        : {} variants registered", ctx.registry().len());
+    for kernel in ["kmeans_assign", "logreg_step", "wss_select", "pairwise_sqdist", "x2c_mom", "xcp_update"] {
+        let n = ctx.registry().variants(kernel).len();
+        println!("  {kernel:<18} {n} variant(s)");
+    }
+    println!("runtime          : {}", if ctx.runtime().is_some() { "PJRT CPU client up" } else { "native only" });
+}
+
+fn cmd_train(algo: &str, flags: &HashMap<String, String>) {
+    let ctx = build_ctx(flags);
+    let n: usize = get(flags, "n", 10_000);
+    let d: usize = get(flags, "d", 16);
+    let seed: u32 = get(flags, "seed", 42);
+    let mut e = Mt19937::new(seed);
+    let t0 = Instant::now();
+    match algo {
+        "kmeans" => {
+            let k = get(flags, "k", 8);
+            let x = if let Some(path) = flags.get("csv") {
+                DenseTable::from_csv(path).expect("csv load")
+            } else {
+                synth::make_blobs(&mut e, n, d, k, 1.0).0
+            };
+            let m = KMeans::params().k(k).max_iter(get(flags, "iters", 50)).train(&ctx, &x).unwrap();
+            println!("kmeans: inertia={:.3} iterations={} [{:?}]", m.inertia, m.iterations, t0.elapsed());
+        }
+        "svm" => {
+            let (x, y) = synth::make_classification(&mut e, n.min(5000), d, 1.5);
+            let solver = match flags.get("solver").map(String::as_str) {
+                Some("boser") => SvmSolver::Boser,
+                _ => SvmSolver::Thunder,
+            };
+            let m = Svc::params().solver(solver).train(&ctx, &x, &y).unwrap();
+            let acc = onedal_sve::metrics::accuracy(&m.infer(&ctx, &x).unwrap(), &y);
+            println!("svm({solver:?}): sv={} iters={} acc={acc:.4} [{:?}]", m.n_support(), m.iterations, t0.elapsed());
+        }
+        "logreg" => {
+            let (x, y) = synth::make_classification(&mut e, n, d, 1.5);
+            let m = LogisticRegression::params().epochs(get(flags, "epochs", 30)).train(&ctx, &x, &y).unwrap();
+            let acc = onedal_sve::metrics::accuracy(&m.infer(&ctx, &x).unwrap(), &y);
+            println!("logreg: acc={acc:.4} [{:?}]", t0.elapsed());
+        }
+        "forest" => {
+            let (x, y) = synth::make_classification(&mut e, n, d, 1.0);
+            let m = RandomForestClassifier::params().n_trees(get(flags, "trees", 30)).train(&ctx, &x, &y).unwrap();
+            let acc = onedal_sve::metrics::accuracy(&m.infer(&ctx, &x).unwrap(), &y);
+            println!("forest: trees={} acc={acc:.4} [{:?}]", m.n_trees(), t0.elapsed());
+        }
+        "pca" => {
+            let x = synth::make_segmentation(&mut e, n, d, 6);
+            let m = Pca::params().n_components(get(flags, "components", 2)).train(&ctx, &x).unwrap();
+            println!("pca: explained={:?} [{:?}]", m.explained_variance, t0.elapsed());
+        }
+        "linreg" => {
+            let (x, y, _) = synth::make_regression(&mut e, n, d, 0.1);
+            let m = LinearRegression::params().train(&ctx, &x, &y).unwrap();
+            let r2 = onedal_sve::metrics::r2(&m.infer(&ctx, &x).unwrap(), &y);
+            println!("linreg: r2={r2:.4} [{:?}]", t0.elapsed());
+        }
+        "dbscan" => {
+            let (x, _) = synth::make_blobs(&mut e, n.min(5000), d.min(8), 5, 0.4);
+            let m = Dbscan::params().eps(1.5).min_pts(5).train(&ctx, &x).unwrap();
+            println!("dbscan: clusters={} [{:?}]", m.n_clusters, t0.elapsed());
+        }
+        "knn" => {
+            let (x, labels) = synth::make_blobs(&mut e, n.min(20_000), d, 5, 1.0);
+            let y: Vec<f64> = labels.iter().map(|&c| c as f64).collect();
+            let m = KnnClassifier::params().k(get(flags, "k", 5)).train(&ctx, &x, &y).unwrap();
+            let acc = onedal_sve::metrics::accuracy(&m.infer(&ctx, &x).unwrap(), &y);
+            println!("knn: acc={acc:.4} [{:?}]", t0.elapsed());
+        }
+        other => {
+            eprintln!("unknown algorithm {other:?}; see `onedal-sve help`");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_bench_all(flags: &HashMap<String, String>) {
+    let _t = ScopedTimer::new("bench-all");
+    for algo in ["kmeans", "logreg", "linreg", "pca", "knn", "dbscan", "forest", "svm"] {
+        cmd_train(algo, flags);
+    }
+    println!("\n{}", onedal_sve::profiling::timer::Metrics::global().report());
+}
+
+fn help() {
+    println!(
+        "usage: onedal-sve <command> [--flags]\n\
+         commands:\n\
+         \x20 info                     dispatch ladder + artifact status\n\
+         \x20 train <algo>             kmeans|svm|logreg|forest|pca|linreg|dbscan|knn\n\
+         \x20 bench-all                smoke the whole suite\n\
+         flags: --backend naive|reference|vectorized|artifact|auto\n\
+         \x20      --n <rows> --d <features> --k <clusters> --seed <s>\n\
+         \x20      --csv <path> --artifacts <dir> --solver boser|thunder"
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flags = parse_flags(&args);
+    match args.first().map(String::as_str) {
+        Some("info") => cmd_info(&flags),
+        Some("train") => {
+            let algo = args.get(1).cloned().unwrap_or_default();
+            cmd_train(&algo, &flags);
+        }
+        Some("bench-all") => cmd_bench_all(&flags),
+        _ => help(),
+    }
+}

@@ -1,0 +1,109 @@
+//! Quality metrics used by the examples and the benchmark harness to
+//! sanity-check that optimized and baseline backends compute the *same
+//! model* (the paper stresses bitwise/statistical fidelity of the SVE
+//! paths against the scalar ones).
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred
+        .iter()
+        .zip(truth)
+        .filter(|(p, t)| (p.round() - t.round()).abs() < 0.5)
+        .count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Binary confusion counts `(tp, fp, tn, fn)` with threshold 0.5.
+pub fn confusion(pred: &[f64], truth: &[f64]) -> (usize, usize, usize, usize) {
+    assert_eq!(pred.len(), truth.len());
+    let (mut tp, mut fp, mut tn, mut fnn) = (0, 0, 0, 0);
+    for (&p, &t) in pred.iter().zip(truth) {
+        match (p >= 0.5, t >= 0.5) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, false) => tn += 1,
+            (false, true) => fnn += 1,
+        }
+    }
+    (tp, fp, tn, fnn)
+}
+
+/// Precision, recall and F1 for the positive class.
+pub fn precision_recall_f1(pred: &[f64], truth: &[f64]) -> (f64, f64, f64) {
+    let (tp, fp, _tn, fnn) = confusion(pred, truth);
+    let precision = if tp + fp > 0 { tp as f64 / (tp + fp) as f64 } else { 0.0 };
+    let recall = if tp + fnn > 0 { tp as f64 / (tp + fnn) as f64 } else { 0.0 };
+    let f1 = if precision + recall > 0.0 {
+        2.0 * precision * recall / (precision + recall)
+    } else {
+        0.0
+    };
+    (precision, recall, f1)
+}
+
+/// Mean squared error.
+pub fn mse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(truth).map(|(p, t)| (p - t) * (p - t)).sum::<f64>() / pred.len() as f64
+}
+
+/// Coefficient of determination R².
+pub fn r2(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mean = truth.iter().sum::<f64>() / truth.len() as f64;
+    let ss_tot: f64 = truth.iter().map(|t| (t - mean) * (t - mean)).sum();
+    let ss_res: f64 = pred.iter().zip(truth).map(|(p, t)| (p - t) * (p - t)).sum();
+    if ss_tot == 0.0 {
+        return 0.0;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// KMeans inertia: sum of squared distances to the assigned centroid.
+pub fn inertia(x: &crate::tables::DenseTable<f64>, centroids: &crate::tables::DenseTable<f64>, assign: &[usize]) -> f64 {
+    (0..x.rows())
+        .map(|i| crate::blas::sqdist(x.row(i), centroids.row(assign[i])))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1.0, 0.0, 1.0, 1.0], &[1.0, 0.0, 0.0, 1.0]), 0.75);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let pred = [1.0, 1.0, 0.0, 0.0, 1.0];
+        let truth = [1.0, 0.0, 0.0, 1.0, 1.0];
+        assert_eq!(confusion(&pred, &truth), (2, 1, 1, 1));
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        let (p, r, f) = precision_recall_f1(&[1.0, 0.0], &[1.0, 0.0]);
+        assert_eq!((p, r, f), (1.0, 1.0, 1.0));
+        let (_, _, f0) = precision_recall_f1(&[0.0, 0.0], &[1.0, 1.0]);
+        assert_eq!(f0, 0.0);
+    }
+
+    #[test]
+    fn mse_and_r2() {
+        let truth = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mse(&truth, &truth), 0.0);
+        assert!((r2(&truth, &truth) - 1.0).abs() < 1e-12);
+        let mean = [2.5; 4];
+        assert!(r2(&mean, &truth).abs() < 1e-12); // predicting the mean → R²=0
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal criterion-style benchmark harness (criterion itself is not
+//! vendored in this offline image). Provides warmup, fixed-sample timing,
+//! robust statistics and a stable one-line report format that the
+//! EXPERIMENTS.md tables are generated from:
+//!
+//! ```text
+//! fig8/kmeans/optimized        median 12.345 ms   mean 12.400 ms ± 0.210   n=20
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+
+    /// One-line report row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} median {:>10.3} ms   mean {:>10.3} ms ± {:>8.3}   n={}",
+            self.name,
+            self.median.as_secs_f64() * 1e3,
+            self.mean.as_secs_f64() * 1e3,
+            self.stddev.as_secs_f64() * 1e3,
+            self.samples
+        )
+    }
+}
+
+/// Harness configuration: time-budgeted warmup + fixed sample count.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub samples: usize,
+    /// Hard cap on total measurement time for slow cases.
+    pub max_total: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            samples: 15,
+            max_total: Duration::from_secs(20),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_ms: u64, samples: usize) -> Self {
+        Self {
+            warmup: Duration::from_millis(warmup_ms),
+            samples,
+            ..Default::default()
+        }
+    }
+
+    /// Run one case. `f` must perform the full measured operation; use
+    /// `std::hint::black_box` inside to defeat dead-code elimination.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup until the budget is spent (at least one call).
+        let w0 = Instant::now();
+        loop {
+            f();
+            if w0.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        let total0 = Instant::now();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+            if total0.elapsed() > self.max_total {
+                break;
+            }
+        }
+        times.sort_unstable();
+        let n = times.len();
+        let median = times[n / 2];
+        let mean_ns = times.iter().map(|d| d.as_nanos()).sum::<u128>() / n as u128;
+        let mean = Duration::from_nanos(mean_ns as u64);
+        let var = times
+            .iter()
+            .map(|d| {
+                let x = d.as_nanos() as f64 - mean_ns as f64;
+                x * x
+            })
+            .sum::<f64>()
+            / n.max(1) as f64;
+        let stddev = Duration::from_nanos(var.sqrt() as u64);
+        let r = BenchResult { name: name.to_string(), median, mean, stddev, samples: n };
+        println!("{}", r.row());
+        self.results.push(r.clone());
+        r
+    }
+
+    /// All results so far (for speedup tables).
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a paper-style speedup table: each case vs a baseline case.
+    pub fn speedup_table(&self, title: &str, baseline_suffix: &str) {
+        println!("\n== {title} (speedup vs `{baseline_suffix}`) ==");
+        // Group rows by prefix before the final '/'.
+        for r in &self.results {
+            if let Some(prefix) = r.name.rfind('/').map(|i| &r.name[..i]) {
+                if r.name.ends_with(baseline_suffix) {
+                    continue;
+                }
+                let base_name = format!("{prefix}/{baseline_suffix}");
+                if let Some(base) = self.results.iter().find(|b| b.name == base_name) {
+                    let speedup = base.median.as_secs_f64() / r.median.as_secs_f64();
+                    println!("{:<44} {speedup:>8.2}x", r.name);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::new(5, 7);
+        let r = b.bench("sleep/1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.median >= Duration::from_millis(1));
+        assert!(r.median < Duration::from_millis(50));
+        assert_eq!(r.samples, 7);
+    }
+
+    #[test]
+    fn speedup_table_finds_baseline() {
+        let mut b = Bencher::new(1, 3);
+        b.bench("case/naive", || std::thread::sleep(Duration::from_millis(2)));
+        b.bench("case/optimized", || std::thread::sleep(Duration::from_micros(100)));
+        // Just exercise the formatting path.
+        b.speedup_table("test", "naive");
+        assert_eq!(b.results().len(), 2);
+    }
+
+    #[test]
+    fn row_format_stable() {
+        let r = BenchResult {
+            name: "x/y".into(),
+            median: Duration::from_millis(1),
+            mean: Duration::from_millis(1),
+            stddev: Duration::ZERO,
+            samples: 3,
+        };
+        let row = r.row();
+        assert!(row.contains("median"));
+        assert!(row.contains("n=3"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Profiling + micro-benchmark harness.
+//!
+//! criterion is unavailable in this offline environment, so `bench.rs`
+//! provides a small statistically honest harness (warmup, N samples,
+//! median/mean/σ, throughput) that every `rust/benches/*.rs` target uses
+//! under `harness = false`. `timer.rs` is the scoped-timer used by the
+//! examples and the per-stage counters of the coordinator.
+
+pub mod bench;
+pub mod timer;
+
+pub use bench::{BenchResult, Bencher};
+pub use timer::ScopedTimer;

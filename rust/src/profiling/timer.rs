@@ -1,0 +1,100 @@
+//! Scoped wall-clock timers and a lightweight stage-metrics registry.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// RAII timer that records its elapsed time into [`Metrics`] on drop.
+pub struct ScopedTimer {
+    label: &'static str,
+    start: Instant,
+}
+
+impl ScopedTimer {
+    pub fn new(label: &'static str) -> Self {
+        Self { label, start: Instant::now() }
+    }
+
+    /// Elapsed time so far without stopping.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+impl Drop for ScopedTimer {
+    fn drop(&mut self) {
+        Metrics::global().record(self.label, self.start.elapsed());
+    }
+}
+
+/// Process-wide stage metrics (label → total time + hit count), used by
+/// the coordinator to attribute time to dispatch / batching / execute.
+pub struct Metrics {
+    inner: Mutex<BTreeMap<&'static str, (Duration, u64)>>,
+}
+
+static GLOBAL: Metrics = Metrics { inner: Mutex::new(BTreeMap::new()) };
+
+impl Metrics {
+    pub fn global() -> &'static Metrics {
+        &GLOBAL
+    }
+
+    pub fn record(&self, label: &'static str, d: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(label).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Snapshot of (label, total, count) rows.
+    pub fn snapshot(&self) -> Vec<(&'static str, Duration, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, (d, c))| (*k, *d, *c))
+            .collect()
+    }
+
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+
+    /// Render a report table (used by `onedal-sve metrics` and examples).
+    pub fn report(&self) -> String {
+        let mut out = String::from("stage                          total_ms    calls\n");
+        for (label, d, c) in self.snapshot() {
+            out.push_str(&format!("{label:<30} {:>9.3} {c:>8}\n", d.as_secs_f64() * 1e3));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_timer_records() {
+        Metrics::global().reset();
+        {
+            let _t = ScopedTimer::new("test-stage");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let snap = Metrics::global().snapshot();
+        let row = snap.iter().find(|(l, _, _)| *l == "test-stage").unwrap();
+        assert!(row.1 >= Duration::from_millis(1));
+        assert_eq!(row.2, 1);
+        Metrics::global().reset();
+    }
+
+    #[test]
+    fn report_formats() {
+        Metrics::global().reset();
+        Metrics::global().record("alpha", Duration::from_millis(5));
+        let r = Metrics::global().report();
+        assert!(r.contains("alpha"));
+        Metrics::global().reset();
+    }
+}

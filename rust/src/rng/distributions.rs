@@ -1,0 +1,234 @@
+//! Distribution generators layered on any [`Engine`], mirroring the MKL
+//! VSL `vdRng*` continuous/discrete families oneDAL consumes (uniform,
+//! gaussian, bernoulli, uniform integers) with bulk `fill` entry points —
+//! the block-generation style OpenRNG optimizes for.
+
+use super::Engine;
+use crate::dtype::Float;
+
+/// A distribution that samples values of type `T` from an engine.
+pub trait Distribution<T> {
+    fn sample(&mut self, e: &mut dyn Engine) -> T;
+
+    /// Bulk generation (`vdRngUniform`-style); the default loops, engines
+    /// with cheaper block paths can override at the call site.
+    fn fill(&mut self, e: &mut dyn Engine, out: &mut [T]) {
+        for v in out.iter_mut() {
+            *v = self.sample(e);
+        }
+    }
+}
+
+/// Uniform on `[a, b)`.
+pub struct Uniform<T: Float> {
+    a: T,
+    span: T,
+}
+
+impl<T: Float> Uniform<T> {
+    pub fn new(a: T, b: T) -> Self {
+        Self { a, span: b - a }
+    }
+}
+
+impl<T: Float> Distribution<T> for Uniform<T> {
+    #[inline]
+    fn sample(&mut self, e: &mut dyn Engine) -> T {
+        self.a + self.span * T::from_f64(e.next_f64())
+    }
+}
+
+/// Gaussian via Box–Muller with second-value caching (the VSL
+/// `VSL_RNG_METHOD_GAUSSIAN_BOXMULLER2` analogue).
+pub struct Gaussian<T: Float> {
+    mean: T,
+    sigma: T,
+    cached: Option<T>,
+}
+
+impl<T: Float> Gaussian<T> {
+    pub fn new(mean: T, sigma: T) -> Self {
+        Self { mean, sigma, cached: None }
+    }
+
+    /// Standard normal.
+    pub fn standard() -> Self {
+        Self::new(T::ZERO, T::ONE)
+    }
+}
+
+impl<T: Float> Distribution<T> for Gaussian<T> {
+    fn sample(&mut self, e: &mut dyn Engine) -> T {
+        if let Some(z) = self.cached.take() {
+            return self.mean + self.sigma * z;
+        }
+        // Box–Muller: two uniforms -> two normals.
+        let mut u1 = e.next_f64();
+        if u1 <= f64::MIN_POSITIVE {
+            u1 = f64::MIN_POSITIVE;
+        }
+        let u2 = e.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.cached = Some(T::from_f64(r * theta.sin()));
+        self.mean + self.sigma * T::from_f64(r * theta.cos())
+    }
+}
+
+/// Bernoulli(p) over `{0, 1}`.
+pub struct Bernoulli {
+    p: f64,
+}
+
+impl Bernoulli {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "p must be in [0,1]");
+        Self { p }
+    }
+}
+
+impl Distribution<u8> for Bernoulli {
+    #[inline]
+    fn sample(&mut self, e: &mut dyn Engine) -> u8 {
+        u8::from(e.next_f64() < self.p)
+    }
+}
+
+/// Uniform integers on `[lo, hi)` (rejection-free Lemire reduction).
+pub struct UniformInt {
+    lo: u64,
+    span: u64,
+}
+
+impl UniformInt {
+    pub fn new(lo: u64, hi: u64) -> Self {
+        assert!(hi > lo, "empty integer range");
+        Self { lo, span: hi - lo }
+    }
+}
+
+impl Distribution<u64> for UniformInt {
+    #[inline]
+    fn sample(&mut self, e: &mut dyn Engine) -> u64 {
+        // Lemire multiply-shift; bias is < 2^-64·span, negligible here.
+        self.lo + ((e.next_u64() as u128 * self.span as u128) >> 64) as u64
+    }
+}
+
+/// Fisher–Yates shuffle driven by an engine (used by kmeans++ seeding,
+/// random-forest bootstrap and the dataset generators).
+pub fn shuffle<T>(e: &mut dyn Engine, xs: &mut [T]) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    let mut d = UniformInt::new(0, 1);
+    for i in (1..n).rev() {
+        d.span = i as u64 + 1;
+        let j = d.sample(e) as usize;
+        xs.swap(i, j);
+    }
+}
+
+/// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+pub fn sample_indices(e: &mut dyn Engine, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + (UniformInt::new(0, (n - i) as u64).sample(e) as usize);
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Mcg59, Mt19937};
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut e = Mt19937::new(1);
+        let mut d = Uniform::<f64>::new(-2.0, 3.0);
+        let n = 40_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = d.sample(&mut e);
+            assert!((-2.0..3.0).contains(&v));
+            sum += v;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut e = Mcg59::new(2);
+        let mut d = Gaussian::<f64>::new(1.0, 2.0);
+        let n = 60_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut e)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut e = Mt19937::new(3);
+        let mut d = Bernoulli::new(0.2);
+        let n = 50_000;
+        let ones: u32 = (0..n).map(|_| u32::from(d.sample(&mut e))).sum();
+        let rate = f64::from(ones) / f64::from(n);
+        assert!((rate - 0.2).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn uniform_int_in_range_and_covers() {
+        let mut e = Mt19937::new(4);
+        let mut d = UniformInt::new(3, 10);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = d.sample(&mut e) as usize;
+            assert!((3..10).contains(&v));
+            seen[v] = true;
+        }
+        assert!(seen[3..10].iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut e = Mt19937::new(5);
+        let mut xs: Vec<usize> = (0..100).collect();
+        shuffle(&mut e, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut e = Mcg59::new(6);
+        let idx = sample_indices(&mut e, 50, 20);
+        assert_eq!(idx.len(), 20);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+        assert!(idx.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn fill_matches_repeated_sample() {
+        let mut e1 = Mt19937::new(7);
+        let mut e2 = Mt19937::new(7);
+        let mut d1 = Uniform::<f32>::new(0.0, 1.0);
+        let mut d2 = Uniform::<f32>::new(0.0, 1.0);
+        let mut buf = [0f32; 64];
+        d1.fill(&mut e1, &mut buf);
+        for v in buf {
+            assert_eq!(v, d2.sample(&mut e2));
+        }
+    }
+}

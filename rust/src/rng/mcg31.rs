@@ -1,0 +1,167 @@
+//! MCG31m1 — the third engine of the MKL VSL / OpenRNG family:
+//!
+//! ```text
+//!   x_{n+1} = a · x_n  mod (2^31 − 1),   a = 1 132 489 760
+//! ```
+//!
+//! A Lehmer generator over the Mersenne prime m = 2³¹−1. Like MCG59 it
+//! has closed-form SkipAhead and LeapFrog (modular exponentiation over a
+//! *prime* modulus, so every nonzero state is invertible via Fermat);
+//! MKL VSL lists it alongside MCG59 as the LeapFrog-capable pair.
+
+use super::Engine;
+use crate::error::Result;
+
+/// Modulus 2^31 − 1 (Mersenne prime).
+pub const M31: u64 = (1u64 << 31) - 1;
+/// MKL VSL multiplier for MCG31m1.
+pub const MCG31_A: u64 = 1_132_489_760;
+
+#[inline(always)]
+fn mul_mod31(a: u64, b: u64) -> u64 {
+    (a * b) % M31
+}
+
+/// `base^exp mod (2^31 − 1)`.
+#[inline]
+pub fn pow_mod31(mut base: u64, mut exp: u64) -> u64 {
+    let mut acc = 1u64;
+    base %= M31;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mul_mod31(acc, base);
+        }
+        base = mul_mod31(base, base);
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Inverse by Fermat's little theorem: `x^(m−2) mod m`.
+#[inline]
+pub fn inv_mod31(x: u64) -> u64 {
+    pow_mod31(x, M31 - 2)
+}
+
+/// 31-bit Lehmer engine.
+#[derive(Clone)]
+pub struct Mcg31 {
+    state: u64,
+    mult: u64,
+}
+
+impl Mcg31 {
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed % M31;
+        if s == 0 {
+            s = 1; // zero is absorbing; MKL nudges to 1
+        }
+        Self { state: s, mult: MCG31_A }
+    }
+
+    /// Raw draw in `[1, 2^31 − 1)`.
+    #[inline]
+    pub fn next_raw(&mut self) -> u64 {
+        self.state = mul_mod31(self.state, self.mult);
+        self.state
+    }
+}
+
+impl Engine for Mcg31 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        // One draw = one output element (the VSL stream-position
+        // contract SkipAhead/LeapFrog are defined over). 31 bits are
+        // placed in the high half; bit 0 is constant-zero, as in MKL's
+        // 31-bit integer outputs.
+        (self.next_raw() as u32) << 1
+    }
+
+    fn next_f64(&mut self) -> f64 {
+        // MKL semantics: one draw → one double in [0, 1).
+        self.next_raw() as f64 * (1.0 / M31 as f64)
+    }
+
+    fn skip_ahead(&mut self, n: u64) -> Result<()> {
+        self.state = mul_mod31(self.state, pow_mod31(self.mult, n));
+        Ok(())
+    }
+
+    fn leapfrog(&mut self, k: u64, s: u64) -> Result<()> {
+        // Same positioning algebra as MCG59 (see mcg59.rs): stream k of
+        // s starts at state·a^{k+1}·a^{−s} with stride multiplier a^s.
+        let a_s = pow_mod31(self.mult, s);
+        let pos = mul_mod31(pow_mod31(self.mult, k + 1), inv_mod31(a_s));
+        self.state = mul_mod31(self.state, pos);
+        self.mult = a_s;
+        Ok(())
+    }
+
+    fn clone_box(&self) -> Box<dyn Engine> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "mcg31m1"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skip_ahead_matches_sequential() {
+        for skip in [0u64, 1, 5, 1000, 1 << 20] {
+            let mut seq = Mcg31::new(2024);
+            for _ in 0..skip {
+                seq.next_raw();
+            }
+            let mut jump = Mcg31::new(2024);
+            jump.skip_ahead(skip).unwrap();
+            assert_eq!(seq.next_raw(), jump.next_raw(), "skip={skip}");
+        }
+    }
+
+    #[test]
+    fn leapfrog_partitions_base_sequence() {
+        let mut base = Mcg31::new(31);
+        let whole: Vec<u64> = (0..40).map(|_| base.next_raw()).collect();
+        for k in 0..4u64 {
+            let mut s = Mcg31::new(31);
+            s.leapfrog(k, 4).unwrap();
+            for i in 0..10 {
+                assert_eq!(s.next_raw(), whole[k as usize + 4 * i], "stream {k} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fermat_inverse() {
+        for x in [1u64, 2, MCG31_A, M31 - 1] {
+            assert_eq!(mul_mod31(x, inv_mod31(x)), 1, "x={x}");
+        }
+    }
+
+    #[test]
+    fn zero_seed_nudged() {
+        let mut e = Mcg31::new(0);
+        assert_ne!(e.next_raw(), 0);
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut e = Mcg31::new(7);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| e.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn full_period_never_zero() {
+        let mut e = Mcg31::new(123);
+        for _ in 0..10_000 {
+            assert_ne!(e.next_raw(), 0);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! MCG59 — the 59-bit multiplicative congruential generator OpenRNG adds
+//! over the stdc++ backend (paper §IV-D):
+//!
+//! ```text
+//!   x_{n+1} = a · x_n  mod 2^59,     a = 13^13
+//! ```
+//!
+//! Unlike MT19937, MCG59's linear structure gives *closed-form* stream
+//! partitioning — the property the paper's SkipAhead and LeapFrog methods
+//! rely on:
+//!
+//! * **SkipAhead(n)**: `x ← a^n·x mod 2^59` via O(log n) square-and-multiply.
+//! * **LeapFrog(k, s)**: stream k of s emits elements `k, k+s, k+2s, …`,
+//!   realized by re-tuning the multiplier to `a^s` after advancing to `x_k`.
+
+use super::Engine;
+use crate::error::Result;
+
+/// Modulus mask: 2^59 − 1 (reduction mod 2^59 is a mask).
+const M59: u64 = (1u64 << 59) - 1;
+/// Default multiplier a = 13^13 (MKL VSL / OpenRNG constant).
+pub const MCG59_A: u64 = 302_875_106_592_253;
+
+/// 59-bit multiplicative congruential engine.
+#[derive(Clone)]
+pub struct Mcg59 {
+    state: u64,
+    /// Current multiplier — `a` for a base stream, `a^s` after LeapFrog.
+    mult: u64,
+}
+
+#[inline(always)]
+fn mul_mod59(a: u64, b: u64) -> u64 {
+    // 59+59 bits overflows u64; go through u128 and mask.
+    ((a as u128 * b as u128) & M59 as u128) as u64
+}
+
+/// Multiplicative inverse of an odd `x` mod 2^59 (Newton iteration —
+/// each step doubles the number of correct low bits).
+#[inline]
+pub fn inv_mod59(x: u64) -> u64 {
+    debug_assert!(x & 1 == 1, "only odd residues are invertible mod 2^59");
+    let mut y: u64 = x; // 3 correct bits to start (x·x ≡ 1 mod 8)
+    for _ in 0..6 {
+        y = y.wrapping_mul(2u64.wrapping_sub(x.wrapping_mul(y)));
+    }
+    y & M59
+}
+
+/// `base^exp mod 2^59` by square-and-multiply.
+#[inline]
+pub fn pow_mod59(mut base: u64, mut exp: u64) -> u64 {
+    let mut acc: u64 = 1;
+    base &= M59;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mul_mod59(acc, base);
+        }
+        base = mul_mod59(base, base);
+        exp >>= 1;
+    }
+    acc
+}
+
+impl Mcg59 {
+    /// Seed the engine. A zero (or even) seed is nudged to the canonical
+    /// odd starting point so the multiplicative sequence has full period.
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed & M59;
+        if s == 0 {
+            s = 1;
+        }
+        if s & 1 == 0 {
+            s |= 1; // keep the state in the odd residues (period 2^57)
+        }
+        Self { state: s, mult: MCG59_A }
+    }
+
+    /// Raw 59-bit state draw (the value MKL scales into doubles).
+    #[inline]
+    pub fn next_raw(&mut self) -> u64 {
+        self.state = mul_mod59(self.state, self.mult);
+        self.state
+    }
+}
+
+impl Engine for Mcg59 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        // Top 32 of the 59 bits: the low bits of an MCG are weak.
+        (self.next_raw() >> 27) as u32
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        (u64::from(self.next_u32()) << 32) | u64::from(self.next_u32())
+    }
+
+    fn next_f64(&mut self) -> f64 {
+        // MKL semantics: one draw maps to one double in [0,1) as x / 2^59.
+        self.next_raw() as f64 * (1.0 / (1u64 << 59) as f64)
+    }
+
+    fn skip_ahead(&mut self, n: u64) -> Result<()> {
+        self.state = mul_mod59(self.state, pow_mod59(self.mult, n));
+        Ok(())
+    }
+
+    fn leapfrog(&mut self, k: u64, s: u64) -> Result<()> {
+        // Remaining outputs are state·a, state·a², …; stream k must emit
+        // elements k, k+s, … of that sequence. With the stride multiplier
+        // a^s applied *before* each draw, the state is positioned at
+        // state·a^{k+1}·a^{−s} (modular inverse — a is odd, so invertible).
+        let a_s = pow_mod59(self.mult, s);
+        let pos = mul_mod59(pow_mod59(self.mult, k + 1), inv_mod59(a_s));
+        self.state = mul_mod59(self.state, pos);
+        self.mult = a_s;
+        Ok(())
+    }
+
+    fn clone_box(&self) -> Box<dyn Engine> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "mcg59"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiplier_is_13_pow_13() {
+        let mut a: u64 = 1;
+        for _ in 0..13 {
+            a *= 13;
+        }
+        assert_eq!(a, MCG59_A);
+    }
+
+    #[test]
+    fn skip_ahead_matches_sequential() {
+        for skip in [0u64, 1, 2, 100, 12_345, 1 << 20] {
+            let mut seq = Mcg59::new(77);
+            for _ in 0..skip {
+                seq.next_raw();
+            }
+            let mut jump = Mcg59::new(77);
+            jump.skip_ahead(skip).unwrap();
+            assert_eq!(seq.next_raw(), jump.next_raw(), "skip={skip}");
+        }
+    }
+
+    #[test]
+    fn leapfrog_partitions_base_sequence() {
+        // 3 leapfrog streams must interleave into the base sequence.
+        let mut base = Mcg59::new(42);
+        let base_seq: Vec<u64> = (0..30).map(|_| base.next_raw()).collect();
+        for k in 0..3u64 {
+            let mut s = Mcg59::new(42);
+            s.leapfrog(k, 3).unwrap();
+            for i in 0..10 {
+                assert_eq!(s.next_raw(), base_seq[k as usize + 3 * i], "stream {k} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn skipahead_then_leapfrog_compose() {
+        let mut base = Mcg59::new(9);
+        let seq: Vec<u64> = (0..40).map(|_| base.next_raw()).collect();
+        let mut s = Mcg59::new(9);
+        s.skip_ahead(10).unwrap();
+        s.leapfrog(1, 2).unwrap(); // elements 11, 13, 15, ... of the base
+        assert_eq!(s.next_raw(), seq[11]);
+        assert_eq!(s.next_raw(), seq[13]);
+    }
+
+    #[test]
+    fn pow_mod59_identities() {
+        assert_eq!(pow_mod59(MCG59_A, 0), 1);
+        assert_eq!(pow_mod59(MCG59_A, 1), MCG59_A);
+        let a2 = pow_mod59(MCG59_A, 2);
+        assert_eq!(a2, ((MCG59_A as u128 * MCG59_A as u128) & ((1u128 << 59) - 1)) as u64);
+    }
+
+    #[test]
+    fn uniform_doubles_cover_unit_interval() {
+        let mut e = Mcg59::new(123);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| e.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+}

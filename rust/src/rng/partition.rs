@@ -1,0 +1,108 @@
+//! The three parallel generation methods the paper lists for OpenRNG
+//! (§IV-D): **Family**, **SkipAhead** and **LeapFrog**. Each turns one
+//! logical stream into `s` disjoint per-thread streams; the random forest
+//! trainer and the synthetic-data generators consume these.
+
+use super::{Engine, Mcg59, Mt19937};
+use crate::error::Result;
+
+/// SplitMix64 finalizer, used only to derive well-separated family seeds.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// **Family method** — independent streams from a family of generators.
+///
+/// OpenRNG realizes this with parameterized families (mt2203); with a
+/// single-parameter engine the family is derived by decorrelated seeding,
+/// which preserves the method's contract: streams share no state and can
+/// be handed to threads with zero coordination.
+pub fn family_streams(seed: u64, s: usize) -> Vec<Box<dyn Engine>> {
+    (0..s)
+        .map(|k| {
+            let derived = splitmix64(seed ^ splitmix64(k as u64 + 1));
+            Box::new(Mt19937::new(derived as u32)) as Box<dyn Engine>
+        })
+        .collect()
+}
+
+/// **SkipAhead method** — stream `k` starts at element `k·block` of the
+/// base sequence; each thread owns a disjoint contiguous block.
+pub fn skipahead_streams<E>(base: &E, s: usize, block: u64) -> Result<Vec<Box<dyn Engine>>>
+where
+    E: Engine + Clone + 'static,
+{
+    let mut out: Vec<Box<dyn Engine>> = Vec::with_capacity(s);
+    for k in 0..s {
+        let mut e = base.clone();
+        e.skip_ahead(k as u64 * block)?;
+        out.push(Box::new(e));
+    }
+    Ok(out)
+}
+
+/// **LeapFrog method** — stream `k` gets elements `k, k+s, k+2s, …` of
+/// the base sequence (only engines with closed-form striding, i.e.
+/// [`Mcg59`], support this — matching MKL VSL).
+pub fn leapfrog_streams(base: &Mcg59, s: usize) -> Result<Vec<Box<dyn Engine>>> {
+    let mut out: Vec<Box<dyn Engine>> = Vec::with_capacity(s);
+    for k in 0..s {
+        let mut e = base.clone();
+        e.leapfrog(k as u64, s as u64)?;
+        out.push(Box::new(e));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_streams_are_decorrelated() {
+        let streams = family_streams(7, 4);
+        let firsts: Vec<u32> = streams.into_iter().map(|mut e| e.next_u32()).collect();
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                assert_ne!(firsts[i], firsts[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn family_is_deterministic() {
+        let a: Vec<u32> = family_streams(9, 3).into_iter().map(|mut e| e.next_u32()).collect();
+        let b: Vec<u32> = family_streams(9, 3).into_iter().map(|mut e| e.next_u32()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn skipahead_streams_tile_base_sequence() {
+        let base = Mt19937::new(11);
+        let mut seq = Mt19937::new(11);
+        let whole: Vec<u32> = (0..4 * 100).map(|_| seq.next_u32()).collect();
+        let streams = skipahead_streams(&base, 4, 100).unwrap();
+        for (k, mut e) in streams.into_iter().enumerate() {
+            for i in 0..100 {
+                assert_eq!(e.next_u32(), whole[k * 100 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn leapfrog_streams_interleave_base_sequence() {
+        let base = Mcg59::new(13);
+        let mut seq = Mcg59::new(13);
+        let whole: Vec<u64> = (0..3 * 50).map(|_| seq.next_raw()).collect();
+        let streams = leapfrog_streams(&base, 3).unwrap();
+        for (k, mut e) in streams.into_iter().enumerate() {
+            // Engine::next_u32 maps one raw draw to one output word.
+            for i in 0..50 {
+                assert_eq!(e.next_u32(), (whole[k + 3 * i] >> 27) as u32);
+            }
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Artifact registry: the catalogue of AOT-compiled kernels.
+//!
+//! `python/compile/aot.py` writes one `<name>.hlo.txt` per (kernel,
+//! shape-variant) plus a `manifest.txt` describing them. Shapes are fixed
+//! at AOT time (XLA executables are shape-monomorphic), so the registry's
+//! job is *variant selection*: given a request's logical dimensions, pick
+//! the smallest compiled variant that fits and let the coordinator pad —
+//! the reproduction's analogue of the paper's runtime NEON/SVE dispatch
+//! (pick the widest vector unit the hardware offers, mask the rest).
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One compiled kernel variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    /// File stem: `<kernel>__<variant>`, loaded from `<stem>.hlo.txt`.
+    pub name: String,
+    /// Logical kernel id (`kmeans_assign`, `wss_select`, …).
+    pub kernel: String,
+    /// The variant's padded dimensions (kernel-specific meaning).
+    pub dims: Vec<usize>,
+}
+
+impl Artifact {
+    /// Total padded element count (used to rank variants by cost).
+    fn volume(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// True when every requested dimension fits into this variant.
+    fn fits(&self, need: &[usize]) -> bool {
+        need.len() == self.dims.len() && need.iter().zip(&self.dims).all(|(n, d)| n <= d)
+    }
+}
+
+/// Parsed `manifest.txt`: kernel id → available variants.
+#[derive(Default, Debug)]
+pub struct ArtifactRegistry {
+    by_kernel: HashMap<String, Vec<Artifact>>,
+}
+
+impl ArtifactRegistry {
+    /// Parse a manifest file. Each non-comment line:
+    /// `kernel variant dim0 dim1 …` (whitespace-separated).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut by_kernel: HashMap<String, Vec<Artifact>> = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let kernel = it
+                .next()
+                .ok_or_else(|| Error::Parse(format!("manifest line {}", lineno + 1)))?
+                .to_string();
+            let variant = it
+                .next()
+                .ok_or_else(|| Error::Parse(format!("manifest line {}: missing variant", lineno + 1)))?;
+            let dims: Vec<usize> = it
+                .map(|t| {
+                    t.parse()
+                        .map_err(|_| Error::Parse(format!("manifest line {}: bad dim {t:?}", lineno + 1)))
+                })
+                .collect::<Result<_>>()?;
+            by_kernel.entry(kernel.clone()).or_default().push(Artifact {
+                name: format!("{kernel}__{variant}"),
+                kernel,
+                dims,
+            });
+        }
+        Ok(Self { by_kernel })
+    }
+
+    /// Load `manifest.txt` from the artifact directory; an absent
+    /// manifest yields an empty registry (dispatch then avoids the
+    /// artifact backend entirely).
+    pub fn load<P: AsRef<Path>>(dir: P) -> Self {
+        let path = dir.as_ref().join("manifest.txt");
+        match std::fs::read_to_string(&path) {
+            Ok(text) => Self::parse(&text).unwrap_or_default(),
+            Err(_) => Self::default(),
+        }
+    }
+
+    /// Number of registered variants.
+    pub fn len(&self) -> usize {
+        self.by_kernel.values().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All variants of a kernel.
+    pub fn variants(&self, kernel: &str) -> &[Artifact] {
+        self.by_kernel.get(kernel).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Smallest variant whose padded dims cover `need` (the dispatch
+    /// decision). `None` when nothing fits — the coordinator then falls
+    /// back down the ladder.
+    pub fn best_fit(&self, kernel: &str, need: &[usize]) -> Option<&Artifact> {
+        self.variants(kernel)
+            .iter()
+            .filter(|a| a.fits(need))
+            .min_by_key(|a| a.volume())
+    }
+
+    /// Throughput-oriented selection: among variants whose *trailing*
+    /// dims cover `need[1..]`, pick the one with the largest leading
+    /// (row-tile) dim. Streaming loops prefer this — fewer, larger PJRT
+    /// dispatches amortize the per-call overhead (§Perf).
+    pub fn largest_tile_fit(&self, kernel: &str, need: &[usize]) -> Option<&Artifact> {
+        self.variants(kernel)
+            .iter()
+            .filter(|a| {
+                a.dims.len() == need.len()
+                    && need[1..].iter().zip(&a.dims[1..]).all(|(n, d)| n <= d)
+            })
+            .max_by_key(|a| (a.dims[0], std::cmp::Reverse(a.volume())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = "\
+# kernel variant dims...
+kmeans_assign n256_d64_k16 256 64 16
+kmeans_assign n1024_d64_k16 1024 64 16
+kmeans_assign n1024_d128_k32 1024 128 32
+wss_select n1024 1024
+";
+
+    #[test]
+    fn parse_counts_and_names() {
+        let r = ArtifactRegistry::parse(MANIFEST).unwrap();
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.variants("kmeans_assign").len(), 3);
+        assert_eq!(r.variants("wss_select")[0].name, "wss_select__n1024");
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_cover() {
+        let r = ArtifactRegistry::parse(MANIFEST).unwrap();
+        let a = r.best_fit("kmeans_assign", &[200, 50, 10]).unwrap();
+        assert_eq!(a.dims, vec![256, 64, 16]);
+        let b = r.best_fit("kmeans_assign", &[500, 64, 16]).unwrap();
+        assert_eq!(b.dims, vec![1024, 64, 16]);
+        let c = r.best_fit("kmeans_assign", &[500, 100, 20]).unwrap();
+        assert_eq!(c.dims, vec![1024, 128, 32]);
+    }
+
+    #[test]
+    fn best_fit_none_when_too_big() {
+        let r = ArtifactRegistry::parse(MANIFEST).unwrap();
+        assert!(r.best_fit("kmeans_assign", &[5000, 64, 16]).is_none());
+        assert!(r.best_fit("unknown_kernel", &[1]).is_none());
+    }
+
+    #[test]
+    fn largest_tile_fit_prefers_big_row_tiles() {
+        let r = ArtifactRegistry::parse(MANIFEST).unwrap();
+        let a = r.largest_tile_fit("kmeans_assign", &[5000, 50, 10]).unwrap();
+        assert_eq!(a.dims[0], 1024); // biggest row tile with d/k fitting
+        assert!(r.largest_tile_fit("kmeans_assign", &[10, 500, 10]).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_empty() {
+        let r = ArtifactRegistry::load("/nonexistent/dir");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(ArtifactRegistry::parse("kernel").is_err());
+        assert!(ArtifactRegistry::parse("kernel var notanumber").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Interchange format is **HLO text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which the pinned
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). Python runs only at build time — this
+//! module is the entire request-path dependency on the compiled kernels.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{Artifact, ArtifactRegistry};
+pub use client::PjRtRuntime;

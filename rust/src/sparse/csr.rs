@@ -1,0 +1,340 @@
+//! CSR matrix type: state-management + analysis + helper routines of the
+//! SPBLAS group structure (§II "Sparse Matrix Processing").
+
+use crate::dtype::Float;
+use crate::error::{Error, Result};
+use crate::tables::DenseTable;
+
+/// Index base of the CSR index arrays — §IV-B: `csrmultd` requires
+/// 1-based, `csrmv` accepts either.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum IndexBase {
+    Zero,
+    One,
+}
+
+impl IndexBase {
+    #[inline]
+    pub fn offset(self) -> i64 {
+        match self {
+            IndexBase::Zero => 0,
+            IndexBase::One => 1,
+        }
+    }
+}
+
+/// 3-array CSR matrix (`values`, `col_idx`, `row_ptr`), the
+/// `sparse::matrix_handle_t` analogue. The 4-array form used by `csrmv`
+/// is exposed through [`CsrMatrix::pointer_b`] / [`CsrMatrix::pointer_e`].
+#[derive(Clone, Debug)]
+pub struct CsrMatrix<T> {
+    rows: usize,
+    cols: usize,
+    values: Vec<T>,
+    col_idx: Vec<i64>,
+    row_ptr: Vec<i64>,
+    base: IndexBase,
+}
+
+/// Result of the SPBLAS "inspector" stage: structural metadata the
+/// execution routines use to pick kernels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Inspection {
+    pub nnz: usize,
+    pub density: f64,
+    pub max_row_nnz: usize,
+    /// Rows whose nnz is 0 (empty-row fraction drives kernel choice).
+    pub empty_rows: usize,
+    /// True when column indices are sorted within every row.
+    pub sorted_rows: bool,
+}
+
+impl<T: Float> CsrMatrix<T> {
+    /// State-management: wrap raw CSR arrays. `row_ptr` has `rows + 1`
+    /// entries in the given base.
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        values: Vec<T>,
+        col_idx: Vec<i64>,
+        row_ptr: Vec<i64>,
+        base: IndexBase,
+    ) -> Result<Self> {
+        let m = Self { rows, cols, values, col_idx, row_ptr, base };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Validate structural invariants (the checks MKL's analysis stage
+    /// performs before optimizing).
+    pub fn validate(&self) -> Result<()> {
+        let off = self.base.offset();
+        if self.row_ptr.len() != self.rows + 1 {
+            return Err(Error::Shape(format!(
+                "row_ptr length {} != rows+1 = {}",
+                self.row_ptr.len(),
+                self.rows + 1
+            )));
+        }
+        if self.values.len() != self.col_idx.len() {
+            return Err(Error::Shape("values / col_idx length mismatch".into()));
+        }
+        if self.row_ptr[0] != off {
+            return Err(Error::Shape(format!("row_ptr[0] = {} != base {off}", self.row_ptr[0])));
+        }
+        if *self.row_ptr.last().unwrap() - off != self.values.len() as i64 {
+            return Err(Error::Shape("row_ptr[rows] does not match nnz".into()));
+        }
+        for w in self.row_ptr.windows(2) {
+            if w[1] < w[0] {
+                return Err(Error::Shape("row_ptr not monotone".into()));
+            }
+        }
+        for &c in &self.col_idx {
+            let c0 = c - off;
+            if c0 < 0 || c0 >= self.cols as i64 {
+                return Err(Error::Shape(format!("column index {c} out of range (base {off})")));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn base(&self) -> IndexBase {
+        self.base
+    }
+
+    pub fn values(&self) -> &[T] {
+        &self.values
+    }
+
+    pub fn col_idx(&self) -> &[i64] {
+        &self.col_idx
+    }
+
+    pub fn row_ptr(&self) -> &[i64] {
+        &self.row_ptr
+    }
+
+    /// 4-array form: `pointer_b[i]` = start of row i (in the base).
+    pub fn pointer_b(&self) -> &[i64] {
+        &self.row_ptr[..self.rows]
+    }
+
+    /// 4-array form: `pointer_e[i]` = one-past-end of row i (in the base).
+    pub fn pointer_e(&self) -> &[i64] {
+        &self.row_ptr[1..]
+    }
+
+    /// Zero-based `(cols, values)` iterator over row `i` regardless of
+    /// the stored base.
+    #[inline]
+    pub fn row_entries(&self, i: usize) -> impl Iterator<Item = (usize, T)> + '_ {
+        let off = self.base.offset();
+        let lo = (self.row_ptr[i] - off) as usize;
+        let hi = (self.row_ptr[i + 1] - off) as usize;
+        self.col_idx[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(move |(&c, &v)| ((c - off) as usize, v))
+    }
+
+    /// Analysis ("inspector") stage: gather structural metadata.
+    pub fn inspect(&self) -> Inspection {
+        let off = self.base.offset();
+        let mut max_row_nnz = 0usize;
+        let mut empty_rows = 0usize;
+        let mut sorted_rows = true;
+        for i in 0..self.rows {
+            let lo = (self.row_ptr[i] - off) as usize;
+            let hi = (self.row_ptr[i + 1] - off) as usize;
+            let nnz = hi - lo;
+            max_row_nnz = max_row_nnz.max(nnz);
+            if nnz == 0 {
+                empty_rows += 1;
+            }
+            if !self.col_idx[lo..hi].windows(2).all(|w| w[0] <= w[1]) {
+                sorted_rows = false;
+            }
+        }
+        Inspection {
+            nnz: self.nnz(),
+            density: self.nnz() as f64 / (self.rows * self.cols).max(1) as f64,
+            max_row_nnz,
+            empty_rows,
+            sorted_rows,
+        }
+    }
+
+    /// Helper: convert to the other index base in place.
+    pub fn rebase(&mut self, base: IndexBase) {
+        if base == self.base {
+            return;
+        }
+        let delta = base.offset() - self.base.offset();
+        for c in self.col_idx.iter_mut() {
+            *c += delta;
+        }
+        for p in self.row_ptr.iter_mut() {
+            *p += delta;
+        }
+        self.base = base;
+    }
+
+    /// Helper: dense → CSR with an absolute drop threshold.
+    pub fn from_dense(t: &DenseTable<T>, threshold: T, base: IndexBase) -> Self {
+        let off = base.offset();
+        let mut values = Vec::new();
+        let mut col_idx = Vec::new();
+        let mut row_ptr = Vec::with_capacity(t.rows() + 1);
+        row_ptr.push(off);
+        for i in 0..t.rows() {
+            for (j, &v) in t.row(i).iter().enumerate() {
+                if v.abs() > threshold {
+                    values.push(v);
+                    col_idx.push(j as i64 + off);
+                }
+            }
+            row_ptr.push(values.len() as i64 + off);
+        }
+        Self { rows: t.rows(), cols: t.cols(), values, col_idx, row_ptr, base }
+    }
+
+    /// Helper: CSR → dense (row-major).
+    pub fn to_dense(&self) -> DenseTable<T> {
+        let mut out = DenseTable::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (j, v) in self.row_entries(i) {
+                out.set(i, j, v);
+            }
+        }
+        out
+    }
+
+    /// Helper: explicit transpose (CSC-equivalent re-bucketing).
+    pub fn transposed(&self) -> Self {
+        let off = self.base.offset();
+        let mut counts = vec![0i64; self.cols + 1];
+        for &c in &self.col_idx {
+            counts[(c - off) as usize + 1] += 1;
+        }
+        for j in 1..=self.cols {
+            counts[j] += counts[j - 1];
+        }
+        let row_ptr: Vec<i64> = counts.iter().map(|&c| c + off).collect();
+        let mut col_idx = vec![0i64; self.nnz()];
+        let mut values = vec![T::ZERO; self.nnz()];
+        let mut cursor = counts.clone();
+        for i in 0..self.rows {
+            for (j, v) in self.row_entries(i) {
+                let pos = cursor[j] as usize;
+                cursor[j] += 1;
+                col_idx[pos] = i as i64 + off;
+                values[pos] = v;
+            }
+        }
+        debug_assert_eq!(row_ptr.len(), self.cols + 1);
+        Self { rows: self.cols, cols: self.rows, values, col_idx, row_ptr, base: self.base }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix<f64> {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        CsrMatrix::new(
+            3,
+            3,
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![1, 3, 1, 2],
+            vec![1, 3, 3, 5],
+            IndexBase::One,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn validate_catches_bad_row_ptr() {
+        let r = CsrMatrix::new(2, 2, vec![1.0], vec![0], vec![0, 2, 1], IndexBase::Zero);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validate_catches_out_of_range_col() {
+        let r = CsrMatrix::new(1, 2, vec![1.0], vec![5], vec![0, 1], IndexBase::Zero);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn row_entries_zero_based_regardless_of_base() {
+        let m = sample();
+        let r0: Vec<(usize, f64)> = m.row_entries(0).collect();
+        assert_eq!(r0, vec![(0, 1.0), (2, 2.0)]);
+        let r1: Vec<(usize, f64)> = m.row_entries(1).collect();
+        assert!(r1.is_empty());
+    }
+
+    #[test]
+    fn four_array_views() {
+        let m = sample();
+        assert_eq!(m.pointer_b(), &[1, 3, 3]);
+        assert_eq!(m.pointer_e(), &[3, 3, 5]);
+    }
+
+    #[test]
+    fn inspect_metadata() {
+        let m = sample();
+        let ins = m.inspect();
+        assert_eq!(ins.nnz, 4);
+        assert_eq!(ins.max_row_nnz, 2);
+        assert_eq!(ins.empty_rows, 1);
+        assert!(ins.sorted_rows);
+        assert!((ins.density - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rebase_round_trip() {
+        let mut m = sample();
+        let dense_before = m.to_dense();
+        m.rebase(IndexBase::Zero);
+        m.validate().unwrap();
+        assert_eq!(m.base(), IndexBase::Zero);
+        assert_eq!(m.to_dense(), dense_before);
+        m.rebase(IndexBase::One);
+        assert_eq!(m.to_dense(), dense_before);
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let m = sample();
+        let d = m.to_dense();
+        assert_eq!(d.get(0, 2), 2.0);
+        assert_eq!(d.get(1, 1), 0.0);
+        let back = CsrMatrix::from_dense(&d, 0.0, IndexBase::One);
+        assert_eq!(back.to_dense(), d);
+        assert_eq!(back.nnz(), 4);
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let m = sample();
+        let t = m.transposed();
+        t.validate().unwrap();
+        assert_eq!(t.to_dense(), m.to_dense().transposed());
+    }
+}

@@ -1,0 +1,22 @@
+//! Sparse BLAS substrate — the MKL SPBLAS replacement of paper §IV-B.
+//!
+//! OpenBLAS offers no sparse module, so the paper implements the three
+//! CSR routines oneDAL needs: [`csrmm`], [`csrmultd`] and [`csrmv`]. This
+//! module reproduces them with the exact contracts of §IV-B, including
+//! the 3-array vs 4-array CSR forms, 0-/1-based indexing, the identity /
+//! transpose `op`, and — for `csrmultd` — the paper's loop-order analysis
+//! (j-k-i for `AB`, i-j-k for `AᵀB`, column-major `C`).
+//!
+//! The module follows MKL SPBLAS's four-group structure (state
+//! management / analysis / execution / helpers):
+//! * state — [`CsrMatrix`] construction and [`CsrMatrix::validate`];
+//! * analysis — [`CsrMatrix::inspect`] returning an [`Inspection`] used
+//!   to pick execution kernels;
+//! * execution — [`ops`];
+//! * helpers — dense↔CSR converters, transpose, index-base conversion.
+
+pub mod csr;
+pub mod ops;
+
+pub use csr::{CsrMatrix, IndexBase, Inspection};
+pub use ops::{csrmm, csrmultd, csrmv, SparseOp};

@@ -1,0 +1,150 @@
+//! Minimal CSV load/save for [`DenseTable`] — the data-source role of
+//! oneDAL's `CSVFeatureManager`. Supports optional header rows, comment
+//! lines and a selectable delimiter; numeric parsing only (the workloads
+//! in the paper are all-numeric feature matrices).
+
+use super::dense::DenseTable;
+use crate::dtype::Float;
+use crate::error::{Error, Result};
+use std::io::{BufReader, Read, Write};
+use std::path::Path;
+
+/// CSV reader options.
+#[derive(Clone, Debug)]
+pub struct CsvOptions {
+    pub delimiter: char,
+    pub has_header: bool,
+    /// Lines starting with this char are skipped.
+    pub comment: Option<char>,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        Self { delimiter: ',', has_header: false, comment: Some('#') }
+    }
+}
+
+/// Parse CSV text into a table.
+pub fn parse_csv<T: Float>(text: &str, opts: &CsvOptions) -> Result<DenseTable<T>> {
+    let mut data: Vec<T> = Vec::new();
+    let mut cols = 0usize;
+    let mut rows = 0usize;
+    let mut skipped_header = !opts.has_header;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(c) = opts.comment {
+            if line.starts_with(c) {
+                continue;
+            }
+        }
+        if !skipped_header {
+            skipped_header = true;
+            continue;
+        }
+        let mut count = 0usize;
+        for field in line.split(opts.delimiter) {
+            let v: f64 = field
+                .trim()
+                .trim_matches('"')
+                .parse()
+                .map_err(|_| Error::Parse(format!("line {}: bad number {field:?}", lineno + 1)))?;
+            data.push(T::from_f64(v));
+            count += 1;
+        }
+        if rows == 0 {
+            cols = count;
+        } else if count != cols {
+            return Err(Error::Parse(format!(
+                "line {}: {count} fields, expected {cols}",
+                lineno + 1
+            )));
+        }
+        rows += 1;
+    }
+    DenseTable::from_vec(data, rows, cols)
+}
+
+/// Load a table from a CSV file.
+pub fn load_csv<T: Float, P: AsRef<Path>>(path: P, opts: &CsvOptions) -> Result<DenseTable<T>> {
+    let f = std::fs::File::open(path)?;
+    let mut text = String::new();
+    BufReader::new(f).read_to_string(&mut text)?;
+    parse_csv(&text, opts)
+}
+
+/// Save a table to a CSV file.
+pub fn save_csv<T: Float, P: AsRef<Path>>(table: &DenseTable<T>, path: P) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..table.rows() {
+        let row = table.row(i);
+        for (j, v) in row.iter().enumerate() {
+            if j > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{v}")?;
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+impl DenseTable<f64> {
+    /// Load from CSV with default options (convenience used in examples).
+    pub fn from_csv<P: AsRef<Path>>(path: P) -> Result<Self> {
+        load_csv(path, &CsvOptions::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let t: DenseTable<f64> = parse_csv("1,2,3\n4,5,6\n", &CsvOptions::default()).unwrap();
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn parse_header_comments_blank_lines() {
+        let text = "# generated\na,b\n1.5,2.5\n\n3.5,4.5\n";
+        let opts = CsvOptions { has_header: true, ..Default::default() };
+        let t: DenseTable<f32> = parse_csv(text, &opts).unwrap();
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row(0), &[1.5f32, 2.5]);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let r: Result<DenseTable<f64>> = parse_csv("1,2\n3\n", &CsvOptions::default());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let r: Result<DenseTable<f64>> = parse_csv("1,zzz\n", &CsvOptions::default());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn round_trip_via_file() {
+        let t = DenseTable::from_vec(vec![1.0f64, -2.5, 3.25, 4.0], 2, 2).unwrap();
+        let path = std::env::temp_dir().join("onedal_sve_csv_roundtrip.csv");
+        save_csv(&t, &path).unwrap();
+        let u = DenseTable::from_csv(&path).unwrap();
+        assert_eq!(t, u);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn semicolon_delimiter() {
+        let opts = CsvOptions { delimiter: ';', ..Default::default() };
+        let t: DenseTable<f64> = parse_csv("1;2\n3;4\n", &opts).unwrap();
+        assert_eq!(t.get(1, 0), 3.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Dense row-major numeric table (oneDAL `HomogenNumericTable` analogue).
+
+use crate::dtype::Float;
+use crate::error::{Error, Result};
+
+/// A dense, row-major `rows × cols` table of `T`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseTable<T = f64> {
+    data: Vec<T>,
+    rows: usize,
+    cols: usize,
+}
+
+impl<T: Float> DenseTable<T> {
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(data: Vec<T>, rows: usize, cols: usize) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer length {} != rows*cols = {}x{}",
+                data.len(),
+                rows,
+                cols
+            )));
+        }
+        Ok(Self { data, rows, cols })
+    }
+
+    /// Zero-filled table.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![T::ZERO; rows * cols], rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Flat row-major view.
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Mutable flat view.
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Row `i` as a contiguous slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// New table holding rows `lo..hi` (copy).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Result<Self> {
+        if lo > hi || hi > self.rows {
+            return Err(Error::Shape(format!("row slice {lo}..{hi} out of 0..{}", self.rows)));
+        }
+        Ok(Self {
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+            rows: hi - lo,
+            cols: self.cols,
+        })
+    }
+
+    /// Gather the given rows into a new table (bootstrap sampling etc.).
+    pub fn gather_rows(&self, idx: &[usize]) -> Self {
+        let mut data = Vec::with_capacity(idx.len() * self.cols);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Self { data, rows: idx.len(), cols: self.cols }
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Self {
+        let mut t = Self::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Per-column means.
+    pub fn col_means(&self) -> Vec<T> {
+        let mut m = vec![T::ZERO; self.cols];
+        for i in 0..self.rows {
+            for (mj, &v) in m.iter_mut().zip(self.row(i)) {
+                *mj += v;
+            }
+        }
+        let inv = T::ONE / T::from_usize(self.rows.max(1));
+        for v in m.iter_mut() {
+            *v *= inv;
+        }
+        m
+    }
+
+    /// Convert element type (e.g. f64 table → f32 artifact inputs).
+    pub fn cast<U: Float>(&self) -> DenseTable<U> {
+        DenseTable {
+            data: self.data.iter().map(|v| U::from_f64(v.to_f64())).collect(),
+            rows: self.rows,
+            cols: self.cols,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_checks_shape() {
+        assert!(DenseTable::from_vec(vec![1.0f64; 6], 2, 3).is_ok());
+        assert!(DenseTable::from_vec(vec![1.0f64; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn rows_and_indexing() {
+        let t = DenseTable::from_vec(vec![1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3).unwrap();
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(t.get(0, 2), 3.0);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let t = DenseTable::from_vec((0..12).map(|i| i as f64).collect(), 3, 4).unwrap();
+        assert_eq!(t.transposed().transposed(), t);
+        assert_eq!(t.transposed().get(2, 1), t.get(1, 2));
+    }
+
+    #[test]
+    fn gather_and_slice() {
+        let t = DenseTable::from_vec((0..8).map(|i| i as f64).collect(), 4, 2).unwrap();
+        let g = t.gather_rows(&[3, 0, 3]);
+        assert_eq!(g.rows(), 3);
+        assert_eq!(g.row(0), &[6.0, 7.0]);
+        assert_eq!(g.row(2), &[6.0, 7.0]);
+        let s = t.slice_rows(1, 3).unwrap();
+        assert_eq!(s.row(0), &[2.0, 3.0]);
+        assert!(t.slice_rows(3, 5).is_err());
+    }
+
+    #[test]
+    fn col_means_simple() {
+        let t = DenseTable::from_vec(vec![1.0f64, 10.0, 3.0, 20.0], 2, 2).unwrap();
+        assert_eq!(t.col_means(), vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn cast_f64_to_f32() {
+        let t = DenseTable::from_vec(vec![1.5f64, -2.25], 1, 2).unwrap();
+        let u: DenseTable<f32> = t.cast();
+        assert_eq!(u.data(), &[1.5f32, -2.25]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Numeric-table abstraction — the data-management layer of oneDAL.
+//!
+//! oneDAL's public API hands every algorithm a `NumericTable`; this
+//! module provides the two layouts the paper's workloads use (dense
+//! row-major, CSR sparse), CSV I/O, and the synthetic dataset generators
+//! standing in for the paper's benchmark data (scikit-learn_bench grids,
+//! DataPerf speech embeddings, TPC-AI segmentation, Kaggle fraud).
+
+pub mod csv;
+pub mod dense;
+pub mod synth;
+
+pub use dense::DenseTable;

@@ -1,0 +1,276 @@
+//! Synthetic dataset generators standing in for the paper's benchmark
+//! data (DESIGN.md §2 substitution table):
+//!
+//! * [`make_blobs`] / [`make_classification`] / [`make_regression`] — the
+//!   scikit-learn_bench grids of Figs. 5–6;
+//! * [`make_fraud`] — the Kaggle credit-card set of Fig. 9 (284 807×30,
+//!   492 positives, PCA-like decorrelated features);
+//! * [`make_speech_embeddings`] — the DataPerf keyword-spotting
+//!   embeddings of Fig. 7 (per-"language" cluster structure);
+//! * [`make_segmentation`] — the TPC-AI customer-segmentation mixture of
+//!   Fig. 8;
+//! * [`make_sparse_csr`] — CSR matrices with controlled density for the
+//!   Sparse BLAS ablations (a9a/gisette-like SVM inputs).
+
+use super::dense::DenseTable;
+use crate::rng::{Distribution, Engine, Gaussian, Uniform, UniformInt};
+use crate::sparse::CsrMatrix;
+
+/// Isotropic Gaussian blobs: `n` points, `d` features, `k` centers.
+/// Returns `(X, labels)`. Centers are drawn uniformly in `[-10, 10]^d`.
+pub fn make_blobs(
+    e: &mut dyn Engine,
+    n: usize,
+    d: usize,
+    k: usize,
+    std: f64,
+) -> (DenseTable<f64>, Vec<usize>) {
+    let mut centers = vec![0.0f64; k * d];
+    let mut uc = Uniform::new(-10.0, 10.0);
+    uc.fill(e, &mut centers);
+    let mut g = Gaussian::new(0.0, std);
+    let mut ui = UniformInt::new(0, k as u64);
+    let mut x = vec![0.0f64; n * d];
+    let mut labels = vec![0usize; n];
+    for i in 0..n {
+        let c = ui.sample(e) as usize;
+        labels[i] = c;
+        for j in 0..d {
+            x[i * d + j] = centers[c * d + j] + g.sample(e);
+        }
+    }
+    (DenseTable::from_vec(x, n, d).unwrap(), labels)
+}
+
+/// Two-class classification task: class-conditional Gaussians with a
+/// random informative subspace (scikit-learn `make_classification`-like).
+/// Returns `(X, y∈{0,1})`.
+pub fn make_classification(
+    e: &mut dyn Engine,
+    n: usize,
+    d: usize,
+    sep: f64,
+) -> (DenseTable<f64>, Vec<f64>) {
+    // Random unit direction for class separation.
+    let mut g = Gaussian::<f64>::standard();
+    let mut dir = vec![0.0f64; d];
+    g.fill(e, &mut dir);
+    let norm = dir.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+    for v in dir.iter_mut() {
+        *v /= norm;
+    }
+    let mut x = vec![0.0f64; n * d];
+    let mut y = vec![0.0f64; n];
+    let mut coin = Uniform::new(0.0, 1.0);
+    for i in 0..n {
+        let cls = if coin.sample(e) < 0.5 { 0.0 } else { 1.0 };
+        y[i] = cls;
+        let shift = if cls > 0.5 { sep } else { -sep };
+        for j in 0..d {
+            x[i * d + j] = g.sample(e) + shift * dir[j];
+        }
+    }
+    (DenseTable::from_vec(x, n, d).unwrap(), y)
+}
+
+/// Linear regression task `y = Xw + ε`. Returns `(X, y, w_true)`.
+pub fn make_regression(
+    e: &mut dyn Engine,
+    n: usize,
+    d: usize,
+    noise: f64,
+) -> (DenseTable<f64>, Vec<f64>, Vec<f64>) {
+    let mut g = Gaussian::<f64>::standard();
+    let mut w = vec![0.0f64; d];
+    let mut uw = Uniform::new(-3.0, 3.0);
+    uw.fill(e, &mut w);
+    let mut x = vec![0.0f64; n * d];
+    g.fill(e, &mut x);
+    let mut noise_d = Gaussian::new(0.0, noise);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        y[i] = row.iter().zip(&w).map(|(a, b)| a * b).sum::<f64>() + noise_d.sample(e);
+    }
+    (DenseTable::from_vec(x, n, d).unwrap(), y, w)
+}
+
+/// Credit-card-fraud-shaped dataset (Fig. 9 substitution): `n` rows,
+/// `d` decorrelated features (the Kaggle set is PCA-transformed, so
+/// independent Gaussians are the right analogue), `n_pos` positives drawn
+/// from a shifted, heavier-tailed distribution. Returns `(X, y)`.
+pub fn make_fraud(e: &mut dyn Engine, n: usize, d: usize, n_pos: usize) -> (DenseTable<f64>, Vec<f64>) {
+    assert!(n_pos <= n);
+    let mut g = Gaussian::<f64>::standard();
+    let mut x = vec![0.0f64; n * d];
+    g.fill(e, &mut x);
+    let mut y = vec![0.0f64; n];
+    // Choose positive rows without replacement.
+    let pos = crate::rng::distributions::sample_indices(e, n, n_pos);
+    let mut shift = Gaussian::new(1.8, 1.5);
+    for &i in &pos {
+        y[i] = 1.0;
+        for j in 0..d {
+            x[i * d + j] += shift.sample(e);
+        }
+    }
+    (DenseTable::from_vec(x, n, d).unwrap(), y)
+}
+
+/// DataPerf-speech-shaped embeddings (Fig. 7 substitution): keyword
+/// clusters + a background mass, mimicking MSWC embedding geometry.
+/// Returns `(X, y)` where `y` is 1 for target-keyword rows.
+pub fn make_speech_embeddings(
+    e: &mut dyn Engine,
+    n: usize,
+    d: usize,
+    n_keywords: usize,
+    target_frac: f64,
+) -> (DenseTable<f64>, Vec<f64>) {
+    let (x_tbl, cluster) = make_blobs(e, n, d, n_keywords + 1, 2.0);
+    let mut x = x_tbl;
+    // Cluster 0 is diffuse background: widen it.
+    let mut g = Gaussian::new(0.0, 4.0);
+    let mut y = vec![0.0f64; n];
+    let mut coin = Uniform::new(0.0, 1.0);
+    for i in 0..n {
+        if cluster[i] == 0 {
+            for v in x.row_mut(i) {
+                *v += g.sample(e);
+            }
+        } else if coin.sample(e) < target_frac {
+            y[i] = 1.0;
+        }
+    }
+    (x, y)
+}
+
+/// TPC-AI customer-segmentation mixture (Fig. 8 substitution):
+/// behavioural features (order counts, spend, recency …) from a mixture
+/// of `k` customer archetypes with per-feature scales. Returns `X`.
+pub fn make_segmentation(e: &mut dyn Engine, n: usize, d: usize, k: usize) -> DenseTable<f64> {
+    let mut centers = vec![0.0f64; k * d];
+    let mut uc = Uniform::new(0.0, 100.0);
+    uc.fill(e, &mut centers);
+    // Per-archetype, per-feature scales: spend-like features vary more.
+    let mut scales = vec![0.0f64; k * d];
+    let mut us = Uniform::new(0.5, 15.0);
+    us.fill(e, &mut scales);
+    let mut ui = UniformInt::new(0, k as u64);
+    let mut g = Gaussian::<f64>::standard();
+    let mut x = vec![0.0f64; n * d];
+    for i in 0..n {
+        let c = ui.sample(e) as usize;
+        for j in 0..d {
+            x[i * d + j] = centers[c * d + j] + scales[c * d + j] * g.sample(e);
+        }
+    }
+    DenseTable::from_vec(x, n, d).unwrap()
+}
+
+/// Random CSR matrix with the given density; values uniform in [-1, 1).
+/// 1-based index arrays (the `csrmultd` convention — see §IV-B).
+pub fn make_sparse_csr(e: &mut dyn Engine, rows: usize, cols: usize, density: f64) -> CsrMatrix<f64> {
+    let mut vals = Vec::new();
+    let mut col_idx = Vec::new();
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    row_ptr.push(1i64); // 1-based
+    let mut coin = Uniform::new(0.0, 1.0);
+    let mut uv = Uniform::new(-1.0, 1.0);
+    for _ in 0..rows {
+        for j in 0..cols {
+            if coin.sample(e) < density {
+                vals.push(uv.sample(e));
+                col_idx.push(j as i64 + 1);
+            }
+        }
+        row_ptr.push(vals.len() as i64 + 1);
+    }
+    CsrMatrix::new(rows, cols, vals, col_idx, row_ptr, crate::sparse::IndexBase::One).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Mt19937;
+
+    #[test]
+    fn blobs_shapes_and_label_range() {
+        let mut e = Mt19937::new(1);
+        let (x, y) = make_blobs(&mut e, 500, 6, 4, 1.0);
+        assert_eq!(x.rows(), 500);
+        assert_eq!(x.cols(), 6);
+        assert_eq!(y.len(), 500);
+        assert!(y.iter().all(|&c| c < 4));
+        // every cluster occupied
+        for c in 0..4 {
+            assert!(y.iter().any(|&v| v == c), "cluster {c} empty");
+        }
+    }
+
+    #[test]
+    fn classification_separable_along_direction() {
+        let mut e = Mt19937::new(2);
+        let (x, y) = make_classification(&mut e, 2000, 10, 3.0);
+        // Class means should differ substantially in at least one feature.
+        let mut m0 = vec![0.0; 10];
+        let mut m1 = vec![0.0; 10];
+        let (mut n0, mut n1) = (0.0, 0.0);
+        for i in 0..2000 {
+            let (m, n) = if y[i] < 0.5 { (&mut m0, &mut n0) } else { (&mut m1, &mut n1) };
+            *n += 1.0;
+            for j in 0..10 {
+                m[j] += x.get(i, j);
+            }
+        }
+        let gap: f64 = (0..10).map(|j| (m0[j] / n0 - m1[j] / n1).powi(2)).sum::<f64>().sqrt();
+        assert!(gap > 3.0, "class-mean gap {gap}");
+    }
+
+    #[test]
+    fn regression_recoverable_signal() {
+        let mut e = Mt19937::new(3);
+        let (x, y, w) = make_regression(&mut e, 1000, 5, 0.01);
+        // With tiny noise, y ≈ Xw.
+        let mut err = 0.0;
+        for i in 0..1000 {
+            let pred: f64 = x.row(i).iter().zip(&w).map(|(a, b)| a * b).sum();
+            err += (pred - y[i]).powi(2);
+        }
+        assert!((err / 1000.0).sqrt() < 0.05);
+    }
+
+    #[test]
+    fn fraud_imbalance_exact() {
+        let mut e = Mt19937::new(4);
+        let (x, y) = make_fraud(&mut e, 10_000, 8, 49);
+        assert_eq!(x.rows(), 10_000);
+        assert_eq!(y.iter().filter(|&&v| v > 0.5).count(), 49);
+    }
+
+    #[test]
+    fn speech_embeddings_have_targets() {
+        let mut e = Mt19937::new(5);
+        let (x, y) = make_speech_embeddings(&mut e, 3000, 16, 10, 0.3);
+        assert_eq!(x.rows(), 3000);
+        let pos = y.iter().filter(|&&v| v > 0.5).count();
+        assert!(pos > 100 && pos < 1500, "pos={pos}");
+    }
+
+    #[test]
+    fn segmentation_shape() {
+        let mut e = Mt19937::new(6);
+        let x = make_segmentation(&mut e, 1000, 10, 8);
+        assert_eq!((x.rows(), x.cols()), (1000, 10));
+    }
+
+    #[test]
+    fn sparse_csr_density_and_validity() {
+        let mut e = Mt19937::new(7);
+        let a = make_sparse_csr(&mut e, 200, 100, 0.05);
+        let nnz = a.nnz();
+        let density = nnz as f64 / (200.0 * 100.0);
+        assert!((density - 0.05).abs() < 0.01, "density={density}");
+        a.validate().unwrap();
+    }
+}

@@ -1,0 +1,22 @@
+//! Vector Statistical Library (VSL) substrate — paper §IV-C.
+//!
+//! oneDAL's summary-statistics kernels were MKL-VSL calls; on ARM the
+//! paper reimplements the two routines oneDAL actually needs:
+//!
+//! * [`x2c_mom`] — per-coordinate variance through raw moments
+//!   (eq. 3: `v = S²/(n−1) − (S¹)²/(n(n−1))`), replacing the two-pass
+//!   mean-then-variance formulation (eqs. 1–2) kept here as
+//!   [`x2c_mom_naive`] for the ablation benches;
+//! * [`XcpState`] — the batched cross-product matrix update of eq. 6:
+//!   `C ← C' + S'(S')ᵀ/n' − S·Sᵀ/n + X·Xᵀ`, the streaming kernel behind
+//!   oneDAL's online covariance / PCA / linear-regression pipelines.
+//!
+//! Data layout matches the paper: `X ∈ ℝ^{p×n}` with each **column** a
+//! p-dimensional observation (row-major storage, so row `i` holds
+//! coordinate `i` of every observation — unit-stride reductions).
+
+pub mod moments;
+pub mod xcp;
+
+pub use moments::{x2c_mom, x2c_mom_naive, Moments};
+pub use xcp::{xcp_full, XcpState};

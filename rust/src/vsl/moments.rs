@@ -1,0 +1,231 @@
+//! `x2c_mom` — central second moment (variance) per coordinate, §IV-C-1.
+
+use crate::dtype::Float;
+use crate::error::{Error, Result};
+use crate::tables::DenseTable;
+
+/// Raw + central moments of a `p×n` dataset (columns = observations).
+#[derive(Clone, Debug)]
+pub struct Moments<T> {
+    /// Observation count `n`.
+    pub n: usize,
+    /// First raw moment per coordinate: `S¹ᵢ = Σⱼ Xᵢⱼ`.
+    pub sum: Vec<T>,
+    /// Second raw moment per coordinate: `S²ᵢ = Σⱼ Xᵢⱼ²`.
+    pub sumsq: Vec<T>,
+    /// Sample mean `μᵢ = S¹ᵢ / n`.
+    pub mean: Vec<T>,
+    /// Sample variance `vᵢ` (unbiased, `n−1` denominator).
+    pub variance: Vec<T>,
+}
+
+impl<T: Float> Moments<T> {
+    /// Merge partial moments from a second batch (the online pattern the
+    /// raw-moment formulation enables — recomputation-free, §IV-C-1).
+    pub fn merge(&mut self, other: &Moments<T>) {
+        assert_eq!(self.sum.len(), other.sum.len());
+        self.n += other.n;
+        for (a, &b) in self.sum.iter_mut().zip(&other.sum) {
+            *a += b;
+        }
+        for (a, &b) in self.sumsq.iter_mut().zip(&other.sumsq) {
+            *a += b;
+        }
+        finalize(self.n, &self.sum, &self.sumsq, &mut self.mean, &mut self.variance);
+    }
+}
+
+/// Derive mean/variance from raw moments via eq. 3.
+fn finalize<T: Float>(n: usize, sum: &[T], sumsq: &[T], mean: &mut Vec<T>, variance: &mut Vec<T>) {
+    let nf = T::from_usize(n);
+    mean.clear();
+    mean.extend(sum.iter().map(|&s| s / nf));
+    variance.clear();
+    if n < 2 {
+        variance.resize(sum.len(), T::ZERO);
+        return;
+    }
+    let inv_nm1 = T::ONE / T::from_usize(n - 1);
+    let inv_n_nm1 = T::ONE / (nf * T::from_usize(n - 1));
+    variance.extend(
+        sum.iter()
+            .zip(sumsq)
+            .map(|(&s1, &s2)| s2 * inv_nm1 - s1 * s1 * inv_n_nm1),
+    );
+}
+
+/// Raw-moment variance kernel (eq. 3): one pass, two running sums per
+/// coordinate, 4-way unrolled over observations — the shape the paper
+/// vectorizes with SVE (and our Pallas `moments` kernel mirrors).
+pub fn x2c_mom<T: Float>(x: &DenseTable<T>) -> Result<Moments<T>> {
+    let p = x.rows();
+    let n = x.cols();
+    if n == 0 {
+        return Err(Error::Shape("x2c_mom: empty dataset".into()));
+    }
+    let mut sum = vec![T::ZERO; p];
+    let mut sumsq = vec![T::ZERO; p];
+    for i in 0..p {
+        let row = x.row(i);
+        // Dual accumulators per moment break the dependence chain.
+        let (mut s0, mut s1, mut q0, mut q1) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+        let chunks = n / 2;
+        for c in 0..chunks {
+            let a = row[2 * c];
+            let b = row[2 * c + 1];
+            s0 += a;
+            s1 += b;
+            q0 = a.mul_add(a, q0);
+            q1 = b.mul_add(b, q1);
+        }
+        if n % 2 == 1 {
+            let a = row[n - 1];
+            s0 += a;
+            q0 = a.mul_add(a, q0);
+        }
+        sum[i] = s0 + s1;
+        sumsq[i] = q0 + q1;
+    }
+    let mut mean = Vec::new();
+    let mut variance = Vec::new();
+    finalize(n, &sum, &sumsq, &mut mean, &mut variance);
+    Ok(Moments { n, sum, sumsq, mean, variance })
+}
+
+/// Two-pass textbook variance (eqs. 1–2): compute means, then sum squared
+/// deviations. The pre-optimization baseline the ablation bench compares
+/// against (two memory sweeps instead of one).
+pub fn x2c_mom_naive<T: Float>(x: &DenseTable<T>) -> Result<Moments<T>> {
+    let p = x.rows();
+    let n = x.cols();
+    if n == 0 {
+        return Err(Error::Shape("x2c_mom: empty dataset".into()));
+    }
+    let nf = T::from_usize(n);
+    let mut mean = vec![T::ZERO; p];
+    let mut sum = vec![T::ZERO; p];
+    for i in 0..p {
+        let mut s = T::ZERO;
+        for &v in x.row(i) {
+            s += v;
+        }
+        sum[i] = s;
+        mean[i] = s / nf;
+    }
+    let mut variance = vec![T::ZERO; p];
+    let mut sumsq = vec![T::ZERO; p];
+    for i in 0..p {
+        let mu = mean[i];
+        let mut acc = T::ZERO;
+        let mut raw = T::ZERO;
+        for &v in x.row(i) {
+            let d = v - mu;
+            acc = d.mul_add(d, acc);
+            raw = v.mul_add(v, raw);
+        }
+        sumsq[i] = raw;
+        variance[i] = if n > 1 { acc / T::from_usize(n - 1) } else { T::ZERO };
+    }
+    Ok(Moments { n, sum, sumsq, mean, variance })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Engine, Gaussian, Mt19937};
+
+    fn random_dataset(seed: u32, p: usize, n: usize) -> DenseTable<f64> {
+        let mut e = Mt19937::new(seed);
+        let mut g = Gaussian::new(2.0, 3.0);
+        let mut data = vec![0.0; p * n];
+        g.fill(&mut e, &mut data);
+        DenseTable::from_vec(data, p, n).unwrap()
+    }
+
+    #[test]
+    fn raw_moment_matches_two_pass() {
+        let x = random_dataset(1, 8, 1001);
+        let a = x2c_mom(&x).unwrap();
+        let b = x2c_mom_naive(&x).unwrap();
+        for i in 0..8 {
+            assert!((a.mean[i] - b.mean[i]).abs() < 1e-10);
+            assert!((a.variance[i] - b.variance[i]).abs() < 1e-8, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        // X row 0: [1,2,3,4] → mean 2.5, var 5/3
+        let x = DenseTable::from_vec(vec![1.0, 2.0, 3.0, 4.0], 1, 4).unwrap();
+        let m = x2c_mom(&x).unwrap();
+        assert!((m.mean[0] - 2.5).abs() < 1e-12);
+        assert!((m.variance[0] - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.sum[0], 10.0);
+        assert_eq!(m.sumsq[0], 30.0);
+    }
+
+    #[test]
+    fn constant_rows_zero_variance() {
+        let x = DenseTable::from_vec(vec![7.0; 3 * 50], 3, 50).unwrap();
+        let m = x2c_mom(&x).unwrap();
+        for i in 0..3 {
+            assert!(m.variance[i].abs() < 1e-9);
+            assert!((m.mean[i] - 7.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_observation() {
+        let x = DenseTable::from_vec(vec![3.0, 4.0], 2, 1).unwrap();
+        let m = x2c_mom(&x).unwrap();
+        assert_eq!(m.variance, vec![0.0, 0.0]);
+        assert_eq!(m.mean, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_rejected() {
+        let x = DenseTable::<f64>::zeros(3, 0);
+        assert!(x2c_mom(&x).is_err());
+    }
+
+    #[test]
+    fn merge_equals_whole() {
+        let x = random_dataset(2, 5, 400);
+        let whole = x2c_mom(&x).unwrap();
+        // Column split: columns 0..150 and 150..400. Row-major p×n layout
+        // means a column split needs per-row copies.
+        let split = 150;
+        let mut left = DenseTable::zeros(5, split);
+        let mut right = DenseTable::zeros(5, 400 - split);
+        for i in 0..5 {
+            left.row_mut(i).copy_from_slice(&x.row(i)[..split]);
+            right.row_mut(i).copy_from_slice(&x.row(i)[split..]);
+        }
+        let mut a = x2c_mom(&left).unwrap();
+        let b = x2c_mom(&right).unwrap();
+        a.merge(&b);
+        assert_eq!(a.n, 400);
+        for i in 0..5 {
+            assert!((a.variance[i] - whole.variance[i]).abs() < 1e-9);
+        }
+    }
+
+    /// Property sweep: random shapes, raw-moment and two-pass agree.
+    #[test]
+    fn property_shapes_agree() {
+        let mut e = Mt19937::new(77);
+        for trial in 0..20u32 {
+            let p = 1 + (e.next_u32() % 16) as usize;
+            let n = 2 + (e.next_u32() % 300) as usize;
+            let x = random_dataset(100 + trial, p, n);
+            let a = x2c_mom(&x).unwrap();
+            let b = x2c_mom_naive(&x).unwrap();
+            for i in 0..p {
+                assert!(
+                    (a.variance[i] - b.variance[i]).abs() < 1e-7 * (1.0 + b.variance[i].abs()),
+                    "p={p} n={n} i={i}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! `xcp` — batched cross-product matrix, §IV-C-2.
+//!
+//! The cross-product matrix `C ∈ ℝ^{p×p}` of a `p×n` dataset is
+//! `Cᵢⱼ = Σₖ (Xᵢₖ − μᵢ)(Xⱼₖ − μⱼ)` (eq. 4). The paper's streaming form
+//! (eq. 6) updates a previously computed `C'` with a new batch `X`
+//! without re-centering old data:
+//!
+//! ```text
+//!   C ← C' + S'·(S')ᵀ/n'  −  S·Sᵀ/n  +  X·Xᵀ
+//! ```
+//!
+//! where `S'` is the raw sum before the batch, `S` the cumulative raw
+//! sum after it. `X·Xᵀ` is a rank-k update delegated to BLAS
+//! ([`crate::blas::syrk`]) — "Leveraging BLAS routines … memory-efficient
+//! computation" — which is exactly the MXU contraction our Pallas `xcp`
+//! kernel performs on the artifact path.
+
+use crate::blas::{ger, syrk};
+use crate::dtype::Float;
+use crate::error::{Error, Result};
+use crate::tables::DenseTable;
+
+/// Streaming cross-product accumulator (the VSL "task object" analogue:
+/// it owns the operation state across `update` calls).
+#[derive(Clone, Debug)]
+pub struct XcpState<T> {
+    p: usize,
+    n: usize,
+    /// Cumulative raw sum `S` (length p).
+    sum: Vec<T>,
+    /// Centered cross-product matrix `C` (p×p, row-major, symmetric).
+    cross: Vec<T>,
+}
+
+impl<T: Float> XcpState<T> {
+    /// Fresh state for `p` coordinates.
+    pub fn new(p: usize) -> Self {
+        Self { p, n: 0, sum: vec![T::ZERO; p], cross: vec![T::ZERO; p * p] }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Observations folded in so far.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Cumulative raw sum `S`.
+    pub fn sum(&self) -> &[T] {
+        &self.sum
+    }
+
+    /// The centered cross-product matrix `C` (valid once `n ≥ 1`).
+    pub fn cross_product(&self) -> &[T] {
+        &self.cross
+    }
+
+    /// Fold a batch `X ∈ ℝ^{p×n_b}` (columns = observations) via eq. 6.
+    pub fn update(&mut self, batch: &DenseTable<T>) -> Result<()> {
+        if batch.rows() != self.p {
+            return Err(Error::Shape(format!(
+                "xcp: batch has {} coordinates, state has {}",
+                batch.rows(),
+                self.p
+            )));
+        }
+        let nb = batch.cols();
+        if nb == 0 {
+            return Ok(());
+        }
+        let n_old = self.n;
+        let n_new = n_old + nb;
+
+        // C += S'·(S')ᵀ/n'   (skipped on the first batch: n' = 0)
+        if n_old > 0 {
+            let inv = T::ONE / T::from_usize(n_old);
+            let s_old = self.sum.clone();
+            ger(self.p, self.p, inv, &s_old, &s_old, &mut self.cross);
+        }
+
+        // C += X·Xᵀ  (batch raw cross-product; BLAS rank-nb update)
+        syrk(self.p, nb, T::ONE, batch.data(), T::ONE, &mut self.cross);
+
+        // S ← S' + row-sums(X)
+        for i in 0..self.p {
+            let mut s = T::ZERO;
+            for &v in batch.row(i) {
+                s += v;
+            }
+            self.sum[i] += s;
+        }
+
+        // C −= S·Sᵀ/n
+        let inv = T::ONE / T::from_usize(n_new);
+        let s_new = self.sum.clone();
+        ger(self.p, self.p, -inv, &s_new, &s_new, &mut self.cross);
+
+        self.n = n_new;
+        Ok(())
+    }
+
+    /// Sample covariance `C/(n−1)`.
+    pub fn covariance(&self) -> Result<DenseTable<T>> {
+        if self.n < 2 {
+            return Err(Error::Numerical("xcp: need ≥ 2 observations for covariance".into()));
+        }
+        let inv = T::ONE / T::from_usize(self.n - 1);
+        let data = self.cross.iter().map(|&v| v * inv).collect();
+        DenseTable::from_vec(data, self.p, self.p)
+    }
+
+    /// Pearson correlation matrix derived from the cross-product.
+    pub fn correlation(&self) -> Result<DenseTable<T>> {
+        let cov = self.covariance()?;
+        let mut out = DenseTable::zeros(self.p, self.p);
+        for i in 0..self.p {
+            for j in 0..self.p {
+                let d = (cov.get(i, i) * cov.get(j, j)).sqrt();
+                let v = if d > T::ZERO { cov.get(i, j) / d } else { T::ZERO };
+                out.set(i, j, v);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One-shot centered cross-product of a full `p×n` dataset (the
+/// non-streaming entry point; also the test oracle for the batched path).
+pub fn xcp_full<T: Float>(x: &DenseTable<T>) -> Result<DenseTable<T>> {
+    let mut st = XcpState::new(x.rows());
+    st.update(x)?;
+    DenseTable::from_vec(st.cross.clone(), x.rows(), x.rows())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Engine, Gaussian, Mt19937};
+
+    fn dataset(seed: u32, p: usize, n: usize) -> DenseTable<f64> {
+        let mut e = Mt19937::new(seed);
+        let mut g = Gaussian::new(-1.0, 2.0);
+        let mut d = vec![0.0; p * n];
+        g.fill(&mut e, &mut d);
+        DenseTable::from_vec(d, p, n).unwrap()
+    }
+
+    /// Direct eq. 4 oracle.
+    fn direct_xcp(x: &DenseTable<f64>) -> Vec<f64> {
+        let p = x.rows();
+        let n = x.cols();
+        let mu: Vec<f64> = (0..p).map(|i| x.row(i).iter().sum::<f64>() / n as f64).collect();
+        let mut c = vec![0.0; p * p];
+        for i in 0..p {
+            for j in 0..p {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += (x.get(i, k) - mu[i]) * (x.get(j, k) - mu[j]);
+                }
+                c[i * p + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn col_split(x: &DenseTable<f64>, cuts: &[usize]) -> Vec<DenseTable<f64>> {
+        let p = x.rows();
+        let mut out = Vec::new();
+        let mut lo = 0;
+        for &hi in cuts.iter().chain(std::iter::once(&x.cols())) {
+            let mut t = DenseTable::zeros(p, hi - lo);
+            for i in 0..p {
+                t.row_mut(i).copy_from_slice(&x.row(i)[lo..hi]);
+            }
+            out.push(t);
+            lo = hi;
+        }
+        out
+    }
+
+    #[test]
+    fn single_batch_matches_direct() {
+        let x = dataset(1, 6, 200);
+        let c = xcp_full(&x).unwrap();
+        let cref = direct_xcp(&x);
+        for (u, v) in c.data().iter().zip(&cref) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn two_batches_match_whole_eq6() {
+        let x = dataset(2, 5, 300);
+        let whole = direct_xcp(&x);
+        let parts = col_split(&x, &[120]);
+        let mut st = XcpState::new(5);
+        for part in &parts {
+            st.update(part).unwrap();
+        }
+        assert_eq!(st.n(), 300);
+        for (u, v) in st.cross_product().iter().zip(&whole) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    /// Property: any random batch partition yields the same C (the eq. 6
+    /// invariant the paper's online mode depends on).
+    #[test]
+    fn property_batching_invariance() {
+        let mut e = Mt19937::new(55);
+        for trial in 0..10u32 {
+            let p = 2 + (e.next_u32() % 6) as usize;
+            let n = 50 + (e.next_u32() % 200) as usize;
+            let x = dataset(300 + trial, p, n);
+            let whole = direct_xcp(&x);
+            // random cut points
+            let mut cuts: Vec<usize> = (0..(e.next_u32() % 4))
+                .map(|_| 1 + (e.next_u32() as usize) % (n - 1))
+                .collect();
+            cuts.sort_unstable();
+            cuts.dedup();
+            let mut st = XcpState::new(p);
+            for part in col_split(&x, &cuts) {
+                st.update(&part).unwrap();
+            }
+            for (u, v) in st.cross_product().iter().zip(&whole) {
+                assert!((u - v).abs() < 1e-7 * (1.0 + v.abs()), "p={p} n={n} cuts={cuts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn covariance_and_correlation() {
+        let x = dataset(3, 4, 500);
+        let mut st = XcpState::new(4);
+        st.update(&x).unwrap();
+        let cov = st.covariance().unwrap();
+        // Diagonal of covariance == per-coordinate variance from x2c_mom.
+        let m = crate::vsl::x2c_mom(&x).unwrap();
+        for i in 0..4 {
+            assert!((cov.get(i, i) - m.variance[i]).abs() < 1e-8);
+        }
+        let corr = st.correlation().unwrap();
+        for i in 0..4 {
+            assert!((corr.get(i, i) - 1.0).abs() < 1e-10);
+            for j in 0..4 {
+                assert!(corr.get(i, j).abs() <= 1.0 + 1e-12);
+                assert!((corr.get(i, j) - corr.get(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let x = dataset(4, 3, 100);
+        let mut a = XcpState::new(3);
+        a.update(&x).unwrap();
+        let before = a.cross_product().to_vec();
+        a.update(&DenseTable::zeros(3, 0)).unwrap();
+        assert_eq!(a.cross_product(), &before[..]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut st = XcpState::<f64>::new(3);
+        assert!(st.update(&DenseTable::zeros(4, 10)).is_err());
+    }
+
+    #[test]
+    fn covariance_needs_two_observations() {
+        let mut st = XcpState::<f64>::new(2);
+        st.update(&DenseTable::zeros(2, 1)).unwrap();
+        assert!(st.covariance().is_err());
+    }
+}

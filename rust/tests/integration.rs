@@ -1,0 +1,182 @@
+//! Cross-module integration tests: full train→infer pipelines through
+//! the public API, backend-ladder equivalence, and the oneDAL-style
+//! online/batch consistency guarantees. These run with or without AOT
+//! artifacts (all rungs below `Artifact`).
+
+use onedal_sve::algorithms::covariance::{Covariance, CovarianceOutput, OnlineCovariance};
+use onedal_sve::algorithms::svm::kernel::SvmKernel;
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::metrics;
+use onedal_sve::prelude::*;
+use onedal_sve::tables::synth;
+
+fn ctx(b: Backend) -> Context {
+    Context::builder().artifact_dir("/nonexistent").backend(b).threads(4).build().unwrap()
+}
+
+/// Fig. 5's grid shape: every algorithm must produce the *same quality*
+/// model on every rung of the ladder — the optimizations are supposed to
+/// change time, not results.
+#[test]
+fn ladder_equivalence_full_pipeline() {
+    let mut e = Mt19937::new(11);
+    let (x, labels) = synth::make_blobs(&mut e, 800, 8, 4, 0.8);
+    let y: Vec<f64> = labels.iter().map(|&c| c as f64).collect();
+    let rungs = [Backend::Naive, Backend::Reference, Backend::Vectorized];
+
+    // KMeans: identical assignments given identical init.
+    let seed_model = KMeans::params().k(4).seed(3).train(&ctx(Backend::Vectorized), &x).unwrap();
+    let base = seed_model.infer(&ctx(rungs[0]), &x).unwrap();
+    for &r in &rungs[1..] {
+        assert_eq!(seed_model.infer(&ctx(r), &x).unwrap(), base, "{r:?}");
+    }
+
+    // KNN: identical predictions.
+    let knn = KnnClassifier::params().k(5).train(&ctx(Backend::Naive), &x, &y).unwrap();
+    let base = knn.infer(&ctx(rungs[0]), &x).unwrap();
+    for &r in &rungs[1..] {
+        assert_eq!(knn.infer(&ctx(r), &x).unwrap(), base, "{r:?}");
+    }
+
+    // DBSCAN: identical labels.
+    let base = Dbscan::params().eps(2.0).min_pts(4).train(&ctx(rungs[0]), &x).unwrap();
+    for &r in &rungs[1..] {
+        let m = Dbscan::params().eps(2.0).min_pts(4).train(&ctx(r), &x).unwrap();
+        assert_eq!(m.labels, base.labels, "{r:?}");
+    }
+}
+
+/// Train on one half, evaluate on the other — realistic generalization
+/// across the classifier suite (the scikit-learn_bench usage pattern).
+#[test]
+fn train_test_split_suite() {
+    let mut e = Mt19937::new(22);
+    let (x, y) = synth::make_classification(&mut e, 2000, 12, 1.8);
+    let xtr = x.slice_rows(0, 1500).unwrap();
+    let xte = x.slice_rows(1500, 2000).unwrap();
+    let (ytr, yte) = (&y[..1500], &y[1500..]);
+    let c = ctx(Backend::Vectorized);
+
+    let svm = Svc::params().kernel(SvmKernel::Linear).train(&c, &xtr, ytr).unwrap();
+    assert!(metrics::accuracy(&svm.infer(&c, &xte).unwrap(), yte) > 0.9);
+
+    let lr = LogisticRegression::params().epochs(25).train(&c, &xtr, ytr).unwrap();
+    assert!(metrics::accuracy(&lr.infer(&c, &xte).unwrap(), yte) > 0.9);
+
+    let rf = RandomForestClassifier::params().n_trees(25).train(&c, &xtr, ytr).unwrap();
+    assert!(metrics::accuracy(&rf.infer(&c, &xte).unwrap(), yte) > 0.85);
+
+    let knn = KnnClassifier::params().k(7).train(&c, &xtr, ytr).unwrap();
+    assert!(metrics::accuracy(&knn.infer(&c, &xte).unwrap(), yte) > 0.85);
+}
+
+/// PCA → KMeans pipeline: dimensionality reduction feeding clustering,
+/// the composition the paper's §II motivates for the VSL substrate.
+#[test]
+fn pca_kmeans_pipeline() {
+    let mut e = Mt19937::new(33);
+    let (x, labels) = synth::make_blobs(&mut e, 900, 20, 3, 0.5);
+    let c = ctx(Backend::Vectorized);
+    let pca = Pca::params().n_components(3).train(&c, &x).unwrap();
+    let z = pca.transform(&c, &x).unwrap();
+    assert_eq!(z.cols(), 3);
+    let km = KMeans::params().k(3).seed(1).train(&c, &z).unwrap();
+    let assign = km.infer(&c, &z).unwrap();
+    // Purity against true blobs stays high after projection.
+    let mut purity = 0usize;
+    for cl in 0..3 {
+        let mut counts = [0usize; 3];
+        for i in 0..900 {
+            if assign[i] == cl {
+                counts[labels[i]] += 1;
+            }
+        }
+        purity += counts.iter().max().unwrap();
+    }
+    assert!(purity as f64 / 900.0 > 0.95);
+}
+
+/// Online covariance (xcp streaming) == batch covariance regardless of
+/// chunking — the eq. 6 invariant surfaced at the public-API level.
+#[test]
+fn online_covariance_chunking_invariance() {
+    let mut e = Mt19937::new(44);
+    let x = synth::make_segmentation(&mut e, 700, 9, 5);
+    let c = ctx(Backend::Vectorized);
+    let batch = Covariance::params().train(&c, &x).unwrap();
+    for chunks in [2usize, 7, 13] {
+        let mut online = OnlineCovariance::new(9);
+        let step = x.rows().div_ceil(chunks);
+        let mut lo = 0;
+        while lo < x.rows() {
+            let hi = (lo + step).min(x.rows());
+            online.partial_fit(&x.slice_rows(lo, hi).unwrap()).unwrap();
+            lo = hi;
+        }
+        let m = online.finalize(CovarianceOutput::Covariance).unwrap();
+        for (a, b) in m.matrix.data().iter().zip(batch.matrix.data()) {
+            assert!((a - b).abs() < 1e-8, "chunks={chunks}");
+        }
+    }
+}
+
+/// Sparse path: csrmv agrees with the dense gemv pipeline on
+/// sparse-stored data.
+#[test]
+fn sparse_dense_consistency() {
+    use onedal_sve::sparse::{csrmv, SparseOp};
+    let mut e = Mt19937::new(55);
+    let a = synth::make_sparse_csr(&mut e, 120, 40, 0.1);
+    let dense = a.to_dense();
+    let x: Vec<f64> = (0..40).map(|i| (i as f64).sin()).collect();
+    let mut y_sparse = vec![0.0; 120];
+    csrmv(SparseOp::NoTranspose, 1.0, &a, &x, 0.0, &mut y_sparse).unwrap();
+    let mut y_dense = vec![0.0; 120];
+    onedal_sve::blas::gemv(false, 120, 40, 1.0, dense.data(), &x, 0.0, &mut y_dense);
+    for (u, v) in y_sparse.iter().zip(&y_dense) {
+        assert!((u - v).abs() < 1e-10);
+    }
+}
+
+/// SVM on a9a-shaped data (Fig. 5's headline workload), exercising both
+/// solvers and both WSS implementations.
+#[test]
+fn svm_a9a_shaped_workload() {
+    let mut e = Mt19937::new(66);
+    let (x, y) = synth::make_classification(&mut e, 600, 50, 1.2);
+    for solver in [SvmSolver::Boser, SvmSolver::Thunder] {
+        for backend in [Backend::Naive, Backend::Vectorized] {
+            let c = ctx(backend);
+            let m = Svc::params()
+                .solver(solver)
+                .kernel(SvmKernel::Rbf { gamma: 0.02 })
+                .train(&c, &x, &y)
+                .unwrap();
+            let acc = metrics::accuracy(&m.infer(&c, &x).unwrap(), &y);
+            assert!(acc > 0.9, "{solver:?}/{backend:?}: {acc}");
+        }
+    }
+}
+
+/// The RNG parallel methods compose with the forest across thread
+/// counts (Fig. 3's reproducibility story end-to-end).
+#[test]
+fn forest_thread_invariance_with_family_streams() {
+    let mut e = Mt19937::new(77);
+    let (x, y) = synth::make_fraud(&mut e, 2000, 8, 100);
+    let preds: Vec<Vec<f64>> = [1usize, 2, 8]
+        .iter()
+        .map(|&t| {
+            let c = Context::builder()
+                .artifact_dir("/nonexistent")
+                .backend(Backend::Vectorized)
+                .threads(t)
+                .build()
+                .unwrap();
+            let m = RandomForestClassifier::params().n_trees(12).seed(5).train(&c, &x, &y).unwrap();
+            m.infer(&c, &x).unwrap()
+        })
+        .collect();
+    assert_eq!(preds[0], preds[1]);
+    assert_eq!(preds[1], preds[2]);
+}

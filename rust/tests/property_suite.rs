@@ -1,0 +1,237 @@
+//! Cross-module property tests (proptest is not vendored offline; the
+//! generators are the crate's own RNG substrate — fitting, since the
+//! substrate under test is the paper's). Each property runs across many
+//! randomized trials with shrink-free but seed-reported failures.
+
+use onedal_sve::blas::{dot, gemm, gemm_naive, gemv, Transpose};
+use onedal_sve::linalg::{cholesky_solve, jacobi_eigen};
+use onedal_sve::prelude::*;
+use onedal_sve::rng::{Distribution, Engine, Gaussian, Mcg31, Uniform, UniformInt};
+use onedal_sve::sparse::{csrmm, csrmv, CsrMatrix, IndexBase, SparseOp};
+use onedal_sve::tables::{synth, DenseTable};
+use onedal_sve::vsl::{x2c_mom, x2c_mom_naive, XcpState};
+
+fn rand_vec(e: &mut dyn Engine, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+    let mut u = Uniform::new(lo, hi);
+    (0..n).map(|_| u.sample(e)).collect()
+}
+
+/// gemm == gemm_naive over random shapes and transposes.
+#[test]
+fn prop_gemm_matches_naive() {
+    let mut e = Mt19937::new(101);
+    let mut dim = UniformInt::new(1, 90);
+    for trial in 0..40 {
+        let (m, n, k) = (
+            dim.sample(&mut e) as usize,
+            dim.sample(&mut e) as usize,
+            dim.sample(&mut e) as usize,
+        );
+        let ta = if e.next_u32() % 2 == 0 { Transpose::No } else { Transpose::Yes };
+        let tb = if e.next_u32() % 2 == 0 { Transpose::No } else { Transpose::Yes };
+        let a = rand_vec(&mut e, m * k, -2.0, 2.0);
+        let b = rand_vec(&mut e, k * n, -2.0, 2.0);
+        let c0 = rand_vec(&mut e, m * n, -1.0, 1.0);
+        let (mut c1, mut c2) = (c0.clone(), c0.clone());
+        gemm(ta, tb, m, n, k, 0.9, &a, &b, 0.3, &mut c1);
+        gemm_naive(ta, tb, m, n, k, 0.9, &a, &b, 0.3, &mut c2);
+        for (u, v) in c1.iter().zip(&c2) {
+            assert!((u - v).abs() < 1e-9, "trial {trial} m={m} n={n} k={k}");
+        }
+    }
+}
+
+/// CSR round trip: dense → CSR → ops agree with dense ops, any base.
+#[test]
+fn prop_csr_ops_match_dense() {
+    let mut e = Mt19937::new(202);
+    for trial in 0..25 {
+        let rows = 5 + (e.next_u32() % 60) as usize;
+        let cols = 5 + (e.next_u32() % 40) as usize;
+        let density = 0.02 + 0.3 * e.next_f64();
+        let mut a = synth::make_sparse_csr(&mut e, rows, cols, density);
+        if trial % 2 == 0 {
+            a.rebase(IndexBase::Zero);
+        }
+        a.validate().unwrap();
+        let ad = a.to_dense();
+        // csrmv both ops
+        for op in [SparseOp::NoTranspose, SparseOp::Transpose] {
+            let (ilen, olen) = if op == SparseOp::NoTranspose { (cols, rows) } else { (rows, cols) };
+            let x = rand_vec(&mut e, ilen, -1.0, 1.0);
+            let mut y1 = vec![0.0; olen];
+            csrmv(op, 1.0, &a, &x, 0.0, &mut y1).unwrap();
+            let mut y2 = vec![0.0; olen];
+            gemv(op == SparseOp::Transpose, rows, cols, 1.0, ad.data(), &x, 0.0, &mut y2);
+            for (u, v) in y1.iter().zip(&y2) {
+                assert!((u - v).abs() < 1e-9, "trial {trial} op={op:?}");
+            }
+        }
+        // csrmm
+        let nrhs = 1 + (e.next_u32() % 6) as usize;
+        let b = rand_vec(&mut e, cols * nrhs, -1.0, 1.0);
+        let mut c1 = vec![0.0; rows * nrhs];
+        csrmm(SparseOp::NoTranspose, 1.0, &a, &b, nrhs, 0.0, &mut c1).unwrap();
+        let mut c2 = vec![0.0; rows * nrhs];
+        gemm(Transpose::No, Transpose::No, rows, nrhs, cols, 1.0, ad.data(), &b, 0.0, &mut c2);
+        for (u, v) in c1.iter().zip(&c2) {
+            assert!((u - v).abs() < 1e-9, "trial {trial}");
+        }
+        // transpose involution
+        assert_eq!(a.transposed().transposed().to_dense(), ad);
+    }
+}
+
+/// Every engine's SkipAhead equals manual advancement, and partitioned
+/// streams reproduce the base sequence.
+#[test]
+fn prop_engine_skipahead_consistency() {
+    let mut meta = Mt19937::new(303);
+    for _ in 0..10 {
+        let seed = meta.next_u64();
+        let skip = meta.next_u64() % 10_000;
+        // MCG59 and MCG31 (closed-form), MT19937 (block replay).
+        macro_rules! check {
+            ($ctor:expr) => {{
+                let mut seq = $ctor;
+                for _ in 0..skip {
+                    seq.next_u32();
+                }
+                let mut jump = $ctor;
+                jump.skip_ahead(skip).unwrap();
+                assert_eq!(seq.next_u32(), jump.next_u32(), "seed={seed} skip={skip}");
+            }};
+        }
+        check!(Mcg59::new(seed));
+        check!(Mcg31::new(seed));
+        check!(Mt19937::new(seed as u32));
+    }
+}
+
+/// Moments: variance is permutation-invariant and shift-covariant.
+#[test]
+fn prop_moments_invariances() {
+    let mut e = Mt19937::new(404);
+    for trial in 0..15 {
+        let p = 1 + (e.next_u32() % 8) as usize;
+        let n = 3 + (e.next_u32() % 200) as usize;
+        let mut g = Gaussian::new(0.0, 3.0);
+        let mut data = vec![0.0f64; p * n];
+        g.fill(&mut e, &mut data);
+        let x = DenseTable::from_vec(data.clone(), p, n).unwrap();
+        let m1 = x2c_mom(&x).unwrap();
+        // permutation of observations (columns) — variance unchanged
+        let mut perm: Vec<usize> = (0..n).collect();
+        onedal_sve::rng::distributions::shuffle(&mut e, &mut perm);
+        let mut xp = DenseTable::zeros(p, n);
+        for i in 0..p {
+            for (jnew, &jold) in perm.iter().enumerate() {
+                xp.set(i, jnew, x.get(i, jold));
+            }
+        }
+        let m2 = x2c_mom(&xp).unwrap();
+        for i in 0..p {
+            assert!((m1.variance[i] - m2.variance[i]).abs() < 1e-8, "trial {trial}");
+        }
+        // shift by constant — variance unchanged, mean shifts
+        let mut xs = x.clone();
+        for v in xs.data_mut() {
+            *v += 5.0;
+        }
+        let m3 = x2c_mom(&xs).unwrap();
+        for i in 0..p {
+            assert!((m1.variance[i] - m3.variance[i]).abs() < 1e-7);
+            assert!((m3.mean[i] - m1.mean[i] - 5.0).abs() < 1e-9);
+        }
+        // agreement with two-pass
+        let m4 = x2c_mom_naive(&x).unwrap();
+        for i in 0..p {
+            assert!((m1.variance[i] - m4.variance[i]).abs() < 1e-7);
+        }
+    }
+}
+
+/// xcp streaming state is associative: ((a∘b)∘c) == (a∘(b∘c)) in effect
+/// because any chunking yields the same cross-product.
+#[test]
+fn prop_xcp_chunking_associativity() {
+    let mut e = Mt19937::new(505);
+    for trial in 0..10 {
+        let p = 2 + (e.next_u32() % 6) as usize;
+        let n = 30 + (e.next_u32() % 150) as usize;
+        let mut g = Gaussian::new(1.0, 2.0);
+        let mut data = vec![0.0f64; p * n];
+        g.fill(&mut e, &mut data);
+        let x = DenseTable::from_vec(data, p, n).unwrap();
+        let mut whole = XcpState::new(p);
+        whole.update(&x).unwrap();
+        // random 3-way chunking over columns
+        let c1 = 1 + (e.next_u32() as usize) % (n - 2);
+        let c2 = c1 + 1 + (e.next_u32() as usize) % (n - c1 - 1);
+        let mut st = XcpState::new(p);
+        for (lo, hi) in [(0, c1), (c1, c2), (c2, n)] {
+            let mut part = DenseTable::zeros(p, hi - lo);
+            for i in 0..p {
+                part.row_mut(i).copy_from_slice(&x.row(i)[lo..hi]);
+            }
+            st.update(&part).unwrap();
+        }
+        for (u, v) in st.cross_product().iter().zip(whole.cross_product()) {
+            assert!((u - v).abs() < 1e-7 * (1.0 + v.abs()), "trial {trial} cuts {c1},{c2}");
+        }
+    }
+}
+
+/// Cholesky: ‖A·x − b‖ small for random SPD systems; Jacobi: A·v = λ·v.
+#[test]
+fn prop_linalg_residuals() {
+    let mut e = Mt19937::new(606);
+    for trial in 0..12 {
+        let n = 2 + (e.next_u32() % 20) as usize;
+        // SPD via MᵀM + nI
+        let mvals = rand_vec(&mut e, n * n, -1.0, 1.0);
+        let mut a = vec![0.0; n * n];
+        gemm(Transpose::Yes, Transpose::No, n, n, n, 1.0, &mvals, &mvals, 0.0, &mut a);
+        for i in 0..n {
+            a[i * n + i] += n as f64;
+        }
+        let b = rand_vec(&mut e, n, -3.0, 3.0);
+        let x = cholesky_solve(&a, n, &b).unwrap();
+        let mut r = b.clone();
+        gemv(false, n, n, -1.0, &a, &x, 1.0, &mut r);
+        let res: f64 = dot(&r, &r).sqrt();
+        assert!(res < 1e-8, "trial {trial} residual {res}");
+
+        // Jacobi eigenpair residuals
+        let (vals, vecs) = jacobi_eigen(&a, n).unwrap();
+        for k in 0..n {
+            let v = &vecs[k * n..(k + 1) * n];
+            let mut av = vec![0.0; n];
+            gemv(false, n, n, 1.0, &a, v, 0.0, &mut av);
+            let mut err = 0.0;
+            for i in 0..n {
+                err += (av[i] - vals[k] * v[i]).powi(2);
+            }
+            assert!(err.sqrt() < 1e-7, "trial {trial} eigpair {k}");
+        }
+    }
+}
+
+/// KMeans inertia never increases across Lloyd iterations (checked via
+/// monotone inertia of increasing max_iter runs with identical seed).
+#[test]
+fn prop_kmeans_inertia_monotone_in_iterations() {
+    let ctx = Context::builder()
+        .artifact_dir("/nonexistent")
+        .backend(onedal_sve::coordinator::Backend::Vectorized)
+        .build()
+        .unwrap();
+    let mut e = Mt19937::new(707);
+    let (x, _) = synth::make_blobs(&mut e, 600, 6, 5, 1.5);
+    let mut last = f64::INFINITY;
+    for iters in [1usize, 2, 4, 8, 16] {
+        let m = KMeans::params().k(5).seed(9).max_iter(iters).tol(0.0).train(&ctx, &x).unwrap();
+        assert!(m.inertia <= last + 1e-6, "inertia rose at iters={iters}");
+        last = m.inertia;
+    }
+}

@@ -1,0 +1,179 @@
+//! Runtime integration: load real AOT artifacts through PJRT and check
+//! the numbers against the native (Rust) implementations — the
+//! end-to-end proof that Layer 1 (Pallas) → Layer 2 (JAX/HLO) → Layer 3
+//! (Rust) compose.
+//!
+//! Every test skips gracefully when `make artifacts` has not run, so
+//! `cargo test` stays green in a fresh checkout.
+
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::runtime::PjRtRuntime;
+use onedal_sve::tables::synth;
+
+fn artifact_ctx() -> Option<Context> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Context::builder().backend(Backend::Artifact).artifact_dir("artifacts").build().ok()
+}
+
+#[test]
+fn kmeans_artifact_matches_native_assignment() {
+    let Some(actx) = artifact_ctx() else { return };
+    let nctx = Context::with_backend(Backend::Vectorized).unwrap();
+    let mut e = Mt19937::new(1);
+    let (x, _) = synth::make_blobs(&mut e, 700, 10, 6, 1.0);
+    let model = KMeans::params().k(6).seed(2).max_iter(10).train(&nctx, &x).unwrap();
+    let native = model.infer(&nctx, &x).unwrap();
+    let via_artifact = model.infer(&actx, &x).unwrap();
+    // f32 artifact vs f64 native: assignments may differ only on exact
+    // distance ties; demand ≥ 99.9 % agreement.
+    let agree = native.iter().zip(&via_artifact).filter(|(a, b)| a == b).count();
+    assert!(agree >= 699, "agree={agree}/700");
+}
+
+#[test]
+fn kmeans_artifact_full_training_converges() {
+    let Some(actx) = artifact_ctx() else { return };
+    let mut e = Mt19937::new(3);
+    let (x, _) = synth::make_blobs(&mut e, 1500, 12, 5, 0.7);
+    let m = KMeans::params().k(5).seed(7).train(&actx, &x).unwrap();
+    assert!(m.iterations >= 2, "converged suspiciously fast");
+    assert!(m.inertia.is_finite() && m.inertia > 0.0);
+    // Same data through the native rung lands at a comparable optimum.
+    let nctx = Context::with_backend(Backend::Vectorized).unwrap();
+    let mn = KMeans::params().k(5).seed(7).train(&nctx, &x).unwrap();
+    let rel = (m.inertia - mn.inertia).abs() / mn.inertia;
+    assert!(rel < 0.05, "inertia rel diff {rel}");
+}
+
+#[test]
+fn logreg_artifact_training_learns() {
+    let Some(actx) = artifact_ctx() else { return };
+    let mut e = Mt19937::new(5);
+    let (x, y) = synth::make_classification(&mut e, 1200, 20, 1.8);
+    let m = LogisticRegression::params().epochs(15).train(&actx, &x, &y).unwrap();
+    let acc = onedal_sve::metrics::accuracy(&m.infer(&actx, &x).unwrap(), &y);
+    assert!(acc > 0.93, "artifact-path training acc={acc}");
+}
+
+#[test]
+fn raw_runtime_x2c_mom_matches_vsl() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        return;
+    }
+    let rt = PjRtRuntime::new("artifacts").unwrap();
+    // p=64, n=1024 artifact; fill valid 64×300, rest zeros.
+    let (p, n_pad, n) = (64usize, 1024usize, 300usize);
+    let mut e = Mt19937::new(9);
+    let mut g = onedal_sve::rng::Gaussian::<f64>::new(1.0, 2.0);
+    use onedal_sve::rng::Distribution;
+    let mut xf = vec![0.0f32; p * n_pad];
+    let mut xd = vec![0.0f64; p * n];
+    for i in 0..p {
+        for j in 0..n {
+            let v = g.sample(&mut e);
+            xf[i * n_pad + j] = v as f32;
+            xd[i * n + j] = v;
+        }
+    }
+    let valid = [n as f32];
+    let outs = rt
+        .execute_f32("x2c_mom__p64_n1024", &[(&xf, &[p, n_pad]), (&valid, &[1])])
+        .unwrap();
+    // outs: sum, sumsq, mean, variance
+    let table = onedal_sve::tables::DenseTable::from_vec(xd, p, n).unwrap();
+    let m = onedal_sve::vsl::x2c_mom(&table).unwrap();
+    for i in 0..p {
+        assert!((f64::from(outs[2][i]) - m.mean[i]).abs() < 1e-3, "mean {i}");
+        let rel = (f64::from(outs[3][i]) - m.variance[i]).abs() / m.variance[i].max(1e-6);
+        assert!(rel < 1e-2, "variance {i}: rel {rel}");
+    }
+}
+
+#[test]
+fn raw_runtime_wss_select_matches_rust_wss() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        return;
+    }
+    use onedal_sve::algorithms::svm::wss;
+    let rt = PjRtRuntime::new("artifacts").unwrap();
+    let n_pad = 1024usize;
+    let n = 613usize;
+    let mut e = Mt19937::new(13);
+    use onedal_sve::rng::{Distribution, Gaussian, Uniform};
+    let mut g = Gaussian::<f64>::standard();
+    let mut u = Uniform::<f64>::new(0.0, 1.0);
+    let mut grad = vec![0.0f64; n];
+    let mut flags = vec![0u8; n];
+    let mut diag = vec![0.0f64; n];
+    let mut ki = vec![0.0f64; n];
+    for i in 0..n {
+        grad[i] = g.sample(&mut e);
+        let mut f = if u.sample(&mut e) < 0.5 { wss::SIGN_POS } else { wss::SIGN_NEG };
+        if u.sample(&mut e) < 0.7 {
+            f |= wss::LOW;
+        }
+        if u.sample(&mut e) < 0.7 {
+            f |= wss::UP;
+        }
+        flags[i] = f;
+        diag[i] = 1.0 + u.sample(&mut e);
+        ki[i] = 0.5 * g.sample(&mut e);
+    }
+    let gmin = -0.3f64;
+    let kii = 1.5f64;
+    let tau = 1e-9f64;
+    // Native result.
+    let want = wss::wss_j_vectorized(&grad, &flags, wss::SIGN_ANY, wss::LOW, gmin, kii, &diag, &ki, 0, n, tau);
+    // Artifact result (padded; padding lanes masked by n_valid).
+    let to32 = |v: &[f64]| -> Vec<f32> {
+        let mut out: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        out.resize(n_pad, 0.0);
+        out
+    };
+    let gradf = to32(&grad);
+    let flagsf: Vec<f32> = {
+        let mut out: Vec<f32> = flags.iter().map(|&f| f as f32).collect();
+        out.resize(n_pad, 0.0);
+        out
+    };
+    let diagf = to32(&diag);
+    let kif = to32(&ki);
+    let scal = [gmin as f32, kii as f32, tau as f32, n as f32];
+    let outs = rt
+        .execute_f32(
+            "wss_select__n1024",
+            &[
+                (&gradf, &[n_pad]),
+                (&flagsf, &[n_pad]),
+                (&diagf, &[n_pad]),
+                (&kif, &[n_pad]),
+                (&scal, &[4]),
+            ],
+        )
+        .unwrap();
+    let got_bj = outs[0][0] as i64;
+    match want.bj {
+        Some(bj) => assert_eq!(got_bj, bj as i64, "selected index differs"),
+        None => assert_eq!(got_bj, -1),
+    }
+    if want.bj.is_some() {
+        let rel = (f64::from(outs[1][0]) - want.obj).abs() / want.obj.abs().max(1e-9);
+        assert!(rel < 1e-3, "obj rel diff {rel}");
+    }
+}
+
+#[test]
+fn artifact_compile_cache_reused() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        return;
+    }
+    let rt = PjRtRuntime::new("artifacts").unwrap();
+    rt.warmup("x2c_mom__p64_n1024").unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+    rt.warmup("x2c_mom__p64_n1024").unwrap();
+    assert_eq!(rt.compiled_count(), 1, "second warmup must hit the cache");
+}
