@@ -1,0 +1,158 @@
+//! Threading ablation — the multicore half of the paper's OpenBLAS
+//! story (§IV, Fig. 6): GEMM, SYRK and the k-means assignment pass swept
+//! over 1/2/4/all worker threads to document scaling of the packed-panel
+//! engine. Acceptance bar: ≥ 2× GEMM speedup at 4 threads vs 1 on
+//! 512³ f64.
+//!
+//! Besides the usual stdout table, the run is recorded as
+//! `BENCH_blas.json` (written to the repo root when run from `rust/`,
+//! else the current directory).
+
+use onedal_sve::blas::{gemm_threads, syrk_threads, Transpose};
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::profiling::{BenchResult, Bencher};
+use onedal_sve::rng::{Distribution, Uniform};
+use onedal_sve::tables::synth;
+use std::io::Write as _;
+
+const DIM: usize = 512;
+
+fn rand_mat(e: &mut Mt19937, n: usize) -> Vec<f64> {
+    let mut d = Uniform::new(-1.0, 1.0);
+    (0..n).map(|_| d.sample(e)).collect()
+}
+
+fn thread_sweep() -> Vec<usize> {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut sweep = vec![1usize, 2, 4, avail];
+    sweep.sort_unstable();
+    sweep.dedup();
+    sweep.retain(|&t| t <= avail.max(4));
+    sweep
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Hand-rolled JSON dump (no serde in the offline image): flat result
+/// rows plus per-case speedup-vs-1-thread entries.
+fn write_json(results: &[BenchResult]) -> std::io::Result<String> {
+    let path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_blas.json"
+    } else {
+        "BENCH_blas.json"
+    };
+    let mut rows = Vec::new();
+    for r in results {
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"median_ms\": {:.4}, \"mean_ms\": {:.4}, \"samples\": {}}}",
+            json_escape(&r.name),
+            r.median.as_secs_f64() * 1e3,
+            r.mean.as_secs_f64() * 1e3,
+            r.samples
+        ));
+    }
+    let mut speedups = Vec::new();
+    for r in results {
+        let Some(slash) = r.name.rfind('/') else { continue };
+        let (case, variant) = (&r.name[..slash], &r.name[slash + 1..]);
+        if variant == "t1" {
+            continue;
+        }
+        let base = format!("{case}/t1");
+        if let Some(b) = results.iter().find(|b| b.name == base) {
+            speedups.push(format!(
+                "    {{\"case\": \"{}\", \"variant\": \"{}\", \"speedup_vs_t1\": {:.3}}}",
+                json_escape(case),
+                json_escape(variant),
+                b.median.as_secs_f64() / r.median.as_secs_f64()
+            ));
+        }
+    }
+    let body = format!(
+        "{{\n  \"bench\": \"ablate_threads\",\n  \"regenerate\": \"cd rust && cargo bench --bench ablate_threads\",\n  \"fixtures\": {{\"gemm\": \"{DIM}x{DIM}x{DIM} f64\", \"syrk\": \"{DIM}x{DIM} f64\", \"kmeans_assign\": \"20000x16, k=16\"}},\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+        speedups.join(",\n"),
+    );
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(body.as_bytes())?;
+    Ok(path.to_string())
+}
+
+fn main() {
+    let sweep = thread_sweep();
+    println!("threads sweep: {sweep:?}\n");
+    let mut e = Mt19937::new(14);
+    let mut b = Bencher::new(300, 7);
+
+    // GEMM 512^3 f64 — the acceptance case.
+    let a = rand_mat(&mut e, DIM * DIM);
+    let bm = rand_mat(&mut e, DIM * DIM);
+    let mut c = vec![0.0f64; DIM * DIM];
+    for &t in &sweep {
+        b.bench(&format!("blas/gemm-{DIM}/t{t}"), || {
+            gemm_threads(
+                Transpose::No,
+                Transpose::No,
+                DIM,
+                DIM,
+                DIM,
+                1.0,
+                &a,
+                &bm,
+                0.0,
+                &mut c,
+                t,
+            );
+            std::hint::black_box(c[0]);
+        });
+    }
+
+    // SYRK m=k=512 — the covariance/linreg/PCA workhorse.
+    let mut cs = vec![0.0f64; DIM * DIM];
+    for &t in &sweep {
+        b.bench(&format!("blas/syrk-{DIM}/t{t}"), || {
+            syrk_threads(DIM, DIM, 1.0, &a, 0.0, &mut cs, t);
+            std::hint::black_box(cs[0]);
+        });
+    }
+
+    // K-means assignment pass (the gemm-expansion rung) through the
+    // Context::threads() wiring.
+    let (x, _) = synth::make_blobs(&mut e, 20_000, 16, 16, 1.0);
+    let train_ctx = Context::builder()
+        .artifact_dir("/nonexistent")
+        .backend(Backend::Vectorized)
+        .build()
+        .unwrap();
+    let model = KMeans::params().k(16).seed(3).max_iter(10).train(&train_ctx, &x).unwrap();
+    for &t in &sweep {
+        let ctx = Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Vectorized)
+            .threads(t)
+            .build()
+            .unwrap();
+        b.bench(&format!("kmeans/assign-20k/t{t}"), || {
+            std::hint::black_box(model.infer(&ctx, &x).unwrap());
+        });
+    }
+
+    b.speedup_table("thread scaling", "t1");
+    match write_json(b.results()) {
+        Ok(path) => println!("\nrecorded: {path}"),
+        Err(err) => eprintln!("\nfailed to write BENCH_blas.json: {err}"),
+    }
+
+    // Make the acceptance bar visible in the output.
+    let med = |name: &str| {
+        b.results().iter().find(|r| r.name == name).map(|r| r.median.as_secs_f64())
+    };
+    let (t1, t4) = (med(&format!("blas/gemm-{DIM}/t1")), med(&format!("blas/gemm-{DIM}/t4")));
+    if let (Some(t1), Some(t4)) = (t1, t4) {
+        let s = t1 / t4;
+        println!("gemm-{DIM} 4-thread speedup: {s:.2}x (target ≥ 2x)");
+    }
+}

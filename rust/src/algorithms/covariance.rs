@@ -45,12 +45,12 @@ impl CovarianceParams {
 
     /// Batch mode over an `n×p` observations-in-rows table (the oneDAL
     /// convention; internally transposed to the VSL p×n layout).
-    pub fn train(&self, _ctx: &Context, x: &DenseTable<f64>) -> Result<CovarianceModel> {
+    pub fn train(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<CovarianceModel> {
         if x.rows() < 2 {
             return Err(Error::Param("covariance: need ≥ 2 observations".into()));
         }
         let mut st = OnlineCovariance::new(x.cols());
-        st.partial_fit(x)?;
+        st.partial_fit_threads(x, ctx.threads())?;
         st.finalize(self.output)
     }
 }
@@ -66,11 +66,18 @@ impl OnlineCovariance {
         Self { state: XcpState::new(p) }
     }
 
-    /// Fold a batch of observations (rows).
+    /// Fold a batch of observations (rows) on the process-default
+    /// worker count.
     pub fn partial_fit(&mut self, x: &DenseTable<f64>) -> Result<()> {
+        self.partial_fit_threads(x, crate::parallel::default_threads())
+    }
+
+    /// [`OnlineCovariance::partial_fit`] with an explicit worker count
+    /// (the batch entry point routes `Context::threads()` here).
+    pub fn partial_fit_threads(&mut self, x: &DenseTable<f64>, threads: usize) -> Result<()> {
         // VSL layout is p×n (coordinates × observations).
         let xt = x.transposed();
-        self.state.update(&xt)
+        self.state.update_threads(&xt, threads)
     }
 
     pub fn n(&self) -> usize {

@@ -12,9 +12,10 @@
 //! * artifact   — the `kmeans_assign` Pallas kernel via PJRT, tiled by
 //!                the coordinator's fixed-shape batcher.
 
-use crate::blas::{gemm, sqdist, Transpose};
+use crate::blas::{gemm_threads, sqdist, Transpose};
 use crate::coordinator::{batch, Backend, Context};
 use crate::error::{Error, Result};
+use crate::parallel;
 use crate::rng::{distributions::sample_indices, Engine, Mt19937, Uniform};
 use crate::rng::Distribution;
 use crate::tables::DenseTable;
@@ -202,8 +203,10 @@ fn assign_step(
     }
     match ctx.dispatch("kmeans_assign", &[x.rows(), d, centroids.rows()]) {
         Backend::Naive => Ok(assign_naive(x, centroids, assign)),
-        Backend::Reference => Ok(assign_gemm(x, centroids, assign, false)),
-        Backend::Vectorized | Backend::Auto => Ok(assign_gemm(x, centroids, assign, true)),
+        Backend::Reference => Ok(assign_gemm(x, centroids, assign, false, ctx.threads())),
+        Backend::Vectorized | Backend::Auto => {
+            Ok(assign_gemm(x, centroids, assign, true, ctx.threads()))
+        }
         Backend::Artifact => assign_artifact(ctx, x, centroids, assign),
     }
 }
@@ -231,45 +234,85 @@ fn assign_naive(x: &DenseTable<f64>, c: &DenseTable<f64>, assign: &mut [usize]) 
 /// Reference / vectorized rungs: expand ‖x−c‖² and use gemm for X·Cᵀ.
 /// `fused` additionally computes the argmin in the same pass over the
 /// distance tile (the vectorized rung's branch-free min-reduction).
-fn assign_gemm(x: &DenseTable<f64>, c: &DenseTable<f64>, assign: &mut [usize], fused: bool) -> f64 {
+///
+/// Rows are independent, so the tile loop fans out over the context's
+/// worker count: each scoped worker owns a contiguous TILE-aligned row
+/// range of `assign` and carries its own cross-term scratch. Workers
+/// return *per-tile* inertia sums; because cuts land only on TILE
+/// boundaries, the flattened tile order — and therefore the final
+/// reduction — is identical at any worker count, so assignments *and*
+/// inertia are bit-stable across `Context::threads()` settings.
+fn assign_gemm(
+    x: &DenseTable<f64>,
+    c: &DenseTable<f64>,
+    assign: &mut [usize],
+    fused: bool,
+    threads: usize,
+) -> f64 {
     let n = x.rows();
     let d = x.cols();
     let k = c.rows();
     let cnorm: Vec<f64> = (0..k).map(|j| crate::blas::dot(c.row(j), c.row(j))).collect();
-    let mut inertia = 0.0;
     // Tile rows to keep the cross-term block in cache.
     const TILE: usize = 256;
-    let mut cross = vec![0.0f64; TILE * k];
-    for (start, len) in batch::tiles(n, TILE) {
-        let xblock = &x.data()[start * d..(start + len) * d];
-        gemm(Transpose::No, Transpose::Yes, len, k, d, 1.0, xblock, c.data(), 0.0, &mut cross[..len * k]);
-        for i in 0..len {
-            let xi = &x.data()[(start + i) * d..(start + i + 1) * d];
-            let xnorm = crate::blas::dot(xi, xi);
-            let row = &cross[i * k..(i + 1) * k];
-            let (mut best, mut bestv) = (0usize, f64::INFINITY);
-            if fused {
-                // Branch-free two-accumulator min scan (vectorizable).
-                for (j, &xc) in row.iter().enumerate() {
-                    let dist = xnorm - 2.0 * xc + cnorm[j];
-                    let better = dist < bestv;
-                    bestv = if better { dist } else { bestv };
-                    best = if better { j } else { best };
-                }
-            } else {
-                for (j, &xc) in row.iter().enumerate() {
-                    let dist = xnorm - 2.0 * xc + cnorm[j];
-                    if dist < bestv {
-                        bestv = dist;
-                        best = j;
+    let work = n.saturating_mul(d).saturating_mul(k);
+    let workers = parallel::effective_threads(threads, work, 1 << 16);
+    let bounds = parallel::aligned_bounds(n, workers, TILE);
+    let cnorm = &cnorm;
+    let partials = parallel::scope_rows(assign, 1, &bounds, |r0, r1, ablock| {
+        let mut tile_sums: Vec<f64> = Vec::with_capacity((r1 - r0).div_ceil(TILE));
+        let mut cross = vec![0.0f64; TILE * k];
+        for (start, len) in batch::tiles(r1 - r0, TILE) {
+            let start = r0 + start;
+            let mut inertia = 0.0f64;
+            let xblock = &x.data()[start * d..(start + len) * d];
+            // Inner gemm stays single-threaded: the fan-out already
+            // happened one level up.
+            gemm_threads(
+                Transpose::No,
+                Transpose::Yes,
+                len,
+                k,
+                d,
+                1.0,
+                xblock,
+                c.data(),
+                0.0,
+                &mut cross[..len * k],
+                1,
+            );
+            for i in 0..len {
+                let xi = &x.data()[(start + i) * d..(start + i + 1) * d];
+                let xnorm = crate::blas::dot(xi, xi);
+                let row = &cross[i * k..(i + 1) * k];
+                let (mut best, mut bestv) = (0usize, f64::INFINITY);
+                if fused {
+                    // Branch-free two-accumulator min scan (vectorizable).
+                    for (j, &xc) in row.iter().enumerate() {
+                        let dist = xnorm - 2.0 * xc + cnorm[j];
+                        let better = dist < bestv;
+                        bestv = if better { dist } else { bestv };
+                        best = if better { j } else { best };
+                    }
+                } else {
+                    for (j, &xc) in row.iter().enumerate() {
+                        let dist = xnorm - 2.0 * xc + cnorm[j];
+                        if dist < bestv {
+                            bestv = dist;
+                            best = j;
+                        }
                     }
                 }
+                ablock[start + i - r0] = best;
+                inertia += bestv.max(0.0);
             }
-            assign[start + i] = best;
-            inertia += bestv.max(0.0);
+            tile_sums.push(inertia);
         }
-    }
-    inertia
+        tile_sums
+    });
+    // Flattening worker results recovers the global tile order; summing
+    // sequentially keeps the reduction identical at any worker count.
+    partials.into_iter().flatten().sum()
 }
 
 /// Artifact rung: run the Pallas `kmeans_assign` kernel via PJRT on
@@ -294,7 +337,9 @@ fn assign_artifact(
     .or_else(|| registry.best_fit("kmeans_assign", &[n.min(1024), d, k]))
     .ok_or_else(|| Error::MissingArtifact("kmeans_assign".into()))?
     .clone();
-    let rt = ctx.runtime().ok_or_else(|| Error::Runtime("artifact backend without runtime".into()))?;
+    let rt = ctx
+        .runtime()
+        .ok_or_else(|| Error::Runtime("artifact backend without runtime".into()))?;
     let (tn, td, tk) = (art.dims[0], art.dims[1], art.dims[2]);
     // Pad centroids once per call. Padding centroids sit at +inf distance
     // via the kernel's k-mask, so they are never selected.
@@ -367,6 +412,22 @@ mod tests {
         let a3 = model.infer(&vect, &x).unwrap();
         assert_eq!(a1, a2);
         assert_eq!(a2, a3);
+    }
+
+    #[test]
+    fn assignment_and_inertia_bit_stable_across_threads() {
+        let mut e = Mt19937::new(8);
+        let (x, _) = make_blobs(&mut e, 6_000, 8, 6, 1.0);
+        let ctxv = ctx(Backend::Vectorized);
+        let model = KMeans::params().k(6).seed(2).max_iter(5).train(&ctxv, &x).unwrap();
+        let mut a1 = vec![0usize; 6_000];
+        let i1 = assign_gemm(&x, &model.centroids, &mut a1, true, 1);
+        for threads in 2..=4 {
+            let mut a = vec![0usize; 6_000];
+            let it = assign_gemm(&x, &model.centroids, &mut a, true, threads);
+            assert_eq!(a, a1, "threads={threads}");
+            assert_eq!(it.to_bits(), i1.to_bits(), "threads={threads}");
+        }
     }
 
     #[test]

@@ -106,7 +106,8 @@ impl KnnModel {
         let mut out = vec![Vec::new(); m];
         for (start, len) in batch::tiles(m, TILE) {
             let qblock = &q.data()[start * d..(start + len) * d];
-            gemm(Transpose::No, Transpose::Yes, len, n, d, 1.0, qblock, self.x.data(), 0.0, &mut cross[..len * n]);
+            let ctile = &mut cross[..len * n];
+            gemm(Transpose::No, Transpose::Yes, len, n, d, 1.0, qblock, self.x.data(), 0.0, ctile);
             for i in 0..len {
                 let qi = &q.data()[(start + i) * d..(start + i + 1) * d];
                 let qn = dot(qi, qi);

@@ -6,7 +6,7 @@
 //! `XᵀX` is computed with the VSL `xcp` machinery's BLAS path (syrk on
 //! the transposed layout), the solve with the Cholesky substrate.
 
-use crate::blas::{gemv, syrk};
+use crate::blas::{gemv, syrk_threads};
 use crate::coordinator::{Backend, Context};
 use crate::error::{Error, Result};
 use crate::linalg::cholesky_solve;
@@ -97,9 +97,10 @@ impl LinRegParams {
                 }
             }
             _ => {
-                // XᵀX = syrk over the transposed (p×n) layout.
+                // XᵀX = parallel packed syrk over the transposed (p×n)
+                // layout, on the context's worker count.
                 let xt = xc.transposed();
-                syrk(p, n, 1.0, xt.data(), 0.0, &mut xtx);
+                syrk_threads(p, n, 1.0, xt.data(), 0.0, &mut xtx, ctx.threads());
             }
         }
         for i in 0..p {

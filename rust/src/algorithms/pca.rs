@@ -43,7 +43,7 @@ impl PcaParams {
     }
 
     /// Train on an `n×p` observations-in-rows table.
-    pub fn train(&self, _ctx: &Context, x: &DenseTable<f64>) -> Result<PcaModel> {
+    pub fn train(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<PcaModel> {
         let p = x.cols();
         if self.n_components == 0 || self.n_components > p {
             return Err(Error::Param(format!(
@@ -55,7 +55,7 @@ impl PcaParams {
             return Err(Error::Param("pca: need ≥ 2 observations".into()));
         }
         let mut st = XcpState::new(p);
-        st.update(&x.transposed())?;
+        st.update_threads(&x.transposed(), ctx.threads())?;
         let mat = if self.correlation { st.correlation()? } else { st.covariance()? };
         let (vals, vecs) = jacobi_eigen(mat.data(), p)?;
         let mut comp = DenseTable::zeros(self.n_components, p);

@@ -24,25 +24,51 @@ impl SvmKernel {
     }
 
     /// Full gram row `K(i, ·)` against every training row, written into
-    /// `out` (length n). Uses gemv for the linear/RBF cross terms.
+    /// `out` (length n), on the process-default worker count.
     pub fn gram_row(&self, x: &DenseTable<f64>, i: usize, norms: &[f64], out: &mut [f64]) {
+        self.gram_row_threads(x, i, norms, out, crate::parallel::default_threads());
+    }
+
+    /// [`SvmKernel::gram_row`] with an explicit worker count: the n
+    /// output entries are independent dot products against row i, so
+    /// workers each own a contiguous slice of `out` and run the gemv
+    /// cross term (plus the RBF transform) on their row block. Every
+    /// entry is computed whole by one worker — bit-identical at any
+    /// worker count, which the solver's scalar-vs-vectorized fidelity
+    /// tests rely on.
+    pub fn gram_row_threads(
+        &self,
+        x: &DenseTable<f64>,
+        i: usize,
+        norms: &[f64],
+        out: &mut [f64],
+        threads: usize,
+    ) {
         let n = x.rows();
         let d = x.cols();
         debug_assert_eq!(out.len(), n);
-        match *self {
-            SvmKernel::Linear => {
-                gemv(false, n, d, 1.0, x.data(), x.row(i), 0.0, out);
-            }
-            SvmKernel::Rbf { gamma } => {
-                // ‖xi−xj‖² = ‖xi‖² + ‖xj‖² − 2 xi·xj, cross term via gemv.
-                gemv(false, n, d, 1.0, x.data(), x.row(i), 0.0, out);
-                let ni = norms[i];
-                for (j, v) in out.iter_mut().enumerate() {
-                    let d2 = (ni + norms[j] - 2.0 * *v).max(0.0);
-                    *v = (-gamma * d2).exp();
+        let workers = crate::parallel::effective_threads(threads, n.saturating_mul(d), 1 << 14);
+        let bounds = crate::parallel::even_bounds(n, workers);
+        let xi = x.row(i);
+        let kernel = *self;
+        crate::parallel::scope_rows(out, 1, &bounds, |r0, r1, block| {
+            let rows = r1 - r0;
+            let ablock = &x.data()[r0 * d..r1 * d];
+            match kernel {
+                SvmKernel::Linear => {
+                    gemv(false, rows, d, 1.0, ablock, xi, 0.0, block);
+                }
+                SvmKernel::Rbf { gamma } => {
+                    // ‖xi−xj‖² = ‖xi‖² + ‖xj‖² − 2 xi·xj, cross term via gemv.
+                    gemv(false, rows, d, 1.0, ablock, xi, 0.0, block);
+                    let ni = norms[i];
+                    for (j, v) in block.iter_mut().enumerate() {
+                        let d2 = (ni + norms[r0 + j] - 2.0 * *v).max(0.0);
+                        *v = (-gamma * d2).exp();
+                    }
                 }
             }
-        }
+        });
     }
 
     /// Diagonal `K(i, i)` values for all rows.
@@ -139,6 +165,23 @@ mod tests {
             for j in 0..40 {
                 let expect = k.eval(x.row(7), x.row(j));
                 assert!((row[j] - expect).abs() < 1e-10, "{k:?} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_row_thread_counts_bit_identical() {
+        let x = dataset(97, 5);
+        let norms: Vec<f64> = (0..97).map(|i| dot(x.row(i), x.row(i))).collect();
+        for k in [SvmKernel::Linear, SvmKernel::Rbf { gamma: 0.4 }] {
+            let mut base = vec![0.0; 97];
+            k.gram_row_threads(&x, 13, &norms, &mut base, 1);
+            for threads in 2..=4 {
+                let mut row = vec![0.0; 97];
+                k.gram_row_threads(&x, 13, &norms, &mut row, threads);
+                for (u, v) in base.iter().zip(&row) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{k:?} threads={threads}");
+                }
             }
         }
     }

@@ -177,9 +177,12 @@ impl SvmParams {
         let mut state = SolverState::new(y, self.c);
         let norms: Vec<f64> = (0..n).map(|i| dot(x.row(i), x.row(i))).collect();
         let diag = self.kernel.diag(x, &norms);
+        let threads = ctx.threads();
         let iterations = match self.solver {
-            SvmSolver::Boser => self.solve_boser(x, &norms, &diag, &mut state, vectorized),
-            SvmSolver::Thunder => self.solve_thunder(x, &norms, &diag, &mut state, vectorized),
+            SvmSolver::Boser => self.solve_boser(x, &norms, &diag, &mut state, vectorized, threads),
+            SvmSolver::Thunder => {
+                self.solve_thunder(x, &norms, &diag, &mut state, vectorized, threads)
+            }
         };
         // Bias: midpoint of the optimality interval.
         let up_min = state
@@ -218,10 +221,12 @@ impl SvmParams {
         j_end: usize,
     ) -> WssJResult {
         let f = if vectorized { wss::wss_j_vectorized } else { wss::wss_j_scalar };
-        f(grad, flags, SIGN_ANY, LOW, gmin, kii, diag, ki_signed, j_start, j_end, f64::EPSILON.sqrt() * 1e-3)
+        let tau = f64::EPSILON.sqrt() * 1e-3;
+        f(grad, flags, SIGN_ANY, LOW, gmin, kii, diag, ki_signed, j_start, j_end, tau)
     }
 
     /// Boser method: full WSS + two fresh kernel rows per iteration.
+    #[allow(clippy::too_many_arguments)]
     fn solve_boser(
         &self,
         x: &DenseTable<f64>,
@@ -229,6 +234,7 @@ impl SvmParams {
         diag: &[f64],
         state: &mut SolverState,
         vectorized: bool,
+        threads: usize,
     ) -> usize {
         let n = x.rows();
         let mut cache = RowCache::new(self.cache_rows);
@@ -237,11 +243,12 @@ impl SvmParams {
             iter += 1;
             let Some((bi, gmin)) = wss::wss_i(&state.grad, &state.flags) else { break };
             let kernel = &self.kernel;
-            let row_i = cache.get(bi, n, |buf| kernel.gram_row(x, bi, norms, buf));
+            let row_i = cache.get(bi, n, |buf| kernel.gram_row_threads(x, bi, norms, buf, threads));
             // The curvature along the feasible direction (αᵢ += yᵢτ,
             // αⱼ −= yⱼτ) is the *plain* Kii + Kjj − 2·Kij — exactly the
             // `KiBlock` form of the paper's listing.
-            let res = Self::wss_j(vectorized, &state.grad, &state.flags, gmin, diag[bi], diag, &row_i, 0, n);
+            let (grad, flags) = (&state.grad, &state.flags);
+            let res = Self::wss_j(vectorized, grad, flags, gmin, diag[bi], diag, &row_i, 0, n);
             // Stopping: duality gap Gmax + GMax2 = −GMin + GMax2.
             if -gmin + res.gmax2 < self.eps || res.bj.is_none() {
                 break;
@@ -251,7 +258,7 @@ impl SvmParams {
             if tau <= 0.0 {
                 break; // numerically stuck
             }
-            let row_j = cache.get(bj, n, |buf| kernel.gram_row(x, bj, norms, buf));
+            let row_j = cache.get(bj, n, |buf| kernel.gram_row_threads(x, bj, norms, buf, threads));
             // grad[s] += τ·(K_si − K_sj) — the label-free update.
             for ((g, &ki), &kj) in state.grad.iter_mut().zip(row_i.iter()).zip(row_j.iter()) {
                 *g += tau * (ki - kj);
@@ -261,6 +268,7 @@ impl SvmParams {
     }
 
     /// Thunder method: block working sets on cached rows.
+    #[allow(clippy::too_many_arguments)]
     fn solve_thunder(
         &self,
         x: &DenseTable<f64>,
@@ -268,6 +276,7 @@ impl SvmParams {
         diag: &[f64],
         state: &mut SolverState,
         vectorized: bool,
+        threads: usize,
     ) -> usize {
         let n = x.rows();
         let q = self.ws_size.min(n);
@@ -319,7 +328,7 @@ impl SvmParams {
             let kernel = &self.kernel;
             let rows: Vec<std::sync::Arc<Vec<f64>>> = ws
                 .iter()
-                .map(|&t| cache.get(t, n, |buf| kernel.gram_row(x, t, norms, buf)))
+                .map(|&t| cache.get(t, n, |buf| kernel.gram_row_threads(x, t, norms, buf, threads)))
                 .collect();
             // Sub-views for the q×q inner problem.
             let sub_diag: Vec<f64> = ws.iter().map(|&t| diag[t]).collect();
@@ -383,19 +392,29 @@ impl SvmParams {
 }
 
 impl SvcModel {
-    /// Decision values `f(x) = Σ (α·y)ₛ K(x, sᵥ) + b`.
-    pub fn decision_function(&self, _ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<f64>> {
+    /// Decision values `f(x) = Σ (α·y)ₛ K(x, sᵥ) + b`. Query rows are
+    /// independent, so they fan out over the context's worker count
+    /// (each row is scored whole by one worker — bit-stable at any
+    /// count).
+    pub fn decision_function(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<f64>> {
         if x.cols() != self.support_vectors.cols() {
             return Err(Error::Shape("svm: dim mismatch".into()));
         }
-        let mut out = Vec::with_capacity(x.rows());
-        for i in 0..x.rows() {
-            let mut f = self.bias;
-            for (s, &coef) in self.dual_coef.iter().enumerate() {
-                f += coef * self.kernel.eval(x.row(i), self.support_vectors.row(s));
+        let n = x.rows();
+        let work = n
+            .saturating_mul(self.dual_coef.len())
+            .saturating_mul(self.support_vectors.cols().max(1));
+        let workers = crate::parallel::effective_threads(ctx.threads(), work, 1 << 14);
+        let bounds = crate::parallel::even_bounds(n, workers);
+        let mut out = vec![self.bias; n];
+        crate::parallel::scope_rows(&mut out, 1, &bounds, |r0, _r1, block| {
+            for (r, f) in block.iter_mut().enumerate() {
+                let row = x.row(r0 + r);
+                for (s, &coef) in self.dual_coef.iter().enumerate() {
+                    *f += coef * self.kernel.eval(row, self.support_vectors.row(s));
+                }
             }
-            out.push(f);
-        }
+        });
         Ok(out)
     }
 

@@ -1,11 +1,26 @@
 //! Level-3 matrix–matrix kernels (row-major).
 //!
 //! `gemm_naive` is the deliberately unoptimized baseline (the "stock
-//! scikit-learn on ARM" rung). `gemm` is the cache-blocked, register-tiled
-//! kernel playing the OpenBLAS role: i-k-j loop order for unit-stride
-//! inner loops, 64×64×64 L1 blocks, 4-row micro-tiles.
+//! scikit-learn on ARM" rung). `gemm`/`syrk` are the packed-panel,
+//! register-tiled, multithreaded engine playing the OpenBLAS role the
+//! paper swaps in for MKL:
+//!
+//! 1. **Pack once** — `op(A)` is packed into `MR`-row micro-panels and
+//!    `op(B)` into `NR`-column micro-panels (transpose is absorbed by
+//!    the packing, so the hot loop never strides), exactly the
+//!    "copy into a vector-friendly layout" step OpenBLAS performs on ARM
+//!    and the packed-layout codegen literature formalizes.
+//! 2. **Register-tiled microkernel** — an `MR×NR` block of accumulators
+//!    marches down the shared `k` dimension with `mul_add`, branch-free:
+//!    the zero-skip branch of the old kernel is gone, so NaN/Inf in
+//!    either operand propagates exactly like the naive oracle.
+//! 3. **Row-panel threading** — C's row panels are handed to scoped
+//!    workers by [`crate::parallel`]; cuts land only on `MR` boundaries,
+//!    so every tile is computed whole by one worker and the result is
+//!    bit-identical at any worker count.
 
 use crate::dtype::Float;
+use crate::parallel;
 
 /// Operation applied to an operand, mirroring the `op(A)` of the paper's
 /// sparse-routine definitions (§IV-B): identity or transpose.
@@ -16,7 +31,7 @@ pub enum Transpose {
 }
 
 /// Textbook i-j-k triple loop, kept as the naive-backend baseline and as
-/// the oracle for the blocked kernel's tests.
+/// the oracle for the packed kernel's tests.
 pub fn gemm_naive<T: Float>(
     ta: Transpose,
     tb: Transpose,
@@ -49,14 +64,166 @@ pub fn gemm_naive<T: Float>(
     }
 }
 
-const BLOCK: usize = 64;
+/// Micro-panel height: rows of `op(A)` / C per register tile.
+pub(crate) const MR: usize = 4;
+/// Micro-panel width: columns of `op(B)` / C per register tile.
+pub(crate) const NR: usize = 8;
+/// Minimum multiply-adds per worker before fan-out pays for itself.
+const PAR_MIN_FLOP: usize = 1 << 16;
 
-/// Blocked `C ← α·op(A)·op(B) + β·C` for row-major operands.
+/// β-scale C once up front (shared by gemm/syrk).
+fn scale_c<T: Float>(beta: T, c: &mut [T]) {
+    if beta == T::ZERO {
+        c.fill(T::ZERO);
+    } else if beta != T::ONE {
+        for v in c.iter_mut() {
+            *v *= beta;
+        }
+    }
+}
+
+/// Pack `op(A)` (`m×k`) into `⌈m/MR⌉` micro-panels of `k×MR` scalars:
+/// panel `ip` holds rows `ip·MR ..` in k-major order (`dst[l·MR + ii]`),
+/// zero-padded in the row direction so the microkernel never branches
+/// on the fringe.
+fn pack_a<T: Float>(ta: Transpose, m: usize, k: usize, a: &[T]) -> Vec<T> {
+    let panels = m.div_ceil(MR);
+    let mut out = vec![T::ZERO; panels * k * MR];
+    for ip in 0..panels {
+        let i0 = ip * MR;
+        let mr = MR.min(m - i0);
+        let dst = &mut out[ip * k * MR..(ip + 1) * k * MR];
+        match ta {
+            Transpose::No => {
+                for ii in 0..mr {
+                    let row = &a[(i0 + ii) * k..(i0 + ii + 1) * k];
+                    for (l, &v) in row.iter().enumerate() {
+                        dst[l * MR + ii] = v;
+                    }
+                }
+            }
+            Transpose::Yes => {
+                // A stored k×m: element (i, l) lives at a[l·m + i].
+                for l in 0..k {
+                    let src = &a[l * m + i0..l * m + i0 + mr];
+                    for (ii, &v) in src.iter().enumerate() {
+                        dst[l * MR + ii] = v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack `op(B)` (`k×n`) into `⌈n/NR⌉` micro-panels of `k×NR` scalars
+/// (`dst[l·NR + jj]`), zero-padded in the column direction.
+fn pack_b<T: Float>(tb: Transpose, k: usize, n: usize, b: &[T]) -> Vec<T> {
+    let panels = n.div_ceil(NR);
+    let mut out = vec![T::ZERO; panels * k * NR];
+    for jp in 0..panels {
+        let j0 = jp * NR;
+        let nr = NR.min(n - j0);
+        let dst = &mut out[jp * k * NR..(jp + 1) * k * NR];
+        match tb {
+            Transpose::No => {
+                for l in 0..k {
+                    let src = &b[l * n + j0..l * n + j0 + nr];
+                    for (jj, &v) in src.iter().enumerate() {
+                        dst[l * NR + jj] = v;
+                    }
+                }
+            }
+            Transpose::Yes => {
+                // B stored n×k: element (l, j) lives at b[j·k + l].
+                for jj in 0..nr {
+                    let col = &b[(j0 + jj) * k..(j0 + jj + 1) * k];
+                    for (l, &v) in col.iter().enumerate() {
+                        dst[l * NR + jj] = v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The `MR×NR` register tile: 32 independent accumulators march down
+/// `k` with `mul_add` on two unit-stride panel streams — no branches,
+/// no writes until the caller stores the tile.
+#[inline]
+fn microkernel<T: Float>(k: usize, apanel: &[T], bpanel: &[T]) -> [[T; NR]; MR] {
+    let mut acc = [[T::ZERO; NR]; MR];
+    for l in 0..k {
+        let av = &apanel[l * MR..l * MR + MR];
+        let bv = &bpanel[l * NR..l * NR + NR];
+        for (accr, &a) in acc.iter_mut().zip(av) {
+            for (dst, &b) in accr.iter_mut().zip(bv) {
+                *dst = a.mul_add(b, *dst);
+            }
+        }
+    }
+    acc
+}
+
+/// `C ← α·op(A)·op(B) + β·C` with an explicit worker count — the entry
+/// the algorithm layer routes `Context::threads()` into.
 ///
-/// op(A) is `m×k`, op(B) is `k×n`, C is `m×n`. Transposed operands are
-/// packed into row-major scratch once (O(mk)/O(kn)) so the hot loop is
-/// always unit-stride — the same "copy into a vector-friendly layout"
-/// strategy OpenBLAS uses on ARM.
+/// op(A) is `m×k`, op(B) is `k×n`, C is `m×n`, all row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_threads<T: Float>(
+    ta: Transpose,
+    tb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    b: &[T],
+    beta: T,
+    c: &mut [T],
+    threads: usize,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    scale_c(beta, c);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let ap = pack_a(ta, m, k, a);
+    let bp = pack_b(tb, k, n, b);
+    let npanels = n.div_ceil(NR);
+    let work = m.saturating_mul(n).saturating_mul(k);
+    let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
+    let bounds = parallel::aligned_bounds(m, workers, MR);
+    let (ap, bp) = (&ap, &bp);
+    parallel::scope_rows(c, n, &bounds, |r0, r1, block| {
+        let p0 = r0 / MR;
+        let p1 = r1.div_ceil(MR);
+        // B-panel outer: the k×NR panel stays hot in L1 while the
+        // worker's A panels stream through it (L2-sized panel pairs).
+        for jp in 0..npanels {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let bpanel = &bp[jp * k * NR..(jp + 1) * k * NR];
+            for ip in p0..p1 {
+                let i0 = ip * MR;
+                let mr = MR.min(m - i0);
+                let apanel = &ap[ip * k * MR..(ip + 1) * k * MR];
+                let acc = microkernel(k, apanel, bpanel);
+                for ii in 0..mr {
+                    let row = &mut block[(i0 - r0 + ii) * n + j0..(i0 - r0 + ii) * n + j0 + nr];
+                    for (jj, dst) in row.iter_mut().enumerate() {
+                        *dst = alpha.mul_add(acc[ii][jj], *dst);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `C ← α·op(A)·op(B) + β·C` on the process-default worker count
+/// (callers holding a [`crate::coordinator::Context`] should prefer
+/// [`gemm_threads`] with `ctx.threads()`).
 pub fn gemm<T: Float>(
     ta: Transpose,
     tb: Transpose,
@@ -69,96 +236,77 @@ pub fn gemm<T: Float>(
     beta: T,
     c: &mut [T],
 ) {
-    debug_assert_eq!(c.len(), m * n);
-    // Pack transposed operands (cheap relative to the O(mnk) multiply).
-    let a_packed;
-    let a_rm: &[T] = match ta {
-        Transpose::No => a,
-        Transpose::Yes => {
-            let mut p = vec![T::ZERO; m * k];
-            for l in 0..k {
-                for i in 0..m {
-                    p[i * k + l] = a[l * m + i];
-                }
-            }
-            a_packed = p;
-            &a_packed
-        }
-    };
-    let b_packed;
-    let b_rm: &[T] = match tb {
-        Transpose::No => b,
-        Transpose::Yes => {
-            let mut p = vec![T::ZERO; k * n];
-            for j in 0..n {
-                for l in 0..k {
-                    p[l * n + j] = b[j * k + l];
-                }
-            }
-            b_packed = p;
-            &b_packed
-        }
-    };
+    gemm_threads(ta, tb, m, n, k, alpha, a, b, beta, c, parallel::default_threads());
+}
 
-    // β-scale once up front.
-    if beta == T::ZERO {
-        c.fill(T::ZERO);
-    } else if beta != T::ONE {
-        for v in c.iter_mut() {
-            *v *= beta;
-        }
+/// Symmetric rank-k update `C ← α·A·Aᵀ + β·C` with an explicit worker
+/// count, for row-major `A (m×k)`, `C (m×m)`.
+///
+/// The packed engine computes only upper-triangle panel blocks (workers
+/// get triangle-balanced row ranges) and mirrors once at the end, so
+/// the full square is written — the storage oneDAL consumes. When
+/// `β ≠ 0`, `C` must be symmetric on entry (the standard BLAS contract,
+/// which only defines one triangle; every in-tree caller accumulates
+/// onto a symmetric cross-product).
+pub fn syrk_threads<T: Float>(
+    m: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    beta: T,
+    c: &mut [T],
+    threads: usize,
+) {
+    debug_assert_eq!(c.len(), m * m);
+    scale_c(beta, c);
+    if m == 0 || k == 0 {
+        return;
     }
-
-    // i-k-j blocked loops: C[i] += alpha*A[i,l] * B[l], unit stride in j.
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
-        for l0 in (0..k).step_by(BLOCK) {
-            let l1 = (l0 + BLOCK).min(k);
-            for j0 in (0..n).step_by(BLOCK) {
-                let j1 = (j0 + BLOCK).min(n);
-                for i in i0..i1 {
-                    let crow = &mut c[i * n..i * n + n];
-                    for l in l0..l1 {
-                        let aval = alpha * a_rm[i * k + l];
-                        if aval == T::ZERO {
-                            continue;
-                        }
-                        let brow = &b_rm[l * n..l * n + n];
-                        for j in j0..j1 {
-                            crow[j] = aval.mul_add(brow[j], crow[j]);
-                        }
+    let ap = pack_a(Transpose::No, m, k, a);
+    // Aᵀ is k×m stored as the m×k buffer — exactly the Transpose::Yes
+    // packing of a k×m operand.
+    let bp = pack_b(Transpose::Yes, k, m, a);
+    let npanels = m.div_ceil(NR);
+    let work = m.saturating_mul(m).saturating_mul(k) / 2 + 1;
+    let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
+    let bounds = parallel::triangle_bounds(m, workers, MR);
+    let (ap, bp) = (&ap, &bp);
+    parallel::scope_rows(c, m, &bounds, |r0, r1, block| {
+        let p0 = r0 / MR;
+        let p1 = r1.div_ceil(MR);
+        for ip in p0..p1 {
+            let i0 = ip * MR;
+            let mr = MR.min(m - i0);
+            let apanel = &ap[ip * k * MR..(ip + 1) * k * MR];
+            // First column panel that can reach j ≥ i0: its column range
+            // [j0, j0+NR) always straddles i0 when j0 = ⌊i0/NR⌋·NR.
+            for jp in i0 / NR..npanels {
+                let j0 = jp * NR;
+                let nr = NR.min(m - j0);
+                let bpanel = &bp[jp * k * NR..(jp + 1) * k * NR];
+                let acc = microkernel(k, apanel, bpanel);
+                for ii in 0..mr {
+                    let i = i0 + ii;
+                    let row = &mut block[(i - r0) * m..(i - r0 + 1) * m];
+                    for j in j0.max(i)..j0 + nr {
+                        row[j] = alpha.mul_add(acc[ii][j - j0], row[j]);
                     }
                 }
             }
         }
+    });
+    // Mirror the upper triangle into the lower once.
+    for i in 0..m {
+        for j in i + 1..m {
+            c[j * m + i] = c[i * m + j];
+        }
     }
 }
 
-/// Symmetric rank-k update `C ← α·A·Aᵀ + β·C` for row-major `A (m×k)`,
-/// `C (m×m)` — the workhorse of the VSL cross-product kernel (eq. 6's
-/// `X·Xᵀ` term). Only the full square is written (oneDAL consumes full
-/// symmetric storage).
+/// `C ← α·A·Aᵀ + β·C` on the process-default worker count — the
+/// workhorse of the VSL cross-product kernel (eq. 6's `X·Xᵀ` term).
 pub fn syrk<T: Float>(m: usize, k: usize, alpha: T, a: &[T], beta: T, c: &mut [T]) {
-    debug_assert_eq!(c.len(), m * m);
-    if beta == T::ZERO {
-        c.fill(T::ZERO);
-    } else if beta != T::ONE {
-        for v in c.iter_mut() {
-            *v *= beta;
-        }
-    }
-    // Upper triangle via dot products on contiguous rows, then mirror.
-    for i in 0..m {
-        let ri = &a[i * k..(i + 1) * k];
-        for j in i..m {
-            let rj = &a[j * k..(j + 1) * k];
-            let v = alpha * super::level1::dot(ri, rj);
-            c[i * m + j] += v;
-            if i != j {
-                c[j * m + i] += v;
-            }
-        }
-    }
+    syrk_threads(m, k, alpha, a, beta, c, parallel::default_threads());
 }
 
 #[cfg(test)]
@@ -172,9 +320,11 @@ mod tests {
     }
 
     #[test]
-    fn blocked_matches_naive_all_transposes() {
+    fn packed_matches_naive_all_transposes() {
         let mut e = Mt19937::new(42);
-        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 5, 7), (64, 64, 64), (65, 33, 70), (128, 17, 96)] {
+        for &(m, n, k) in
+            &[(1usize, 1usize, 1usize), (3, 5, 7), (64, 64, 64), (65, 33, 70), (128, 17, 96)]
+        {
             for ta in [Transpose::No, Transpose::Yes] {
                 for tb in [Transpose::No, Transpose::Yes] {
                     let a = rand_mat(&mut e, m * k);
@@ -208,6 +358,55 @@ mod tests {
         }
     }
 
+    /// The old kernel's `aval == 0 → continue` skip silently dropped
+    /// NaN/Inf from the corresponding B row. The packed microkernel is
+    /// branch-free, so contamination must match the naive oracle
+    /// bit-for-bit in NaN placement.
+    #[test]
+    fn gemm_propagates_nan_and_inf_like_naive() {
+        let (m, n, k) = (5usize, 9usize, 6usize);
+        let mut e = Mt19937::new(33);
+        let mut a = rand_mat(&mut e, m * k);
+        let mut b = rand_mat(&mut e, k * n);
+        // A zero in A aligned with a NaN row of B: the zero-skip would
+        // have erased the NaN.
+        a[2 * k + 3] = 0.0;
+        b[3 * n + 4] = f64::NAN;
+        b[n + 7] = f64::INFINITY;
+        let mut c1 = vec![0.25f64; m * n];
+        let mut c2 = c1.clone();
+        gemm_naive(Transpose::No, Transpose::No, m, n, k, 1.0, &a, &b, 1.0, &mut c1);
+        gemm(Transpose::No, Transpose::No, m, n, k, 1.0, &a, &b, 1.0, &mut c2);
+        for (i, (u, v)) in c1.iter().zip(&c2).enumerate() {
+            assert_eq!(u.is_nan(), v.is_nan(), "NaN placement differs at {i}");
+            if !u.is_nan() {
+                assert!((u - v).abs() < 1e-9, "at {i}: {u} vs {v}");
+            }
+        }
+        // Column 4 must be NaN in every row (each row of A meets B row 3).
+        for i in 0..m {
+            assert!(c2[i * n + 4].is_nan(), "row {i} lost NaN propagation");
+        }
+    }
+
+    #[test]
+    fn gemm_thread_counts_bit_identical() {
+        let (m, n, k) = (67usize, 41usize, 53usize);
+        let mut e = Mt19937::new(55);
+        let a = rand_mat(&mut e, m * k);
+        let b = rand_mat(&mut e, k * n);
+        let c0 = rand_mat(&mut e, m * n);
+        let mut base = c0.clone();
+        gemm_threads(Transpose::No, Transpose::No, m, n, k, 1.1, &a, &b, 0.4, &mut base, 1);
+        for threads in 2..=4 {
+            let mut c = c0.clone();
+            gemm_threads(Transpose::No, Transpose::No, m, n, k, 1.1, &a, &b, 0.4, &mut c, threads);
+            for (u, v) in base.iter().zip(&c) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
     #[test]
     fn syrk_symmetric() {
         let mut e = Mt19937::new(11);
@@ -222,11 +421,70 @@ mod tests {
     }
 
     #[test]
+    fn syrk_matches_gemm_oracle_odd_shapes() {
+        let mut e = Mt19937::new(19);
+        for &(m, k) in &[(1usize, 1usize), (7, 3), (33, 17), (64, 64), (129, 65)] {
+            let a = rand_mat(&mut e, m * k);
+            let mut c1 = vec![0.0f64; m * m];
+            syrk(m, k, 1.4, &a, 0.0, &mut c1);
+            let mut c2 = vec![0.0f64; m * m];
+            gemm_naive(Transpose::No, Transpose::Yes, m, m, k, 1.4, &a, &a, 0.0, &mut c2);
+            for (u, v) in c1.iter().zip(&c2) {
+                assert!((u - v).abs() < 1e-9, "m={m} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_thread_counts_bit_identical() {
+        let (m, k) = (70usize, 31usize);
+        let mut e = Mt19937::new(23);
+        let a = rand_mat(&mut e, m * k);
+        let mut base = vec![0.0f64; m * m];
+        syrk_threads(m, k, 0.9, &a, 0.0, &mut base, 1);
+        for threads in 2..=4 {
+            let mut c = vec![0.0f64; m * m];
+            syrk_threads(m, k, 0.9, &a, 0.0, &mut c, threads);
+            for (u, v) in base.iter().zip(&c) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_beta_accumulates_on_symmetric_c() {
+        let mut e = Mt19937::new(29);
+        let a = rand_mat(&mut e, 6 * 4);
+        // Symmetric starting C.
+        let mut c = vec![0.0f64; 36];
+        syrk(6, 4, 1.0, &a, 0.0, &mut c);
+        let snapshot = c.clone();
+        syrk(6, 4, 1.0, &a, 1.0, &mut c);
+        for (u, v) in c.iter().zip(&snapshot) {
+            assert!((u - 2.0 * v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
     fn gemm_beta_accumulates() {
         let a = [2.0f64];
         let b = [3.0f64];
         let mut c = [10.0f64];
         gemm(Transpose::No, Transpose::No, 1, 1, 1, 1.0, &a, &b, 1.0, &mut c);
         assert_eq!(c[0], 16.0);
+    }
+
+    #[test]
+    fn degenerate_dims_are_noops_or_beta_scale() {
+        let a: Vec<f64> = vec![];
+        let b: Vec<f64> = vec![];
+        let mut c = vec![3.0f64; 4];
+        // k = 0: C ← β·C.
+        gemm(Transpose::No, Transpose::No, 2, 2, 0, 1.0, &a, &b, 0.5, &mut c);
+        assert_eq!(c, vec![1.5; 4]);
+        let mut empty: Vec<f64> = vec![];
+        let b15 = vec![0.0f64; 15];
+        gemm(Transpose::No, Transpose::No, 0, 5, 3, 1.0, &a, &b15, 1.0, &mut empty);
+        assert!(empty.is_empty());
     }
 }

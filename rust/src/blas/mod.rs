@@ -11,9 +11,16 @@
 //! Two variants exist for the level-3 kernels:
 //! * `*_naive` — textbook triple loop, the "stock scikit-learn on ARM"
 //!   analogue used by the baseline backend;
-//! * blocked/vectorizable versions (`gemm`, `syrk`) — register-tiled,
-//!   unit-stride inner loops the compiler auto-vectorizes, playing the
-//!   role of the paper's NEON/SVE-optimized OpenBLAS kernels.
+//! * the packed-panel engine (`gemm`, `syrk`) — operands packed once
+//!   into `MR`-row / `NR`-column micro-panels, a register-tiled
+//!   `mul_add` microkernel over the panels, and row-panel threading via
+//!   [`crate::parallel`], playing the role of the paper's multicore
+//!   NEON/SVE-optimized OpenBLAS kernels.
+//!
+//! The `*_threads` entry points take an explicit worker count (the
+//! algorithm layer routes `Context::threads()` here); the bare names
+//! use [`crate::parallel::default_threads`] so the BLAS stays callable
+//! without a `Context`.
 //!
 //! All matrices are **row-major**, matching [`crate::tables::DenseTable`].
 
@@ -23,7 +30,7 @@ pub mod level3;
 
 pub use level1::{axpy, dot, nrm2, scal, sqdist};
 pub use level2::{gemv, ger};
-pub use level3::{gemm, gemm_naive, syrk, Transpose};
+pub use level3::{gemm, gemm_naive, gemm_threads, syrk, syrk_threads, Transpose};
 
 #[cfg(test)]
 mod tests {

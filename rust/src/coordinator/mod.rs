@@ -86,7 +86,7 @@ impl Default for ContextBuilder {
         Self {
             backend: Backend::Auto,
             artifact_dir: "artifacts".into(),
-            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            threads: crate::parallel::default_threads(),
         }
     }
 }
@@ -166,6 +166,11 @@ impl Context {
         self.backend
     }
 
+    /// Worker count for this context — the value the algorithm layer
+    /// routes into the `*_threads` BLAS/VSL/sparse entry points (the
+    /// oneDAL `threader_for` fan-out of the paper's multicore story).
+    /// Defaults to [`crate::parallel::default_threads`]
+    /// (`ONEDAL_SVE_THREADS` override, else available parallelism).
     pub fn threads(&self) -> usize {
         self.threads
     }

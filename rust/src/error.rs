@@ -1,36 +1,82 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! default build carries zero external dependencies so it compiles in
+//! the offline image).
+
+use std::fmt;
 
 /// Errors surfaced by the public API.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape or dimension mismatch between inputs.
-    #[error("shape mismatch: {0}")]
     Shape(String),
     /// Invalid algorithm parameter.
-    #[error("invalid parameter: {0}")]
     Param(String),
     /// Numerical failure (singular matrix, non-convergence, ...).
-    #[error("numerical error: {0}")]
     Numerical(String),
     /// I/O failure (CSV load, artifact read, ...).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// CSV parse failure.
-    #[error("parse error: {0}")]
     Parse(String),
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Requested artifact missing from the registry (run `make artifacts`).
-    #[error("missing artifact: {0} (run `make artifacts`)")]
     MissingArtifact(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Param(s) => write!(f, "invalid parameter: {s}"),
+            Error::Numerical(s) => write!(f, "numerical error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(s) => write!(f, "parse error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::MissingArtifact(s) => write!(f, "missing artifact: {s} (run `make artifacts`)"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
+#[cfg(feature = "runtime-xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_contract() {
+        assert_eq!(Error::Shape("a".into()).to_string(), "shape mismatch: a");
+        assert_eq!(Error::Param("b".into()).to_string(), "invalid parameter: b");
+        assert!(Error::MissingArtifact("k".into()).to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

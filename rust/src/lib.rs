@@ -10,7 +10,13 @@
 //! * **Layer 3 (this crate)** — the data-analytics library itself: tables,
 //!   the CPU-dispatch ladder (the paper's NEON/SVE dynamic dispatch),
 //!   every substrate oneDAL took from MKL (Sparse BLAS, VSL statistics,
-//!   RNG engines) and the ML algorithms the paper benchmarks.
+//!   RNG engines, and a packed-panel multithreaded dense BLAS in
+//!   [`blas`]/[`parallel`] playing the OpenBLAS role) and the ML
+//!   algorithms the paper benchmarks. Worker counts flow from
+//!   [`coordinator::Context::threads`] into every `*_threads` BLAS and
+//!   algorithm hot path; context-free callers get the
+//!   [`parallel::default_threads`] process default
+//!   (`ONEDAL_SVE_THREADS` overrides it).
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
 //!   hot paths, AOT-lowered once to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing
@@ -18,7 +24,9 @@
 //!
 //! Python never runs at request time: `runtime` loads the pre-built HLO
 //! artifacts through the PJRT C API (`xla` crate) and executes them from
-//! Rust.
+//! Rust. The PJRT path is gated behind the off-by-default `runtime-xla`
+//! cargo feature; the default build is pure Rust and the artifact rung
+//! degrades gracefully to the vectorized rung.
 //!
 //! ## Quickstart
 //!
@@ -39,6 +47,7 @@ pub mod dtype;
 pub mod error;
 pub mod linalg;
 pub mod metrics;
+pub mod parallel;
 pub mod profiling;
 pub mod rng;
 pub mod runtime;

@@ -1,0 +1,88 @@
+//! Threading substrate — the reproduction of the paper's "scales across
+//! cores" half of the OpenBLAS story (§IV, Fig. 6).
+//!
+//! The paper's GEMM wins come from two levers: vector-friendly packed
+//! panels *and* multicore scaling. This module supplies the second lever
+//! as a dependency-free scoped-thread scheduler the BLAS layer (and the
+//! row-independent algorithm hot paths) fan out on:
+//!
+//! * [`scope_rows`] — partition a mutable row-major buffer into disjoint
+//!   contiguous row blocks and run one scoped worker per block; each
+//!   worker may return a partial result (reduction values are collected
+//!   in worker order, so the combine step is deterministic).
+//! * [`par_map`] — the read-only variant: workers see only an index
+//!   range and return partials.
+//! * [`even_bounds`] / [`aligned_bounds`] / [`triangle_bounds`] — the
+//!   partitioners. `aligned_bounds` keeps cuts on micro-panel boundaries
+//!   so a tile is always computed whole by one worker (this is what
+//!   makes the parallel GEMM bit-identical to the single-thread run at
+//!   any worker count); `triangle_bounds` balances the `Σ (m−i)` work
+//!   profile of a triangular SYRK sweep.
+//!
+//! Worker counts come from [`crate::coordinator::Context::threads`] on
+//! every path that has a `Context`; the bare BLAS entry points fall back
+//! to the process default below, so `blas::gemm` stays callable from
+//! code that never builds a context (tests, linalg helpers, benches).
+//!
+//! ## Process default
+//!
+//! [`default_threads`] resolves once from the `ONEDAL_SVE_THREADS`
+//! environment override (mirroring oneDAL's `threader_env` /
+//! `DAAL_NUM_THREADS` switch) falling back to
+//! `std::thread::available_parallelism`, and can be pinned at runtime
+//! with [`set_default_threads`].
+
+mod scheduler;
+
+pub use scheduler::{aligned_bounds, even_bounds, par_map, scope_rows, triangle_bounds};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// 0 = "not resolved yet"; resolved lazily on first read.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Process-default worker count for BLAS calls made without a `Context`.
+pub fn default_threads() -> usize {
+    let cur = DEFAULT_THREADS.load(Ordering::Relaxed);
+    if cur != 0 {
+        return cur;
+    }
+    let resolved = std::env::var("ONEDAL_SVE_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    DEFAULT_THREADS.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Pin the process-default worker count (clamped to ≥ 1).
+pub fn set_default_threads(n: usize) {
+    DEFAULT_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Clamp a requested worker count so each worker has at least
+/// `min_work` units of work — fanning out a 4×4 GEMM across 16 cores
+/// costs more in thread launch than the multiply itself.
+pub fn effective_threads(requested: usize, work: usize, min_work: usize) -> usize {
+    let cap = (work / min_work.max(1)).max(1);
+    requested.max(1).min(cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn effective_threads_clamps_small_work() {
+        assert_eq!(effective_threads(8, 10, 100), 1);
+        assert_eq!(effective_threads(8, 250, 100), 2);
+        assert_eq!(effective_threads(4, 1_000_000, 100), 4);
+        assert_eq!(effective_threads(0, 1_000_000, 100), 1);
+    }
+}

@@ -1,0 +1,221 @@
+//! Scoped-thread row-panel scheduler.
+//!
+//! All scheduling is *static*: a partitioner produces ascending row
+//! boundaries, one scoped worker is spawned per part, and each worker
+//! owns a disjoint contiguous row block of the output buffer. Because a
+//! cut never lands inside a micro-panel (the partitioners align cuts),
+//! every tile is computed whole by exactly one worker with the same
+//! instruction order at any worker count — which is what lets the
+//! property suite demand bit-identical results across 1–4 threads.
+
+/// Evenly split `units` into at most `parts` contiguous ranges.
+/// Returns ascending boundaries `[0, …, units]` (deduplicated).
+pub fn even_bounds(units: usize, parts: usize) -> Vec<usize> {
+    aligned_bounds(units, parts, 1)
+}
+
+/// Split `total` rows into at most `parts` ranges whose interior cuts
+/// are multiples of `align` (the micro-panel height), so no panel is
+/// ever shared between two workers.
+pub fn aligned_bounds(total: usize, parts: usize, align: usize) -> Vec<usize> {
+    let align = align.max(1);
+    let units = total.div_ceil(align);
+    let parts = parts.max(1).min(units.max(1));
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0);
+    for w in 1..parts {
+        bounds.push(((units * w) / parts * align).min(total));
+    }
+    bounds.push(total);
+    bounds.dedup();
+    bounds
+}
+
+/// Partition `total` rows for a triangular sweep where row `i` costs
+/// `total − i` (the SYRK upper-triangle profile): early rows are
+/// expensive, late rows cheap, so an even split would starve the last
+/// workers. Cuts stay aligned to `align`.
+pub fn triangle_bounds(total: usize, parts: usize, align: usize) -> Vec<usize> {
+    let align = align.max(1);
+    let units = total.div_ceil(align);
+    let parts = parts.max(1).min(units.max(1));
+    if parts <= 1 {
+        return vec![0, total];
+    }
+    let total_work = (total as u128) * (total as u128 + 1) / 2;
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0);
+    let mut acc: u128 = 0;
+    let mut next_cut = 1usize;
+    for u in 0..units {
+        let lo = u * align;
+        let hi = ((u + 1) * align).min(total);
+        let cnt = (hi - lo) as u128;
+        let sum_i = (lo as u128 + hi as u128 - 1) * cnt / 2;
+        acc += cnt * total as u128 - sum_i;
+        if next_cut < parts && acc * parts as u128 >= total_work * next_cut as u128 {
+            if hi < total {
+                bounds.push(hi);
+            }
+            while next_cut < parts && acc * parts as u128 >= total_work * next_cut as u128 {
+                next_cut += 1;
+            }
+        }
+    }
+    bounds.push(total);
+    bounds.dedup();
+    bounds
+}
+
+/// Run `f(row_lo, row_hi, block)` over disjoint row blocks of `data`
+/// (row-major, `stride` elements per row), one scoped worker per part
+/// described by `bounds` (as produced by the partitioners above).
+/// Worker results are collected **in partition order**, so reductions
+/// combined by the caller are deterministic for a given `bounds`.
+///
+/// With a single part the closure runs inline on the caller's thread —
+/// the 1-thread path spawns nothing.
+pub fn scope_rows<T, R, F>(data: &mut [T], stride: usize, bounds: &[usize], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, usize, &mut [T]) -> R + Sync,
+{
+    let parts = bounds.len().saturating_sub(1);
+    if parts == 0 {
+        return Vec::new();
+    }
+    debug_assert_eq!(bounds[0], 0);
+    debug_assert_eq!(bounds[parts] * stride, data.len());
+    if parts == 1 {
+        return vec![f(bounds[0], bounds[1], data)];
+    }
+    let mut blocks: Vec<(usize, usize, &mut [T])> = Vec::with_capacity(parts);
+    let mut rest = data;
+    for w in 0..parts {
+        let rows = bounds[w + 1] - bounds[w];
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(rows * stride);
+        blocks.push((bounds[w], bounds[w + 1], head));
+        rest = tail;
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = blocks
+            .into_iter()
+            .map(|(lo, hi, block)| s.spawn(move || f(lo, hi, block)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("parallel worker panicked")).collect()
+    })
+}
+
+/// Read-only fan-out: run `f(lo, hi)` per partition and collect the
+/// partial results in partition order.
+pub fn par_map<R, F>(bounds: &[usize], f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize) -> R + Sync,
+{
+    let parts = bounds.len().saturating_sub(1);
+    if parts == 0 {
+        return Vec::new();
+    }
+    if parts == 1 {
+        return vec![f(bounds[0], bounds[1])];
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..parts)
+            .map(|w| {
+                let (lo, hi) = (bounds[w], bounds[w + 1]);
+                s.spawn(move || f(lo, hi))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("parallel worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_bounds_cover_and_ascend() {
+        for units in [0usize, 1, 2, 5, 17, 100] {
+            for parts in [1usize, 2, 3, 4, 8, 200] {
+                let b = even_bounds(units, parts);
+                assert_eq!(*b.first().unwrap(), 0);
+                assert_eq!(*b.last().unwrap(), units);
+                assert!(b.windows(2).all(|w| w[0] < w[1]) || units == 0);
+                assert!(b.len() <= parts + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_bounds_cut_on_multiples() {
+        for total in [1usize, 3, 4, 7, 63, 64, 65, 130] {
+            for parts in [1usize, 2, 3, 4] {
+                for align in [1usize, 4, 8] {
+                    let b = aligned_bounds(total, parts, align);
+                    assert_eq!(*b.last().unwrap(), total);
+                    for &cut in &b[1..b.len() - 1] {
+                        assert_eq!(cut % align, 0, "total={total} parts={parts} align={align}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_bounds_front_loads_small_chunks() {
+        let b = triangle_bounds(1000, 4, 4);
+        assert_eq!(*b.first().unwrap(), 0);
+        assert_eq!(*b.last().unwrap(), 1000);
+        // Work profile total−i: first chunk must hold fewer rows than the last.
+        let first = b[1] - b[0];
+        let last = b[b.len() - 1] - b[b.len() - 2];
+        assert!(first < last, "bounds={b:?}");
+        for &cut in &b[1..b.len() - 1] {
+            assert_eq!(cut % 4, 0);
+        }
+    }
+
+    #[test]
+    fn scope_rows_writes_disjoint_blocks_and_orders_results() {
+        let rows = 103usize;
+        let stride = 7usize;
+        let mut data = vec![0u32; rows * stride];
+        for threads in 1..=4 {
+            data.fill(0);
+            let bounds = even_bounds(rows, threads);
+            let partials = scope_rows(&mut data, stride, &bounds, |lo, hi, block| {
+                for (r, row) in block.chunks_mut(stride).enumerate() {
+                    row.fill((lo + r) as u32);
+                }
+                hi - lo
+            });
+            assert_eq!(partials.iter().sum::<usize>(), rows);
+            for r in 0..rows {
+                assert!(data[r * stride..(r + 1) * stride].iter().all(|&v| v == r as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_collects_in_order() {
+        let bounds = even_bounds(40, 4);
+        let parts = par_map(&bounds, |lo, hi| (lo, hi));
+        for w in 0..parts.len() {
+            assert_eq!(parts[w], (bounds[w], bounds[w + 1]));
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        let mut empty: Vec<f64> = Vec::new();
+        let b = even_bounds(0, 4);
+        let r = scope_rows(&mut empty, 3, &b, |_, _, _| 1usize);
+        assert!(r.is_empty() || r.iter().sum::<usize>() == 0);
+        assert!(par_map::<usize, _>(&[], |_, _| 1).is_empty());
+    }
+}

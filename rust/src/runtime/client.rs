@@ -1,111 +1,180 @@
 //! PJRT CPU client wrapper: compile-once, execute-many over HLO text
 //! artifacts (adapted from /opt/xla-example/load_hlo).
+//!
+//! The real client needs the `xla` crate (PJRT C API bindings), which is
+//! not part of the offline default build — it sits behind the
+//! off-by-default `runtime-xla` cargo feature. Without the feature a
+//! stub [`PjRtRuntime`] with the same surface is compiled instead; its
+//! constructor reports the runtime as unavailable, which the
+//! coordinator's dispatch ladder already treats as "degrade to the
+//! vectorized rung" (an explicit `Backend::Artifact` request still
+//! surfaces the error instead of silently downgrading).
 
-use crate::error::{Error, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "runtime-xla")]
+mod pjrt {
+    use crate::error::{Error, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
 
-/// A compiled executable plus its artifact name (for diagnostics).
-struct CompiledEntry {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The PJRT CPU runtime: one client, a compile cache keyed by artifact
-/// name, and typed f32 execute helpers.
-///
-/// All PJRT calls are serialized behind a mutex — the CPU client is not
-/// documented thread-safe through the C API, and oneDAL's execution model
-/// (one compute context per algorithm run) matches a single-owner design.
-pub struct PjRtRuntime {
-    inner: Mutex<RuntimeInner>,
-    artifact_dir: PathBuf,
-}
-
-struct RuntimeInner {
-    client: xla::PjRtClient,
-    cache: HashMap<String, CompiledEntry>,
-}
-
-impl PjRtRuntime {
-    /// Create a CPU PJRT client rooted at an artifact directory.
-    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self {
-            inner: Mutex::new(RuntimeInner { client, cache: HashMap::new() }),
-            artifact_dir: artifact_dir.as_ref().to_path_buf(),
-        })
+    /// A compiled executable plus its artifact name (for diagnostics).
+    struct CompiledEntry {
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    pub fn artifact_dir(&self) -> &Path {
-        &self.artifact_dir
-    }
-
-    /// True when the named artifact file exists (dispatch probes this).
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.artifact_path(name).exists()
-    }
-
-    fn artifact_path(&self, name: &str) -> PathBuf {
-        self.artifact_dir.join(format!("{name}.hlo.txt"))
-    }
-
-    /// Compile (or fetch from cache) the named artifact.
-    fn ensure_compiled<'a>(
-        &self,
-        inner: &'a mut RuntimeInner,
-        name: &str,
-    ) -> Result<&'a CompiledEntry> {
-        if !inner.cache.contains_key(name) {
-            let path = self.artifact_path(name);
-            if !path.exists() {
-                return Err(Error::MissingArtifact(name.to_string()));
-            }
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner.client.compile(&comp)?;
-            inner.cache.insert(name.to_string(), CompiledEntry { exe });
-        }
-        Ok(inner.cache.get(name).unwrap())
-    }
-
-    /// Pre-compile an artifact (warmup; keeps compile jitter out of the
-    /// measured hot path).
-    pub fn warmup(&self, name: &str) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
-        self.ensure_compiled(&mut inner, name).map(|_| ())
-    }
-
-    /// Execute artifact `name` on f32 row-major inputs `(data, dims)`.
+    /// The PJRT CPU runtime: one client, a compile cache keyed by artifact
+    /// name, and typed f32 execute helpers.
     ///
-    /// The jax side lowers with `return_tuple=True`, so the single output
-    /// is a tuple; each element is returned as a flat f32 vector.
-    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut inner = self.inner.lock().unwrap();
-        let entry = self.ensure_compiled(&mut inner, name)?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data).reshape(&dims_i64)?;
-            literals.push(lit);
-        }
-        let result = entry.exe.execute::<xla::Literal>(&literals)?;
-        let mut out_lit = result[0][0].to_literal_sync()?;
-        let elems = out_lit.decompose_tuple()?;
-        let mut out = Vec::with_capacity(elems.len());
-        for e in elems {
-            out.push(e.to_vec::<f32>()?);
-        }
-        Ok(out)
+    /// All PJRT calls are serialized behind a mutex — the CPU client is not
+    /// documented thread-safe through the C API, and oneDAL's execution model
+    /// (one compute context per algorithm run) matches a single-owner design.
+    pub struct PjRtRuntime {
+        inner: Mutex<RuntimeInner>,
+        artifact_dir: PathBuf,
     }
 
-    /// Number of artifacts compiled so far (metrics).
-    pub fn compiled_count(&self) -> usize {
-        self.inner.lock().unwrap().cache.len()
+    struct RuntimeInner {
+        client: xla::PjRtClient,
+        cache: HashMap<String, CompiledEntry>,
+    }
+
+    impl PjRtRuntime {
+        /// Create a CPU PJRT client rooted at an artifact directory.
+        pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Self {
+                inner: Mutex::new(RuntimeInner { client, cache: HashMap::new() }),
+                artifact_dir: artifact_dir.as_ref().to_path_buf(),
+            })
+        }
+
+        pub fn artifact_dir(&self) -> &Path {
+            &self.artifact_dir
+        }
+
+        /// True when the named artifact file exists (dispatch probes this).
+        pub fn has_artifact(&self, name: &str) -> bool {
+            self.artifact_path(name).exists()
+        }
+
+        fn artifact_path(&self, name: &str) -> PathBuf {
+            self.artifact_dir.join(format!("{name}.hlo.txt"))
+        }
+
+        /// Compile (or fetch from cache) the named artifact.
+        fn ensure_compiled<'a>(
+            &self,
+            inner: &'a mut RuntimeInner,
+            name: &str,
+        ) -> Result<&'a CompiledEntry> {
+            if !inner.cache.contains_key(name) {
+                let path = self.artifact_path(name);
+                if !path.exists() {
+                    return Err(Error::MissingArtifact(name.to_string()));
+                }
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = inner.client.compile(&comp)?;
+                inner.cache.insert(name.to_string(), CompiledEntry { exe });
+            }
+            Ok(inner.cache.get(name).unwrap())
+        }
+
+        /// Pre-compile an artifact (warmup; keeps compile jitter out of the
+        /// measured hot path).
+        pub fn warmup(&self, name: &str) -> Result<()> {
+            let mut inner = self.inner.lock().unwrap();
+            self.ensure_compiled(&mut inner, name).map(|_| ())
+        }
+
+        /// Execute artifact `name` on f32 row-major inputs `(data, dims)`.
+        ///
+        /// The jax side lowers with `return_tuple=True`, so the single output
+        /// is a tuple; each element is returned as a flat f32 vector.
+        pub fn execute_f32(
+            &self,
+            name: &str,
+            inputs: &[(&[f32], &[usize])],
+        ) -> Result<Vec<Vec<f32>>> {
+            let mut inner = self.inner.lock().unwrap();
+            let entry = self.ensure_compiled(&mut inner, name)?;
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data).reshape(&dims_i64)?;
+                literals.push(lit);
+            }
+            let result = entry.exe.execute::<xla::Literal>(&literals)?;
+            let mut out_lit = result[0][0].to_literal_sync()?;
+            let elems = out_lit.decompose_tuple()?;
+            let mut out = Vec::with_capacity(elems.len());
+            for e in elems {
+                out.push(e.to_vec::<f32>()?);
+            }
+            Ok(out)
+        }
+
+        /// Number of artifacts compiled so far (metrics).
+        pub fn compiled_count(&self) -> usize {
+            self.inner.lock().unwrap().cache.len()
+        }
     }
 }
+
+#[cfg(feature = "runtime-xla")]
+pub use pjrt::PjRtRuntime;
+
+#[cfg(not(feature = "runtime-xla"))]
+mod stub {
+    use crate::error::{Error, Result};
+    use std::path::Path;
+
+    /// Stub runtime client compiled when `runtime-xla` is off: the same
+    /// surface as the PJRT wrapper, but never constructible — `new`
+    /// reports the runtime unavailable so the dispatch ladder degrades
+    /// to the native vectorized rung.
+    pub struct PjRtRuntime {
+        _unconstructible: std::convert::Infallible,
+    }
+
+    impl PjRtRuntime {
+        pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+            let _ = artifact_dir.as_ref();
+            Err(Error::Runtime(
+                "PJRT runtime unavailable: built without the `runtime-xla` feature".into(),
+            ))
+        }
+
+        pub fn artifact_dir(&self) -> &Path {
+            unreachable!("stub PjRtRuntime cannot be constructed")
+        }
+
+        pub fn has_artifact(&self, _name: &str) -> bool {
+            unreachable!("stub PjRtRuntime cannot be constructed")
+        }
+
+        pub fn warmup(&self, _name: &str) -> Result<()> {
+            unreachable!("stub PjRtRuntime cannot be constructed")
+        }
+
+        pub fn execute_f32(
+            &self,
+            _name: &str,
+            _inputs: &[(&[f32], &[usize])],
+        ) -> Result<Vec<Vec<f32>>> {
+            unreachable!("stub PjRtRuntime cannot be constructed")
+        }
+
+        pub fn compiled_count(&self) -> usize {
+            unreachable!("stub PjRtRuntime cannot be constructed")
+        }
+    }
+}
+
+#[cfg(not(feature = "runtime-xla"))]
+pub use stub::PjRtRuntime;
 
 #[cfg(test)]
 mod tests {
@@ -118,12 +187,21 @@ mod tests {
     fn missing_artifact_is_reported() {
         let rt = match PjRtRuntime::new("artifacts") {
             Ok(rt) => rt,
-            Err(_) => return, // no PJRT plugin in this environment
+            Err(_) => return, // stub build, or no PJRT plugin in this environment
         };
         let err = rt.execute_f32("definitely_not_there", &[]).unwrap_err();
         match err {
-            Error::MissingArtifact(name) => assert!(name.contains("definitely_not_there")),
+            crate::error::Error::MissingArtifact(name) => {
+                assert!(name.contains("definitely_not_there"))
+            }
             other => panic!("unexpected error {other}"),
         }
+    }
+
+    #[cfg(not(feature = "runtime-xla"))]
+    #[test]
+    fn stub_constructor_reports_missing_feature() {
+        let err = PjRtRuntime::new("artifacts").err().expect("stub must not construct");
+        assert!(err.to_string().contains("runtime-xla"), "{err}");
     }
 }

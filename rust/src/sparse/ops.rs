@@ -26,7 +26,8 @@ pub enum SparseOp {
     Transpose,
 }
 
-/// `C ← α·op(A)·B + β·C` — sparse×dense → dense (row-major `B`, `C`).
+/// `C ← α·op(A)·B + β·C` — sparse×dense → dense (row-major `B`, `C`),
+/// on the process-default worker count (see [`csrmm_threads`]).
 ///
 /// `op=NoTranspose`: `A (m×k)`, `B (k×n)`, `C (m×n)`.
 /// `op=Transpose`  : `A (k×m)`, `B (k×n)`, `C (m×n)`.
@@ -38,6 +39,29 @@ pub fn csrmm<T: Float>(
     n: usize,
     beta: T,
     c: &mut [T],
+) -> Result<()> {
+    csrmm_threads(op, alpha, a, b, n, beta, c, crate::parallel::default_threads())
+}
+
+/// [`csrmm`] with an explicit worker count — the algorithm layer routes
+/// `Context::threads()` here.
+///
+/// `op=NoTranspose` is a row traversal of both `A` and `C`, so C's row
+/// blocks fan out across scoped workers (each output row is produced
+/// whole by one worker — bit-identical at any worker count).
+/// `op=Transpose` scatters into C rows keyed by A's column indices and
+/// stays sequential (the paper's row-traversal analysis, §IV-B: the
+/// transpose nest has no disjoint output partition without a CSC echo).
+#[allow(clippy::too_many_arguments)]
+pub fn csrmm_threads<T: Float>(
+    op: SparseOp,
+    alpha: T,
+    a: &CsrMatrix<T>,
+    b: &[T],
+    n: usize,
+    beta: T,
+    c: &mut [T],
+    threads: usize,
 ) -> Result<()> {
     let (m, k) = match op {
         SparseOp::NoTranspose => (a.rows(), a.cols()),
@@ -59,16 +83,24 @@ pub fn csrmm<T: Float>(
     match op {
         SparseOp::NoTranspose => {
             // Row traversal of A; C row i accumulates α·a_ik · B[k,:].
-            for i in 0..a.rows() {
-                let crow = &mut c[i * n..(i + 1) * n];
-                for (kk, av) in a.row_entries(i) {
-                    let scaled = alpha * av;
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv = scaled.mul_add(bv, *cv);
+            let workers = crate::parallel::effective_threads(
+                threads,
+                a.nnz().saturating_mul(n),
+                1 << 14,
+            );
+            let bounds = crate::parallel::even_bounds(a.rows(), workers);
+            crate::parallel::scope_rows(c, n, &bounds, |r0, r1, cblock| {
+                for i in r0..r1 {
+                    let crow = &mut cblock[(i - r0) * n..(i - r0 + 1) * n];
+                    for (kk, av) in a.row_entries(i) {
+                        let scaled = alpha * av;
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv = scaled.mul_add(bv, *cv);
+                        }
                     }
                 }
-            }
+            });
         }
         SparseOp::Transpose => {
             // (AᵀB)[j,:] += a_ij · B[i,:] — still a row traversal of A.
@@ -351,6 +383,23 @@ mod tests {
         let b = vec![0.0f64; 8 * 4];
         let mut c = vec![0.0f64; 10 * 3]; // wrong n
         assert!(csrmm(SparseOp::NoTranspose, 1.0, &a, &b, 4, 0.0, &mut c).is_err());
+    }
+
+    #[test]
+    fn csrmm_thread_counts_bit_identical() {
+        let mut e = Mt19937::new(27);
+        let a = make_sparse_csr(&mut e, 53, 37, 0.2);
+        let n = 9;
+        let b: Vec<f64> = (0..37 * n).map(|i| (i % 11) as f64 * 0.21 - 1.0).collect();
+        let mut base = vec![0.5f64; 53 * n];
+        csrmm_threads(SparseOp::NoTranspose, 1.3, &a, &b, n, 0.6, &mut base, 1).unwrap();
+        for threads in 2..=4 {
+            let mut c = vec![0.5f64; 53 * n];
+            csrmm_threads(SparseOp::NoTranspose, 1.3, &a, &b, n, 0.6, &mut c, threads).unwrap();
+            for (u, v) in base.iter().zip(&c) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
+        }
     }
 
     #[test]

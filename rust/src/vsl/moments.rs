@@ -57,7 +57,18 @@ fn finalize<T: Float>(n: usize, sum: &[T], sumsq: &[T], mean: &mut Vec<T>, varia
 /// Raw-moment variance kernel (eq. 3): one pass, two running sums per
 /// coordinate, 4-way unrolled over observations — the shape the paper
 /// vectorizes with SVE (and our Pallas `moments` kernel mirrors).
+/// Runs on the process-default worker count; callers holding a
+/// `Context` should prefer [`x2c_mom_threads`].
 pub fn x2c_mom<T: Float>(x: &DenseTable<T>) -> Result<Moments<T>> {
+    x2c_mom_threads(x, crate::parallel::default_threads())
+}
+
+/// [`x2c_mom`] with an explicit worker count: coordinates (rows of the
+/// p×n layout) are independent, so workers each reduce a contiguous
+/// coordinate range. Every coordinate's two running sums are computed
+/// whole by one worker in the same order, so results are bit-identical
+/// at any worker count.
+pub fn x2c_mom_threads<T: Float>(x: &DenseTable<T>, threads: usize) -> Result<Moments<T>> {
     let p = x.rows();
     let n = x.cols();
     if n == 0 {
@@ -65,26 +76,37 @@ pub fn x2c_mom<T: Float>(x: &DenseTable<T>) -> Result<Moments<T>> {
     }
     let mut sum = vec![T::ZERO; p];
     let mut sumsq = vec![T::ZERO; p];
-    for i in 0..p {
-        let row = x.row(i);
-        // Dual accumulators per moment break the dependence chain.
-        let (mut s0, mut s1, mut q0, mut q1) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
-        let chunks = n / 2;
-        for c in 0..chunks {
-            let a = row[2 * c];
-            let b = row[2 * c + 1];
-            s0 += a;
-            s1 += b;
-            q0 = a.mul_add(a, q0);
-            q1 = b.mul_add(b, q1);
+    let workers = crate::parallel::effective_threads(threads, p.saturating_mul(n), 1 << 14);
+    let bounds = crate::parallel::even_bounds(p, workers);
+    let partials = crate::parallel::par_map(&bounds, |lo, hi| {
+        let mut psum = vec![T::ZERO; hi - lo];
+        let mut psumsq = vec![T::ZERO; hi - lo];
+        for i in lo..hi {
+            let row = x.row(i);
+            // Dual accumulators per moment break the dependence chain.
+            let (mut s0, mut s1, mut q0, mut q1) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+            let chunks = n / 2;
+            for c in 0..chunks {
+                let a = row[2 * c];
+                let b = row[2 * c + 1];
+                s0 += a;
+                s1 += b;
+                q0 = a.mul_add(a, q0);
+                q1 = b.mul_add(b, q1);
+            }
+            if n % 2 == 1 {
+                let a = row[n - 1];
+                s0 += a;
+                q0 = a.mul_add(a, q0);
+            }
+            psum[i - lo] = s0 + s1;
+            psumsq[i - lo] = q0 + q1;
         }
-        if n % 2 == 1 {
-            let a = row[n - 1];
-            s0 += a;
-            q0 = a.mul_add(a, q0);
-        }
-        sum[i] = s0 + s1;
-        sumsq[i] = q0 + q1;
+        (lo, psum, psumsq)
+    });
+    for (lo, psum, psumsq) in partials {
+        sum[lo..lo + psum.len()].copy_from_slice(&psum);
+        sumsq[lo..lo + psumsq.len()].copy_from_slice(&psumsq);
     }
     let mut mean = Vec::new();
     let mut variance = Vec::new();
@@ -207,6 +229,19 @@ mod tests {
         assert_eq!(a.n, 400);
         for i in 0..5 {
             assert!((a.variance[i] - whole.variance[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn thread_counts_bit_identical() {
+        let x = random_dataset(9, 13, 777);
+        let base = x2c_mom_threads(&x, 1).unwrap();
+        for threads in 2..=4 {
+            let m = x2c_mom_threads(&x, threads).unwrap();
+            for i in 0..13 {
+                assert_eq!(base.sum[i].to_bits(), m.sum[i].to_bits(), "threads={threads}");
+                assert_eq!(base.sumsq[i].to_bits(), m.sumsq[i].to_bits(), "threads={threads}");
+            }
         }
     }
 

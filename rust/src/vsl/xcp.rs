@@ -15,7 +15,7 @@
 //! computation" — which is exactly the MXU contraction our Pallas `xcp`
 //! kernel performs on the artifact path.
 
-use crate::blas::{ger, syrk};
+use crate::blas::{ger, syrk_threads};
 use crate::dtype::Float;
 use crate::error::{Error, Result};
 use crate::tables::DenseTable;
@@ -57,8 +57,17 @@ impl<T: Float> XcpState<T> {
         &self.cross
     }
 
-    /// Fold a batch `X ∈ ℝ^{p×n_b}` (columns = observations) via eq. 6.
+    /// Fold a batch `X ∈ ℝ^{p×n_b}` (columns = observations) via eq. 6,
+    /// on the process-default worker count. Callers holding a `Context`
+    /// should prefer [`XcpState::update_threads`].
     pub fn update(&mut self, batch: &DenseTable<T>) -> Result<()> {
+        self.update_threads(batch, crate::parallel::default_threads())
+    }
+
+    /// [`XcpState::update`] with an explicit worker count — the `X·Xᵀ`
+    /// rank-k term is the dominant cost and runs on the parallel packed
+    /// SYRK engine.
+    pub fn update_threads(&mut self, batch: &DenseTable<T>, threads: usize) -> Result<()> {
         if batch.rows() != self.p {
             return Err(Error::Shape(format!(
                 "xcp: batch has {} coordinates, state has {}",
@@ -80,8 +89,10 @@ impl<T: Float> XcpState<T> {
             ger(self.p, self.p, inv, &s_old, &s_old, &mut self.cross);
         }
 
-        // C += X·Xᵀ  (batch raw cross-product; BLAS rank-nb update)
-        syrk(self.p, nb, T::ONE, batch.data(), T::ONE, &mut self.cross);
+        // C += X·Xᵀ  (batch raw cross-product; BLAS rank-nb update —
+        // `cross` is symmetric by invariant, so the accumulate-and-mirror
+        // contract of the packed syrk holds)
+        syrk_threads(self.p, nb, T::ONE, batch.data(), T::ONE, &mut self.cross, threads);
 
         // S ← S' + row-sums(X)
         for i in 0..self.p {
