@@ -4,12 +4,19 @@
 //! engine. Acceptance bar: ≥ 2× GEMM speedup at 4 threads vs 1 on
 //! 512³ f64.
 //!
+//! PR 2 additions: (a) launch-overhead comparison of the persistent
+//! worker pool vs the retired per-call `std::thread::scope` baseline on
+//! a near-empty 4-way fan-out (pure scheduling cost, no compute), and
+//! (b) a KC-blocked large-`k` GEMM case (256×256×4096) where full-`k`
+//! panels fall out of L2.
+//!
 //! Besides the usual stdout table, the run is recorded as
 //! `BENCH_blas.json` (written to the repo root when run from `rust/`,
 //! else the current directory).
 
 use onedal_sve::blas::{gemm_threads, syrk_threads, Transpose};
 use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::parallel::{even_bounds, scope_rows, scope_rows_scoped};
 use onedal_sve::prelude::*;
 use onedal_sve::profiling::{BenchResult, Bencher};
 use onedal_sve::rng::{Distribution, Uniform};
@@ -17,6 +24,9 @@ use onedal_sve::tables::synth;
 use std::io::Write as _;
 
 const DIM: usize = 512;
+/// Large-k fixture: m = n = 256, k = 4096 (16 KC blocks of 256).
+const KDIM: usize = 4096;
+const KM: usize = 256;
 
 fn rand_mat(e: &mut Mt19937, n: usize) -> Vec<f64> {
     let mut d = Uniform::new(-1.0, 1.0);
@@ -72,7 +82,7 @@ fn write_json(results: &[BenchResult]) -> std::io::Result<String> {
         }
     }
     let body = format!(
-        "{{\n  \"bench\": \"ablate_threads\",\n  \"regenerate\": \"cd rust && cargo bench --bench ablate_threads\",\n  \"fixtures\": {{\"gemm\": \"{DIM}x{DIM}x{DIM} f64\", \"syrk\": \"{DIM}x{DIM} f64\", \"kmeans_assign\": \"20000x16, k=16\"}},\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"ablate_threads\",\n  \"regenerate\": \"cd rust && cargo bench --bench ablate_threads\",\n  \"fixtures\": {{\"gemm\": \"{DIM}x{DIM}x{DIM} f64\", \"gemm_large_k\": \"{KM}x{KM}x{KDIM} f64 (KC-blocked)\", \"syrk\": \"{DIM}x{DIM} f64\", \"kmeans_assign\": \"20000x16, k=16\", \"launch\": \"4-way near-empty fan-out, pool vs scoped\"}},\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
         rows.join(",\n"),
         speedups.join(",\n"),
     );
@@ -107,6 +117,34 @@ fn main() {
                 t,
             );
             std::hint::black_box(c[0]);
+        });
+    }
+
+    // Launch overhead: a 4-way fan-out over a tiny buffer with a
+    // near-empty closure — pure scheduling cost. `pool` rides the
+    // persistent workers; `scoped` is the retired per-call
+    // std::thread::scope baseline.
+    let launch_bounds = even_bounds(4, 4);
+    let mut tiny = vec![0.0f64; 4 * 64];
+    b.bench("parallel/launch-4way/pool", || {
+        let partials = scope_rows(&mut tiny, 64, &launch_bounds, |_, _, block| block[0]);
+        std::hint::black_box(partials);
+    });
+    b.bench("parallel/launch-4way/scoped", || {
+        let partials = scope_rows_scoped(&mut tiny, 64, &launch_bounds, |_, _, block| block[0]);
+        std::hint::black_box(partials);
+    });
+
+    // KC-blocked large-k GEMM: full-k packed panels stop fitting L2 at
+    // this size, so this case isolates the k-block sweep.
+    let ak = rand_mat(&mut e, KM * KDIM);
+    let bk = rand_mat(&mut e, KDIM * KM);
+    let mut ck = vec![0.0f64; KM * KM];
+    for &t in &sweep {
+        b.bench(&format!("blas/gemm-{KM}x{KM}x{KDIM}/t{t}"), || {
+            let (no, kd) = (Transpose::No, KDIM);
+            gemm_threads(no, no, KM, KM, kd, 1.0, &ak, &bk, 0.0, &mut ck, t);
+            std::hint::black_box(ck[0]);
         });
     }
 

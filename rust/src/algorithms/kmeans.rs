@@ -84,7 +84,11 @@ impl KMeansParams {
 
     /// Initialize centroids with a caller-supplied engine (Fig. 3 swaps
     /// the engine here: `StdCxxRng` vs OpenRNG-style `Mt19937`/`Mcg59`).
-    pub fn init_centroids(&self, e: &mut dyn Engine, x: &DenseTable<f64>) -> Result<DenseTable<f64>> {
+    pub fn init_centroids(
+        &self,
+        e: &mut dyn Engine,
+        x: &DenseTable<f64>,
+    ) -> Result<DenseTable<f64>> {
         let n = x.rows();
         if self.k == 0 || self.k > n {
             return Err(Error::Param(format!("k={} must be in 1..={n}", self.k)));

@@ -6,7 +6,7 @@
 //! `XᵀX` is computed with the VSL `xcp` machinery's BLAS path (syrk on
 //! the transposed layout), the solve with the Cholesky substrate.
 
-use crate::blas::{gemv, syrk_threads};
+use crate::blas::{gemv_threads, syrk_threads};
 use crate::coordinator::{Backend, Context};
 use crate::error::{Error, Result};
 use crate::linalg::cholesky_solve;
@@ -107,7 +107,7 @@ impl LinRegParams {
             xtx[i * p + i] += self.alpha;
         }
         let mut xty = vec![0.0f64; p];
-        gemv(true, n, p, 1.0, xc.data(), &yc, 0.0, &mut xty);
+        gemv_threads(true, n, p, 1.0, xc.data(), &yc, 0.0, &mut xty, ctx.threads());
         let coef = cholesky_solve(&xtx, p, &xty)?;
         let intercept = if self.fit_intercept {
             ymean - coef.iter().zip(&xmeans).map(|(c, m)| c * m).sum::<f64>()
@@ -119,12 +119,15 @@ impl LinRegParams {
 }
 
 impl LinRegModel {
-    pub fn infer(&self, _ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<f64>> {
+    /// Tall-skinny inference: one threaded gemv row-partitioned on the
+    /// context's worker count.
+    pub fn infer(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<f64>> {
         if x.cols() != self.coef.len() {
             return Err(Error::Shape("linreg: dim mismatch".into()));
         }
         let mut out = vec![self.intercept; x.rows()];
-        gemv(false, x.rows(), x.cols(), 1.0, x.data(), &self.coef, 1.0, &mut out);
+        let (n, p) = (x.rows(), x.cols());
+        gemv_threads(false, n, p, 1.0, x.data(), &self.coef, 1.0, &mut out, ctx.threads());
         Ok(out)
     }
 }
@@ -166,7 +169,10 @@ mod tests {
         let mut e = Mt19937::new(3);
         let (x, y, _) = make_regression(&mut e, 300, 5, 0.5);
         let ols = LinearRegression::params().train(&ctx(Backend::Vectorized), &x, &y).unwrap();
-        let ridge = RidgeRegression::params().alpha(1000.0).train(&ctx(Backend::Vectorized), &x, &y).unwrap();
+        let ridge = RidgeRegression::params()
+            .alpha(1000.0)
+            .train(&ctx(Backend::Vectorized), &x, &y)
+            .unwrap();
         let n_ols: f64 = ols.coef.iter().map(|c| c * c).sum();
         let n_ridge: f64 = ridge.coef.iter().map(|c| c * c).sum();
         assert!(n_ridge < n_ols);
@@ -201,7 +207,8 @@ mod tests {
         assert!(LinearRegression::params().train(&c, &x, &y).is_err()); // n <= p
         let x2 = DenseTable::<f64>::zeros(10, 2);
         assert!(LinearRegression::params().train(&c, &x2, &y).is_err()); // len mismatch
-        let (x3, y3) = (DenseTable::from_vec((0..20).map(|i| (i % 7) as f64).collect(), 10, 2).unwrap(), vec![1.0; 10]);
+        let x3 = DenseTable::from_vec((0..20).map(|i| (i % 7) as f64).collect(), 10, 2).unwrap();
+        let y3 = vec![1.0; 10];
         assert!(LinearRegression::params().alpha(-1.0).train(&c, &x3, &y3).is_err());
     }
 }

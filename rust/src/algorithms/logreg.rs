@@ -7,7 +7,7 @@
 //! `logreg_step` Pallas kernel (forward + gradient in one HLO program)
 //! executed via PJRT on fixed-shape tiles.
 
-use crate::blas::{axpy, dot, gemv};
+use crate::blas::{axpy, dot, gemv_threads};
 use crate::coordinator::{batch, Backend, Context};
 use crate::error::{Error, Result};
 use crate::tables::DenseTable;
@@ -80,7 +80,7 @@ impl LogRegParams {
         match ctx.dispatch("logreg_step", &[self.batch, p]) {
             Backend::Naive => self.train_naive(x, y, &mut w, &mut b),
             Backend::Artifact => self.train_artifact(ctx, x, y, &mut w, &mut b)?,
-            _ => self.train_batched(x, y, &mut w, &mut b),
+            _ => self.train_batched(x, y, &mut w, &mut b, ctx.threads()),
         }
         Ok(LogRegModel { coef: w, intercept: b })
     }
@@ -120,8 +120,16 @@ impl LogRegParams {
         }
     }
 
-    /// Vectorized rung: full mini-batch gradient with gemv.
-    fn train_batched(&self, x: &DenseTable<f64>, y: &[f64], w: &mut Vec<f64>, b: &mut f64) {
+    /// Vectorized rung: full mini-batch gradient with gemv, on the
+    /// context's worker count (large batches fan out on the pool).
+    fn train_batched(
+        &self,
+        x: &DenseTable<f64>,
+        y: &[f64],
+        w: &mut Vec<f64>,
+        b: &mut f64,
+        threads: usize,
+    ) {
         let n = x.rows();
         let p = x.cols();
         let mut z = vec![0.0f64; self.batch];
@@ -131,12 +139,13 @@ impl LogRegParams {
             for (start, len) in batch::tiles(n, self.batch) {
                 let xb = &x.data()[start * p..(start + len) * p];
                 // z = Xb·w + b
-                gemv(false, len, p, 1.0, xb, w, 0.0, &mut z[..len]);
+                gemv_threads(false, len, p, 1.0, xb, w, 0.0, &mut z[..len], threads);
                 for i in 0..len {
                     err[i] = sigmoid(z[i] + *b) - y[start + i];
                 }
                 // grad = Xbᵀ·err / len + l2·w
-                gemv(true, len, p, 1.0 / len as f64, xb, &err[..len], 0.0, &mut grad);
+                let inv = 1.0 / len as f64;
+                gemv_threads(true, len, p, inv, xb, &err[..len], 0.0, &mut grad, threads);
                 axpy(self.l2, w, &mut grad);
                 axpy(-self.lr, &grad, w);
                 *b -= self.lr * err[..len].iter().sum::<f64>() / len as f64;
@@ -166,7 +175,9 @@ impl LogRegParams {
             .best_fit("logreg_step", &[self.batch.min(n.max(1)), p])
             .ok_or_else(|| Error::MissingArtifact("logreg_step".into()))?
             .clone();
-        let rt = ctx.runtime().ok_or_else(|| Error::Runtime("artifact backend without runtime".into()))?;
+        let rt = ctx
+            .runtime()
+            .ok_or_else(|| Error::Runtime("artifact backend without runtime".into()))?;
         let (tb, tp) = (art.dims[0], art.dims[1]);
         let xf: Vec<f32> = x.data().iter().map(|&v| v as f32).collect();
         let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();

@@ -1,7 +1,7 @@
 //! SVM kernel functions, gram-row computation and the LRU row cache the
 //! Thunder method amortizes row computation with.
 
-use crate::blas::{dot, gemv, sqdist};
+use crate::blas::{dot, gemv_threads, sqdist};
 use crate::tables::DenseTable;
 use std::collections::{HashMap, VecDeque};
 
@@ -54,13 +54,16 @@ impl SvmKernel {
         crate::parallel::scope_rows(out, 1, &bounds, |r0, r1, block| {
             let rows = r1 - r0;
             let ablock = &x.data()[r0 * d..r1 * d];
+            // Inner gemv stays single-threaded: the fan-out already
+            // happened one level up (nesting pool batches here would
+            // only add scheduling overhead).
             match kernel {
                 SvmKernel::Linear => {
-                    gemv(false, rows, d, 1.0, ablock, xi, 0.0, block);
+                    gemv_threads(false, rows, d, 1.0, ablock, xi, 0.0, block, 1);
                 }
                 SvmKernel::Rbf { gamma } => {
                     // ‖xi−xj‖² = ‖xi‖² + ‖xj‖² − 2 xi·xj, cross term via gemv.
-                    gemv(false, rows, d, 1.0, ablock, xi, 0.0, block);
+                    gemv_threads(false, rows, d, 1.0, ablock, xi, 0.0, block, 1);
                     let ni = norms[i];
                     for (j, v) in block.iter_mut().enumerate() {
                         let d2 = (ni + norms[r0 + j] - 2.0 * *v).max(0.0);

@@ -108,9 +108,17 @@ impl SolverState {
     fn apply_step(&mut self, i: usize, j: usize, delta: f64) -> f64 {
         let mut tau = delta;
         // α_i ← α_i + y_i·τ ∈ [0, C]
-        tau = if self.y[i] > 0.0 { tau.min(self.c - self.alpha[i]) } else { tau.min(self.alpha[i]) };
+        tau = if self.y[i] > 0.0 {
+            tau.min(self.c - self.alpha[i])
+        } else {
+            tau.min(self.alpha[i])
+        };
         // α_j ← α_j − y_j·τ ∈ [0, C]
-        tau = if self.y[j] > 0.0 { tau.min(self.alpha[j]) } else { tau.min(self.c - self.alpha[j]) };
+        tau = if self.y[j] > 0.0 {
+            tau.min(self.alpha[j])
+        } else {
+            tau.min(self.c - self.alpha[j])
+        };
         let tau = tau.max(0.0);
         self.alpha[i] += self.y[i] * tau;
         self.alpha[j] -= self.y[j] * tau;
@@ -515,7 +523,8 @@ mod tests {
         let mut g = crate::rng::Gaussian::<f64>::new(0.0, 0.15);
         use crate::rng::Distribution;
         for _ in 0..50 {
-            for (cx, cy, label) in [(0.0, 0.0, 0.0), (1.0, 1.0, 0.0), (0.0, 1.0, 1.0), (1.0, 0.0, 1.0)] {
+            let corners = [(0.0, 0.0, 0.0), (1.0, 1.0, 0.0), (0.0, 1.0, 1.0), (1.0, 0.0, 1.0)];
+            for (cx, cy, label) in corners {
                 data.push(cx + g.sample(&mut e));
                 data.push(cy + g.sample(&mut e));
                 y.push(label);

@@ -2,35 +2,135 @@
 
 use super::level1::dot;
 use crate::dtype::Float;
+use crate::parallel;
 
-/// `y ← α·op(A)·x + β·y` for row-major `A (m×n)`.
+/// Minimum multiply-adds before a gemv fan-out pays for itself (the
+/// kernel is memory-bound, so the bar sits below the level-3 one).
+const PAR_MIN_WORK: usize = 1 << 14;
+
+/// `y ← α·op(A)·x + β·y` for row-major `A (m×n)` with an explicit
+/// worker count — the tall-skinny inference entry the algorithm layer
+/// routes `Context::threads()` into.
 ///
 /// `trans = false`: `y` has length `m`, `x` length `n`.
 /// `trans = true` : `y` has length `n`, `x` length `m`.
-pub fn gemv<T: Float>(trans: bool, m: usize, n: usize, alpha: T, a: &[T], x: &[T], beta: T, y: &mut [T]) {
+///
+/// `β == 0` **overwrites** `y` (the reference BLAS contract): the
+/// existing contents — including NaN or uninitialized storage — are
+/// never read on either transpose path.
+///
+/// Workers own disjoint contiguous slices of `y` (output rows on the
+/// no-transpose path, output columns on the transpose path) and every
+/// element accumulates its terms in the same order at any worker count,
+/// so results are bit-identical across 1–N workers *and* to the
+/// sequential sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_threads<T: Float>(
+    trans: bool,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    x: &[T],
+    beta: T,
+    y: &mut [T],
+    threads: usize,
+) {
     debug_assert_eq!(a.len(), m * n);
+    let workers = parallel::effective_threads(threads, m.saturating_mul(n), PAR_MIN_WORK);
     if !trans {
         debug_assert_eq!(x.len(), n);
         debug_assert_eq!(y.len(), m);
-        for i in 0..m {
-            let row = &a[i * n..(i + 1) * n];
-            y[i] = alpha.mul_add(dot(row, x), beta * y[i]);
+        if workers <= 1 {
+            // Sequential fast path: no partition allocation — this is
+            // the inner loop of SMO/SGD-style callers that pin one
+            // worker. Element-for-element identical to the fan-out.
+            notrans_rows(0, m, n, alpha, a, x, beta, y);
+            return;
         }
+        let bounds = parallel::even_bounds(m, workers);
+        parallel::scope_rows(y, 1, &bounds, |lo, hi, block| {
+            notrans_rows(lo, hi, n, alpha, a, x, beta, block);
+        });
     } else {
         debug_assert_eq!(x.len(), m);
         debug_assert_eq!(y.len(), n);
-        // Row-major Aᵀx: accumulate row-by-row to keep unit stride on A.
-        for v in y.iter_mut() {
-            *v *= beta;
+        if workers <= 1 {
+            trans_cols(0, n, m, n, alpha, a, x, beta, y);
+            return;
         }
-        for i in 0..m {
-            let row = &a[i * n..(i + 1) * n];
-            let axi = alpha * x[i];
-            for (yj, &aij) in y.iter_mut().zip(row) {
-                *yj = axi.mul_add(aij, *yj);
-            }
+        let bounds = parallel::even_bounds(n, workers);
+        parallel::scope_rows(y, 1, &bounds, |lo, hi, block| {
+            trans_cols(lo, hi, m, n, alpha, a, x, beta, block);
+        });
+    }
+}
+
+/// No-transpose worker body: rows `[lo, hi)` of `α·A·x (+ β·y)` into
+/// `block` (`block[0]` is row `lo`). β == 0 never reads `block`.
+#[allow(clippy::too_many_arguments)]
+fn notrans_rows<T: Float>(
+    lo: usize,
+    hi: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    x: &[T],
+    beta: T,
+    block: &mut [T],
+) {
+    for i in lo..hi {
+        let row = &a[i * n..(i + 1) * n];
+        let acc = dot(row, x);
+        block[i - lo] = if beta == T::ZERO {
+            alpha * acc
+        } else {
+            alpha.mul_add(acc, beta * block[i - lo])
+        };
+    }
+}
+
+/// Transpose worker body: output columns `[lo, hi)` of `α·Aᵀ·x (+ β·y)`
+/// into `block`. Row-major Aᵀx accumulates row-by-row over the column
+/// slice to keep unit stride on A; β == 0 overwrites the slice.
+#[allow(clippy::too_many_arguments)]
+fn trans_cols<T: Float>(
+    lo: usize,
+    hi: usize,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    x: &[T],
+    beta: T,
+    block: &mut [T],
+) {
+    super::beta_scale(beta, block);
+    for i in 0..m {
+        let row = &a[i * n + lo..i * n + hi];
+        let axi = alpha * x[i];
+        for (yj, &aij) in block.iter_mut().zip(row) {
+            *yj = axi.mul_add(aij, *yj);
         }
     }
+}
+
+/// `y ← α·op(A)·x + β·y` on the process-default worker count (callers
+/// holding a [`crate::coordinator::Context`] should prefer
+/// [`gemv_threads`] with `ctx.threads()`). `β == 0` overwrites `y`
+/// without reading it — see [`gemv_threads`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemv<T: Float>(
+    trans: bool,
+    m: usize,
+    n: usize,
+    alpha: T,
+    a: &[T],
+    x: &[T],
+    beta: T,
+    y: &mut [T],
+) {
+    gemv_threads(trans, m, n, alpha, a, x, beta, y, parallel::default_threads());
 }
 
 /// Rank-1 update `A ← α·x·yᵀ + A` for row-major `A (m×n)`.
@@ -71,17 +171,66 @@ mod tests {
         assert_eq!(y, [9.0, 12.0, 15.0]);
     }
 
+    /// The reference BLAS contract: β == 0 means *overwrite* — `y` is
+    /// never read, so NaN (or uninitialized) contents must not poison
+    /// the output on either transpose path.
     #[test]
-    fn gemv_beta_zero_ignores_y_contents() {
+    fn gemv_beta_zero_overwrites_nan_y_both_paths() {
         let x = [1.0, 0.0, 0.0];
         let mut y = [f64::NAN, f64::NAN];
-        // beta=0 with NaN y must still produce finite results when we
-        // scale explicitly via mul_add(…, beta*y) — document the contract:
-        // the reference BLAS treats beta==0 as overwrite; mirror that here.
         gemv(false, 2, 3, 1.0, &A, &x, 0.0, &mut y);
-        // NaN * 0.0 = NaN under IEEE; oneDAL never passes NaN workspaces,
-        // so the contract is "y must be finite or beta nonzero".
-        assert!(y[0].is_nan() || y[0] == 1.0);
+        assert!(y.iter().all(|v| v.is_finite()), "no-trans left NaN: {y:?}");
+        assert_eq!(y, [1.0, 4.0]);
+
+        let xt = [1.0, 2.0];
+        let mut yt = [f64::NAN; 3];
+        gemv(true, 2, 3, 1.0, &A, &xt, 0.0, &mut yt);
+        assert!(yt.iter().all(|v| v.is_finite()), "trans left NaN: {yt:?}");
+        assert_eq!(yt, [9.0, 12.0, 15.0]);
+    }
+
+    /// β == 0 with NaN workspace stays finite through the threaded entry
+    /// at every worker count, on shapes large enough to really fan out.
+    #[test]
+    fn gemv_threads_beta_zero_nan_safe_and_bit_identical() {
+        // m·n ≥ 4·2^14 so effective_threads really grants 4 workers.
+        let (m, n) = (300usize, 240usize);
+        let a: Vec<f64> = (0..m * n).map(|i| ((i * 19 + 3) % 23) as f64 * 0.17 - 1.5).collect();
+        for trans in [false, true] {
+            let (xin, yout) = if trans { (m, n) } else { (n, m) };
+            let x: Vec<f64> = (0..xin).map(|i| (i % 11) as f64 * 0.3 - 1.0).collect();
+            let mut base = vec![f64::NAN; yout];
+            gemv_threads(trans, m, n, 1.3, &a, &x, 0.0, &mut base, 1);
+            assert!(base.iter().all(|v| v.is_finite()), "trans={trans}");
+            for threads in 2..=4 {
+                let mut y = vec![f64::NAN; yout];
+                gemv_threads(trans, m, n, 1.3, &a, &x, 0.0, &mut y, threads);
+                for (u, v) in base.iter().zip(&y) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "trans={trans} threads={threads}");
+                }
+            }
+        }
+    }
+
+    /// Nonzero β accumulates bit-identically across worker counts too.
+    #[test]
+    fn gemv_threads_beta_accumulate_bit_identical() {
+        let (m, n) = (310usize, 230usize);
+        let a: Vec<f64> = (0..m * n).map(|i| ((i * 7 + 5) % 31) as f64 * 0.11 - 1.7).collect();
+        for trans in [false, true] {
+            let (xin, yout) = if trans { (m, n) } else { (n, m) };
+            let x: Vec<f64> = (0..xin).map(|i| (i % 13) as f64 * 0.21 - 1.2).collect();
+            let y0: Vec<f64> = (0..yout).map(|i| (i % 7) as f64 * 0.4 - 1.0).collect();
+            let mut base = y0.clone();
+            gemv_threads(trans, m, n, 0.9, &a, &x, 0.6, &mut base, 1);
+            for threads in 2..=4 {
+                let mut y = y0.clone();
+                gemv_threads(trans, m, n, 0.9, &a, &x, 0.6, &mut y, threads);
+                for (u, v) in base.iter().zip(&y) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "trans={trans} threads={threads}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -68,19 +68,20 @@ pub fn gemm_naive<T: Float>(
 pub(crate) const MR: usize = 4;
 /// Micro-panel width: columns of `op(B)` / C per register tile.
 pub(crate) const NR: usize = 8;
+/// k-dimension block of the panel sweep. Full-`k` panels stop being
+/// L2-resident past ~2K, so the compute loops walk `k` in `KC`-sized
+/// blocks: within a block the `KC×NR` B-panel slice stays hot while the
+/// worker's `KC×MR` A-panel slices stream through it. Each C tile
+/// accumulates its α-scaled block partials in ascending-`k` order, so
+/// the k-blocking is identical at every worker count (bit-identity is
+/// preserved) and a single block (`k ≤ KC`) reproduces the unblocked
+/// sweep exactly.
+pub(crate) const KC: usize = 256;
 /// Minimum multiply-adds per worker before fan-out pays for itself.
 const PAR_MIN_FLOP: usize = 1 << 16;
 
-/// β-scale C once up front (shared by gemm/syrk).
-fn scale_c<T: Float>(beta: T, c: &mut [T]) {
-    if beta == T::ZERO {
-        c.fill(T::ZERO);
-    } else if beta != T::ONE {
-        for v in c.iter_mut() {
-            *v *= beta;
-        }
-    }
-}
+// β-scale C once up front (shared by gemm/syrk; β == 0 overwrites).
+use super::beta_scale as scale_c;
 
 /// Pack `op(A)` (`m×k`) into `⌈m/MR⌉` micro-panels of `k×MR` scalars:
 /// panel `ip` holds rows `ip·MR ..` in k-major order (`dst[l·MR + ii]`),
@@ -199,24 +200,31 @@ pub fn gemm_threads<T: Float>(
     parallel::scope_rows(c, n, &bounds, |r0, r1, block| {
         let p0 = r0 / MR;
         let p1 = r1.div_ceil(MR);
-        // B-panel outer: the k×NR panel stays hot in L1 while the
-        // worker's A panels stream through it (L2-sized panel pairs).
-        for jp in 0..npanels {
-            let j0 = jp * NR;
-            let nr = NR.min(n - j0);
-            let bpanel = &bp[jp * k * NR..(jp + 1) * k * NR];
-            for ip in p0..p1 {
-                let i0 = ip * MR;
-                let mr = MR.min(m - i0);
-                let apanel = &ap[ip * k * MR..(ip + 1) * k * MR];
-                let acc = microkernel(k, apanel, bpanel);
-                for ii in 0..mr {
-                    let row = &mut block[(i0 - r0 + ii) * n + j0..(i0 - r0 + ii) * n + j0 + nr];
-                    for (jj, dst) in row.iter_mut().enumerate() {
-                        *dst = alpha.mul_add(acc[ii][jj], *dst);
+        // KC-blocked k sweep (see [`KC`]); within a block the KC×NR
+        // B-panel slice stays hot in L1/L2 while the worker's A-panel
+        // slices stream through it.
+        let mut l0 = 0usize;
+        while l0 < k {
+            let lb = KC.min(k - l0);
+            for jp in 0..npanels {
+                let j0 = jp * NR;
+                let nr = NR.min(n - j0);
+                let bpanel = &bp[jp * k * NR + l0 * NR..jp * k * NR + (l0 + lb) * NR];
+                for ip in p0..p1 {
+                    let i0 = ip * MR;
+                    let mr = MR.min(m - i0);
+                    let apanel = &ap[ip * k * MR + l0 * MR..ip * k * MR + (l0 + lb) * MR];
+                    let acc = microkernel(lb, apanel, bpanel);
+                    for ii in 0..mr {
+                        let at = (i0 - r0 + ii) * n + j0;
+                        let row = &mut block[at..at + nr];
+                        for (jj, dst) in row.iter_mut().enumerate() {
+                            *dst = alpha.mul_add(acc[ii][jj], *dst);
+                        }
                     }
                 }
             }
+            l0 += lb;
         }
     });
 }
@@ -274,25 +282,31 @@ pub fn syrk_threads<T: Float>(
     parallel::scope_rows(c, m, &bounds, |r0, r1, block| {
         let p0 = r0 / MR;
         let p1 = r1.div_ceil(MR);
-        for ip in p0..p1 {
-            let i0 = ip * MR;
-            let mr = MR.min(m - i0);
-            let apanel = &ap[ip * k * MR..(ip + 1) * k * MR];
-            // First column panel that can reach j ≥ i0: its column range
-            // [j0, j0+NR) always straddles i0 when j0 = ⌊i0/NR⌋·NR.
-            for jp in i0 / NR..npanels {
-                let j0 = jp * NR;
-                let nr = NR.min(m - j0);
-                let bpanel = &bp[jp * k * NR..(jp + 1) * k * NR];
-                let acc = microkernel(k, apanel, bpanel);
-                for ii in 0..mr {
-                    let i = i0 + ii;
-                    let row = &mut block[(i - r0) * m..(i - r0 + 1) * m];
-                    for j in j0.max(i)..j0 + nr {
-                        row[j] = alpha.mul_add(acc[ii][j - j0], row[j]);
+        // Same KC-blocked k sweep as the GEMM engine (see [`KC`]).
+        let mut l0 = 0usize;
+        while l0 < k {
+            let lb = KC.min(k - l0);
+            for ip in p0..p1 {
+                let i0 = ip * MR;
+                let mr = MR.min(m - i0);
+                let apanel = &ap[ip * k * MR + l0 * MR..ip * k * MR + (l0 + lb) * MR];
+                // First column panel that can reach j ≥ i0: its column range
+                // [j0, j0+NR) always straddles i0 when j0 = ⌊i0/NR⌋·NR.
+                for jp in i0 / NR..npanels {
+                    let j0 = jp * NR;
+                    let nr = NR.min(m - j0);
+                    let bpanel = &bp[jp * k * NR + l0 * NR..jp * k * NR + (l0 + lb) * NR];
+                    let acc = microkernel(lb, apanel, bpanel);
+                    for ii in 0..mr {
+                        let i = i0 + ii;
+                        let row = &mut block[(i - r0) * m..(i - r0 + 1) * m];
+                        for j in j0.max(i)..j0 + nr {
+                            row[j] = alpha.mul_add(acc[ii][j - j0], row[j]);
+                        }
                     }
                 }
             }
+            l0 += lb;
         }
     });
     // Mirror the upper triangle into the lower once.
@@ -322,9 +336,17 @@ mod tests {
     #[test]
     fn packed_matches_naive_all_transposes() {
         let mut e = Mt19937::new(42);
-        for &(m, n, k) in
-            &[(1usize, 1usize, 1usize), (3, 5, 7), (64, 64, 64), (65, 33, 70), (128, 17, 96)]
-        {
+        // 300 and 613 straddle the KC=256 block edge (1 full block +
+        // fringe, 2 blocks + fringe) to exercise the blocked k sweep.
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (64, 64, 64),
+            (65, 33, 70),
+            (128, 17, 96),
+            (9, 11, 300),
+            (17, 7, 613),
+        ] {
             for ta in [Transpose::No, Transpose::Yes] {
                 for tb in [Transpose::No, Transpose::Yes] {
                     let a = rand_mat(&mut e, m * k);
@@ -423,7 +445,7 @@ mod tests {
     #[test]
     fn syrk_matches_gemm_oracle_odd_shapes() {
         let mut e = Mt19937::new(19);
-        for &(m, k) in &[(1usize, 1usize), (7, 3), (33, 17), (64, 64), (129, 65)] {
+        for &(m, k) in &[(1usize, 1usize), (7, 3), (33, 17), (64, 64), (129, 65), (21, 530)] {
             let a = rand_mat(&mut e, m * k);
             let mut c1 = vec![0.0f64; m * m];
             syrk(m, k, 1.4, &a, 0.0, &mut c1);

@@ -20,7 +20,15 @@
 //! The `*_threads` entry points take an explicit worker count (the
 //! algorithm layer routes `Context::threads()` here); the bare names
 //! use [`crate::parallel::default_threads`] so the BLAS stays callable
-//! without a `Context`.
+//! without a `Context`. Every parallel entry runs on the persistent
+//! worker pool ([`crate::parallel::WorkerPool`]) and is bit-identical
+//! across worker counts.
+//!
+//! **β == 0 contract:** all scaled-output kernels (`gemm`, `syrk`,
+//! `gemv`) treat `β == 0` as *overwrite* — the output operand is never
+//! read, so NaN or uninitialized workspaces cannot poison results. This
+//! mirrors the reference BLAS (and the sparse routines' `fill(0)`), and
+//! it is what makes OpenBLAS a drop-in for MKL in the paper's port.
 //!
 //! All matrices are **row-major**, matching [`crate::tables::DenseTable`].
 
@@ -28,8 +36,23 @@ pub mod level1;
 pub mod level2;
 pub mod level3;
 
+use crate::dtype::Float;
+
+/// β-scale an output buffer in place; `β == 0` **overwrites** (never
+/// reads) — the single implementation of the contract documented above,
+/// shared by the dense level-2/3 kernels and the sparse routines.
+pub(crate) fn beta_scale<T: Float>(beta: T, out: &mut [T]) {
+    if beta == T::ZERO {
+        out.fill(T::ZERO);
+    } else if beta != T::ONE {
+        for v in out.iter_mut() {
+            *v *= beta;
+        }
+    }
+}
+
 pub use level1::{axpy, dot, nrm2, scal, sqdist};
-pub use level2::{gemv, ger};
+pub use level2::{gemv, gemv_threads, ger};
 pub use level3::{gemm, gemm_naive, gemm_threads, syrk, syrk_threads, Transpose};
 
 #[cfg(test)]

@@ -12,11 +12,19 @@
 //!   every substrate oneDAL took from MKL (Sparse BLAS, VSL statistics,
 //!   RNG engines, and a packed-panel multithreaded dense BLAS in
 //!   [`blas`]/[`parallel`] playing the OpenBLAS role) and the ML
-//!   algorithms the paper benchmarks. Worker counts flow from
-//!   [`coordinator::Context::threads`] into every `*_threads` BLAS and
-//!   algorithm hot path; context-free callers get the
+//!   algorithms the paper benchmarks. All parallel kernels execute on
+//!   the **persistent worker pool** ([`parallel::WorkerPool`]): parked
+//!   resident threads fed batch jobs per call, so small/medium launches
+//!   skip thread start-up cost, and partitioning stays panel-aligned so
+//!   every result is bit-identical at any worker count. Worker counts
+//!   flow from [`coordinator::Context::threads`] into every `*_threads`
+//!   entry point — `gemm`/`syrk` (KC-blocked packed panels), `gemv`,
+//!   `csrmm` (both `op` variants), `csrmv`, the VSL kernels and the
+//!   algorithm hot paths; context-free callers get the
 //!   [`parallel::default_threads`] process default
-//!   (`ONEDAL_SVE_THREADS` overrides it).
+//!   (`ONEDAL_SVE_THREADS` overrides it). Scaled-output BLAS kernels
+//!   honor the reference β == 0 contract: the output is overwritten,
+//!   never read.
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
 //!   hot paths, AOT-lowered once to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing

@@ -3,15 +3,26 @@
 //!
 //! The paper's GEMM wins come from two levers: vector-friendly packed
 //! panels *and* multicore scaling. This module supplies the second lever
-//! as a dependency-free scoped-thread scheduler the BLAS layer (and the
+//! as a dependency-free scheduler the BLAS layer (and the
 //! row-independent algorithm hot paths) fan out on:
 //!
+//! * [`pool::WorkerPool`] — the **persistent worker pool** (PR 2): a
+//!   lazily-initialized set of parked resident `std` threads behind a
+//!   mutex-protected injector. Every fan-out below submits batch jobs to
+//!   [`pool::WorkerPool::global`] instead of spawning scoped threads per
+//!   call, so small/medium kernel launches no longer pay thread start-up
+//!   cost. The submitting thread runs one partition itself and
+//!   help-steals queued jobs while waiting, which keeps nested fan-outs
+//!   deadlock-free; panicking closures are caught, the batch still
+//!   drains, and the payload is re-thrown on the submitter.
 //! * [`scope_rows`] — partition a mutable row-major buffer into disjoint
-//!   contiguous row blocks and run one scoped worker per block; each
-//!   worker may return a partial result (reduction values are collected
-//!   in worker order, so the combine step is deterministic).
-//! * [`par_map`] — the read-only variant: workers see only an index
-//!   range and return partials.
+//!   contiguous row blocks and run one pool job per block; each job may
+//!   return a partial result (reduction values are collected in
+//!   partition order, so the combine step is deterministic).
+//!   [`scope_rows_scoped`] is the retired per-call `std::thread::scope`
+//!   implementation, kept as the launch-overhead baseline.
+//! * [`par_map`] — the read-only variant: jobs see only an index range
+//!   and return partials.
 //! * [`even_bounds`] / [`aligned_bounds`] / [`triangle_bounds`] — the
 //!   partitioners. `aligned_bounds` keeps cuts on micro-panel boundaries
 //!   so a tile is always computed whole by one worker (this is what
@@ -32,14 +43,30 @@
 //! `std::thread::available_parallelism`, and can be pinned at runtime
 //! with [`set_default_threads`].
 
+pub mod pool;
 mod scheduler;
 
-pub use scheduler::{aligned_bounds, even_bounds, par_map, scope_rows, triangle_bounds};
+pub use pool::WorkerPool;
+pub use scheduler::{
+    aligned_bounds, even_bounds, par_map, scope_rows, scope_rows_scoped, triangle_bounds,
+};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// 0 = "not resolved yet"; resolved lazily on first read.
 static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Resolution rule for the process default: a positive integer in the
+/// `ONEDAL_SVE_THREADS` override wins; anything else falls back to the
+/// machine's available parallelism. Exposed separately so tests can
+/// exercise the rule directly — mutating the process environment would
+/// race `getenv` calls on sibling test threads.
+pub fn resolve_default_threads(env_value: Option<&str>) -> usize {
+    env_value
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
 
 /// Process-default worker count for BLAS calls made without a `Context`.
 pub fn default_threads() -> usize {
@@ -47,11 +74,8 @@ pub fn default_threads() -> usize {
     if cur != 0 {
         return cur;
     }
-    let resolved = std::env::var("ONEDAL_SVE_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    let resolved =
+        resolve_default_threads(std::env::var("ONEDAL_SVE_THREADS").ok().as_deref());
     DEFAULT_THREADS.store(resolved, Ordering::Relaxed);
     resolved
 }

@@ -1,0 +1,387 @@
+//! Persistent worker pool — the resident execution engine under
+//! [`super::scope_rows`] / [`super::par_map`].
+//!
+//! PR 1 spawned a fresh `std::thread::scope` per BLAS call, which is
+//! correct but pays the full thread launch cost on every kernel — the
+//! paper's multithreaded-OpenBLAS speedups (§V) only materialize for
+//! small/medium launches when the execution engine stays resident. This
+//! module keeps a process-wide set of parked `std` threads alive across
+//! calls:
+//!
+//! * **Lazy** — no thread exists until the first multi-part batch; the
+//!   pool then grows to the demanded width (capped) and never shrinks.
+//! * **Dependency-free** — a `Mutex<VecDeque>` injector plus a `Condvar`;
+//!   no crossbeam, no channels.
+//! * **Caller participates** — the submitting thread always runs one
+//!   partition itself and then *helps drain the queue* while waiting, so
+//!   nested batches (a pool job that itself fans out) can never deadlock
+//!   even on a single-worker pool.
+//! * **Panic-safe** — jobs run under `catch_unwind`; the first payload is
+//!   re-thrown on the submitting thread *after* every job of the batch
+//!   has finished, so a panicking closure can neither deadlock the latch
+//!   nor kill a worker thread (workers survive and take the next job).
+//! * **Shutdown-safe** — dropping a non-global pool flags shutdown,
+//!   wakes every worker, drains the queue and joins all threads. The
+//!   global pool lives for the process and its parked workers exit with
+//!   it.
+//!
+//! The pool schedules *batches*, not futures: [`WorkerPool::run_batch`]
+//! takes one closure per partition and returns only when all of them
+//! have run. That blocking contract is also what makes the lifetime
+//! erasure sound (see the `SAFETY` note in `run_batch`): borrows
+//! captured by the closures are guaranteed to outlive every execution.
+//! Determinism is unaffected — which thread runs a partition never
+//! changes what the partition computes or where it writes, so the
+//! bit-identical-across-worker-counts property of the panel-aligned
+//! partitioners carries over unchanged.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A queued, lifetime-erased batch job.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+#[derive(Default)]
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    /// Signaled when a job is queued or shutdown is requested.
+    ready: Condvar,
+}
+
+/// Completion latch for one `run_batch` call: counts outstanding remote
+/// jobs and holds the first panic payload until the submitter rethrows.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Self {
+        Self {
+            state: Mutex::new(LatchState { remaining, panic: None }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.remaining -= 1;
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner).remaining == 0
+    }
+
+    /// Block until the batch completes or `timeout` elapses. The timeout
+    /// covers the race where a *nested* batch lands helpable jobs in the
+    /// queue after the submitter found it empty and went to sleep.
+    fn wait_done_timeout(&self, timeout: Duration) {
+        let st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        if st.remaining > 0 {
+            match self.done.wait_timeout(st, timeout) {
+                Ok((guard, _timed_out)) => drop(guard),
+                Err(poisoned) => drop(poisoned.into_inner()),
+            }
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner).panic.take()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut q = shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
+    loop {
+        if let Some(job) = q.jobs.pop_front() {
+            drop(q);
+            job(); // wrapped: catches its own panics, signals its latch
+            q = shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
+        } else if q.shutdown {
+            return;
+        } else {
+            q = shared.ready.wait(q).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// Persistent worker pool. Most code never touches this type directly —
+/// [`super::scope_rows`] / [`super::par_map`] go through
+/// [`WorkerPool::global`] — but tests and benches can build private
+/// pools to exercise lifecycle behavior in isolation.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    max_workers: usize,
+}
+
+impl WorkerPool {
+    /// Pool with no threads yet; workers spawn lazily as batches demand
+    /// them, up to `max_workers`, and then persist.
+    pub fn new(max_workers: usize) -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                queue: Mutex::new(Queue::default()),
+                ready: Condvar::new(),
+            }),
+            workers: Mutex::new(Vec::new()),
+            max_workers: max_workers.max(1),
+        }
+    }
+
+    /// The process-wide pool every scheduler entry point uses. Sized to
+    /// twice the available parallelism (batches wider than the pool
+    /// still complete — surplus partitions queue and the caller helps).
+    pub fn global() -> &'static WorkerPool {
+        static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            WorkerPool::new((cores * 2).clamp(4, 64))
+        })
+    }
+
+    /// Workers spawned so far (grows monotonically, never shrinks).
+    pub fn worker_count(&self) -> usize {
+        self.workers.lock().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    fn ensure_workers(&self, want: usize) {
+        let want = want.min(self.max_workers);
+        let mut ws = self.workers.lock().unwrap_or_else(PoisonError::into_inner);
+        while ws.len() < want {
+            let shared = Arc::clone(&self.shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("onedal-pool-{}", ws.len()))
+                .spawn(move || worker_loop(shared))
+                .expect("failed to spawn pool worker");
+            ws.push(handle);
+        }
+    }
+
+    /// Run every job of a batch, one per output partition, and return
+    /// once **all** of them have finished. The last job runs inline on
+    /// the calling thread (a 1-job batch touches no lock at all); the
+    /// rest go to the resident workers. If any job panics, the first
+    /// payload is re-thrown here — after the whole batch has completed,
+    /// so no borrow handed to a sibling job is ever freed early.
+    pub fn run_batch<'a>(&self, mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let Some(local) = jobs.pop() else { return };
+        if jobs.is_empty() {
+            local();
+            return;
+        }
+        let n_remote = jobs.len();
+        self.ensure_workers(n_remote);
+        let latch = Arc::new(Latch::new(n_remote));
+        {
+            let mut q = self.shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            for job in jobs {
+                let latch = Arc::clone(&latch);
+                let wrapped: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
+                    let panic = catch_unwind(AssertUnwindSafe(job)).err();
+                    latch.complete(panic);
+                });
+                // SAFETY: `run_batch` does not return — not even on
+                // panic — until the latch has counted every queued job
+                // complete, and a job signals its latch only after it
+                // has finished running and dropped its captures. The
+                // `'a` borrows therefore strictly outlive the erased
+                // closure's execution on whichever thread runs it.
+                let wrapped: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(wrapped)
+                };
+                q.jobs.push_back(wrapped);
+            }
+            self.shared.ready.notify_all();
+        }
+        // The caller is worker zero: run its own partition, then help.
+        let local_panic = catch_unwind(AssertUnwindSafe(local)).err();
+        self.help_until_done(&latch);
+        let panic = latch.take_panic().or(local_panic);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Drain queue jobs (own batch or anyone else's) until `latch` is
+    /// done. Stealing instead of blocking is what makes nested batches
+    /// deadlock-free: a worker waiting on an inner batch executes that
+    /// batch's jobs itself if no other thread is free.
+    fn help_until_done(&self, latch: &Latch) {
+        loop {
+            if latch.is_done() {
+                return;
+            }
+            let job = {
+                let mut q = self.shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
+                q.jobs.pop_front()
+            };
+            match job {
+                Some(job) => job(),
+                None => latch.wait_done_timeout(Duration::from_micros(200)),
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            q.shutdown = true;
+            self.shared.ready.notify_all();
+        }
+        let mut ws = self.workers.lock().unwrap_or_else(PoisonError::into_inner);
+        for handle in std::mem::take(&mut *ws) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn boxed<'a, F: FnOnce() + Send + 'a>(f: F) -> Box<dyn FnOnce() + Send + 'a> {
+        Box::new(f)
+    }
+
+    #[test]
+    fn batch_runs_every_job_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for round in 0..25 {
+            let counter = AtomicUsize::new(0);
+            let jobs: Vec<_> = (0..8)
+                .map(|_| {
+                    let c = &counter;
+                    boxed(move || {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    })
+                })
+                .collect();
+            pool.run_batch(jobs);
+            assert_eq!(counter.load(Ordering::Relaxed), 8, "round {round}");
+        }
+        assert!(pool.worker_count() >= 1);
+    }
+
+    #[test]
+    fn empty_and_single_batches_are_inline() {
+        let pool = WorkerPool::new(4);
+        pool.run_batch(Vec::new());
+        let hit = AtomicUsize::new(0);
+        pool.run_batch(vec![boxed(|| {
+            hit.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+        // Neither call may have spawned a thread.
+        assert_eq!(pool.worker_count(), 0);
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        // Panic in a remote job (index 0 is queued) and in the local job
+        // (the last index runs on the caller) both propagate.
+        for panic_at in [0usize, 3] {
+            for round in 0..3 {
+                let jobs: Vec<_> = (0..4)
+                    .map(|w| {
+                        boxed(move || {
+                            if w == panic_at {
+                                panic!("injected pool panic {w}");
+                            }
+                        })
+                    })
+                    .collect();
+                let caught = catch_unwind(AssertUnwindSafe(|| pool.run_batch(jobs)));
+                assert!(caught.is_err(), "panic_at={panic_at} round={round}");
+                // The pool must still run fresh work to completion.
+                let ok = AtomicUsize::new(0);
+                let jobs: Vec<_> = (0..4)
+                    .map(|_| {
+                        let ok = &ok;
+                        boxed(move || {
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        })
+                    })
+                    .collect();
+                pool.run_batch(jobs);
+                assert_eq!(ok.load(Ordering::Relaxed), 4);
+            }
+        }
+    }
+
+    #[test]
+    fn nested_batches_complete_on_a_narrow_pool() {
+        // 3 outer jobs each fanning out 3 inner jobs on a pool capped at
+        // two workers: completion requires caller help-stealing.
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..3)
+            .map(|_| {
+                let total = &total;
+                let pool = &pool;
+                boxed(move || {
+                    let inner: Vec<_> = (0..3)
+                        .map(|_| {
+                            boxed(move || {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            })
+                        })
+                        .collect();
+                    pool.run_batch(inner);
+                })
+            })
+            .collect();
+        pool.run_batch(jobs);
+        assert_eq!(total.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<_> = (0..6).map(|_| boxed(|| {})).collect();
+        pool.run_batch(jobs);
+        assert!(pool.worker_count() >= 1);
+        drop(pool); // must terminate promptly, not hang
+    }
+
+    #[test]
+    fn global_pool_is_reusable() {
+        for _ in 0..4 {
+            let sum = AtomicUsize::new(0);
+            let jobs: Vec<_> = (0..5)
+                .map(|w| {
+                    let sum = &sum;
+                    boxed(move || {
+                        sum.fetch_add(w, Ordering::Relaxed);
+                    })
+                })
+                .collect();
+            WorkerPool::global().run_batch(jobs);
+            assert_eq!(sum.load(Ordering::Relaxed), 10);
+        }
+    }
+}

@@ -1,12 +1,21 @@
-//! Scoped-thread row-panel scheduler.
+//! Row-panel scheduler on the persistent worker pool.
 //!
 //! All scheduling is *static*: a partitioner produces ascending row
-//! boundaries, one scoped worker is spawned per part, and each worker
-//! owns a disjoint contiguous row block of the output buffer. Because a
-//! cut never lands inside a micro-panel (the partitioners align cuts),
-//! every tile is computed whole by exactly one worker with the same
-//! instruction order at any worker count — which is what lets the
-//! property suite demand bit-identical results across 1–4 threads.
+//! boundaries, one pool job is submitted per part, and each job owns a
+//! disjoint contiguous row block of the output buffer. Because a cut
+//! never lands inside a micro-panel (the partitioners align cuts), every
+//! tile is computed whole by exactly one job with the same instruction
+//! order at any worker count — which is what lets the property suite
+//! demand bit-identical results across 1–4 threads. Which pool thread
+//! happens to run a job is irrelevant to the result.
+//!
+//! Execution goes through [`super::pool::WorkerPool::global`] — parked
+//! resident threads — instead of the per-call `std::thread::scope` of
+//! PR 1. The old scoped implementation survives as
+//! [`scope_rows_scoped`], the launch-overhead baseline the
+//! `ablate_threads` bench and the pool lifecycle tests compare against.
+
+use super::pool::WorkerPool;
 
 /// Evenly split `units` into at most `parts` contiguous ranges.
 /// Returns ascending boundaries `[0, …, units]` (deduplicated).
@@ -67,14 +76,48 @@ pub fn triangle_bounds(total: usize, parts: usize, align: usize) -> Vec<usize> {
     bounds
 }
 
+/// Split `data` into one disjoint row block per part of `bounds`.
+/// Degenerate shapes are legal: with `stride == 0` (zero-width rows) or
+/// an empty output buffer every block is simply empty.
+#[allow(clippy::type_complexity)]
+fn row_blocks<'d, T>(
+    data: &'d mut [T],
+    stride: usize,
+    bounds: &[usize],
+) -> Vec<(usize, usize, &'d mut [T])> {
+    let parts = bounds.len() - 1;
+    // Only an all-empty buffer (and stride == 0, where len is 0 anyway)
+    // is a legal degenerate. A non-empty buffer whose remainder runs
+    // short — even exactly at a partition boundary — is a genuine
+    // bounds/stride mismatch, and split_at_mut fails loudly on it in
+    // release builds too.
+    let all_empty = data.is_empty();
+    let mut blocks = Vec::with_capacity(parts);
+    let mut rest = data;
+    for w in 0..parts {
+        let len = if all_empty { 0 } else { (bounds[w + 1] - bounds[w]) * stride };
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
+        blocks.push((bounds[w], bounds[w + 1], head));
+        rest = tail;
+    }
+    // Undershoot is just as inconsistent as overshoot: every element of
+    // a non-empty buffer must be handed to exactly one worker.
+    assert!(
+        rest.is_empty(),
+        "scope_rows: bounds/stride leave {} elements unassigned",
+        rest.len()
+    );
+    blocks
+}
+
 /// Run `f(row_lo, row_hi, block)` over disjoint row blocks of `data`
-/// (row-major, `stride` elements per row), one scoped worker per part
-/// described by `bounds` (as produced by the partitioners above).
-/// Worker results are collected **in partition order**, so reductions
+/// (row-major, `stride` elements per row), one persistent-pool job per
+/// part described by `bounds` (as produced by the partitioners above).
+/// Job results are collected **in partition order**, so reductions
 /// combined by the caller are deterministic for a given `bounds`.
 ///
 /// With a single part the closure runs inline on the caller's thread —
-/// the 1-thread path spawns nothing.
+/// the 1-thread path never touches the pool.
 pub fn scope_rows<T, R, F>(data: &mut [T], stride: usize, bounds: &[usize], f: F) -> Vec<R>
 where
     T: Send,
@@ -86,21 +129,61 @@ where
         return Vec::new();
     }
     debug_assert_eq!(bounds[0], 0);
-    debug_assert_eq!(bounds[parts] * stride, data.len());
+    // `stride == 0` and empty-output degenerates are legitimate (every
+    // block is empty); only a genuinely inconsistent row/stride claim
+    // against a non-empty buffer is a caller bug.
+    debug_assert!(
+        data.is_empty() || bounds[parts] * stride == data.len(),
+        "scope_rows: bounds cover {} rows of stride {stride} but data holds {} elements",
+        bounds[parts],
+        data.len()
+    );
     if parts == 1 {
         return vec![f(bounds[0], bounds[1], data)];
     }
-    let mut blocks: Vec<(usize, usize, &mut [T])> = Vec::with_capacity(parts);
-    let mut rest = data;
-    for w in 0..parts {
-        let rows = bounds[w + 1] - bounds[w];
-        let (head, tail) = std::mem::take(&mut rest).split_at_mut(rows * stride);
-        blocks.push((bounds[w], bounds[w + 1], head));
-        rest = tail;
+    let f = &f;
+    let mut results: Vec<Option<R>> = (0..parts).map(|_| None).collect();
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = row_blocks(data, stride, bounds)
+        .into_iter()
+        .zip(results.iter_mut())
+        .map(|((lo, hi, block), slot)| {
+            Box::new(move || {
+                *slot = Some(f(lo, hi, block));
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    WorkerPool::global().run_batch(jobs);
+    results.into_iter().map(|r| r.expect("pool job completed")).collect()
+}
+
+/// Pre-pool reference implementation of [`scope_rows`]: one
+/// `std::thread::scope` spawn per part, identical partitioning contract
+/// and results. Kept as the launch-overhead baseline for the
+/// `ablate_threads` bench and as the oracle the pool lifecycle tests
+/// compare bit-for-bit against.
+pub fn scope_rows_scoped<T, R, F>(data: &mut [T], stride: usize, bounds: &[usize], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, usize, &mut [T]) -> R + Sync,
+{
+    let parts = bounds.len().saturating_sub(1);
+    if parts == 0 {
+        return Vec::new();
+    }
+    debug_assert_eq!(bounds[0], 0);
+    debug_assert!(
+        data.is_empty() || bounds[parts] * stride == data.len(),
+        "scope_rows_scoped: bounds cover {} rows of stride {stride} but data holds {} elements",
+        bounds[parts],
+        data.len()
+    );
+    if parts == 1 {
+        return vec![f(bounds[0], bounds[1], data)];
     }
     let f = &f;
     std::thread::scope(|s| {
-        let handles: Vec<_> = blocks
+        let handles: Vec<_> = row_blocks(data, stride, bounds)
             .into_iter()
             .map(|(lo, hi, block)| s.spawn(move || f(lo, hi, block)))
             .collect();
@@ -108,8 +191,8 @@ where
     })
 }
 
-/// Read-only fan-out: run `f(lo, hi)` per partition and collect the
-/// partial results in partition order.
+/// Read-only fan-out: run `f(lo, hi)` per partition on the persistent
+/// pool and collect the partial results in partition order.
 pub fn par_map<R, F>(bounds: &[usize], f: F) -> Vec<R>
 where
     R: Send,
@@ -123,15 +206,19 @@ where
         return vec![f(bounds[0], bounds[1])];
     }
     let f = &f;
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..parts)
-            .map(|w| {
-                let (lo, hi) = (bounds[w], bounds[w + 1]);
-                s.spawn(move || f(lo, hi))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("parallel worker panicked")).collect()
-    })
+    let mut results: Vec<Option<R>> = (0..parts).map(|_| None).collect();
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = results
+        .iter_mut()
+        .enumerate()
+        .map(|(w, slot)| {
+            let (lo, hi) = (bounds[w], bounds[w + 1]);
+            Box::new(move || {
+                *slot = Some(f(lo, hi));
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    WorkerPool::global().run_batch(jobs);
+    results.into_iter().map(|r| r.expect("pool job completed")).collect()
 }
 
 #[cfg(test)]
@@ -202,6 +289,32 @@ mod tests {
     }
 
     #[test]
+    fn pool_and_scoped_agree() {
+        let rows = 61usize;
+        let stride = 3usize;
+        let seed: Vec<u64> = (0..rows * stride).map(|i| (i as u64) * 7 + 1).collect();
+        let f = |lo: usize, hi: usize, block: &mut [u64]| {
+            let mut acc = 0u64;
+            for (r, row) in block.chunks_mut(stride).enumerate() {
+                for v in row.iter_mut() {
+                    *v = v.wrapping_mul(3).wrapping_add((lo + r) as u64);
+                    acc = acc.wrapping_add(*v);
+                }
+            }
+            (hi, acc)
+        };
+        for parts in 1..=4 {
+            let bounds = even_bounds(rows, parts);
+            let mut a = seed.clone();
+            let mut b = seed.clone();
+            let pa = scope_rows(&mut a, stride, &bounds, f);
+            let pb = scope_rows_scoped(&mut b, stride, &bounds, f);
+            assert_eq!(pa, pb, "parts={parts}");
+            assert_eq!(a, b, "parts={parts}");
+        }
+    }
+
+    #[test]
     fn par_map_collects_in_order() {
         let bounds = even_bounds(40, 4);
         let parts = par_map(&bounds, |lo, hi| (lo, hi));
@@ -217,5 +330,28 @@ mod tests {
         let r = scope_rows(&mut empty, 3, &b, |_, _, _| 1usize);
         assert!(r.is_empty() || r.iter().sum::<usize>() == 0);
         assert!(par_map::<usize, _>(&[], |_, _| 1).is_empty());
+    }
+
+    /// Regression (ISSUE 2): the old `debug_assert_eq!(rows·stride,
+    /// len)` panicked on the legitimate degenerate shapes — zero-width
+    /// rows (`stride == 0`) and an all-empty output partitioned with a
+    /// nonzero stride. Both must schedule empty blocks instead.
+    #[test]
+    fn stride_zero_and_empty_output_are_legal() {
+        let mut zero_width: Vec<f64> = Vec::new();
+        let partials = scope_rows(&mut zero_width, 0, &[0, 2, 5], |lo, hi, block| {
+            assert!(block.is_empty());
+            hi - lo
+        });
+        assert_eq!(partials, vec![2, 3]);
+
+        let mut empty_out: Vec<f64> = Vec::new();
+        let partials = scope_rows(&mut empty_out, 4, &[0, 1, 3], |_, _, block| block.len());
+        assert_eq!(partials, vec![0, 0]);
+
+        // The scoped baseline accepts the same degenerates.
+        let mut empty_out2: Vec<f64> = Vec::new();
+        let partials = scope_rows_scoped(&mut empty_out2, 4, &[0, 1, 3], |_, _, block| block.len());
+        assert_eq!(partials, vec![0, 0]);
     }
 }

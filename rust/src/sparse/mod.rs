@@ -19,4 +19,4 @@ pub mod csr;
 pub mod ops;
 
 pub use csr::{CsrMatrix, IndexBase, Inspection};
-pub use ops::{csrmm, csrmm_threads, csrmultd, csrmv, SparseOp};
+pub use ops::{csrmm, csrmm_threads, csrmultd, csrmv, csrmv_threads, SparseOp};

@@ -12,6 +12,13 @@
 //! traversal on A, column traversal on C), for `csrmultd(AᵀB)` the
 //! i-j-k nest that makes both the C traversal column-wise and the A/B
 //! traversals row-wise.
+//!
+//! `csrmm` and `csrmv` are threaded on the persistent worker pool via
+//! their `*_threads` entry points — **both** `op` variants: NoTranspose
+//! partitions output rows directly; Transpose runs the input-keyed
+//! chunk-scratch scheme described at [`csrmm_threads`]. Results are
+//! bit-identical at any worker count. β == 0 overwrites the output
+//! without reading it (`fill(0)`), matching the dense BLAS contract.
 
 use super::csr::{CsrMatrix, IndexBase};
 use crate::dtype::Float;
@@ -26,11 +33,78 @@ pub enum SparseOp {
     Transpose,
 }
 
+/// Fixed chunk count of the Transpose scatter paths. Chunk boundaries
+/// depend only on the *input* (never on the requested worker count), so
+/// scratch contents and the ordered merge replay identically whatever
+/// the parallelism — that is what keeps the parallel Transpose kernels
+/// bit-identical across 1–N workers.
+const T_CHUNKS: usize = 8;
+/// Minimum scatter flop volume before the Transpose paths switch from
+/// the sequential sweep to per-chunk scratch buffers.
+const T_SCRATCH_MIN_WORK: usize = 1 << 14;
+
+/// The chunked Transpose path also zero-fills and merges
+/// `chunks · out_len` scratch elements, so the useful scatter work must
+/// dominate that overhead too (hyper-sparse matrices with huge outputs
+/// stay on the sequential sweep). Both operands depend only on the
+/// input — never on the requested worker count — so chunking remains
+/// deterministic and the bit-identity contract holds.
+fn transpose_chunks(rows: usize, work: usize, out_len: usize) -> usize {
+    let chunks = T_CHUNKS.min(rows.max(1));
+    if work < T_SCRATCH_MIN_WORK || work < chunks.saturating_mul(out_len) {
+        1
+    } else {
+        chunks
+    }
+}
+
+/// Chunk-scratch executor shared by the two Transpose scatter kernels:
+/// runs `scatter(row_lo, row_hi, scratch)` once per input-keyed chunk of
+/// A's rows (chunk boundaries never depend on `threads` — the
+/// bit-identity invariant lives here, in one place), collecting one
+/// zero-initialized scratch of `out_len` per chunk, then merges the
+/// scratches into `out` in ascending chunk order.
+fn scatter_chunked<T: Float, F>(
+    rows: usize,
+    chunks: usize,
+    threads: usize,
+    out_len: usize,
+    out: &mut [T],
+    scatter: F,
+) where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let cbounds = crate::parallel::even_bounds(rows, chunks);
+    let nchunks = cbounds.len() - 1;
+    let workers = crate::parallel::effective_threads(threads, nchunks, 1);
+    let wbounds = crate::parallel::even_bounds(nchunks, workers);
+    let (cbounds, scatter) = (&cbounds, &scatter);
+    let partials = crate::parallel::par_map(&wbounds, |clo, chi| {
+        (clo..chi)
+            .map(|ci| {
+                let mut scratch = vec![T::ZERO; out_len];
+                scatter(cbounds[ci], cbounds[ci + 1], &mut scratch);
+                scratch
+            })
+            .collect::<Vec<_>>()
+    });
+    // Deterministic partition-order merge.
+    for scratch in partials.into_iter().flatten() {
+        for (ov, &sv) in out.iter_mut().zip(&scratch) {
+            *ov += sv;
+        }
+    }
+}
+
 /// `C ← α·op(A)·B + β·C` — sparse×dense → dense (row-major `B`, `C`),
 /// on the process-default worker count (see [`csrmm_threads`]).
 ///
 /// `op=NoTranspose`: `A (m×k)`, `B (k×n)`, `C (m×n)`.
 /// `op=Transpose`  : `A (k×m)`, `B (k×n)`, `C (m×n)`.
+///
+/// Both `op` variants are multithreaded (the Transpose path through the
+/// chunk-scratch merge documented at [`csrmm_threads`]) and both are
+/// bit-identical across worker counts. `β == 0` overwrites `C`.
 pub fn csrmm<T: Float>(
     op: SparseOp,
     alpha: T,
@@ -47,11 +121,18 @@ pub fn csrmm<T: Float>(
 /// `Context::threads()` here.
 ///
 /// `op=NoTranspose` is a row traversal of both `A` and `C`, so C's row
-/// blocks fan out across scoped workers (each output row is produced
+/// blocks fan out across pool workers (each output row is produced
 /// whole by one worker — bit-identical at any worker count).
-/// `op=Transpose` scatters into C rows keyed by A's column indices and
-/// stays sequential (the paper's row-traversal analysis, §IV-B: the
-/// transpose nest has no disjoint output partition without a CSC echo).
+///
+/// `op=Transpose` scatters into C rows keyed by A's column indices, so
+/// workers cannot own disjoint C row blocks directly. Above a small
+/// work threshold, A's rows are cut into a **fixed, input-keyed** set of
+/// chunks; each chunk accumulates its contributions into a private
+/// scratch C (in row order) and the scratches are merged into C in
+/// chunk order. Chunking never depends on `threads`, so the merge
+/// replays identically and this path is bit-identical across worker
+/// counts too (PR 1 silently ignored `threads` here and ran
+/// sequentially).
 #[allow(clippy::too_many_arguments)]
 pub fn csrmm_threads<T: Float>(
     op: SparseOp,
@@ -73,13 +154,7 @@ pub fn csrmm_threads<T: Float>(
     if c.len() != m * n {
         return Err(Error::Shape(format!("csrmm: C length {} != m*n = {m}x{n}", c.len())));
     }
-    if beta == T::ZERO {
-        c.fill(T::ZERO);
-    } else if beta != T::ONE {
-        for v in c.iter_mut() {
-            *v *= beta;
-        }
-    }
+    crate::blas::beta_scale(beta, c);
     match op {
         SparseOp::NoTranspose => {
             // Row traversal of A; C row i accumulates α·a_ik · B[k,:].
@@ -103,16 +178,34 @@ pub fn csrmm_threads<T: Float>(
             });
         }
         SparseOp::Transpose => {
-            // (AᵀB)[j,:] += a_ij · B[i,:] — still a row traversal of A.
-            for i in 0..a.rows() {
-                let brow = &b[i * n..(i + 1) * n];
-                for (j, av) in a.row_entries(i) {
-                    let scaled = alpha * av;
-                    let crow = &mut c[j * n..(j + 1) * n];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv = scaled.mul_add(bv, *cv);
+            // (AᵀB)[j,:] += a_ij · B[i,:] — still a row traversal of A,
+            // scattering into C. Per-chunk scratch + ordered merge (see
+            // the docstring) when the work clears the threshold.
+            let chunks = transpose_chunks(a.rows(), a.nnz().saturating_mul(n), m * n);
+            if chunks == 1 {
+                for i in 0..a.rows() {
+                    let brow = &b[i * n..(i + 1) * n];
+                    for (j, av) in a.row_entries(i) {
+                        let scaled = alpha * av;
+                        let crow = &mut c[j * n..(j + 1) * n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv = scaled.mul_add(bv, *cv);
+                        }
                     }
                 }
+            } else {
+                scatter_chunked(a.rows(), chunks, threads, m * n, c, |r0, r1, scratch| {
+                    for i in r0..r1 {
+                        let brow = &b[i * n..(i + 1) * n];
+                        for (j, av) in a.row_entries(i) {
+                            let scaled = alpha * av;
+                            let srow = &mut scratch[j * n..(j + 1) * n];
+                            for (sv, &bv) in srow.iter_mut().zip(brow) {
+                                *sv = scaled.mul_add(bv, *sv);
+                            }
+                        }
+                    }
+                });
             }
         }
     }
@@ -179,9 +272,8 @@ pub fn csrmultd<T: Float>(
 }
 
 /// `y ← α·op(A)·x + β·y` — the 4-array CSR matrix–vector product
-/// (§IV-B-2; index arrays may be 0- or 1-based).
-///
-/// Both kernels use a row-order traversal of `A` (the paper's choice).
+/// (§IV-B-2; index arrays may be 0- or 1-based), on the process-default
+/// worker count (see [`csrmv_threads`]). `β == 0` overwrites `y`.
 pub fn csrmv<T: Float>(
     op: SparseOp,
     alpha: T,
@@ -189,6 +281,27 @@ pub fn csrmv<T: Float>(
     x: &[T],
     beta: T,
     y: &mut [T],
+) -> Result<()> {
+    csrmv_threads(op, alpha, a, x, beta, y, crate::parallel::default_threads())
+}
+
+/// [`csrmv`] with an explicit worker count — the tall-skinny inference
+/// entry the algorithm layer routes `Context::threads()` into.
+///
+/// Both kernels keep the paper's row-order traversal of `A`.
+/// `op=NoTranspose` partitions `y` directly (each element is reduced
+/// whole by one worker). `op=Transpose` scatters by column index and
+/// uses the same input-keyed chunk-scratch merge as
+/// [`csrmm_threads`] — per-chunk scratch vectors merged in fixed chunk
+/// order. Both paths are bit-identical across worker counts.
+pub fn csrmv_threads<T: Float>(
+    op: SparseOp,
+    alpha: T,
+    a: &CsrMatrix<T>,
+    x: &[T],
+    beta: T,
+    y: &mut [T],
+    threads: usize,
 ) -> Result<()> {
     let (out_len, in_len) = match op {
         SparseOp::NoTranspose => (a.rows(), a.cols()),
@@ -200,29 +313,39 @@ pub fn csrmv<T: Float>(
     if y.len() != out_len {
         return Err(Error::Shape(format!("csrmv: y length {} != {out_len}", y.len())));
     }
-    if beta == T::ZERO {
-        y.fill(T::ZERO);
-    } else if beta != T::ONE {
-        for v in y.iter_mut() {
-            *v *= beta;
-        }
-    }
+    crate::blas::beta_scale(beta, y);
     match op {
         SparseOp::NoTranspose => {
-            for i in 0..a.rows() {
-                let mut acc = T::ZERO;
-                for (j, av) in a.row_entries(i) {
-                    acc = av.mul_add(x[j], acc);
+            let workers = crate::parallel::effective_threads(threads, a.nnz(), 1 << 13);
+            let bounds = crate::parallel::even_bounds(a.rows(), workers);
+            crate::parallel::scope_rows(y, 1, &bounds, |lo, hi, yblock| {
+                for i in lo..hi {
+                    let mut acc = T::ZERO;
+                    for (j, av) in a.row_entries(i) {
+                        acc = av.mul_add(x[j], acc);
+                    }
+                    yblock[i - lo] = alpha.mul_add(acc, yblock[i - lo]);
                 }
-                y[i] = alpha.mul_add(acc, y[i]);
-            }
+            });
         }
         SparseOp::Transpose => {
-            for i in 0..a.rows() {
-                let axi = alpha * x[i];
-                for (j, av) in a.row_entries(i) {
-                    y[j] = axi.mul_add(av, y[j]);
+            let chunks = transpose_chunks(a.rows(), a.nnz(), out_len);
+            if chunks == 1 {
+                for i in 0..a.rows() {
+                    let axi = alpha * x[i];
+                    for (j, av) in a.row_entries(i) {
+                        y[j] = axi.mul_add(av, y[j]);
+                    }
                 }
+            } else {
+                scatter_chunked(a.rows(), chunks, threads, out_len, y, |r0, r1, scratch| {
+                    for i in r0..r1 {
+                        let axi = alpha * x[i];
+                        for (j, av) in a.row_entries(i) {
+                            scratch[j] = axi.mul_add(av, scratch[j]);
+                        }
+                    }
+                });
             }
         }
     }
@@ -275,6 +398,24 @@ mod tests {
             for (u, v) in c1.iter().zip(&c2) {
                 assert!((u - v).abs() < 1e-9, "op={op:?}");
             }
+        }
+    }
+
+    /// The Transpose chunk-scratch path (engaged only above the work
+    /// threshold) still matches the dense oracle.
+    #[test]
+    fn csrmm_transpose_chunked_matches_dense() {
+        let mut e = Mt19937::new(28);
+        let a = make_sparse_csr(&mut e, 300, 120, 0.2); // nnz·n ≫ threshold
+        let n = 6;
+        let b: Vec<f64> = (0..300 * n).map(|i| (i % 17) as f64 * 0.13 - 1.1).collect();
+        let c0: Vec<f64> = (0..120 * n).map(|i| (i % 5) as f64 * 0.2).collect();
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        csrmm(SparseOp::Transpose, 1.4, &a, &b, n, 0.7, &mut c1).unwrap();
+        dense_ref(SparseOp::Transpose, 1.4, &a, &b, n, 0.7, &mut c2);
+        for (u, v) in c1.iter().zip(&c2) {
+            assert!((u - v).abs() < 1e-9);
         }
     }
 
@@ -385,27 +526,76 @@ mod tests {
         assert!(csrmm(SparseOp::NoTranspose, 1.0, &a, &b, 4, 0.0, &mut c).is_err());
     }
 
+    /// Thread-count bit-identity for **both** op variants — including
+    /// the Transpose path PR 1 left sequential (sized past the scratch
+    /// threshold so the chunked scheme really engages).
     #[test]
     fn csrmm_thread_counts_bit_identical() {
         let mut e = Mt19937::new(27);
-        let a = make_sparse_csr(&mut e, 53, 37, 0.2);
-        let n = 9;
-        let b: Vec<f64> = (0..37 * n).map(|i| (i % 11) as f64 * 0.21 - 1.0).collect();
-        let mut base = vec![0.5f64; 53 * n];
-        csrmm_threads(SparseOp::NoTranspose, 1.3, &a, &b, n, 0.6, &mut base, 1).unwrap();
-        for threads in 2..=4 {
-            let mut c = vec![0.5f64; 53 * n];
-            csrmm_threads(SparseOp::NoTranspose, 1.3, &a, &b, n, 0.6, &mut c, threads).unwrap();
-            for (u, v) in base.iter().zip(&c) {
-                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+        for op in [SparseOp::NoTranspose, SparseOp::Transpose] {
+            // nnz·n ≥ 4·2^14 so the NoTranspose fan-out grants 4 workers
+            // (and the Transpose scratch threshold is well cleared).
+            let a = make_sparse_csr(&mut e, 400, 150, 0.2);
+            let n = 9;
+            let m = if op == SparseOp::NoTranspose { 400 } else { 150 };
+            let k = if op == SparseOp::NoTranspose { 150 } else { 400 };
+            let b: Vec<f64> = (0..k * n).map(|i| (i % 11) as f64 * 0.21 - 1.0).collect();
+            let mut base = vec![0.5f64; m * n];
+            csrmm_threads(op, 1.3, &a, &b, n, 0.6, &mut base, 1).unwrap();
+            for threads in 2..=4 {
+                let mut c = vec![0.5f64; m * n];
+                csrmm_threads(op, 1.3, &a, &b, n, 0.6, &mut c, threads).unwrap();
+                for (u, v) in base.iter().zip(&c) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "op={op:?} threads={threads}");
+                }
             }
+        }
+    }
+
+    /// Same property for the threaded matrix–vector entry.
+    #[test]
+    fn csrmv_thread_counts_bit_identical() {
+        let mut e = Mt19937::new(29);
+        for op in [SparseOp::NoTranspose, SparseOp::Transpose] {
+            // nnz ≈ 36k ≥ 4·2^13: the NoTranspose fan-out grants 4
+            // workers and the Transpose chunk threshold is cleared.
+            let a = make_sparse_csr(&mut e, 600, 400, 0.15);
+            let in_len = if op == SparseOp::NoTranspose { 400 } else { 600 };
+            let out_len = if op == SparseOp::NoTranspose { 600 } else { 400 };
+            let x: Vec<f64> = (0..in_len).map(|i| (i % 9) as f64 * 0.23 - 1.0).collect();
+            let y0: Vec<f64> = (0..out_len).map(|i| (i % 5) as f64 * 0.4).collect();
+            let mut base = y0.clone();
+            csrmv_threads(op, 1.8, &a, &x, 0.3, &mut base, 1).unwrap();
+            for threads in 2..=4 {
+                let mut y = y0.clone();
+                csrmv_threads(op, 1.8, &a, &x, 0.3, &mut y, threads).unwrap();
+                for (u, v) in base.iter().zip(&y) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "op={op:?} threads={threads}");
+                }
+            }
+        }
+    }
+
+    /// β == 0 must overwrite: NaN in y cannot leak through either op.
+    #[test]
+    fn csrmv_beta_zero_overwrites_nan_y() {
+        let mut e = Mt19937::new(30);
+        for op in [SparseOp::NoTranspose, SparseOp::Transpose] {
+            let a = make_sparse_csr(&mut e, 30, 20, 0.25);
+            let in_len = if op == SparseOp::NoTranspose { 20 } else { 30 };
+            let out_len = if op == SparseOp::NoTranspose { 30 } else { 20 };
+            let x: Vec<f64> = (0..in_len).map(|i| i as f64 * 0.1 - 1.0).collect();
+            let mut y = vec![f64::NAN; out_len];
+            csrmv(op, 1.0, &a, &x, 0.0, &mut y).unwrap();
+            assert!(y.iter().all(|v| v.is_finite()), "op={op:?} y={y:?}");
         }
     }
 
     #[test]
     fn csrmv_empty_rows_ok() {
         // Matrix with an all-zero row: y for that row must be β·y only.
-        let a = CsrMatrix::new(3, 2, vec![5.0], vec![0], vec![0, 1, 1, 1], IndexBase::Zero).unwrap();
+        let a =
+            CsrMatrix::new(3, 2, vec![5.0], vec![0], vec![0, 1, 1, 1], IndexBase::Zero).unwrap();
         let mut y = vec![1.0f64, 1.0, 1.0];
         csrmv(SparseOp::NoTranspose, 1.0, &a, &[2.0, 3.0], 0.5, &mut y).unwrap();
         assert_eq!(y, vec![10.5, 0.5, 0.5]);

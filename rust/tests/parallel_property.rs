@@ -1,11 +1,16 @@
-//! Property suite for the packed-panel multithreaded BLAS engine:
-//! at every worker count 1–4, `gemm_threads`/`syrk_threads` must
-//! (a) match the naive oracle to 1e-9 and (b) match the single-thread
-//! packed run **bit for bit** — the scheduler only distributes whole
-//! micro-panels, it never changes summation order.
+//! Property suite for the packed-panel multithreaded BLAS engine (now
+//! running on the persistent worker pool): at every worker count 1–4,
+//! `gemm_threads`/`syrk_threads` must (a) match the naive oracle to
+//! 1e-9 and (b) match the single-thread run **bit for bit** — the
+//! scheduler only distributes whole micro-panels (and the sparse
+//! Transpose paths only input-keyed chunks), it never changes summation
+//! order. `gemv_threads`/`csrmv_threads`/`csrmm_threads` carry the same
+//! bit-identity contract on both `op`/transpose variants.
 
-use onedal_sve::blas::{gemm_naive, gemm_threads, syrk_threads, Transpose};
+use onedal_sve::blas::{gemm_naive, gemm_threads, gemv_threads, syrk_threads, Transpose};
 use onedal_sve::rng::{Distribution, Mt19937, Uniform};
+use onedal_sve::sparse::{csrmm_threads, csrmv_threads, SparseOp};
+use onedal_sve::tables::synth::make_sparse_csr;
 
 /// Odd shapes: degenerate rows/columns, primes, and dims past the
 /// MR=4 / NR=8 micro-panel sizes in every direction.
@@ -24,6 +29,8 @@ const SHAPES: &[(usize, usize, usize)] = &[
     (67, 41, 53),
     (96, 80, 64),
     (128, 17, 96),
+    // Straddles the KC=256 k-block edge (one full block + fringe).
+    (24, 19, 300),
 ];
 
 fn rand_mat(e: &mut Mt19937, n: usize) -> Vec<f64> {
@@ -124,6 +131,70 @@ fn prop_syrk_beta_accumulate_symmetric() {
         syrk_threads(m, k, 0.8, &a, 0.9, &mut c, threads);
         for (u, v) in oracle.iter().zip(&c) {
             assert!((u - v).abs() < 1e-9, "threads={threads}");
+        }
+    }
+}
+
+/// The level-2 and sparse threaded entries carry the same contract:
+/// bit-identical across 1–4 workers on **both** transpose/op variants
+/// (including the csrmm/csrmv Transpose scatter paths PR 1 left
+/// sequential), and β == 0 overwrites a NaN output cleanly.
+#[test]
+fn prop_gemv_csrmv_csrmm_bit_identical_every_thread_count() {
+    let mut e = Mt19937::new(2025);
+
+    // gemv, both transpose paths, NaN workspace under β = 0.
+    // m·n ≥ 4·2^14 so the fan-out genuinely grants 4 workers.
+    let (m, n) = (320usize, 220usize);
+    let a = rand_mat(&mut e, m * n);
+    for trans in [false, true] {
+        let (xin, yout) = if trans { (m, n) } else { (n, m) };
+        let x = rand_mat(&mut e, xin);
+        let mut base = vec![f64::NAN; yout];
+        gemv_threads(trans, m, n, 1.1, &a, &x, 0.0, &mut base, 1);
+        assert!(base.iter().all(|v| v.is_finite()), "gemv trans={trans} left NaN");
+        for threads in 2..=4usize {
+            let mut y = vec![f64::NAN; yout];
+            gemv_threads(trans, m, n, 1.1, &a, &x, 0.0, &mut y, threads);
+            for (i, (u, v)) in base.iter().zip(&y).enumerate() {
+                assert_eq!(
+                    u.to_bits(),
+                    v.to_bits(),
+                    "gemv trans={trans} threads={threads} idx={i}"
+                );
+            }
+        }
+    }
+
+    // csrmm + csrmv, both ops, sized past the Transpose scratch
+    // threshold so the chunk-merge scheme really runs.
+    // nnz ≈ 39k: past the Transpose chunk threshold for csrmv (work =
+    // nnz) as well as csrmm (work = nnz·n), and large enough that the
+    // NoTranspose fan-outs really receive 4 workers.
+    let sp = make_sparse_csr(&mut e, 500, 260, 0.3);
+    for op in [SparseOp::NoTranspose, SparseOp::Transpose] {
+        let (rows, cols) = (500usize, 260usize);
+        let (mm, kk) = if op == SparseOp::NoTranspose { (rows, cols) } else { (cols, rows) };
+        let nb = 8usize;
+        let b = rand_mat(&mut e, kk * nb);
+        let c0 = rand_mat(&mut e, mm * nb);
+        let mut cbase = c0.clone();
+        csrmm_threads(op, 1.2, &sp, &b, nb, 0.5, &mut cbase, 1).unwrap();
+        let x = rand_mat(&mut e, kk);
+        let y0 = rand_mat(&mut e, mm);
+        let mut ybase = y0.clone();
+        csrmv_threads(op, 0.9, &sp, &x, 0.4, &mut ybase, 1).unwrap();
+        for threads in 2..=4usize {
+            let mut c = c0.clone();
+            csrmm_threads(op, 1.2, &sp, &b, nb, 0.5, &mut c, threads).unwrap();
+            for (i, (u, v)) in cbase.iter().zip(&c).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "csrmm op={op:?} threads={threads} idx={i}");
+            }
+            let mut y = y0.clone();
+            csrmv_threads(op, 0.9, &sp, &x, 0.4, &mut y, threads).unwrap();
+            for (i, (u, v)) in ybase.iter().zip(&y).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "csrmv op={op:?} threads={threads} idx={i}");
+            }
         }
     }
 }
