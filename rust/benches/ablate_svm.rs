@@ -1,0 +1,165 @@
+//! SVM engine ablation (ISSUE 3): what each of the three cooperating
+//! optimizations buys on a fixed a9a-shaped task —
+//!
+//! * **Boser vs Thunder** (the Fig. 4 training methods, both on the
+//!   shrinking engine);
+//! * **shrinking on vs off** (the Boser-method win: WSS scans and gram
+//!   tiles narrow as training converges — the JSON also records the
+//!   trainers' kernel-entry counters, which shrinking must strictly
+//!   reduce);
+//! * **blocked gram tile vs per-row fetches** (one packed GEMM per
+//!   working set against `RowCache`-era row-by-row computation).
+//!
+//! Results land in `BENCH_svm.json` (repo root when run from `rust/`,
+//! else the current directory) with the same "pending first run"
+//! scaffold convention as `BENCH_blas.json`.
+
+use onedal_sve::algorithms::svm::kernel::SvmKernel;
+use onedal_sve::blas::{dot, pack_b_panels, Transpose};
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::profiling::{BenchResult, Bencher};
+use onedal_sve::tables::synth;
+use std::io::Write as _;
+
+const N: usize = 2_000;
+const D: usize = 32;
+const WS: usize = 64;
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Hand-rolled JSON dump (no serde in the offline image): flat result
+/// rows, per-pair speedups, and the shrinking counters.
+fn write_json(
+    results: &[BenchResult],
+    counters: &[(String, u64, u32, u32)],
+) -> std::io::Result<String> {
+    let path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_svm.json"
+    } else {
+        "BENCH_svm.json"
+    };
+    let mut rows = Vec::new();
+    for r in results {
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"median_ms\": {:.4}, \"mean_ms\": {:.4}, \"samples\": {}}}",
+            json_escape(&r.name),
+            r.median.as_secs_f64() * 1e3,
+            r.mean.as_secs_f64() * 1e3,
+            r.samples
+        ));
+    }
+    let med = |name: &str| {
+        results.iter().find(|r| r.name == name).map(|r| r.median.as_secs_f64())
+    };
+    let mut speedups = Vec::new();
+    for (case, base, test) in [
+        ("boser-shrinking", "svm/boser/shrink-off", "svm/boser/shrink-on"),
+        ("thunder-shrinking", "svm/thunder/shrink-off", "svm/thunder/shrink-on"),
+        ("tile-vs-row", "gram/row-fetch-64", "gram/tile-64"),
+    ] {
+        if let (Some(b), Some(t)) = (med(base), med(test)) {
+            speedups.push(format!(
+                "    {{\"case\": \"{case}\", \"speedup\": {:.3}}}",
+                b / t
+            ));
+        }
+    }
+    let counter_rows: Vec<String> = counters
+        .iter()
+        .map(|(name, entries, shrinks, unshrinks)| {
+            format!(
+                "    {{\"config\": \"{}\", \"kernel_entries\": {entries}, \
+                 \"shrink_events\": {shrinks}, \"unshrink_events\": {unshrinks}}}",
+                json_escape(name)
+            )
+        })
+        .collect();
+    let body = format!(
+        "{{\n  \"bench\": \"ablate_svm\",\n  \
+         \"regenerate\": \"cd rust && cargo bench --bench ablate_svm\",\n  \
+         \"fixtures\": {{\"task\": \"{N}x{D} make_classification sep=1.0, RBF gamma=0.05\", \
+         \"gram\": \"{WS}-row working set x {N} active columns\"}},\n  \
+         \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ],\n  \
+         \"counters\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+        speedups.join(",\n"),
+        counter_rows.join(",\n"),
+    );
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(body.as_bytes())?;
+    Ok(path.to_string())
+}
+
+fn main() {
+    let ctx = Context::builder()
+        .artifact_dir("/nonexistent")
+        .backend(Backend::Vectorized)
+        .build()
+        .unwrap();
+    let mut e = Mt19937::new(34);
+    let (x, y) = synth::make_classification(&mut e, N, D, 1.0);
+    let kernel = SvmKernel::Rbf { gamma: 0.05 };
+    let mut b = Bencher::new(400, 5);
+
+    // --- Boser vs Thunder × shrinking on/off ---
+    // Default cache sizing (8 MB byte budget → ~524 rows of the 2000
+    // active columns): the gram does NOT fit, rows get recomputed, and
+    // shrinking's narrower tiles show up in both the timings and the
+    // kernel_entries counters.
+    let mut counters: Vec<(String, u64, u32, u32)> = Vec::new();
+    for (solver, sname) in [(SvmSolver::Boser, "boser"), (SvmSolver::Thunder, "thunder")] {
+        for shrink in [true, false] {
+            let label = format!("svm/{sname}/shrink-{}", if shrink { "on" } else { "off" });
+            let params = || Svc::params().solver(solver).kernel(kernel).shrinking(shrink);
+            b.bench(&label, || {
+                let m = params().train(&ctx, &x, &y).unwrap();
+                std::hint::black_box(m.n_support());
+            });
+            let m = params().train(&ctx, &x, &y).unwrap();
+            counters.push((
+                label,
+                m.stats.kernel_entries,
+                m.stats.shrink_events,
+                m.stats.unshrink_events,
+            ));
+        }
+    }
+
+    // --- Blocked tile vs per-row gram fetches: one 64-row working set
+    //     against the full active set, tile = one packed GEMM call,
+    //     row = 64 independent gram_row_threads sweeps. ---
+    let norms: Vec<f64> = (0..N).map(|i| dot(x.row(i), x.row(i))).collect();
+    let pb = pack_b_panels(Transpose::Yes, D, N, x.data());
+    let ws_rows: Vec<usize> = (0..WS).map(|i| (i * 31) % N).collect();
+    let mut w = vec![0.0f64; WS * D];
+    let mut wn = vec![0.0f64; WS];
+    for (r, &g) in ws_rows.iter().enumerate() {
+        w[r * D..(r + 1) * D].copy_from_slice(x.row(g));
+        wn[r] = norms[g];
+    }
+    let threads = ctx.threads();
+    let mut tile = vec![0.0f64; WS * N];
+    b.bench("gram/tile-64", || {
+        kernel.gram_tile(&w, &wn, &norms, &pb, &mut tile, threads);
+        std::hint::black_box(tile[0]);
+    });
+    let mut row = vec![0.0f64; N];
+    b.bench("gram/row-fetch-64", || {
+        for &g in &ws_rows {
+            kernel.gram_row_threads(&x, g, &norms, &mut row, threads);
+        }
+        std::hint::black_box(row[0]);
+    });
+
+    b.speedup_table("svm ablation", "shrink-off");
+    match write_json(b.results(), &counters) {
+        Ok(path) => println!("\nrecorded: {path}"),
+        Err(err) => eprintln!("\nfailed to write BENCH_svm.json: {err}"),
+    }
+    for (name, entries, shrinks, unshrinks) in &counters {
+        println!("{name:<24} kernel_entries={entries} shrink={shrinks} unshrink={unshrinks}");
+    }
+}

@@ -36,7 +36,10 @@ fn main() {
                 std::hint::black_box(m.n_support());
             });
         }
-        let model = Svc::params().kernel(SvmKernel::Rbf { gamma: 0.0125 }).train(&opt, &x, &y).unwrap();
+        let model = Svc::params()
+            .kernel(SvmKernel::Rbf { gamma: 0.0125 })
+            .train(&opt, &x, &y)
+            .unwrap();
         for (ctx, rung) in [(&naive, "naive"), (&opt, "optimized")] {
             b.bench(&format!("fig5/svm-a9a-infer/{rung}"), || {
                 std::hint::black_box(model.infer(ctx, &x).unwrap());
@@ -73,7 +76,8 @@ fn main() {
         let (x, _) = synth::make_blobs(&mut e, 500, 3, 100, 0.2);
         for (ctx, rung) in [(&naive, "naive"), (&opt, "optimized")] {
             b.bench(&format!("fig5/dbscan-500x3-train/{rung}"), || {
-                std::hint::black_box(Dbscan::params().eps(1.0).min_pts(3).train(ctx, &x).unwrap().n_clusters);
+                let m = Dbscan::params().eps(1.0).min_pts(3).train(ctx, &x).unwrap();
+                std::hint::black_box(m.n_clusters);
             });
         }
     }
@@ -100,10 +104,12 @@ fn main() {
         let (x, y, _) = synth::make_regression(&mut e, 100_000, 20, 0.1);
         for (ctx, rung) in [(&naive, "naive"), (&opt, "optimized")] {
             b.bench(&format!("fig5/linreg-train/{rung}"), || {
-                std::hint::black_box(LinearRegression::params().train(ctx, &x, &y).unwrap().intercept);
+                let m = LinearRegression::params().train(ctx, &x, &y).unwrap();
+                std::hint::black_box(m.intercept);
             });
             b.bench(&format!("fig5/ridge-train/{rung}"), || {
-                std::hint::black_box(RidgeRegression::params().train(ctx, &x, &y).unwrap().intercept);
+                let m = RidgeRegression::params().train(ctx, &x, &y).unwrap();
+                std::hint::black_box(m.intercept);
             });
         }
     }

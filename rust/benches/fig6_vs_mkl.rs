@@ -20,7 +20,8 @@ fn main() {
     } else {
         None
     };
-    let mut rungs: Vec<(&Context, &str)> = vec![(&reference, "mkl-analogue"), (&opt, "sve-optimized")];
+    let mut rungs: Vec<(&Context, &str)> =
+        vec![(&reference, "mkl-analogue"), (&opt, "sve-optimized")];
     if let Some(a) = artifact.as_ref() {
         rungs.push((a, "aot-artifact"));
     }
@@ -31,7 +32,8 @@ fn main() {
     let (xk, _) = synth::make_blobs(&mut e, 30_000, 20, 10, 1.0);
     for (ctx, rung) in &rungs {
         b.bench(&format!("fig6/kmeans-train/{rung}"), || {
-            std::hint::black_box(KMeans::params().k(10).seed(1).max_iter(15).train(ctx, &xk).unwrap().inertia);
+            let m = KMeans::params().k(10).seed(1).max_iter(15).train(ctx, &xk).unwrap();
+            std::hint::black_box(m.inertia);
         });
     }
 
@@ -39,7 +41,8 @@ fn main() {
     let (xd, _) = synth::make_blobs(&mut e, 4_000, 8, 10, 0.8);
     for (ctx, rung) in &rungs {
         b.bench(&format!("fig6/dbscan-train/{rung}"), || {
-            std::hint::black_box(Dbscan::params().eps(2.0).min_pts(5).train(ctx, &xd).unwrap().n_clusters);
+            let m = Dbscan::params().eps(2.0).min_pts(5).train(ctx, &xd).unwrap();
+            std::hint::black_box(m.n_clusters);
         });
     }
 
@@ -74,13 +77,21 @@ fn main() {
     let (xs, ys) = synth::make_classification(&mut e, 2_000, 40, 1.0);
     for (ctx, rung) in &rungs {
         b.bench(&format!("fig6/svm-train/{rung}"), || {
-            let m = Svc::params().kernel(SvmKernel::Rbf { gamma: 0.025 }).train(ctx, &xs, &ys).unwrap();
+            let m = Svc::params()
+                .kernel(SvmKernel::Rbf { gamma: 0.025 })
+                .train(ctx, &xs, &ys)
+                .unwrap();
             std::hint::black_box(m.n_support());
         });
     }
     for (ctx, rung) in &rungs {
         b.bench(&format!("fig6/forest-train/{rung}"), || {
-            let m = RandomForestClassifier::params().n_trees(8).max_depth(8).sample_frac(0.3).train(ctx, &xs, &ys).unwrap();
+            let m = RandomForestClassifier::params()
+                .n_trees(8)
+                .max_depth(8)
+                .sample_frac(0.3)
+                .train(ctx, &xs, &ys)
+                .unwrap();
             std::hint::black_box(m.n_trees());
         });
     }

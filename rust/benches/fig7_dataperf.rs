@@ -9,7 +9,11 @@ use onedal_sve::prelude::*;
 use onedal_sve::profiling::Bencher;
 use onedal_sve::tables::{synth, DenseTable};
 
-fn selection_train(ctx: &Context, pool: &DenseTable<f64>, labels: &[f64]) -> (DenseTable<f64>, Vec<f64>) {
+fn selection_train(
+    ctx: &Context,
+    pool: &DenseTable<f64>,
+    labels: &[f64],
+) -> (DenseTable<f64>, Vec<f64>) {
     let scorer = LogisticRegression::params().epochs(8).lr(0.3).train(ctx, pool, labels).unwrap();
     let scores = scorer.predict_proba(ctx, pool).unwrap();
     let mut idx: Vec<usize> = (0..pool.rows()).collect();

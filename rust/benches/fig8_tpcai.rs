@@ -35,5 +35,7 @@ fn main() {
     }
 
     b.speedup_table("Fig. 8: TPC-AI segmentation", "sklearn-arm");
-    println!("\nPaper shape: −87.7 % train vs sklearn, −46 % vs MKL; inference parity with MKL.");
+    println!(
+        "\nPaper shape: −87.7 % train vs sklearn, −46 % vs MKL; inference parity with MKL."
+    );
 }

@@ -102,7 +102,11 @@ mod tests {
     use crate::rng::{Distribution, Gaussian, Mt19937};
 
     fn ctx() -> Context {
-        Context::builder().artifact_dir("/nonexistent").backend(Backend::Vectorized).build().unwrap()
+        Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Vectorized)
+            .build()
+            .unwrap()
     }
 
     fn dataset(seed: u32, n: usize, p: usize) -> DenseTable<f64> {

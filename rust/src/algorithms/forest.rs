@@ -103,9 +103,17 @@ impl ForestParams {
         // Static round-robin sharding of trees over worker threads.
         let mut tree_results: Vec<Option<Result<DecisionTree>>> =
             (0..self.n_trees).map(|_| None).collect();
+        let shard_len = self.n_trees.div_ceil(n_threads);
+        let stream_chunks: Vec<Vec<_>> = streams
+            .into_iter()
+            .enumerate()
+            .collect::<Vec<_>>()
+            .chunks(shard_len)
+            .map(|c| c.to_vec())
+            .collect();
         std::thread::scope(|scope| {
             let mut handles = Vec::new();
-            for (shard, chunk) in streams.into_iter().enumerate().collect::<Vec<_>>().chunks(self.n_trees.div_ceil(n_threads)).map(|c| c.to_vec()).enumerate() {
+            for (shard, chunk) in stream_chunks.into_iter().enumerate() {
                 let tp = tree_params.clone();
                 handles.push((shard, scope.spawn(move || {
                     let mut local = Vec::new();
@@ -206,8 +214,15 @@ mod tests {
     fn deterministic_given_seed_regardless_of_threads() {
         let mut e = Mt19937::new(2);
         let (x, y) = make_classification(&mut e, 300, 5, 1.0);
-        let c1 = Context::builder().artifact_dir("/nonexistent").backend(Backend::Vectorized).threads(1).build().unwrap();
-        let c4 = Context::builder().artifact_dir("/nonexistent").backend(Backend::Vectorized).threads(4).build().unwrap();
+        let mk = |t: usize| {
+            Context::builder()
+                .artifact_dir("/nonexistent")
+                .backend(Backend::Vectorized)
+                .threads(t)
+                .build()
+                .unwrap()
+        };
+        let (c1, c4) = (mk(1), mk(4));
         let m1 = RandomForestClassifier::params().n_trees(8).seed(99).train(&c1, &x, &y).unwrap();
         let m4 = RandomForestClassifier::params().n_trees(8).seed(99).train(&c4, &x, &y).unwrap();
         // Family streams are per-tree, so thread count must not change

@@ -153,17 +153,10 @@ impl KMeansParams {
         for it in 0..self.max_iter {
             iterations = it + 1;
             let new_inertia = assign_step(ctx, x, &centroids, &mut assign)?;
-            // Update step: mean of assigned points per cluster.
-            let mut counts = vec![0usize; self.k];
-            let mut sums = vec![0.0f64; self.k * d];
-            for i in 0..n {
-                let c = assign[i];
-                counts[c] += 1;
-                let srow = &mut sums[c * d..(c + 1) * d];
-                for (s, &v) in srow.iter_mut().zip(x.row(i)) {
-                    *s += v;
-                }
-            }
+            // Update step: mean of assigned points per cluster,
+            // parallelized over fixed input-keyed chunks (see
+            // [`update_sums`]).
+            let (counts, sums) = update_sums(x, &assign, self.k, ctx.threads());
             for c in 0..self.k {
                 if counts[c] == 0 {
                     continue; // keep empty cluster's previous centroid
@@ -192,6 +185,79 @@ impl KMeansModel {
         assign_step(ctx, x, &self.centroids, &mut assign)?;
         Ok(assign)
     }
+}
+
+/// Fixed chunk count of the parallel centroid-update scatter. Chunk
+/// boundaries depend only on the input size — never on the worker
+/// count — so partial sums and the ordered merge replay identically
+/// at any parallelism (the same invariant as the sparse Transpose
+/// kernels).
+const UPDATE_CHUNKS: usize = 8;
+/// Minimum accumulate work before per-chunk scratches pay for their
+/// zero-fill and merge.
+const UPDATE_MIN_WORK: usize = 1 << 14;
+
+/// Centroid update scatter: per-cluster point counts and coordinate
+/// sums. Points scatter into their assigned cluster's row, so workers
+/// cannot own disjoint output rows; instead the rows of `x` are cut
+/// into a fixed, input-keyed set of chunks, each chunk accumulates into
+/// a private `(counts, sums)` scratch in row order, and the scratches
+/// merge in ascending chunk order — bit-identical across 1–N workers.
+fn update_sums(
+    x: &DenseTable<f64>,
+    assign: &[usize],
+    k: usize,
+    threads: usize,
+) -> (Vec<usize>, Vec<f64>) {
+    let n = x.rows();
+    let d = x.cols();
+    let mut counts = vec![0usize; k];
+    let mut sums = vec![0.0f64; k * d];
+    let work = n.saturating_mul(d);
+    let chunks = if work < UPDATE_MIN_WORK || work < UPDATE_CHUNKS.saturating_mul(k * d) {
+        1
+    } else {
+        UPDATE_CHUNKS.min(n.max(1))
+    };
+    let accumulate = |lo: usize, hi: usize, counts: &mut [usize], sums: &mut [f64]| {
+        for i in lo..hi {
+            let c = assign[i];
+            counts[c] += 1;
+            let srow = &mut sums[c * d..(c + 1) * d];
+            for (s, &v) in srow.iter_mut().zip(x.row(i)) {
+                *s += v;
+            }
+        }
+    };
+    if chunks == 1 {
+        accumulate(0, n, &mut counts, &mut sums);
+        return (counts, sums);
+    }
+    let cbounds = parallel::even_bounds(n, chunks);
+    let nchunks = cbounds.len() - 1;
+    let workers = parallel::effective_threads(threads, nchunks, 1);
+    let wbounds = parallel::even_bounds(nchunks, workers);
+    let (cbounds, accumulate) = (&cbounds, &accumulate);
+    let partials = parallel::par_map(&wbounds, |clo, chi| {
+        (clo..chi)
+            .map(|ci| {
+                let mut pc = vec![0usize; k];
+                let mut ps = vec![0.0f64; k * d];
+                accumulate(cbounds[ci], cbounds[ci + 1], &mut pc, &mut ps);
+                (pc, ps)
+            })
+            .collect::<Vec<_>>()
+    });
+    // Deterministic ascending-chunk merge.
+    for (pc, ps) in partials.into_iter().flatten() {
+        for (c, &cnt) in pc.iter().enumerate() {
+            counts[c] += cnt;
+        }
+        for (sv, &pv) in sums.iter_mut().zip(&ps) {
+            *sv += pv;
+        }
+    }
+    (counts, sums)
 }
 
 /// One assignment pass; returns the inertia. Dispatches on the ladder.
@@ -431,6 +497,42 @@ mod tests {
             let it = assign_gemm(&x, &model.centroids, &mut a, true, threads);
             assert_eq!(a, a1, "threads={threads}");
             assert_eq!(it.to_bits(), i1.to_bits(), "threads={threads}");
+        }
+    }
+
+    /// The centroid *update* step is now parallel too: whole trainings
+    /// must be bit-identical across worker counts (chunking is
+    /// input-keyed, merges run in fixed chunk order).
+    #[test]
+    fn training_bit_stable_across_threads() {
+        let mut e = Mt19937::new(12);
+        let (x, _) = make_blobs(&mut e, 6_000, 8, 5, 1.0);
+        let mk_ctx = |t: usize| {
+            Context::builder()
+                .artifact_dir("/nonexistent")
+                .backend(Backend::Vectorized)
+                .threads(t)
+                .build()
+                .unwrap()
+        };
+        let base = KMeans::params().k(5).seed(3).max_iter(6).train(&mk_ctx(1), &x).unwrap();
+        for threads in 2..=4 {
+            let m = KMeans::params().k(5).seed(3).max_iter(6).train(&mk_ctx(threads), &x).unwrap();
+            for (u, v) in base.centroids.data().iter().zip(m.centroids.data()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
+            assert_eq!(base.inertia.to_bits(), m.inertia.to_bits(), "threads={threads}");
+            assert_eq!(base.iterations, m.iterations, "threads={threads}");
+        }
+        // The update scatter itself, in isolation.
+        let assign: Vec<usize> = (0..6_000).map(|i| i % 5).collect();
+        let (c1, s1) = update_sums(&x, &assign, 5, 1);
+        for threads in 2..=4 {
+            let (c, s) = update_sums(&x, &assign, 5, threads);
+            assert_eq!(c, c1, "threads={threads}");
+            for (u, v) in s1.iter().zip(&s) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
         }
     }
 

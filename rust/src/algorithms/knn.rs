@@ -68,7 +68,8 @@ impl KnnModel {
             for &(idx, _) in row {
                 votes[self.y[idx] as usize] += 1;
             }
-            let best = votes.iter().enumerate().max_by_key(|&(i, &v)| (v, usize::MAX - i)).unwrap().0;
+            let best =
+                votes.iter().enumerate().max_by_key(|&(i, &v)| (v, usize::MAX - i)).unwrap().0;
             out.push(best as f64);
         }
         Ok(out)

@@ -100,7 +100,11 @@ mod tests {
     use crate::rng::{Distribution, Gaussian, Mt19937};
 
     fn ctx() -> Context {
-        Context::builder().artifact_dir("/nonexistent").backend(Backend::Vectorized).build().unwrap()
+        Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Vectorized)
+            .build()
+            .unwrap()
     }
 
     /// Data stretched along a known direction: PCA must find it.

@@ -1,9 +1,14 @@
-//! SVM kernel functions, gram-row computation and the LRU row cache the
-//! Thunder method amortizes row computation with.
+//! SVM kernel functions, gram-row/tile computation and the caches the
+//! solver amortizes kernel evaluation with: the legacy per-row LRU
+//! [`RowCache`] (kept as the ablation baseline) and the blocked
+//! [`TileCache`] the shrinking solver trains on — rows over the
+//! *compacted active set*, computed in whole working-set blocks by one
+//! packed GEMM call and compacted in place when the active set shrinks.
 
-use crate::blas::{dot, gemv_threads, sqdist};
+use crate::blas::{dot, gemm_prepacked_threads, gemv_threads, sqdist, PackedB, Transpose};
 use crate::tables::DenseTable;
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 /// Kernel function.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -80,6 +85,198 @@ impl SvmKernel {
             SvmKernel::Linear => norms.to_vec(),
             SvmKernel::Rbf { .. } => vec![1.0; x.rows()],
         }
+    }
+
+    /// Blocked gram tile `K(W, P)` (`ws × na`) in **one** packed GEMM
+    /// call — the oneDAL `KiBlock` computed as a block instead of row
+    /// by row. `w` holds the gathered working-set rows (`ws × d`,
+    /// row-major), `pb` the pre-packed active-set panel (`op(B) = Pᵀ`
+    /// from [`crate::blas::pack_b_panels`], packed once per shrink
+    /// generation), `w_norms`/`p_norms` the squared row norms of each
+    /// side for the RBF distance expansion.
+    ///
+    /// The cross-term GEMM distributes whole micro-panels and the RBF
+    /// transform is elementwise, so the tile is bit-identical at any
+    /// worker count — and independent of how the rows are batched into
+    /// tiles, because each output element is one dot product plus an
+    /// elementwise transform.
+    pub fn gram_tile(
+        &self,
+        w: &[f64],
+        w_norms: &[f64],
+        p_norms: &[f64],
+        pb: &PackedB<f64>,
+        out: &mut [f64],
+        threads: usize,
+    ) {
+        let ws = w_norms.len();
+        let na = pb.n();
+        debug_assert_eq!(w.len(), ws * pb.k());
+        debug_assert_eq!(p_norms.len(), na);
+        debug_assert_eq!(out.len(), ws * na);
+        gemm_prepacked_threads(Transpose::No, ws, 1.0, w, pb, 0.0, out, threads);
+        if let SvmKernel::Rbf { gamma } = *self {
+            let work = ws.saturating_mul(na);
+            let workers = crate::parallel::effective_threads(threads, work, 1 << 13);
+            let bounds = crate::parallel::even_bounds(ws, workers);
+            crate::parallel::scope_rows(out, na, &bounds, |r0, _r1, block| {
+                for (r, row) in block.chunks_mut(na).enumerate() {
+                    let ni = w_norms[r0 + r];
+                    for (v, &nj) in row.iter_mut().zip(p_norms) {
+                        let d2 = (ni + nj - 2.0 * *v).max(0.0);
+                        *v = (-gamma * d2).exp();
+                    }
+                }
+            });
+        }
+    }
+}
+
+/// LRU cache of gram rows over the **compacted active set** — the
+/// shrinking solver's kernel cache. Differences from [`RowCache`]:
+///
+/// * rows are `na` wide (the current active-set size), not `n`, so the
+///   same byte budget holds more rows as training shrinks;
+/// * capacity is sized from **bytes** (oneDAL's `cacheSizeInBytes`)
+///   by the solver, not from a fixed row count;
+/// * misses are computed in **blocks**: one [`SvmKernel::gram_tile`]
+///   call per fetch covers every missing row of a working set;
+/// * [`TileCache::compact`] drops shrunk-out *columns* from every
+///   cached row in place, so a shrink event keeps the cache warm
+///   instead of flushing it.
+pub struct TileCache {
+    capacity: usize,
+    width: usize,
+    rows: HashMap<usize, Arc<Vec<f64>>>,
+    order: VecDeque<usize>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl TileCache {
+    /// `capacity` rows of `width` entries (both clamped to ≥ 2/≥ 0 by
+    /// the caller's sizing rule).
+    pub fn new(capacity: usize, width: usize) -> Self {
+        Self {
+            capacity: capacity.max(2),
+            width,
+            rows: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Current row width (= active-set size the rows were computed at).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Re-size the row budget (called after shrink events: the same
+    /// byte budget buys more, narrower rows).
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity.max(2);
+        while self.rows.len() > self.capacity {
+            if let Some(evict) = self.order.pop_front() {
+                self.rows.remove(&evict);
+            }
+        }
+    }
+
+    /// Fetch the gram rows for `keys` (training-set indices, assumed
+    /// distinct), computing **all** misses with a single call to
+    /// `compute(miss_keys, tile)` — `tile` is the row-major
+    /// `miss_keys.len() × width` output block. Returns the rows in
+    /// `keys` order.
+    pub fn fetch_block<F>(&mut self, keys: &[usize], compute: F) -> Vec<Arc<Vec<f64>>>
+    where
+        F: FnOnce(&[usize], &mut [f64]),
+    {
+        let miss_keys: Vec<usize> =
+            keys.iter().copied().filter(|k| !self.rows.contains_key(k)).collect();
+        self.hits += (keys.len() - miss_keys.len()) as u64;
+        self.misses += miss_keys.len() as u64;
+        if !miss_keys.is_empty() {
+            let mut tile = vec![0.0f64; miss_keys.len() * self.width];
+            compute(&miss_keys, &mut tile);
+            let mut rest = tile;
+            for &k in &miss_keys {
+                let tail = rest.split_off(self.width);
+                self.insert(k, Arc::new(rest), keys);
+                rest = tail;
+            }
+        }
+        keys.iter()
+            .map(|k| {
+                self.refresh(*k);
+                self.rows.get(k).expect("row present after fetch").clone()
+            })
+            .collect()
+    }
+
+    /// Insert with LRU eviction that never evicts a key of the
+    /// in-flight request (`pinned`); the solver guarantees
+    /// `capacity ≥ 2·ws_size` so a whole working set always fits.
+    fn insert(&mut self, key: usize, row: Arc<Vec<f64>>, pinned: &[usize]) {
+        let mut scanned = 0;
+        while self.rows.len() >= self.capacity && scanned < self.order.len() {
+            let candidate = self.order.pop_front().expect("order tracks rows");
+            if pinned.contains(&candidate) {
+                self.order.push_back(candidate);
+                scanned += 1;
+            } else {
+                self.rows.remove(&candidate);
+            }
+        }
+        self.order.push_back(key);
+        self.rows.insert(key, row);
+    }
+
+    fn refresh(&mut self, key: usize) {
+        if let Some(pos) = self.order.iter().position(|&k| k == key) {
+            self.order.remove(pos);
+            self.order.push_back(key);
+        }
+    }
+
+    /// Shrink compaction: keep only the active-local `keep` columns
+    /// (ascending positions into the *current* width) of every cached
+    /// row. Cached kernel values stay valid because shrinking removes
+    /// points, it never reorders the survivors.
+    pub fn compact(&mut self, keep: &[usize]) {
+        debug_assert!(keep.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(keep.iter().all(|&l| l < self.width));
+        self.width = keep.len();
+        for row in self.rows.values_mut() {
+            let narrowed: Vec<f64> = keep.iter().map(|&l| row[l]).collect();
+            *row = Arc::new(narrowed);
+        }
+    }
+
+    /// Drop cached rows whose key is not in `live_keys` (ascending) —
+    /// rows of shrunk-out points can never be fetched again before the
+    /// cache-flushing unshrink, so keeping them would waste the byte
+    /// budget and lengthen every LRU scan.
+    pub fn purge_missing(&mut self, live_keys: &[usize]) {
+        debug_assert!(live_keys.windows(2).all(|w| w[0] < w[1]));
+        self.rows.retain(|k, _| live_keys.binary_search(k).is_ok());
+        self.order.retain(|k| live_keys.binary_search(k).is_ok());
+    }
+
+    /// Drop everything and switch to a new row width (unshrink: cached
+    /// rows lack the reactivated columns, so they cannot be reused).
+    pub fn reset(&mut self, width: usize) {
+        self.rows.clear();
+        self.order.clear();
+        self.width = width;
     }
 }
 
@@ -212,6 +409,113 @@ mod tests {
         assert_eq!(c.len(), 2);
         c.get(1, 4, |b| b.fill(1.0)); // recompute = miss
         assert_eq!(c.misses, 4);
+    }
+
+    #[test]
+    fn gram_tile_matches_eval_and_thread_counts() {
+        let x = dataset(53, 6);
+        let norms: Vec<f64> = (0..53).map(|i| dot(x.row(i), x.row(i))).collect();
+        // Active set: a strict subset of rows, ascending.
+        let active: Vec<usize> = (0..53).filter(|i| i % 3 != 1).collect();
+        let na = active.len();
+        let d = 6;
+        let mut packed = vec![0.0f64; na * d];
+        let mut pn = vec![0.0f64; na];
+        for (r, &g) in active.iter().enumerate() {
+            packed[r * d..(r + 1) * d].copy_from_slice(x.row(g));
+            pn[r] = norms[g];
+        }
+        let pb = crate::blas::pack_b_panels(Transpose::Yes, d, na, &packed);
+        let ws = [7usize, 0, 31, 52];
+        let mut w = vec![0.0f64; ws.len() * d];
+        let mut wn = vec![0.0f64; ws.len()];
+        for (r, &g) in ws.iter().enumerate() {
+            w[r * d..(r + 1) * d].copy_from_slice(x.row(g));
+            wn[r] = norms[g];
+        }
+        for k in [SvmKernel::Linear, SvmKernel::Rbf { gamma: 0.3 }] {
+            let mut base = vec![0.0f64; ws.len() * na];
+            k.gram_tile(&w, &wn, &pn, &pb, &mut base, 1);
+            for (r, &gi) in ws.iter().enumerate() {
+                for (c, &gj) in active.iter().enumerate() {
+                    let expect = k.eval(x.row(gi), x.row(gj));
+                    let got = base[r * na + c];
+                    assert!((got - expect).abs() < 1e-10, "{k:?} r={r} c={c}");
+                }
+            }
+            for threads in 2..=4 {
+                let mut tile = vec![0.0f64; ws.len() * na];
+                k.gram_tile(&w, &wn, &pn, &pb, &mut tile, threads);
+                for (u, v) in base.iter().zip(&tile) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{k:?} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_cache_block_fetch_hits_and_compaction() {
+        let mut c = TileCache::new(4, 5);
+        // First fetch: all three rows missing, one compute call.
+        let rows = c.fetch_block(&[3, 9, 1], |miss, tile| {
+            assert_eq!(miss, &[3, 9, 1]);
+            for (r, &k) in miss.iter().enumerate() {
+                for j in 0..5 {
+                    tile[r * 5 + j] = (k * 10 + j) as f64;
+                }
+            }
+        });
+        assert_eq!(c.misses, 3);
+        assert_eq!(rows[1][2], 92.0);
+        // Second fetch overlaps: only key 7 is computed.
+        let rows = c.fetch_block(&[9, 7], |miss, tile| {
+            assert_eq!(miss, &[7]);
+            for (j, v) in tile.iter_mut().enumerate() {
+                *v = (70 + j) as f64;
+            }
+        });
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 4);
+        assert_eq!(rows[0][0], 30.0);
+        assert_eq!(rows[1][4], 74.0);
+        // Compact to columns {0, 2, 4}: widths shrink, values survive.
+        c.compact(&[0, 2, 4]);
+        assert_eq!(c.width(), 3);
+        let rows = c.fetch_block(&[3], |_, _| panic!("must be cached"));
+        assert_eq!(rows[0].as_slice(), &[30.0, 32.0, 34.0]);
+        // Purge keys that left the active set: 7 is dropped, the
+        // survivors stay fetchable without recompute.
+        c.purge_missing(&[1, 3, 9]);
+        assert_eq!(c.len(), 3);
+        c.fetch_block(&[9], |_, _| panic!("must be cached"));
+        c.fetch_block(&[7], |miss, tile| {
+            assert_eq!(miss, &[7]);
+            tile.fill(7.5);
+        });
+        // Reset drops everything.
+        c.reset(6);
+        assert!(c.is_empty());
+        assert_eq!(c.width(), 6);
+    }
+
+    #[test]
+    fn tile_cache_eviction_never_drops_in_flight_rows() {
+        let mut c = TileCache::new(2, 1);
+        c.fetch_block(&[0], |_, t| t[0] = 0.0);
+        c.fetch_block(&[1], |_, t| t[0] = 1.0);
+        // Fetching {1, 2} must evict 0 (LRU), never the pinned 1.
+        let rows = c.fetch_block(&[1, 2], |miss, t| {
+            assert_eq!(miss, &[2]);
+            t[0] = 2.0;
+        });
+        assert_eq!(rows[0][0], 1.0);
+        assert_eq!(rows[1][0], 2.0);
+        assert_eq!(c.len(), 2);
+        // 0 was evicted: re-fetch recomputes.
+        c.fetch_block(&[0], |miss, t| {
+            assert_eq!(miss, &[0]);
+            t[0] = 0.5;
+        });
     }
 
     #[test]

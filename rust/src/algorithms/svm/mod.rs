@@ -4,19 +4,65 @@
 //! sklearn on a9a/gisette-shaped data).
 //!
 //! Structure:
-//! * [`kernel`] — linear / RBF kernel functions + gram-row computation
-//!   and the Thunder row cache;
-//! * [`wss`]    — the WSS3 working-set selection: `wss_j_scalar` is the
-//!   paper's Listing 1 (branchy, blocks auto-vectorization), and
-//!   `wss_j_vectorized` is Listing 2 rebuilt as branch-free masked
-//!   blocks (the SVE-predicate → mask mapping of DESIGN.md §3);
-//! * [`solver`] — the SMO dual solver with the paper's two training
-//!   methods: **Boser** (classic 2-index SMO, WSS every iteration) and
-//!   **Thunder** (working-set batches solved on cached kernel rows).
+//! * [`kernel`] — linear / RBF kernels, gram-row and blocked gram-*tile*
+//!   computation, and the caches: the legacy per-row [`kernel::RowCache`]
+//!   (ablation baseline) and the [`kernel::TileCache`] the solver
+//!   trains on;
+//! * [`wss`]    — the WSS3 working-set selection listings: `wss_j_scalar`
+//!   is the paper's branchy Listing 1, `wss_j_vectorized` its Listing-2
+//!   masked restructure (kept as the Fig. 4 microbenchmark kernels);
+//! * [`simd`]   — the predicated hot loops the solver actually runs:
+//!   8-lane branch-free fused extrema / `WSSj` scans and gradient
+//!   updates, parallelized with fixed-order reductions;
+//! * [`solver`] — the SMO dual solver: **Boser** and **Thunder**, both
+//!   on the shrinking active-set engine.
+//!
+//! ## Shrinking schedule
+//!
+//! Every `shrink_period` inner iterations (default `min(n, 1000)`
+//! floored at 8 — the LIBSVM schedule with a small-problem guard;
+//! [`SvmParams::shrink_period`] overrides) the solver
+//! drops *bound-pinned non-violators* from the active set: points out
+//! of `I_up` with gradient strictly below the current `GMin`, or out of
+//! `I_low` with gradient strictly above `GMax2`. Free points are never
+//! shrunk. All WSS scans, gradient updates and gram tiles then run over
+//! the compacted set, so per-iteration cost falls as training converges
+//! — the Boser-method win. Any convergence certificate obtained on a
+//! shrunk set triggers the **unshrink-and-recheck** pass: shrunk
+//! gradients are reconstructed from the support vectors with one
+//! `K(inactive × SV)` tile, the full set is reactivated, and training
+//! continues until the certificate holds on all n points.
+//!
+//! ## Tile cache sizing
+//!
+//! Gram rows are cached over the *active* columns and computed in
+//! working-set blocks — one packed-panel GEMM per block against the
+//! active rows packed once per shrink generation
+//! ([`crate::blas::pack_b_panels`]). Capacity is
+//! `cache_bytes / (8·active_len)` rows (oneDAL's `cacheSizeInBytes`,
+//! default 8 MB), floored by the legacy `cache_rows` knob and by two
+//! working sets; shrink events narrow the cached rows in place
+//! ([`kernel::TileCache::compact`]), so the same byte budget holds more
+//! rows late in training instead of flushing.
+//!
+//! ## Predication idiom
+//!
+//! The scans in [`simd`] mirror SVE predicate-driven execution in
+//! portable Rust: every guard becomes a lane mask, dead lanes carry the
+//! neutral element (±∞) via select instead of a branch, blocks are
+//! 8-lane unrolled (one 512-bit SVE vector of f64), and block-local
+//! reductions run in index order so tie-breaks match the scalar
+//! listings bit for bit. Parallel fan-outs merge partials in ascending
+//! partition order; because min/max/argmin carry no floating-point
+//! accumulation, the merged result is bit-identical at any worker
+//! count.
+//!
+//! [`SvmParams::shrink_period`]: solver::SvmParams::shrink_period
 
 pub mod kernel;
+pub mod simd;
 pub mod solver;
 pub mod wss;
 
 pub use kernel::SvmKernel;
-pub use solver::{Svc, SvcModel, SvmParams, SvmSolver};
+pub use solver::{Svc, SvcModel, SvmParams, SvmSolver, TrainStats};

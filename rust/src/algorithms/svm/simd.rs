@@ -1,0 +1,428 @@
+//! Predicated SVM hot loops — the rust_pallas analogue of the paper's
+//! SVE predicate-driven execution (§IV-E), applied to every per-
+//! iteration scan of the shrinking solver.
+//!
+//! Three idioms, all branch-free in the loop body:
+//!
+//! * **mask by select** — every guard (`I[]` flag membership, threshold
+//!   comparison) is evaluated as a boolean per lane and folded into the
+//!   arithmetic by selecting a neutral element (±∞ for min/max scans)
+//!   instead of `continue`-ing, exactly how an SVE predicate deadens
+//!   lanes without a branch;
+//! * **8-lane unrolled blocks** — the stand-in for a 512-bit SVE
+//!   register of f64 lanes; arithmetic runs unconditionally on all
+//!   lanes, a block-local reduction in index order preserves the scalar
+//!   loop's first-index tie-breaking exactly;
+//! * **fixed-order parallel merge** — scans fan out over
+//!   [`crate::parallel::par_map`] partitions and the partials merge in
+//!   ascending partition order. Min/max/argmin reductions are *exact*
+//!   (no floating-point accumulation), so with an ordered merge and
+//!   strict comparisons the result is bit-identical for **any**
+//!   partitioning — the worker count can never change the selected
+//!   index, the extrema, or the step.
+//!
+//! Elementwise updates (the gradient axpy and the Thunder block
+//! reconcile) are bit-identical across worker counts for the simpler
+//! reason that every output element is computed whole, in the same
+//! term order, by exactly one worker.
+
+use super::wss::{self, WssJResult, LOW, UP};
+use crate::parallel;
+
+/// Lanes per predicated block (a 512-bit SVE vector holds 8 f64 lanes).
+pub const LANES: usize = 8;
+
+/// Minimum scan length before a WSS fan-out pays for itself.
+const PAR_MIN_SCAN: usize = 1 << 12;
+
+/// Fused first-index / stopping-gap extrema of one WSS pass:
+/// `bi`/`gmin` = argmin/min of the signed gradient over `I_up`
+/// (first-index tie-break), `gmax2` = max over `I_low`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WssExtrema {
+    pub bi: Option<usize>,
+    pub gmin: f64,
+    pub gmax2: f64,
+}
+
+impl WssExtrema {
+    const NEUTRAL: WssExtrema =
+        WssExtrema { bi: None, gmin: f64::INFINITY, gmax2: f64::NEG_INFINITY };
+}
+
+/// Branch-free fused extrema scan over `[lo, hi)`: one pass computes
+/// both the `WSSi` argmin over `I_up` and the `GMax2` stopping term
+/// over `I_low`. Guards become lane masks; dead lanes carry ±∞ so the
+/// arithmetic never branches; each 8-lane block reduces in index order
+/// (strict comparisons keep the earliest extremum, matching the scalar
+/// [`wss::wss_i`] loop bit for bit).
+pub fn extrema_range(grad: &[f64], flags: &[u8], lo: usize, hi: usize) -> WssExtrema {
+    let mut out = WssExtrema::NEUTRAL;
+    let mut up_lane = [f64::INFINITY; LANES];
+    let mut low_lane = [f64::NEG_INFINITY; LANES];
+    let mut base = lo;
+    while base < hi {
+        let len = LANES.min(hi - base);
+        // --- predicated block body: every lane, no branches ---
+        for l in 0..len {
+            let t = base + l;
+            let g = grad[t];
+            let fl = flags[t];
+            let in_up = fl & UP != 0;
+            let in_low = fl & LOW != 0;
+            up_lane[l] = if in_up { g } else { f64::INFINITY };
+            low_lane[l] = if in_low { g } else { f64::NEG_INFINITY };
+        }
+        // --- block reduction in index order (exact, tie-break safe) ---
+        for l in 0..len {
+            if up_lane[l] < out.gmin {
+                out.gmin = up_lane[l];
+                out.bi = Some(base + l);
+            }
+            out.gmax2 = if low_lane[l] > out.gmax2 { low_lane[l] } else { out.gmax2 };
+        }
+        base += len;
+    }
+    out
+}
+
+/// Merge partition partials in ascending partition order. Strict
+/// comparisons keep the earliest index on ties, so the merged result
+/// equals a single full-range scan for any partitioning.
+fn merge_extrema(partials: Vec<WssExtrema>) -> WssExtrema {
+    let mut out = WssExtrema::NEUTRAL;
+    for p in partials {
+        if p.gmin < out.gmin {
+            out.gmin = p.gmin;
+            out.bi = p.bi;
+        }
+        out.gmax2 = if p.gmax2 > out.gmax2 { p.gmax2 } else { out.gmax2 };
+    }
+    out
+}
+
+/// Parallel fused extrema scan: partitions fan out on the worker pool,
+/// partials merge in fixed order — bit-identical at any worker count.
+pub fn wss_extrema_par(grad: &[f64], flags: &[u8], threads: usize) -> WssExtrema {
+    let n = grad.len();
+    debug_assert_eq!(flags.len(), n);
+    let workers = parallel::effective_threads(threads, n, PAR_MIN_SCAN);
+    if workers <= 1 {
+        return extrema_range(grad, flags, 0, n);
+    }
+    let bounds = parallel::even_bounds(n, workers);
+    merge_extrema(parallel::par_map(&bounds, |lo, hi| extrema_range(grad, flags, lo, hi)))
+}
+
+/// 8-lane predicated `WSSj` block scan — the [`wss::wss_j_vectorized`]
+/// restructure at the SVE-native lane width, used as the per-partition
+/// body of [`wss_j_par`]. Bitwise identical to [`wss::wss_j_scalar`]
+/// over the same range (the property suite enforces this).
+#[allow(clippy::too_many_arguments)]
+pub fn wss_j_lanes(
+    grad: &[f64],
+    flags: &[u8],
+    sign: u8,
+    low: u8,
+    gmin: f64,
+    kii: f64,
+    kernel_diag: &[f64],
+    ki_block: &[f64],
+    j_start: usize,
+    j_end: usize,
+    tau: f64,
+) -> WssJResult {
+    let mut gmax = f64::NEG_INFINITY;
+    let mut gmax2 = f64::NEG_INFINITY;
+    let mut bj: Option<usize> = None;
+    let mut delta = 0.0f64;
+    let mut obj_lane = [f64::NEG_INFINITY; LANES];
+    let mut dt_lane = [0.0f64; LANES];
+    let mut base = j_start;
+    while base < j_end {
+        let len = LANES.min(j_end - base);
+        let mut block_gmax2 = f64::NEG_INFINITY;
+        for l in 0..len {
+            let j = base + l;
+            let gradj = grad[j];
+            let fl = flags[j];
+            // The two flag guards fuse into one predicate.
+            let pass = (fl & sign != 0) & ((fl & low) == low);
+            let g2 = if pass { gradj } else { f64::NEG_INFINITY };
+            block_gmax2 = if g2 > block_gmax2 { g2 } else { block_gmax2 };
+            // Threshold predicate folds in; dead lanes go neutral.
+            let active = pass & (gradj >= gmin);
+            let b = gmin - gradj;
+            let a_raw = kii + kernel_diag[j] - 2.0 * ki_block[j - j_start];
+            let a = if a_raw <= 0.0 { tau } else { a_raw };
+            let dt = b / a;
+            let obj = b * dt;
+            obj_lane[l] = if active { obj } else { f64::NEG_INFINITY };
+            dt_lane[l] = dt;
+        }
+        gmax2 = gmax2.max(block_gmax2);
+        for l in 0..len {
+            if obj_lane[l] > gmax {
+                gmax = obj_lane[l];
+                bj = Some(base + l);
+                delta = -dt_lane[l];
+            }
+        }
+        base += len;
+    }
+    WssJResult { bj, obj: gmax, gmax2, delta }
+}
+
+/// Parallel `WSSj` over a full compacted gram row: partitions run the
+/// predicated 8-lane scan (or the branchy scalar Listing-1 loop when
+/// `vectorized` is false — the Fig. 4 comparison point), partials merge
+/// in ascending order with strict comparisons. Because the per-lane
+/// objective involves no accumulation, the merged result is bit-equal
+/// to a single-range scan at any worker count — and the scalar and
+/// vectorized bodies are themselves bitwise interchangeable.
+#[allow(clippy::too_many_arguments)]
+pub fn wss_j_par(
+    grad: &[f64],
+    flags: &[u8],
+    sign: u8,
+    low: u8,
+    gmin: f64,
+    kii: f64,
+    kernel_diag: &[f64],
+    ki: &[f64],
+    tau: f64,
+    vectorized: bool,
+    threads: usize,
+) -> WssJResult {
+    let n = grad.len();
+    debug_assert_eq!(ki.len(), n);
+    let body = |lo: usize, hi: usize| -> WssJResult {
+        let block = &ki[lo..hi];
+        if vectorized {
+            wss_j_lanes(grad, flags, sign, low, gmin, kii, kernel_diag, block, lo, hi, tau)
+        } else {
+            wss::wss_j_scalar(grad, flags, sign, low, gmin, kii, kernel_diag, block, lo, hi, tau)
+        }
+    };
+    let workers = parallel::effective_threads(threads, n, PAR_MIN_SCAN);
+    if workers <= 1 {
+        return body(0, n);
+    }
+    let bounds = parallel::even_bounds(n, workers);
+    let partials = parallel::par_map(&bounds, body);
+    let mut out = WssJResult {
+        bj: None,
+        obj: f64::NEG_INFINITY,
+        gmax2: f64::NEG_INFINITY,
+        delta: 0.0,
+    };
+    for p in partials {
+        if p.gmax2 > out.gmax2 {
+            out.gmax2 = p.gmax2;
+        }
+        if p.obj > out.obj {
+            out.obj = p.obj;
+            out.bj = p.bj;
+            out.delta = p.delta;
+        }
+    }
+    out
+}
+
+/// Gradient pair update `g[t] += τ·(Ki[t] − Kj[t])` over the compacted
+/// active set — the Boser per-iteration axpy, 8-lane unrolled and
+/// fanned out over disjoint chunks (each element computed whole by one
+/// worker, so any worker count produces the same bits).
+pub fn update_grad_pair(grad: &mut [f64], row_i: &[f64], row_j: &[f64], tau: f64, threads: usize) {
+    let n = grad.len();
+    debug_assert_eq!(row_i.len(), n);
+    debug_assert_eq!(row_j.len(), n);
+    let workers = parallel::effective_threads(threads, n, PAR_MIN_SCAN);
+    let bounds = parallel::even_bounds(n, workers);
+    parallel::scope_rows(grad, 1, &bounds, |lo, hi, block| {
+        let (ri, rj) = (&row_i[lo..hi], &row_j[lo..hi]);
+        let chunks = (hi - lo) / LANES;
+        for c in 0..chunks {
+            let b = c * LANES;
+            for l in 0..LANES {
+                block[b + l] = tau.mul_add(ri[b + l] - rj[b + l], block[b + l]);
+            }
+        }
+        for t in chunks * LANES..hi - lo {
+            block[t] = tau.mul_add(ri[t] - rj[t], block[t]);
+        }
+    });
+}
+
+/// Thunder block reconcile `g[t] += Σ_l δ_l·K_l[t]` over the active
+/// set: each element accumulates its `δ` terms in ascending `l` order
+/// (δ = 0 rows contribute an exact `+0·K` — the multiply *is* the
+/// predicate, no per-element branch), chunks fan out disjointly, so the
+/// result is bit-identical at any worker count.
+pub fn reconcile_grad(
+    grad: &mut [f64],
+    deltas: &[f64],
+    rows: &[std::sync::Arc<Vec<f64>>],
+    threads: usize,
+) {
+    let n = grad.len();
+    debug_assert_eq!(deltas.len(), rows.len());
+    let work = n.saturating_mul(rows.len().max(1));
+    let workers = parallel::effective_threads(threads, work, PAR_MIN_SCAN);
+    let bounds = parallel::even_bounds(n, workers);
+    parallel::scope_rows(grad, 1, &bounds, |lo, hi, block| {
+        for (l, row) in rows.iter().enumerate() {
+            let d = deltas[l];
+            let r = &row[lo..hi];
+            for (g, &kv) in block.iter_mut().zip(r) {
+                *g = d.mul_add(kv, *g);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::svm::wss::{SIGN_ANY, SIGN_NEG, SIGN_POS};
+    use crate::rng::{Distribution, Gaussian, Mt19937, Uniform};
+
+    fn random_case(seed: u32, n: usize) -> (Vec<f64>, Vec<u8>, Vec<f64>, Vec<f64>) {
+        let mut e = Mt19937::new(seed);
+        let mut g = Gaussian::<f64>::standard();
+        let mut u = Uniform::new(0.0, 1.0);
+        let grad: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
+        let flags: Vec<u8> = (0..n)
+            .map(|_| {
+                let mut f = if u.sample(&mut e) < 0.5 { SIGN_POS } else { SIGN_NEG };
+                if u.sample(&mut e) < 0.7 {
+                    f |= LOW;
+                }
+                if u.sample(&mut e) < 0.7 {
+                    f |= UP;
+                }
+                f
+            })
+            .collect();
+        let diag: Vec<f64> = (0..n).map(|_| 1.0 + u.sample(&mut e)).collect();
+        let ki: Vec<f64> = (0..n).map(|_| g.sample(&mut e) * 0.5).collect();
+        (grad, flags, diag, ki)
+    }
+
+    /// Scalar oracle for the fused extrema scan.
+    fn extrema_oracle(grad: &[f64], flags: &[u8]) -> WssExtrema {
+        let (bi, gmin) = match wss::wss_i(grad, flags) {
+            Some((b, g)) => (Some(b), g),
+            None => (None, f64::INFINITY),
+        };
+        let gmax2 = grad
+            .iter()
+            .zip(flags)
+            .filter(|(_, &f)| f & LOW != 0)
+            .map(|(&g, _)| g)
+            .fold(f64::NEG_INFINITY, f64::max);
+        WssExtrema { bi, gmin, gmax2 }
+    }
+
+    #[test]
+    fn extrema_matches_scalar_oracle_all_sizes() {
+        for (seed, n) in [(1u32, 1usize), (2, 7), (3, 8), (4, 9), (5, 100), (6, 1023), (7, 4099)] {
+            let (grad, flags, _, _) = random_case(seed, n);
+            let got = extrema_range(&grad, &flags, 0, n);
+            let want = extrema_oracle(&grad, &flags);
+            assert_eq!(got.bi, want.bi, "n={n}");
+            assert_eq!(got.gmin.to_bits(), want.gmin.to_bits(), "n={n}");
+            assert_eq!(got.gmax2.to_bits(), want.gmax2.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn extrema_par_bit_identical_across_workers() {
+        let (grad, flags, _, _) = random_case(11, 9001);
+        let base = wss_extrema_par(&grad, &flags, 1);
+        for threads in 2..=4 {
+            let got = wss_extrema_par(&grad, &flags, threads);
+            assert_eq!(got, base, "threads={threads}");
+        }
+        assert_eq!(base, extrema_oracle(&grad, &flags));
+    }
+
+    #[test]
+    fn extrema_tie_breaks_to_first_index() {
+        // Equal minima in different 8-lane blocks and lanes.
+        let mut grad = vec![1.0; 40];
+        grad[3] = -2.0;
+        grad[17] = -2.0;
+        let flags = vec![UP | LOW; 40];
+        let r = extrema_range(&grad, &flags, 0, 40);
+        assert_eq!(r.bi, Some(3));
+    }
+
+    #[test]
+    fn wss_j_lanes_matches_scalar_bitwise() {
+        for (seed, n) in [(21u32, 1usize), (22, 8), (23, 9), (24, 100), (25, 1023)] {
+            let (grad, flags, diag, ki) = random_case(seed, n);
+            let s = wss::wss_j_scalar(
+                &grad, &flags, SIGN_ANY, LOW, -0.1, 1.5, &diag, &ki, 0, n, 1e-12,
+            );
+            let v = wss_j_lanes(&grad, &flags, SIGN_ANY, LOW, -0.1, 1.5, &diag, &ki, 0, n, 1e-12);
+            assert_eq!(s, v, "n={n}");
+        }
+    }
+
+    #[test]
+    fn wss_j_par_bit_identical_across_workers_and_bodies() {
+        let (grad, flags, diag, ki) = random_case(31, 8191);
+        for vectorized in [false, true] {
+            let base = wss_j_par(
+                &grad, &flags, SIGN_ANY, LOW, -0.05, 1.3, &diag, &ki, 1e-12, vectorized, 1,
+            );
+            for threads in 2..=4 {
+                let got = wss_j_par(
+                    &grad, &flags, SIGN_ANY, LOW, -0.05, 1.3, &diag, &ki, 1e-12, vectorized,
+                    threads,
+                );
+                assert_eq!(got, base, "vectorized={vectorized} threads={threads}");
+            }
+            // Scalar and predicated bodies agree bit for bit.
+            let scalar = wss::wss_j_scalar(
+                &grad, &flags, SIGN_ANY, LOW, -0.05, 1.3, &diag, &ki, 0, 8191, 1e-12,
+            );
+            assert_eq!(base, scalar, "vectorized={vectorized}");
+        }
+    }
+
+    #[test]
+    fn grad_updates_bit_identical_across_workers() {
+        let mut e = Mt19937::new(41);
+        let mut g = Gaussian::<f64>::standard();
+        let n = 6007;
+        let g0: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
+        let ri: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
+        let rj: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
+        let mut base = g0.clone();
+        update_grad_pair(&mut base, &ri, &rj, 0.37, 1);
+        for threads in 2..=4 {
+            let mut gt = g0.clone();
+            update_grad_pair(&mut gt, &ri, &rj, 0.37, threads);
+            for (u, v) in base.iter().zip(&gt) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
+        }
+        // Reconcile: three delta rows, one exactly zero (the multiply-
+        // as-predicate case).
+        let rows: Vec<std::sync::Arc<Vec<f64>>> = (0..3)
+            .map(|_| std::sync::Arc::new((0..n).map(|_| g.sample(&mut e)).collect::<Vec<f64>>()))
+            .collect();
+        let deltas = [0.21, 0.0, -0.4];
+        let mut rbase = g0.clone();
+        reconcile_grad(&mut rbase, &deltas, &rows, 1);
+        for threads in 2..=4 {
+            let mut gt = g0.clone();
+            reconcile_grad(&mut gt, &deltas, &rows, threads);
+            for (u, v) in rbase.iter().zip(&gt) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
+        }
+    }
+}

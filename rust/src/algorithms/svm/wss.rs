@@ -229,10 +229,12 @@ mod tests {
         // The paper's key validation claim: the SVE loop is bitwise
         // identical to the scalar one. Sweep sizes covering full blocks,
         // ragged tails and sub-block inputs.
-        for (seed, n) in [(1u32, 1usize), (2, 7), (3, 16), (4, 17), (5, 100), (6, 1024), (7, 1023)] {
+        let cases = [(1u32, 1usize), (2, 7), (3, 16), (4, 17), (5, 100), (6, 1024), (7, 1023)];
+        for (seed, n) in cases {
             let (grad, flags, gmin, kii, diag, ki) = random_case(seed, n);
             let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
-            let v = wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
+            let v =
+                wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
             assert_eq!(s.bj, v.bj, "n={n}");
             assert_eq!(s.obj.to_bits(), v.obj.to_bits(), "n={n}");
             assert_eq!(s.gmax2.to_bits(), v.gmax2.to_bits(), "n={n}");
@@ -245,9 +247,9 @@ mod tests {
         let (grad, flags, gmin, kii, diag, ki) = random_case(8, 200);
         // KiBlock indexed from j_start.
         let (j0, j1) = (37, 161);
-        let ki_block = &ki[j0..j1];
-        let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, ki_block, j0, j1, 1e-12);
-        let v = wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, ki_block, j0, j1, 1e-12);
+        let kb = &ki[j0..j1];
+        let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, kb, j0, j1, 1e-12);
+        let v = wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, kb, j0, j1, 1e-12);
         assert_eq!(s, v);
         if let Some(bj) = s.bj {
             assert!((j0..j1).contains(&bj));
@@ -322,7 +324,8 @@ mod tests {
             let n = 1 + (meta.next_u32() % 600) as usize;
             let (grad, flags, gmin, kii, diag, ki) = random_case(1000 + trial, n);
             let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
-            let v = wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
+            let v =
+                wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
             assert_eq!(s, v, "trial={trial} n={n}");
         }
     }

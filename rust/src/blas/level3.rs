@@ -167,6 +167,85 @@ fn microkernel<T: Float>(k: usize, apanel: &[T], bpanel: &[T]) -> [[T; NR]; MR] 
     acc
 }
 
+/// Pre-packed `op(B)` micro-panels, reusable across many `gemm` calls
+/// against the same right-hand operand. The SVM gram-tile engine packs
+/// the active-set panel once per shrink generation and then issues one
+/// small-`m` tile multiply per working set; re-packing B on every call
+/// would dominate those thin multiplies. Produced by [`pack_b_panels`],
+/// consumed by [`gemm_prepacked_threads`] — which is bit-identical to
+/// [`gemm_threads`] on the same operands because both run the same
+/// panel sweep over the same packed bytes.
+pub struct PackedB<T> {
+    panels: Vec<T>,
+    k: usize,
+    n: usize,
+}
+
+impl<T: Float> PackedB<T> {
+    /// Shared `k` dimension the panels were packed with.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Column count of `op(B)`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// Pack `op(B)` (`k×n`) once into the micro-panel layout for reuse
+/// across [`gemm_prepacked_threads`] calls.
+pub fn pack_b_panels<T: Float>(tb: Transpose, k: usize, n: usize, b: &[T]) -> PackedB<T> {
+    PackedB { panels: pack_b(tb, k, n, b), k, n }
+}
+
+/// The KC-blocked panel sweep shared by every gemm entry point: compute
+/// C rows `[r0, r1)` from packed-A panels `ap` and packed-B panels `bp`.
+/// Within a KC block the `KC×NR` B-panel slice stays hot in L1/L2 while
+/// the worker's A-panel slices stream through it. Each C tile
+/// accumulates its α-scaled block partials in ascending-`k` order, so
+/// the result is bit-identical at every worker count and to the
+/// unblocked sweep when `k ≤ KC`.
+#[allow(clippy::too_many_arguments)]
+fn panel_sweep<T: Float>(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    ap: &[T],
+    bp: &[T],
+    r0: usize,
+    r1: usize,
+    block: &mut [T],
+) {
+    let npanels = n.div_ceil(NR);
+    let p0 = r0 / MR;
+    let p1 = r1.div_ceil(MR);
+    let mut l0 = 0usize;
+    while l0 < k {
+        let lb = KC.min(k - l0);
+        for jp in 0..npanels {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let bpanel = &bp[jp * k * NR + l0 * NR..jp * k * NR + (l0 + lb) * NR];
+            for ip in p0..p1 {
+                let i0 = ip * MR;
+                let mr = MR.min(m - i0);
+                let apanel = &ap[ip * k * MR + l0 * MR..ip * k * MR + (l0 + lb) * MR];
+                let acc = microkernel(lb, apanel, bpanel);
+                for ii in 0..mr {
+                    let at = (i0 - r0 + ii) * n + j0;
+                    let row = &mut block[at..at + nr];
+                    for (jj, dst) in row.iter_mut().enumerate() {
+                        *dst = alpha.mul_add(acc[ii][jj], *dst);
+                    }
+                }
+            }
+        }
+        l0 += lb;
+    }
+}
+
 /// `C ← α·op(A)·op(B) + β·C` with an explicit worker count — the entry
 /// the algorithm layer routes `Context::threads()` into.
 ///
@@ -192,40 +271,44 @@ pub fn gemm_threads<T: Float>(
     }
     let ap = pack_a(ta, m, k, a);
     let bp = pack_b(tb, k, n, b);
-    let npanels = n.div_ceil(NR);
     let work = m.saturating_mul(n).saturating_mul(k);
     let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
     let bounds = parallel::aligned_bounds(m, workers, MR);
     let (ap, bp) = (&ap, &bp);
     parallel::scope_rows(c, n, &bounds, |r0, r1, block| {
-        let p0 = r0 / MR;
-        let p1 = r1.div_ceil(MR);
-        // KC-blocked k sweep (see [`KC`]); within a block the KC×NR
-        // B-panel slice stays hot in L1/L2 while the worker's A-panel
-        // slices stream through it.
-        let mut l0 = 0usize;
-        while l0 < k {
-            let lb = KC.min(k - l0);
-            for jp in 0..npanels {
-                let j0 = jp * NR;
-                let nr = NR.min(n - j0);
-                let bpanel = &bp[jp * k * NR + l0 * NR..jp * k * NR + (l0 + lb) * NR];
-                for ip in p0..p1 {
-                    let i0 = ip * MR;
-                    let mr = MR.min(m - i0);
-                    let apanel = &ap[ip * k * MR + l0 * MR..ip * k * MR + (l0 + lb) * MR];
-                    let acc = microkernel(lb, apanel, bpanel);
-                    for ii in 0..mr {
-                        let at = (i0 - r0 + ii) * n + j0;
-                        let row = &mut block[at..at + nr];
-                        for (jj, dst) in row.iter_mut().enumerate() {
-                            *dst = alpha.mul_add(acc[ii][jj], *dst);
-                        }
-                    }
-                }
-            }
-            l0 += lb;
-        }
+        panel_sweep(m, n, k, alpha, ap, bp, r0, r1, block);
+    });
+}
+
+/// `C ← α·op(A)·B + β·C` against a pre-packed `B` — the gram-tile entry:
+/// pack the stationary operand once with [`pack_b_panels`], then issue
+/// many thin row-tile multiplies without re-packing. Runs the exact
+/// panel sweep of [`gemm_threads`], so results are bit-identical to the
+/// pack-every-call path at every worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_prepacked_threads<T: Float>(
+    ta: Transpose,
+    m: usize,
+    alpha: T,
+    a: &[T],
+    bp: &PackedB<T>,
+    beta: T,
+    c: &mut [T],
+    threads: usize,
+) {
+    let (n, k) = (bp.n, bp.k);
+    debug_assert_eq!(c.len(), m * n);
+    scale_c(beta, c);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let ap = pack_a(ta, m, k, a);
+    let work = m.saturating_mul(n).saturating_mul(k);
+    let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
+    let bounds = parallel::aligned_bounds(m, workers, MR);
+    let (ap, bpanels) = (&ap, bp.panels.as_slice());
+    parallel::scope_rows(c, n, &bounds, |r0, r1, block| {
+        panel_sweep(m, n, k, alpha, ap, bpanels, r0, r1, block);
     });
 }
 
@@ -425,6 +508,36 @@ mod tests {
             gemm_threads(Transpose::No, Transpose::No, m, n, k, 1.1, &a, &b, 0.4, &mut c, threads);
             for (u, v) in base.iter().zip(&c) {
                 assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    /// Packing B once and reusing it across calls must be bit-identical
+    /// to the pack-every-call path — the SVM gram-tile engine relies on
+    /// this to keep tile results independent of cache state.
+    #[test]
+    fn gemm_prepacked_matches_gemm_bitwise() {
+        let mut e = Mt19937::new(61);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (5, 9, 4), (33, 41, 28), (7, 23, 300)] {
+            for tb in [Transpose::No, Transpose::Yes] {
+                let b = rand_mat(&mut e, k * n);
+                let packed = pack_b_panels(tb, k, n, &b);
+                assert_eq!(packed.k(), k);
+                assert_eq!(packed.n(), n);
+                // Several A operands against the same packed B.
+                for ta in [Transpose::No, Transpose::Yes] {
+                    for threads in 1..=3usize {
+                        let a = rand_mat(&mut e, m * k);
+                        let c0 = rand_mat(&mut e, m * n);
+                        let mut c1 = c0.clone();
+                        let mut c2 = c0.clone();
+                        gemm_threads(ta, tb, m, n, k, 1.2, &a, &b, 0.3, &mut c1, threads);
+                        gemm_prepacked_threads(ta, m, 1.2, &a, &packed, 0.3, &mut c2, threads);
+                        for (u, v) in c1.iter().zip(&c2) {
+                            assert_eq!(u.to_bits(), v.to_bits(), "m={m} n={n} k={k} tb={tb:?}");
+                        }
+                    }
+                }
             }
         }
     }

@@ -55,11 +55,14 @@ fn cmd_info(flags: &HashMap<String, String>) {
     println!("resolved backend : {}", ctx.backend().name());
     println!("threads          : {}", ctx.threads());
     println!("artifacts        : {} variants registered", ctx.registry().len());
-    for kernel in ["kmeans_assign", "logreg_step", "wss_select", "pairwise_sqdist", "x2c_mom", "xcp_update"] {
+    let kernels =
+        ["kmeans_assign", "logreg_step", "wss_select", "pairwise_sqdist", "x2c_mom", "xcp_update"];
+    for kernel in kernels {
         let n = ctx.registry().variants(kernel).len();
         println!("  {kernel:<18} {n} variant(s)");
     }
-    println!("runtime          : {}", if ctx.runtime().is_some() { "PJRT CPU client up" } else { "native only" });
+    let rt = if ctx.runtime().is_some() { "PJRT CPU client up" } else { "native only" };
+    println!("runtime          : {rt}");
 }
 
 fn cmd_train(algo: &str, flags: &HashMap<String, String>) {
@@ -77,8 +80,10 @@ fn cmd_train(algo: &str, flags: &HashMap<String, String>) {
             } else {
                 synth::make_blobs(&mut e, n, d, k, 1.0).0
             };
-            let m = KMeans::params().k(k).max_iter(get(flags, "iters", 50)).train(&ctx, &x).unwrap();
-            println!("kmeans: inertia={:.3} iterations={} [{:?}]", m.inertia, m.iterations, t0.elapsed());
+            let iters = get(flags, "iters", 50);
+            let m = KMeans::params().k(k).max_iter(iters).train(&ctx, &x).unwrap();
+            let (inertia, it) = (m.inertia, m.iterations);
+            println!("kmeans: inertia={inertia:.3} iterations={it} [{:?}]", t0.elapsed());
         }
         "svm" => {
             let (x, y) = synth::make_classification(&mut e, n.min(5000), d, 1.5);
@@ -88,23 +93,28 @@ fn cmd_train(algo: &str, flags: &HashMap<String, String>) {
             };
             let m = Svc::params().solver(solver).train(&ctx, &x, &y).unwrap();
             let acc = onedal_sve::metrics::accuracy(&m.infer(&ctx, &x).unwrap(), &y);
-            println!("svm({solver:?}): sv={} iters={} acc={acc:.4} [{:?}]", m.n_support(), m.iterations, t0.elapsed());
+            let (sv, iters) = (m.n_support(), m.iterations);
+            println!("svm({solver:?}): sv={sv} iters={iters} acc={acc:.4} [{:?}]", t0.elapsed());
         }
         "logreg" => {
             let (x, y) = synth::make_classification(&mut e, n, d, 1.5);
-            let m = LogisticRegression::params().epochs(get(flags, "epochs", 30)).train(&ctx, &x, &y).unwrap();
+            let epochs = get(flags, "epochs", 30);
+            let m = LogisticRegression::params().epochs(epochs).train(&ctx, &x, &y).unwrap();
             let acc = onedal_sve::metrics::accuracy(&m.infer(&ctx, &x).unwrap(), &y);
             println!("logreg: acc={acc:.4} [{:?}]", t0.elapsed());
         }
         "forest" => {
             let (x, y) = synth::make_classification(&mut e, n, d, 1.0);
-            let m = RandomForestClassifier::params().n_trees(get(flags, "trees", 30)).train(&ctx, &x, &y).unwrap();
+            let trees = get(flags, "trees", 30);
+            let m =
+                RandomForestClassifier::params().n_trees(trees).train(&ctx, &x, &y).unwrap();
             let acc = onedal_sve::metrics::accuracy(&m.infer(&ctx, &x).unwrap(), &y);
             println!("forest: trees={} acc={acc:.4} [{:?}]", m.n_trees(), t0.elapsed());
         }
         "pca" => {
             let x = synth::make_segmentation(&mut e, n, d, 6);
-            let m = Pca::params().n_components(get(flags, "components", 2)).train(&ctx, &x).unwrap();
+            let comps = get(flags, "components", 2);
+            let m = Pca::params().n_components(comps).train(&ctx, &x).unwrap();
             println!("pca: explained={:?} [{:?}]", m.explained_variance, t0.elapsed());
         }
         "linreg" => {

@@ -67,7 +67,11 @@ pub fn r2(pred: &[f64], truth: &[f64]) -> f64 {
 }
 
 /// KMeans inertia: sum of squared distances to the assigned centroid.
-pub fn inertia(x: &crate::tables::DenseTable<f64>, centroids: &crate::tables::DenseTable<f64>, assign: &[usize]) -> f64 {
+pub fn inertia(
+    x: &crate::tables::DenseTable<f64>,
+    centroids: &crate::tables::DenseTable<f64>,
+    assign: &[usize],
+) -> f64 {
     (0..x.rows())
         .map(|i| crate::blas::sqdist(x.row(i), centroids.row(assign[i])))
         .sum()

@@ -56,13 +56,14 @@ impl ArtifactRegistry {
                 .next()
                 .ok_or_else(|| Error::Parse(format!("manifest line {}", lineno + 1)))?
                 .to_string();
-            let variant = it
-                .next()
-                .ok_or_else(|| Error::Parse(format!("manifest line {}: missing variant", lineno + 1)))?;
+            let variant = it.next().ok_or_else(|| {
+                Error::Parse(format!("manifest line {}: missing variant", lineno + 1))
+            })?;
             let dims: Vec<usize> = it
                 .map(|t| {
-                    t.parse()
-                        .map_err(|_| Error::Parse(format!("manifest line {}: bad dim {t:?}", lineno + 1)))
+                    t.parse().map_err(|_| {
+                        Error::Parse(format!("manifest line {}: bad dim {t:?}", lineno + 1))
+                    })
                 })
                 .collect::<Result<_>>()?;
             by_kernel.entry(kernel.clone()).or_default().push(Artifact {

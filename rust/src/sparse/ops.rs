@@ -133,6 +133,14 @@ pub fn csrmm<T: Float>(
 /// replays identically and this path is bit-identical across worker
 /// counts too (PR 1 silently ignored `threads` here and ran
 /// sequentially).
+///
+/// When the scratch scheme's own `chunks·|C|` zero-fill/merge cost
+/// would dominate (hyper-sparse A with a huge output), the kernel
+/// instead **echoes A into CSC form** (one `transposed()` re-bucketing,
+/// `O(nnz + m)`) and partitions C's rows directly — true disjoint
+/// output ownership, with each row's contributions accumulated in
+/// ascending input order so the result is bit-identical to the
+/// sequential sweep at any worker count.
 #[allow(clippy::too_many_arguments)]
 pub fn csrmm_threads<T: Float>(
     op: SparseOp,
@@ -181,8 +189,40 @@ pub fn csrmm_threads<T: Float>(
             // (AᵀB)[j,:] += a_ij · B[i,:] — still a row traversal of A,
             // scattering into C. Per-chunk scratch + ordered merge (see
             // the docstring) when the work clears the threshold.
-            let chunks = transpose_chunks(a.rows(), a.nnz().saturating_mul(n), m * n);
+            let work = a.nnz().saturating_mul(n);
+            let chunks = transpose_chunks(a.rows(), work, m * n);
             if chunks == 1 {
+                let workers =
+                    crate::parallel::effective_threads(threads, work, T_SCRATCH_MIN_WORK);
+                if workers > 1 {
+                    // Hyper-sparse huge-output inputs: the chunk-scratch
+                    // scheme tripped on its `chunks·|C|` zero-fill/merge
+                    // bound, but the scatter itself is still worth
+                    // parallelizing. Echo A into CSC form (= the CSR of
+                    // Aᵀ) once — O(nnz + m), dwarfed by the scratches it
+                    // replaces — which turns the scatter into a row
+                    // traversal of C: workers own disjoint C row blocks
+                    // outright. Within each output row, contributions
+                    // arrive in ascending i (the echo buckets preserve
+                    // input order), the exact order of the sequential
+                    // sweep — bit-identical to it at any worker count.
+                    let at = a.transposed();
+                    let bounds = crate::parallel::even_bounds(m, workers);
+                    let at = &at;
+                    crate::parallel::scope_rows(c, n, &bounds, |r0, r1, cblock| {
+                        for j in r0..r1 {
+                            let crow = &mut cblock[(j - r0) * n..(j - r0 + 1) * n];
+                            for (i, av) in at.row_entries(j) {
+                                let scaled = alpha * av;
+                                let brow = &b[i * n..(i + 1) * n];
+                                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                                    *cv = scaled.mul_add(bv, *cv);
+                                }
+                            }
+                        }
+                    });
+                    return Ok(());
+                }
                 for i in 0..a.rows() {
                     let brow = &b[i * n..(i + 1) * n];
                     for (j, av) in a.row_entries(i) {
@@ -548,6 +588,38 @@ mod tests {
                 for (u, v) in base.iter().zip(&c) {
                     assert_eq!(u.to_bits(), v.to_bits(), "op={op:?} threads={threads}");
                 }
+            }
+        }
+    }
+
+    /// The CSC-echo path: hyper-sparse A with a huge output trips the
+    /// chunk-scratch bound (`work < chunks·|C|`) while still clearing
+    /// the parallel threshold — it must match the dense oracle and be
+    /// bit-identical to the sequential (1-thread) sweep at any count.
+    #[test]
+    fn csrmm_transpose_csc_echo_matches_dense_and_threads() {
+        let mut e = Mt19937::new(31);
+        // nnz ≈ 2000·1500·0.002 ≈ 6k, work = nnz·12 ≈ 72k ≥ 2^14,
+        // but chunks·|C| = 8·1500·12 = 144k > work → echo engages.
+        let a = make_sparse_csr(&mut e, 2000, 1500, 0.002);
+        let n = 12;
+        let work = a.nnz() * n;
+        assert!(work >= (1 << 14), "fixture too sparse: work={work}");
+        assert!(work < 8 * 1500 * n, "fixture too dense for the echo path");
+        let b: Vec<f64> = (0..2000 * n).map(|i| (i % 19) as f64 * 0.07 - 0.6).collect();
+        let c0: Vec<f64> = (0..1500 * n).map(|i| (i % 3) as f64 * 0.4).collect();
+        let mut base = c0.clone();
+        csrmm_threads(SparseOp::Transpose, 1.6, &a, &b, n, 0.8, &mut base, 1).unwrap();
+        let mut oracle = c0.clone();
+        dense_ref(SparseOp::Transpose, 1.6, &a, &b, n, 0.8, &mut oracle);
+        for (u, v) in base.iter().zip(&oracle) {
+            assert!((u - v).abs() < 1e-9);
+        }
+        for threads in 2..=4 {
+            let mut c = c0.clone();
+            csrmm_threads(SparseOp::Transpose, 1.6, &a, &b, n, 0.8, &mut c, threads).unwrap();
+            for (u, v) in base.iter().zip(&c) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
             }
         }
     }

@@ -99,7 +99,12 @@ pub fn make_regression(
 /// `d` decorrelated features (the Kaggle set is PCA-transformed, so
 /// independent Gaussians are the right analogue), `n_pos` positives drawn
 /// from a shifted, heavier-tailed distribution. Returns `(X, y)`.
-pub fn make_fraud(e: &mut dyn Engine, n: usize, d: usize, n_pos: usize) -> (DenseTable<f64>, Vec<f64>) {
+pub fn make_fraud(
+    e: &mut dyn Engine,
+    n: usize,
+    d: usize,
+    n_pos: usize,
+) -> (DenseTable<f64>, Vec<f64>) {
     assert!(n_pos <= n);
     let mut g = Gaussian::<f64>::standard();
     let mut x = vec![0.0f64; n * d];
@@ -170,7 +175,12 @@ pub fn make_segmentation(e: &mut dyn Engine, n: usize, d: usize, k: usize) -> De
 
 /// Random CSR matrix with the given density; values uniform in [-1, 1).
 /// 1-based index arrays (the `csrmultd` convention — see §IV-B).
-pub fn make_sparse_csr(e: &mut dyn Engine, rows: usize, cols: usize, density: f64) -> CsrMatrix<f64> {
+pub fn make_sparse_csr(
+    e: &mut dyn Engine,
+    rows: usize,
+    cols: usize,
+    density: f64,
+) -> CsrMatrix<f64> {
     let mut vals = Vec::new();
     let mut col_idx = Vec::new();
     let mut row_ptr = Vec::with_capacity(rows + 1);

@@ -57,7 +57,8 @@ fn prop_csr_ops_match_dense() {
         let ad = a.to_dense();
         // csrmv both ops
         for op in [SparseOp::NoTranspose, SparseOp::Transpose] {
-            let (ilen, olen) = if op == SparseOp::NoTranspose { (cols, rows) } else { (rows, cols) };
+            let (ilen, olen) =
+                if op == SparseOp::NoTranspose { (cols, rows) } else { (rows, cols) };
             let x = rand_vec(&mut e, ilen, -1.0, 1.0);
             let mut y1 = vec![0.0; olen];
             csrmv(op, 1.0, &a, &x, 0.0, &mut y1).unwrap();

@@ -127,7 +127,9 @@ fn raw_runtime_wss_select_matches_rust_wss() {
     let kii = 1.5f64;
     let tau = 1e-9f64;
     // Native result.
-    let want = wss::wss_j_vectorized(&grad, &flags, wss::SIGN_ANY, wss::LOW, gmin, kii, &diag, &ki, 0, n, tau);
+    let want = wss::wss_j_vectorized(
+        &grad, &flags, wss::SIGN_ANY, wss::LOW, gmin, kii, &diag, &ki, 0, n, tau,
+    );
     // Artifact result (padded; padding lanes masked by n_valid).
     let to32 = |v: &[f64]| -> Vec<f32> {
         let mut out: Vec<f32> = v.iter().map(|&x| x as f32).collect();

@@ -1,0 +1,137 @@
+//! Property suite for the shrinking SVM engine (ISSUE 3): the new
+//! WSS/gradient parallel reductions must be **bit-identical across 1–4
+//! workers** — at the reduction level on adversarially large inputs,
+//! and end-to-end through whole trainings (where the shrink/unshrink
+//! schedule itself keys off the reduced values, so a single differing
+//! bit anywhere would cascade into a different model).
+
+use onedal_sve::algorithms::svm::simd;
+use onedal_sve::algorithms::svm::wss::{self, LOW, SIGN_ANY, SIGN_NEG, SIGN_POS, UP};
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::rng::{Distribution, Gaussian, Uniform};
+use onedal_sve::tables::synth::make_classification;
+
+fn wss_inputs(seed: u32, n: usize) -> (Vec<f64>, Vec<u8>, Vec<f64>, Vec<f64>) {
+    let mut e = Mt19937::new(seed);
+    let mut g = Gaussian::<f64>::standard();
+    let mut u = Uniform::new(0.0, 1.0);
+    let grad: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
+    let flags: Vec<u8> = (0..n)
+        .map(|_| {
+            let mut f = if u.sample(&mut e) < 0.5 { SIGN_POS } else { SIGN_NEG };
+            if u.sample(&mut e) < 0.7 {
+                f |= LOW;
+            }
+            if u.sample(&mut e) < 0.7 {
+                f |= UP;
+            }
+            f
+        })
+        .collect();
+    let diag: Vec<f64> = (0..n).map(|_| 1.0 + u.sample(&mut e)).collect();
+    let ki: Vec<f64> = (0..n).map(|_| 0.5 * g.sample(&mut e)).collect();
+    (grad, flags, diag, ki)
+}
+
+/// The fused WSSi/GMax2 extrema scan and the parallel WSSj scan: 1–4
+/// workers, sizes straddling the fan-out threshold and the 8-lane
+/// blocking, checked bitwise against the 1-worker run *and* the scalar
+/// listings.
+#[test]
+fn prop_wss_reductions_bit_identical_1_to_4_workers() {
+    for (seed, n) in [(1u32, 4095usize), (2, 4096), (3, 16384), (4, 50_003)] {
+        let (grad, flags, diag, ki) = wss_inputs(seed, n);
+        let ex1 = simd::wss_extrema_par(&grad, &flags, 1);
+        // Scalar oracles.
+        let (obi, ogmin) = match wss::wss_i(&grad, &flags) {
+            Some((b, g)) => (Some(b), g),
+            None => (None, f64::INFINITY),
+        };
+        assert_eq!(ex1.bi, obi, "n={n}");
+        assert_eq!(ex1.gmin.to_bits(), ogmin.to_bits(), "n={n}");
+        let sj = wss::wss_j_scalar(
+            &grad, &flags, SIGN_ANY, LOW, ex1.gmin, 1.7, &diag, &ki, 0, n, 1e-12,
+        );
+        for threads in 1..=4usize {
+            let ex = simd::wss_extrema_par(&grad, &flags, threads);
+            assert_eq!(ex, ex1, "extrema n={n} threads={threads}");
+            for vectorized in [false, true] {
+                let vj = simd::wss_j_par(
+                    &grad, &flags, SIGN_ANY, LOW, ex1.gmin, 1.7, &diag, &ki, 1e-12, vectorized,
+                    threads,
+                );
+                assert_eq!(vj, sj, "wss_j n={n} threads={threads} vectorized={vectorized}");
+            }
+        }
+    }
+}
+
+/// The gradient pair-update axpy and the Thunder block reconcile over
+/// large active sets: bit-identical across 1–4 workers (each element is
+/// produced whole, in the same term order, by exactly one worker).
+#[test]
+fn prop_gradient_updates_bit_identical_1_to_4_workers() {
+    let mut e = Mt19937::new(7);
+    let mut g = Gaussian::<f64>::standard();
+    let n = 30_011;
+    let g0: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
+    let ri: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
+    let rj: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
+    let mut pair1 = g0.clone();
+    simd::update_grad_pair(&mut pair1, &ri, &rj, 0.8251, 1);
+    let rows: Vec<std::sync::Arc<Vec<f64>>> = (0..6)
+        .map(|_| std::sync::Arc::new((0..n).map(|_| g.sample(&mut e)).collect::<Vec<f64>>()))
+        .collect();
+    let deltas = [0.31, 0.0, -0.12, 0.0, 0.55, -0.9];
+    let mut rec1 = g0.clone();
+    simd::reconcile_grad(&mut rec1, &deltas, &rows, 1);
+    for threads in 2..=4usize {
+        let mut pair = g0.clone();
+        simd::update_grad_pair(&mut pair, &ri, &rj, 0.8251, threads);
+        for (i, (u, v)) in pair1.iter().zip(&pair).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "pair threads={threads} idx={i}");
+        }
+        let mut rec = g0.clone();
+        simd::reconcile_grad(&mut rec, &deltas, &rows, threads);
+        for (i, (u, v)) in rec1.iter().zip(&rec).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "reconcile threads={threads} idx={i}");
+        }
+    }
+}
+
+/// End-to-end: whole trainings — shrinking engine, gram tiles, parallel
+/// scans and all — produce bitwise identical models at every worker
+/// count, for both methods and both kernels.
+#[test]
+fn prop_training_bit_identical_1_to_4_workers() {
+    let mk_ctx = |t: usize| {
+        Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Vectorized)
+            .threads(t)
+            .build()
+            .unwrap()
+    };
+    let mut e = Mt19937::new(99);
+    let (x, y) = make_classification(&mut e, 320, 6, 1.1);
+    for solver in [SvmSolver::Boser, SvmSolver::Thunder] {
+        for kernel in [
+            onedal_sve::algorithms::svm::SvmKernel::Linear,
+            onedal_sve::algorithms::svm::SvmKernel::Rbf { gamma: 0.3 },
+        ] {
+            let params = || Svc::params().solver(solver).kernel(kernel).shrink_period(20);
+            let base = params().train(&mk_ctx(1), &x, &y).unwrap();
+            for threads in 2..=4usize {
+                let m = params().train(&mk_ctx(threads), &x, &y).unwrap();
+                assert_eq!(m.n_support(), base.n_support(), "{solver:?} t={threads}");
+                assert_eq!(m.bias.to_bits(), base.bias.to_bits(), "{solver:?} t={threads}");
+                assert_eq!(m.iterations, base.iterations, "{solver:?} t={threads}");
+                assert_eq!(m.stats, base.stats, "{solver:?} t={threads}");
+                for (a, b) in m.dual_coef.iter().zip(&base.dual_coef) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{solver:?} t={threads}");
+                }
+            }
+        }
+    }
+}
