@@ -1,0 +1,307 @@
+//! Distance-engine ablation (ISSUE 4): what the fused, pooled,
+//! pack-once `primitives::distances` engine buys over the per-algorithm
+//! legacy expansions it replaced —
+//!
+//! * **fused vs legacy** at 1 worker: the pack-once + cache-hot-epilogue
+//!   win (the legacy KNN/DBSCAN paths re-packed the corpus for every
+//!   query tile and never touched the worker pool);
+//! * **1 vs 2 vs 4 workers** on the fused engine: the pooled-scaling
+//!   win for the two previously sequential consumers (KNN, DBSCAN) and
+//!   the already-parallel ones (k-means assign, RBF gram).
+//!
+//! Results land in `BENCH_distances.json` (repo root when run from
+//! `rust/`, else the current directory) with the same "pending first
+//! run" scaffold convention as `BENCH_blas.json` / `BENCH_svm.json`.
+
+use onedal_sve::blas::{dot, gemm_prepacked_threads, gemm_threads, pack_b_panels, Transpose};
+use onedal_sve::prelude::*;
+use onedal_sve::primitives::distances;
+use onedal_sve::profiling::{BenchResult, Bencher};
+use onedal_sve::tables::synth::make_blobs;
+use std::io::Write as _;
+
+const N: usize = 4_096; // corpus rows
+const M: usize = 1_024; // query rows
+const D: usize = 32;
+const K_CENT: usize = 16; // k-means centroids
+const K_NN: usize = 10; // KNN neighbours
+const WS: usize = 64; // RBF working-set rows
+const EPS2: f64 = 16.0;
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Hand-rolled JSON dump (no serde in the offline image).
+fn write_json(results: &[BenchResult]) -> std::io::Result<String> {
+    let path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_distances.json"
+    } else {
+        "BENCH_distances.json"
+    };
+    let mut rows = Vec::new();
+    for r in results {
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"median_ms\": {:.4}, \"mean_ms\": {:.4}, \"samples\": {}}}",
+            json_escape(&r.name),
+            r.median.as_secs_f64() * 1e3,
+            r.mean.as_secs_f64() * 1e3,
+            r.samples
+        ));
+    }
+    let med =
+        |name: &str| results.iter().find(|r| r.name == name).map(|r| r.median.as_secs_f64());
+    let mut speedups = Vec::new();
+    for algo in ["kmeans-assign", "knn-kneighbors", "dbscan-neigh", "rbf-gram"] {
+        let legacy = med(&format!("{algo}/legacy"));
+        if let (Some(l), Some(f)) = (legacy, med(&format!("{algo}/t1"))) {
+            speedups.push(format!(
+                "    {{\"case\": \"{algo}/fused-vs-legacy\", \"speedup\": {:.3}}}",
+                l / f
+            ));
+        }
+        if let (Some(t1), Some(t4)) =
+            (med(&format!("{algo}/t1")), med(&format!("{algo}/t4")))
+        {
+            speedups.push(format!(
+                "    {{\"case\": \"{algo}/scaling-1-to-4\", \"speedup\": {:.3}}}",
+                t1 / t4
+            ));
+        }
+    }
+    let body = format!(
+        "{{\n  \"bench\": \"ablate_distances\",\n  \
+         \"regenerate\": \"cd rust && cargo bench --bench ablate_distances\",\n  \
+         \"fixtures\": {{\"corpus\": \"{N}x{D} blobs\", \"queries\": \"{M}x{D}\", \
+         \"kmeans_k\": {K_CENT}, \"knn_k\": {K_NN}, \"rbf_ws\": {WS}}},\n  \
+         \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+        speedups.join(",\n"),
+    );
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(body.as_bytes())?;
+    Ok(path.to_string())
+}
+
+/// Legacy k-means assignment: per-256-tile cross-term GEMM that
+/// re-packs the centroid operand every tile, scalar argmin epilogue —
+/// the pre-engine `assign_gemm` at one worker.
+fn legacy_assign(x: &DenseTable<f64>, c: &DenseTable<f64>, assign: &mut [usize]) -> f64 {
+    let (n, d, k) = (x.rows(), x.cols(), c.rows());
+    let cnorm: Vec<f64> = (0..k).map(|j| dot(c.row(j), c.row(j))).collect();
+    const TILE: usize = 256;
+    let mut cross = vec![0.0f64; TILE * k];
+    let mut inertia = 0.0f64;
+    let mut start = 0usize;
+    while start < n {
+        let len = TILE.min(n - start);
+        let xb = &x.data()[start * d..(start + len) * d];
+        gemm_threads(
+            Transpose::No,
+            Transpose::Yes,
+            len,
+            k,
+            d,
+            1.0,
+            xb,
+            c.data(),
+            0.0,
+            &mut cross[..len * k],
+            1,
+        );
+        for i in 0..len {
+            let xi = &x.data()[(start + i) * d..(start + i + 1) * d];
+            let xn = dot(xi, xi);
+            let row = &cross[i * k..(i + 1) * k];
+            let (mut best, mut bestv) = (0usize, f64::INFINITY);
+            for (j, &xc) in row.iter().enumerate() {
+                let dist = xn - 2.0 * xc + cnorm[j];
+                if dist < bestv {
+                    bestv = dist;
+                    best = j;
+                }
+            }
+            assign[start + i] = best;
+            inertia += bestv.max(0.0);
+        }
+        start += len;
+    }
+    inertia
+}
+
+/// Legacy KNN: per-128-tile GEMM re-packing the full corpus each tile
+/// (the pre-engine `kneighbors_tiled`), sequential.
+fn legacy_kneighbors(
+    x: &DenseTable<f64>,
+    q: &DenseTable<f64>,
+    k: usize,
+) -> Vec<Vec<(usize, f64)>> {
+    let (n, d, m) = (x.rows(), x.cols(), q.rows());
+    let xnorm: Vec<f64> = (0..n).map(|j| dot(x.row(j), x.row(j))).collect();
+    const TILE: usize = 128;
+    let mut cross = vec![0.0f64; TILE * n];
+    let mut out = vec![Vec::new(); m];
+    let mut start = 0usize;
+    while start < m {
+        let len = TILE.min(m - start);
+        let qb = &q.data()[start * d..(start + len) * d];
+        gemm_threads(
+            Transpose::No,
+            Transpose::Yes,
+            len,
+            n,
+            d,
+            1.0,
+            qb,
+            x.data(),
+            0.0,
+            &mut cross[..len * n],
+            1,
+        );
+        for i in 0..len {
+            let qi = &q.data()[(start + i) * d..(start + i + 1) * d];
+            let qn = dot(qi, qi);
+            let row = &cross[i * n..(i + 1) * n];
+            let mut best: Vec<(usize, f64)> = Vec::with_capacity(k + 1);
+            let mut worst = f64::INFINITY;
+            for (j, &xc) in row.iter().enumerate() {
+                let dist = (qn - 2.0 * xc + xnorm[j]).max(0.0);
+                if dist < worst || best.len() < k {
+                    let pos = best.partition_point(|&(_, v)| v <= dist);
+                    best.insert(pos, (j, dist));
+                    if best.len() > k {
+                        best.pop();
+                    }
+                    worst = best.last().unwrap().1;
+                }
+            }
+            out[start + i] = best;
+        }
+        start += len;
+    }
+    out
+}
+
+/// Legacy DBSCAN region query: per-256-tile GEMM re-packing the corpus
+/// each tile (the pre-engine `neighbours_tiled`), sequential.
+fn legacy_neighbours(x: &DenseTable<f64>, eps2: f64) -> Vec<Vec<usize>> {
+    let (n, d) = (x.rows(), x.cols());
+    let norms: Vec<f64> = (0..n).map(|i| dot(x.row(i), x.row(i))).collect();
+    const TILE: usize = 256;
+    let mut cross = vec![0.0f64; TILE * n];
+    let mut out = vec![Vec::new(); n];
+    let mut start = 0usize;
+    while start < n {
+        let len = TILE.min(n - start);
+        let xb = &x.data()[start * d..(start + len) * d];
+        gemm_threads(
+            Transpose::No,
+            Transpose::Yes,
+            len,
+            n,
+            d,
+            1.0,
+            xb,
+            x.data(),
+            0.0,
+            &mut cross[..len * n],
+            1,
+        );
+        for i in 0..len {
+            let gi = start + i;
+            let row = &cross[i * n..(i + 1) * n];
+            let ni = norms[gi];
+            let list = &mut out[gi];
+            for (j, &xc) in row.iter().enumerate() {
+                if ni - 2.0 * xc + norms[j] <= eps2 && j != gi {
+                    list.push(j);
+                }
+            }
+        }
+        start += len;
+    }
+    out
+}
+
+fn main() {
+    let mut e = Mt19937::new(90);
+    let (x, _) = make_blobs(&mut e, N, D, 8, 2.0);
+    let (q, _) = make_blobs(&mut e, M, D, 8, 2.0);
+    let (cent, _) = make_blobs(&mut e, K_CENT, D, 8, 2.0);
+    let mut b = Bencher::new(300, 7);
+
+    // --- k-means assignment ---
+    let mut assign = vec![0usize; N];
+    b.bench("kmeans-assign/legacy", || {
+        std::hint::black_box(legacy_assign(&x, &cent, &mut assign));
+    });
+    for t in THREADS {
+        b.bench(&format!("kmeans-assign/t{t}"), || {
+            let corpus = distances::pack_corpus_table(&cent, t);
+            let inertia = distances::argmin_assign(x.data(), N, &corpus, true, &mut assign, t);
+            std::hint::black_box(inertia);
+        });
+    }
+
+    // --- KNN kneighbors ---
+    b.bench("knn-kneighbors/legacy", || {
+        std::hint::black_box(legacy_kneighbors(&x, &q, K_NN).len());
+    });
+    for t in THREADS {
+        b.bench(&format!("knn-kneighbors/t{t}"), || {
+            let corpus = distances::pack_corpus_table(&x, t);
+            std::hint::black_box(distances::top_k(q.data(), M, &corpus, K_NN, t).len());
+        });
+    }
+
+    // --- DBSCAN neighbour lists ---
+    b.bench("dbscan-neigh/legacy", || {
+        std::hint::black_box(legacy_neighbours(&x, EPS2).len());
+    });
+    for t in THREADS {
+        b.bench(&format!("dbscan-neigh/t{t}"), || {
+            let corpus = distances::pack_corpus_table(&x, t);
+            let lists = distances::eps_neighbors(x.data(), N, &corpus, EPS2, true, t);
+            std::hint::black_box(lists.len());
+        });
+    }
+
+    // --- RBF gram tile (64-row working set × full corpus) ---
+    let norms: Vec<f64> = (0..N).map(|i| dot(x.row(i), x.row(i))).collect();
+    let ws_rows: Vec<usize> = (0..WS).map(|i| (i * 37) % N).collect();
+    let mut w = vec![0.0f64; WS * D];
+    let mut wn = vec![0.0f64; WS];
+    for (r, &g) in ws_rows.iter().enumerate() {
+        w[r * D..(r + 1) * D].copy_from_slice(x.row(g));
+        wn[r] = norms[g];
+    }
+    let pb = pack_b_panels(Transpose::Yes, D, N, x.data());
+    let gamma = 0.05f64;
+    let mut tile = vec![0.0f64; WS * N];
+    // Legacy: cross-term GEMM then a *separate* transform pass (the
+    // unfused PR 3 structure), at one worker.
+    b.bench("rbf-gram/legacy", || {
+        gemm_prepacked_threads(Transpose::No, WS, 1.0, &w, &pb, 0.0, &mut tile, 1);
+        for (r, row) in tile.chunks_mut(N).enumerate() {
+            let ni = wn[r];
+            for (v, &nj) in row.iter_mut().zip(&norms) {
+                let d2 = (ni - 2.0 * *v + nj).max(0.0);
+                *v = (-gamma * d2).exp();
+            }
+        }
+        std::hint::black_box(tile[0]);
+    });
+    for t in THREADS {
+        b.bench(&format!("rbf-gram/t{t}"), || {
+            distances::rbf_gram(&w, &wn, &norms, &pb, gamma, &mut tile, t);
+            std::hint::black_box(tile[0]);
+        });
+    }
+
+    b.speedup_table("distance-engine ablation", "legacy");
+    match write_json(b.results()) {
+        Ok(path) => println!("\nrecorded: {path}"),
+        Err(err) => eprintln!("\nfailed to write BENCH_distances.json: {err}"),
+    }
+}

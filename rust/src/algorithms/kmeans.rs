@@ -5,17 +5,19 @@
 //! Backend ladder:
 //! * naive      — per-point per-centroid scalar distance loop with a
 //!                fresh allocation per point (stock-sklearn analogue);
-//! * reference  — `‖x−c‖² = ‖x‖² − 2x·c + ‖c‖²` with the blocked BLAS
-//!                gemm for the cross term;
-//! * vectorized — the gemm expansion plus fused argmin and incremental
-//!                centroid accumulation in one pass;
+//! * reference  — the shared fused distance engine
+//!                ([`crate::primitives::distances`]) with the branchy
+//!                scalar argmin epilogue;
+//! * vectorized — the same engine with the predicated 8-lane argmin
+//!                epilogue consumed while the tile is cache-hot;
 //! * artifact   — the `kmeans_assign` Pallas kernel via PJRT, tiled by
 //!                the coordinator's fixed-shape batcher.
 
-use crate::blas::{gemm_threads, sqdist, Transpose};
+use crate::blas::sqdist;
 use crate::coordinator::{batch, Backend, Context};
 use crate::error::{Error, Result};
 use crate::parallel;
+use crate::primitives::distances;
 use crate::rng::{distributions::sample_indices, Engine, Mt19937, Uniform};
 use crate::rng::Distribution;
 use crate::tables::DenseTable;
@@ -301,17 +303,16 @@ fn assign_naive(x: &DenseTable<f64>, c: &DenseTable<f64>, assign: &mut [usize]) 
     inertia
 }
 
-/// Reference / vectorized rungs: expand ‖x−c‖² and use gemm for X·Cᵀ.
-/// `fused` additionally computes the argmin in the same pass over the
-/// distance tile (the vectorized rung's branch-free min-reduction).
-///
-/// Rows are independent, so the tile loop fans out over the context's
-/// worker count: each scoped worker owns a contiguous TILE-aligned row
-/// range of `assign` and carries its own cross-term scratch. Workers
-/// return *per-tile* inertia sums; because cuts land only on TILE
-/// boundaries, the flattened tile order — and therefore the final
-/// reduction — is identical at any worker count, so assignments *and*
-/// inertia are bit-stable across `Context::threads()` settings.
+/// Reference / vectorized rungs: one call into the shared fused
+/// pairwise-distance engine ([`crate::primitives::distances`]). The
+/// centroid corpus is packed once per assignment pass (micro-panels +
+/// pooled norms), query M-tiles stream through the worker pool, and the
+/// argmin epilogue consumes each distance tile while it is cache-hot.
+/// `fused` selects the predicated 8-lane scan (vectorized rung) over
+/// the branchy scalar scan (reference rung) — both produce identical
+/// assignments and bit-identical inertia, and the engine's fixed-order
+/// tile merge keeps assignments *and* inertia bit-stable across
+/// `Context::threads()` settings.
 fn assign_gemm(
     x: &DenseTable<f64>,
     c: &DenseTable<f64>,
@@ -319,70 +320,8 @@ fn assign_gemm(
     fused: bool,
     threads: usize,
 ) -> f64 {
-    let n = x.rows();
-    let d = x.cols();
-    let k = c.rows();
-    let cnorm: Vec<f64> = (0..k).map(|j| crate::blas::dot(c.row(j), c.row(j))).collect();
-    // Tile rows to keep the cross-term block in cache.
-    const TILE: usize = 256;
-    let work = n.saturating_mul(d).saturating_mul(k);
-    let workers = parallel::effective_threads(threads, work, 1 << 16);
-    let bounds = parallel::aligned_bounds(n, workers, TILE);
-    let cnorm = &cnorm;
-    let partials = parallel::scope_rows(assign, 1, &bounds, |r0, r1, ablock| {
-        let mut tile_sums: Vec<f64> = Vec::with_capacity((r1 - r0).div_ceil(TILE));
-        let mut cross = vec![0.0f64; TILE * k];
-        for (start, len) in batch::tiles(r1 - r0, TILE) {
-            let start = r0 + start;
-            let mut inertia = 0.0f64;
-            let xblock = &x.data()[start * d..(start + len) * d];
-            // Inner gemm stays single-threaded: the fan-out already
-            // happened one level up.
-            gemm_threads(
-                Transpose::No,
-                Transpose::Yes,
-                len,
-                k,
-                d,
-                1.0,
-                xblock,
-                c.data(),
-                0.0,
-                &mut cross[..len * k],
-                1,
-            );
-            for i in 0..len {
-                let xi = &x.data()[(start + i) * d..(start + i + 1) * d];
-                let xnorm = crate::blas::dot(xi, xi);
-                let row = &cross[i * k..(i + 1) * k];
-                let (mut best, mut bestv) = (0usize, f64::INFINITY);
-                if fused {
-                    // Branch-free two-accumulator min scan (vectorizable).
-                    for (j, &xc) in row.iter().enumerate() {
-                        let dist = xnorm - 2.0 * xc + cnorm[j];
-                        let better = dist < bestv;
-                        bestv = if better { dist } else { bestv };
-                        best = if better { j } else { best };
-                    }
-                } else {
-                    for (j, &xc) in row.iter().enumerate() {
-                        let dist = xnorm - 2.0 * xc + cnorm[j];
-                        if dist < bestv {
-                            bestv = dist;
-                            best = j;
-                        }
-                    }
-                }
-                ablock[start + i - r0] = best;
-                inertia += bestv.max(0.0);
-            }
-            tile_sums.push(inertia);
-        }
-        tile_sums
-    });
-    // Flattening worker results recovers the global tile order; summing
-    // sequentially keeps the reduction identical at any worker count.
-    partials.into_iter().flatten().sum()
+    let corpus = distances::pack_corpus(c.data(), c.rows(), c.cols(), threads);
+    distances::argmin_assign(x.data(), x.rows(), &corpus, fused, assign, threads)
 }
 
 /// Artifact rung: run the Pallas `kmeans_assign` kernel via PJRT on

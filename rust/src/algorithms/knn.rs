@@ -3,13 +3,15 @@
 //! algorithms achieve consistent speedups up to 1.5×").
 //!
 //! Backend ladder: naive = per-query full distance vector + full sort;
-//! reference/vectorized = tiled gemm distance expansion + partial
-//! selection; artifact = the `pairwise_sqdist` Pallas kernel for the
-//! distance tiles, selection on the Rust side.
+//! reference/vectorized = the shared fused pairwise-distance engine
+//! ([`crate::primitives::distances`]): the training corpus packed once
+//! per call, query tiles streamed through the worker pool, and the
+//! bounded top-k selection fused onto each cache-hot distance tile.
 
-use crate::blas::{dot, gemm, sqdist, Transpose};
-use crate::coordinator::{batch, Backend, Context};
+use crate::blas::sqdist;
+use crate::coordinator::{Backend, Context};
 use crate::error::{Error, Result};
+use crate::primitives::distances;
 use crate::tables::DenseTable;
 
 /// Parameters (oneDAL `kdtree_knn_classification`-style, brute force).
@@ -79,7 +81,7 @@ impl KnnModel {
     pub fn kneighbors(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<Vec<(usize, f64)>>> {
         match ctx.dispatch("pairwise_sqdist", &[q.rows().min(256), self.x.rows(), q.cols()]) {
             Backend::Naive => Ok(self.kneighbors_naive(q)),
-            _ => Ok(self.kneighbors_tiled(q)),
+            _ => Ok(self.kneighbors_fused(q, ctx.threads())),
         }
     }
 
@@ -96,42 +98,14 @@ impl KnnModel {
         out
     }
 
-    /// Tiled gemm expansion + bounded selection (vectorized rung).
-    fn kneighbors_tiled(&self, q: &DenseTable<f64>) -> Vec<Vec<(usize, f64)>> {
-        let n = self.x.rows();
-        let d = self.x.cols();
-        let m = q.rows();
-        let xnorm: Vec<f64> = (0..n).map(|j| dot(self.x.row(j), self.x.row(j))).collect();
-        const TILE: usize = 128;
-        let mut cross = vec![0.0f64; TILE * n];
-        let mut out = vec![Vec::new(); m];
-        for (start, len) in batch::tiles(m, TILE) {
-            let qblock = &q.data()[start * d..(start + len) * d];
-            let ctile = &mut cross[..len * n];
-            gemm(Transpose::No, Transpose::Yes, len, n, d, 1.0, qblock, self.x.data(), 0.0, ctile);
-            for i in 0..len {
-                let qi = &q.data()[(start + i) * d..(start + i + 1) * d];
-                let qn = dot(qi, qi);
-                let row = &cross[i * n..(i + 1) * n];
-                // Bounded max-heap replacement via simple insertion list
-                // (k is small; O(n·k) worst case but branch-predictable).
-                let mut best: Vec<(usize, f64)> = Vec::with_capacity(self.k + 1);
-                let mut worst = f64::INFINITY;
-                for (j, &xc) in row.iter().enumerate() {
-                    let dist = (qn - 2.0 * xc + xnorm[j]).max(0.0);
-                    if dist < worst || best.len() < self.k {
-                        let pos = best.partition_point(|&(_, v)| v <= dist);
-                        best.insert(pos, (j, dist));
-                        if best.len() > self.k {
-                            best.pop();
-                        }
-                        worst = best.last().unwrap().1;
-                    }
-                }
-                out[start + i] = best;
-            }
-        }
-        out
+    /// Fused-engine rung: the training corpus is packed **once per
+    /// call** (the old tiled path re-packed X for every 128-row query
+    /// tile) and re-used by every query M-tile streamed through the
+    /// worker pool; the bounded top-k selection runs on each distance
+    /// tile while it is cache-hot. Bit-identical at any worker count.
+    fn kneighbors_fused(&self, q: &DenseTable<f64>, threads: usize) -> Vec<Vec<(usize, f64)>> {
+        let corpus = distances::pack_corpus_table(&self.x, threads);
+        distances::top_k(q.data(), q.rows(), &corpus, self.k, threads)
     }
 }
 

@@ -6,6 +6,7 @@
 //! packed GEMM call and compacted in place when the active set shrinks.
 
 use crate::blas::{dot, gemm_prepacked_threads, gemv_threads, sqdist, PackedB, Transpose};
+use crate::primitives::distances;
 use crate::tables::DenseTable;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -87,19 +88,22 @@ impl SvmKernel {
         }
     }
 
-    /// Blocked gram tile `K(W, P)` (`ws × na`) in **one** packed GEMM
-    /// call — the oneDAL `KiBlock` computed as a block instead of row
+    /// Blocked gram tile `K(W, P)` (`ws × na`) as one prepacked-GEMM
+    /// block — the oneDAL `KiBlock` computed as a block instead of row
     /// by row. `w` holds the gathered working-set rows (`ws × d`,
     /// row-major), `pb` the pre-packed active-set panel (`op(B) = Pᵀ`
     /// from [`crate::blas::pack_b_panels`], packed once per shrink
     /// generation), `w_norms`/`p_norms` the squared row norms of each
     /// side for the RBF distance expansion.
     ///
-    /// The cross-term GEMM distributes whole micro-panels and the RBF
-    /// transform is elementwise, so the tile is bit-identical at any
-    /// worker count — and independent of how the rows are batched into
-    /// tiles, because each output element is one dot product plus an
-    /// elementwise transform.
+    /// The RBF path delegates to the shared fused distance engine
+    /// ([`crate::primitives::distances::rbf_gram`]): workers own
+    /// MR-aligned row ranges, each computing its cross-term slice with
+    /// one prepacked GEMM and applying the `exp(−γ·d²)` transform while
+    /// the slice is cache-hot. The linear path is the prepacked GEMM
+    /// alone. Both are bit-identical at any worker count — and
+    /// independent of how the rows are batched into tiles, because each
+    /// output element is one dot product plus an elementwise transform.
     pub fn gram_tile(
         &self,
         w: &[f64],
@@ -114,20 +118,13 @@ impl SvmKernel {
         debug_assert_eq!(w.len(), ws * pb.k());
         debug_assert_eq!(p_norms.len(), na);
         debug_assert_eq!(out.len(), ws * na);
-        gemm_prepacked_threads(Transpose::No, ws, 1.0, w, pb, 0.0, out, threads);
-        if let SvmKernel::Rbf { gamma } = *self {
-            let work = ws.saturating_mul(na);
-            let workers = crate::parallel::effective_threads(threads, work, 1 << 13);
-            let bounds = crate::parallel::even_bounds(ws, workers);
-            crate::parallel::scope_rows(out, na, &bounds, |r0, _r1, block| {
-                for (r, row) in block.chunks_mut(na).enumerate() {
-                    let ni = w_norms[r0 + r];
-                    for (v, &nj) in row.iter_mut().zip(p_norms) {
-                        let d2 = (ni + nj - 2.0 * *v).max(0.0);
-                        *v = (-gamma * d2).exp();
-                    }
-                }
-            });
+        match *self {
+            SvmKernel::Linear => {
+                gemm_prepacked_threads(Transpose::No, ws, 1.0, w, pb, 0.0, out, threads);
+            }
+            SvmKernel::Rbf { gamma } => {
+                distances::rbf_gram(w, w_norms, p_norms, pb, gamma, out, threads);
+            }
         }
     }
 }

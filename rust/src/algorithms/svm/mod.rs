@@ -10,7 +10,10 @@
 //!   trains on;
 //! * [`wss`]    — the WSS3 working-set selection listings: `wss_j_scalar`
 //!   is the paper's branchy Listing 1, `wss_j_vectorized` its Listing-2
-//!   masked restructure (kept as the Fig. 4 microbenchmark kernels);
+//!   masked restructure (kept as the Fig. 4 microbenchmark kernels),
+//!   plus `partial_select_by`, the deterministic quickselect the
+//!   Thunder block selection ranks its UP/LOW candidates with (ties
+//!   broken by index; replaces the full per-block sorts);
 //! * [`simd`]   — the predicated hot loops the solver actually runs:
 //!   8-lane branch-free fused extrema / `WSSj` scans and gradient
 //!   updates, parallelized with fixed-order reductions;
@@ -38,7 +41,9 @@
 //! Gram rows are cached over the *active* columns and computed in
 //! working-set blocks — one packed-panel GEMM per block against the
 //! active rows packed once per shrink generation
-//! ([`crate::blas::pack_b_panels`]). Capacity is
+//! ([`crate::blas::pack_b_panels`]); the RBF distance expansion and
+//! transform run fused on the shared engine
+//! ([`crate::primitives::distances::rbf_gram`]). Capacity is
 //! `cache_bytes / (8·active_len)` rows (oneDAL's `cacheSizeInBytes`,
 //! default 8 MB), floored by the legacy `cache_rows` knob and by two
 //! working sets; shrink events narrow the cached rows in place

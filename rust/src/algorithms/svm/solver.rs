@@ -15,7 +15,7 @@
 
 use super::kernel::{SvmKernel, TileCache};
 use super::simd::{self, WssExtrema};
-use super::wss::{LOW, SIGN_ANY, SIGN_NEG, SIGN_POS, UP};
+use super::wss::{self, LOW, SIGN_ANY, SIGN_NEG, SIGN_POS, UP};
 use crate::blas::{dot, pack_b_panels, PackedB, Transpose};
 use crate::coordinator::{Backend, Context};
 use crate::error::{Error, Result};
@@ -508,32 +508,10 @@ impl<'a> Engine<'a> {
             }
             let na = self.active.len();
             let q = self.params.ws_size.min(na);
-            // Working set: q/2 smallest grads in UP + q/2 largest in LOW
-            // (active-local indices).
-            let grad = &self.active.grad;
-            let flags = &self.active.flags;
-            let mut ups: Vec<usize> = (0..na).filter(|&l| flags[l] & UP != 0).collect();
-            ups.sort_by(|&a, &b| grad[a].partial_cmp(&grad[b]).unwrap());
-            let mut lows: Vec<usize> = (0..na).filter(|&l| flags[l] & LOW != 0).collect();
-            lows.sort_by(|&a, &b| grad[b].partial_cmp(&grad[a]).unwrap());
-            let mut ws: Vec<usize> = Vec::with_capacity(q);
-            let (mut iu, mut il) = (0usize, 0usize);
-            while ws.len() < q && (iu < ups.len() || il < lows.len()) {
-                if iu < ups.len() {
-                    let c = ups[iu];
-                    iu += 1;
-                    if !ws.contains(&c) {
-                        ws.push(c);
-                    }
-                }
-                if ws.len() < q && il < lows.len() {
-                    let c = lows[il];
-                    il += 1;
-                    if !ws.contains(&c) {
-                        ws.push(c);
-                    }
-                }
-            }
+            // Working set: q/2 smallest grads in UP + q/2 largest in
+            // LOW (active-local indices), via deterministic partial
+            // selection instead of full sorts.
+            let ws = select_working_set(&self.active.grad, &self.active.flags, q);
             if ws.len() < 2 {
                 if self.converged_or_unshrink() {
                     break;
@@ -626,6 +604,49 @@ impl<'a> Engine<'a> {
             self.unshrink(false);
         }
     }
+}
+
+/// Thunder working-set selection: interleave the top violators from
+/// each side — smallest gradients in `I_up` with largest in `I_low` —
+/// deduplicating free points that appear in both, until `q` indices are
+/// chosen. Candidate ranking runs [`wss::partial_select_by`]
+/// (deterministic quickselect under the `(gradient, index)` total
+/// order, ties to the lower index) over a `q`-deep prefix per side
+/// instead of fully sorting both lists: the interleave consumes at most
+/// `q` candidates per side (every consumed candidate is either pushed —
+/// at most `q` pushes in total — or skipped as a duplicate of a push
+/// from the *other* side, of which there are at most `q`−pushes), so
+/// the `q`-deep prefixes reproduce the full-sort selection exactly —
+/// the block-set equality the oracle test below asserts.
+fn select_working_set(grad: &[f64], flags: &[u8], q: usize) -> Vec<usize> {
+    let na = grad.len();
+    let mut ups: Vec<usize> = (0..na).filter(|&l| flags[l] & UP != 0).collect();
+    wss::partial_select_by(&mut ups, q.min(ups.len()), |a, b| {
+        grad[a].partial_cmp(&grad[b]).unwrap().then(a.cmp(&b))
+    });
+    let mut lows: Vec<usize> = (0..na).filter(|&l| flags[l] & LOW != 0).collect();
+    wss::partial_select_by(&mut lows, q.min(lows.len()), |a, b| {
+        grad[b].partial_cmp(&grad[a]).unwrap().then(a.cmp(&b))
+    });
+    let mut ws: Vec<usize> = Vec::with_capacity(q);
+    let (mut iu, mut il) = (0usize, 0usize);
+    while ws.len() < q && (iu < ups.len() || il < lows.len()) {
+        if iu < ups.len() {
+            let c = ups[iu];
+            iu += 1;
+            if !ws.contains(&c) {
+                ws.push(c);
+            }
+        }
+        if ws.len() < q && il < lows.len() {
+            let c = lows[il];
+            il += 1;
+            if !ws.contains(&c) {
+                ws.push(c);
+            }
+        }
+    }
+    ws
 }
 
 impl SvmParams {
@@ -994,6 +1015,71 @@ mod tests {
                 "{solver:?}: aggressive shrinking never triggered the recheck"
             );
             assert_same_decision(&m_on, &m_off, 5e-6, &format!("{solver:?} aggressive"));
+        }
+    }
+
+    /// The quickselect-based Thunder working-set selection must pick
+    /// exactly the block the PR 3 full-sort implementation picked —
+    /// same indices in the same order — across random gradients (with
+    /// forced ties), random flag mixes and working-set sizes, including
+    /// q larger than either side.
+    #[test]
+    fn working_set_selection_matches_sort_oracle() {
+        use crate::rng::{Distribution, Gaussian, Uniform};
+        let sort_oracle = |grad: &[f64], flags: &[u8], q: usize| -> Vec<usize> {
+            let na = grad.len();
+            let mut ups: Vec<usize> = (0..na).filter(|&l| flags[l] & UP != 0).collect();
+            ups.sort_by(|&a, &b| grad[a].partial_cmp(&grad[b]).unwrap());
+            let mut lows: Vec<usize> = (0..na).filter(|&l| flags[l] & LOW != 0).collect();
+            lows.sort_by(|&a, &b| grad[b].partial_cmp(&grad[a]).unwrap());
+            let mut ws: Vec<usize> = Vec::with_capacity(q);
+            let (mut iu, mut il) = (0usize, 0usize);
+            while ws.len() < q && (iu < ups.len() || il < lows.len()) {
+                if iu < ups.len() {
+                    let c = ups[iu];
+                    iu += 1;
+                    if !ws.contains(&c) {
+                        ws.push(c);
+                    }
+                }
+                if ws.len() < q && il < lows.len() {
+                    let c = lows[il];
+                    il += 1;
+                    if !ws.contains(&c) {
+                        ws.push(c);
+                    }
+                }
+            }
+            ws
+        };
+        let mut e = Mt19937::new(77);
+        let mut g = Gaussian::<f64>::standard();
+        let mut u = Uniform::new(0.0, 1.0);
+        for trial in 0..30u32 {
+            let na = 3 + (u.sample(&mut e) * 500.0) as usize;
+            // Quantized gradients force index tie-breaks through the
+            // quickselect; mixed flags give free points in both sides.
+            let grad: Vec<f64> =
+                (0..na).map(|_| (g.sample(&mut e) * 8.0).round() / 8.0).collect();
+            let flags: Vec<u8> = (0..na)
+                .map(|_| {
+                    let mut f = 0u8;
+                    if u.sample(&mut e) < 0.6 {
+                        f |= UP;
+                    }
+                    if u.sample(&mut e) < 0.6 {
+                        f |= LOW;
+                    }
+                    f
+                })
+                .collect();
+            for q in [2usize, 4, 8, 64, na, 2 * na] {
+                assert_eq!(
+                    select_working_set(&grad, &flags, q),
+                    sort_oracle(&grad, &flags, q),
+                    "trial={trial} na={na} q={q}"
+                );
+            }
         }
     }
 

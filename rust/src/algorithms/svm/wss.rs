@@ -19,6 +19,8 @@
 //!   lanes, then a block-local reduction with first-index tie-breaking
 //!   to preserve the scalar loop's semantics exactly.
 
+use std::cmp::Ordering;
+
 /// Flag bits (the paper's `I[]` array).
 pub const SIGN_POS: u8 = 0b0001;
 /// Negative-class sign bit.
@@ -120,6 +122,66 @@ pub fn wss_j_scalar(
         }
     }
     WssJResult { bj, obj: gmax, gmax2, delta }
+}
+
+/// Deterministic in-place partial selection: keep the `h` smallest
+/// elements of `items` under the **total** order `cmp`, sorted
+/// ascending, and drop the rest. The Thunder working-set selection
+/// calls this with `(gradient, index)` lexicographic orders — ties
+/// always break to the lower (global) index — so the selection is
+/// deterministic while replacing the solver's full `O(na·log na)`
+/// UP/LOW sorts with an expected `O(na + h·log h)` quickselect.
+///
+/// `cmp` must be a total order with no equal pairs (the index
+/// tie-break guarantees this for finite keys), so the Lomuto partition
+/// below cannot degenerate on duplicate keys, and the pivot walk —
+/// median-of-three probes at fixed positions — is fully deterministic:
+/// the same input always yields the same comparison sequence and the
+/// same result as sort-then-truncate.
+pub fn partial_select_by<F>(items: &mut Vec<usize>, h: usize, cmp: F)
+where
+    F: Fn(usize, usize) -> Ordering,
+{
+    if h == 0 {
+        items.clear();
+        return;
+    }
+    if h < items.len() {
+        // Quickselect: shrink the unresolved range [lo, hi) around the
+        // selection boundary `h` until every element left of `h` is one
+        // of the `h` smallest.
+        let (mut lo, mut hi) = (0usize, items.len());
+        while hi - lo > 1 {
+            // Median-of-three pivot from fixed probe positions.
+            let mid = lo + (hi - lo) / 2;
+            if cmp(items[mid], items[lo]) == Ordering::Less {
+                items.swap(mid, lo);
+            }
+            if cmp(items[hi - 1], items[lo]) == Ordering::Less {
+                items.swap(hi - 1, lo);
+            }
+            if cmp(items[hi - 1], items[mid]) == Ordering::Less {
+                items.swap(hi - 1, mid);
+            }
+            items.swap(mid, hi - 1);
+            let pivot = items[hi - 1];
+            let mut store = lo;
+            for i in lo..hi - 1 {
+                if cmp(items[i], pivot) == Ordering::Less {
+                    items.swap(i, store);
+                    store += 1;
+                }
+            }
+            items.swap(store, hi - 1);
+            match store.cmp(&h) {
+                Ordering::Less => lo = store + 1,
+                Ordering::Greater => hi = store,
+                Ordering::Equal => break,
+            }
+        }
+        items.truncate(h);
+    }
+    items.sort_unstable_by(|&a, &b| cmp(a, b));
 }
 
 /// Lane width of the vectorized scan — the stand-in for SVE's runtime
@@ -313,6 +375,42 @@ mod tests {
         assert_eq!(bi, 1); // index 2 is not in UP
         assert_eq!(gmin, -1.0);
         assert!(wss_i(&grad, &[0; 4]).is_none());
+    }
+
+    /// `partial_select_by` must equal sort-then-truncate for every `h`,
+    /// including heavy ties (quantized keys), `h = 0`, and `h ≥ len` —
+    /// the Thunder selection's oracle at the primitive level.
+    #[test]
+    fn partial_select_matches_sort_truncate() {
+        let mut meta = Mt19937::new(4242);
+        let mut g = Gaussian::<f64>::standard();
+        for trial in 0..40u32 {
+            let n = 1 + (meta.next_u32() % 400) as usize;
+            // Quantize to force many equal keys → index tie-breaks.
+            let keys: Vec<f64> =
+                (0..n).map(|_| (g.sample(&mut meta) * 3.0).round() / 3.0).collect();
+            let cmp =
+                |a: usize, b: usize| keys[a].partial_cmp(&keys[b]).unwrap().then(a.cmp(&b));
+            let mut sorted: Vec<usize> = (0..n).collect();
+            sorted.sort_by(|&a, &b| cmp(a, b));
+            for h in [0usize, 1, 2, n / 3, n / 2, n.saturating_sub(1), n, n + 5] {
+                let mut got: Vec<usize> = (0..n).collect();
+                partial_select_by(&mut got, h, cmp);
+                let want: Vec<usize> = sorted.iter().copied().take(h).collect();
+                assert_eq!(got, want, "trial={trial} n={n} h={h}");
+            }
+        }
+    }
+
+    /// Descending-key selection (the LOW side's order) with ties.
+    #[test]
+    fn partial_select_descending_with_ties() {
+        let keys = [1.0f64, 3.0, 3.0, 0.5, 3.0, 2.0];
+        let cmp = |a: usize, b: usize| keys[b].partial_cmp(&keys[a]).unwrap().then(a.cmp(&b));
+        let mut items: Vec<usize> = (0..keys.len()).collect();
+        partial_select_by(&mut items, 4, cmp);
+        // Largest first; equal keys in ascending index order.
+        assert_eq!(items, vec![1, 2, 4, 5]);
     }
 
     /// Property sweep across many random shapes — the hypothesis-style

@@ -285,6 +285,13 @@ pub fn gemm_threads<T: Float>(
 /// many thin row-tile multiplies without re-packing. Runs the exact
 /// panel sweep of [`gemm_threads`], so results are bit-identical to the
 /// pack-every-call path at every worker count.
+///
+/// Because A-panels cover disjoint `MR`-row groups and each C tile
+/// accumulates independently, computing an `MR`-aligned **row slice**
+/// of C with its own call (A sliced to the same rows) is bit-identical
+/// to the corresponding rows of the full-`m` call — the contract the
+/// fused distance engine ([`crate::primitives::distances`]) builds its
+/// per-worker tile sweep on.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_prepacked_threads<T: Float>(
     ta: Transpose,
@@ -539,6 +546,40 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// MR-aligned row slices computed by separate prepacked calls must
+    /// be bit-identical to the one-call full sweep — the fused distance
+    /// engine's workers each multiply their own query tile against the
+    /// shared packed corpus and rely on this to stay worker-count
+    /// invariant.
+    #[test]
+    fn gemm_prepacked_row_slices_match_full_call_bitwise() {
+        let mut e = Mt19937::new(71);
+        // k = 300 straddles the KC = 256 block edge.
+        let (m, n, k) = (37usize, 29usize, 300usize);
+        let a = rand_mat(&mut e, m * k);
+        let b = rand_mat(&mut e, k * n);
+        let packed = pack_b_panels(Transpose::No, k, n, &b);
+        let mut full = vec![0.0f64; m * n];
+        gemm_prepacked_threads(Transpose::No, m, 1.0, &a, &packed, 0.0, &mut full, 3);
+        let mut sliced = vec![0.0f64; m * n];
+        for r0 in (0..m).step_by(MR * 2) {
+            let r1 = (r0 + MR * 2).min(m);
+            gemm_prepacked_threads(
+                Transpose::No,
+                r1 - r0,
+                1.0,
+                &a[r0 * k..r1 * k],
+                &packed,
+                0.0,
+                &mut sliced[r0 * n..r1 * n],
+                1,
+            );
+        }
+        for (i, (u, v)) in full.iter().zip(&sliced).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "element {i}");
         }
     }
 

@@ -24,7 +24,11 @@
 //!   [`parallel::default_threads`] process default
 //!   (`ONEDAL_SVE_THREADS` overrides it). Scaled-output BLAS kernels
 //!   honor the reference β == 0 contract: the output is overwritten,
-//!   never read.
+//!   never read. Distance-based algorithms (k-means assignment, KNN,
+//!   DBSCAN, the SVM RBF gram) all share the fused pairwise
+//!   squared-distance engine in [`primitives::distances`]: corpus
+//!   packed once per call, pooled norm reduction, query tiles streamed
+//!   through the pool with fused predicated epilogues.
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
 //!   hot paths, AOT-lowered once to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing
@@ -56,6 +60,7 @@ pub mod error;
 pub mod linalg;
 pub mod metrics;
 pub mod parallel;
+pub mod primitives;
 pub mod profiling;
 pub mod rng;
 pub mod runtime;

@@ -1,0 +1,519 @@
+//! Fused pairwise squared-distance engine — **one** blocked, pooled
+//! implementation of `‖x−y‖² = ‖x‖² − 2·x·y + ‖y‖²` under every
+//! distance-based kernel in the paper's evaluation: k-means assignment
+//! (argmin epilogue), brute-force KNN (bounded top-k), DBSCAN region
+//! queries (ε-threshold neighbor lists) and the SVM RBF gram
+//! (`exp(−γ·d²)` transform). Before this module each consumer carried a
+//! private, partially sequential copy of the expansion; KNN and DBSCAN
+//! never touched the worker pool at all and re-packed the corpus for
+//! every query tile.
+//!
+//! ## Packing reuse
+//!
+//! The corpus side is packed **once per call** into the prepacked-GEMM
+//! micro-panel layout ([`crate::blas::pack_b_panels`], the pack-once
+//! discipline of the SVE packed-layout literature) and reused across
+//! every query tile — [`PackedCorpus`] couples the panels with the
+//! corpus row norms, which come from **one pooled reduction** (each
+//! norm computed whole by one worker, partials concatenated in
+//! partition order). Query rows stream through
+//! [`crate::parallel::WorkerPool::global`] in `TILE`-row M-tiles; each
+//! worker owns a private cross-term scratch and issues one
+//! single-threaded [`crate::blas::gemm_prepacked_threads`] call per
+//! tile — the fan-out happens at this level, never nested.
+//!
+//! ## Epilogue contract
+//!
+//! Every epilogue consumes the distance tile **while it is cache-hot**,
+//! in the `svm/simd.rs` predication idiom: guards become lane masks
+//! over 8-lane blocks ([`LANES`], one 512-bit SVE vector of f64),
+//! arithmetic runs on all lanes with neutral elements for dead lanes,
+//! and block reductions scan in index order so ties always break to the
+//! **lowest corpus index**. Distances are evaluated as
+//! `qn − 2·cross + corpus_norm` — the one canonical expression order —
+//! so consumers comparing against each other (or against their naive
+//! scalar rungs) see consistent values.
+//!
+//! ## Determinism rules
+//!
+//! Worker-range cuts land only on `TILE` boundaries (and the RBF entry
+//! on `MR` micro-panel boundaries), so the global tile decomposition is
+//! keyed by the input sizes alone — a tile is always computed whole, by
+//! one worker, with the same instruction order, whatever the worker
+//! count. Per-tile partials (e.g. inertia sums) merge in ascending tile
+//! order. Every entry point is therefore **bit-identical at any worker
+//! count**, which `tests/distances_property.rs` enforces for all four
+//! epilogues.
+
+use crate::blas::level3::MR;
+use crate::blas::{dot, gemm_prepacked_threads, pack_b_panels, PackedB, Transpose};
+use crate::coordinator::batch;
+use crate::parallel;
+use crate::tables::DenseTable;
+
+/// Lanes per predicated epilogue block (a 512-bit SVE vector of f64).
+pub const LANES: usize = 8;
+/// Query rows per distance tile: the `TILE × n` cross-term block a
+/// worker computes (and its epilogue consumes) in one piece.
+const TILE: usize = 256;
+/// Minimum multiply-adds per worker before the tile sweep fans out.
+const PAR_MIN_FLOP: usize = 1 << 16;
+/// Fan-out floor of the thin-m RBF gram entry (working sets are small,
+/// so the bar is lower — matches the old `gram_tile` transform gate).
+const RBF_MIN_FLOP: usize = 1 << 13;
+/// Fan-out floor of the pooled corpus-norm reduction.
+const NORM_MIN_WORK: usize = 1 << 14;
+
+/// The corpus side of a pairwise-distance sweep, packed once: the
+/// prepacked `op(B) = Yᵀ` micro-panels reused by every query tile plus
+/// the corpus squared row norms from one pooled reduction.
+pub struct PackedCorpus {
+    pb: PackedB<f64>,
+    norms: Vec<f64>,
+}
+
+impl PackedCorpus {
+    /// Corpus row count `n`.
+    pub fn rows(&self) -> usize {
+        self.pb.n()
+    }
+
+    /// Feature dimension `d` the panels were packed with.
+    pub fn dims(&self) -> usize {
+        self.pb.k()
+    }
+
+    /// Squared row norms `‖y_j‖²`, length [`PackedCorpus::rows`].
+    pub fn norms(&self) -> &[f64] {
+        &self.norms
+    }
+
+    /// The packed micro-panels (for callers issuing their own prepacked
+    /// multiplies against the corpus).
+    pub fn packed(&self) -> &PackedB<f64> {
+        &self.pb
+    }
+}
+
+/// Pack an `n × d` row-major corpus once: micro-panel layout for the
+/// cross-term GEMM plus pooled squared row norms.
+pub fn pack_corpus(y: &[f64], n: usize, d: usize, threads: usize) -> PackedCorpus {
+    debug_assert_eq!(y.len(), n * d);
+    PackedCorpus {
+        pb: pack_b_panels(Transpose::Yes, d, n, y),
+        norms: corpus_norms(y, n, d, threads),
+    }
+}
+
+/// [`pack_corpus`] for a [`DenseTable`].
+pub fn pack_corpus_table(y: &DenseTable<f64>, threads: usize) -> PackedCorpus {
+    pack_corpus(y.data(), y.rows(), y.cols(), threads)
+}
+
+/// Pooled corpus-norm reduction: each norm is one whole dot product
+/// computed by exactly one worker, partials concatenated in partition
+/// order — bit-identical at any worker count.
+fn corpus_norms(y: &[f64], n: usize, d: usize, threads: usize) -> Vec<f64> {
+    let workers = parallel::effective_threads(threads, n.saturating_mul(d), NORM_MIN_WORK);
+    let bounds = parallel::even_bounds(n, workers);
+    let partials = parallel::par_map(&bounds, |lo, hi| {
+        (lo..hi)
+            .map(|i| {
+                let row = &y[i * d..(i + 1) * d];
+                dot(row, row)
+            })
+            .collect::<Vec<f64>>()
+    });
+    let mut norms = Vec::with_capacity(n);
+    for p in partials {
+        norms.extend_from_slice(&p);
+    }
+    norms
+}
+
+/// The shared tile sweep: stream query M-tiles through the worker pool,
+/// computing each `len × n` cross-term block with one single-threaded
+/// prepacked GEMM into the worker's private scratch, then hand the
+/// cache-hot block to `tile_fn(tile_start, len, cross, out_rows)`.
+/// Worker cuts land only on `TILE` boundaries, so the tile
+/// decomposition — and the flattened, ascending-tile order of the
+/// returned partials — is identical at any worker count.
+#[allow(clippy::too_many_arguments)]
+fn sweep<T, R, F>(
+    q: &[f64],
+    m: usize,
+    d: usize,
+    corpus: &PackedCorpus,
+    out: &mut [T],
+    stride: usize,
+    threads: usize,
+    tile_fn: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, usize, &[f64], &mut [T]) -> R + Sync,
+{
+    let n = corpus.rows();
+    debug_assert_eq!(q.len(), m * d);
+    debug_assert_eq!(out.len(), m * stride);
+    let work = m.saturating_mul(n).saturating_mul(d.max(1));
+    let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
+    let bounds = parallel::aligned_bounds(m, workers, TILE);
+    let (pb, tile_fn) = (&corpus.pb, &tile_fn);
+    let partials = parallel::scope_rows(out, stride, &bounds, |r0, r1, block| {
+        let mut cross = vec![0.0f64; TILE.min(r1 - r0) * n];
+        let mut results = Vec::with_capacity((r1 - r0).div_ceil(TILE));
+        for (start, len) in batch::tiles(r1 - r0, TILE) {
+            let g0 = r0 + start;
+            let ctile = &mut cross[..len * n];
+            // Inner GEMM stays single-threaded: the fan-out already
+            // happened one level up.
+            gemm_prepacked_threads(
+                Transpose::No,
+                len,
+                1.0,
+                &q[g0 * d..(g0 + len) * d],
+                pb,
+                0.0,
+                ctile,
+                1,
+            );
+            let oblock = &mut block[start * stride..(start + len) * stride];
+            results.push(tile_fn(g0, len, ctile, oblock));
+        }
+        results
+    });
+    partials.into_iter().flatten().collect()
+}
+
+/// k-means assignment epilogue: nearest corpus row per query (strict
+/// `<`, ties to the lowest index) written into `assign`; returns the
+/// inertia `Σ max(d²_min, 0)` accumulated in ascending row order.
+/// `predicated` selects the branch-free 8-lane scan over the branchy
+/// scalar one — both produce identical assignments and inertia bits
+/// (the reference-vs-vectorized rung split of the dispatch ladder).
+pub fn argmin_assign(
+    q: &[f64],
+    m: usize,
+    corpus: &PackedCorpus,
+    predicated: bool,
+    assign: &mut [usize],
+    threads: usize,
+) -> f64 {
+    let d = corpus.dims();
+    let n = corpus.rows();
+    assert!(n > 0, "argmin_assign: empty corpus");
+    debug_assert_eq!(assign.len(), m);
+    let norms = corpus.norms.as_slice();
+    let partials = sweep(q, m, d, corpus, assign, 1, threads, |g0, len, cross, ablock| {
+        let mut inertia = 0.0f64;
+        for i in 0..len {
+            let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
+            let qn = dot(qi, qi);
+            let row = &cross[i * n..(i + 1) * n];
+            let (best, bestv) = if predicated {
+                argmin_lanes(qn, row, norms)
+            } else {
+                argmin_scalar(qn, row, norms)
+            };
+            ablock[i] = best;
+            inertia += bestv.max(0.0);
+        }
+        inertia
+    });
+    partials.into_iter().sum()
+}
+
+/// Branchy scalar argmin over one distance row (the reference rung).
+fn argmin_scalar(qn: f64, cross: &[f64], norms: &[f64]) -> (usize, f64) {
+    let (mut best, mut bestv) = (0usize, f64::INFINITY);
+    for (j, (&xc, &cn)) in cross.iter().zip(norms).enumerate() {
+        let dist = qn - 2.0 * xc + cn;
+        if dist < bestv {
+            bestv = dist;
+            best = j;
+        }
+    }
+    (best, bestv)
+}
+
+/// Predicated 8-lane argmin: distances evaluated unconditionally per
+/// lane, then a block reduction in index order (strict `<` keeps the
+/// earliest minimizer — the scalar loop's tie-break exactly).
+fn argmin_lanes(qn: f64, cross: &[f64], norms: &[f64]) -> (usize, f64) {
+    let n = cross.len();
+    let (mut best, mut bestv) = (0usize, f64::INFINITY);
+    let mut lane = [f64::INFINITY; LANES];
+    let mut base = 0usize;
+    while base < n {
+        let len = LANES.min(n - base);
+        for l in 0..len {
+            let j = base + l;
+            lane[l] = qn - 2.0 * cross[j] + norms[j];
+        }
+        for (l, &v) in lane.iter().take(len).enumerate() {
+            let better = v < bestv;
+            bestv = if better { v } else { bestv };
+            best = if better { base + l } else { best };
+        }
+        base += len;
+    }
+    (best, bestv)
+}
+
+/// KNN epilogue: the `k` nearest `(corpus_index, sqdist)` per query
+/// row, ascending by distance with ties to the lower index. Distances
+/// are clamped at 0 (the expansion can go ε-negative for coincident
+/// points). Returns fewer than `k` pairs only when the corpus is
+/// smaller than `k`.
+pub fn top_k(
+    q: &[f64],
+    m: usize,
+    corpus: &PackedCorpus,
+    k: usize,
+    threads: usize,
+) -> Vec<Vec<(usize, f64)>> {
+    let d = corpus.dims();
+    let n = corpus.rows();
+    let mut out: Vec<Vec<(usize, f64)>> = vec![Vec::new(); m];
+    if k == 0 || n == 0 || m == 0 {
+        return out;
+    }
+    let norms = corpus.norms.as_slice();
+    sweep(q, m, d, corpus, &mut out, 1, threads, |g0, len, cross, oblock| {
+        for i in 0..len {
+            let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
+            let qn = dot(qi, qi);
+            let row = &cross[i * n..(i + 1) * n];
+            oblock[i] = select_k(qn, row, norms, k);
+        }
+    });
+    out
+}
+
+/// Bounded top-k selection over one distance row: distances evaluated
+/// in predicated 8-lane blocks, candidates folded into a sorted bound
+/// list (insertion keeps equal distances in ascending index order, so
+/// the result matches a full `(dist, index)` sort).
+fn select_k(qn: f64, cross: &[f64], norms: &[f64], k: usize) -> Vec<(usize, f64)> {
+    let n = cross.len();
+    let mut best: Vec<(usize, f64)> = Vec::with_capacity(k + 1);
+    let mut worst = f64::INFINITY;
+    let mut lane = [0.0f64; LANES];
+    let mut base = 0usize;
+    while base < n {
+        let len = LANES.min(n - base);
+        for l in 0..len {
+            let j = base + l;
+            lane[l] = (qn - 2.0 * cross[j] + norms[j]).max(0.0);
+        }
+        for (l, &dist) in lane.iter().take(len).enumerate() {
+            if dist < worst || best.len() < k {
+                let pos = best.partition_point(|&(_, v)| v <= dist);
+                best.insert(pos, (base + l, dist));
+                if best.len() > k {
+                    best.pop();
+                }
+                worst = best.last().expect("k >= 1 candidates").1;
+            }
+        }
+        base += len;
+    }
+    best
+}
+
+/// DBSCAN epilogue: per query row, the ascending list of corpus indices
+/// within squared radius `eps2` (`d² ≤ eps2`, the naive rung's exact
+/// comparison). With `exclude_self`, corpus index `j` equal to the
+/// query's own global row index is skipped — the self-query convention
+/// of a corpus-vs-itself region query.
+pub fn eps_neighbors(
+    q: &[f64],
+    m: usize,
+    corpus: &PackedCorpus,
+    eps2: f64,
+    exclude_self: bool,
+    threads: usize,
+) -> Vec<Vec<usize>> {
+    let d = corpus.dims();
+    let n = corpus.rows();
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); m];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let norms = corpus.norms.as_slice();
+    sweep(q, m, d, corpus, &mut out, 1, threads, |g0, len, cross, oblock| {
+        for i in 0..len {
+            let gi = g0 + i;
+            let qi = &q[gi * d..(gi + 1) * d];
+            let qn = dot(qi, qi);
+            let row = &cross[i * n..(i + 1) * n];
+            let list = &mut oblock[i];
+            let mut lane = [false; LANES];
+            let mut base = 0usize;
+            while base < n {
+                let blen = LANES.min(n - base);
+                // Predicated block: the threshold compare is the mask.
+                for l in 0..blen {
+                    let j = base + l;
+                    lane[l] = qn - 2.0 * row[j] + norms[j] <= eps2;
+                }
+                for (l, &hit) in lane.iter().take(blen).enumerate() {
+                    let j = base + l;
+                    if hit && !(exclude_self && j == gi) {
+                        list.push(j);
+                    }
+                }
+                base += blen;
+            }
+        }
+    });
+    out
+}
+
+/// RBF gram epilogue: `out[r, j] = exp(−γ·max(d²(w_r, y_j), 0))` with
+/// the distance expansion fused into the cross-term tile while it is
+/// cache-hot. Row ranges fan out on `MR` micro-panel boundaries (the
+/// working sets this serves are thin — a `TILE`-aligned cut would
+/// serialize them), each worker running one single-threaded prepacked
+/// GEMM straight into its slice of `out` followed by the in-place
+/// transform; bit-identical at any worker count.
+pub fn rbf_gram(
+    w: &[f64],
+    w_norms: &[f64],
+    corpus_norms: &[f64],
+    pb: &PackedB<f64>,
+    gamma: f64,
+    out: &mut [f64],
+    threads: usize,
+) {
+    let m = w_norms.len();
+    let n = pb.n();
+    let d = pb.k();
+    debug_assert_eq!(w.len(), m * d);
+    debug_assert_eq!(corpus_norms.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let work = m.saturating_mul(n).saturating_mul(d.max(1));
+    let workers = parallel::effective_threads(threads, work, RBF_MIN_FLOP);
+    let bounds = parallel::aligned_bounds(m, workers, MR);
+    parallel::scope_rows(out, n, &bounds, |r0, r1, block| {
+        gemm_prepacked_threads(Transpose::No, r1 - r0, 1.0, &w[r0 * d..r1 * d], pb, 0.0, block, 1);
+        for (r, orow) in block.chunks_mut(n).enumerate() {
+            let qn = w_norms[r0 + r];
+            for (vchunk, nchunk) in orow.chunks_mut(LANES).zip(corpus_norms.chunks(LANES)) {
+                for (v, &cn) in vchunk.iter_mut().zip(nchunk) {
+                    let d2 = (qn - 2.0 * *v + cn).max(0.0);
+                    *v = (-gamma * d2).exp();
+                }
+            }
+        }
+    });
+}
+
+/// [`rbf_gram`] against a [`PackedCorpus`] (panels + norms packed once).
+pub fn rbf_gram_corpus(
+    w: &[f64],
+    w_norms: &[f64],
+    corpus: &PackedCorpus,
+    gamma: f64,
+    out: &mut [f64],
+    threads: usize,
+) {
+    rbf_gram(w, w_norms, &corpus.norms, &corpus.pb, gamma, out, threads);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::sqdist;
+    use crate::rng::{Distribution, Gaussian, Mt19937};
+
+    fn random_rows(seed: u32, n: usize, d: usize) -> Vec<f64> {
+        let mut e = Mt19937::new(seed);
+        let mut g = Gaussian::<f64>::standard();
+        let mut v = vec![0.0; n * d];
+        g.fill(&mut e, &mut v);
+        v
+    }
+
+    #[test]
+    fn corpus_norms_match_dot_oracle() {
+        let (n, d) = (97, 6);
+        let y = random_rows(1, n, d);
+        let c = pack_corpus(&y, n, d, 4);
+        assert_eq!(c.rows(), n);
+        assert_eq!(c.dims(), d);
+        for i in 0..n {
+            let row = &y[i * d..(i + 1) * d];
+            assert_eq!(c.norms()[i].to_bits(), dot(row, row).to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn argmin_scalar_and_lanes_agree_with_sqdist_oracle() {
+        let (m, n, d) = (41, 19, 5);
+        let q = random_rows(2, m, d);
+        let y = random_rows(3, n, d);
+        let c = pack_corpus(&y, n, d, 1);
+        let mut a_s = vec![0usize; m];
+        let mut a_l = vec![0usize; m];
+        let i_s = argmin_assign(&q, m, &c, false, &mut a_s, 1);
+        let i_l = argmin_assign(&q, m, &c, true, &mut a_l, 1);
+        assert_eq!(a_s, a_l);
+        assert_eq!(i_s.to_bits(), i_l.to_bits());
+        for i in 0..m {
+            let qi = &q[i * d..(i + 1) * d];
+            let (mut best, mut bestv) = (0usize, f64::INFINITY);
+            for j in 0..n {
+                let dist = sqdist(qi, &y[j * d..(j + 1) * d]);
+                if dist < bestv {
+                    bestv = dist;
+                    best = j;
+                }
+            }
+            assert_eq!(a_s[i], best, "row {i}");
+        }
+    }
+
+    #[test]
+    fn select_k_orders_ties_by_index() {
+        // Corpus with duplicate rows: equal distances must list the
+        // lower corpus index first.
+        let d = 3usize;
+        let y = [1.0, 0.0, 0.0, 0.0, 2.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0, 0.0];
+        let q = [0.0f64, 0.0, 0.0];
+        let c = pack_corpus(&y, 4, d, 1);
+        let nn = top_k(&q, 1, &c, 3, 1);
+        let idx: Vec<usize> = nn[0].iter().map(|p| p.0).collect();
+        assert_eq!(idx, vec![0, 2, 1]);
+        assert_eq!(nn[0][0].1.to_bits(), nn[0][1].1.to_bits());
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // Empty query set.
+        let y = random_rows(4, 3, 2);
+        let c = pack_corpus(&y, 3, 2, 2);
+        let mut assign: Vec<usize> = Vec::new();
+        assert_eq!(argmin_assign(&[], 0, &c, true, &mut assign, 4), 0.0);
+        assert!(top_k(&[], 0, &c, 2, 4).is_empty());
+        assert!(eps_neighbors(&[], 0, &c, 1.0, true, 4).is_empty());
+        // 1×1 corpus, 1-col data.
+        let c1 = pack_corpus(&[2.0], 1, 1, 1);
+        let mut a1 = vec![9usize];
+        let inertia = argmin_assign(&[2.0], 1, &c1, true, &mut a1, 1);
+        assert_eq!(a1, vec![0]);
+        assert!(inertia.abs() < 1e-12);
+        let nn = top_k(&[2.0], 1, &c1, 5, 1);
+        assert_eq!(nn[0], vec![(0, 0.0)]);
+        // Self-exclusion leaves a lone point with no neighbours.
+        let lists = eps_neighbors(&[2.0], 1, &c1, 100.0, true, 1);
+        assert!(lists[0].is_empty());
+        // k == 0 yields empty result rows.
+        assert!(top_k(&[2.0], 1, &c1, 0, 1)[0].is_empty());
+    }
+}

@@ -1,0 +1,10 @@
+//! Algorithm-level primitives shared across the ML layer — kernels that
+//! several algorithms previously carried as private copies, hoisted onto
+//! the BLAS/parallel substrate so every consumer inherits the same
+//! packing discipline, threading and determinism contract.
+//!
+//! * [`distances`] — the fused pairwise squared-distance engine under
+//!   k-means assignment, brute-force KNN, DBSCAN region queries and the
+//!   SVM RBF gram tiles.
+
+pub mod distances;

@@ -333,7 +333,13 @@ pub fn csrmv<T: Float>(
 /// whole by one worker). `op=Transpose` scatters by column index and
 /// uses the same input-keyed chunk-scratch merge as
 /// [`csrmm_threads`] — per-chunk scratch vectors merged in fixed chunk
-/// order. Both paths are bit-identical across worker counts.
+/// order. When the scratch scheme's `chunks·|y|` zero-fill/merge cost
+/// would dominate (hyper-sparse A with a huge output) the kernel
+/// instead echoes A into CSC form once and partitions `y` disjointly,
+/// exactly like the `csrmm` Transpose path — each output element
+/// accumulates its contributions in ascending input order, so the echo
+/// is bit-identical to the sequential sweep. All paths are
+/// bit-identical across worker counts.
 pub fn csrmv_threads<T: Float>(
     op: SparseOp,
     alpha: T,
@@ -371,6 +377,31 @@ pub fn csrmv_threads<T: Float>(
         SparseOp::Transpose => {
             let chunks = transpose_chunks(a.rows(), a.nnz(), out_len);
             if chunks == 1 {
+                let workers =
+                    crate::parallel::effective_threads(threads, a.nnz(), T_SCRATCH_MIN_WORK);
+                if workers > 1 {
+                    // Hyper-sparse huge-output inputs: the chunk-scratch
+                    // scheme tripped on its `chunks·|y|` bound but the
+                    // scatter still clears the parallel threshold. Echo
+                    // A into CSC form (= the CSR of Aᵀ) once — O(nnz+m)
+                    // — turning the scatter into a row traversal of y:
+                    // workers own disjoint y ranges outright, and each
+                    // element's contributions arrive in ascending i
+                    // (the echo buckets preserve input order), the
+                    // exact order of the sequential sweep below —
+                    // bit-identical to it at any worker count.
+                    let at = a.transposed();
+                    let bounds = crate::parallel::even_bounds(out_len, workers);
+                    let at = &at;
+                    crate::parallel::scope_rows(y, 1, &bounds, |r0, _r1, yblock| {
+                        for (j, yv) in yblock.iter_mut().enumerate() {
+                            for (i, av) in at.row_entries(r0 + j) {
+                                *yv = (alpha * x[i]).mul_add(av, *yv);
+                            }
+                        }
+                    });
+                    return Ok(());
+                }
                 for i in 0..a.rows() {
                     let axi = alpha * x[i];
                     for (j, av) in a.row_entries(i) {
@@ -644,6 +675,41 @@ mod tests {
                 for (u, v) in base.iter().zip(&y) {
                     assert_eq!(u.to_bits(), v.to_bits(), "op={op:?} threads={threads}");
                 }
+            }
+        }
+    }
+
+    /// The `csrmv` CSC-echo path (mirroring `csrmm`'s): hyper-sparse A
+    /// with a huge output trips the chunk-scratch bound
+    /// (`nnz < chunks·|y|`) while still clearing the parallel
+    /// threshold — it must match the dense oracle and be bit-identical
+    /// to the sequential (1-thread) sweep at any worker count.
+    #[test]
+    fn csrmv_transpose_csc_echo_matches_dense_and_threads() {
+        let mut e = Mt19937::new(33);
+        // nnz ≈ 1200·6000·0.0055 ≈ 39.6k ≥ 2·2^14 (so at least two
+        // workers clear the fan-out gate), but chunks·|y| = 8·6000 =
+        // 48k > nnz → the echo engages instead of the chunk-scratch
+        // scheme.
+        let a = make_sparse_csr(&mut e, 1200, 6000, 0.0055);
+        let nnz = a.nnz();
+        assert!(nnz >= (2 << 14), "fixture too sparse: nnz={nnz}");
+        assert!(nnz < 8 * 6000, "fixture too dense for the echo path: nnz={nnz}");
+        let x: Vec<f64> = (0..1200).map(|i| (i % 13) as f64 * 0.11 - 0.7).collect();
+        let y0: Vec<f64> = (0..6000).map(|i| (i % 7) as f64 * 0.25).collect();
+        let mut base = y0.clone();
+        csrmv_threads(SparseOp::Transpose, 1.4, &a, &x, 0.6, &mut base, 1).unwrap();
+        let ad = a.to_dense();
+        let mut oracle = y0.clone();
+        crate::blas::gemv(true, 1200, 6000, 1.4, ad.data(), &x, 0.6, &mut oracle);
+        for (u, v) in base.iter().zip(&oracle) {
+            assert!((u - v).abs() < 1e-9);
+        }
+        for threads in 2..=4 {
+            let mut y = y0.clone();
+            csrmv_threads(SparseOp::Transpose, 1.4, &a, &x, 0.6, &mut y, threads).unwrap();
+            for (u, v) in base.iter().zip(&y) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
             }
         }
     }

@@ -1,0 +1,343 @@
+//! Property suite for the fused pairwise-distance engine
+//! (`primitives::distances`, ISSUE 4): 1–4-worker bit-identity for
+//! every fused epilogue, naive-rung oracle equality for the four
+//! consumers (k-means assignment, KNN, DBSCAN, the SVM RBF gram),
+//! duplicate-point and tie-distance cases, and the degenerate shapes.
+
+use onedal_sve::algorithms::svm::kernel::SvmKernel;
+use onedal_sve::blas::{dot, pack_b_panels, sqdist, Transpose};
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::primitives::distances;
+use onedal_sve::tables::synth::make_blobs;
+
+fn ctx(b: Backend, threads: usize) -> Context {
+    Context::builder()
+        .artifact_dir("/nonexistent")
+        .backend(b)
+        .threads(threads)
+        .build()
+        .unwrap()
+}
+
+/// Corpus norms come from one pooled reduction: bit-identical at any
+/// worker count and equal to the per-row dot oracle.
+#[test]
+fn corpus_norms_bit_identical_across_workers() {
+    let mut e = Mt19937::new(1);
+    let (y, _) = make_blobs(&mut e, 3_000, 9, 4, 1.0);
+    let base = distances::pack_corpus_table(&y, 1);
+    for threads in 2..=4 {
+        let c = distances::pack_corpus_table(&y, threads);
+        for (u, v) in base.norms().iter().zip(c.norms()) {
+            assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+        }
+    }
+    for i in 0..y.rows() {
+        assert_eq!(base.norms()[i].to_bits(), dot(y.row(i), y.row(i)).to_bits(), "row {i}");
+    }
+}
+
+/// Argmin epilogue: assignments and inertia bit-identical at 1–4
+/// workers for both the scalar and the predicated scan bodies — and
+/// the two bodies agree with each other bit for bit.
+#[test]
+fn argmin_bit_identical_across_workers_and_bodies() {
+    let mut e = Mt19937::new(2);
+    let (x, _) = make_blobs(&mut e, 6_000, 8, 6, 1.0);
+    let (c, _) = make_blobs(&mut e, 6, 8, 6, 2.0);
+    let corpus = distances::pack_corpus_table(&c, 1);
+    let m = x.rows();
+    let mut base = vec![0usize; m];
+    let i_base = distances::argmin_assign(x.data(), m, &corpus, true, &mut base, 1);
+    for predicated in [false, true] {
+        for threads in 1..=4 {
+            let mut a = vec![0usize; m];
+            let it =
+                distances::argmin_assign(x.data(), m, &corpus, predicated, &mut a, threads);
+            assert_eq!(a, base, "predicated={predicated} threads={threads}");
+            assert_eq!(
+                it.to_bits(),
+                i_base.to_bits(),
+                "predicated={predicated} threads={threads}"
+            );
+        }
+    }
+}
+
+/// Argmin matches the naive scalar `sqdist` scan (the k-means naive
+/// rung) on blob data.
+#[test]
+fn argmin_matches_naive_sqdist_oracle() {
+    let mut e = Mt19937::new(3);
+    let (x, _) = make_blobs(&mut e, 400, 7, 5, 1.0);
+    let (c, _) = make_blobs(&mut e, 5, 7, 5, 2.0);
+    let corpus = distances::pack_corpus_table(&c, 2);
+    let mut a = vec![0usize; 400];
+    distances::argmin_assign(x.data(), 400, &corpus, true, &mut a, 2);
+    for i in 0..400 {
+        let (mut best, mut bestv) = (0usize, f64::INFINITY);
+        for j in 0..5 {
+            let d2 = sqdist(x.row(i), c.row(j));
+            if d2 < bestv {
+                bestv = d2;
+                best = j;
+            }
+        }
+        assert_eq!(a[i], best, "row {i}");
+    }
+}
+
+/// Top-k epilogue: bit-identical neighbour lists at 1–4 workers, equal
+/// to the naive full-sort oracle (the KNN naive rung).
+#[test]
+fn top_k_bit_identical_and_matches_naive_sort() {
+    let mut e = Mt19937::new(4);
+    let (x, _) = make_blobs(&mut e, 900, 6, 4, 1.5);
+    let (q, _) = make_blobs(&mut e, 700, 6, 4, 1.5);
+    let k = 7usize;
+    let corpus = distances::pack_corpus_table(&x, 1);
+    let base = distances::top_k(q.data(), q.rows(), &corpus, k, 1);
+    for threads in 2..=4 {
+        let got = distances::top_k(q.data(), q.rows(), &corpus, k, threads);
+        for (row_b, row_g) in base.iter().zip(&got) {
+            assert_eq!(row_b.len(), row_g.len(), "threads={threads}");
+            for (u, v) in row_b.iter().zip(row_g) {
+                assert_eq!(u.0, v.0, "threads={threads}");
+                assert_eq!(u.1.to_bits(), v.1.to_bits(), "threads={threads}");
+            }
+        }
+    }
+    for (i, row) in base.iter().enumerate() {
+        let mut dists: Vec<(usize, f64)> =
+            (0..x.rows()).map(|j| (j, sqdist(q.row(i), x.row(j)))).collect();
+        dists.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        let want: Vec<usize> = dists.iter().take(k).map(|p| p.0).collect();
+        let got: Vec<usize> = row.iter().map(|p| p.0).collect();
+        assert_eq!(got, want, "query {i}");
+    }
+}
+
+/// Duplicate corpus points: exactly coincident rows produce the same
+/// distance bits, so the bounded selection must list them in ascending
+/// corpus-index order — and a query coinciding with a corpus point
+/// reports distance 0 first.
+#[test]
+fn top_k_duplicates_and_ties_resolve_to_lower_index() {
+    // Corpus: rows 0 and 3 identical, rows 1 and 4 identical.
+    let y = vec![
+        1.0, 1.0, //
+        5.0, 0.0, //
+        9.0, 9.0, //
+        1.0, 1.0, //
+        5.0, 0.0, //
+    ];
+    let q = vec![1.0f64, 1.0];
+    let corpus = distances::pack_corpus(&y, 5, 2, 1);
+    let nn = distances::top_k(&q, 1, &corpus, 4, 1);
+    let idx: Vec<usize> = nn[0].iter().map(|p| p.0).collect();
+    assert_eq!(idx, vec![0, 3, 1, 4]);
+    assert_eq!(nn[0][0].1, 0.0);
+    assert_eq!(nn[0][0].1.to_bits(), nn[0][1].1.to_bits());
+    assert_eq!(nn[0][2].1.to_bits(), nn[0][3].1.to_bits());
+}
+
+/// ε-threshold epilogue: bit-identical lists at 1–4 workers; on an
+/// integer grid the expansion is exact, so the boundary case
+/// `d² == eps²` must match the naive `sqdist` comparison exactly.
+#[test]
+fn eps_neighbors_bit_identical_and_exact_on_boundary() {
+    // 1-D integer line: distances between points i, j are (i−j)².
+    let n = 150usize;
+    let y: Vec<f64> = (0..n).map(|i| i as f64).collect();
+    let corpus = distances::pack_corpus(&y, n, 1, 1);
+    // eps² = 4 ⇒ neighbours at exactly |i−j| ∈ {1, 2} — the |i−j| = 2
+    // pair sits exactly on the threshold.
+    let base = distances::eps_neighbors(&y, n, &corpus, 4.0, true, 1);
+    for threads in 2..=4 {
+        let got = distances::eps_neighbors(&y, n, &corpus, 4.0, true, threads);
+        assert_eq!(base, got, "threads={threads}");
+    }
+    for (i, list) in base.iter().enumerate() {
+        let want: Vec<usize> = (0..n)
+            .filter(|&j| j != i && sqdist(&y[i..i + 1], &y[j..j + 1]) <= 4.0)
+            .collect();
+        assert_eq!(list, &want, "row {i}");
+        assert!(list.contains(&(i.saturating_sub(2))) || i < 2);
+    }
+}
+
+/// RBF gram epilogue: bit-identical at 1–4 workers and equal to the
+/// kernel `eval` oracle within expansion tolerance.
+#[test]
+fn rbf_gram_bit_identical_and_matches_eval() {
+    let mut e = Mt19937::new(5);
+    let (x, _) = make_blobs(&mut e, 300, 6, 3, 1.0);
+    let corpus = distances::pack_corpus_table(&x, 2);
+    let gamma = 0.35f64;
+    let ws: Vec<usize> = (0..61).map(|i| (i * 5) % 300).collect();
+    let d = 6usize;
+    let mut w = vec![0.0f64; ws.len() * d];
+    let mut wn = vec![0.0f64; ws.len()];
+    for (r, &g) in ws.iter().enumerate() {
+        w[r * d..(r + 1) * d].copy_from_slice(x.row(g));
+        wn[r] = corpus.norms()[g];
+    }
+    let n = corpus.rows();
+    let mut base = vec![0.0f64; ws.len() * n];
+    distances::rbf_gram_corpus(&w, &wn, &corpus, gamma, &mut base, 1);
+    for threads in 2..=4 {
+        let mut tile = vec![0.0f64; ws.len() * n];
+        distances::rbf_gram_corpus(&w, &wn, &corpus, gamma, &mut tile, threads);
+        for (u, v) in base.iter().zip(&tile) {
+            assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+        }
+    }
+    let kernel = SvmKernel::Rbf { gamma };
+    for (r, &g) in ws.iter().enumerate() {
+        for j in 0..n {
+            let want = kernel.eval(x.row(g), x.row(j));
+            let got = base[r * n + j];
+            assert!((got - want).abs() < 1e-10, "r={r} j={j}: {got} vs {want}");
+        }
+    }
+}
+
+/// The SVM gram-tile entry (one of the four consumers) rides the same
+/// engine: the RBF tile must agree with `eval` and stay bit-identical
+/// across worker counts.
+#[test]
+fn svm_gram_tile_consumer_matches_eval() {
+    let mut e = Mt19937::new(6);
+    let (x, _) = make_blobs(&mut e, 80, 5, 2, 1.0);
+    let norms: Vec<f64> = (0..80).map(|i| dot(x.row(i), x.row(i))).collect();
+    let active: Vec<usize> = (0..80).filter(|i| i % 4 != 2).collect();
+    let na = active.len();
+    let d = 5usize;
+    let mut p = vec![0.0f64; na * d];
+    let mut pn = vec![0.0f64; na];
+    for (r, &g) in active.iter().enumerate() {
+        p[r * d..(r + 1) * d].copy_from_slice(x.row(g));
+        pn[r] = norms[g];
+    }
+    let pb = pack_b_panels(Transpose::Yes, d, na, &p);
+    let ws = [0usize, 13, 41, 79];
+    let mut w = vec![0.0f64; ws.len() * d];
+    let mut wn = vec![0.0f64; ws.len()];
+    for (r, &g) in ws.iter().enumerate() {
+        w[r * d..(r + 1) * d].copy_from_slice(x.row(g));
+        wn[r] = norms[g];
+    }
+    let kernel = SvmKernel::Rbf { gamma: 0.4 };
+    let mut base = vec![0.0f64; ws.len() * na];
+    kernel.gram_tile(&w, &wn, &pn, &pb, &mut base, 1);
+    for (r, &gi) in ws.iter().enumerate() {
+        for (c, &gj) in active.iter().enumerate() {
+            let want = kernel.eval(x.row(gi), x.row(gj));
+            assert!((base[r * na + c] - want).abs() < 1e-10, "r={r} c={c}");
+        }
+    }
+    for threads in 2..=4 {
+        let mut tile = vec![0.0f64; ws.len() * na];
+        kernel.gram_tile(&w, &wn, &pn, &pb, &mut tile, threads);
+        for (u, v) in base.iter().zip(&tile) {
+            assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+        }
+    }
+}
+
+/// Consumer-level oracle equality: the naive rung of each algorithm
+/// agrees with its engine-backed vectorized rung, end to end.
+#[test]
+fn consumers_match_their_naive_rungs() {
+    let mut e = Mt19937::new(7);
+    // k-means assignment.
+    let (x, _) = make_blobs(&mut e, 350, 6, 4, 1.0);
+    let model = KMeans::params().k(4).seed(9).train(&ctx(Backend::Vectorized, 3), &x).unwrap();
+    let a_naive = model.infer(&ctx(Backend::Naive, 1), &x).unwrap();
+    let a_vect = model.infer(&ctx(Backend::Vectorized, 3), &x).unwrap();
+    assert_eq!(a_naive, a_vect);
+    // KNN neighbour lists and predictions.
+    let (xt, labels) = make_blobs(&mut e, 250, 5, 3, 1.5);
+    let y: Vec<f64> = labels.iter().map(|&c| c as f64).collect();
+    let (q, _) = make_blobs(&mut e, 90, 5, 3, 1.5);
+    let knn = KnnClassifier::params().k(5).train(&ctx(Backend::Vectorized, 3), &xt, &y).unwrap();
+    let nn_naive = knn.kneighbors(&ctx(Backend::Naive, 1), &q).unwrap();
+    let nn_fused = knn.kneighbors(&ctx(Backend::Vectorized, 3), &q).unwrap();
+    for (a, b) in nn_naive.iter().zip(&nn_fused) {
+        let ia: Vec<usize> = a.iter().map(|p| p.0).collect();
+        let ib: Vec<usize> = b.iter().map(|p| p.0).collect();
+        assert_eq!(ia, ib);
+    }
+    // DBSCAN labels.
+    let (xd, _) = make_blobs(&mut e, 220, 4, 3, 0.8);
+    let m_naive = Dbscan::params().eps(1.5).min_pts(4).train(&ctx(Backend::Naive, 1), &xd).unwrap();
+    let m_fused =
+        Dbscan::params().eps(1.5).min_pts(4).train(&ctx(Backend::Vectorized, 3), &xd).unwrap();
+    assert_eq!(m_naive.labels, m_fused.labels);
+    assert_eq!(m_naive.n_clusters, m_fused.n_clusters);
+}
+
+/// KNN and DBSCAN training paths are now threaded end to end: whole
+/// runs must be bit-identical across `Context::threads()` settings.
+#[test]
+fn knn_and_dbscan_bit_stable_across_thread_counts() {
+    let mut e = Mt19937::new(8);
+    let (xt, labels) = make_blobs(&mut e, 2_000, 8, 4, 1.0);
+    let y: Vec<f64> = labels.iter().map(|&c| c as f64).collect();
+    let (q, _) = make_blobs(&mut e, 600, 8, 4, 1.0);
+    let knn = KnnClassifier::params().k(9).train(&ctx(Backend::Vectorized, 1), &xt, &y).unwrap();
+    let nn1 = knn.kneighbors(&ctx(Backend::Vectorized, 1), &q).unwrap();
+    let p1 = knn.infer(&ctx(Backend::Vectorized, 1), &q).unwrap();
+    for threads in 2..=4 {
+        let c = ctx(Backend::Vectorized, threads);
+        let nn = knn.kneighbors(&c, &q).unwrap();
+        for (a, b) in nn1.iter().zip(&nn) {
+            assert_eq!(a.len(), b.len(), "threads={threads}");
+            for (u, v) in a.iter().zip(b) {
+                assert_eq!(u.0, v.0, "threads={threads}");
+                assert_eq!(u.1.to_bits(), v.1.to_bits(), "threads={threads}");
+            }
+        }
+        assert_eq!(p1, knn.infer(&c, &q).unwrap(), "threads={threads}");
+    }
+    let (xd, _) = make_blobs(&mut e, 1_500, 6, 5, 1.0);
+    let d1 = Dbscan::params().eps(2.0).min_pts(5).train(&ctx(Backend::Vectorized, 1), &xd).unwrap();
+    for threads in 2..=4 {
+        let dm = Dbscan::params()
+            .eps(2.0)
+            .min_pts(5)
+            .train(&ctx(Backend::Vectorized, threads), &xd)
+            .unwrap();
+        assert_eq!(d1.labels, dm.labels, "threads={threads}");
+        assert_eq!(d1.n_clusters, dm.n_clusters, "threads={threads}");
+    }
+}
+
+/// Degenerate shapes: empty query sets, one-row / one-column corpora,
+/// k = 1, and self-exclusion with a lone point.
+#[test]
+fn degenerate_shapes_are_legal() {
+    let corpus = distances::pack_corpus(&[3.0, 4.0], 1, 2, 4);
+    assert_eq!(corpus.rows(), 1);
+    assert_eq!(corpus.dims(), 2);
+    // Empty query set.
+    let mut assign: Vec<usize> = Vec::new();
+    assert_eq!(distances::argmin_assign(&[], 0, &corpus, true, &mut assign, 4), 0.0);
+    assert!(distances::top_k(&[], 0, &corpus, 3, 4).is_empty());
+    assert!(distances::eps_neighbors(&[], 0, &corpus, 1.0, false, 4).is_empty());
+    // One-row corpus, k = 1: the single neighbour, distance clamped ≥ 0.
+    let nn = distances::top_k(&[3.0, 4.0], 1, &corpus, 1, 2);
+    assert_eq!(nn[0].len(), 1);
+    assert_eq!(nn[0][0].0, 0);
+    assert!(nn[0][0].1.abs() < 1e-9);
+    // Self-exclusion with a lone point leaves an empty list; without
+    // exclusion the point finds itself.
+    assert!(distances::eps_neighbors(&[3.0, 4.0], 1, &corpus, 1.0, true, 2)[0].is_empty());
+    assert_eq!(distances::eps_neighbors(&[3.0, 4.0], 1, &corpus, 1.0, false, 2)[0], vec![0]);
+    // One-column data.
+    let c1 = distances::pack_corpus(&[0.0, 10.0, 20.0], 3, 1, 1);
+    let mut a1 = vec![0usize; 2];
+    distances::argmin_assign(&[9.0, 19.0], 2, &c1, false, &mut a1, 3);
+    assert_eq!(a1, vec![1, 2]);
+}
