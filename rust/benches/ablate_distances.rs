@@ -263,7 +263,7 @@ fn main() {
         b.bench(&format!("dbscan-neigh/t{t}"), || {
             let corpus = distances::pack_corpus_table(&x, t);
             let lists = distances::eps_neighbors(x.data(), N, &corpus, EPS2, true, t);
-            std::hint::black_box(lists.len());
+            std::hint::black_box(lists.rows());
         });
     }
 

@@ -1,54 +1,208 @@
-//! §IV-B ablation — the Sparse BLAS substrate: csrmm / csrmv / csrmultd
-//! against dense gemm/gemv across a density sweep, plus the AᵀB vs AB
-//! loop-order comparison the paper analyzes.
+//! §IV-B ablation — the sparse substrate, at two levels:
 //!
-//! The paper's claim: the reference sparse routines "do not yet match
-//! MKL" but win over dense once sparsity is high enough — the crossover
-//! is what this bench locates.
+//! * **BLAS**: csrmm / csrmv / csrmultd against dense gemm/gemv across
+//!   a density sweep, plus the AᵀB vs AB loop-order comparison the
+//!   paper analyzes (the crossover where sparse beats dense);
+//! * **Algorithms** (ISSUE 5): the CSR ingestion paths against their
+//!   densify-then-dense-engine alternatives at the same densities —
+//!   k-means assignment (`argmin_assign_csr`), KNN top-k
+//!   (`top_k_csr`), DBSCAN ε-lists (`eps_neighbors_csr`), the sparse
+//!   linear-regression normal equations and CSR moments.
+//!
+//! Results land in `BENCH_sparse.json` (repo root when run from
+//! `rust/`, else the current directory) with the same "pending first
+//! run" scaffold convention as `BENCH_distances.json`.
 
 use onedal_sve::blas::{gemm, gemv, Transpose};
 use onedal_sve::prelude::*;
-use onedal_sve::profiling::Bencher;
-use onedal_sve::sparse::{csrmm, csrmultd, csrmv, SparseOp};
+use onedal_sve::primitives::distances::{self, CsrCorpus};
+use onedal_sve::profiling::{BenchResult, Bencher};
+use onedal_sve::sparse::{csrmm, csrmultd, csrmv, CsrMatrix, SparseOp};
 use onedal_sve::tables::synth;
+use onedal_sve::vsl;
+use std::io::Write as _;
+
+const DENSITIES: [f64; 3] = [0.01, 0.05, 0.2];
+const ROWS: usize = 3_000;
+const COLS: usize = 64;
+const K_CENT: usize = 16;
+const K_NN: usize = 10;
+const QUERIES: usize = 512;
+const THREADS: usize = 4;
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Hand-rolled JSON dump (no serde in the offline image).
+fn write_json(results: &[BenchResult]) -> std::io::Result<String> {
+    let path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_sparse.json"
+    } else {
+        "BENCH_sparse.json"
+    };
+    let mut rows = Vec::new();
+    for r in results {
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"median_ms\": {:.4}, \"mean_ms\": {:.4}, \"samples\": {}}}",
+            json_escape(&r.name),
+            r.median.as_secs_f64() * 1e3,
+            r.mean.as_secs_f64() * 1e3,
+            r.samples
+        ));
+    }
+    let med =
+        |name: &str| results.iter().find(|r| r.name == name).map(|r| r.median.as_secs_f64());
+    let mut speedups = Vec::new();
+    for density in DENSITIES {
+        let tag = format!("d{:03}", (density * 100.0) as u32);
+        for algo in ["kmeans-assign", "knn-topk", "dbscan-eps", "linreg-train", "moments"] {
+            if let (Some(dense), Some(csr)) = (
+                med(&format!("algo/{algo}-{tag}/densified")),
+                med(&format!("algo/{algo}-{tag}/csr")),
+            ) {
+                speedups.push(format!(
+                    "    {{\"case\": \"{algo}-{tag}/csr-vs-densified\", \"speedup\": {:.3}}}",
+                    dense / csr
+                ));
+            }
+        }
+        for kern in ["csrmm", "csrmv"] {
+            if let (Some(dense), Some(sparse)) = (
+                med(&format!("sparse/{kern}-{tag}/dense")),
+                med(&format!("sparse/{kern}-{tag}/sparse")),
+            ) {
+                speedups.push(format!(
+                    "    {{\"case\": \"{kern}-{tag}/sparse-vs-dense\", \"speedup\": {:.3}}}",
+                    dense / sparse
+                ));
+            }
+        }
+    }
+    let dens: Vec<String> = DENSITIES.iter().map(|d| format!("{d}")).collect();
+    let body = format!(
+        "{{\n  \"bench\": \"ablate_sparse\",\n  \
+         \"regenerate\": \"cd rust && cargo bench --bench ablate_sparse\",\n  \
+         \"fixtures\": {{\"table\": \"{ROWS}x{COLS}\", \"densities\": [{}], \
+         \"kmeans_k\": {K_CENT}, \"knn_k\": {K_NN}, \"queries\": {QUERIES}, \
+         \"threads\": {THREADS}}},\n  \
+         \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        dens.join(", "),
+        rows.join(",\n"),
+        speedups.join(",\n"),
+    );
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(body.as_bytes())?;
+    Ok(path.to_string())
+}
 
 fn main() {
     let mut e = Mt19937::new(10);
-    let mut b = Bencher::new(200, 9);
-    let (m, k, n) = (2_000usize, 1_000usize, 32usize);
+    let mut b = Bencher::new(200, 7);
 
-    for density in [0.01, 0.05, 0.2] {
-        let a = synth::make_sparse_csr(&mut e, m, k, density);
-        let ad = a.to_dense();
-        let bm: Vec<f64> = (0..k * n).map(|i| (i % 17) as f64 * 0.1).collect();
+    // ---- algorithm-level: CSR ingestion vs densify-then-dense ----
+    let (cent, _) = synth::make_blobs(&mut e, K_CENT, COLS, 8, 2.0);
+    for density in DENSITIES {
         let tag = format!("d{:03}", (density * 100.0) as u32);
+        let x = synth::make_sparse_csr(&mut e, ROWS, COLS, density);
+        let xd = x.to_dense();
+        let q = x.slice_rows(0, QUERIES).unwrap();
 
-        // csrmm vs dense gemm
-        let mut c = vec![0.0f64; m * n];
+        // k-means assignment epilogue.
+        let mut assign = vec![0usize; ROWS];
+        b.bench(&format!("algo/kmeans-assign-{tag}/csr"), || {
+            let corpus = CsrCorpus::from_dense(&cent, THREADS);
+            let i = distances::argmin_assign_csr(&x, &corpus, true, &mut assign, THREADS);
+            std::hint::black_box(i);
+        });
+        b.bench(&format!("algo/kmeans-assign-{tag}/densified"), || {
+            let dx = x.to_dense(); // densification is part of the cost
+            let corpus = distances::pack_corpus_table(&cent, THREADS);
+            let i = distances::argmin_assign(dx.data(), ROWS, &corpus, true, &mut assign, THREADS);
+            std::hint::black_box(i);
+        });
+
+        // KNN bounded top-k.
+        b.bench(&format!("algo/knn-topk-{tag}/csr"), || {
+            let corpus = CsrCorpus::from_csr(&x, THREADS);
+            std::hint::black_box(distances::top_k_csr(&q, &corpus, K_NN, THREADS).len());
+        });
+        b.bench(&format!("algo/knn-topk-{tag}/densified"), || {
+            let dx = x.to_dense();
+            let dq = q.to_dense();
+            let corpus = distances::pack_corpus_table(&dx, THREADS);
+            let nn = distances::top_k(dq.data(), QUERIES, &corpus, K_NN, THREADS);
+            std::hint::black_box(nn.len());
+        });
+
+        // DBSCAN ε-threshold neighbour lists.
+        b.bench(&format!("algo/dbscan-eps-{tag}/csr"), || {
+            let corpus = CsrCorpus::from_csr(&x, THREADS);
+            let lists = distances::eps_neighbors_csr(&q, &corpus, 4.0, false, THREADS);
+            std::hint::black_box(lists.rows());
+        });
+        b.bench(&format!("algo/dbscan-eps-{tag}/densified"), || {
+            let dx = x.to_dense();
+            let dq = q.to_dense();
+            let corpus = distances::pack_corpus_table(&dx, THREADS);
+            let lists =
+                distances::eps_neighbors(dq.data(), QUERIES, &corpus, 4.0, false, THREADS);
+            std::hint::black_box(lists.rows());
+        });
+
+        // Sparse normal equations vs the dense syrk path (whole train).
+        let y: Vec<f64> = (0..ROWS).map(|i| (i % 23) as f64 * 0.1 - 1.0).collect();
+        let ctx = Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Vectorized)
+            .threads(THREADS)
+            .build()
+            .unwrap();
+        b.bench(&format!("algo/linreg-train-{tag}/csr"), || {
+            let m = LinearRegression::params().train(&ctx, &x, &y).unwrap();
+            std::hint::black_box(m.coef[0]);
+        });
+        b.bench(&format!("algo/linreg-train-{tag}/densified"), || {
+            let dx = x.to_dense();
+            let m = LinearRegression::params().train(&ctx, &dx, &y).unwrap();
+            std::hint::black_box(m.coef[0]);
+        });
+
+        // Moments over stored values vs the dense dual-accumulator sweep.
+        b.bench(&format!("algo/moments-{tag}/csr"), || {
+            std::hint::black_box(vsl::x2c_mom_csr(&x).unwrap().variance[0]);
+        });
+        b.bench(&format!("algo/moments-{tag}/densified"), || {
+            let dx = x.to_dense();
+            std::hint::black_box(vsl::x2c_mom(&dx).unwrap().variance[0]);
+        });
+
+        // ---- BLAS-level: the §IV-B substrate at the same density ----
+        let n = 32usize;
+        let bm: Vec<f64> = (0..COLS * n).map(|i| (i % 17) as f64 * 0.1).collect();
+        let mut c = vec![0.0f64; ROWS * n];
         b.bench(&format!("sparse/csrmm-{tag}/sparse"), || {
-            csrmm(SparseOp::NoTranspose, 1.0, &a, &bm, n, 0.0, &mut c).unwrap();
+            csrmm(SparseOp::NoTranspose, 1.0, &x, &bm, n, 0.0, &mut c).unwrap();
             std::hint::black_box(c[0]);
         });
         b.bench(&format!("sparse/csrmm-{tag}/dense"), || {
-            gemm(Transpose::No, Transpose::No, m, n, k, 1.0, ad.data(), &bm, 0.0, &mut c);
+            gemm(Transpose::No, Transpose::No, ROWS, n, COLS, 1.0, xd.data(), &bm, 0.0, &mut c);
             std::hint::black_box(c[0]);
         });
-
-        // csrmv vs dense gemv
-        let xv: Vec<f64> = (0..k).map(|i| (i as f64).cos()).collect();
-        let mut yv = vec![0.0f64; m];
+        let xv: Vec<f64> = (0..COLS).map(|i| (i as f64).cos()).collect();
+        let mut yv = vec![0.0f64; ROWS];
         b.bench(&format!("sparse/csrmv-{tag}/sparse"), || {
-            csrmv(SparseOp::NoTranspose, 1.0, &a, &xv, 0.0, &mut yv).unwrap();
+            csrmv(SparseOp::NoTranspose, 1.0, &x, &xv, 0.0, &mut yv).unwrap();
             std::hint::black_box(yv[0]);
         });
         b.bench(&format!("sparse/csrmv-{tag}/dense"), || {
-            gemv(false, m, k, 1.0, ad.data(), &xv, 0.0, &mut yv);
+            gemv(false, ROWS, COLS, 1.0, xd.data(), &xv, 0.0, &mut yv);
             std::hint::black_box(yv[0]);
         });
     }
 
     // csrmultd loop orders: AB (j-k-i) vs AᵀB (i-j-k) at fixed density.
-    let a = synth::make_sparse_csr(&mut e, 800, 800, 0.05);
+    let a: CsrMatrix<f64> = synth::make_sparse_csr(&mut e, 800, 800, 0.05);
     let bs = synth::make_sparse_csr(&mut e, 800, 200, 0.05);
     let mut c = vec![0.0f64; 800 * 200];
     b.bench("sparse/csrmultd/ab-jki", || {
@@ -60,5 +214,12 @@ fn main() {
         std::hint::black_box(c[0]);
     });
 
-    b.speedup_table("Sparse substrate vs dense (crossover sweep)", "dense");
+    // Two baselines, two tables: the algorithm-level rows pair with
+    // their "/densified" runs, the BLAS substrate rows with "/dense".
+    b.speedup_table("Sparse ingestion vs densified (algorithm level)", "densified");
+    b.speedup_table("Sparse substrate vs dense (BLAS crossover sweep)", "dense");
+    match write_json(b.results()) {
+        Ok(path) => println!("\nrecorded: {path}"),
+        Err(err) => eprintln!("\nfailed to write BENCH_sparse.json: {err}"),
+    }
 }

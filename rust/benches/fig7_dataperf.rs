@@ -17,7 +17,7 @@ fn selection_train(
     let scorer = LogisticRegression::params().epochs(8).lr(0.3).train(ctx, pool, labels).unwrap();
     let scores = scorer.predict_proba(ctx, pool).unwrap();
     let mut idx: Vec<usize> = (0..pool.rows()).collect();
-    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
     idx.truncate(pool.rows() / 5);
     let sel = pool.gather_rows(&idx);
     let sel_y: Vec<f64> = idx.iter().map(|&i| labels[i]).collect();

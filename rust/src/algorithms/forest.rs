@@ -244,6 +244,36 @@ mod tests {
         assert!(f1 > 0.6, "f1={f1}");
     }
 
+    /// NaN feature values must not panic forest training (regression:
+    /// the tree's split sort used `partial_cmp(..).unwrap()`); the
+    /// model still trains, stays deterministic across thread counts,
+    /// and classifies the clean subspace.
+    #[test]
+    fn nan_features_degrade_without_panic() {
+        let mut e = Mt19937::new(17);
+        let (mut x, y) = make_classification(&mut e, 300, 6, 1.5);
+        for i in (0..300).step_by(11) {
+            x.row_mut(i)[3] = f64::NAN;
+        }
+        let c = ctx();
+        let params = || RandomForestClassifier::params().n_trees(10).seed(42);
+        let m = params().train(&c, &x, &y).unwrap();
+        let pred = m.infer(&c, &x).unwrap();
+        let mut correct = 0usize;
+        let mut clean = 0usize;
+        for i in 0..300 {
+            if x.row(i).iter().all(|v| v.is_finite()) {
+                clean += 1;
+                if pred[i] == y[i] {
+                    correct += 1;
+                }
+            }
+        }
+        assert!(correct as f64 / clean as f64 > 0.85, "{correct}/{clean}");
+        let m2 = params().train(&c, &x, &y).unwrap();
+        assert_eq!(m2.infer(&c, &x).unwrap(), pred, "NaN handling must stay deterministic");
+    }
+
     #[test]
     fn probabilities_rows_sum_to_one() {
         let mut e = Mt19937::new(4);

@@ -12,6 +12,15 @@
 //!                epilogue consumed while the tile is cache-hot;
 //! * artifact   — the `kmeans_assign` Pallas kernel via PJRT, tiled by
 //!                the coordinator's fixed-shape batcher.
+//!
+//! Entry points take [`TableRef`], so CSR tables train and infer too:
+//! the assignment pass runs the engine's sparse query path (centroids —
+//! dense by construction — packed once per pass as the
+//! [`distances::CsrCorpus`], same argmin epilogues, bit-identical at
+//! any worker count), the update scatter accumulates only the stored
+//! values, and `Backend::Naive` densifies first — the sparse paths'
+//! test oracle. No sparse Pallas kernel exists, so `Artifact` contexts
+//! fall back to the vectorized sparse path for CSR inputs.
 
 use crate::blas::sqdist;
 use crate::coordinator::{batch, Backend, Context};
@@ -20,7 +29,8 @@ use crate::parallel;
 use crate::primitives::distances;
 use crate::rng::{distributions::sample_indices, Engine, Mt19937, Uniform};
 use crate::rng::Distribution;
-use crate::tables::DenseTable;
+use crate::sparse::CsrMatrix;
+use crate::tables::{DenseTable, TableRef};
 
 /// Centroid initialization strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -56,6 +66,46 @@ pub struct KMeansModel {
     pub centroids: DenseTable<f64>,
     pub inertia: f64,
     pub iterations: usize,
+}
+
+/// One kmeans++ draw from the D² distribution (uniform fallback when
+/// all mass is zero) — shared by the dense and CSR seeders so the
+/// weighted-pick arithmetic can never diverge between layouts.
+fn d2_weighted_pick(e: &mut dyn Engine, u: &mut Uniform<f64>, d2: &[f64]) -> usize {
+    let n = d2.len();
+    let total: f64 = d2.iter().sum();
+    if total <= 0.0 {
+        // All points coincide with a center: fall back to uniform.
+        return (u.sample(e) * n as f64) as usize % n;
+    }
+    let mut target = u.sample(e) * total;
+    let mut pick = n - 1;
+    for (i, &w) in d2.iter().enumerate() {
+        target -= w;
+        if target <= 0.0 {
+            pick = i;
+            break;
+        }
+    }
+    pick
+}
+
+/// Lloyd centroid update from per-cluster `(count, sum)` scratches:
+/// occupied clusters move to their mean, empty clusters keep their
+/// previous centroid. Shared by the dense and CSR training loops.
+fn apply_centroid_means(centroids: &mut DenseTable<f64>, counts: &[usize], sums: &[f64]) {
+    let d = centroids.cols();
+    for (c, &count) in counts.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        let inv = 1.0 / count as f64;
+        let crow = centroids.row_mut(c);
+        let srow = &sums[c * d..(c + 1) * d];
+        for (cv, &sv) in crow.iter_mut().zip(srow) {
+            *cv = sv * inv;
+        }
+    }
 }
 
 impl KMeansParams {
@@ -107,22 +157,7 @@ impl KMeansParams {
                 let mut d2: Vec<f64> =
                     (0..n).map(|i| sqdist(x.row(i), x.row(centers[0]))).collect();
                 while centers.len() < self.k {
-                    let total: f64 = d2.iter().sum();
-                    let next = if total <= 0.0 {
-                        // All points coincide with a center: fall back to uniform.
-                        (u.sample(e) * n as f64) as usize % n
-                    } else {
-                        let mut target = u.sample(e) * total;
-                        let mut pick = n - 1;
-                        for (i, &w) in d2.iter().enumerate() {
-                            target -= w;
-                            if target <= 0.0 {
-                                pick = i;
-                                break;
-                            }
-                        }
-                        pick
-                    };
+                    let next = d2_weighted_pick(e, &mut u, &d2);
                     centers.push(next);
                     for i in 0..n {
                         d2[i] = d2[i].min(sqdist(x.row(i), x.row(next)));
@@ -133,21 +168,40 @@ impl KMeansParams {
         }
     }
 
-    /// Train with the default engine derived from `seed`.
-    pub fn train(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<KMeansModel> {
+    /// Train with the default engine derived from `seed`. Accepts
+    /// either layout (`&DenseTable<f64>` or `&CsrMatrix<f64>`).
+    pub fn train<'a>(&self, ctx: &Context, x: impl Into<TableRef<'a>>) -> Result<KMeansModel> {
         let mut e = Mt19937::new(self.seed);
         self.train_with_engine(ctx, x, &mut e)
     }
 
     /// Train with an explicit RNG engine (Fig. 3 entry point).
-    pub fn train_with_engine(
+    pub fn train_with_engine<'a>(
+        &self,
+        ctx: &Context,
+        x: impl Into<TableRef<'a>>,
+        e: &mut dyn Engine,
+    ) -> Result<KMeansModel> {
+        match x.into() {
+            TableRef::Dense(d) => self.train_dense(ctx, d, e),
+            TableRef::Csr(s) => {
+                if matches!(ctx.backend(), Backend::Naive) {
+                    // Densified naive rung — the sparse path's oracle.
+                    self.train_dense(ctx, &s.to_dense(), e)
+                } else {
+                    self.train_csr(ctx, s, e)
+                }
+            }
+        }
+    }
+
+    fn train_dense(
         &self,
         ctx: &Context,
         x: &DenseTable<f64>,
         e: &mut dyn Engine,
     ) -> Result<KMeansModel> {
         let n = x.rows();
-        let d = x.cols();
         let mut centroids = self.init_centroids(e, x)?;
         let mut assign = vec![0usize; n];
         let mut inertia = f64::INFINITY;
@@ -159,17 +213,7 @@ impl KMeansParams {
             // parallelized over fixed input-keyed chunks (see
             // [`update_sums`]).
             let (counts, sums) = update_sums(x, &assign, self.k, ctx.threads());
-            for c in 0..self.k {
-                if counts[c] == 0 {
-                    continue; // keep empty cluster's previous centroid
-                }
-                let inv = 1.0 / counts[c] as f64;
-                let crow = centroids.row_mut(c);
-                let srow = &sums[c * d..(c + 1) * d];
-                for (cv, &sv) in crow.iter_mut().zip(srow) {
-                    *cv = sv * inv;
-                }
-            }
+            apply_centroid_means(&mut centroids, &counts, &sums);
             if inertia.is_finite() && (inertia - new_inertia).abs() <= self.tol * inertia.max(1.0) {
                 inertia = new_inertia;
                 break;
@@ -178,14 +222,115 @@ impl KMeansParams {
         }
         Ok(KMeansModel { centroids, inertia, iterations })
     }
+
+    /// CSR training loop: the same Lloyd iteration, with the
+    /// assignment pass on the engine's sparse query path (centroids
+    /// packed once per pass) and the update scatter accumulating only
+    /// the stored values. Bit-identical at any worker count.
+    fn train_csr(
+        &self,
+        ctx: &Context,
+        x: &CsrMatrix<f64>,
+        e: &mut dyn Engine,
+    ) -> Result<KMeansModel> {
+        let n = x.rows();
+        let d = x.cols();
+        let mut centroids = self.init_centroids_csr(e, x)?;
+        let predicated =
+            !matches!(ctx.dispatch("kmeans_assign", &[n, d, self.k]), Backend::Reference);
+        let mut assign = vec![0usize; n];
+        let mut inertia = f64::INFINITY;
+        let mut iterations = 0;
+        for it in 0..self.max_iter {
+            iterations = it + 1;
+            let corpus = distances::CsrCorpus::from_dense(&centroids, ctx.threads());
+            let new_inertia =
+                distances::argmin_assign_csr(x, &corpus, predicated, &mut assign, ctx.threads());
+            let (counts, sums) = update_sums_csr(x, &assign, self.k, ctx.threads());
+            apply_centroid_means(&mut centroids, &counts, &sums);
+            if inertia.is_finite() && (inertia - new_inertia).abs() <= self.tol * inertia.max(1.0) {
+                inertia = new_inertia;
+                break;
+            }
+            inertia = new_inertia;
+        }
+        Ok(KMeansModel { centroids, inertia, iterations })
+    }
+
+    /// Centroid seeding for CSR inputs — the same strategies as the
+    /// dense [`KMeansParams::init_centroids`]. Each candidate row is
+    /// densified into a scratch before the `sqdist` call, so the D²
+    /// weights (and therefore every weighted pick) carry the exact bits
+    /// of the densified run.
+    fn init_centroids_csr(
+        &self,
+        e: &mut dyn Engine,
+        x: &CsrMatrix<f64>,
+    ) -> Result<DenseTable<f64>> {
+        let n = x.rows();
+        if self.k == 0 || self.k > n {
+            return Err(Error::Param(format!("k={} must be in 1..={n}", self.k)));
+        }
+        match self.init {
+            KMeansInit::Random => {
+                let idx = sample_indices(e, n, self.k);
+                Ok(x.gather_rows_dense(&idx))
+            }
+            KMeansInit::PlusPlus => {
+                fn row_d2(x: &CsrMatrix<f64>, i: usize, c: &[f64], scratch: &mut [f64]) -> f64 {
+                    scratch.fill(0.0);
+                    for (j, v) in x.row_entries(i) {
+                        scratch[j] = v;
+                    }
+                    sqdist(scratch, c)
+                }
+                let mut centers: Vec<usize> = Vec::with_capacity(self.k);
+                let mut u = Uniform::new(0.0, 1.0);
+                centers.push((u.sample(e) * n as f64) as usize % n);
+                let mut scratch = vec![0.0f64; x.cols()];
+                let mut crow = x.gather_rows_dense(&[centers[0]]);
+                let mut d2: Vec<f64> =
+                    (0..n).map(|i| row_d2(x, i, crow.row(0), &mut scratch)).collect();
+                while centers.len() < self.k {
+                    let next = d2_weighted_pick(e, &mut u, &d2);
+                    centers.push(next);
+                    crow = x.gather_rows_dense(&[next]);
+                    for i in 0..n {
+                        d2[i] = d2[i].min(row_d2(x, i, crow.row(0), &mut scratch));
+                    }
+                }
+                Ok(x.gather_rows_dense(&centers))
+            }
+        }
+    }
 }
 
 impl KMeansModel {
-    /// Assign each row of `x` to its nearest centroid.
-    pub fn infer(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<usize>> {
-        let mut assign = vec![0usize; x.rows()];
-        assign_step(ctx, x, &self.centroids, &mut assign)?;
-        Ok(assign)
+    /// Assign each row of `x` (either layout) to its nearest centroid.
+    pub fn infer<'a>(&self, ctx: &Context, x: impl Into<TableRef<'a>>) -> Result<Vec<usize>> {
+        match x.into() {
+            TableRef::Dense(d) => {
+                let mut assign = vec![0usize; d.rows()];
+                assign_step(ctx, d, &self.centroids, &mut assign)?;
+                Ok(assign)
+            }
+            TableRef::Csr(s) => {
+                if s.cols() != self.centroids.cols() {
+                    return Err(Error::Shape("kmeans: centroid dim mismatch".into()));
+                }
+                if matches!(ctx.backend(), Backend::Naive) {
+                    let mut assign = vec![0usize; s.rows()];
+                    assign_step(ctx, &s.to_dense(), &self.centroids, &mut assign)?;
+                    return Ok(assign);
+                }
+                let dims = &[s.rows(), s.cols(), self.centroids.rows()];
+                let predicated = !matches!(ctx.dispatch("kmeans_assign", dims), Backend::Reference);
+                let corpus = distances::CsrCorpus::from_dense(&self.centroids, ctx.threads());
+                let mut assign = vec![0usize; s.rows()];
+                distances::argmin_assign_csr(s, &corpus, predicated, &mut assign, ctx.threads());
+                Ok(assign)
+            }
+        }
     }
 }
 
@@ -228,6 +373,67 @@ fn update_sums(
             let srow = &mut sums[c * d..(c + 1) * d];
             for (s, &v) in srow.iter_mut().zip(x.row(i)) {
                 *s += v;
+            }
+        }
+    };
+    if chunks == 1 {
+        accumulate(0, n, &mut counts, &mut sums);
+        return (counts, sums);
+    }
+    let cbounds = parallel::even_bounds(n, chunks);
+    let nchunks = cbounds.len() - 1;
+    let workers = parallel::effective_threads(threads, nchunks, 1);
+    let wbounds = parallel::even_bounds(nchunks, workers);
+    let (cbounds, accumulate) = (&cbounds, &accumulate);
+    let partials = parallel::par_map(&wbounds, |clo, chi| {
+        (clo..chi)
+            .map(|ci| {
+                let mut pc = vec![0usize; k];
+                let mut ps = vec![0.0f64; k * d];
+                accumulate(cbounds[ci], cbounds[ci + 1], &mut pc, &mut ps);
+                (pc, ps)
+            })
+            .collect::<Vec<_>>()
+    });
+    // Deterministic ascending-chunk merge.
+    for (pc, ps) in partials.into_iter().flatten() {
+        for (c, &cnt) in pc.iter().enumerate() {
+            counts[c] += cnt;
+        }
+        for (sv, &pv) in sums.iter_mut().zip(&ps) {
+            *sv += pv;
+        }
+    }
+    (counts, sums)
+}
+
+/// [`update_sums`] for CSR inputs: identical input-keyed chunking and
+/// ascending-chunk merge, accumulating only the stored values (an
+/// implicit zero adds nothing to a coordinate sum). Bit-identical
+/// across 1–N workers.
+fn update_sums_csr(
+    x: &CsrMatrix<f64>,
+    assign: &[usize],
+    k: usize,
+    threads: usize,
+) -> (Vec<usize>, Vec<f64>) {
+    let n = x.rows();
+    let d = x.cols();
+    let mut counts = vec![0usize; k];
+    let mut sums = vec![0.0f64; k * d];
+    let work = x.nnz().max(n);
+    let chunks = if work < UPDATE_MIN_WORK || work < UPDATE_CHUNKS.saturating_mul(k * d) {
+        1
+    } else {
+        UPDATE_CHUNKS.min(n.max(1))
+    };
+    let accumulate = |lo: usize, hi: usize, counts: &mut [usize], sums: &mut [f64]| {
+        for i in lo..hi {
+            let c = assign[i];
+            counts[c] += 1;
+            let srow = &mut sums[c * d..(c + 1) * d];
+            for (j, v) in x.row_entries(i) {
+                srow[j] += v;
             }
         }
     };
@@ -472,6 +678,56 @@ mod tests {
             for (u, v) in s1.iter().zip(&s) {
                 assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
             }
+        }
+    }
+
+    /// CSR inputs train and infer through the sparse engine, matching
+    /// the densified naive oracle (Backend::Naive densifies first) and
+    /// staying bit-identical across worker counts.
+    #[test]
+    fn csr_matches_densified_oracle_and_threads() {
+        use crate::sparse::{CsrMatrix, IndexBase};
+        let mut e = Mt19937::new(21);
+        let (mut xd, _) = make_blobs(&mut e, 500, 6, 3, 0.3);
+        // Sparsify half the entries so the CSR path is exercised for real.
+        for (i, v) in xd.data_mut().iter_mut().enumerate() {
+            if i % 2 == 1 {
+                *v = 0.0;
+            }
+        }
+        let xs = CsrMatrix::from_dense(&xd, 0.0, IndexBase::One);
+        let cv = ctx(Backend::Vectorized);
+        let cn = ctx(Backend::Naive);
+        let params = || KMeans::params().k(3).seed(5).max_iter(20);
+        let m_csr = params().train(&cv, &xs).unwrap();
+        let m_oracle = params().train(&cn, &xs).unwrap(); // densified naive rung
+        let a_csr = m_csr.infer(&cv, &xs).unwrap();
+        let a_oracle = m_oracle.infer(&cn, &xs).unwrap();
+        assert_eq!(a_csr, a_oracle);
+        for (u, v) in m_csr.centroids.data().iter().zip(m_oracle.centroids.data()) {
+            assert!((u - v).abs() < 1e-8, "{u} vs {v}");
+        }
+        assert!((m_csr.inertia - m_oracle.inertia).abs() < 1e-8 * (1.0 + m_oracle.inertia));
+        // The dense table of the same data lands on the same clustering.
+        let m_dense = params().train(&cv, &xd).unwrap();
+        assert_eq!(m_dense.infer(&cv, &xd).unwrap(), a_csr);
+        // 1–4-worker bit-identity of the whole sparse training.
+        let mk = |t: usize| {
+            Context::builder()
+                .artifact_dir("/nonexistent")
+                .backend(Backend::Vectorized)
+                .threads(t)
+                .build()
+                .unwrap()
+        };
+        let base = params().train(&mk(1), &xs).unwrap();
+        for threads in 2..=4 {
+            let m = params().train(&mk(threads), &xs).unwrap();
+            for (u, v) in base.centroids.data().iter().zip(m.centroids.data()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
+            assert_eq!(base.inertia.to_bits(), m.inertia.to_bits(), "threads={threads}");
+            assert_eq!(base.iterations, m.iterations, "threads={threads}");
         }
     }
 

@@ -2,17 +2,27 @@
 //! workload of Fig. 3 (RNG comparison uses KNN) and Figs. 5–6 ("KNN-based
 //! algorithms achieve consistent speedups up to 1.5×").
 //!
-//! Backend ladder: naive = per-query full distance vector + full sort;
-//! reference/vectorized = the shared fused pairwise-distance engine
-//! ([`crate::primitives::distances`]): the training corpus packed once
-//! per call, query tiles streamed through the worker pool, and the
-//! bounded top-k selection fused onto each cache-hot distance tile.
+//! Backend ladder: naive = per-query full distance vector + full sort
+//! (NaN-safe `total_cmp` order, so NaN features degrade to
+//! sorted-last instead of panicking); reference/vectorized = the shared
+//! fused pairwise-distance engine ([`crate::primitives::distances`]):
+//! the training corpus packed once per call, query tiles streamed
+//! through the worker pool, and the bounded top-k selection fused onto
+//! each cache-hot distance tile.
+//!
+//! Both the reference set and the queries may be CSR
+//! ([`crate::tables::TableRef`]): sparse queries run the engine's CSR
+//! sweep against the corpus packed once as a
+//! [`distances::CsrCorpus`] (densified-transposed panel + norms);
+//! a CSR corpus with dense queries densifies the corpus once and runs
+//! the dense engine. Under `Backend::Naive` everything densifies — the
+//! sparse paths' test oracle.
 
 use crate::blas::sqdist;
 use crate::coordinator::{Backend, Context};
 use crate::error::{Error, Result};
-use crate::primitives::distances;
-use crate::tables::DenseTable;
+use crate::primitives::distances::{self, CsrCorpus};
+use crate::tables::{DenseTable, Table, TableRef};
 
 /// Parameters (oneDAL `kdtree_knn_classification`-style, brute force).
 #[derive(Clone, Debug)]
@@ -28,11 +38,12 @@ impl KnnClassifier {
     }
 }
 
-/// "Training" stores the reference set (brute-force KNN is lazy).
+/// "Training" stores the reference set (brute-force KNN is lazy) in
+/// whichever layout it arrived.
 #[derive(Clone, Debug)]
 pub struct KnnModel {
     pub k: usize,
-    pub x: DenseTable<f64>,
+    pub x: Table,
     pub y: Vec<f64>,
     pub classes: usize,
 }
@@ -43,7 +54,13 @@ impl KnnParams {
         self
     }
 
-    pub fn train(&self, _ctx: &Context, x: &DenseTable<f64>, y: &[f64]) -> Result<KnnModel> {
+    pub fn train<'a>(
+        &self,
+        _ctx: &Context,
+        x: impl Into<TableRef<'a>>,
+        y: &[f64],
+    ) -> Result<KnnModel> {
+        let x = x.into();
         if x.rows() != y.len() {
             return Err(Error::Shape("knn: label count mismatch".into()));
         }
@@ -51,17 +68,15 @@ impl KnnParams {
             return Err(Error::Param(format!("knn: k={} out of range", self.k)));
         }
         let classes = y.iter().fold(0.0f64, |a, &b| a.max(b)) as usize + 1;
-        Ok(KnnModel { k: self.k, x: x.clone(), y: y.to_vec(), classes })
+        Ok(KnnModel { k: self.k, x: x.to_table(), y: y.to_vec(), classes })
     }
 }
 
 impl KnnModel {
     /// Predict class labels for each query row (majority vote, ties to
     /// the lower class id — deterministic across backends).
-    pub fn infer(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>> {
-        if q.cols() != self.x.cols() {
-            return Err(Error::Shape("knn: query dim mismatch".into()));
-        }
+    pub fn infer<'a>(&self, ctx: &Context, q: impl Into<TableRef<'a>>) -> Result<Vec<f64>> {
+        let q = q.into();
         let neighbours = self.kneighbors(ctx, q)?;
         let mut out = Vec::with_capacity(q.rows());
         let mut votes = vec![0usize; self.classes];
@@ -78,24 +93,48 @@ impl KnnModel {
     }
 
     /// The k nearest `(train_index, sqdist)` per query, ascending.
-    pub fn kneighbors(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<Vec<(usize, f64)>>> {
-        match ctx.dispatch("pairwise_sqdist", &[q.rows().min(256), self.x.rows(), q.cols()]) {
-            Backend::Naive => Ok(self.kneighbors_naive(q)),
-            _ => Ok(self.kneighbors_fused(q, ctx.threads())),
+    pub fn kneighbors<'a>(
+        &self,
+        ctx: &Context,
+        q: impl Into<TableRef<'a>>,
+    ) -> Result<Vec<Vec<(usize, f64)>>> {
+        let q = q.into();
+        if q.cols() != self.x.cols() {
+            return Err(Error::Shape("knn: query dim mismatch".into()));
         }
-    }
-
-    /// Naive: full distance vector + full sort per query.
-    fn kneighbors_naive(&self, q: &DenseTable<f64>) -> Vec<Vec<(usize, f64)>> {
-        let mut out = Vec::with_capacity(q.rows());
-        for i in 0..q.rows() {
-            let mut dists: Vec<(usize, f64)> =
-                (0..self.x.rows()).map(|j| (j, sqdist(q.row(i), self.x.row(j)))).collect();
-            dists.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
-            dists.truncate(self.k);
-            out.push(dists);
-        }
-        out
+        let dims = [q.rows().min(256), self.x.rows(), q.cols()];
+        let naive = matches!(ctx.dispatch("pairwise_sqdist", &dims), Backend::Naive);
+        let t = ctx.threads();
+        Ok(match (self.x.view(), q) {
+            (TableRef::Dense(x), TableRef::Dense(qd)) => {
+                if naive {
+                    kneighbors_naive(x, qd, self.k)
+                } else {
+                    self.kneighbors_fused(x, qd, t)
+                }
+            }
+            (corpus, query) => {
+                if naive {
+                    // Densified naive rung — the sparse paths' oracle.
+                    kneighbors_naive(&corpus.to_dense(), &query.to_dense(), self.k)
+                } else {
+                    match (corpus, query) {
+                        (TableRef::Csr(x), TableRef::Csr(qs)) => {
+                            distances::top_k_csr(qs, &CsrCorpus::from_csr(x, t), self.k, t)
+                        }
+                        (TableRef::Dense(x), TableRef::Csr(qs)) => {
+                            distances::top_k_csr(qs, &CsrCorpus::from_dense(x, t), self.k, t)
+                        }
+                        (TableRef::Csr(x), TableRef::Dense(qd)) => {
+                            // Mixed CSR-corpus/dense-query: densify the
+                            // corpus once, then the dense engine.
+                            self.kneighbors_fused(&x.to_dense(), qd, t)
+                        }
+                        _ => unreachable!("dense corpus × dense query handled above"),
+                    }
+                }
+            }
+        })
     }
 
     /// Fused-engine rung: the training corpus is packed **once per
@@ -103,16 +142,38 @@ impl KnnModel {
     /// tile) and re-used by every query M-tile streamed through the
     /// worker pool; the bounded top-k selection runs on each distance
     /// tile while it is cache-hot. Bit-identical at any worker count.
-    fn kneighbors_fused(&self, q: &DenseTable<f64>, threads: usize) -> Vec<Vec<(usize, f64)>> {
-        let corpus = distances::pack_corpus_table(&self.x, threads);
+    fn kneighbors_fused(
+        &self,
+        x: &DenseTable<f64>,
+        q: &DenseTable<f64>,
+        threads: usize,
+    ) -> Vec<Vec<(usize, f64)>> {
+        let corpus = distances::pack_corpus_table(x, threads);
         distances::top_k(q.data(), q.rows(), &corpus, self.k, threads)
     }
+}
+
+/// Naive rung: full distance vector + full sort per query. The sort is
+/// `total_cmp`-ordered (IEEE totalOrder): a NaN feature makes its
+/// distances NaN, which sort **last** deterministically — never a
+/// panic (the old `partial_cmp(..).unwrap()` aborted mid-sort).
+fn kneighbors_naive(x: &DenseTable<f64>, q: &DenseTable<f64>, k: usize) -> Vec<Vec<(usize, f64)>> {
+    let mut out = Vec::with_capacity(q.rows());
+    for i in 0..q.rows() {
+        let mut dists: Vec<(usize, f64)> =
+            (0..x.rows()).map(|j| (j, sqdist(q.row(i), x.row(j)))).collect();
+        dists.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        dists.truncate(k);
+        out.push(dists);
+    }
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::rng::Mt19937;
+    use crate::sparse::{CsrMatrix, IndexBase};
     use crate::tables::synth::make_blobs;
 
     fn ctx(b: Backend) -> Context {
@@ -161,6 +222,99 @@ mod tests {
         for (i, row) in nn.iter().enumerate() {
             assert_eq!(row[0].0, i);
             assert!(row[0].1 < 1e-9);
+        }
+    }
+
+    /// Every (corpus, query) layout pairing returns the densified naive
+    /// rung's neighbour sets.
+    #[test]
+    fn csr_layout_pairings_match_densified_oracle() {
+        let mut e = Mt19937::new(9);
+        let (mut xd, labels) = make_blobs(&mut e, 160, 5, 3, 1.0);
+        for (i, v) in xd.data_mut().iter_mut().enumerate() {
+            if i % 3 == 1 {
+                *v = 0.0;
+            }
+        }
+        let y: Vec<f64> = labels.iter().map(|&c| c as f64).collect();
+        let (mut qd, _) = make_blobs(&mut e, 50, 5, 3, 1.0);
+        for (i, v) in qd.data_mut().iter_mut().enumerate() {
+            if i % 4 == 2 {
+                *v = 0.0;
+            }
+        }
+        let xs = CsrMatrix::from_dense(&xd, 0.0, IndexBase::One);
+        let qs = CsrMatrix::from_dense(&qd, 0.0, IndexBase::Zero);
+        let cn = ctx(Backend::Naive);
+        let cv = ctx(Backend::Vectorized);
+        let dense_model = KnnClassifier::params().k(6).train(&cv, &xd, &y).unwrap();
+        let csr_model = KnnClassifier::params().k(6).train(&cv, &xs, &y).unwrap();
+        let oracle = dense_model.kneighbors(&cn, &qd).unwrap();
+        let idx = |nn: &Vec<Vec<(usize, f64)>>| -> Vec<Vec<usize>> {
+            nn.iter().map(|r| r.iter().map(|p| p.0).collect()).collect()
+        };
+        let want = idx(&oracle);
+        for (model, query) in [
+            (&dense_model, TableRef::from(&qs)),
+            (&csr_model, TableRef::from(&qs)),
+            (&csr_model, TableRef::from(&qd)),
+        ] {
+            let got = model.kneighbors(&cv, query).unwrap();
+            assert_eq!(idx(&got), want);
+        }
+        // Predictions agree across layouts too.
+        let p_oracle = dense_model.infer(&cn, &qd).unwrap();
+        assert_eq!(csr_model.infer(&cv, &qs).unwrap(), p_oracle);
+    }
+
+    /// A NaN feature value must never panic either rung. The naive
+    /// sort now runs the `total_cmp` total order, so NaN distances sort
+    /// deterministically **last**; the fused rung stays deterministic
+    /// too (bit-identical across worker counts). The rungs are *not*
+    /// cross-compared on the poisoned row — the fused engine's
+    /// `max(0.0)` clamp maps a NaN distance to 0 while the naive sort
+    /// parks it at the end; both are documented, deterministic
+    /// degradations.
+    #[test]
+    fn nan_features_degrade_without_panic() {
+        let mut e = Mt19937::new(12);
+        let (mut x, labels) = make_blobs(&mut e, 40, 3, 2, 0.5);
+        let y: Vec<f64> = labels.iter().map(|&c| c as f64).collect();
+        let last = x.rows() - 1;
+        x.row_mut(last)[0] = f64::NAN;
+        let cn = ctx(Backend::Naive);
+        let model = KnnClassifier::params().k(3).train(&cn, &x, &y).unwrap();
+        let (q, _) = make_blobs(&mut e, 10, 3, 2, 0.5);
+        // Naive rung: no panic, poisoned row excluded (NaN sorts last),
+        // distances finite.
+        let nn_naive = model.kneighbors(&cn, &q).unwrap();
+        for a in &nn_naive {
+            assert!(a.iter().all(|p| p.0 != last && p.1.is_finite()));
+        }
+        // Full-k: the NaN row is selected — at the deterministic end.
+        let all = KnnClassifier::params().k(40).train(&cn, &x, &y).unwrap();
+        let nn = all.kneighbors(&cn, &q).unwrap();
+        assert_eq!(nn[0].len(), 40);
+        assert_eq!(nn[0].last().unwrap().0, last, "NaN distance sorts last");
+        // Fused rung: no panic, deterministic across worker counts.
+        let mk = |t: usize| {
+            Context::builder()
+                .artifact_dir("/nonexistent")
+                .backend(Backend::Vectorized)
+                .threads(t)
+                .build()
+                .unwrap()
+        };
+        let base = model.kneighbors(&mk(1), &q).unwrap();
+        for threads in 2..=4 {
+            let nn = model.kneighbors(&mk(threads), &q).unwrap();
+            for (a, b) in base.iter().zip(&nn) {
+                assert_eq!(a.len(), b.len());
+                for (p, r) in a.iter().zip(b) {
+                    assert_eq!(p.0, r.0, "threads={threads}");
+                    assert_eq!(p.1.to_bits(), r.1.to_bits(), "threads={threads}");
+                }
+            }
         }
     }
 

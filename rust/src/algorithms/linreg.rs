@@ -5,12 +5,20 @@
 //!
 //! `XᵀX` is computed with the VSL `xcp` machinery's BLAS path (syrk on
 //! the transposed layout), the solve with the Cholesky substrate.
+//!
+//! CSR tables train through the sparse normal equations: `XᵀX` from the
+//! sparse×sparse `csrmultd(AᵀB)` kernel, `Xᵀy` from the threaded
+//! `csrmv`, and — since centering would densify the matrix — the
+//! intercept is absorbed analytically (`XcᵀXc = XᵀX − n·x̄x̄ᵀ`,
+//! `Xcᵀyc = Xᵀy − n·x̄·ȳ`). Inference is one threaded `csrmv`.
+//! `Backend::Naive` densifies first — the sparse path's test oracle.
 
 use crate::blas::{gemv_threads, syrk_threads};
 use crate::coordinator::{Backend, Context};
 use crate::error::{Error, Result};
 use crate::linalg::cholesky_solve;
-use crate::tables::DenseTable;
+use crate::sparse::{csrmultd, csrmv_threads, CsrMatrix, IndexBase, SparseOp};
+use crate::tables::{DenseTable, TableRef};
 
 #[derive(Clone, Debug)]
 pub struct LinRegParams {
@@ -54,7 +62,13 @@ impl LinRegParams {
         self
     }
 
-    pub fn train(&self, ctx: &Context, x: &DenseTable<f64>, y: &[f64]) -> Result<LinRegModel> {
+    pub fn train<'a>(
+        &self,
+        ctx: &Context,
+        x: impl Into<TableRef<'a>>,
+        y: &[f64],
+    ) -> Result<LinRegModel> {
+        let x = x.into();
         let n = x.rows();
         let p = x.cols();
         if y.len() != n {
@@ -66,6 +80,22 @@ impl LinRegParams {
         if self.alpha < 0.0 {
             return Err(Error::Param("linreg: alpha must be ≥ 0".into()));
         }
+        match x {
+            TableRef::Dense(d) => self.train_dense(ctx, d, y),
+            TableRef::Csr(s) => {
+                if matches!(ctx.backend(), Backend::Naive) {
+                    // Densified naive rung — the sparse path's oracle.
+                    self.train_dense(ctx, &s.to_dense(), y)
+                } else {
+                    self.train_csr(ctx, s, y)
+                }
+            }
+        }
+    }
+
+    fn train_dense(&self, ctx: &Context, x: &DenseTable<f64>, y: &[f64]) -> Result<LinRegModel> {
+        let n = x.rows();
+        let p = x.cols();
         // Center to absorb the intercept.
         let (xc, yc, xmeans, ymean) = if self.fit_intercept {
             let xm = x.col_means();
@@ -116,18 +146,94 @@ impl LinRegParams {
         };
         Ok(LinRegModel { coef, intercept })
     }
+
+    /// Sparse normal equations: `XᵀX` from one `csrmultd(AᵀB)` call
+    /// (the paper's sparse×sparse kernel — its col-major output is
+    /// symmetric here, so no transposition is needed), `Xᵀy` from the
+    /// threaded `csrmv`, and the centering of the intercept absorbed
+    /// analytically instead of densifying `X`:
+    /// `XcᵀXc = XᵀX − n·x̄x̄ᵀ`, `Xcᵀyc = Xᵀy − n·x̄·ȳ` (the standard
+    /// sparse-solver treatment — exact centering would densify the
+    /// Gram accumulation). Conditioning caveat: the correction cancels
+    /// catastrophically when a column's mean dwarfs its spread (e.g.
+    /// raw timestamps); such data should be pre-shifted or trained
+    /// with a ridge `alpha` — the dense path, which centers `X`
+    /// explicitly, does not share this limit.
+    fn train_csr(&self, ctx: &Context, x: &CsrMatrix<f64>, y: &[f64]) -> Result<LinRegModel> {
+        let n = x.rows();
+        let p = x.cols();
+        // csrmultd requires 1-based operands; rebase a copy if needed.
+        let rebased;
+        let x1 = if x.base() == IndexBase::One {
+            x
+        } else {
+            let mut c = x.clone();
+            c.rebase(IndexBase::One);
+            rebased = c;
+            &rebased
+        };
+        let mut xtx = vec![0.0f64; p * p];
+        csrmultd(SparseOp::Transpose, x1, x1, &mut xtx)?;
+        let mut xty = vec![0.0f64; p];
+        csrmv_threads(SparseOp::Transpose, 1.0, x, y, 0.0, &mut xty, ctx.threads())?;
+        let (xmeans, ymean) = if self.fit_intercept {
+            let mut m = vec![0.0f64; p];
+            for i in 0..n {
+                for (j, v) in x.row_entries(i) {
+                    m[j] += v;
+                }
+            }
+            let inv = 1.0 / n as f64;
+            for v in m.iter_mut() {
+                *v *= inv;
+            }
+            (m, y.iter().sum::<f64>() / n as f64)
+        } else {
+            (vec![0.0; p], 0.0)
+        };
+        if self.fit_intercept {
+            let nf = n as f64;
+            for i in 0..p {
+                for j in 0..p {
+                    xtx[i * p + j] -= nf * xmeans[i] * xmeans[j];
+                }
+            }
+            for (v, &m) in xty.iter_mut().zip(&xmeans) {
+                *v -= nf * m * ymean;
+            }
+        }
+        for i in 0..p {
+            xtx[i * p + i] += self.alpha;
+        }
+        let coef = cholesky_solve(&xtx, p, &xty)?;
+        let intercept = if self.fit_intercept {
+            ymean - coef.iter().zip(&xmeans).map(|(c, m)| c * m).sum::<f64>()
+        } else {
+            0.0
+        };
+        Ok(LinRegModel { coef, intercept })
+    }
 }
 
 impl LinRegModel {
-    /// Tall-skinny inference: one threaded gemv row-partitioned on the
-    /// context's worker count.
-    pub fn infer(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<f64>> {
+    /// Tall-skinny inference: one threaded gemv (dense) or csrmv (CSR)
+    /// row-partitioned on the context's worker count.
+    pub fn infer<'a>(&self, ctx: &Context, x: impl Into<TableRef<'a>>) -> Result<Vec<f64>> {
+        let x = x.into();
         if x.cols() != self.coef.len() {
             return Err(Error::Shape("linreg: dim mismatch".into()));
         }
         let mut out = vec![self.intercept; x.rows()];
-        let (n, p) = (x.rows(), x.cols());
-        gemv_threads(false, n, p, 1.0, x.data(), &self.coef, 1.0, &mut out, ctx.threads());
+        match x {
+            TableRef::Dense(d) => {
+                let (n, p) = (d.rows(), d.cols());
+                gemv_threads(false, n, p, 1.0, d.data(), &self.coef, 1.0, &mut out, ctx.threads());
+            }
+            TableRef::Csr(s) => {
+                let t = ctx.threads();
+                csrmv_threads(SparseOp::NoTranspose, 1.0, s, &self.coef, 1.0, &mut out, t)?;
+            }
+        }
         Ok(out)
     }
 }
@@ -197,6 +303,90 @@ mod tests {
         let m = LinearRegression::params().train(&c, &x, &y).unwrap();
         assert!((m.coef[0] - 2.0).abs() < 1e-8);
         assert!((m.intercept - 5.0).abs() < 1e-6);
+    }
+
+    /// CSR training solves the sparse normal equations to the same
+    /// coefficients as the densified naive oracle, recovers the true
+    /// weights on noise-free data, and is bit-identical across worker
+    /// counts (both index bases).
+    #[test]
+    fn csr_matches_densified_oracle_and_threads() {
+        use crate::sparse::{CsrMatrix, IndexBase};
+        let mut e = Mt19937::new(9);
+        let (mut xd, _, _) = make_regression(&mut e, 600, 7, 0.0);
+        for (i, v) in xd.data_mut().iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        let w_true: Vec<f64> = (0..7).map(|j| j as f64 - 3.0).collect();
+        let y: Vec<f64> = (0..600)
+            .map(|i| xd.row(i).iter().zip(&w_true).map(|(a, b)| a * b).sum::<f64>() + 2.5)
+            .collect();
+        for base in [IndexBase::Zero, IndexBase::One] {
+            let xs = CsrMatrix::from_dense(&xd, 0.0, base);
+            let cv = ctx(Backend::Vectorized);
+            let cn = ctx(Backend::Naive);
+            let m_csr = LinearRegression::params().train(&cv, &xs, &y).unwrap();
+            let m_oracle = LinearRegression::params().train(&cn, &xs, &y).unwrap();
+            for (a, b) in m_csr.coef.iter().zip(&m_oracle.coef) {
+                assert!((a - b).abs() < 1e-6, "{base:?}: {a} vs {b}");
+            }
+            assert!((m_csr.intercept - m_oracle.intercept).abs() < 1e-6, "{base:?}");
+            for (a, b) in m_csr.coef.iter().zip(&w_true) {
+                assert!((a - b).abs() < 1e-6, "{base:?}: {a} vs {b}");
+            }
+            assert!((m_csr.intercept - 2.5).abs() < 1e-5, "{base:?}");
+            // Sparse inference matches dense inference of the same model.
+            let pred_s = m_csr.infer(&cv, &xs).unwrap();
+            let pred_d = m_csr.infer(&cv, &xd).unwrap();
+            for (a, b) in pred_s.iter().zip(&pred_d) {
+                assert!((a - b).abs() < 1e-9, "{base:?}");
+            }
+            // 1–4-worker bit-identity of sparse train + infer.
+            let mk = |t: usize| {
+                Context::builder()
+                    .artifact_dir("/nonexistent")
+                    .backend(Backend::Vectorized)
+                    .threads(t)
+                    .build()
+                    .unwrap()
+            };
+            let m1 = LinearRegression::params().train(&mk(1), &xs, &y).unwrap();
+            let p1 = m1.infer(&mk(1), &xs).unwrap();
+            for threads in 2..=4 {
+                let m = LinearRegression::params().train(&mk(threads), &xs, &y).unwrap();
+                for (a, b) in m1.coef.iter().zip(&m.coef) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{base:?} threads={threads}");
+                }
+                let p = m.infer(&mk(threads), &xs).unwrap();
+                for (a, b) in p1.iter().zip(&p) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{base:?} threads={threads}");
+                }
+            }
+        }
+    }
+
+    /// Ridge shrinks CSR fits exactly like dense fits.
+    #[test]
+    fn csr_ridge_matches_dense_ridge() {
+        use crate::sparse::{CsrMatrix, IndexBase};
+        let mut e = Mt19937::new(11);
+        let (mut xd, y, _) = make_regression(&mut e, 400, 5, 0.3);
+        for (i, v) in xd.data_mut().iter_mut().enumerate() {
+            if i % 2 == 1 {
+                *v = 0.0;
+            }
+        }
+        let xs = CsrMatrix::from_dense(&xd, 0.0, IndexBase::One);
+        let cv = ctx(Backend::Vectorized);
+        let ridge = RidgeRegression::params().alpha(50.0);
+        let ms = ridge.train(&cv, &xs, &y).unwrap();
+        let md = ridge.train(&cv, &xd, &y).unwrap();
+        for (a, b) in ms.coef.iter().zip(&md.coef) {
+            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        }
+        assert!((ms.intercept - md.intercept).abs() < 1e-7);
     }
 
     #[test]

@@ -170,6 +170,28 @@ mod tests {
         }
     }
 
+    /// NaN feature values must not panic PCA (regression: the Jacobi
+    /// eigen-sort used `partial_cmp(..).unwrap()`): training terminates
+    /// — the sweep loop is bounded — and degrades to deterministic
+    /// NaN-laden eigenpairs.
+    #[test]
+    fn nan_input_degrades_without_panic() {
+        let mut e = Mt19937::new(5);
+        let mut g = Gaussian::<f64>::standard();
+        let mut data = vec![0.0; 100 * 4];
+        g.fill(&mut e, &mut data);
+        data[17] = f64::NAN;
+        let x = DenseTable::from_vec(data, 100, 4).unwrap();
+        let m = Pca::params().n_components(2).train(&ctx(), &x).unwrap();
+        let m2 = Pca::params().n_components(2).train(&ctx(), &x).unwrap();
+        for (a, b) in m.explained_variance.iter().zip(&m2.explained_variance) {
+            assert_eq!(a.to_bits(), b.to_bits(), "NaN degradation must be deterministic");
+        }
+        for (a, b) in m.components.data().iter().zip(m2.components.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
     #[test]
     fn param_validation() {
         let x = DenseTable::<f64>::zeros(10, 3);

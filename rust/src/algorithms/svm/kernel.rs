@@ -7,6 +7,7 @@
 
 use crate::blas::{dot, gemm_prepacked_threads, gemv_threads, sqdist, PackedB, Transpose};
 use crate::primitives::distances;
+use crate::sparse::{csrmm_threads, CsrMatrix, SparseOp};
 use crate::tables::DenseTable;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -80,12 +81,20 @@ impl SvmKernel {
         });
     }
 
-    /// Diagonal `K(i, i)` values for all rows.
-    pub fn diag(&self, x: &DenseTable<f64>, norms: &[f64]) -> Vec<f64> {
+    /// Diagonal `K(i, i)` values from the squared row norms alone —
+    /// the layout-blind entry the solver uses (norms carry everything
+    /// either kernel needs).
+    pub fn diag_from_norms(&self, norms: &[f64]) -> Vec<f64> {
         match *self {
             SvmKernel::Linear => norms.to_vec(),
-            SvmKernel::Rbf { .. } => vec![1.0; x.rows()],
+            SvmKernel::Rbf { .. } => vec![1.0; norms.len()],
         }
+    }
+
+    /// Diagonal `K(i, i)` values for all rows of a dense table.
+    pub fn diag(&self, x: &DenseTable<f64>, norms: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(x.rows(), norms.len());
+        self.diag_from_norms(norms)
     }
 
     /// Blocked gram tile `K(W, P)` (`ws × na`) as one prepacked-GEMM
@@ -124,6 +133,38 @@ impl SvmKernel {
             }
             SvmKernel::Rbf { gamma } => {
                 distances::rbf_gram(w, w_norms, p_norms, pb, gamma, out, threads);
+            }
+        }
+    }
+
+    /// [`SvmKernel::gram_tile`] for a **sparse** working set: `w` holds
+    /// the gathered working-set rows as a CSR matrix, `bt` the active
+    /// panel densified-transposed (`d × na` row-major, packed once per
+    /// shrink generation — the sparse analogue of the prepacked
+    /// micro-panels). Linear is one threaded CSR multiply; RBF runs the
+    /// fused `exp(−γ·d²)` transform of
+    /// [`crate::primitives::distances::rbf_gram_csr`]. Both partition
+    /// whole output rows per worker — bit-identical at any count.
+    pub fn gram_tile_csr(
+        &self,
+        w: &CsrMatrix<f64>,
+        w_norms: &[f64],
+        p_norms: &[f64],
+        bt: &[f64],
+        out: &mut [f64],
+        threads: usize,
+    ) {
+        let na = p_norms.len();
+        debug_assert_eq!(w_norms.len(), w.rows());
+        debug_assert_eq!(bt.len(), w.cols() * na);
+        debug_assert_eq!(out.len(), w.rows() * na);
+        match *self {
+            SvmKernel::Linear => {
+                csrmm_threads(SparseOp::NoTranspose, 1.0, w, bt, na, 0.0, out, threads)
+                    .expect("gram_tile_csr: shapes consistent");
+            }
+            SvmKernel::Rbf { gamma } => {
+                distances::rbf_gram_csr(w, w_norms, p_norms, bt, gamma, out, threads);
             }
         }
     }
@@ -443,6 +484,52 @@ mod tests {
             for threads in 2..=4 {
                 let mut tile = vec![0.0f64; ws.len() * na];
                 k.gram_tile(&w, &wn, &pn, &pb, &mut tile, threads);
+                for (u, v) in base.iter().zip(&tile) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{k:?} threads={threads}");
+                }
+            }
+        }
+    }
+
+    /// The sparse gram tile equals per-pair `eval` on the densified
+    /// rows and is bit-identical across worker counts.
+    #[test]
+    fn gram_tile_csr_matches_eval_and_threads() {
+        use crate::sparse::{CsrMatrix, IndexBase};
+        let mut sp = dataset(41, 5);
+        for (i, v) in sp.data_mut().iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *v = 0.0;
+            }
+        }
+        let xs = CsrMatrix::from_dense(&sp, 0.0, IndexBase::One);
+        let norms: Vec<f64> = (0..41).map(|i| dot(sp.row(i), sp.row(i))).collect();
+        let active: Vec<usize> = (0..41).filter(|i| i % 4 != 2).collect();
+        let na = active.len();
+        let d = 5;
+        let mut bt = vec![0.0f64; d * na];
+        for (r, &g) in active.iter().enumerate() {
+            for (j, v) in xs.row_entries(g) {
+                bt[j * na + r] = v;
+            }
+        }
+        let pn: Vec<f64> = active.iter().map(|&g| norms[g]).collect();
+        let ws = [0usize, 5, 17, 40];
+        let wcsr = xs.gather_rows(&ws);
+        let wn: Vec<f64> = ws.iter().map(|&g| norms[g]).collect();
+        for k in [SvmKernel::Linear, SvmKernel::Rbf { gamma: 0.4 }] {
+            let mut base = vec![0.0f64; ws.len() * na];
+            k.gram_tile_csr(&wcsr, &wn, &pn, &bt, &mut base, 1);
+            for (r, &gi) in ws.iter().enumerate() {
+                for (c, &gj) in active.iter().enumerate() {
+                    let expect = k.eval(sp.row(gi), sp.row(gj));
+                    let got = base[r * na + c];
+                    assert!((got - expect).abs() < 1e-10, "{k:?} r={r} c={c}");
+                }
+            }
+            for threads in 2..=4 {
+                let mut tile = vec![0.0f64; ws.len() * na];
+                k.gram_tile_csr(&wcsr, &wn, &pn, &bt, &mut tile, threads);
                 for (u, v) in base.iter().zip(&tile) {
                     assert_eq!(u.to_bits(), v.to_bits(), "{k:?} threads={threads}");
                 }

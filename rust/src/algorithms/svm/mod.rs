@@ -62,6 +62,18 @@
 //! accumulation, the merged result is bit-identical at any worker
 //! count.
 //!
+//! ## Sparse inputs
+//!
+//! Training and inference also accept `&CsrMatrix<f64>`
+//! ([`crate::tables::TableRef`]): the shrinking engine packs the
+//! active panel as a densified-transposed buffer instead of GEMM
+//! micro-panels and computes gram blocks with
+//! [`kernel::SvmKernel::gram_tile_csr`] (threaded CSR multiply + the
+//! same fused RBF transform); everything else — shrink schedule, tile
+//! cache, WSS — is layout-blind. The Thunder working-set quickselect
+//! ranks under the IEEE `total_cmp` total order, so NaN gradients
+//! degrade deterministically instead of panicking.
+//!
 //! [`SvmParams::shrink_period`]: solver::SvmParams::shrink_period
 
 pub mod kernel;

@@ -17,9 +17,11 @@ use super::kernel::{SvmKernel, TileCache};
 use super::simd::{self, WssExtrema};
 use super::wss::{self, LOW, SIGN_ANY, SIGN_NEG, SIGN_POS, UP};
 use crate::blas::{dot, pack_b_panels, PackedB, Transpose};
-use crate::coordinator::{Backend, Context};
+use crate::coordinator::{batch, Backend, Context};
 use crate::error::{Error, Result};
-use crate::tables::DenseTable;
+use crate::primitives::distances;
+use crate::sparse::{csrmm_threads, CsrMatrix, SparseOp};
+use crate::tables::{DenseTable, TableRef};
 use std::sync::Arc;
 
 /// Training method (oneDAL `svm::training::Method`).
@@ -167,17 +169,108 @@ impl SolverState {
     }
 }
 
+/// The training data in whichever layout it arrived — the engine is
+/// layout-polymorphic through this handle: panel packing, gram blocks
+/// and row-norm reductions each have a dense and a CSR implementation,
+/// and everything else in the solver (WSS scans, gradient updates,
+/// shrinking schedule) never touches the raw rows.
+#[derive(Clone, Copy)]
+enum TrainData<'a> {
+    Dense(&'a DenseTable<f64>),
+    Csr(&'a CsrMatrix<f64>),
+}
+
+/// The active-row panel the gram tiles multiply against, in the layout
+/// matching the training data: prepacked `op(B)` micro-panels for dense
+/// rows, the densified-transposed `d × na` buffer (the dense operand of
+/// the threaded CSR multiply) for sparse rows. Either way it is packed
+/// once per shrink generation and reused by every tile.
+enum ActivePanel {
+    Packed(PackedB<f64>),
+    Densified(Vec<f64>),
+}
+
+impl<'a> TrainData<'a> {
+    fn rows(&self) -> usize {
+        match self {
+            TrainData::Dense(x) => x.rows(),
+            TrainData::Csr(s) => s.rows(),
+        }
+    }
+
+    /// Squared row norms (single pass; the CSR side sweeps only the
+    /// stored values).
+    fn row_norms(&self) -> Vec<f64> {
+        match self {
+            TrainData::Dense(x) => (0..x.rows()).map(|i| dot(x.row(i), x.row(i))).collect(),
+            TrainData::Csr(s) => distances::csr_row_norms(s, 1),
+        }
+    }
+
+    /// Pack rows `idx` as the gram panel in the native layout.
+    fn pack_panel(&self, idx: &[usize]) -> ActivePanel {
+        match self {
+            TrainData::Dense(x) => ActivePanel::Packed(pack_active_panel(x, idx)),
+            TrainData::Csr(s) => {
+                let na = idx.len();
+                let mut bt = vec![0.0f64; s.cols() * na];
+                for (r, &g) in idx.iter().enumerate() {
+                    for (j, v) in s.row_entries(g) {
+                        bt[j * na + r] = v;
+                    }
+                }
+                ActivePanel::Densified(bt)
+            }
+        }
+    }
+
+    /// One blocked gram tile `K(rows × panel)`: gather the working rows
+    /// in the native layout and run the kernel's blocked multiply +
+    /// epilogue ([`SvmKernel::gram_tile`] / [`SvmKernel::gram_tile_csr`]).
+    #[allow(clippy::too_many_arguments)]
+    fn gram_block(
+        &self,
+        kernel: &SvmKernel,
+        rows: &[usize],
+        norms: &[f64],
+        panel_norms: &[f64],
+        panel: &ActivePanel,
+        out: &mut [f64],
+        threads: usize,
+    ) {
+        match (self, panel) {
+            (TrainData::Dense(x), ActivePanel::Packed(pb)) => {
+                let d = x.cols();
+                let mut w = vec![0.0f64; rows.len() * d];
+                let mut wn = vec![0.0f64; rows.len()];
+                for (r, &g) in rows.iter().enumerate() {
+                    w[r * d..(r + 1) * d].copy_from_slice(x.row(g));
+                    wn[r] = norms[g];
+                }
+                kernel.gram_tile(&w, &wn, panel_norms, pb, out, threads);
+            }
+            (TrainData::Csr(s), ActivePanel::Densified(bt)) => {
+                let wcsr = s.gather_rows(rows);
+                let wn: Vec<f64> = rows.iter().map(|&g| norms[g]).collect();
+                kernel.gram_tile_csr(&wcsr, &wn, panel_norms, bt, out, threads);
+            }
+            _ => unreachable!("panel layout always matches the data layout"),
+        }
+    }
+}
+
 /// The compacted active set: every per-iteration array the WSS scans
 /// and gradient updates touch, gathered down to the surviving indices,
 /// plus the packed active-row panel the gram tiles multiply against
 /// (re-packed once per shrink generation, reused across every tile; the
 /// un-packed gather is a transient — active rows stay reachable through
-/// `x` and `idx`, so only the panel layout is kept resident).
+/// the training data and `idx`, so only the panel layout is kept
+/// resident).
 struct ActiveSet {
     /// Surviving global indices, ascending.
     idx: Vec<usize>,
-    /// Pre-packed `op(B) = active-rowsᵀ` panels for the tile GEMM.
-    pb: PackedB<f64>,
+    /// The active-row gram panel in the data's native layout.
+    panel: ActivePanel,
     norms: Vec<f64>,
     diag: Vec<f64>,
     /// Signed gradient, compacted — the source of truth while a point
@@ -199,17 +292,12 @@ fn pack_active_panel(x: &DenseTable<f64>, idx: &[usize]) -> PackedB<f64> {
 }
 
 impl ActiveSet {
-    fn full(
-        x: &DenseTable<f64>,
-        norms: &[f64],
-        diag: &[f64],
-        grad: Vec<f64>,
-        flags: &[u8],
-    ) -> Self {
-        let n = x.rows();
+    fn full(data: TrainData, norms: &[f64], diag: &[f64], grad: Vec<f64>, flags: &[u8]) -> Self {
+        let n = data.rows();
         let idx: Vec<usize> = (0..n).collect();
-        let pb = pack_active_panel(x, &idx);
-        Self { idx, pb, norms: norms.to_vec(), diag: diag.to_vec(), grad, flags: flags.to_vec() }
+        let panel = data.pack_panel(&idx);
+        let (norms, diag, flags) = (norms.to_vec(), diag.to_vec(), flags.to_vec());
+        Self { idx, panel, norms, diag, grad, flags }
     }
 
     fn len(&self) -> usize {
@@ -218,21 +306,22 @@ impl ActiveSet {
 
     /// Keep only the local positions in `keep` (ascending) and re-pack
     /// the tile panel.
-    fn retain(&mut self, keep: &[usize], x: &DenseTable<f64>) {
+    fn retain(&mut self, keep: &[usize], data: TrainData) {
         let gather = |src: &[f64]| keep.iter().map(|&l| src[l]).collect::<Vec<f64>>();
         self.idx = keep.iter().map(|&l| self.idx[l]).collect();
         self.norms = gather(&self.norms);
         self.diag = gather(&self.diag);
         self.grad = gather(&self.grad);
         self.flags = keep.iter().map(|&l| self.flags[l]).collect();
-        self.pb = pack_active_panel(x, &self.idx);
+        self.panel = data.pack_panel(&self.idx);
     }
 }
 
-/// The shrinking training engine both methods run on.
+/// The shrinking training engine both methods run on (either data
+/// layout, through [`TrainData`]).
 struct Engine<'a> {
     params: &'a SvmParams,
-    x: &'a DenseTable<f64>,
+    data: TrainData<'a>,
     norms: &'a [f64],
     diag: &'a [f64],
     state: SolverState,
@@ -249,17 +338,17 @@ struct Engine<'a> {
 impl<'a> Engine<'a> {
     fn new(
         params: &'a SvmParams,
-        x: &'a DenseTable<f64>,
+        data: TrainData<'a>,
         norms: &'a [f64],
         diag: &'a [f64],
         y: Vec<f64>,
         vectorized: bool,
         threads: usize,
     ) -> Self {
-        let n = x.rows();
+        let n = data.rows();
         let state = SolverState::new(y, params.c);
         let grad0: Vec<f64> = state.y.iter().map(|&yi| -yi).collect();
-        let active = ActiveSet::full(x, norms, diag, grad0, &state.flags);
+        let active = ActiveSet::full(data, norms, diag, grad0, &state.flags);
         let tiles = TileCache::new(params.tile_capacity(n), n);
         let shrink_period = if params.shrink_period > 0 {
             params.shrink_period
@@ -268,7 +357,7 @@ impl<'a> Engine<'a> {
         };
         Self {
             params,
-            x,
+            data,
             norms,
             diag,
             state,
@@ -288,20 +377,13 @@ impl<'a> Engine<'a> {
     /// tile through the packed panel.
     fn fetch_rows(&mut self, locals: &[usize]) -> Vec<Arc<Vec<f64>>> {
         let globals: Vec<usize> = locals.iter().map(|&l| self.active.idx[l]).collect();
-        let (x, norms, threads) = (self.x, self.norms, self.threads);
+        let (data, norms, threads) = (self.data, self.norms, self.threads);
         let kernel = &self.params.kernel;
         let active = &self.active;
         let stats = &mut self.stats;
         let na = active.idx.len();
-        let d = x.cols();
         self.tiles.fetch_block(&globals, |miss, tile| {
-            let mut w = vec![0.0f64; miss.len() * d];
-            let mut wn = vec![0.0f64; miss.len()];
-            for (r, &g) in miss.iter().enumerate() {
-                w[r * d..(r + 1) * d].copy_from_slice(x.row(g));
-                wn[r] = norms[g];
-            }
-            kernel.gram_tile(&w, &wn, &active.norms, &active.pb, tile, threads);
+            data.gram_block(kernel, miss, norms, &active.norms, &active.panel, tile, threads);
             stats.tile_rows += miss.len() as u64;
             stats.kernel_entries += (miss.len() * na) as u64;
         })
@@ -338,7 +420,7 @@ impl<'a> Engine<'a> {
         if keep.len() < 2 || keep.len() == na {
             return;
         }
-        self.active.retain(&keep, self.x);
+        self.active.retain(&keep, self.data);
         self.tiles.compact(&keep);
         self.tiles.purge_missing(&self.active.idx);
         self.tiles.set_capacity(self.params.tile_capacity(keep.len()));
@@ -353,7 +435,7 @@ impl<'a> Engine<'a> {
     /// `unshrink_events`) from the bias-only reconstruction after a
     /// max-iter/stuck stop, so the counter certifies genuine rechecks.
     fn unshrink(&mut self, count_event: bool) {
-        let n = self.x.rows();
+        let n = self.data.rows();
         if self.active.len() == n {
             return;
         }
@@ -381,22 +463,18 @@ impl<'a> Engine<'a> {
                 grad_full[t] = -self.state.y[t];
             }
         } else {
-            let d = self.x.cols();
-            let mut p = vec![0.0f64; sv.len() * d];
-            let mut pn = vec![0.0f64; sv.len()];
-            for (r, &s) in sv.iter().enumerate() {
-                p[r * d..(r + 1) * d].copy_from_slice(self.x.row(s));
-                pn[r] = self.norms[s];
-            }
-            let pb = pack_b_panels(Transpose::Yes, d, sv.len(), &p);
-            let mut w = vec![0.0f64; inactive.len() * d];
-            let mut wn = vec![0.0f64; inactive.len()];
-            for (r, &t) in inactive.iter().enumerate() {
-                w[r * d..(r + 1) * d].copy_from_slice(self.x.row(t));
-                wn[r] = self.norms[t];
-            }
+            let pn: Vec<f64> = sv.iter().map(|&s| self.norms[s]).collect();
+            let panel = self.data.pack_panel(&sv);
             let mut tile = vec![0.0f64; inactive.len() * sv.len()];
-            self.params.kernel.gram_tile(&w, &wn, &pn, &pb, &mut tile, self.threads);
+            self.data.gram_block(
+                &self.params.kernel,
+                &inactive,
+                self.norms,
+                &pn,
+                &panel,
+                &mut tile,
+                self.threads,
+            );
             self.stats.tile_rows += inactive.len() as u64;
             self.stats.kernel_entries += (inactive.len() * sv.len()) as u64;
             let coef: Vec<f64> =
@@ -406,7 +484,8 @@ impl<'a> Engine<'a> {
                 grad_full[t] = dot(row, &coef) - self.state.y[t];
             }
         }
-        self.active = ActiveSet::full(self.x, self.norms, self.diag, grad_full, &self.state.flags);
+        self.active =
+            ActiveSet::full(self.data, self.norms, self.diag, grad_full, &self.state.flags);
         self.tiles.reset(n);
         self.tiles.set_capacity(self.params.tile_capacity(n));
         self.since_shrink = 0;
@@ -418,7 +497,7 @@ impl<'a> Engine<'a> {
     /// optimality *over the active subset*, so reconstruct, reactivate
     /// and keep training (return `false`).
     fn converged_or_unshrink(&mut self) -> bool {
-        if self.active.len() == self.x.rows() {
+        if self.active.len() == self.data.rows() {
             return true;
         }
         self.unshrink(true);
@@ -600,7 +679,7 @@ impl<'a> Engine<'a> {
         // Bias needs the full gradient: reconstruct if the solver
         // stopped (max_iter / stuck) while shrunk. Not counted as an
         // unshrink *event* — it is not a convergence recheck.
-        if self.active.len() < self.x.rows() {
+        if self.active.len() < self.data.rows() {
             self.unshrink(false);
         }
     }
@@ -620,13 +699,16 @@ impl<'a> Engine<'a> {
 /// the block-set equality the oracle test below asserts.
 fn select_working_set(grad: &[f64], flags: &[u8], q: usize) -> Vec<usize> {
     let na = grad.len();
+    // `total_cmp` keys: a NaN gradient (NaN feature values reaching the
+    // kernel) sorts deterministically last/first instead of panicking
+    // the quickselect mid-train.
     let mut ups: Vec<usize> = (0..na).filter(|&l| flags[l] & UP != 0).collect();
     wss::partial_select_by(&mut ups, q.min(ups.len()), |a, b| {
-        grad[a].partial_cmp(&grad[b]).unwrap().then(a.cmp(&b))
+        grad[a].total_cmp(&grad[b]).then(a.cmp(&b))
     });
     let mut lows: Vec<usize> = (0..na).filter(|&l| flags[l] & LOW != 0).collect();
     wss::partial_select_by(&mut lows, q.min(lows.len()), |a, b| {
-        grad[b].partial_cmp(&grad[a]).unwrap().then(a.cmp(&b))
+        grad[b].total_cmp(&grad[a]).then(a.cmp(&b))
     });
     let mut ws: Vec<usize> = Vec::with_capacity(q);
     let (mut iu, mut il) = (0usize, 0usize);
@@ -721,8 +803,24 @@ impl SvmParams {
         by_bytes.max(self.cache_rows).max(2 * self.ws_size.min(width.max(2)))
     }
 
-    pub fn train(&self, ctx: &Context, x: &DenseTable<f64>, y01: &[f64]) -> Result<SvcModel> {
-        let n = x.rows();
+    pub fn train<'a>(
+        &self,
+        ctx: &Context,
+        x: impl Into<TableRef<'a>>,
+        y01: &[f64],
+    ) -> Result<SvcModel> {
+        let table = x.into();
+        // Densified naive rung — the same contract as every other CSR
+        // consumer: under `Backend::Naive` a CSR input densifies and
+        // trains the dense path, which is the sparse path's oracle.
+        if let (TableRef::Csr(s), Backend::Naive) = (table, ctx.backend()) {
+            return self.train(ctx, &s.to_dense(), y01);
+        }
+        let data = match table {
+            TableRef::Dense(d) => TrainData::Dense(d),
+            TableRef::Csr(s) => TrainData::Csr(s),
+        };
+        let n = data.rows();
         if n != y01.len() {
             return Err(Error::Shape("svm: label count mismatch".into()));
         }
@@ -735,19 +833,23 @@ impl SvmParams {
         }
         // The WSS implementation is the ladder's branch point (Fig. 4).
         let vectorized = !matches!(ctx.backend(), Backend::Naive | Backend::Reference);
-        let norms: Vec<f64> = (0..n).map(|i| dot(x.row(i), x.row(i))).collect();
-        let diag = self.kernel.diag(x, &norms);
+        let norms = data.row_norms();
+        let diag = self.kernel.diag_from_norms(&norms);
         let threads = ctx.threads();
-        let mut engine = Engine::new(self, x, &norms, &diag, y, vectorized, threads);
+        let mut engine = Engine::new(self, data, &norms, &diag, y, vectorized, threads);
         engine.solve();
         // Bias: midpoint of the optimality interval, over the full
         // (post-reconstruction) gradient.
         let ex = simd::extrema_range(&engine.active.grad, &engine.active.flags, 0, n);
         let bias = -(ex.gmin + ex.gmax2) / 2.0;
-        // Extract support vectors.
+        // Extract support vectors (densified for CSR training data —
+        // the support set is small and inference consumes dense rows).
         let state = &engine.state;
         let sv_idx: Vec<usize> = (0..n).filter(|&t| state.alpha[t] > 1e-12).collect();
-        let support_vectors = x.gather_rows(&sv_idx);
+        let support_vectors = match table {
+            TableRef::Dense(d) => d.gather_rows(&sv_idx),
+            TableRef::Csr(s) => s.gather_rows_dense(&sv_idx),
+        };
         let dual_coef: Vec<f64> = sv_idx.iter().map(|&t| state.alpha[t] * state.y[t]).collect();
         Ok(SvcModel {
             support_vectors,
@@ -762,14 +864,27 @@ impl SvmParams {
 }
 
 impl SvcModel {
-    /// Decision values `f(x) = Σ (α·y)ₛ K(x, sᵥ) + b`. Query rows are
-    /// independent, so they fan out over the context's worker count
-    /// (each row is scored whole by one worker — bit-stable at any
-    /// count).
-    pub fn decision_function(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<f64>> {
+    /// Decision values `f(x) = Σ (α·y)ₛ K(x, sᵥ) + b`, for either query
+    /// layout.
+    pub fn decision_function<'a>(
+        &self,
+        ctx: &Context,
+        x: impl Into<TableRef<'a>>,
+    ) -> Result<Vec<f64>> {
+        let x = x.into();
         if x.cols() != self.support_vectors.cols() {
             return Err(Error::Shape("svm: dim mismatch".into()));
         }
+        match x {
+            TableRef::Dense(d) => Ok(self.decision_dense(ctx, d)),
+            TableRef::Csr(s) => self.decision_csr(ctx, s),
+        }
+    }
+
+    /// Dense queries: query rows are independent, so they fan out over
+    /// the context's worker count (each row is scored whole by one
+    /// worker — bit-stable at any count).
+    fn decision_dense(&self, ctx: &Context, x: &DenseTable<f64>) -> Vec<f64> {
         let n = x.rows();
         let work = n
             .saturating_mul(self.dual_coef.len())
@@ -785,11 +900,64 @@ impl SvcModel {
                 }
             }
         });
+        out
+    }
+
+    /// CSR queries: kernel blocks `K(Q_tile × SV)` against the
+    /// densified-transposed support panel — one threaded CSR multiply
+    /// per tile for linear, the shared [`distances::rbf_gram_csr`]
+    /// (csrmm + the fused `exp(−γ·d²)` transform) for RBF — then one
+    /// dual-coef dot per row. Query rows stream in fixed 256-row tiles
+    /// so the kernel-block scratch stays `O(TILE·nsv)` whatever the
+    /// query count (the dense path streams per row the same way). Tile
+    /// boundaries are input-keyed and every stage is bit-identical at
+    /// any worker count, so scores are bit-stable across
+    /// `Context::threads()` settings.
+    fn decision_csr(&self, ctx: &Context, q: &CsrMatrix<f64>) -> Result<Vec<f64>> {
+        let m = q.rows();
+        let nsv = self.dual_coef.len();
+        let mut out = vec![self.bias; m];
+        if nsv == 0 || m == 0 {
+            return Ok(out);
+        }
+        let t = ctx.threads();
+        let svt = self.support_vectors.transposed();
+        let (qn, sv_norms) = match self.kernel {
+            SvmKernel::Linear => (Vec::new(), Vec::new()),
+            SvmKernel::Rbf { .. } => {
+                let sv_norms: Vec<f64> = (0..nsv)
+                    .map(|s| {
+                        let r = self.support_vectors.row(s);
+                        dot(r, r)
+                    })
+                    .collect();
+                (distances::csr_row_norms(q, t), sv_norms)
+            }
+        };
+        const TILE: usize = 256;
+        let mut cross = vec![0.0f64; TILE.min(m) * nsv];
+        for (start, len) in batch::tiles(m, TILE) {
+            let tile = q.slice_rows(start, start + len)?;
+            let ctile = &mut cross[..len * nsv];
+            match self.kernel {
+                SvmKernel::Linear => {
+                    let b = svt.data();
+                    csrmm_threads(SparseOp::NoTranspose, 1.0, &tile, b, nsv, 0.0, ctile, t)?;
+                }
+                SvmKernel::Rbf { gamma } => {
+                    let wn = &qn[start..start + len];
+                    distances::rbf_gram_csr(&tile, wn, &sv_norms, svt.data(), gamma, ctile, t);
+                }
+            }
+            for (i, f) in out[start..start + len].iter_mut().enumerate() {
+                *f += dot(&ctile[i * nsv..(i + 1) * nsv], &self.dual_coef);
+            }
+        }
         Ok(out)
     }
 
     /// 0/1 class prediction.
-    pub fn infer(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<f64>> {
+    pub fn infer<'a>(&self, ctx: &Context, x: impl Into<TableRef<'a>>) -> Result<Vec<f64>> {
         Ok(self
             .decision_function(ctx, x)?
             .into_iter()
@@ -994,6 +1162,61 @@ mod tests {
         }
     }
 
+    /// CSR training lights up both kernels through the sparse gram
+    /// path (linear = threaded CSR multiply, RBF = fused `exp(−γ·d²)`
+    /// over the sparse cross term), landing on the densified run's
+    /// decision function; sparse training and inference are
+    /// bit-identical across worker counts.
+    #[test]
+    fn csr_training_matches_densified_and_threads() {
+        use crate::sparse::{CsrMatrix, IndexBase};
+        let (mut xd, y) = task(11, 220, 5, 1.5);
+        for (i, v) in xd.data_mut().iter_mut().enumerate() {
+            if i % 2 == 1 {
+                *v = 0.0;
+            }
+        }
+        let xs = CsrMatrix::from_dense(&xd, 0.0, IndexBase::One);
+        let c = ctx(Backend::Vectorized);
+        let mk = |t: usize| {
+            Context::builder()
+                .artifact_dir("/nonexistent")
+                .backend(Backend::Vectorized)
+                .threads(t)
+                .build()
+                .unwrap()
+        };
+        for kernel in [SvmKernel::Linear, SvmKernel::Rbf { gamma: 0.4 }] {
+            let params = Svc::params().kernel(kernel).eps(1e-7).solver(SvmSolver::Thunder);
+            let ms = params.train(&c, &xs, &y).unwrap();
+            let md = params.train(&c, &xd, &y).unwrap();
+            assert_same_decision(&ms, &md, 5e-6, &format!("csr {kernel:?}"));
+            // Sparse scoring ≈ dense scoring of the same model.
+            let fs = ms.decision_function(&c, &xs).unwrap();
+            let fd = ms.decision_function(&c, &xd).unwrap();
+            for (a, b) in fs.iter().zip(&fd) {
+                assert!((a - b).abs() < 1e-8, "{kernel:?}: {a} vs {b}");
+            }
+            let acc = crate::metrics::accuracy(&ms.infer(&c, &xs).unwrap(), &y);
+            assert!(acc > 0.9, "{kernel:?} acc={acc}");
+            // 1–4-worker bit-identity of sparse training + scoring.
+            let m1 = params.train(&mk(1), &xs, &y).unwrap();
+            let f1 = m1.decision_function(&mk(1), &xs).unwrap();
+            for threads in 2..=4 {
+                let m = params.train(&mk(threads), &xs, &y).unwrap();
+                assert_eq!(m1.support_idx, m.support_idx, "{kernel:?} threads={threads}");
+                for (a, b) in m1.dual_coef.iter().zip(&m.dual_coef) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{kernel:?} threads={threads}");
+                }
+                assert_eq!(m1.bias.to_bits(), m.bias.to_bits(), "{kernel:?} threads={threads}");
+                let f = m.decision_function(&mk(threads), &xs).unwrap();
+                for (a, b) in f1.iter().zip(&f) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{kernel:?} threads={threads}");
+                }
+            }
+        }
+    }
+
     /// Regression for the unshrink-recheck pass: with a maximally
     /// aggressive schedule (shrink every iteration) the active set
     /// collapses early and the solver *would* declare convergence on
@@ -1029,9 +1252,9 @@ mod tests {
         let sort_oracle = |grad: &[f64], flags: &[u8], q: usize| -> Vec<usize> {
             let na = grad.len();
             let mut ups: Vec<usize> = (0..na).filter(|&l| flags[l] & UP != 0).collect();
-            ups.sort_by(|&a, &b| grad[a].partial_cmp(&grad[b]).unwrap());
+            ups.sort_by(|&a, &b| grad[a].total_cmp(&grad[b]));
             let mut lows: Vec<usize> = (0..na).filter(|&l| flags[l] & LOW != 0).collect();
-            lows.sort_by(|&a, &b| grad[b].partial_cmp(&grad[a]).unwrap());
+            lows.sort_by(|&a, &b| grad[b].total_cmp(&grad[a]));
             let mut ws: Vec<usize> = Vec::with_capacity(q);
             let (mut iu, mut il) = (0usize, 0usize);
             while ws.len() < q && (iu < ups.len() || il < lows.len()) {

@@ -389,8 +389,7 @@ mod tests {
             // Quantize to force many equal keys → index tie-breaks.
             let keys: Vec<f64> =
                 (0..n).map(|_| (g.sample(&mut meta) * 3.0).round() / 3.0).collect();
-            let cmp =
-                |a: usize, b: usize| keys[a].partial_cmp(&keys[b]).unwrap().then(a.cmp(&b));
+            let cmp = |a: usize, b: usize| keys[a].total_cmp(&keys[b]).then(a.cmp(&b));
             let mut sorted: Vec<usize> = (0..n).collect();
             sorted.sort_by(|&a, &b| cmp(a, b));
             for h in [0usize, 1, 2, n / 3, n / 2, n.saturating_sub(1), n, n + 5] {
@@ -406,7 +405,7 @@ mod tests {
     #[test]
     fn partial_select_descending_with_ties() {
         let keys = [1.0f64, 3.0, 3.0, 0.5, 3.0, 2.0];
-        let cmp = |a: usize, b: usize| keys[b].partial_cmp(&keys[a]).unwrap().then(a.cmp(&b));
+        let cmp = |a: usize, b: usize| keys[b].total_cmp(&keys[a]).then(a.cmp(&b));
         let mut items: Vec<usize> = (0..keys.len()).collect();
         partial_select_by(&mut items, 4, cmp);
         // Largest first; equal keys in ascending index order.

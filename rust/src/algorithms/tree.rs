@@ -108,7 +108,11 @@ impl DecisionTree {
         for &f in &feats {
             col.clear();
             col.extend(idx.iter().map(|&i| (x.get(i, f), y[i] as usize)));
-            col.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // `total_cmp`: NaN feature values sort deterministically
+            // last (never a split gain — `next_v <= v` rejects them),
+            // so a poisoned column degrades to "no split on it"
+            // instead of panicking the candidate sort.
+            col.sort_by(|a, b| a.0.total_cmp(&b.0));
             let mut left = vec![0.0f64; params.n_classes];
             let mut right = parent_counts.clone();
             for w in 0..n - 1 {
@@ -116,8 +120,12 @@ impl DecisionTree {
                 left[c] += 1.0;
                 right[c] -= 1.0;
                 let next_v = col[w + 1].0;
-                if next_v <= v {
-                    continue; // cannot split between equal values
+                if next_v <= v || v.is_nan() || next_v.is_nan() {
+                    // Cannot split between equal values — nor against a
+                    // NaN on either side (totalOrder parks -NaN at the
+                    // *front* and +NaN at the back; a NaN midpoint
+                    // would make a meaningless threshold).
+                    continue;
                 }
                 let nl = (w + 1) as f64;
                 let nr = (n - w - 1) as f64;
@@ -241,6 +249,48 @@ mod tests {
         let t = DecisionTree::fit(&TreeParams::default(), &x, &y, &idx, &mut e).unwrap();
         assert_eq!(t.node_count(), 1);
         assert_eq!(t.predict_proba_row(&[2.0])[1], 1.0);
+    }
+
+    /// A NaN feature value must not panic the split-candidate sort
+    /// (regression: the old `partial_cmp(..).unwrap()` aborted). The
+    /// poisoned column sorts NaNs last under `total_cmp`, NaN-boundary
+    /// splits are rejected, and the clean columns still classify.
+    #[test]
+    fn nan_feature_degrades_without_panic() {
+        let mut e = Mt19937::new(9);
+        let (mut x, y) = make_classification(&mut e, 120, 4, 2.0);
+        for i in (0..120).step_by(7) {
+            x.row_mut(i)[2] = f64::NAN;
+        }
+        let idx: Vec<usize> = (0..120).collect();
+        let t = DecisionTree::fit(&TreeParams::default(), &x, &y, &idx, &mut e).unwrap();
+        // Deterministic: refitting gives the same tree shape.
+        let mut e2 = Mt19937::new(9);
+        let (mut x2, _) = make_classification(&mut e2, 120, 4, 2.0);
+        for i in (0..120).step_by(7) {
+            x2.row_mut(i)[2] = f64::NAN;
+        }
+        let t2 = DecisionTree::fit(&TreeParams::default(), &x2, &y, &idx, &mut e2).unwrap();
+        assert_eq!(t.node_count(), t2.node_count());
+        // Clean rows on separable data still classify well.
+        let mut correct = 0usize;
+        let mut clean = 0usize;
+        for i in 0..120 {
+            if x.row(i).iter().all(|v| v.is_finite()) {
+                clean += 1;
+                let proba = t.predict_proba_row(x.row(i));
+                if f64::from(proba[1] >= 0.5) == y[i] {
+                    correct += 1;
+                }
+            }
+        }
+        assert!(correct as f64 / clean as f64 > 0.9, "{correct}/{clean}");
+        // All-NaN column: fitting must still terminate without panic.
+        let mut xa = x.clone();
+        for i in 0..120 {
+            xa.row_mut(i)[0] = f64::NAN;
+        }
+        DecisionTree::fit(&TreeParams::default(), &xa, &y, &idx, &mut e).unwrap();
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub trait Float:
     fn from_f64(v: f64) -> Self;
     fn from_usize(v: usize) -> Self;
     fn to_f64(self) -> f64;
+    /// IEEE-754 `totalOrder` comparison (`-NaN < -∞ < … < +∞ < +NaN`).
+    /// Library comparators sort with this instead of
+    /// `partial_cmp(..).unwrap()` so a NaN feature value degrades to a
+    /// deterministic ordering instead of panicking mid-train.
+    fn total_cmp(self, o: Self) -> std::cmp::Ordering;
     fn abs(self) -> Self;
     fn sqrt(self) -> Self;
     fn exp(self) -> Self;
@@ -70,6 +75,10 @@ macro_rules! impl_float {
             #[inline(always)]
             fn to_f64(self) -> f64 {
                 self as f64
+            }
+            #[inline(always)]
+            fn total_cmp(self, o: Self) -> std::cmp::Ordering {
+                <$t>::total_cmp(&self, &o)
             }
             #[inline(always)]
             fn abs(self) -> Self {
@@ -142,6 +151,19 @@ mod tests {
         assert_eq!(f32::ZERO + f32::ONE, 1.0f32);
         assert_eq!(f64::TWO, 2.0);
         assert!(f64::TAU > 0.0 && f64::TAU < 1e-3);
+    }
+
+    #[test]
+    fn total_cmp_orders_nan_last() {
+        use std::cmp::Ordering;
+        assert_eq!(Float::total_cmp(1.0f64, f64::NAN), Ordering::Less);
+        assert_eq!(Float::total_cmp(f64::NAN, f64::INFINITY), Ordering::Greater);
+        assert_eq!(Float::total_cmp(2.0f32, 3.0f32), Ordering::Less);
+        // Never panics — the property the library comparators rely on.
+        let mut v = vec![f64::NAN, 1.0, f64::NEG_INFINITY, f64::NAN, 0.0];
+        v.sort_by(|a, b| Float::total_cmp(*a, *b));
+        assert_eq!(v[0], f64::NEG_INFINITY);
+        assert!(v[3].is_nan() && v[4].is_nan());
     }
 
     #[test]

@@ -28,7 +28,12 @@
 //!   DBSCAN, the SVM RBF gram) all share the fused pairwise
 //!   squared-distance engine in [`primitives::distances`]: corpus
 //!   packed once per call, pooled norm reduction, query tiles streamed
-//!   through the pool with fused predicated epilogues.
+//!   through the pool with fused predicated epilogues. Algorithm entry
+//!   points ingest either table layout through
+//!   [`tables::TableRef`] — CSR inputs run the engine's sparse query
+//!   path and the threaded CSR kernels end to end (§IV-B), and every
+//!   library comparator sorts under the IEEE `total_cmp` total order
+//!   so NaN features degrade deterministically instead of panicking.
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
 //!   hot paths, AOT-lowered once to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing
@@ -82,5 +87,6 @@ pub mod prelude {
     pub use crate::coordinator::{Backend, Context};
     pub use crate::error::{Error, Result};
     pub use crate::rng::{Engine, Mcg59, Mt19937};
-    pub use crate::tables::DenseTable;
+    pub use crate::sparse::CsrMatrix;
+    pub use crate::tables::{DenseTable, Table, TableRef};
 }

@@ -69,9 +69,13 @@ pub fn jacobi_eigen<T: Float>(a_in: &[T], n: usize) -> Result<(Vec<T>, Vec<T>)> 
             }
         }
     }
-    // Extract eigenpairs and sort descending.
+    // Extract eigenpairs and sort descending. `total_cmp` keeps the
+    // ordering total when the input carried NaNs — the eigensolve
+    // degrades to deterministically-placed NaN eigenpairs instead of
+    // panicking in the sort (the sweep loop itself is bounded by
+    // `max_sweeps`, so NaN never spins it).
     let mut pairs: Vec<(T, usize)> = (0..n).map(|i| (a[i * n + i], i)).collect();
-    pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    pairs.sort_by(|x, y| y.0.total_cmp(x.0));
     let eigenvalues: Vec<T> = pairs.iter().map(|&(val, _)| val).collect();
     let mut eigenvectors = vec![T::ZERO; n * n];
     for (row, &(_, col)) in pairs.iter().enumerate() {
@@ -147,6 +151,23 @@ mod tests {
                 let expect = if i == j { 1.0 } else { 0.0 };
                 assert!((gram[i * n + j] - expect).abs() < 1e-9);
             }
+        }
+    }
+
+    /// NaN entries must not panic the eigen-sort (regression: it used
+    /// `partial_cmp(..).unwrap()`) nor spin the bounded sweep loop.
+    #[test]
+    fn nan_matrix_terminates_without_panic() {
+        let mut a = random_symmetric(7, 5);
+        a[7] = f64::NAN; // (1, 2)
+        a[11] = f64::NAN; // (2, 1)
+        let (vals, vecs) = jacobi_eigen(&a, 5).unwrap();
+        assert_eq!(vals.len(), 5);
+        assert_eq!(vecs.len(), 25);
+        // Deterministic degradation: same bits on a second run.
+        let (vals2, _) = jacobi_eigen(&a, 5).unwrap();
+        for (u, v) in vals.iter().zip(&vals2) {
+            assert_eq!(u.to_bits(), v.to_bits());
         }
     }
 

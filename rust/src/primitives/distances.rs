@@ -44,11 +44,33 @@
 //! order. Every entry point is therefore **bit-identical at any worker
 //! count**, which `tests/distances_property.rs` enforces for all four
 //! epilogues.
+//!
+//! ## Sparse query path
+//!
+//! Every epilogue also has a CSR entry point (`*_csr`): the query side
+//! is a [`CsrMatrix`], per-row `‖x‖²` comes from **one** pooled sweep of
+//! the stored values ([`csr_row_norms`]), and the cross-term `X·Cᵀ` is
+//! computed per query tile by a zero-copy row-window form of the
+//! [`crate::sparse::csrmm`] inner loop (one worker per tile — the
+//! fan-out happens at the tile level, exactly like the dense
+//! sweep) against a corpus that is packed once per call into
+//! [`CsrCorpus`]: the densified-*transposed* `d × n` buffer every tile
+//! multiplies against, plus the corpus norms. The same epilogues then
+//! consume the cache-hot tile, so sparse results obey the same
+//! determinism rules: tile cuts are input-keyed, partials merge in
+//! ascending tile order, and every `*_csr` entry point is
+//! **bit-identical at any worker count**. Against the *densified*
+//! oracle: cross terms accumulate in the same ascending-index order as
+//! the dense microkernel (implicit zeros are exact no-ops), but norms
+//! use a single-accumulator sweep rather than the 4-way unrolled dense
+//! [`dot`], so distances agree to rounding — discrete outputs match the
+//! oracle exactly away from exact decision boundaries.
 
 use crate::blas::level3::MR;
 use crate::blas::{dot, gemm_prepacked_threads, pack_b_panels, PackedB, Transpose};
 use crate::coordinator::batch;
 use crate::parallel;
+use crate::sparse::{csrmm_threads, CsrMatrix, SparseOp};
 use crate::tables::DenseTable;
 
 /// Lanes per predicated epilogue block (a 512-bit SVE vector of f64).
@@ -131,6 +153,143 @@ fn corpus_norms(y: &[f64], n: usize, d: usize, threads: usize) -> Vec<f64> {
     norms
 }
 
+/// Per-row `‖x_i‖²` of a CSR matrix from **one** sweep of the stored
+/// values (implicit zeros contribute nothing). Pooled like
+/// [`PackedCorpus`]'s norms: each row is reduced whole by one worker
+/// (single accumulator, ascending stored order) and partials
+/// concatenate in partition order — bit-identical at any worker count.
+pub fn csr_row_norms(x: &CsrMatrix<f64>, threads: usize) -> Vec<f64> {
+    let n = x.rows();
+    let workers = parallel::effective_threads(threads, x.nnz().max(n), NORM_MIN_WORK);
+    let bounds = parallel::even_bounds(n, workers);
+    let partials = parallel::par_map(&bounds, |lo, hi| {
+        (lo..hi)
+            .map(|i| {
+                let mut acc = 0.0f64;
+                for (_, v) in x.row_entries(i) {
+                    acc = v.mul_add(v, acc);
+                }
+                acc
+            })
+            .collect::<Vec<f64>>()
+    });
+    let mut norms = Vec::with_capacity(n);
+    for p in partials {
+        norms.extend_from_slice(&p);
+    }
+    norms
+}
+
+/// The corpus side of a **sparse-query** distance sweep, packed once:
+/// the corpus densified-*transposed* into a `d × n` row-major buffer —
+/// the dense `B` operand every CSR cross-term multiply consumes — plus
+/// the corpus squared row norms.
+pub struct CsrCorpus {
+    /// `d × n` row-major transposed corpus.
+    bt: Vec<f64>,
+    n: usize,
+    d: usize,
+    norms: Vec<f64>,
+}
+
+impl CsrCorpus {
+    /// Pack a dense corpus for sparse queries: one transpose plus the
+    /// pooled [`dot`]-based norm reduction (the same norms the dense
+    /// [`PackedCorpus`] carries).
+    pub fn from_dense(y: &DenseTable<f64>, threads: usize) -> Self {
+        let norms = corpus_norms(y.data(), y.rows(), y.cols(), threads);
+        CsrCorpus { bt: y.transposed().into_vec(), n: y.rows(), d: y.cols(), norms }
+    }
+
+    /// Pack a CSR corpus for sparse queries: one densifying transpose
+    /// scatter plus norms from one sweep of the stored values.
+    pub fn from_csr(y: &CsrMatrix<f64>, threads: usize) -> Self {
+        let norms = csr_row_norms(y, threads);
+        CsrCorpus { bt: y.to_dense_transposed().into_vec(), n: y.rows(), d: y.cols(), norms }
+    }
+
+    /// Corpus row count `n`.
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    /// Feature dimension `d`.
+    pub fn dims(&self) -> usize {
+        self.d
+    }
+
+    /// Squared row norms `‖y_j‖²`, length [`CsrCorpus::rows`].
+    pub fn norms(&self) -> &[f64] {
+        &self.norms
+    }
+
+    /// The densified-transposed `d × n` buffer (for callers issuing
+    /// their own CSR multiplies against the corpus).
+    pub fn bt(&self) -> &[f64] {
+        &self.bt
+    }
+}
+
+/// CSR-style neighbour table:
+/// `indices[offsets[i]..offsets[i + 1]]` is the ascending neighbour
+/// list of query row `i`. One flat allocation replaces the per-row
+/// `Vec<Vec<usize>>` the ε-epilogue used to build — on dense-ε graphs
+/// that was one allocator round-trip per row — and the shape dovetails
+/// with the CSR table layout the sparse ingestion paths consume.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NeighborTable {
+    offsets: Vec<usize>,
+    indices: Vec<usize>,
+}
+
+impl NeighborTable {
+    /// Build from per-row lists (test/oracle convenience).
+    pub fn from_lists(lists: &[Vec<usize>]) -> Self {
+        let mut offsets = Vec::with_capacity(lists.len() + 1);
+        offsets.push(0);
+        let mut indices = Vec::new();
+        for l in lists {
+            indices.extend_from_slice(l);
+            offsets.push(indices.len());
+        }
+        NeighborTable { offsets, indices }
+    }
+
+    /// Number of query rows.
+    pub fn rows(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows() == 0
+    }
+
+    /// Ascending neighbour list of query row `i`.
+    pub fn row(&self, i: usize) -> &[usize] {
+        &self.indices[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Neighbour count of query row `i`.
+    pub fn degree(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// The CSR offsets array (`rows + 1` entries).
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// The flat, tile-ordered index array.
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// Expand back into per-row lists (oracle comparisons).
+    pub fn to_lists(&self) -> Vec<Vec<usize>> {
+        (0..self.rows()).map(|i| self.row(i).to_vec()).collect()
+    }
+}
+
 /// The shared tile sweep: stream query M-tiles through the worker pool,
 /// computing each `len × n` cross-term block with one single-threaded
 /// prepacked GEMM into the worker's private scratch, then hand the
@@ -187,6 +346,79 @@ where
     partials.into_iter().flatten().collect()
 }
 
+/// Row-window CSR cross term: `out[i, :] = X[r0 + i, :] · Bt` for
+/// `i < len`, straight off the query's existing CSR arrays — the
+/// [`crate::sparse::csrmm`] `NoTranspose` inner loop (`β == 0`
+/// overwrite, one `mul_add` per stored entry in ascending order, so
+/// bit-identical to running the threaded kernel on a materialized row
+/// slice) without allocating a sub-matrix per tile.
+fn csr_window_cross(
+    q: &CsrMatrix<f64>,
+    r0: usize,
+    len: usize,
+    bt: &[f64],
+    n: usize,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), len * n);
+    out.fill(0.0);
+    for i in 0..len {
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, av) in q.row_entries(r0 + i) {
+            let brow = &bt[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv = av.mul_add(bv, *cv);
+            }
+        }
+    }
+}
+
+/// [`sweep`]'s sparse-query twin: stream CSR query row tiles through
+/// the worker pool, computing each `len × n` cross-term block with the
+/// row-window CSR multiply (`X_tile · Cᵀ` against the
+/// densified-transposed corpus — [`csr_window_cross`], zero copies)
+/// into the worker's private scratch, then hand the cache-hot block to
+/// `tile_fn(tile_start, len, cross, out_rows)`. Tile cuts land only on
+/// `TILE` boundaries and partials return in ascending tile order —
+/// bit-identical at any worker count.
+fn sweep_csr<T, R, F>(
+    q: &CsrMatrix<f64>,
+    corpus: &CsrCorpus,
+    out: &mut [T],
+    stride: usize,
+    threads: usize,
+    tile_fn: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, usize, &[f64], &mut [T]) -> R + Sync,
+{
+    let m = q.rows();
+    let n = corpus.n;
+    debug_assert_eq!(q.cols(), corpus.d);
+    debug_assert_eq!(out.len(), m * stride);
+    let work = q.nnz().saturating_mul(n).max(m);
+    let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
+    let bounds = parallel::aligned_bounds(m, workers, TILE);
+    let (bt, tile_fn) = (corpus.bt.as_slice(), &tile_fn);
+    let partials = parallel::scope_rows(out, stride, &bounds, |r0, r1, block| {
+        let mut cross = vec![0.0f64; TILE.min(r1 - r0) * n];
+        let mut results = Vec::with_capacity((r1 - r0).div_ceil(TILE));
+        for (start, len) in batch::tiles(r1 - r0, TILE) {
+            let g0 = r0 + start;
+            let ctile = &mut cross[..len * n];
+            // The fan-out already happened one level up; the window
+            // multiply runs whole on this worker.
+            csr_window_cross(q, g0, len, bt, n, ctile);
+            let oblock = &mut block[start * stride..(start + len) * stride];
+            results.push(tile_fn(g0, len, ctile, oblock));
+        }
+        results
+    });
+    partials.into_iter().flatten().collect()
+}
+
 /// k-means assignment epilogue: nearest corpus row per query (strict
 /// `<`, ties to the lowest index) written into `assign`; returns the
 /// inertia `Σ max(d²_min, 0)` accumulated in ascending row order.
@@ -211,6 +443,45 @@ pub fn argmin_assign(
         for i in 0..len {
             let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
             let qn = dot(qi, qi);
+            let row = &cross[i * n..(i + 1) * n];
+            let (best, bestv) = if predicated {
+                argmin_lanes(qn, row, norms)
+            } else {
+                argmin_scalar(qn, row, norms)
+            };
+            ablock[i] = best;
+            inertia += bestv.max(0.0);
+        }
+        inertia
+    });
+    partials.into_iter().sum()
+}
+
+/// [`argmin_assign`] for CSR queries: per-row norms from one
+/// [`csr_row_norms`] sweep, cross terms from the tiled CSR multiply,
+/// the **same** argmin epilogues (scalar or predicated 8-lane).
+/// Bit-identical at any worker count.
+pub fn argmin_assign_csr(
+    q: &CsrMatrix<f64>,
+    corpus: &CsrCorpus,
+    predicated: bool,
+    assign: &mut [usize],
+    threads: usize,
+) -> f64 {
+    let m = q.rows();
+    let n = corpus.n;
+    assert!(n > 0, "argmin_assign_csr: empty corpus");
+    debug_assert_eq!(assign.len(), m);
+    if m == 0 {
+        return 0.0;
+    }
+    let qnorms = csr_row_norms(q, threads);
+    let norms = corpus.norms.as_slice();
+    let qnorms = &qnorms;
+    let partials = sweep_csr(q, corpus, assign, 1, threads, |g0, len, cross, ablock| {
+        let mut inertia = 0.0f64;
+        for i in 0..len {
+            let qn = qnorms[g0 + i];
             let row = &cross[i * n..(i + 1) * n];
             let (best, bestv) = if predicated {
                 argmin_lanes(qn, row, norms)
@@ -292,6 +563,33 @@ pub fn top_k(
     out
 }
 
+/// [`top_k`] for CSR queries — same bounded selection, same tie rules,
+/// bit-identical at any worker count.
+pub fn top_k_csr(
+    q: &CsrMatrix<f64>,
+    corpus: &CsrCorpus,
+    k: usize,
+    threads: usize,
+) -> Vec<Vec<(usize, f64)>> {
+    let m = q.rows();
+    let n = corpus.n;
+    let mut out: Vec<Vec<(usize, f64)>> = vec![Vec::new(); m];
+    if k == 0 || n == 0 || m == 0 {
+        return out;
+    }
+    let qnorms = csr_row_norms(q, threads);
+    let norms = corpus.norms.as_slice();
+    let qnorms = &qnorms;
+    sweep_csr(q, corpus, &mut out, 1, threads, |g0, len, cross, oblock| {
+        for i in 0..len {
+            let qn = qnorms[g0 + i];
+            let row = &cross[i * n..(i + 1) * n];
+            oblock[i] = select_k(qn, row, norms, k);
+        }
+    });
+    out
+}
+
 /// Bounded top-k selection over one distance row: distances evaluated
 /// in predicated 8-lane blocks, candidates folded into a sorted bound
 /// list (insertion keeps equal distances in ascending index order, so
@@ -323,11 +621,68 @@ fn select_k(qn: f64, cross: &[f64], norms: &[f64], k: usize) -> Vec<(usize, f64)
     best
 }
 
+/// One row of the ε-threshold epilogue: push every corpus index within
+/// `eps2` of the row (ascending, predicated 8-lane mask blocks) onto
+/// `list`; return how many were pushed. Shared by the dense and CSR
+/// sweeps so both produce bit-identical lists.
+#[inline]
+fn eps_scan_row(
+    qn: f64,
+    cross: &[f64],
+    norms: &[f64],
+    eps2: f64,
+    skip: Option<usize>,
+    list: &mut Vec<usize>,
+) -> usize {
+    let n = cross.len();
+    let before = list.len();
+    let mut lane = [false; LANES];
+    let mut base = 0usize;
+    while base < n {
+        let blen = LANES.min(n - base);
+        // Predicated block: the threshold compare is the mask.
+        for l in 0..blen {
+            let j = base + l;
+            lane[l] = qn - 2.0 * cross[j] + norms[j] <= eps2;
+        }
+        for (l, &hit) in lane.iter().take(blen).enumerate() {
+            let j = base + l;
+            if hit && Some(j) != skip {
+                list.push(j);
+            }
+        }
+        base += blen;
+    }
+    list.len() - before
+}
+
+/// Assemble the CSR-style neighbour table from per-row counts (written
+/// by the sweep's out buffer) and the tile-ordered index partials.
+fn assemble_neighbors(counts: &[usize], partials: Vec<Vec<usize>>) -> NeighborTable {
+    let mut offsets = Vec::with_capacity(counts.len() + 1);
+    offsets.push(0usize);
+    let mut acc = 0usize;
+    for &c in counts {
+        acc += c;
+        offsets.push(acc);
+    }
+    let mut indices = Vec::with_capacity(acc);
+    for p in partials {
+        indices.extend_from_slice(&p);
+    }
+    debug_assert_eq!(indices.len(), acc);
+    NeighborTable { offsets, indices }
+}
+
 /// DBSCAN epilogue: per query row, the ascending list of corpus indices
 /// within squared radius `eps2` (`d² ≤ eps2`, the naive rung's exact
-/// comparison). With `exclude_self`, corpus index `j` equal to the
-/// query's own global row index is skipped — the self-query convention
-/// of a corpus-vs-itself region query.
+/// comparison), returned as a CSR-style [`NeighborTable`] — one flat
+/// `(offsets, indices)` pair instead of a `Vec` per row, built from
+/// per-tile partials concatenated in ascending tile order (so the lists
+/// are bit-identical to the per-row-`Vec` construction at any worker
+/// count). With `exclude_self`, corpus index `j` equal to the query's
+/// own global row index is skipped — the self-query convention of a
+/// corpus-vs-itself region query.
 pub fn eps_neighbors(
     q: &[f64],
     m: usize,
@@ -335,41 +690,83 @@ pub fn eps_neighbors(
     eps2: f64,
     exclude_self: bool,
     threads: usize,
-) -> Vec<Vec<usize>> {
+) -> NeighborTable {
     let d = corpus.dims();
     let n = corpus.rows();
-    let mut out: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut counts = vec![0usize; m];
     if m == 0 || n == 0 {
-        return out;
+        return NeighborTable { offsets: vec![0; m + 1], indices: Vec::new() };
     }
     let norms = corpus.norms.as_slice();
-    sweep(q, m, d, corpus, &mut out, 1, threads, |g0, len, cross, oblock| {
+    let partials = sweep(q, m, d, corpus, &mut counts, 1, threads, |g0, len, cross, cblock| {
+        let mut local: Vec<usize> = Vec::new();
         for i in 0..len {
             let gi = g0 + i;
             let qi = &q[gi * d..(gi + 1) * d];
             let qn = dot(qi, qi);
             let row = &cross[i * n..(i + 1) * n];
-            let list = &mut oblock[i];
-            let mut lane = [false; LANES];
-            let mut base = 0usize;
-            while base < n {
-                let blen = LANES.min(n - base);
-                // Predicated block: the threshold compare is the mask.
-                for l in 0..blen {
-                    let j = base + l;
-                    lane[l] = qn - 2.0 * row[j] + norms[j] <= eps2;
-                }
-                for (l, &hit) in lane.iter().take(blen).enumerate() {
-                    let j = base + l;
-                    if hit && !(exclude_self && j == gi) {
-                        list.push(j);
-                    }
-                }
-                base += blen;
+            let skip = if exclude_self { Some(gi) } else { None };
+            cblock[i] = eps_scan_row(qn, row, norms, eps2, skip, &mut local);
+        }
+        local
+    });
+    assemble_neighbors(&counts, partials)
+}
+
+/// [`eps_neighbors`] for CSR queries — same predicated threshold scan,
+/// same [`NeighborTable`] assembly, bit-identical at any worker count.
+pub fn eps_neighbors_csr(
+    q: &CsrMatrix<f64>,
+    corpus: &CsrCorpus,
+    eps2: f64,
+    exclude_self: bool,
+    threads: usize,
+) -> NeighborTable {
+    let m = q.rows();
+    let n = corpus.n;
+    let mut counts = vec![0usize; m];
+    if m == 0 || n == 0 {
+        return NeighborTable { offsets: vec![0; m + 1], indices: Vec::new() };
+    }
+    let qnorms = csr_row_norms(q, threads);
+    let norms = corpus.norms.as_slice();
+    let qnorms = &qnorms;
+    let partials = sweep_csr(q, corpus, &mut counts, 1, threads, |g0, len, cross, cblock| {
+        let mut local: Vec<usize> = Vec::new();
+        for i in 0..len {
+            let gi = g0 + i;
+            let qn = qnorms[gi];
+            let row = &cross[i * n..(i + 1) * n];
+            let skip = if exclude_self { Some(gi) } else { None };
+            cblock[i] = eps_scan_row(qn, row, norms, eps2, skip, &mut local);
+        }
+        local
+    });
+    assemble_neighbors(&counts, partials)
+}
+
+/// The fused RBF epilogue over a row-major block, in place:
+/// `v ← exp(−γ·max(qn_r − 2·v + cn_j, 0))`, LANES-chunked. One helper
+/// shared by the dense and CSR gram paths so the canonical expression
+/// order (and therefore the documented dense-vs-CSR rounding
+/// agreement) lives in exactly one place.
+fn rbf_transform_rows(
+    block: &mut [f64],
+    r0: usize,
+    w_norms: &[f64],
+    corpus_norms: &[f64],
+    gamma: f64,
+) {
+    let n = corpus_norms.len();
+    for (r, orow) in block.chunks_mut(n).enumerate() {
+        let qn = w_norms[r0 + r];
+        for (vchunk, nchunk) in orow.chunks_mut(LANES).zip(corpus_norms.chunks(LANES)) {
+            for (v, &cn) in vchunk.iter_mut().zip(nchunk) {
+                let d2 = (qn - 2.0 * *v + cn).max(0.0);
+                *v = (-gamma * d2).exp();
             }
         }
-    });
-    out
+    }
 }
 
 /// RBF gram epilogue: `out[r, j] = exp(−γ·max(d²(w_r, y_j), 0))` with
@@ -402,15 +799,7 @@ pub fn rbf_gram(
     let bounds = parallel::aligned_bounds(m, workers, MR);
     parallel::scope_rows(out, n, &bounds, |r0, r1, block| {
         gemm_prepacked_threads(Transpose::No, r1 - r0, 1.0, &w[r0 * d..r1 * d], pb, 0.0, block, 1);
-        for (r, orow) in block.chunks_mut(n).enumerate() {
-            let qn = w_norms[r0 + r];
-            for (vchunk, nchunk) in orow.chunks_mut(LANES).zip(corpus_norms.chunks(LANES)) {
-                for (v, &cn) in vchunk.iter_mut().zip(nchunk) {
-                    let d2 = (qn - 2.0 * *v + cn).max(0.0);
-                    *v = (-gamma * d2).exp();
-                }
-            }
-        }
+        rbf_transform_rows(block, r0, w_norms, corpus_norms, gamma);
     });
 }
 
@@ -424,6 +813,38 @@ pub fn rbf_gram_corpus(
     threads: usize,
 ) {
     rbf_gram(w, w_norms, &corpus.norms, &corpus.pb, gamma, out, threads);
+}
+
+/// [`rbf_gram`] for a **sparse** working set: the cross term is one
+/// threaded CSR multiply of `w` against the densified-transposed corpus
+/// panel `bt` (`d × n` row-major — [`CsrCorpus::bt`] or the SVM active
+/// panel), the `exp(−γ·d²)` transform is applied per output row while
+/// it is hot. Both stages partition whole output rows per worker, so
+/// the result is bit-identical at any worker count.
+pub fn rbf_gram_csr(
+    w: &CsrMatrix<f64>,
+    w_norms: &[f64],
+    corpus_norms: &[f64],
+    bt: &[f64],
+    gamma: f64,
+    out: &mut [f64],
+    threads: usize,
+) {
+    let m = w.rows();
+    let n = corpus_norms.len();
+    debug_assert_eq!(w_norms.len(), m);
+    debug_assert_eq!(bt.len(), w.cols() * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    csrmm_threads(SparseOp::NoTranspose, 1.0, w, bt, n, 0.0, out, threads)
+        .expect("rbf_gram_csr: shapes consistent");
+    let workers = parallel::effective_threads(threads, m.saturating_mul(n), RBF_MIN_FLOP);
+    let bounds = parallel::even_bounds(m, workers);
+    parallel::scope_rows(out, n, &bounds, |r0, _r1, block| {
+        rbf_transform_rows(block, r0, w_norms, corpus_norms, gamma);
+    });
 }
 
 #[cfg(test)]
@@ -512,8 +933,175 @@ mod tests {
         assert_eq!(nn[0], vec![(0, 0.0)]);
         // Self-exclusion leaves a lone point with no neighbours.
         let lists = eps_neighbors(&[2.0], 1, &c1, 100.0, true, 1);
-        assert!(lists[0].is_empty());
+        assert!(lists.row(0).is_empty());
         // k == 0 yields empty result rows.
         assert!(top_k(&[2.0], 1, &c1, 0, 1)[0].is_empty());
+    }
+
+    fn csr_from_dense(y: &[f64], rows: usize, cols: usize) -> crate::sparse::CsrMatrix<f64> {
+        let t = DenseTable::from_vec(y.to_vec(), rows, cols).unwrap();
+        crate::sparse::CsrMatrix::from_dense(&t, 0.0, crate::sparse::IndexBase::Zero)
+    }
+
+    #[test]
+    fn csr_row_norms_match_stored_sweep() {
+        let (n, d) = (57, 7);
+        let y = random_rows(11, n, d);
+        let m = csr_from_dense(&y, n, d);
+        let norms = csr_row_norms(&m, 4);
+        for i in 0..n {
+            let row = &y[i * d..(i + 1) * d];
+            let naive: f64 = row.iter().map(|v| v * v).sum();
+            assert!((norms[i] - naive).abs() < 1e-12 * (1.0 + naive), "row {i}");
+        }
+        // Bit-identical at any worker count.
+        let base = csr_row_norms(&m, 1);
+        for threads in 2..=4 {
+            let got = csr_row_norms(&m, threads);
+            for (u, v) in base.iter().zip(&got) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_epilogues_match_dense_engine() {
+        // Sparsify by zeroing ~60% of entries, then compare the CSR
+        // entry points against the dense engine on the densified data.
+        let (m, n, d) = (83, 29, 6);
+        let mut q = random_rows(12, m, d);
+        for (i, v) in q.iter_mut().enumerate() {
+            if (i * 7 + 3) % 5 < 3 {
+                *v = 0.0;
+            }
+        }
+        let y = random_rows(13, n, d);
+        let qd = DenseTable::from_vec(q.clone(), m, d).unwrap();
+        let qs = crate::sparse::CsrMatrix::from_dense(&qd, 0.0, crate::sparse::IndexBase::One);
+        let dense_corpus = pack_corpus(&y, n, d, 2);
+        let yd = DenseTable::from_vec(y.clone(), n, d).unwrap();
+        let csr_corpus = CsrCorpus::from_dense(&yd, 2);
+        // argmin assignments agree with the dense engine.
+        let mut a_dense = vec![0usize; m];
+        let mut a_csr = vec![0usize; m];
+        let i_dense = argmin_assign(&q, m, &dense_corpus, true, &mut a_dense, 2);
+        let i_csr = argmin_assign_csr(&qs, &csr_corpus, true, &mut a_csr, 2);
+        assert_eq!(a_dense, a_csr);
+        assert!((i_dense - i_csr).abs() < 1e-9 * (1.0 + i_dense.abs()));
+        // top-k index sets agree.
+        let nn_dense = top_k(&q, m, &dense_corpus, 4, 2);
+        let nn_csr = top_k_csr(&qs, &csr_corpus, 4, 2);
+        for (a, b) in nn_dense.iter().zip(&nn_csr) {
+            let ia: Vec<usize> = a.iter().map(|p| p.0).collect();
+            let ib: Vec<usize> = b.iter().map(|p| p.0).collect();
+            assert_eq!(ia, ib);
+        }
+        // ε-lists agree.
+        let e_dense = eps_neighbors(&q, m, &dense_corpus, 9.0, false, 2);
+        let e_csr = eps_neighbors_csr(&qs, &csr_corpus, 9.0, false, 2);
+        assert_eq!(e_dense.to_lists(), e_csr.to_lists());
+    }
+
+    #[test]
+    fn csr_entry_points_bit_identical_across_workers() {
+        let (m, n, d) = (700, 61, 5);
+        let mut q = random_rows(14, m, d);
+        for (i, v) in q.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        let qd = DenseTable::from_vec(q, m, d).unwrap();
+        let qs = crate::sparse::CsrMatrix::from_dense(&qd, 0.0, crate::sparse::IndexBase::Zero);
+        let y = random_rows(15, n, d);
+        let yd = DenseTable::from_vec(y, n, d).unwrap();
+        let corpus = CsrCorpus::from_csr(
+            &crate::sparse::CsrMatrix::from_dense(&yd, 0.0, crate::sparse::IndexBase::One),
+            1,
+        );
+        let mut a1 = vec![0usize; m];
+        let i1 = argmin_assign_csr(&qs, &corpus, true, &mut a1, 1);
+        let nn1 = top_k_csr(&qs, &corpus, 3, 1);
+        let e1 = eps_neighbors_csr(&qs, &corpus, 4.0, false, 1);
+        for threads in 2..=4 {
+            let mut a = vec![0usize; m];
+            let it = argmin_assign_csr(&qs, &corpus, true, &mut a, threads);
+            assert_eq!(a, a1, "threads={threads}");
+            assert_eq!(it.to_bits(), i1.to_bits(), "threads={threads}");
+            let nn = top_k_csr(&qs, &corpus, 3, threads);
+            for (x, yy) in nn1.iter().zip(&nn) {
+                assert_eq!(x.len(), yy.len());
+                for (p, r) in x.iter().zip(yy) {
+                    assert_eq!(p.0, r.0);
+                    assert_eq!(p.1.to_bits(), r.1.to_bits());
+                }
+            }
+            let e = eps_neighbors_csr(&qs, &corpus, 4.0, false, threads);
+            assert_eq!(e1, e, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn rbf_gram_csr_matches_dense_rbf_gram() {
+        let (ws, n, d) = (9, 33, 6);
+        let mut w = random_rows(16, ws, d);
+        for (i, v) in w.iter_mut().enumerate() {
+            if i % 2 == 1 {
+                *v = 0.0;
+            }
+        }
+        let y = random_rows(17, n, d);
+        let wd = DenseTable::from_vec(w.clone(), ws, d).unwrap();
+        let wcsr = crate::sparse::CsrMatrix::from_dense(&wd, 0.0, crate::sparse::IndexBase::Zero);
+        let w_norms = csr_row_norms(&wcsr, 1);
+        let yd = DenseTable::from_vec(y.clone(), n, d).unwrap();
+        let corpus = CsrCorpus::from_dense(&yd, 1);
+        let pb = pack_b_panels(Transpose::Yes, d, n, &y);
+        let dense_wn: Vec<f64> = (0..ws)
+            .map(|i| {
+                let row = &w[i * d..(i + 1) * d];
+                dot(row, row)
+            })
+            .collect();
+        let mut dense_out = vec![0.0f64; ws * n];
+        rbf_gram(&w, &dense_wn, corpus.norms(), &pb, 0.3, &mut dense_out, 1);
+        let mut base = vec![0.0f64; ws * n];
+        rbf_gram_csr(&wcsr, &w_norms, corpus.norms(), corpus.bt(), 0.3, &mut base, 1);
+        for (u, v) in dense_out.iter().zip(&base) {
+            assert!((u - v).abs() < 1e-12, "{u} vs {v}");
+        }
+        for threads in 2..=4 {
+            let mut out = vec![0.0f64; ws * n];
+            rbf_gram_csr(&wcsr, &w_norms, corpus.norms(), corpus.bt(), 0.3, &mut out, threads);
+            for (u, v) in base.iter().zip(&out) {
+                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn neighbor_table_round_trip_and_degenerates() {
+        let lists = vec![vec![1usize, 3], vec![], vec![0, 1, 2]];
+        let t = NeighborTable::from_lists(&lists);
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.degree(0), 2);
+        assert_eq!(t.degree(1), 0);
+        assert_eq!(t.row(2), &[0, 1, 2]);
+        assert_eq!(t.offsets(), &[0, 2, 2, 5]);
+        assert_eq!(t.indices(), &[1, 3, 0, 1, 2]);
+        assert_eq!(t.to_lists(), lists);
+        let empty = NeighborTable::from_lists(&[]);
+        assert!(empty.is_empty());
+        // nnz = 0 queries: every distance is the corpus norm.
+        use crate::sparse::{CsrMatrix, IndexBase};
+        let zero_rows =
+            CsrMatrix::<f64>::new(2, 2, vec![], vec![], vec![0, 0, 0], IndexBase::Zero).unwrap();
+        let yd = DenseTable::from_vec(vec![0.1, 0.0, 3.0, 4.0], 2, 2).unwrap();
+        let corpus = CsrCorpus::from_dense(&yd, 1);
+        let mut a = vec![9usize; 2];
+        argmin_assign_csr(&zero_rows, &corpus, true, &mut a, 1);
+        assert_eq!(a, vec![0, 0]);
+        let e = eps_neighbors_csr(&zero_rows, &corpus, 1.0, false, 1);
+        assert_eq!(e.to_lists(), vec![vec![0], vec![0]]);
     }
 }

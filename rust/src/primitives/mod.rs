@@ -5,6 +5,12 @@
 //!
 //! * [`distances`] — the fused pairwise squared-distance engine under
 //!   k-means assignment, brute-force KNN, DBSCAN region queries and the
-//!   SVM RBF gram tiles.
+//!   SVM RBF gram tiles. Both input layouts feed the same fused
+//!   epilogues: dense queries run prepacked-GEMM cross terms
+//!   ([`distances::PackedCorpus`]), CSR queries run the threaded sparse
+//!   multiply against a densified-transposed corpus packed once per
+//!   call ([`distances::CsrCorpus`]). ε-neighbourhoods come back as a
+//!   CSR-style [`distances::NeighborTable`] — one flat
+//!   `(offsets, indices)` pair instead of a `Vec` per row.
 
 pub mod distances;

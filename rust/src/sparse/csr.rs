@@ -222,6 +222,71 @@ impl<T: Float> CsrMatrix<T> {
         out
     }
 
+    /// Helper: CSR → **transposed** dense (`cols × rows` row-major) in
+    /// one scatter sweep — the dense `B` operand the sparse query paths
+    /// multiply CSR tiles against (packed once, consumed by every tile).
+    pub fn to_dense_transposed(&self) -> DenseTable<T> {
+        let mut out = DenseTable::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for (j, v) in self.row_entries(i) {
+                out.set(j, i, v);
+            }
+        }
+        out
+    }
+
+    /// Copy rows `lo..hi` into a standalone CSR matrix (same base) —
+    /// the row-tile gather of the sparse distance sweeps and the
+    /// mini-batch slicing of the sparse logistic-regression trainer.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Result<Self> {
+        if lo > hi || hi > self.rows {
+            return Err(Error::Shape(format!("row slice {lo}..{hi} out of 0..{}", self.rows)));
+        }
+        let off = self.base.offset();
+        let p0 = (self.row_ptr[lo] - off) as usize;
+        let p1 = (self.row_ptr[hi] - off) as usize;
+        let row_ptr: Vec<i64> = self.row_ptr[lo..=hi].iter().map(|&p| p - p0 as i64).collect();
+        Ok(Self {
+            rows: hi - lo,
+            cols: self.cols,
+            values: self.values[p0..p1].to_vec(),
+            col_idx: self.col_idx[p0..p1].to_vec(),
+            row_ptr,
+            base: self.base,
+        })
+    }
+
+    /// Gather the given rows (repeats allowed) into a new CSR matrix —
+    /// the sparse analogue of [`DenseTable::gather_rows`].
+    pub fn gather_rows(&self, idx: &[usize]) -> Self {
+        let off = self.base.offset();
+        let mut values = Vec::new();
+        let mut col_idx = Vec::new();
+        let mut row_ptr = Vec::with_capacity(idx.len() + 1);
+        row_ptr.push(off);
+        for &i in idx {
+            let lo = (self.row_ptr[i] - off) as usize;
+            let hi = (self.row_ptr[i + 1] - off) as usize;
+            values.extend_from_slice(&self.values[lo..hi]);
+            col_idx.extend_from_slice(&self.col_idx[lo..hi]);
+            row_ptr.push(values.len() as i64 + off);
+        }
+        Self { rows: idx.len(), cols: self.cols, values, col_idx, row_ptr, base: self.base }
+    }
+
+    /// Gather the given rows into a **dense** table (densified gather) —
+    /// how sparse trainings extract dense artifacts such as SVM support
+    /// vectors or k-means seed centroids.
+    pub fn gather_rows_dense(&self, idx: &[usize]) -> DenseTable<T> {
+        let mut out = DenseTable::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            for (j, v) in self.row_entries(i) {
+                out.set(r, j, v);
+            }
+        }
+        out
+    }
+
     /// Helper: explicit transpose (CSC-equivalent re-bucketing).
     pub fn transposed(&self) -> Self {
         let off = self.base.offset();
@@ -336,5 +401,40 @@ mod tests {
         let t = m.transposed();
         t.validate().unwrap();
         assert_eq!(t.to_dense(), m.to_dense().transposed());
+    }
+
+    #[test]
+    fn dense_transposed_matches_transpose_then_densify() {
+        let m = sample();
+        assert_eq!(m.to_dense_transposed(), m.transposed().to_dense());
+    }
+
+    #[test]
+    fn slice_rows_matches_dense_slice() {
+        let m = sample();
+        for (lo, hi) in [(0usize, 3usize), (0, 1), (1, 3), (1, 1), (3, 3)] {
+            let s = m.slice_rows(lo, hi).unwrap();
+            s.validate().unwrap();
+            assert_eq!(s.to_dense(), m.to_dense().slice_rows(lo, hi).unwrap(), "{lo}..{hi}");
+            assert_eq!(s.base(), m.base());
+        }
+        assert!(m.slice_rows(2, 4).is_err());
+        assert!(m.slice_rows(2, 1).is_err());
+    }
+
+    #[test]
+    fn gather_rows_matches_dense_gather() {
+        let m = sample();
+        let idx = [2usize, 0, 2, 1];
+        let g = m.gather_rows(&idx);
+        g.validate().unwrap();
+        assert_eq!(g.to_dense(), m.to_dense().gather_rows(&idx));
+        assert_eq!(g.base(), m.base());
+        assert_eq!(m.gather_rows_dense(&idx), m.to_dense().gather_rows(&idx));
+        // Empty gather keeps the shape contract.
+        let e = m.gather_rows(&[]);
+        e.validate().unwrap();
+        assert_eq!(e.rows(), 0);
+        assert_eq!(e.cols(), 3);
     }
 }

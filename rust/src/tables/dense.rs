@@ -48,6 +48,11 @@ impl<T: Float> DenseTable<T> {
         &mut self.data
     }
 
+    /// Consume the table, yielding the row-major buffer.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
     /// Row `i` as a contiguous slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[T] {

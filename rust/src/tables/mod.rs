@@ -2,12 +2,18 @@
 //!
 //! oneDAL's public API hands every algorithm a `NumericTable`; this
 //! module provides the two layouts the paper's workloads use (dense
-//! row-major, CSR sparse), CSV I/O, and the synthetic dataset generators
-//! standing in for the paper's benchmark data (scikit-learn_bench grids,
-//! DataPerf speech embeddings, TPC-AI segmentation, Kaggle fraud).
+//! row-major, CSR sparse), the layout-polymorphic [`TableRef`]/[`Table`]
+//! boundary the algorithm entry points ingest (`impl Into<TableRef>` —
+//! pass `&DenseTable<f64>` or `&CsrMatrix<f64>` interchangeably; see
+//! [`table`] for the sparse-path determinism contract), CSV I/O, and the
+//! synthetic dataset generators standing in for the paper's benchmark
+//! data (scikit-learn_bench grids, DataPerf speech embeddings, TPC-AI
+//! segmentation, Kaggle fraud).
 
 pub mod csv;
 pub mod dense;
 pub mod synth;
+pub mod table;
 
 pub use dense::DenseTable;
+pub use table::{Table, TableRef};

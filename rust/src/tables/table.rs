@@ -1,0 +1,158 @@
+//! The layout-polymorphic table the algorithm layer ingests — oneDAL's
+//! `NumericTable` boundary. Every algorithm entry point takes
+//! `impl Into<TableRef<'_>>`, so callers hand in `&DenseTable<f64>` or
+//! `&CsrMatrix<f64>` directly and the ladder dispatches once, at the
+//! top: dense inputs run the existing dense engines unchanged, CSR
+//! inputs route through the sparse query paths
+//! ([`crate::primitives::distances`] sweeps, the threaded CSR kernels
+//! of [`crate::sparse`]) — and under `Backend::Naive` a CSR input is
+//! densified and run through the dense naive rung, which is exactly the
+//! "densified oracle" every sparse path is tested against.
+//!
+//! Determinism contract: each sparse path partitions work the same
+//! input-keyed way as its dense sibling (tiles/rows computed whole by
+//! one worker, partials merged in ascending order), so CSR results are
+//! **bit-identical at any worker count**. Across layouts, cross terms
+//! accumulate in the same ascending-index order as the dense engines
+//! (implicit zeros are exact no-ops), but row norms come from a
+//! single-accumulator sweep of the stored values rather than the 4-way
+//! unrolled dense [`crate::blas::dot`], so distances agree with the
+//! densified run to rounding — discrete outputs (assignments, neighbour
+//! sets, labels) match the densified oracle exactly on non-degenerate
+//! data, float outputs to tolerance.
+
+use crate::sparse::CsrMatrix;
+use crate::tables::DenseTable;
+
+/// Borrowed view over either supported layout — the argument type of
+/// the algorithm entry points.
+#[derive(Clone, Copy, Debug)]
+pub enum TableRef<'a> {
+    Dense(&'a DenseTable<f64>),
+    Csr(&'a CsrMatrix<f64>),
+}
+
+impl<'a> TableRef<'a> {
+    pub fn rows(&self) -> usize {
+        match self {
+            TableRef::Dense(t) => t.rows(),
+            TableRef::Csr(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            TableRef::Dense(t) => t.cols(),
+            TableRef::Csr(m) => m.cols(),
+        }
+    }
+
+    /// Densify: clones a dense table, scatters a CSR one — the input of
+    /// the densified naive rung (and of every sparse path's oracle).
+    pub fn to_dense(&self) -> DenseTable<f64> {
+        match self {
+            TableRef::Dense(t) => (*t).clone(),
+            TableRef::Csr(m) => m.to_dense(),
+        }
+    }
+
+    /// Clone the referenced data into an owned [`Table`] (named
+    /// `to_table` rather than `to_owned` to keep the blanket
+    /// `ToOwned` impl unshadowed).
+    pub fn to_table(&self) -> Table {
+        match self {
+            TableRef::Dense(t) => Table::Dense((*t).clone()),
+            TableRef::Csr(m) => Table::Csr((*m).clone()),
+        }
+    }
+}
+
+impl<'a> From<&'a DenseTable<f64>> for TableRef<'a> {
+    fn from(t: &'a DenseTable<f64>) -> Self {
+        TableRef::Dense(t)
+    }
+}
+
+impl<'a> From<&'a CsrMatrix<f64>> for TableRef<'a> {
+    fn from(m: &'a CsrMatrix<f64>) -> Self {
+        TableRef::Csr(m)
+    }
+}
+
+impl<'a> From<&'a Table> for TableRef<'a> {
+    fn from(t: &'a Table) -> Self {
+        t.view()
+    }
+}
+
+/// Owned table in either layout — what lazy models (KNN) store.
+#[derive(Clone, Debug)]
+pub enum Table {
+    Dense(DenseTable<f64>),
+    Csr(CsrMatrix<f64>),
+}
+
+impl Table {
+    pub fn rows(&self) -> usize {
+        self.view().rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.view().cols()
+    }
+
+    /// Borrow as a [`TableRef`] (named `view` rather than `as_ref` to
+    /// keep the std `AsRef` trait name free).
+    pub fn view(&self) -> TableRef<'_> {
+        match self {
+            Table::Dense(t) => TableRef::Dense(t),
+            Table::Csr(m) => TableRef::Csr(m),
+        }
+    }
+}
+
+impl From<DenseTable<f64>> for Table {
+    fn from(t: DenseTable<f64>) -> Self {
+        Table::Dense(t)
+    }
+}
+
+impl From<CsrMatrix<f64>> for Table {
+    fn from(m: CsrMatrix<f64>) -> Self {
+        Table::Csr(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::IndexBase;
+
+    fn sample_csr() -> CsrMatrix<f64> {
+        CsrMatrix::new(2, 3, vec![1.5, -2.0], vec![0, 2], vec![0, 1, 2], IndexBase::Zero)
+            .unwrap()
+    }
+
+    #[test]
+    fn shapes_and_densify_agree_across_layouts() {
+        let d = DenseTable::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3).unwrap();
+        let s = sample_csr();
+        let rd: TableRef = (&d).into();
+        let rs: TableRef = (&s).into();
+        assert_eq!((rd.rows(), rd.cols()), (2, 3));
+        assert_eq!((rs.rows(), rs.cols()), (2, 3));
+        assert_eq!(rd.to_dense(), d);
+        assert_eq!(rs.to_dense(), s.to_dense());
+    }
+
+    #[test]
+    fn owned_round_trip() {
+        let s = sample_csr();
+        let owned = TableRef::from(&s).to_table();
+        assert_eq!(owned.rows(), 2);
+        let r: TableRef = (&owned).into();
+        assert_eq!(r.to_dense(), s.to_dense());
+        let od: Table = DenseTable::<f64>::zeros(4, 2).into();
+        assert_eq!((od.rows(), od.cols()), (4, 2));
+    }
+}

@@ -18,5 +18,7 @@
 pub mod moments;
 pub mod xcp;
 
-pub use moments::{x2c_mom, x2c_mom_naive, x2c_mom_threads, Moments};
+pub use moments::{
+    x2c_mom, x2c_mom_csr, x2c_mom_csr_threads, x2c_mom_naive, x2c_mom_threads, Moments,
+};
 pub use xcp::{xcp_full, XcpState};

@@ -1,7 +1,15 @@
 //! `x2c_mom` — central second moment (variance) per coordinate, §IV-C-1.
+//!
+//! CSR tables are first-class: [`x2c_mom_csr`] reduces the two raw
+//! moments over the **stored** values only (an implicit zero adds
+//! nothing to `S¹` or `S²`), with the full observation count `n`
+//! supplying the implicit-zero correction when the raw sums are
+//! finalized into mean and variance — exact moments of the densified
+//! table from one sweep of the nnz entries.
 
 use crate::dtype::Float;
 use crate::error::{Error, Result};
+use crate::sparse::CsrMatrix;
 use crate::tables::DenseTable;
 
 /// Raw + central moments of a `p×n` dataset (columns = observations).
@@ -107,6 +115,55 @@ pub fn x2c_mom_threads<T: Float>(x: &DenseTable<T>, threads: usize) -> Result<Mo
     for (lo, psum, psumsq) in partials {
         sum[lo..lo + psum.len()].copy_from_slice(&psum);
         sumsq[lo..lo + psumsq.len()].copy_from_slice(&psumsq);
+    }
+    let mut mean = Vec::new();
+    let mut variance = Vec::new();
+    finalize(n, &sum, &sumsq, &mut mean, &mut variance);
+    Ok(Moments { n, sum, sumsq, mean, variance })
+}
+
+/// [`x2c_mom`] for a CSR table in the same `p × n` orientation (rows =
+/// coordinates, columns = observations), on the process-default worker
+/// count.
+pub fn x2c_mom_csr<T: Float>(x: &CsrMatrix<T>) -> Result<Moments<T>> {
+    x2c_mom_csr_threads(x, crate::parallel::default_threads())
+}
+
+/// [`x2c_mom_csr`] with an explicit worker count: each coordinate's two
+/// raw sums reduce over its **stored** values only (single accumulator
+/// per moment, ascending stored order — implicit zeros are exact
+/// no-ops), then [`finalize`] applies the observation count `n` of the
+/// full table, which is the entire implicit-zero correction the
+/// raw-moment formulation needs. Coordinates partition whole per
+/// worker — bit-identical at any worker count.
+pub fn x2c_mom_csr_threads<T: Float>(x: &CsrMatrix<T>, threads: usize) -> Result<Moments<T>> {
+    let p = x.rows();
+    let n = x.cols();
+    if n == 0 {
+        return Err(Error::Shape("x2c_mom: empty dataset".into()));
+    }
+    let mut sum = vec![T::ZERO; p];
+    let mut sumsq = vec![T::ZERO; p];
+    let workers = crate::parallel::effective_threads(threads, x.nnz().max(p), 1 << 14);
+    let bounds = crate::parallel::even_bounds(p, workers);
+    let partials = crate::parallel::par_map(&bounds, |lo, hi| {
+        let pairs: Vec<(T, T)> = (lo..hi)
+            .map(|i| {
+                let (mut s, mut q) = (T::ZERO, T::ZERO);
+                for (_, v) in x.row_entries(i) {
+                    s += v;
+                    q = v.mul_add(v, q);
+                }
+                (s, q)
+            })
+            .collect();
+        (lo, pairs)
+    });
+    for (lo, pairs) in partials {
+        for (off, (s, q)) in pairs.into_iter().enumerate() {
+            sum[lo + off] = s;
+            sumsq[lo + off] = q;
+        }
     }
     let mut mean = Vec::new();
     let mut variance = Vec::new();
@@ -241,6 +298,60 @@ mod tests {
             for i in 0..13 {
                 assert_eq!(base.sum[i].to_bits(), m.sum[i].to_bits(), "threads={threads}");
                 assert_eq!(base.sumsq[i].to_bits(), m.sumsq[i].to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    /// CSR moments equal the densified-table moments (including zero
+    /// columns and empty rows) and are bit-identical across workers.
+    #[test]
+    fn csr_moments_match_densified_oracle() {
+        use crate::sparse::{CsrMatrix, IndexBase};
+        let mut xd = random_dataset(5, 9, 301);
+        // Sparsify: zero out two thirds of the entries, plus one whole
+        // coordinate row (all-zero → nnz = 0 for that row) and one
+        // all-zero observation column.
+        for (i, v) in xd.data_mut().iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        for j in 0..301 {
+            xd.set(4, j, 0.0);
+        }
+        for i in 0..9 {
+            xd.set(i, 77, 0.0);
+        }
+        for base in [IndexBase::Zero, IndexBase::One] {
+            let xs = CsrMatrix::from_dense(&xd, 0.0, base);
+            let a = x2c_mom_csr(&xs).unwrap();
+            let b = x2c_mom(&xd).unwrap();
+            assert_eq!(a.n, b.n);
+            for i in 0..9 {
+                let tol = |r: f64| 1e-9 * (1.0 + r.abs());
+                assert!((a.sum[i] - b.sum[i]).abs() < tol(b.sum[i]), "{base:?} coord {i}");
+                assert!((a.sumsq[i] - b.sumsq[i]).abs() < tol(b.sumsq[i]), "{base:?} coord {i}");
+                assert!((a.mean[i] - b.mean[i]).abs() < tol(b.mean[i]), "{base:?} coord {i}");
+                assert!(
+                    (a.variance[i] - b.variance[i]).abs() < 1e-9,
+                    "{base:?} coord {i}: {} vs {}",
+                    a.variance[i],
+                    b.variance[i]
+                );
+            }
+            assert_eq!(a.sum[4], 0.0, "all-zero coordinate");
+            assert_eq!(a.variance[4], 0.0);
+            let base1 = x2c_mom_csr_threads(&xs, 1).unwrap();
+            for threads in 2..=4 {
+                let m = x2c_mom_csr_threads(&xs, threads).unwrap();
+                for i in 0..9 {
+                    assert_eq!(base1.sum[i].to_bits(), m.sum[i].to_bits(), "threads={threads}");
+                    assert_eq!(
+                        base1.sumsq[i].to_bits(),
+                        m.sumsq[i].to_bits(),
+                        "threads={threads}"
+                    );
+                }
             }
         }
     }

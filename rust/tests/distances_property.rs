@@ -111,7 +111,7 @@ fn top_k_bit_identical_and_matches_naive_sort() {
     for (i, row) in base.iter().enumerate() {
         let mut dists: Vec<(usize, f64)> =
             (0..x.rows()).map(|j| (j, sqdist(q.row(i), x.row(j)))).collect();
-        dists.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        dists.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
         let want: Vec<usize> = dists.iter().take(k).map(|p| p.0).collect();
         let got: Vec<usize> = row.iter().map(|p| p.0).collect();
         assert_eq!(got, want, "query {i}");
@@ -158,13 +158,17 @@ fn eps_neighbors_bit_identical_and_exact_on_boundary() {
         let got = distances::eps_neighbors(&y, n, &corpus, 4.0, true, threads);
         assert_eq!(base, got, "threads={threads}");
     }
-    for (i, list) in base.iter().enumerate() {
+    for i in 0..base.rows() {
+        let list = base.row(i);
         let want: Vec<usize> = (0..n)
             .filter(|&j| j != i && sqdist(&y[i..i + 1], &y[j..j + 1]) <= 4.0)
             .collect();
-        assert_eq!(list, &want, "row {i}");
+        assert_eq!(list, &want[..], "row {i}");
         assert!(list.contains(&(i.saturating_sub(2))) || i < 2);
     }
+    // The CSR-shaped table is internally consistent.
+    assert_eq!(base.offsets().len(), n + 1);
+    assert_eq!(*base.offsets().last().unwrap(), base.indices().len());
 }
 
 /// RBF gram epilogue: bit-identical at 1–4 workers and equal to the
@@ -333,8 +337,8 @@ fn degenerate_shapes_are_legal() {
     assert!(nn[0][0].1.abs() < 1e-9);
     // Self-exclusion with a lone point leaves an empty list; without
     // exclusion the point finds itself.
-    assert!(distances::eps_neighbors(&[3.0, 4.0], 1, &corpus, 1.0, true, 2)[0].is_empty());
-    assert_eq!(distances::eps_neighbors(&[3.0, 4.0], 1, &corpus, 1.0, false, 2)[0], vec![0]);
+    assert!(distances::eps_neighbors(&[3.0, 4.0], 1, &corpus, 1.0, true, 2).row(0).is_empty());
+    assert_eq!(distances::eps_neighbors(&[3.0, 4.0], 1, &corpus, 1.0, false, 2).row(0), &[0]);
     // One-column data.
     let c1 = distances::pack_corpus(&[0.0, 10.0, 20.0], 3, 1, 1);
     let mut a1 = vec![0usize; 2];

@@ -1,0 +1,311 @@
+//! Sparse-ingestion property suite (ISSUE 5): every CSR-accepting
+//! consumer must
+//!
+//! * match its **densified oracle** through the public API
+//!   (`Backend::Naive` on a CSR table densifies and runs the dense
+//!   naive rung — that run is the oracle);
+//! * be **bit-identical across 1–4 workers**;
+//! * treat the **index base as transparent** (0- and 1-based encodings
+//!   of the same data produce bit-identical results);
+//! * accept the degenerate shapes: empty rows, all-zero columns, and
+//!   the all-implicit-zero `nnz = 0` matrix.
+
+use onedal_sve::algorithms::svm::SvmKernel;
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::sparse::{CsrMatrix, IndexBase};
+use onedal_sve::tables::synth::{make_blobs, make_classification};
+use onedal_sve::vsl;
+
+fn ctx(b: Backend, threads: usize) -> Context {
+    Context::builder().artifact_dir("/nonexistent").backend(b).threads(threads).build().unwrap()
+}
+
+/// Zero out a striped subset of entries, force an all-zero feature
+/// column and a few entirely-empty rows, then CSR-encode. The mutated
+/// dense table *is* the densified image of the returned matrix.
+fn sparsify(x: &mut DenseTable<f64>, base: IndexBase) -> CsrMatrix<f64> {
+    for (i, v) in x.data_mut().iter_mut().enumerate() {
+        if i % 2 == 1 {
+            *v = 0.0;
+        }
+    }
+    for r in 0..x.rows() {
+        x.row_mut(r)[1] = 0.0; // all-zero column
+    }
+    for r in [3usize, 10, 17] {
+        if r < x.rows() {
+            x.row_mut(r).fill(0.0); // empty rows
+        }
+    }
+    let m = CsrMatrix::from_dense(x, 0.0, base);
+    assert!(m.inspect().empty_rows >= 3, "fixture must contain empty rows");
+    m
+}
+
+/// k-means / KNN / DBSCAN / moments: CSR input vs the densified naive
+/// oracle, on a fixture with empty rows and an all-zero column.
+#[test]
+fn clustering_consumers_match_densified_oracle() {
+    let mut e = Mt19937::new(100);
+    let (mut xd, labels) = make_blobs(&mut e, 300, 6, 3, 0.4);
+    let xs = sparsify(&mut xd, IndexBase::One);
+    let y: Vec<f64> = labels.iter().map(|&c| c as f64).collect();
+    let cn = ctx(Backend::Naive, 1);
+    let cv = ctx(Backend::Vectorized, 3);
+
+    // k-means: same assignments as the densified naive training.
+    let km = || KMeans::params().k(3).seed(7).max_iter(15);
+    let km_s = km().train(&cv, &xs).unwrap();
+    let km_o = km().train(&cn, &xs).unwrap();
+    assert_eq!(km_s.infer(&cv, &xs).unwrap(), km_o.infer(&cn, &xs).unwrap());
+    assert!((km_s.inertia - km_o.inertia).abs() < 1e-8 * (1.0 + km_o.inertia));
+
+    // KNN: same neighbour sets (ties between the duplicate empty rows
+    // break to the lower index in both rungs) and same predictions.
+    let knn = KnnClassifier::params().k(5).train(&cv, &xs, &y).unwrap();
+    let nn_s = knn.kneighbors(&cv, &xs).unwrap();
+    let nn_o = knn.kneighbors(&cn, &xs).unwrap();
+    for (a, b) in nn_s.iter().zip(&nn_o) {
+        let ia: Vec<usize> = a.iter().map(|p| p.0).collect();
+        let ib: Vec<usize> = b.iter().map(|p| p.0).collect();
+        assert_eq!(ia, ib);
+    }
+    assert_eq!(knn.infer(&cv, &xs).unwrap(), knn.infer(&cn, &xs).unwrap());
+
+    // DBSCAN: identical clustering.
+    let db = |c: &Context| Dbscan::params().eps(1.5).min_pts(4).train(c, &xs).unwrap();
+    let (db_s, db_o) = (db(&cv), db(&cn));
+    assert_eq!(db_s.labels, db_o.labels);
+    assert_eq!(db_s.n_clusters, db_o.n_clusters);
+
+    // Moments: CSR raw sums + implicit-zero correction equal the
+    // densified moments.
+    let mom_s = vsl::x2c_mom_csr(&xs).unwrap();
+    let mom_o = vsl::x2c_mom(&xd).unwrap();
+    assert_eq!(mom_s.n, mom_o.n);
+    for i in 0..xs.rows() {
+        let tol = |r: f64| 1e-9 * (1.0 + r.abs());
+        assert!((mom_s.sum[i] - mom_o.sum[i]).abs() < tol(mom_o.sum[i]), "row {i}");
+        assert!((mom_s.sumsq[i] - mom_o.sumsq[i]).abs() < tol(mom_o.sumsq[i]), "row {i}");
+        assert!((mom_s.variance[i] - mom_o.variance[i]).abs() < tol(mom_o.variance[i]));
+    }
+}
+
+/// SVM / linreg / logreg: CSR training vs the densified runs.
+#[test]
+fn supervised_consumers_match_densified_oracle() {
+    let mut e = Mt19937::new(101);
+    let (mut xd, y) = make_classification(&mut e, 260, 6, 1.8);
+    let xs = sparsify(&mut xd, IndexBase::One);
+    let cn = ctx(Backend::Naive, 1);
+    let cv = ctx(Backend::Vectorized, 3);
+
+    // SVM, both kernels: sparse-trained model scores the corpus like
+    // the dense-trained one (same data, eps-converged optima).
+    for kernel in [SvmKernel::Linear, SvmKernel::Rbf { gamma: 0.4 }] {
+        let params = Svc::params().kernel(kernel).eps(1e-6);
+        let ms = params.train(&cv, &xs, &y).unwrap();
+        let md = params.train(&cv, &xd, &y).unwrap();
+        let fs = ms.decision_function(&cv, &xs).unwrap();
+        let fd = md.decision_function(&cv, &xd).unwrap();
+        for (a, b) in fs.iter().zip(&fd) {
+            assert!((a - b).abs() < 1e-4, "{kernel:?}: {a} vs {b}");
+        }
+        // Predictions may differ only where |f| sits inside the two
+        // runs' convergence slack.
+        let agree = ms
+            .infer(&cv, &xs)
+            .unwrap()
+            .iter()
+            .zip(&md.infer(&cv, &xd).unwrap())
+            .filter(|(a, b)| a == b)
+            .count();
+        assert!(agree >= 255, "{kernel:?}: {agree}/260 agreement");
+    }
+
+    // Linear + ridge regression: sparse normal equations vs the
+    // densified naive rung (textbook triple loop).
+    let yr: Vec<f64> = (0..260).map(|i| xd.row(i).iter().sum::<f64>() * 0.5 + 1.0).collect();
+    for alpha in [0.0, 3.0] {
+        let params = LinearRegression::params().alpha(alpha);
+        let ms = params.train(&cv, &xs, &yr).unwrap();
+        let mo = params.train(&cn, &xs, &yr).unwrap();
+        for (a, b) in ms.coef.iter().zip(&mo.coef) {
+            assert!((a - b).abs() < 1e-6, "alpha={alpha}: {a} vs {b}");
+        }
+        assert!((ms.intercept - mo.intercept).abs() < 1e-6, "alpha={alpha}");
+        let ps = ms.infer(&cv, &xs).unwrap();
+        let po = ms.infer(&cv, &xd).unwrap();
+        for (a, b) in ps.iter().zip(&po) {
+            assert!((a - b).abs() < 1e-9, "alpha={alpha}");
+        }
+    }
+
+    // Logistic regression: sparse batched rung tracks the dense one.
+    let lp = || LogisticRegression::params().epochs(12);
+    let ms = lp().train(&cv, &xs, &y).unwrap();
+    let md = lp().train(&cv, &xd, &y).unwrap();
+    for (a, b) in ms.coef.iter().zip(&md.coef) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+    assert!((ms.intercept - md.intercept).abs() < 1e-6);
+    let acc = onedal_sve::metrics::accuracy(&ms.infer(&cv, &xs).unwrap(), &y);
+    assert!(acc > 0.9, "acc={acc}");
+}
+
+/// 0- and 1-based encodings of the same data are indistinguishable —
+/// bit-identical model outputs everywhere.
+#[test]
+fn index_base_is_transparent() {
+    let mut e = Mt19937::new(102);
+    let (mut xd, y) = make_classification(&mut e, 200, 5, 1.5);
+    let xs0 = sparsify(&mut xd, IndexBase::Zero);
+    let mut xs1 = xs0.clone();
+    xs1.rebase(IndexBase::One);
+    xs1.validate().unwrap();
+    let cv = ctx(Backend::Vectorized, 2);
+
+    let km = || KMeans::params().k(3).seed(3).max_iter(8);
+    let (ka, kb) = (km().train(&cv, &xs0).unwrap(), km().train(&cv, &xs1).unwrap());
+    for (a, b) in ka.centroids.data().iter().zip(kb.centroids.data()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(ka.inertia.to_bits(), kb.inertia.to_bits());
+
+    let knn = KnnClassifier::params().k(4);
+    let (na, nb) =
+        (knn.train(&cv, &xs0, &y).unwrap(), knn.train(&cv, &xs1, &y).unwrap());
+    let (la, lb) = (na.kneighbors(&cv, &xs0).unwrap(), nb.kneighbors(&cv, &xs1).unwrap());
+    for (a, b) in la.iter().zip(&lb) {
+        assert_eq!(a.len(), b.len());
+        for (p, r) in a.iter().zip(b) {
+            assert_eq!(p.0, r.0);
+            assert_eq!(p.1.to_bits(), r.1.to_bits());
+        }
+    }
+
+    let db = |x: &CsrMatrix<f64>| Dbscan::params().eps(1.2).min_pts(3).train(&cv, x).unwrap();
+    assert_eq!(db(&xs0).labels, db(&xs1).labels);
+
+    let lr = LinearRegression::params();
+    let yr: Vec<f64> = (0..200).map(|i| i as f64 * 0.01).collect();
+    let (ra, rb) = (lr.train(&cv, &xs0, &yr).unwrap(), lr.train(&cv, &xs1, &yr).unwrap());
+    for (a, b) in ra.coef.iter().zip(&rb.coef) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    let lg = LogisticRegression::params().epochs(5);
+    let (ga, gb) = (lg.train(&cv, &xs0, &y).unwrap(), lg.train(&cv, &xs1, &y).unwrap());
+    for (a, b) in ga.coef.iter().zip(&gb.coef) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    let sv = Svc::params().kernel(SvmKernel::Rbf { gamma: 0.5 });
+    let (sa, sb) = (sv.train(&cv, &xs0, &y).unwrap(), sv.train(&cv, &xs1, &y).unwrap());
+    let (fa, fb) =
+        (sa.decision_function(&cv, &xs0).unwrap(), sb.decision_function(&cv, &xs1).unwrap());
+    for (a, b) in fa.iter().zip(&fb) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    let (ma, mb) = (vsl::x2c_mom_csr(&xs0).unwrap(), vsl::x2c_mom_csr(&xs1).unwrap());
+    for (a, b) in ma.variance.iter().zip(&mb.variance) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// Whole sparse trainings are bit-identical across 1–4 workers at the
+/// public API (the per-primitive properties live in the module tests).
+#[test]
+fn sparse_paths_bit_identical_across_workers() {
+    let mut e = Mt19937::new(103);
+    let (mut xd, labels) = make_blobs(&mut e, 900, 7, 4, 0.6);
+    let xs = sparsify(&mut xd, IndexBase::One);
+    let y: Vec<f64> = labels.iter().map(|&c| c as f64).collect();
+    let mk = |t: usize| ctx(Backend::Vectorized, t);
+
+    let km = || KMeans::params().k(4).seed(5).max_iter(6);
+    let base_km = km().train(&mk(1), &xs).unwrap();
+    let knn = KnnClassifier::params().k(6).train(&mk(1), &xs, &y).unwrap();
+    let base_nn = knn.kneighbors(&mk(1), &xs).unwrap();
+    let base_db = Dbscan::params().eps(2.0).min_pts(5).train(&mk(1), &xs).unwrap();
+    let base_mom = vsl::x2c_mom_csr_threads(&xs, 1).unwrap();
+    for threads in 2..=4 {
+        let m = km().train(&mk(threads), &xs).unwrap();
+        for (a, b) in base_km.centroids.data().iter().zip(m.centroids.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "kmeans threads={threads}");
+        }
+        assert_eq!(base_km.inertia.to_bits(), m.inertia.to_bits(), "threads={threads}");
+        let nn = knn.kneighbors(&mk(threads), &xs).unwrap();
+        for (a, b) in base_nn.iter().zip(&nn) {
+            assert_eq!(a.len(), b.len(), "knn threads={threads}");
+            for (p, r) in a.iter().zip(b) {
+                assert_eq!(p.0, r.0, "knn threads={threads}");
+                assert_eq!(p.1.to_bits(), r.1.to_bits(), "knn threads={threads}");
+            }
+        }
+        let db = Dbscan::params().eps(2.0).min_pts(5).train(&mk(threads), &xs).unwrap();
+        assert_eq!(base_db.labels, db.labels, "dbscan threads={threads}");
+        let mom = vsl::x2c_mom_csr_threads(&xs, threads).unwrap();
+        for (a, b) in base_mom.sumsq.iter().zip(&mom.sumsq) {
+            assert_eq!(a.to_bits(), b.to_bits(), "moments threads={threads}");
+        }
+    }
+}
+
+/// The all-implicit-zero matrix (`nnz = 0`) is legal input everywhere.
+#[test]
+fn nnz_zero_matrix_is_legal() {
+    let zero =
+        CsrMatrix::<f64>::new(40, 5, vec![], vec![], vec![0; 41], IndexBase::Zero).unwrap();
+    assert_eq!(zero.nnz(), 0);
+    let cv = ctx(Backend::Vectorized, 2);
+
+    // k-means: one centroid at the origin, zero inertia.
+    let km = KMeans::params().k(1).seed(1).train(&cv, &zero).unwrap();
+    assert!(km.centroids.data().iter().all(|&v| v == 0.0));
+    assert_eq!(km.inertia, 0.0);
+    assert!(km.infer(&cv, &zero).unwrap().iter().all(|&a| a == 0));
+
+    // KNN: every distance is exactly 0 — ties resolve to the lowest
+    // corpus indices.
+    let y: Vec<f64> = (0..40).map(|i| (i % 2) as f64).collect();
+    let knn = KnnClassifier::params().k(2).train(&cv, &zero, &y).unwrap();
+    for row in knn.kneighbors(&cv, &zero).unwrap() {
+        assert_eq!(row[0], (0, 0.0));
+        assert_eq!(row[1], (1, 0.0));
+    }
+
+    // DBSCAN: all points coincide — one cluster, no noise.
+    let db = Dbscan::params().eps(0.5).min_pts(3).train(&cv, &zero).unwrap();
+    assert_eq!(db.n_clusters, 1);
+    assert!(db.labels.iter().all(|&l| l == 0));
+
+    // Ridge (α > 0 keeps the system nonsingular): zero coefficients,
+    // intercept = ȳ.
+    let yr: Vec<f64> = (0..40).map(|i| i as f64).collect();
+    let rm = RidgeRegression::params().alpha(1.0).train(&cv, &zero, &yr).unwrap();
+    assert!(rm.coef.iter().all(|&c| c.abs() < 1e-12));
+    assert!((rm.intercept - 19.5).abs() < 1e-12);
+    assert!(rm.infer(&cv, &zero).unwrap().iter().all(|&p| (p - 19.5).abs() < 1e-12));
+
+    // Logistic regression: gradient w.r.t. w is identically zero, so
+    // only the intercept learns.
+    let lm = LogisticRegression::params().epochs(3).train(&cv, &zero, &y).unwrap();
+    assert!(lm.coef.iter().all(|&c| c.abs() < 1e-9));
+
+    // Moments: all-zero sums and variances.
+    let mm = vsl::x2c_mom_csr(&zero).unwrap();
+    assert!(mm.sum.iter().all(|&s| s == 0.0));
+    assert!(mm.variance.iter().all(|&v| v == 0.0));
+
+    // SVM: the zero gram is degenerate but must not panic or spin.
+    let sm = Svc::params()
+        .kernel(SvmKernel::Linear)
+        .max_iter(50)
+        .train(&cv, &zero, &y)
+        .unwrap();
+    let f = sm.decision_function(&cv, &zero).unwrap();
+    assert!(f.iter().all(|v| v.is_finite()));
+}
