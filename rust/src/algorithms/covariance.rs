@@ -46,12 +46,15 @@ impl CovarianceParams {
     /// Batch mode over an `n×p` observations-in-rows table (the oneDAL
     /// convention; internally transposed to the VSL p×n layout).
     pub fn train(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<CovarianceModel> {
+        crate::validate::non_empty(x.rows(), x.cols(), "covariance")?;
         if x.rows() < 2 {
             return Err(Error::Param("covariance: need ≥ 2 observations".into()));
         }
-        let mut st = OnlineCovariance::new(x.cols());
-        st.partial_fit_threads(x, ctx.threads())?;
-        st.finalize(self.output)
+        crate::parallel::quarantine("covariance.train", || {
+            let mut st = OnlineCovariance::new(x.cols());
+            st.partial_fit_threads(x, ctx.threads())?;
+            st.finalize(self.output)
+        })
     }
 }
 

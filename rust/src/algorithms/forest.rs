@@ -75,15 +75,18 @@ impl ForestParams {
     pub fn train(&self, ctx: &Context, x: &DenseTable<f64>, y: &[f64]) -> Result<ForestModel> {
         let n = x.rows();
         let p = x.cols();
-        if n != y.len() {
-            return Err(Error::Shape("forest: label count mismatch".into()));
-        }
-        if self.n_trees == 0 {
-            return Err(Error::Param("forest: need ≥ 1 tree".into()));
-        }
+        crate::validate::non_empty(n, p, "forest")?;
+        crate::validate::labels_match(n, y.len(), "forest")?;
+        crate::validate::positive_int(self.n_trees, "n_trees", "forest")?;
         if !(0.0..=1.0).contains(&self.sample_frac) || self.sample_frac == 0.0 {
             return Err(Error::Param("forest: sample_frac must be in (0, 1]".into()));
         }
+        crate::parallel::quarantine("forest.train", || self.train_inner(ctx, x, y))
+    }
+
+    fn train_inner(&self, ctx: &Context, x: &DenseTable<f64>, y: &[f64]) -> Result<ForestModel> {
+        let n = x.rows();
+        let p = x.cols();
         let n_classes = y.iter().fold(0.0f64, |a, &b| a.max(b)) as usize + 1;
         let max_features = if self.max_features == 0 {
             ((p as f64).sqrt().round() as usize).max(1)
@@ -128,14 +131,23 @@ impl ForestParams {
                 })));
             }
             for (_, h) in handles {
-                for (tree_idx, t) in h.join().expect("forest worker panicked") {
-                    tree_results[tree_idx] = Some(t);
+                match h.join() {
+                    Ok(batch) => {
+                        for (tree_idx, t) in batch {
+                            tree_results[tree_idx] = Some(t);
+                        }
+                    }
+                    // Re-throw on the caller's thread so the quarantine
+                    // boundary above converts it to Error::Internal.
+                    Err(payload) => std::panic::resume_unwind(payload),
                 }
             }
         });
         let mut trees = Vec::with_capacity(self.n_trees);
         for t in tree_results {
-            trees.push(t.expect("tree slot unfilled")?);
+            trees.push(t.ok_or_else(|| {
+                Error::Internal("forest.train: tree slot left unfilled by a worker shard".into())
+            })??);
         }
         Ok(ForestModel { trees, n_classes })
     }
@@ -148,21 +160,23 @@ impl ForestModel {
 
     /// Soft voting: mean of per-tree class probabilities.
     pub fn predict_proba(&self, _ctx: &Context, x: &DenseTable<f64>) -> Result<DenseTable<f64>> {
-        let mut out = DenseTable::zeros(x.rows(), self.n_classes);
-        let inv = 1.0 / self.trees.len() as f64;
-        for i in 0..x.rows() {
-            let row = x.row(i);
-            let orow = out.row_mut(i);
-            for t in &self.trees {
-                for (o, &p) in orow.iter_mut().zip(t.predict_proba_row(row)) {
-                    *o += p;
+        crate::parallel::quarantine("forest.predict_proba", || {
+            let mut out = DenseTable::zeros(x.rows(), self.n_classes);
+            let inv = 1.0 / self.trees.len() as f64;
+            for i in 0..x.rows() {
+                let row = x.row(i);
+                let orow = out.row_mut(i);
+                for t in &self.trees {
+                    for (o, &p) in orow.iter_mut().zip(t.predict_proba_row(row)) {
+                        *o += p;
+                    }
+                }
+                for o in orow.iter_mut() {
+                    *o *= inv;
                 }
             }
-            for o in orow.iter_mut() {
-                *o *= inv;
-            }
-        }
-        Ok(out)
+            Ok(out)
+        })
     }
 
     pub fn infer(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<Vec<f64>> {

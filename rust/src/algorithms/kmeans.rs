@@ -23,7 +23,7 @@
 //! fall back to the vectorized sparse path for CSR inputs.
 
 use crate::blas::sqdist;
-use crate::coordinator::{batch, Backend, Context};
+use crate::coordinator::{batch, Backend, Context, ConvergenceStatus};
 use crate::error::{Error, Result};
 use crate::parallel;
 use crate::primitives::distances;
@@ -66,6 +66,11 @@ pub struct KMeansModel {
     pub centroids: DenseTable<f64>,
     pub inertia: f64,
     pub iterations: usize,
+    /// How training ended: tolerance met (`Converged`), `max_iter` or a
+    /// budget iteration cap exhausted (`IterLimit`), or the context's
+    /// wall-time deadline expired (`DeadlineExceeded`). The centroids
+    /// are the last completed Lloyd iterate in every case.
+    pub status: ConvergenceStatus,
 }
 
 /// One kmeans++ draw from the D² distribution (uniform fallback when
@@ -182,7 +187,11 @@ impl KMeansParams {
         x: impl Into<TableRef<'a>>,
         e: &mut dyn Engine,
     ) -> Result<KMeansModel> {
-        match x.into() {
+        let x = x.into();
+        crate::validate::non_empty(x.rows(), x.cols(), "kmeans")?;
+        crate::validate::k_in_range(self.k, x.rows(), "k", "kmeans")?;
+        crate::validate::non_negative_finite(self.tol, "tol", "kmeans")?;
+        parallel::quarantine("kmeans.train", || match x {
             TableRef::Dense(d) => self.train_dense(ctx, d, e),
             TableRef::Csr(s) => {
                 if matches!(ctx.backend(), Backend::Naive) {
@@ -192,7 +201,7 @@ impl KMeansParams {
                     self.train_csr(ctx, s, e)
                 }
             }
-        }
+        })
     }
 
     fn train_dense(
@@ -206,7 +215,14 @@ impl KMeansParams {
         let mut assign = vec![0usize; n];
         let mut inertia = f64::INFINITY;
         let mut iterations = 0;
+        let mut status = ConvergenceStatus::IterLimit;
+        let mut meter = ctx.budget().meter();
         for it in 0..self.max_iter {
+            if let Some(expired) = meter.check_before_iter() {
+                // Budget spent: return the last completed Lloyd iterate.
+                status = expired;
+                break;
+            }
             iterations = it + 1;
             let new_inertia = assign_step(ctx, x, &centroids, &mut assign)?;
             // Update step: mean of assigned points per cluster,
@@ -216,11 +232,12 @@ impl KMeansParams {
             apply_centroid_means(&mut centroids, &counts, &sums);
             if inertia.is_finite() && (inertia - new_inertia).abs() <= self.tol * inertia.max(1.0) {
                 inertia = new_inertia;
+                status = ConvergenceStatus::Converged;
                 break;
             }
             inertia = new_inertia;
         }
-        Ok(KMeansModel { centroids, inertia, iterations })
+        Ok(KMeansModel { centroids, inertia, iterations, status })
     }
 
     /// CSR training loop: the same Lloyd iteration, with the
@@ -241,7 +258,14 @@ impl KMeansParams {
         let mut assign = vec![0usize; n];
         let mut inertia = f64::INFINITY;
         let mut iterations = 0;
+        let mut status = ConvergenceStatus::IterLimit;
+        let mut meter = ctx.budget().meter();
         for it in 0..self.max_iter {
+            if let Some(expired) = meter.check_before_iter() {
+                // Budget spent: return the last completed Lloyd iterate.
+                status = expired;
+                break;
+            }
             iterations = it + 1;
             let corpus = distances::CsrCorpus::from_dense(&centroids, ctx.threads());
             let new_inertia =
@@ -250,11 +274,12 @@ impl KMeansParams {
             apply_centroid_means(&mut centroids, &counts, &sums);
             if inertia.is_finite() && (inertia - new_inertia).abs() <= self.tol * inertia.max(1.0) {
                 inertia = new_inertia;
+                status = ConvergenceStatus::Converged;
                 break;
             }
             inertia = new_inertia;
         }
-        Ok(KMeansModel { centroids, inertia, iterations })
+        Ok(KMeansModel { centroids, inertia, iterations, status })
     }
 
     /// Centroid seeding for CSR inputs — the same strategies as the
@@ -308,7 +333,9 @@ impl KMeansParams {
 impl KMeansModel {
     /// Assign each row of `x` (either layout) to its nearest centroid.
     pub fn infer<'a>(&self, ctx: &Context, x: impl Into<TableRef<'a>>) -> Result<Vec<usize>> {
-        match x.into() {
+        let x = x.into();
+        crate::validate::dims_match(self.centroids.cols(), x.cols(), "kmeans")?;
+        parallel::quarantine("kmeans.infer", || match x {
             TableRef::Dense(d) => {
                 let mut assign = vec![0usize; d.rows()];
                 assign_step(ctx, d, &self.centroids, &mut assign)?;
@@ -330,7 +357,7 @@ impl KMeansModel {
                 distances::argmin_assign_csr(s, &corpus, predicated, &mut assign, ctx.threads());
                 Ok(assign)
             }
-        }
+        })
     }
 }
 

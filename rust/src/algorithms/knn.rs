@@ -20,9 +20,10 @@
 
 use crate::blas::sqdist;
 use crate::coordinator::{Backend, Context};
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::primitives::distances::{self, CsrCorpus};
 use crate::tables::{DenseTable, Table, TableRef};
+use crate::validate;
 
 /// Parameters (oneDAL `kdtree_knn_classification`-style, brute force).
 #[derive(Clone, Debug)]
@@ -61,12 +62,9 @@ impl KnnParams {
         y: &[f64],
     ) -> Result<KnnModel> {
         let x = x.into();
-        if x.rows() != y.len() {
-            return Err(Error::Shape("knn: label count mismatch".into()));
-        }
-        if self.k == 0 || self.k > x.rows() {
-            return Err(Error::Param(format!("knn: k={} out of range", self.k)));
-        }
+        validate::non_empty(x.rows(), x.cols(), "knn")?;
+        validate::labels_match(x.rows(), y.len(), "knn")?;
+        validate::k_in_range(self.k, x.rows(), "k", "knn")?;
         let classes = y.iter().fold(0.0f64, |a, &b| a.max(b)) as usize + 1;
         Ok(KnnModel { k: self.k, x: x.to_table(), y: y.to_vec(), classes })
     }
@@ -85,8 +83,13 @@ impl KnnModel {
             for &(idx, _) in row {
                 votes[self.y[idx] as usize] += 1;
             }
-            let best =
-                votes.iter().enumerate().max_by_key(|&(i, &v)| (v, usize::MAX - i)).unwrap().0;
+            // Majority vote, ties to the lower class id. `classes >= 1`
+            // always (labels exist), so the fold yields a real argmax.
+            let best = votes
+                .iter()
+                .enumerate()
+                .fold((0usize, 0usize), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc })
+                .0;
             out.push(best as f64);
         }
         Ok(out)
@@ -99,13 +102,11 @@ impl KnnModel {
         q: impl Into<TableRef<'a>>,
     ) -> Result<Vec<Vec<(usize, f64)>>> {
         let q = q.into();
-        if q.cols() != self.x.cols() {
-            return Err(Error::Shape("knn: query dim mismatch".into()));
-        }
+        validate::dims_match(self.x.cols(), q.cols(), "knn")?;
         let dims = [q.rows().min(256), self.x.rows(), q.cols()];
         let naive = matches!(ctx.dispatch("pairwise_sqdist", &dims), Backend::Naive);
         let t = ctx.threads();
-        Ok(match (self.x.view(), q) {
+        crate::parallel::quarantine("knn.kneighbors", || Ok(match (self.x.view(), q) {
             (TableRef::Dense(x), TableRef::Dense(qd)) => {
                 if naive {
                     kneighbors_naive(x, qd, self.k)
@@ -134,7 +135,7 @@ impl KnnModel {
                     }
                 }
             }
-        })
+        }))
     }
 
     /// Fused-engine rung: the training corpus is packed **once per

@@ -71,16 +71,13 @@ impl LinRegParams {
         let x = x.into();
         let n = x.rows();
         let p = x.cols();
-        if y.len() != n {
-            return Err(Error::Shape("linreg: label count mismatch".into()));
-        }
+        crate::validate::non_empty(n, p, "linreg")?;
+        crate::validate::labels_match(n, y.len(), "linreg")?;
+        crate::validate::non_negative_finite(self.alpha, "alpha", "linreg")?;
         if n <= p {
             return Err(Error::Param(format!("linreg: need n > p (n={n}, p={p})")));
         }
-        if self.alpha < 0.0 {
-            return Err(Error::Param("linreg: alpha must be ≥ 0".into()));
-        }
-        match x {
+        crate::parallel::quarantine("linreg.train", || match x {
             TableRef::Dense(d) => self.train_dense(ctx, d, y),
             TableRef::Csr(s) => {
                 if matches!(ctx.backend(), Backend::Naive) {
@@ -90,7 +87,7 @@ impl LinRegParams {
                     self.train_csr(ctx, s, y)
                 }
             }
-        }
+        })
     }
 
     fn train_dense(&self, ctx: &Context, x: &DenseTable<f64>, y: &[f64]) -> Result<LinRegModel> {
@@ -220,21 +217,22 @@ impl LinRegModel {
     /// row-partitioned on the context's worker count.
     pub fn infer<'a>(&self, ctx: &Context, x: impl Into<TableRef<'a>>) -> Result<Vec<f64>> {
         let x = x.into();
-        if x.cols() != self.coef.len() {
-            return Err(Error::Shape("linreg: dim mismatch".into()));
-        }
-        let mut out = vec![self.intercept; x.rows()];
-        match x {
-            TableRef::Dense(d) => {
-                let (n, p) = (d.rows(), d.cols());
-                gemv_threads(false, n, p, 1.0, d.data(), &self.coef, 1.0, &mut out, ctx.threads());
+        crate::validate::dims_match(self.coef.len(), x.cols(), "linreg")?;
+        crate::parallel::quarantine("linreg.infer", || {
+            let mut out = vec![self.intercept; x.rows()];
+            match x {
+                TableRef::Dense(d) => {
+                    let (n, p) = (d.rows(), d.cols());
+                    let w = &self.coef;
+                    gemv_threads(false, n, p, 1.0, d.data(), w, 1.0, &mut out, ctx.threads());
+                }
+                TableRef::Csr(s) => {
+                    let t = ctx.threads();
+                    csrmv_threads(SparseOp::NoTranspose, 1.0, s, &self.coef, 1.0, &mut out, t)?;
+                }
             }
-            TableRef::Csr(s) => {
-                let t = ctx.threads();
-                csrmv_threads(SparseOp::NoTranspose, 1.0, s, &self.coef, 1.0, &mut out, t)?;
-            }
-        }
-        Ok(out)
+            Ok(out)
+        })
     }
 }
 

@@ -16,10 +16,12 @@
 //! and falls back to the sparse batched path.
 
 use crate::blas::{axpy, dot, gemv_threads};
-use crate::coordinator::{batch, Backend, Context};
+use crate::coordinator::{batch, Backend, BudgetMeter, Context, ConvergenceStatus};
 use crate::error::{Error, Result};
+use crate::parallel;
 use crate::sparse::{csrmv_threads, CsrMatrix, SparseOp};
 use crate::tables::{DenseTable, TableRef};
+use crate::validate;
 
 #[derive(Clone, Debug)]
 pub struct LogRegParams {
@@ -42,6 +44,10 @@ impl LogisticRegression {
 pub struct LogRegModel {
     pub coef: Vec<f64>,
     pub intercept: f64,
+    /// `Converged` when every configured epoch ran; `IterLimit` /
+    /// `DeadlineExceeded` when the context's budget cut the epoch loop
+    /// short (the weights are the last completed epoch's iterate).
+    pub status: ConvergenceStatus,
 }
 
 #[inline]
@@ -84,39 +90,55 @@ impl LogRegParams {
         let x = x.into();
         let n = x.rows();
         let p = x.cols();
-        if y.len() != n {
-            return Err(Error::Shape("logreg: label count mismatch".into()));
-        }
+        validate::non_empty(n, p, "logreg")?;
+        validate::labels_match(n, y.len(), "logreg")?;
+        validate::positive_finite(self.lr, "lr", "logreg")?;
+        validate::non_negative_finite(self.l2, "l2", "logreg")?;
         if !y.iter().all(|&v| v == 0.0 || v == 1.0) {
             return Err(Error::Param("logreg: labels must be 0/1".into()));
         }
-        let mut w = vec![0.0f64; p];
-        let mut b = 0.0f64;
-        match x {
-            TableRef::Dense(d) => match ctx.dispatch("logreg_step", &[self.batch, p]) {
-                Backend::Naive => self.train_naive(d, y, &mut w, &mut b),
-                Backend::Artifact => self.train_artifact(ctx, d, y, &mut w, &mut b)?,
-                _ => self.train_batched(d, y, &mut w, &mut b, ctx.threads()),
-            },
-            TableRef::Csr(s) => match ctx.dispatch("logreg_step", &[self.batch, p]) {
-                // Densified naive rung — the sparse path's oracle.
-                Backend::Naive => self.train_naive(&s.to_dense(), y, &mut w, &mut b),
-                // No sparse Pallas kernel: Artifact falls back to the
-                // sparse batched path (same update cadence).
-                _ => self.train_batched_csr(s, y, &mut w, &mut b, ctx.threads())?,
-            },
-        }
-        Ok(LogRegModel { coef: w, intercept: b })
+        parallel::quarantine("logreg.train", || {
+            let mut w = vec![0.0f64; p];
+            let mut b = 0.0f64;
+            let mut meter = ctx.budget().meter();
+            let status = match x {
+                TableRef::Dense(d) => match ctx.dispatch("logreg_step", &[self.batch, p]) {
+                    Backend::Naive => self.train_naive(d, y, &mut w, &mut b, &mut meter),
+                    Backend::Artifact => {
+                        self.train_artifact(ctx, d, y, &mut w, &mut b, &mut meter)?
+                    }
+                    _ => self.train_batched(d, y, &mut w, &mut b, ctx.threads(), &mut meter),
+                },
+                TableRef::Csr(s) => match ctx.dispatch("logreg_step", &[self.batch, p]) {
+                    // Densified naive rung — the sparse path's oracle.
+                    Backend::Naive => self.train_naive(&s.to_dense(), y, &mut w, &mut b, &mut meter),
+                    // No sparse Pallas kernel: Artifact falls back to the
+                    // sparse batched path (same update cadence).
+                    _ => self.train_batched_csr(s, y, &mut w, &mut b, ctx.threads(), &mut meter)?,
+                },
+            };
+            Ok(LogRegModel { coef: w, intercept: b, status })
+        })
     }
 
     /// Naive rung: the *same* mini-batch gradient as the optimized path
     /// (so the ladder is a controlled implementation comparison), but in
     /// the stock-sklearn-on-ARM style — per-row scalar loops and fresh
     /// allocations inside the hot loop instead of batched BLAS.
-    fn train_naive(&self, x: &DenseTable<f64>, y: &[f64], w: &mut Vec<f64>, b: &mut f64) {
+    fn train_naive(
+        &self,
+        x: &DenseTable<f64>,
+        y: &[f64],
+        w: &mut Vec<f64>,
+        b: &mut f64,
+        meter: &mut BudgetMeter,
+    ) -> ConvergenceStatus {
         let n = x.rows();
         let p = x.cols();
         for _ in 0..self.epochs {
+            if let Some(expired) = meter.check_before_iter() {
+                return expired;
+            }
             for (start, len) in batch::tiles(n, self.batch) {
                 // Allocation-heavy: fresh buffers per tile (intentional).
                 let mut err: Vec<f64> = Vec::with_capacity(len);
@@ -142,6 +164,7 @@ impl LogRegParams {
                 *b -= self.lr * err.iter().sum::<f64>() * inv;
             }
         }
+        ConvergenceStatus::Converged
     }
 
     /// Vectorized rung: full mini-batch gradient with gemv, on the
@@ -153,13 +176,17 @@ impl LogRegParams {
         w: &mut Vec<f64>,
         b: &mut f64,
         threads: usize,
-    ) {
+        meter: &mut BudgetMeter,
+    ) -> ConvergenceStatus {
         let n = x.rows();
         let p = x.cols();
         let mut z = vec![0.0f64; self.batch];
         let mut err = vec![0.0f64; self.batch];
         let mut grad = vec![0.0f64; p];
         for _ in 0..self.epochs {
+            if let Some(expired) = meter.check_before_iter() {
+                return expired;
+            }
             for (start, len) in batch::tiles(n, self.batch) {
                 let xb = &x.data()[start * p..(start + len) * p];
                 // z = Xb·w + b
@@ -175,6 +202,7 @@ impl LogRegParams {
                 *b -= self.lr * err[..len].iter().sum::<f64>() / len as f64;
             }
         }
+        ConvergenceStatus::Converged
     }
 
     /// Sparse twin of [`LogRegParams::train_batched`]: identical
@@ -191,7 +219,8 @@ impl LogRegParams {
         w: &mut Vec<f64>,
         b: &mut f64,
         threads: usize,
-    ) -> Result<()> {
+        meter: &mut BudgetMeter,
+    ) -> Result<ConvergenceStatus> {
         let n = x.rows();
         let p = x.cols();
         let slices: Vec<(usize, usize, CsrMatrix<f64>)> = batch::tiles(n, self.batch)
@@ -202,6 +231,9 @@ impl LogRegParams {
         let mut err = vec![0.0f64; self.batch];
         let mut grad = vec![0.0f64; p];
         for _ in 0..self.epochs {
+            if let Some(expired) = meter.check_before_iter() {
+                return Ok(expired);
+            }
             for (start, len, xb) in &slices {
                 let (start, len) = (*start, *len);
                 // z = Xb·w
@@ -217,7 +249,7 @@ impl LogRegParams {
                 *b -= self.lr * err[..len].iter().sum::<f64>() / len as f64;
             }
         }
-        Ok(())
+        Ok(ConvergenceStatus::Converged)
     }
 
     /// Artifact rung: fused fwd+grad HLO kernel on padded f32 tiles.
@@ -228,7 +260,8 @@ impl LogRegParams {
         y: &[f64],
         w: &mut Vec<f64>,
         b: &mut f64,
-    ) -> Result<()> {
+        meter: &mut BudgetMeter,
+    ) -> Result<ConvergenceStatus> {
         let n = x.rows();
         let p = x.cols();
         // Tightest tile covering the configured mini-batch: batch size
@@ -249,6 +282,9 @@ impl LogRegParams {
         let xf: Vec<f32> = x.data().iter().map(|&v| v as f32).collect();
         let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
         for _ in 0..self.epochs {
+            if let Some(expired) = meter.check_before_iter() {
+                return Ok(expired);
+            }
             for (start, len) in batch::tiles(n, tb) {
                 let xpad = batch::pad_to(&xf[start * p..(start + len) * p], len, p, tb, tp);
                 let mut ypad = vec![0.0f32; tb];
@@ -276,7 +312,7 @@ impl LogRegParams {
                 *b -= self.lr * gb;
             }
         }
-        Ok(())
+        Ok(ConvergenceStatus::Converged)
     }
 }
 
@@ -289,10 +325,8 @@ impl LogRegModel {
         x: impl Into<TableRef<'a>>,
     ) -> Result<Vec<f64>> {
         let x = x.into();
-        if x.cols() != self.coef.len() {
-            return Err(Error::Shape("logreg: dim mismatch".into()));
-        }
-        match x {
+        validate::dims_match(self.coef.len(), x.cols(), "logreg")?;
+        parallel::quarantine("logreg.predict_proba", || match x {
             TableRef::Dense(d) => Ok((0..d.rows())
                 .map(|i| sigmoid(dot(d.row(i), &self.coef) + self.intercept))
                 .collect()),
@@ -302,7 +336,7 @@ impl LogRegModel {
                 csrmv_threads(SparseOp::NoTranspose, 1.0, s, &self.coef, 0.0, &mut z, t)?;
                 Ok(z.into_iter().map(|v| sigmoid(v + self.intercept)).collect())
             }
-        }
+        })
     }
 
     /// Hard 0/1 prediction at threshold 0.5.

@@ -3,6 +3,27 @@
 //! and implements the backend ladder (naive / reference / vectorized /
 //! artifact) so the benches can sweep exactly the comparisons the paper
 //! plots.
+//!
+//! ## Fail-safe boundary contract
+//!
+//! Every public `train`/`infer`/`predict` in this module validates its
+//! inputs **first** — shapes, label lengths, hyperparameter finiteness
+//! and ranges, via [`crate::validate`] — returning
+//! [`crate::error::Error::Shape`] / [`crate::error::Error::Param`] with
+//! the algorithm name and offending value, so the deep kernel asserts
+//! are unreachable from the public API. The compute body then runs
+//! inside [`crate::parallel::quarantine`]: a panic escaping any
+//! algorithm call (fault injection, a latent kernel bug) surfaces as
+//! [`crate::error::Error::Internal`] tagged with the fan-out site
+//! instead of aborting the process, and the worker pool respawns
+//! panicked workers on the next batch. Iterative trainers (k-means,
+//! logreg, SVM, PCA's Jacobi sweeps) additionally draw a
+//! [`crate::coordinator::BudgetMeter`] from the context's
+//! [`crate::coordinator::Budget`] and check it at outer-iteration
+//! boundaries only — on expiry they return the best-so-far model tagged
+//! with a [`crate::coordinator::ConvergenceStatus`] instead of erroring,
+//! and an unlimited budget never reads the clock, keeping uncapped runs
+//! bit-identical.
 
 pub mod covariance;
 pub mod dbscan;

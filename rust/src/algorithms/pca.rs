@@ -2,10 +2,11 @@
 //! the VSL `xcp` kernel + the Jacobi eigensolver — one of the algorithms
 //! the paper lists as enabled by the sparse/VSL substrates.
 
-use crate::coordinator::Context;
+use crate::coordinator::{Context, ConvergenceStatus};
 use crate::error::{Error, Result};
-use crate::linalg::jacobi_eigen;
+use crate::linalg::jacobi_eigen_budgeted;
 use crate::tables::DenseTable;
+use crate::validate;
 use crate::vsl::XcpState;
 
 #[derive(Clone, Debug)]
@@ -29,6 +30,11 @@ pub struct PcaModel {
     pub components: DenseTable<f64>,
     pub explained_variance: Vec<f64>,
     pub means: Vec<f64>,
+    /// Outcome of the Jacobi eigensolve: `Converged` normally;
+    /// `IterLimit` / `DeadlineExceeded` when the context's budget cut
+    /// the sweeps short (the loadings are the partially diagonalized
+    /// iterate — still orthonormal, approximately principal).
+    pub status: ConvergenceStatus,
 }
 
 impl PcaParams {
@@ -45,6 +51,7 @@ impl PcaParams {
     /// Train on an `n×p` observations-in-rows table.
     pub fn train(&self, ctx: &Context, x: &DenseTable<f64>) -> Result<PcaModel> {
         let p = x.cols();
+        validate::non_empty(x.rows(), p, "pca")?;
         if self.n_components == 0 || self.n_components > p {
             return Err(Error::Param(format!(
                 "pca: n_components={} out of 1..={p}",
@@ -54,19 +61,23 @@ impl PcaParams {
         if x.rows() < 2 {
             return Err(Error::Param("pca: need ≥ 2 observations".into()));
         }
-        let mut st = XcpState::new(p);
-        st.update_threads(&x.transposed(), ctx.threads())?;
-        let mat = if self.correlation { st.correlation()? } else { st.covariance()? };
-        let (vals, vecs) = jacobi_eigen(mat.data(), p)?;
-        let mut comp = DenseTable::zeros(self.n_components, p);
-        for c in 0..self.n_components {
-            comp.row_mut(c).copy_from_slice(&vecs[c * p..(c + 1) * p]);
-        }
-        let means = st.sum().iter().map(|&s| s / st.n() as f64).collect();
-        Ok(PcaModel {
-            components: comp,
-            explained_variance: vals[..self.n_components].to_vec(),
-            means,
+        crate::parallel::quarantine("pca.train", || {
+            let mut st = XcpState::new(p);
+            st.update_threads(&x.transposed(), ctx.threads())?;
+            let mat = if self.correlation { st.correlation()? } else { st.covariance()? };
+            let mut meter = ctx.budget().meter();
+            let (vals, vecs, status) = jacobi_eigen_budgeted(mat.data(), p, &mut meter)?;
+            let mut comp = DenseTable::zeros(self.n_components, p);
+            for c in 0..self.n_components {
+                comp.row_mut(c).copy_from_slice(&vecs[c * p..(c + 1) * p]);
+            }
+            let means = st.sum().iter().map(|&s| s / st.n() as f64).collect();
+            Ok(PcaModel {
+                components: comp,
+                explained_variance: vals[..self.n_components].to_vec(),
+                means,
+                status,
+            })
         })
     }
 }
@@ -75,9 +86,7 @@ impl PcaModel {
     /// Project rows of `x` onto the principal components.
     pub fn transform(&self, _ctx: &Context, x: &DenseTable<f64>) -> Result<DenseTable<f64>> {
         let p = self.components.cols();
-        if x.cols() != p {
-            return Err(Error::Shape("pca: dim mismatch".into()));
-        }
+        validate::dims_match(p, x.cols(), "pca")?;
         let k = self.components.rows();
         let mut out = DenseTable::zeros(x.rows(), k);
         let mut centered = vec![0.0f64; p];

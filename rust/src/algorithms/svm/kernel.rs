@@ -160,8 +160,10 @@ impl SvmKernel {
         debug_assert_eq!(out.len(), w.rows() * na);
         match *self {
             SvmKernel::Linear => {
-                csrmm_threads(SparseOp::NoTranspose, 1.0, w, bt, na, 0.0, out, threads)
-                    .expect("gram_tile_csr: shapes consistent");
+                if csrmm_threads(SparseOp::NoTranspose, 1.0, w, bt, na, 0.0, out, threads).is_err()
+                {
+                    unreachable!("gram_tile_csr: shapes checked by the debug asserts above");
+                }
             }
             SvmKernel::Rbf { gamma } => {
                 distances::rbf_gram_csr(w, w_norms, p_norms, bt, gamma, out, threads);
@@ -255,7 +257,9 @@ impl TileCache {
         keys.iter()
             .map(|k| {
                 self.refresh(*k);
-                self.rows.get(k).expect("row present after fetch").clone()
+                // Every key was either cached or inserted just above;
+                // the empty-row default is unreachable.
+                self.rows.get(k).cloned().unwrap_or_default()
             })
             .collect()
     }
@@ -266,7 +270,8 @@ impl TileCache {
     fn insert(&mut self, key: usize, row: Arc<Vec<f64>>, pinned: &[usize]) {
         let mut scanned = 0;
         while self.rows.len() >= self.capacity && scanned < self.order.len() {
-            let candidate = self.order.pop_front().expect("order tracks rows");
+            let Some(candidate) = self.order.pop_front() else { break };
+            crate::failpoint::check(crate::failpoint::SITE_TILE_CACHE_EVICT);
             if pinned.contains(&candidate) {
                 self.order.push_back(candidate);
                 scanned += 1;
@@ -348,14 +353,14 @@ impl RowCache {
         n: usize,
         compute: F,
     ) -> std::sync::Arc<Vec<f64>> {
-        if self.rows.contains_key(&i) {
+        if let Some(row) = self.rows.get(&i).cloned() {
             self.hits += 1;
             // refresh LRU position
             if let Some(pos) = self.order.iter().position(|&k| k == i) {
                 self.order.remove(pos);
             }
             self.order.push_back(i);
-            return self.rows.get(&i).unwrap().clone();
+            return row;
         }
         self.misses += 1;
         let mut buf = vec![0.0f64; n];

@@ -17,7 +17,7 @@ use super::kernel::{SvmKernel, TileCache};
 use super::simd::{self, WssExtrema};
 use super::wss::{self, LOW, SIGN_ANY, SIGN_NEG, SIGN_POS, UP};
 use crate::blas::{dot, pack_b_panels, PackedB, Transpose};
-use crate::coordinator::{batch, Backend, Context};
+use crate::coordinator::{batch, Backend, BudgetMeter, Context, ConvergenceStatus};
 use crate::error::{Error, Result};
 use crate::primitives::distances;
 use crate::sparse::{csrmm_threads, CsrMatrix, SparseOp};
@@ -105,6 +105,12 @@ pub struct SvcModel {
     pub kernel: SvmKernel,
     pub iterations: usize,
     pub stats: TrainStats,
+    /// `Converged` when the full-set optimality certificate held (or
+    /// the solver went numerically stuck at an eps-optimal point);
+    /// `IterLimit` / `DeadlineExceeded` when `max_iter` or the
+    /// context's budget stopped training first — the model is then the
+    /// last completed iterate (bias reconstructed over the full set).
+    pub status: ConvergenceStatus,
 }
 
 /// Solver state shared by both methods (full-length; the gradient lives
@@ -333,9 +339,12 @@ struct Engine<'a> {
     shrink_period: usize,
     since_shrink: usize,
     tau: f64,
+    meter: BudgetMeter,
+    status: ConvergenceStatus,
 }
 
 impl<'a> Engine<'a> {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         params: &'a SvmParams,
         data: TrainData<'a>,
@@ -344,6 +353,7 @@ impl<'a> Engine<'a> {
         y: Vec<f64>,
         vectorized: bool,
         threads: usize,
+        meter: BudgetMeter,
     ) -> Self {
         let n = data.rows();
         let state = SolverState::new(y, params.c);
@@ -369,7 +379,23 @@ impl<'a> Engine<'a> {
             shrink_period,
             since_shrink: 0,
             tau: f64::EPSILON.sqrt() * 1e-3,
+            meter,
+            status: ConvergenceStatus::Converged,
         }
+    }
+
+    /// Budget/max-iter gate at the top of each outer solver iteration.
+    /// `true` ⇒ stop now; `self.status` records why.
+    fn out_of_budget(&mut self) -> bool {
+        if self.stats.iterations >= self.params.max_iter {
+            self.status = ConvergenceStatus::IterLimit;
+            return true;
+        }
+        if let Some(expired) = self.meter.check_before_iter() {
+            self.status = expired;
+            return true;
+        }
+        false
     }
 
     /// Fetch gram rows (over the active set) for the active-local
@@ -515,7 +541,7 @@ impl<'a> Engine<'a> {
     /// iteration, all scans over the compacted active set.
     fn solve_boser(&mut self) {
         loop {
-            if self.stats.iterations >= self.params.max_iter {
+            if self.out_of_budget() {
                 break;
             }
             self.stats.iterations += 1;
@@ -573,7 +599,7 @@ impl<'a> Engine<'a> {
     /// Thunder method: block working sets on one cached gram tile.
     fn solve_thunder(&mut self) {
         loop {
-            if self.stats.iterations >= self.params.max_iter {
+            if self.out_of_budget() {
                 break;
             }
             self.maybe_shrink();
@@ -633,10 +659,10 @@ impl<'a> Engine<'a> {
                     self.vectorized,
                     1, // q is tiny: never fan out the inner scan
                 );
-                if -exi.gmin + res.gmax2 < self.params.eps || res.bj.is_none() {
+                if -exi.gmin + res.gmax2 < self.params.eps {
                     break;
                 }
-                let wj = res.bj.unwrap();
+                let Some(wj) = res.bj else { break };
                 let lj = ws[wj];
                 let gj = self.active.idx[lj];
                 let tau_step = self.state.apply_step(gi, gj, res.delta);
@@ -821,44 +847,50 @@ impl SvmParams {
             TableRef::Csr(s) => TrainData::Csr(s),
         };
         let n = data.rows();
-        if n != y01.len() {
-            return Err(Error::Shape("svm: label count mismatch".into()));
-        }
-        if self.c <= 0.0 {
-            return Err(Error::Param("svm: C must be > 0".into()));
+        crate::validate::non_empty(n, table.cols(), "svm")?;
+        crate::validate::labels_match(n, y01.len(), "svm")?;
+        crate::validate::positive_finite(self.c, "C", "svm")?;
+        crate::validate::positive_finite(self.eps, "eps", "svm")?;
+        if let SvmKernel::Rbf { gamma } = self.kernel {
+            crate::validate::positive_finite(gamma, "gamma", "svm")?;
         }
         let y: Vec<f64> = y01.iter().map(|&v| if v > 0.5 { 1.0 } else { -1.0 }).collect();
         if !y.iter().any(|&v| v > 0.0) || !y.iter().any(|&v| v < 0.0) {
             return Err(Error::Param("svm: need both classes present".into()));
         }
-        // The WSS implementation is the ladder's branch point (Fig. 4).
-        let vectorized = !matches!(ctx.backend(), Backend::Naive | Backend::Reference);
-        let norms = data.row_norms();
-        let diag = self.kernel.diag_from_norms(&norms);
-        let threads = ctx.threads();
-        let mut engine = Engine::new(self, data, &norms, &diag, y, vectorized, threads);
-        engine.solve();
-        // Bias: midpoint of the optimality interval, over the full
-        // (post-reconstruction) gradient.
-        let ex = simd::extrema_range(&engine.active.grad, &engine.active.flags, 0, n);
-        let bias = -(ex.gmin + ex.gmax2) / 2.0;
-        // Extract support vectors (densified for CSR training data —
-        // the support set is small and inference consumes dense rows).
-        let state = &engine.state;
-        let sv_idx: Vec<usize> = (0..n).filter(|&t| state.alpha[t] > 1e-12).collect();
-        let support_vectors = match table {
-            TableRef::Dense(d) => d.gather_rows(&sv_idx),
-            TableRef::Csr(s) => s.gather_rows_dense(&sv_idx),
-        };
-        let dual_coef: Vec<f64> = sv_idx.iter().map(|&t| state.alpha[t] * state.y[t]).collect();
-        Ok(SvcModel {
-            support_vectors,
-            support_idx: sv_idx,
-            dual_coef,
-            bias,
-            kernel: self.kernel,
-            iterations: engine.stats.iterations,
-            stats: engine.stats,
+        crate::parallel::quarantine("svm.train", || {
+            // The WSS implementation is the ladder's branch point (Fig. 4).
+            let vectorized = !matches!(ctx.backend(), Backend::Naive | Backend::Reference);
+            let norms = data.row_norms();
+            let diag = self.kernel.diag_from_norms(&norms);
+            let threads = ctx.threads();
+            let meter = ctx.budget().meter();
+            let mut engine = Engine::new(self, data, &norms, &diag, y, vectorized, threads, meter);
+            engine.solve();
+            // Bias: midpoint of the optimality interval, over the full
+            // (post-reconstruction) gradient.
+            let ex = simd::extrema_range(&engine.active.grad, &engine.active.flags, 0, n);
+            let bias = -(ex.gmin + ex.gmax2) / 2.0;
+            // Extract support vectors (densified for CSR training data —
+            // the support set is small and inference consumes dense rows).
+            let state = &engine.state;
+            let sv_idx: Vec<usize> = (0..n).filter(|&t| state.alpha[t] > 1e-12).collect();
+            let support_vectors = match table {
+                TableRef::Dense(d) => d.gather_rows(&sv_idx),
+                TableRef::Csr(s) => s.gather_rows_dense(&sv_idx),
+            };
+            let dual_coef: Vec<f64> =
+                sv_idx.iter().map(|&t| state.alpha[t] * state.y[t]).collect();
+            Ok(SvcModel {
+                support_vectors,
+                support_idx: sv_idx,
+                dual_coef,
+                bias,
+                kernel: self.kernel,
+                iterations: engine.stats.iterations,
+                stats: engine.stats,
+                status: engine.status,
+            })
         })
     }
 }
@@ -872,13 +904,11 @@ impl SvcModel {
         x: impl Into<TableRef<'a>>,
     ) -> Result<Vec<f64>> {
         let x = x.into();
-        if x.cols() != self.support_vectors.cols() {
-            return Err(Error::Shape("svm: dim mismatch".into()));
-        }
-        match x {
+        crate::validate::dims_match(self.support_vectors.cols(), x.cols(), "svm")?;
+        crate::parallel::quarantine("svm.decision_function", || match x {
             TableRef::Dense(d) => Ok(self.decision_dense(ctx, d)),
             TableRef::Csr(s) => self.decision_csr(ctx, s),
-        }
+        })
     }
 
     /// Dense queries: query rows are independent, so they fan out over

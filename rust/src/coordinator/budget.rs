@@ -1,0 +1,163 @@
+//! Deadline budgets with graceful degradation.
+//!
+//! A [`Budget`] caps a training call by wall-time and/or outer-iteration
+//! count. Iterative solvers (Lloyd rounds, logreg epochs, SVM
+//! generations, Jacobi sweeps) consume it through a per-call
+//! [`BudgetMeter`], checked **only at outer-iteration boundaries** — the
+//! points where the solver state is a complete, usable model — so on
+//! expiry training returns the best-so-far model tagged with a
+//! [`ConvergenceStatus`] instead of erroring. The iteration cap is
+//! fully deterministic; the wall-time cap is deterministic in *where*
+//! it can cut (only between iterations), though *when* it trips depends
+//! on the machine. An unlimited budget (the default) costs nothing on
+//! the hot path: no clock is read unless a deadline is set.
+
+use std::time::{Duration, Instant};
+
+/// How a budgeted training run ended — carried on every iterative
+/// model (`KMeansModel`, `LogRegModel`, `SvcModel`, `PcaModel`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvergenceStatus {
+    /// The solver met its own convergence criterion.
+    Converged,
+    /// The solver's `max_iter` (or the budget's iteration cap) ran out
+    /// before convergence; the model is the last completed iterate.
+    IterLimit,
+    /// The budget's wall-time deadline expired; the model is the last
+    /// iterate completed before the deadline.
+    DeadlineExceeded,
+}
+
+/// Resource budget for one training call, carried on the
+/// [`super::Context`]. Default: unlimited (checks compile to a pair of
+/// `None` tests — uncapped runs are bit-identical to pre-budget
+/// behavior).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Budget {
+    /// Maximum wall-time for the whole call.
+    pub max_wall_time: Option<Duration>,
+    /// Maximum outer iterations (Lloyd rounds, epochs, generations,
+    /// sweeps) across the call.
+    pub max_iters: Option<usize>,
+}
+
+impl Budget {
+    /// Unlimited budget (the default).
+    pub const UNLIMITED: Budget = Budget { max_wall_time: None, max_iters: None };
+
+    pub fn max_wall_time(mut self, d: Duration) -> Self {
+        self.max_wall_time = Some(d);
+        self
+    }
+
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = Some(n);
+        self
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.max_wall_time.is_none() && self.max_iters.is_none()
+    }
+
+    /// Start metering one training call against this budget.
+    pub fn meter(&self) -> BudgetMeter {
+        BudgetMeter {
+            // The clock is read once here and once per outer iteration —
+            // and only when a deadline is actually set.
+            deadline: self.max_wall_time.map(|d| Instant::now() + d),
+            max_iters: self.max_iters,
+            done: 0,
+        }
+    }
+}
+
+/// Per-call consumption state of a [`Budget`]. One meter per training
+/// call; solvers call [`BudgetMeter::check_before_iter`] at the top of
+/// each outer iteration.
+#[derive(Clone, Debug)]
+pub struct BudgetMeter {
+    deadline: Option<Instant>,
+    max_iters: Option<usize>,
+    done: usize,
+}
+
+impl BudgetMeter {
+    /// A meter that never expires (for internal callers without a
+    /// context).
+    pub fn unlimited() -> Self {
+        Budget::UNLIMITED.meter()
+    }
+
+    /// Outer iterations completed so far.
+    pub fn iters_done(&self) -> usize {
+        self.done
+    }
+
+    /// Call at the top of each outer iteration: `None` ⇒ proceed (and
+    /// the iteration is counted); `Some(status)` ⇒ stop now and tag the
+    /// best-so-far model with `status`. The iteration cap is checked
+    /// before the deadline so an `IterLimit` verdict is deterministic
+    /// even when both are exceeded.
+    pub fn check_before_iter(&mut self) -> Option<ConvergenceStatus> {
+        if let Some(cap) = self.max_iters {
+            if self.done >= cap {
+                return Some(ConvergenceStatus::IterLimit);
+            }
+        }
+        if let Some(deadline) = self.deadline {
+            if Instant::now() >= deadline {
+                return Some(ConvergenceStatus::DeadlineExceeded);
+            }
+        }
+        self.done += 1;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_never_expires() {
+        let mut m = BudgetMeter::unlimited();
+        for _ in 0..10_000 {
+            assert_eq!(m.check_before_iter(), None);
+        }
+        assert_eq!(m.iters_done(), 10_000);
+        assert!(Budget::default().is_unlimited());
+    }
+
+    #[test]
+    fn iter_cap_trips_deterministically() {
+        let mut m = Budget::default().max_iters(3).meter();
+        assert_eq!(m.check_before_iter(), None);
+        assert_eq!(m.check_before_iter(), None);
+        assert_eq!(m.check_before_iter(), None);
+        assert_eq!(m.check_before_iter(), Some(ConvergenceStatus::IterLimit));
+        // Expired meters stay expired.
+        assert_eq!(m.check_before_iter(), Some(ConvergenceStatus::IterLimit));
+        assert_eq!(m.iters_done(), 3);
+    }
+
+    #[test]
+    fn elapsed_deadline_trips() {
+        let mut m = Budget::default().max_wall_time(Duration::ZERO).meter();
+        assert_eq!(m.check_before_iter(), Some(ConvergenceStatus::DeadlineExceeded));
+    }
+
+    #[test]
+    fn iter_cap_wins_over_deadline() {
+        let mut m =
+            Budget::default().max_wall_time(Duration::ZERO).max_iters(0).meter();
+        assert_eq!(m.check_before_iter(), Some(ConvergenceStatus::IterLimit));
+    }
+
+    #[test]
+    fn generous_deadline_allows_iterations() {
+        let mut m = Budget::default().max_wall_time(Duration::from_secs(3600)).meter();
+        for _ in 0..100 {
+            assert_eq!(m.check_before_iter(), None);
+        }
+    }
+}

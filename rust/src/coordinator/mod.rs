@@ -24,8 +24,10 @@
 //! mirroring oneDAL's `daal::services::Environment::getCpuId` probe.
 
 pub mod batch;
+pub mod budget;
 
 pub use batch::{pad_to, PaddedBatch};
+pub use budget::{Budget, BudgetMeter, ConvergenceStatus};
 
 use crate::error::{Error, Result};
 use crate::runtime::{ArtifactRegistry, PjRtRuntime};
@@ -72,6 +74,7 @@ pub struct Context {
     runtime: Option<Arc<PjRtRuntime>>,
     registry: ArtifactRegistry,
     threads: usize,
+    budget: Budget,
 }
 
 /// Builder for [`Context`].
@@ -79,6 +82,7 @@ pub struct ContextBuilder {
     backend: Backend,
     artifact_dir: String,
     threads: usize,
+    budget: Budget,
 }
 
 impl Default for ContextBuilder {
@@ -87,6 +91,7 @@ impl Default for ContextBuilder {
             backend: Backend::Auto,
             artifact_dir: "artifacts".into(),
             threads: crate::parallel::default_threads(),
+            budget: Budget::UNLIMITED,
         }
     }
 }
@@ -104,6 +109,13 @@ impl ContextBuilder {
 
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = n.max(1);
+        self
+    }
+
+    /// Cap training calls made with this context by wall-time and/or
+    /// outer-iteration count (see [`Budget`]). Default: unlimited.
+    pub fn budget(mut self, b: Budget) -> Self {
+        self.budget = b;
         self
     }
 
@@ -146,7 +158,13 @@ impl ContextBuilder {
         } else {
             resolved
         };
-        Ok(Context { backend: resolved, runtime, registry, threads: self.threads })
+        Ok(Context {
+            backend: resolved,
+            runtime,
+            registry,
+            threads: self.threads,
+            budget: self.budget,
+        })
     }
 }
 
@@ -173,6 +191,12 @@ impl Context {
     /// (`ONEDAL_SVE_THREADS` override, else available parallelism).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The training budget carried by this context (default unlimited).
+    /// Iterative trainers draw a fresh [`BudgetMeter`] per call.
+    pub fn budget(&self) -> Budget {
+        self.budget
     }
 
     /// PJRT runtime, present only on the artifact rung.

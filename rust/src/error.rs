@@ -5,7 +5,12 @@
 use std::fmt;
 
 /// Errors surfaced by the public API.
+///
+/// Marked `#[non_exhaustive]`: downstream matches must carry a
+/// wildcard arm, so future fault categories can be added without a
+/// breaking release.
 #[derive(Debug)]
+#[non_exhaustive]
 pub enum Error {
     /// Shape or dimension mismatch between inputs.
     Shape(String),
@@ -21,6 +26,17 @@ pub enum Error {
     Runtime(String),
     /// Requested artifact missing from the registry (run `make artifacts`).
     MissingArtifact(String),
+    /// A panic escaped an internal kernel and was quarantined at the
+    /// public boundary ([`crate::parallel::quarantine`]); carries the
+    /// fan-out site and the panic payload message.
+    Internal(String),
+    /// A [`crate::coordinator::Budget`] wall-time deadline expired in a
+    /// context where no partial result could be returned. Iterative
+    /// trainers do NOT return this — they return a best-so-far model
+    /// tagged [`crate::coordinator::ConvergenceStatus::DeadlineExceeded`].
+    DeadlineExceeded(String),
+    /// The operation was cancelled before producing a result.
+    Cancelled(String),
 }
 
 impl fmt::Display for Error {
@@ -33,6 +49,9 @@ impl fmt::Display for Error {
             Error::Parse(s) => write!(f, "parse error: {s}"),
             Error::Runtime(s) => write!(f, "runtime error: {s}"),
             Error::MissingArtifact(s) => write!(f, "missing artifact: {s} (run `make artifacts`)"),
+            Error::Internal(s) => write!(f, "internal error: {s}"),
+            Error::DeadlineExceeded(s) => write!(f, "deadline exceeded: {s}"),
+            Error::Cancelled(s) => write!(f, "cancelled: {s}"),
         }
     }
 }
@@ -71,6 +90,20 @@ mod tests {
         assert_eq!(Error::Shape("a".into()).to_string(), "shape mismatch: a");
         assert_eq!(Error::Param("b".into()).to_string(), "invalid parameter: b");
         assert!(Error::MissingArtifact("k".into()).to_string().contains("make artifacts"));
+        assert_eq!(Error::Internal("site: boom".into()).to_string(), "internal error: site: boom");
+        assert_eq!(Error::DeadlineExceeded("x".into()).to_string(), "deadline exceeded: x");
+        assert_eq!(Error::Cancelled("y".into()).to_string(), "cancelled: y");
+    }
+
+    #[test]
+    fn new_variants_have_no_source() {
+        for e in [
+            Error::Internal("a".into()),
+            Error::DeadlineExceeded("b".into()),
+            Error::Cancelled("c".into()),
+        ] {
+            assert!(std::error::Error::source(&e).is_none());
+        }
     }
 
     #[test]

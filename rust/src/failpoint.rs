@@ -1,0 +1,179 @@
+//! Deterministic fault injection — an env-keyed failpoint registry for
+//! the chaos suite (`tests/chaos.rs`).
+//!
+//! A failpoint is a named site in the library (worker job entry, tile
+//! sweep, tile-cache eviction, CSV record parse) where a panic can be
+//! injected on demand. Arm one with
+//!
+//! ```text
+//! ONEDAL_SVE_FAILPOINT=<site>:<nth>
+//! ```
+//!
+//! (or programmatically via [`arm`]); the `nth` visit to that site —
+//! counting from 1, default 1 — panics with a recognizable message,
+//! **exactly once**. The panic is then quarantined at the public
+//! boundary into [`crate::error::Error::Internal`], so the chaos suite
+//! can assert that every site yields a typed error, the worker pool
+//! recovers to full width, and a retried call is bit-identical to an
+//! uninjected run.
+//!
+//! Cost when disarmed: one relaxed atomic load per [`check`] call —
+//! the registry holds no lock and allocates nothing unless a site is
+//! armed, so production hot paths are unaffected.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, PoisonError};
+
+/// Worker-pool job entry (remote, local, and single-job-inline paths of
+/// [`crate::parallel::WorkerPool::run_batch`]).
+pub const SITE_POOL_JOB: &str = "pool-worker-job";
+/// Per-tile body of the fused distance sweeps
+/// ([`crate::primitives::distances`], dense and CSR).
+pub const SITE_TILE_SWEEP: &str = "tile-sweep";
+/// LRU eviction branch of the SVM gram [`TileCache`]
+/// (`crate::algorithms::svm::kernel`).
+pub const SITE_TILE_CACHE_EVICT: &str = "tile-cache-evict";
+/// Per-record loop of the CSV reader ([`crate::tables::csv::parse_csv`]).
+pub const SITE_CSV_RECORD: &str = "csv-record";
+
+/// Fast gate: false ⇒ no failpoint armed ⇒ [`check`] is one relaxed
+/// load and returns immediately.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static CONFIG: Mutex<Option<Config>> = Mutex::new(None);
+static ENV_INIT: Once = Once::new();
+
+struct Config {
+    site: String,
+    nth: u64,
+    hits: u64,
+}
+
+fn lock_config() -> std::sync::MutexGuard<'static, Option<Config>> {
+    // A panic while holding the lock is the failpoint firing, not
+    // corrupted state — recover the guard.
+    CONFIG.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Arm a failpoint from a `site[:nth]` spec (`nth` counts visits from
+/// 1; omitted ⇒ 1). Replaces any previously armed site.
+pub fn arm(spec: &str) {
+    let (site, nth) = match spec.split_once(':') {
+        Some((s, n)) => (s, n.parse::<u64>().unwrap_or(1).max(1)),
+        None => (spec, 1),
+    };
+    *lock_config() = Some(Config { site: site.to_string(), nth, hits: 0 });
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm whatever failpoint is armed (no-op when none is).
+pub fn disarm() {
+    *lock_config() = None;
+    ARMED.store(false, Ordering::Release);
+}
+
+/// One-time lazy read of `ONEDAL_SVE_FAILPOINT` — called on the armed
+/// slow path and once per process from the first [`check`].
+fn env_init() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("ONEDAL_SVE_FAILPOINT") {
+            if !spec.is_empty() {
+                arm(&spec);
+            }
+        }
+    });
+}
+
+/// Visit the named failpoint site: panics iff an armed spec matches
+/// `site` and this is its `nth` visit. The armed flag clears when the
+/// failpoint fires, so a retried call runs clean.
+#[inline]
+pub fn check(site: &str) {
+    // Disarmed fast path: a single relaxed load after the one-time env
+    // probe. ENV_INIT is itself a single atomic load once initialized.
+    env_init();
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    check_slow(site);
+}
+
+#[cold]
+fn check_slow(site: &str) {
+    let mut guard = lock_config();
+    let fire = match guard.as_mut() {
+        Some(cfg) if cfg.site == site => {
+            cfg.hits += 1;
+            cfg.hits == cfg.nth
+        }
+        _ => false,
+    };
+    if fire {
+        // Fire exactly once: disarm before panicking so the in-flight
+        // batch (and any retry) completes clean.
+        *guard = None;
+        ARMED.store(false, Ordering::Release);
+        drop(guard);
+        panic!("failpoint {site} fired");
+    }
+}
+
+/// Whether any failpoint is currently armed (test observability).
+pub fn is_armed() -> bool {
+    env_init();
+    ARMED.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    // The registry is process-global; serialize the tests that touch it.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disarmed_check_is_silent() {
+        let _g = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+        disarm();
+        check(SITE_POOL_JOB);
+        check(SITE_TILE_SWEEP);
+        assert!(!is_armed());
+    }
+
+    #[test]
+    fn fires_on_nth_visit_exactly_once() {
+        let _g = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+        arm("tile-sweep:3");
+        assert!(is_armed());
+        check(SITE_TILE_SWEEP);
+        check(SITE_TILE_SWEEP);
+        let r = catch_unwind(AssertUnwindSafe(|| check(SITE_TILE_SWEEP)));
+        assert!(r.is_err(), "third visit must fire");
+        // Fired once ⇒ disarmed ⇒ later visits are clean.
+        assert!(!is_armed());
+        check(SITE_TILE_SWEEP);
+        disarm();
+    }
+
+    #[test]
+    fn other_sites_do_not_fire() {
+        let _g = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+        arm(SITE_CSV_RECORD);
+        check(SITE_POOL_JOB);
+        check(SITE_TILE_CACHE_EVICT);
+        assert!(is_armed(), "non-matching visits must not consume the failpoint");
+        let r = catch_unwind(AssertUnwindSafe(|| check(SITE_CSV_RECORD)));
+        assert!(r.is_err());
+        disarm();
+    }
+
+    #[test]
+    fn bare_site_spec_defaults_to_first_visit() {
+        let _g = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+        arm("pool-worker-job");
+        let r = catch_unwind(AssertUnwindSafe(|| check(SITE_POOL_JOB)));
+        assert!(r.is_err());
+        assert!(!is_armed());
+        disarm();
+    }
+}

@@ -45,6 +45,39 @@
 //! cargo feature; the default build is pure Rust and the artifact rung
 //! degrades gracefully to the vectorized rung.
 //!
+//! ## Error handling and fault contract
+//!
+//! The crate's robustness floor (the prerequisite for serving traffic):
+//! invalid input and internal faults surface as typed
+//! [`error::Error`]s and partial results, never aborts.
+//!
+//! * **Validated boundaries** — every public `train`/`infer`/`predict`
+//!   runs the shared [`validate`] checks (empty table, zero features,
+//!   label-length mismatch, non-finite hyperparameters, `k ≤ n`) before
+//!   touching a kernel, returning [`error::Error::Shape`] /
+//!   [`error::Error::Param`] with actionable messages. Deep kernel
+//!   asserts are therefore unreachable from the public API.
+//! * **Panic quarantine** — algorithm bodies run under
+//!   [`parallel::quarantine`]: a panic escaping any internal kernel
+//!   (including a worker-pool job) is converted into
+//!   [`error::Error::Internal`] carrying the fan-out site and the
+//!   payload message. The worker pool reaps and respawns any worker a
+//!   panic kills, so the process stays at full width.
+//! * **Deadline budgets** — a [`coordinator::Budget`] (max wall-time
+//!   and/or max outer iterations) on the [`coordinator::Context`] is
+//!   checked deterministically at outer-iteration boundaries of the
+//!   iterative solvers (Lloyd rounds, logreg epochs, SVM generations,
+//!   Jacobi sweeps). On expiry training returns the best-so-far model
+//!   tagged with [`coordinator::ConvergenceStatus::DeadlineExceeded`]
+//!   (or `IterLimit`) instead of erroring; an unlimited budget — the
+//!   default — is bit-identical to the pre-budget behavior.
+//! * **Deterministic fault injection** — `ONEDAL_SVE_FAILPOINT=site:nth`
+//!   (see [`failpoint`]) arms a named failpoint that panics on its
+//!   `nth` visit, exactly once; the chaos suite (`tests/chaos.rs`)
+//!   proves every site yields `Error::Internal`, the pool recovers, and
+//!   a retried call is bit-identical to an uninjected run. Disarmed
+//!   cost: one relaxed atomic load per site visit.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -62,6 +95,7 @@ pub mod blas;
 pub mod coordinator;
 pub mod dtype;
 pub mod error;
+pub mod failpoint;
 pub mod linalg;
 pub mod metrics;
 pub mod parallel;
@@ -71,6 +105,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sparse;
 pub mod tables;
+pub mod validate;
 pub mod vsl;
 
 /// Convenience re-exports covering the common public API surface.
@@ -84,7 +119,7 @@ pub mod prelude {
     pub use crate::algorithms::logreg::LogisticRegression;
     pub use crate::algorithms::pca::Pca;
     pub use crate::algorithms::svm::{Svc, SvmSolver};
-    pub use crate::coordinator::{Backend, Context};
+    pub use crate::coordinator::{Backend, Budget, Context, ConvergenceStatus};
     pub use crate::error::{Error, Result};
     pub use crate::rng::{Engine, Mcg59, Mt19937};
     pub use crate::sparse::CsrMatrix;

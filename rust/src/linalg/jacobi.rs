@@ -1,6 +1,7 @@
 //! Cyclic Jacobi eigensolver for symmetric matrices (LAPACK `syev`
 //! slice) — the decomposition behind PCA's correlation/covariance method.
 
+use crate::coordinator::{BudgetMeter, ConvergenceStatus};
 use crate::dtype::Float;
 use crate::error::{Error, Result};
 
@@ -9,6 +10,21 @@ use crate::error::{Error, Result};
 /// Returns `(eigenvalues, eigenvectors)` sorted by **descending**
 /// eigenvalue (PCA order); eigenvectors are rows of the returned matrix.
 pub fn jacobi_eigen<T: Float>(a_in: &[T], n: usize) -> Result<(Vec<T>, Vec<T>)> {
+    let mut meter = BudgetMeter::unlimited();
+    jacobi_eigen_budgeted(a_in, n, &mut meter).map(|(vals, vecs, _)| (vals, vecs))
+}
+
+/// [`jacobi_eigen`] under a training budget: the meter is consulted
+/// once per sweep, and on expiry the current (partially diagonalized)
+/// iterate is extracted and tagged — PCA's graceful-degradation path.
+/// The returned status is `Converged` when the off-diagonal norm met
+/// the tolerance, `IterLimit` when the sweep cap (internal or budget)
+/// ran out first, `DeadlineExceeded` on wall-time expiry.
+pub fn jacobi_eigen_budgeted<T: Float>(
+    a_in: &[T],
+    n: usize,
+    meter: &mut BudgetMeter,
+) -> Result<(Vec<T>, Vec<T>, ConvergenceStatus)> {
     if a_in.len() != n * n {
         return Err(Error::Shape(format!("jacobi: buffer {} != {n}x{n}", a_in.len())));
     }
@@ -20,6 +36,7 @@ pub fn jacobi_eigen<T: Float>(a_in: &[T], n: usize) -> Result<(Vec<T>, Vec<T>)> 
     }
     let max_sweeps = 64;
     let tol = T::EPSILON.sqrt() * T::from_f64(1e-4);
+    let mut status = ConvergenceStatus::IterLimit;
     for _sweep in 0..max_sweeps {
         // Off-diagonal Frobenius norm.
         let mut off = T::ZERO;
@@ -29,6 +46,12 @@ pub fn jacobi_eigen<T: Float>(a_in: &[T], n: usize) -> Result<(Vec<T>, Vec<T>)> 
             }
         }
         if off.sqrt() <= tol {
+            status = ConvergenceStatus::Converged;
+            break;
+        }
+        if let Some(expired) = meter.check_before_iter() {
+            // Budget spent: extract the partially diagonalized iterate.
+            status = expired;
             break;
         }
         for p in 0..n {
@@ -83,7 +106,7 @@ pub fn jacobi_eigen<T: Float>(a_in: &[T], n: usize) -> Result<(Vec<T>, Vec<T>)> 
             eigenvectors[row * n + k] = v[k * n + col];
         }
     }
-    Ok((eigenvalues, eigenvectors))
+    Ok((eigenvalues, eigenvectors, status))
 }
 
 #[cfg(test)]
@@ -177,6 +200,35 @@ mod tests {
         let (vals, _) = jacobi_eigen(&a, 8).unwrap();
         for w in vals.windows(2) {
             assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    /// A sweep-capped budget returns the partially diagonalized iterate
+    /// tagged `IterLimit`; an unlimited meter reproduces `jacobi_eigen`
+    /// bit for bit.
+    #[test]
+    fn budgeted_sweeps_degrade_gracefully() {
+        use crate::coordinator::Budget;
+        let n = 12;
+        let a = random_symmetric(9, n);
+        let mut capped = Budget::default().max_iters(1).meter();
+        let (vals, vecs, status) = jacobi_eigen_budgeted(&a, n, &mut capped).unwrap();
+        assert_eq!(status, ConvergenceStatus::IterLimit);
+        assert_eq!(vals.len(), n);
+        assert_eq!(vecs.len(), n * n);
+        // Trace is preserved by every completed sweep, so the partial
+        // iterate is still a usable spectrum estimate.
+        let trace: f64 = (0..n).map(|i| a[i * n + i]).sum();
+        assert!((vals.iter().sum::<f64>() - trace).abs() < 1e-9);
+        let mut unlimited = BudgetMeter::unlimited();
+        let (v1, e1, status) = jacobi_eigen_budgeted(&a, n, &mut unlimited).unwrap();
+        assert_eq!(status, ConvergenceStatus::Converged);
+        let (v2, e2) = jacobi_eigen(&a, n).unwrap();
+        for (u, v) in v1.iter().zip(&v2) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        for (u, v) in e1.iter().zip(&e2) {
+            assert_eq!(u.to_bits(), v.to_bits());
         }
     }
 

@@ -7,4 +7,4 @@ pub mod cholesky;
 pub mod jacobi;
 
 pub use cholesky::{cholesky_factor, cholesky_solve};
-pub use jacobi::jacobi_eigen;
+pub use jacobi::{jacobi_eigen, jacobi_eigen_budgeted};

@@ -51,10 +51,36 @@ pub use scheduler::{
     aligned_bounds, even_bounds, par_map, scope_rows, scope_rows_scoped, triangle_bounds,
 };
 
+use crate::error::{Error, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// 0 = "not resolved yet"; resolved lazily on first read.
 static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Crate-level panic quarantine: run `f`, converting any panic that
+/// escapes it — a worker-pool job, a deep kernel assert, an injected
+/// failpoint — into [`Error::Internal`] carrying the fan-out `site` and
+/// the panic payload message. Every public algorithm `train`/`infer`
+/// body runs under this guard (validation stays outside it, so typed
+/// validation errors pass through untouched), which is what makes the
+/// library's fault contract hold: internal faults surface as typed
+/// errors, never aborts.
+pub fn quarantine<T>(site: &str, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(result) => result,
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                s.to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(Error::Internal(format!("{site}: {msg}")))
+        }
+    }
+}
 
 /// Resolution rule for the process default: a positive integer in the
 /// `ONEDAL_SVE_THREADS` override wins; anything else falls back to the
@@ -108,5 +134,23 @@ mod tests {
         assert_eq!(effective_threads(8, 250, 100), 2);
         assert_eq!(effective_threads(4, 1_000_000, 100), 4);
         assert_eq!(effective_threads(0, 1_000_000, 100), 1);
+    }
+
+    #[test]
+    fn quarantine_passes_ok_and_typed_errors_through() {
+        assert_eq!(quarantine("t", || Ok(7)).unwrap(), 7);
+        let e = quarantine::<()>("t", || Err(Error::Param("bad".into()))).unwrap_err();
+        assert!(matches!(e, Error::Param(_)));
+    }
+
+    #[test]
+    fn quarantine_converts_panics_with_site_and_payload() {
+        let e = quarantine::<()>("kmeans.train", || panic!("boom {}", 3)).unwrap_err();
+        match e {
+            Error::Internal(msg) => assert_eq!(msg, "kmeans.train: boom 3"),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        let e = quarantine::<()>("s", || std::panic::panic_any(42i32)).unwrap_err();
+        assert!(e.to_string().contains("non-string panic payload"));
     }
 }

@@ -35,6 +35,7 @@
 //! bit-identical-across-worker-counts property of the panel-aligned
 //! partitioners carries over unchanged.
 
+use crate::failpoint::{self, SITE_POOL_JOB};
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -160,7 +161,9 @@ impl WorkerPool {
         })
     }
 
-    /// Workers spawned so far (grows monotonically, never shrinks).
+    /// Live workers (dead handles are pruned lazily by the next batch,
+    /// so the count can briefly include a worker that has panicked but
+    /// not yet been reaped).
     pub fn worker_count(&self) -> usize {
         self.workers.lock().unwrap_or_else(PoisonError::into_inner).len()
     }
@@ -168,13 +171,29 @@ impl WorkerPool {
     fn ensure_workers(&self, want: usize) {
         let want = want.min(self.max_workers);
         let mut ws = self.workers.lock().unwrap_or_else(PoisonError::into_inner);
+        // Reap workers killed by an escaped panic (fault injection, or a
+        // raw job bypassing the batch wrapper) so the pool respawns back
+        // to full width instead of silently narrowing for the rest of
+        // the process.
+        let mut i = 0;
+        while i < ws.len() {
+            if ws[i].is_finished() {
+                let _ = ws.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
         while ws.len() < want {
             let shared = Arc::clone(&self.shared);
-            let handle = std::thread::Builder::new()
+            let spawned = std::thread::Builder::new()
                 .name(format!("onedal-pool-{}", ws.len()))
-                .spawn(move || worker_loop(shared))
-                .expect("failed to spawn pool worker");
-            ws.push(handle);
+                .spawn(move || worker_loop(shared));
+            match spawned {
+                Ok(handle) => ws.push(handle),
+                // Resource exhaustion: run narrower — the batch still
+                // completes because the caller help-steals the surplus.
+                Err(_) => break,
+            }
         }
     }
 
@@ -187,6 +206,7 @@ impl WorkerPool {
     pub fn run_batch<'a>(&self, mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
         let Some(local) = jobs.pop() else { return };
         if jobs.is_empty() {
+            failpoint::check(SITE_POOL_JOB);
             local();
             return;
         }
@@ -198,7 +218,11 @@ impl WorkerPool {
             for job in jobs {
                 let latch = Arc::clone(&latch);
                 let wrapped: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
-                    let panic = catch_unwind(AssertUnwindSafe(job)).err();
+                    let panic = catch_unwind(AssertUnwindSafe(|| {
+                        failpoint::check(SITE_POOL_JOB);
+                        job();
+                    }))
+                    .err();
                     latch.complete(panic);
                 });
                 // SAFETY: `run_batch` does not return — not even on
@@ -215,7 +239,11 @@ impl WorkerPool {
             self.shared.ready.notify_all();
         }
         // The caller is worker zero: run its own partition, then help.
-        let local_panic = catch_unwind(AssertUnwindSafe(local)).err();
+        let local_panic = catch_unwind(AssertUnwindSafe(|| {
+            failpoint::check(SITE_POOL_JOB);
+            local();
+        }))
+        .err();
         self.help_until_done(&latch);
         let panic = latch.take_panic().or(local_panic);
         if let Some(payload) = panic {
@@ -357,6 +385,67 @@ mod tests {
             .collect();
         pool.run_batch(jobs);
         assert_eq!(total.load(Ordering::Relaxed), 9);
+    }
+
+    /// A worker killed by a panic that escapes the batch wrapper (the
+    /// quarantine bypass only raw queue jobs can hit) is reaped and
+    /// replaced by the next batch, and results after the respawn match
+    /// a fresh pool bit for bit.
+    #[test]
+    fn dead_worker_is_replaced_at_next_batch() {
+        let pool = WorkerPool::new(2);
+        // Grow to full width first.
+        pool.run_batch((0..3).map(|_| boxed(|| {})).collect());
+        let width = pool.worker_count();
+        assert!(width >= 1);
+        // Kill every worker with raw, unwrapped panicking jobs.
+        {
+            let mut q = pool.shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            for _ in 0..width {
+                q.jobs.push_back(Box::new(|| panic!("raw job panic")) as Job);
+            }
+            pool.shared.ready.notify_all();
+        }
+        // Wait for the panics to take the threads down.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let all_dead = {
+                let ws = pool.workers.lock().unwrap_or_else(PoisonError::into_inner);
+                ws.iter().all(|h| h.is_finished())
+            };
+            if all_dead {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "workers never died");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // The next batch reaps the corpses, respawns to full width and
+        // completes normally.
+        let sum = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..3)
+            .map(|w| {
+                let sum = &sum;
+                boxed(move || {
+                    sum.fetch_add(w + 1, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        pool.run_batch(jobs);
+        assert_eq!(sum.load(Ordering::Relaxed), 6);
+        assert_eq!(pool.worker_count(), width, "pool must be back at full width");
+        let fresh = WorkerPool::new(2);
+        let a = AtomicUsize::new(0);
+        fresh.run_batch(
+            (0..3)
+                .map(|w| {
+                    let a = &a;
+                    boxed(move || {
+                        a.fetch_add(w + 1, Ordering::Relaxed);
+                    })
+                })
+                .collect(),
+        );
+        assert_eq!(a.load(Ordering::Relaxed), sum.load(Ordering::Relaxed));
     }
 
     #[test]

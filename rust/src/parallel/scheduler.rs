@@ -153,7 +153,13 @@ where
         })
         .collect();
     WorkerPool::global().run_batch(jobs);
-    results.into_iter().map(|r| r.expect("pool job completed")).collect()
+    results
+        .into_iter()
+        .map(|r| match r {
+            Some(v) => v,
+            None => unreachable!("run_batch executes every job"),
+        })
+        .collect()
 }
 
 /// Pre-pool reference implementation of [`scope_rows`]: one
@@ -187,7 +193,15 @@ where
             .into_iter()
             .map(|(lo, hi, block)| s.spawn(move || f(lo, hi, block)))
             .collect();
-        handles.into_iter().map(|h| h.join().expect("parallel worker panicked")).collect()
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                // Re-throw on the caller's thread so the crate-level
+                // quarantine sees the original payload.
+                Err(payload) => std::panic::resume_unwind(payload),
+            })
+            .collect()
     })
 }
 
@@ -218,7 +232,13 @@ where
         })
         .collect();
     WorkerPool::global().run_batch(jobs);
-    results.into_iter().map(|r| r.expect("pool job completed")).collect()
+    results
+        .into_iter()
+        .map(|r| match r {
+            Some(v) => v,
+            None => unreachable!("run_batch executes every job"),
+        })
+        .collect()
 }
 
 #[cfg(test)]

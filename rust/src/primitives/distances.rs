@@ -324,6 +324,7 @@ where
         let mut cross = vec![0.0f64; TILE.min(r1 - r0) * n];
         let mut results = Vec::with_capacity((r1 - r0).div_ceil(TILE));
         for (start, len) in batch::tiles(r1 - r0, TILE) {
+            crate::failpoint::check(crate::failpoint::SITE_TILE_SWEEP);
             let g0 = r0 + start;
             let ctile = &mut cross[..len * n];
             // Inner GEMM stays single-threaded: the fan-out already
@@ -406,6 +407,7 @@ where
         let mut cross = vec![0.0f64; TILE.min(r1 - r0) * n];
         let mut results = Vec::with_capacity((r1 - r0).div_ceil(TILE));
         for (start, len) in batch::tiles(r1 - r0, TILE) {
+            crate::failpoint::check(crate::failpoint::SITE_TILE_SWEEP);
             let g0 = r0 + start;
             let ctile = &mut cross[..len * n];
             // The fan-out already happened one level up; the window
@@ -613,7 +615,10 @@ fn select_k(qn: f64, cross: &[f64], norms: &[f64], k: usize) -> Vec<(usize, f64)
                 if best.len() > k {
                     best.pop();
                 }
-                worst = best.last().expect("k >= 1 candidates").1;
+                // `best` is nonempty right after the insert (k ≥ 1).
+                if let Some(&(_, w)) = best.last() {
+                    worst = w;
+                }
             }
         }
         base += len;
@@ -838,8 +843,9 @@ pub fn rbf_gram_csr(
     if m == 0 || n == 0 {
         return;
     }
-    csrmm_threads(SparseOp::NoTranspose, 1.0, w, bt, n, 0.0, out, threads)
-        .expect("rbf_gram_csr: shapes consistent");
+    if csrmm_threads(SparseOp::NoTranspose, 1.0, w, bt, n, 0.0, out, threads).is_err() {
+        unreachable!("rbf_gram_csr: shapes checked by the debug asserts above");
+    }
     let workers = parallel::effective_threads(threads, m.saturating_mul(n), RBF_MIN_FLOP);
     let bounds = parallel::even_bounds(m, workers);
     parallel::scope_rows(out, n, &bounds, |r0, _r1, block| {

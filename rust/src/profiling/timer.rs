@@ -1,7 +1,7 @@
 //! Scoped wall-clock timers and a lightweight stage-metrics registry.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 /// RAII timer that records its elapsed time into [`Metrics`] on drop.
@@ -41,7 +41,7 @@ impl Metrics {
     }
 
     pub fn record(&self, label: &'static str, d: Duration) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
         let e = m.entry(label).or_insert((Duration::ZERO, 0));
         e.0 += d;
         e.1 += 1;
@@ -51,14 +51,14 @@ impl Metrics {
     pub fn snapshot(&self) -> Vec<(&'static str, Duration, u64)> {
         self.inner
             .lock()
-            .unwrap()
+            .unwrap_or_else(PoisonError::into_inner)
             .iter()
             .map(|(k, (d, c))| (*k, *d, *c))
             .collect()
     }
 
     pub fn reset(&self) {
-        self.inner.lock().unwrap().clear();
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).clear();
     }
 
     /// Render a report table (used by `onedal-sve metrics` and examples).

@@ -82,7 +82,7 @@ impl<T: Float> CsrMatrix<T> {
         if self.row_ptr[0] != off {
             return Err(Error::Shape(format!("row_ptr[0] = {} != base {off}", self.row_ptr[0])));
         }
-        if *self.row_ptr.last().unwrap() - off != self.values.len() as i64 {
+        if self.row_ptr[self.rows] - off != self.values.len() as i64 {
             return Err(Error::Shape("row_ptr[rows] does not match nnz".into()));
         }
         for w in self.row_ptr.windows(2) {

@@ -25,7 +25,15 @@ impl Default for CsvOptions {
 }
 
 /// Parse CSV text into a table.
+///
+/// Runs under the crate's panic quarantine: a panic escaping the parse
+/// loop (fault injection via the `csv-record` failpoint, or a latent
+/// bug) surfaces as [`Error::Internal`] instead of aborting the caller.
 pub fn parse_csv<T: Float>(text: &str, opts: &CsvOptions) -> Result<DenseTable<T>> {
+    crate::parallel::quarantine("csv.parse", || parse_csv_inner(text, opts))
+}
+
+fn parse_csv_inner<T: Float>(text: &str, opts: &CsvOptions) -> Result<DenseTable<T>> {
     let mut data: Vec<T> = Vec::new();
     let mut cols = 0usize;
     let mut rows = 0usize;
@@ -44,13 +52,16 @@ pub fn parse_csv<T: Float>(text: &str, opts: &CsvOptions) -> Result<DenseTable<T
             skipped_header = true;
             continue;
         }
+        crate::failpoint::check(crate::failpoint::SITE_CSV_RECORD);
         let mut count = 0usize;
-        for field in line.split(opts.delimiter) {
-            let v: f64 = field
-                .trim()
-                .trim_matches('"')
-                .parse()
-                .map_err(|_| Error::Parse(format!("line {}: bad number {field:?}", lineno + 1)))?;
+        for (col, field) in line.split(opts.delimiter).enumerate() {
+            let v: f64 = field.trim().trim_matches('"').parse().map_err(|_| {
+                Error::Parse(format!(
+                    "line {}, column {}: bad number {field:?}",
+                    lineno + 1,
+                    col + 1
+                ))
+            })?;
             data.push(T::from_f64(v));
             count += 1;
         }
@@ -63,6 +74,11 @@ pub fn parse_csv<T: Float>(text: &str, opts: &CsvOptions) -> Result<DenseTable<T
             )));
         }
         rows += 1;
+    }
+    if rows == 0 {
+        return Err(Error::Parse(
+            "empty input: no data rows (only blank/comment/header lines)".into(),
+        ));
     }
     DenseTable::from_vec(data, rows, cols)
 }
@@ -129,6 +145,50 @@ mod tests {
     fn bad_number_rejected() {
         let r: Result<DenseTable<f64>> = parse_csv("1,zzz\n", &CsvOptions::default());
         assert!(r.is_err());
+    }
+
+    /// Parse errors name both the 1-based line and column of the
+    /// offending field — the actionable-context contract.
+    #[test]
+    fn bad_number_error_carries_line_and_column() {
+        let r: Result<DenseTable<f64>> = parse_csv("1,2,3\n4,oops,6\n", &CsvOptions::default());
+        match r {
+            Err(Error::Parse(msg)) => {
+                assert!(msg.contains("line 2"), "{msg}");
+                assert!(msg.contains("column 2"), "{msg}");
+                assert!(msg.contains("oops"), "{msg}");
+            }
+            other => panic!("expected Error::Parse, got {other:?}"),
+        }
+    }
+
+    /// Ragged rows report the line and both field counts.
+    #[test]
+    fn ragged_row_error_carries_line() {
+        let r: Result<DenseTable<f64>> = parse_csv("1,2,3\n4,5\n", &CsvOptions::default());
+        match r {
+            Err(Error::Parse(msg)) => {
+                assert!(msg.contains("line 2"), "{msg}");
+                assert!(msg.contains("2 fields"), "{msg}");
+                assert!(msg.contains("expected 3"), "{msg}");
+            }
+            other => panic!("expected Error::Parse, got {other:?}"),
+        }
+    }
+
+    /// Inputs with no data rows are a typed parse error, not a silent
+    /// 0×0 table that algorithms would then reject with a shape error
+    /// far from the real cause.
+    #[test]
+    fn empty_inputs_rejected() {
+        for text in ["", "\n\n", "# only a comment\n"] {
+            let r: Result<DenseTable<f64>> = parse_csv(text, &CsvOptions::default());
+            assert!(matches!(r, Err(Error::Parse(_))), "text={text:?}");
+        }
+        // Header-only input has no data rows either.
+        let opts = CsvOptions { has_header: true, ..Default::default() };
+        let r: Result<DenseTable<f64>> = parse_csv("a,b,c\n", &opts);
+        assert!(matches!(r, Err(Error::Parse(_))));
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //! * [`make_sparse_csr`] — CSR matrices with controlled density for the
 //!   Sparse BLAS ablations (a9a/gisette-like SVM inputs).
 
+// Generators construct tables from buffers whose shapes they themselves
+// just sized, so the `from_vec`/`new` unwraps cannot fire; test-support
+// code is exempt from the crate's no-unwrap gate.
+#![allow(clippy::unwrap_used)]
+
 use super::dense::DenseTable;
 use crate::rng::{Distribution, Engine, Gaussian, Uniform, UniformInt};
 use crate::sparse::CsrMatrix;

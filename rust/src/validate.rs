@@ -1,0 +1,155 @@
+//! Shared boundary validation for the public algorithm API.
+//!
+//! Every public `train`/`infer`/`predict` in [`crate::algorithms`] (and
+//! the VSL / distance-primitive entry points) runs these checks **before
+//! touching a kernel**, so malformed input surfaces as a typed
+//! [`Error::Shape`] / [`Error::Param`] with an actionable message and
+//! the deep kernel `assert!`s become unreachable from the public API.
+//!
+//! Conventions:
+//!
+//! * Every message is prefixed with the algorithm name (`"kmeans: ..."`)
+//!   so a caller holding only the error string can locate the boundary.
+//! * Non-finite hyperparameters (NaN, ±inf) are rejected explicitly —
+//!   a comparison like `eps <= 0.0` silently passes NaN, so the checks
+//!   here use `is_finite()` composed with the range test.
+//! * Helpers return `Result<()>` and are cheap (no allocation on the
+//!   success path), so boundaries can chain them with `?`.
+
+use crate::error::{Error, Result};
+
+/// Reject empty tables (0 rows) and degenerate tables (0 features).
+pub fn non_empty(rows: usize, cols: usize, algo: &str) -> Result<()> {
+    if rows == 0 {
+        return Err(Error::Shape(format!(
+            "{algo}: input table has 0 rows; provide at least one observation"
+        )));
+    }
+    if cols == 0 {
+        return Err(Error::Shape(format!(
+            "{algo}: input table has 0 features; provide at least one column"
+        )));
+    }
+    Ok(())
+}
+
+/// Require one label per row.
+pub fn labels_match(rows: usize, labels: usize, algo: &str) -> Result<()> {
+    if rows != labels {
+        return Err(Error::Shape(format!(
+            "{algo}: label count mismatch: {rows} rows but {labels} labels"
+        )));
+    }
+    Ok(())
+}
+
+/// Require a strictly positive, finite hyperparameter. NaN and ±inf are
+/// rejected (a bare `v <= 0.0` comparison lets NaN through).
+pub fn positive_finite(value: f64, name: &str, algo: &str) -> Result<()> {
+    if !value.is_finite() || value <= 0.0 {
+        return Err(Error::Param(format!(
+            "{algo}: {name} must be a positive finite number, got {value}"
+        )));
+    }
+    Ok(())
+}
+
+/// Require a non-negative, finite hyperparameter (0 allowed).
+pub fn non_negative_finite(value: f64, name: &str, algo: &str) -> Result<()> {
+    if !value.is_finite() || value < 0.0 {
+        return Err(Error::Param(format!(
+            "{algo}: {name} must be a non-negative finite number, got {value}"
+        )));
+    }
+    Ok(())
+}
+
+/// Require `1 <= k <= n` (cluster count, neighbor count, component
+/// count against the observation count).
+pub fn k_in_range(k: usize, n: usize, name: &str, algo: &str) -> Result<()> {
+    if k == 0 || k > n {
+        return Err(Error::Param(format!(
+            "{algo}: {name}={k} out of range; need 1 <= {name} <= n_rows ({n})"
+        )));
+    }
+    Ok(())
+}
+
+/// Require a query/infer table to match the trained feature width.
+pub fn dims_match(expected: usize, got: usize, algo: &str) -> Result<()> {
+    if expected != got {
+        return Err(Error::Shape(format!(
+            "{algo}: feature dim mismatch: model trained on {expected} features, input has {got}"
+        )));
+    }
+    Ok(())
+}
+
+/// Require a strictly positive integer hyperparameter.
+pub fn positive_int(value: usize, name: &str, algo: &str) -> Result<()> {
+    if value == 0 {
+        return Err(Error::Param(format!("{algo}: {name} must be >= 1, got 0")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_empty_rejects_both_axes() {
+        assert!(non_empty(10, 3, "t").is_ok());
+        let e = non_empty(0, 3, "kmeans").unwrap_err();
+        assert!(matches!(e, Error::Shape(ref m) if m.contains("kmeans") && m.contains("0 rows")));
+        let e = non_empty(10, 0, "pca").unwrap_err();
+        assert!(matches!(e, Error::Shape(ref m) if m.contains("0 features")));
+    }
+
+    #[test]
+    fn labels_match_names_both_counts() {
+        assert!(labels_match(5, 5, "t").is_ok());
+        let e = labels_match(5, 4, "svm").unwrap_err();
+        assert!(matches!(e, Error::Shape(ref m) if m.contains("5 rows") && m.contains("4 labels")));
+    }
+
+    #[test]
+    fn positive_finite_rejects_nan_inf_zero_negative() {
+        assert!(positive_finite(1e-9, "eps", "t").is_ok());
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let e = positive_finite(bad, "eps", "dbscan").unwrap_err();
+            assert!(matches!(e, Error::Param(ref m) if m.contains("dbscan: eps")));
+        }
+    }
+
+    #[test]
+    fn non_negative_finite_allows_zero() {
+        assert!(non_negative_finite(0.0, "alpha", "t").is_ok());
+        for bad in [-1e-12, f64::NAN, f64::INFINITY] {
+            assert!(non_negative_finite(bad, "alpha", "linreg").is_err());
+        }
+    }
+
+    #[test]
+    fn k_in_range_bounds() {
+        assert!(k_in_range(1, 1, "k", "t").is_ok());
+        assert!(k_in_range(0, 5, "k", "knn").is_err());
+        let e = k_in_range(6, 5, "k", "knn").unwrap_err();
+        assert!(matches!(e, Error::Param(ref m) if m.contains("k=6") && m.contains("(5)")));
+    }
+
+    #[test]
+    fn dims_match_message_names_both() {
+        assert!(dims_match(8, 8, "t").is_ok());
+        let e = dims_match(8, 7, "knn").unwrap_err();
+        assert!(
+            matches!(e, Error::Shape(ref m) if m.contains("trained on 8") && m.contains("has 7"))
+        );
+    }
+
+    #[test]
+    fn positive_int_rejects_zero() {
+        assert!(positive_int(1, "min_pts", "t").is_ok());
+        assert!(positive_int(0, "min_pts", "dbscan").is_err());
+    }
+}

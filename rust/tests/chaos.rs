@@ -1,0 +1,196 @@
+//! Chaos suite (ISSUE 6): deterministic fault injection through the
+//! `onedal_sve::failpoint` registry. For every named site the contract
+//! is the same — an injected panic surfaces at the public boundary as
+//! `Error::Internal` tagged with the fan-out site (never a hang, never
+//! a process abort), the failpoint disarms after firing exactly once,
+//! the worker pool recovers, and a retried call is **bit-identical** to
+//! an uninjected baseline run.
+
+use onedal_sve::algorithms::svm::kernel::SvmKernel;
+use onedal_sve::failpoint::{
+    self, SITE_CSV_RECORD, SITE_POOL_JOB, SITE_TILE_CACHE_EVICT, SITE_TILE_SWEEP,
+};
+use onedal_sve::prelude::*;
+use onedal_sve::tables::csv::{parse_csv, CsvOptions};
+use onedal_sve::tables::synth::{make_blobs, make_classification};
+use std::sync::{Mutex, PoisonError};
+
+/// The failpoint registry is process-global; serialize every test that
+/// arms it so a concurrently running workload cannot trip someone
+/// else's failpoint.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn ctx(threads: usize) -> Context {
+    Context::builder()
+        .artifact_dir("/nonexistent")
+        .backend(Backend::Vectorized)
+        .threads(threads)
+        .build()
+        .unwrap()
+}
+
+fn assert_internal(err: &Error, site_tag: &str) {
+    match err {
+        Error::Internal(msg) => {
+            assert!(msg.contains(site_tag), "Internal message {msg:?} lacks tag {site_tag:?}");
+            assert!(msg.contains("failpoint"), "Internal message {msg:?} lacks panic payload");
+        }
+        other => panic!("expected Error::Internal, got {other:?}"),
+    }
+}
+
+/// A panic injected into a pool worker job surfaces as
+/// `Error::Internal`, the pool recovers, and the retried training is
+/// bit-identical to the uninjected baseline — at every fan-out width.
+#[test]
+fn pool_job_panic_quarantined_and_retry_bit_identical() {
+    let _g = gate();
+    // 2000×16 with k=8 clears the distance engine's PAR_MIN_FLOP
+    // threshold (2000·8·16 = 256 000 ≥ 2·65 536), so the assignment
+    // sweep genuinely fans out through `run_batch` at threads ≥ 2.
+    let mut e = Mt19937::new(61);
+    let (x, _) = make_blobs(&mut e, 2_000, 16, 8, 1.0);
+    let params = || KMeans::params().k(8).seed(7).max_iter(4);
+    for threads in 2..=4 {
+        let c = ctx(threads);
+        let baseline = params().train(&c, &x).unwrap();
+        failpoint::arm(SITE_POOL_JOB);
+        let injected = params().train(&c, &x);
+        assert_internal(&injected.unwrap_err(), "kmeans.train");
+        assert!(!failpoint::is_armed(), "failpoint must disarm after firing once");
+        // Pool recovered: the retry completes and replays the exact bits.
+        let retry = params().train(&c, &x).unwrap();
+        assert_eq!(
+            baseline.centroids.data(),
+            retry.centroids.data(),
+            "threads={threads}: retry centroids diverge from uninjected baseline"
+        );
+        assert_eq!(baseline.inertia.to_bits(), retry.inertia.to_bits(), "threads={threads}");
+        assert_eq!(baseline.iterations, retry.iterations, "threads={threads}");
+        assert_eq!(baseline.status, retry.status, "threads={threads}");
+    }
+}
+
+/// A single-threaded context never enters the worker pool, so the
+/// pool-job site is unreachable: the armed failpoint stays armed and
+/// training succeeds untouched. (The inline fallback is part of the
+/// fault-isolation story: one worker ⇒ no fan-out ⇒ no pool exposure.)
+#[test]
+fn pool_job_site_unreachable_single_threaded() {
+    let _g = gate();
+    let mut e = Mt19937::new(62);
+    let (x, _) = make_blobs(&mut e, 2_000, 16, 8, 1.0);
+    let params = || KMeans::params().k(8).seed(7).max_iter(4);
+    let c = ctx(1);
+    let baseline = params().train(&c, &x).unwrap();
+    failpoint::arm(SITE_POOL_JOB);
+    let armed_run = params().train(&c, &x).unwrap();
+    assert!(failpoint::is_armed(), "single-threaded run must never visit the pool-job site");
+    failpoint::disarm();
+    assert_eq!(baseline.centroids.data(), armed_run.centroids.data());
+    assert_eq!(baseline.inertia.to_bits(), armed_run.inertia.to_bits());
+}
+
+/// A panic injected into the fused distance sweep's per-tile body is
+/// quarantined at the KNN boundary at every worker count (at one worker
+/// the tile loop runs inline on the caller — same contract).
+#[test]
+fn tile_sweep_panic_quarantined_in_knn() {
+    let _g = gate();
+    let mut e = Mt19937::new(63);
+    let (x, labels) = make_blobs(&mut e, 600, 8, 4, 1.0);
+    let y: Vec<f64> = labels.iter().map(|&c| c as f64).collect();
+    for threads in 1..=4 {
+        let c = ctx(threads);
+        let model = KnnClassifier::params().k(5).train(&c, &x, &y).unwrap();
+        let baseline = model.kneighbors(&c, &x).unwrap();
+        failpoint::arm(SITE_TILE_SWEEP);
+        let injected = model.kneighbors(&c, &x);
+        assert_internal(&injected.unwrap_err(), "knn.kneighbors");
+        assert!(!failpoint::is_armed());
+        let retry = model.kneighbors(&c, &x).unwrap();
+        assert_eq!(baseline, retry, "threads={threads}: retry neighbours diverge");
+    }
+}
+
+/// A panic injected into the SVM gram tile-cache eviction branch is
+/// quarantined at the `svm.train` boundary; the capacity-starved cache
+/// (`cache_bytes(1)`, floors: 2 cached rows, ws_size 4 ⇒ capacity 8
+/// rows ≪ n) guarantees the eviction path runs early in training.
+#[test]
+fn tile_cache_evict_panic_quarantined_in_svm() {
+    let _g = gate();
+    let mut e = Mt19937::new(64);
+    let (x, y) = make_classification(&mut e, 160, 6, 1.5);
+    let params = || {
+        Svc::params()
+            .kernel(SvmKernel::Rbf { gamma: 0.5 })
+            .c(1.0)
+            .cache_bytes(1)
+            .cache_rows(2)
+            .ws_size(4)
+    };
+    for threads in [1usize, 4] {
+        let c = ctx(threads);
+        let baseline = params().train(&c, &x, &y).unwrap();
+        failpoint::arm(SITE_TILE_CACHE_EVICT);
+        let injected = params().train(&c, &x, &y);
+        assert_internal(&injected.unwrap_err(), "svm.train");
+        assert!(!failpoint::is_armed());
+        let retry = params().train(&c, &x, &y).unwrap();
+        assert_eq!(baseline.support_idx, retry.support_idx, "threads={threads}");
+        let b_bits: Vec<u64> = baseline.dual_coef.iter().map(|v| v.to_bits()).collect();
+        let r_bits: Vec<u64> = retry.dual_coef.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b_bits, r_bits, "threads={threads}: retry dual coefficients diverge");
+        assert_eq!(baseline.bias.to_bits(), retry.bias.to_bits(), "threads={threads}");
+        assert_eq!(baseline.iterations, retry.iterations, "threads={threads}");
+    }
+}
+
+/// A panic injected into the CSV reader's per-record loop surfaces as
+/// `Error::Internal` from `parse_csv` (the reader runs under the same
+/// quarantine as the algorithms), and the retry parses the identical
+/// table.
+#[test]
+fn csv_record_panic_quarantined_and_retry_identical() {
+    let _g = gate();
+    let text = "1.5,2.5\n3.5,4.5\n5.5,6.5\n";
+    let opts = CsvOptions::default();
+    let baseline: DenseTable<f64> = parse_csv(text, &opts).unwrap();
+    failpoint::arm("csv-record:2");
+    let injected: Result<DenseTable<f64>> = parse_csv(text, &opts);
+    assert_internal(&injected.unwrap_err(), "csv.parse");
+    assert!(!failpoint::is_armed());
+    let retry: DenseTable<f64> = parse_csv(text, &opts).unwrap();
+    assert_eq!(baseline, retry);
+    // The nth-visit spec counts data records: ":2" fired on the second
+    // row, so a one-row input with the same spec armed never fires.
+    failpoint::arm(&format!("{SITE_CSV_RECORD}:2"));
+    let one_row: DenseTable<f64> = parse_csv("9.0,8.0\n", &opts).unwrap();
+    assert_eq!(one_row.rows(), 1);
+    assert!(failpoint::is_armed(), "second visit never happened — still armed");
+    failpoint::disarm();
+}
+
+/// Sites that are armed but never visited leave every workload
+/// untouched: arming the CSV site must not perturb a k-means training,
+/// and the registry stays armed for the site's real consumer.
+#[test]
+fn non_matching_site_does_not_perturb_other_workloads() {
+    let _g = gate();
+    let mut e = Mt19937::new(65);
+    let (x, _) = make_blobs(&mut e, 400, 6, 3, 0.8);
+    let params = || KMeans::params().k(3).seed(11).max_iter(5);
+    let c = ctx(4);
+    let baseline = params().train(&c, &x).unwrap();
+    failpoint::arm(SITE_CSV_RECORD);
+    let armed_run = params().train(&c, &x).unwrap();
+    assert!(failpoint::is_armed());
+    failpoint::disarm();
+    assert_eq!(baseline.centroids.data(), armed_run.centroids.data());
+    assert_eq!(baseline.inertia.to_bits(), armed_run.inertia.to_bits());
+}

@@ -1,0 +1,360 @@
+//! Adversarial-input suite (ISSUE 6): every public `train`/`infer`
+//! boundary must turn malformed input into a **typed error** —
+//! `Error::Shape` for wrong geometry, `Error::Param` for bad
+//! hyperparameters — and must never panic (each probe runs under
+//! `catch_unwind`). Also covers the deadline-budget contract: capped
+//! trainings return usable partial models tagged with the right
+//! `ConvergenceStatus`, and uncapped runs are bit-identical to runs
+//! with no budget on the context at all.
+
+use onedal_sve::algorithms::covariance::Covariance;
+use onedal_sve::algorithms::svm::kernel::SvmKernel;
+use onedal_sve::prelude::*;
+use onedal_sve::sparse::IndexBase;
+use onedal_sve::tables::synth::{make_blobs, make_classification, make_regression};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+fn ctx() -> Context {
+    Context::builder()
+        .artifact_dir("/nonexistent")
+        .backend(Backend::Vectorized)
+        .threads(4)
+        .build()
+        .unwrap()
+}
+
+fn budget_ctx(b: Budget) -> Context {
+    Context::builder()
+        .artifact_dir("/nonexistent")
+        .backend(Backend::Vectorized)
+        .threads(4)
+        .budget(b)
+        .build()
+        .unwrap()
+}
+
+fn csr(x: &DenseTable<f64>) -> CsrMatrix<f64> {
+    CsrMatrix::from_dense(x, 0.0, IndexBase::One)
+}
+
+/// Run `f` asserting it returns (typed result or not) without panicking.
+fn no_panic<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => v,
+        Err(_) => panic!("{label}: panicked instead of returning a typed error"),
+    }
+}
+
+fn assert_shape<T: std::fmt::Debug>(label: &str, r: Result<T>) {
+    match r {
+        Err(Error::Shape(msg)) => {
+            assert!(!msg.is_empty(), "{label}: empty Shape message");
+        }
+        other => panic!("{label}: expected Error::Shape, got {other:?}"),
+    }
+}
+
+fn assert_param<T: std::fmt::Debug>(label: &str, r: Result<T>) {
+    match r {
+        Err(Error::Param(msg)) => {
+            assert!(!msg.is_empty(), "{label}: empty Param message");
+        }
+        other => panic!("{label}: expected Error::Param, got {other:?}"),
+    }
+}
+
+/// Empty tables (0 rows) are a typed shape error at every training
+/// boundary, for both layouts where the API accepts both.
+#[test]
+fn empty_tables_rejected() {
+    let c = ctx();
+    let xd = DenseTable::<f64>::zeros(0, 3);
+    let xs = csr(&xd);
+    let y: Vec<f64> = Vec::new();
+    assert_shape("kmeans/dense", no_panic("kmeans", || KMeans::params().k(2).train(&c, &xd)));
+    assert_shape("kmeans/csr", no_panic("kmeans", || KMeans::params().k(2).train(&c, &xs)));
+    assert_shape("knn/dense", no_panic("knn", || KnnClassifier::params().train(&c, &xd, &y)));
+    assert_shape("knn/csr", no_panic("knn", || KnnClassifier::params().train(&c, &xs, &y)));
+    assert_shape("dbscan/dense", no_panic("dbscan", || Dbscan::params().train(&c, &xd)));
+    assert_shape("dbscan/csr", no_panic("dbscan", || Dbscan::params().train(&c, &xs)));
+    assert_shape("svm/dense", no_panic("svm", || Svc::params().train(&c, &xd, &y)));
+    assert_shape("svm/csr", no_panic("svm", || Svc::params().train(&c, &xs, &y)));
+    assert_shape("logreg/dense", no_panic("logreg", || {
+        LogisticRegression::params().train(&c, &xd, &y)
+    }));
+    assert_shape("logreg/csr", no_panic("logreg", || {
+        LogisticRegression::params().train(&c, &xs, &y)
+    }));
+    assert_shape("linreg/dense", no_panic("linreg", || {
+        LinearRegression::params().train(&c, &xd, &y)
+    }));
+    assert_shape("linreg/csr", no_panic("linreg", || {
+        LinearRegression::params().train(&c, &xs, &y)
+    }));
+    assert_shape("pca", no_panic("pca", || Pca::params().train(&c, &xd)));
+    assert_shape("covariance", no_panic("covariance", || Covariance::params().train(&c, &xd)));
+    assert_shape("forest", no_panic("forest", || {
+        RandomForestClassifier::params().train(&c, &xd, &y)
+    }));
+}
+
+/// Zero-feature tables are rejected the same way (0 columns, n rows).
+#[test]
+fn zero_feature_tables_rejected() {
+    let c = ctx();
+    let xd = DenseTable::<f64>::zeros(5, 0);
+    let xs = csr(&xd);
+    let y = vec![0.0; 5];
+    assert_shape("kmeans/dense", no_panic("kmeans", || KMeans::params().k(2).train(&c, &xd)));
+    assert_shape("kmeans/csr", no_panic("kmeans", || KMeans::params().k(2).train(&c, &xs)));
+    assert_shape("knn", no_panic("knn", || KnnClassifier::params().k(2).train(&c, &xd, &y)));
+    assert_shape("dbscan", no_panic("dbscan", || Dbscan::params().train(&c, &xd)));
+    assert_shape("svm", no_panic("svm", || Svc::params().train(&c, &xd, &y)));
+    assert_shape("logreg", no_panic("logreg", || {
+        LogisticRegression::params().train(&c, &xd, &y)
+    }));
+    assert_shape("linreg", no_panic("linreg", || {
+        LinearRegression::params().train(&c, &xd, &y)
+    }));
+    assert_shape("pca", no_panic("pca", || Pca::params().train(&c, &xd)));
+    assert_shape("covariance", no_panic("covariance", || Covariance::params().train(&c, &xd)));
+    assert_shape("forest", no_panic("forest", || {
+        RandomForestClassifier::params().train(&c, &xd, &y)
+    }));
+}
+
+/// A label vector whose length disagrees with the row count is a typed
+/// shape error naming both counts, never an index panic deep in a
+/// kernel.
+#[test]
+fn label_length_mismatch_rejected() {
+    let c = ctx();
+    let mut e = Mt19937::new(41);
+    let (xd, _) = make_blobs(&mut e, 10, 3, 2, 1.0);
+    let xs = csr(&xd);
+    let y_short = vec![0.0; 7];
+    assert_shape("knn/dense", no_panic("knn", || {
+        KnnClassifier::params().train(&c, &xd, &y_short)
+    }));
+    assert_shape("knn/csr", no_panic("knn", || {
+        KnnClassifier::params().train(&c, &xs, &y_short)
+    }));
+    assert_shape("svm/dense", no_panic("svm", || Svc::params().train(&c, &xd, &y_short)));
+    assert_shape("svm/csr", no_panic("svm", || Svc::params().train(&c, &xs, &y_short)));
+    assert_shape("logreg/dense", no_panic("logreg", || {
+        LogisticRegression::params().train(&c, &xd, &y_short)
+    }));
+    assert_shape("logreg/csr", no_panic("logreg", || {
+        LogisticRegression::params().train(&c, &xs, &y_short)
+    }));
+    assert_shape("linreg", no_panic("linreg", || {
+        LinearRegression::params().train(&c, &xd, &y_short)
+    }));
+    assert_shape("forest", no_panic("forest", || {
+        RandomForestClassifier::params().train(&c, &xd, &y_short)
+    }));
+}
+
+/// Non-finite and out-of-range hyperparameters are typed `Param` errors
+/// — including NaN, which a naive `v <= 0.0` guard would let through.
+#[test]
+fn bad_hyperparameters_rejected() {
+    let c = ctx();
+    let mut e = Mt19937::new(42);
+    let (xd, _) = make_blobs(&mut e, 30, 4, 3, 1.0);
+    let xs = csr(&xd);
+    let (xc, yc) = make_classification(&mut e, 30, 4, 1.0);
+    let y30 = vec![0.0; 30];
+    for bad in [f64::NAN, f64::INFINITY, -1.0] {
+        assert_param("kmeans tol/dense", no_panic("kmeans", || {
+            KMeans::params().k(3).tol(bad).train(&c, &xd)
+        }));
+        assert_param("kmeans tol/csr", no_panic("kmeans", || {
+            KMeans::params().k(3).tol(bad).train(&c, &xs)
+        }));
+        assert_param("linreg alpha", no_panic("linreg", || {
+            RidgeRegression::params().alpha(bad).train(&c, &xd, &y30)
+        }));
+        assert_param("logreg l2", no_panic("logreg", || {
+            LogisticRegression::params().l2(bad).train(&c, &xc, &yc)
+        }));
+    }
+    for bad in [f64::NAN, f64::INFINITY, 0.0, -2.0] {
+        assert_param("dbscan eps", no_panic("dbscan", || {
+            Dbscan::params().eps(bad).train(&c, &xd)
+        }));
+        assert_param("svm C", no_panic("svm", || {
+            Svc::params().c(bad).train(&c, &xc, &yc)
+        }));
+        assert_param("svm eps", no_panic("svm", || {
+            Svc::params().eps(bad).train(&c, &xc, &yc)
+        }));
+        assert_param("svm gamma", no_panic("svm", || {
+            Svc::params().kernel(SvmKernel::Rbf { gamma: bad }).train(&c, &xc, &yc)
+        }));
+        assert_param("logreg lr", no_panic("logreg", || {
+            LogisticRegression::params().lr(bad).train(&c, &xc, &yc)
+        }));
+    }
+    assert_param("dbscan min_pts", no_panic("dbscan", || {
+        Dbscan::params().min_pts(0).train(&c, &xd)
+    }));
+    assert_param("forest n_trees", no_panic("forest", || {
+        RandomForestClassifier::params().n_trees(0).train(&c, &xd, &y30)
+    }));
+    assert_param("pca n_components=0", no_panic("pca", || {
+        Pca::params().n_components(0).train(&c, &xd)
+    }));
+    assert_param("pca n_components>p", no_panic("pca", || {
+        Pca::params().n_components(5).train(&c, &xd)
+    }));
+}
+
+/// `k` out of `1..=n` (clusters, neighbours) is a typed `Param` error
+/// for both layouts.
+#[test]
+fn k_out_of_range_rejected() {
+    let c = ctx();
+    let mut e = Mt19937::new(43);
+    let (xd, labels) = make_blobs(&mut e, 12, 3, 2, 1.0);
+    let xs = csr(&xd);
+    let y: Vec<f64> = labels.iter().map(|&v| v as f64).collect();
+    for k in [0usize, 13] {
+        assert_param("kmeans/dense", no_panic("kmeans", || {
+            KMeans::params().k(k).train(&c, &xd)
+        }));
+        assert_param("kmeans/csr", no_panic("kmeans", || {
+            KMeans::params().k(k).train(&c, &xs)
+        }));
+        assert_param("knn/dense", no_panic("knn", || {
+            KnnClassifier::params().k(k).train(&c, &xd, &y)
+        }));
+        assert_param("knn/csr", no_panic("knn", || {
+            KnnClassifier::params().k(k).train(&c, &xs, &y)
+        }));
+    }
+}
+
+/// Inference against a model trained on a different feature width is a
+/// typed shape error naming both widths, for every model type.
+#[test]
+fn infer_dims_mismatch_rejected() {
+    let c = ctx();
+    let mut e = Mt19937::new(44);
+    let (x4, labels) = make_blobs(&mut e, 40, 4, 2, 1.0);
+    let y: Vec<f64> = labels.iter().map(|&v| v as f64).collect();
+    let (xc, yc) = make_classification(&mut e, 40, 4, 1.5);
+    let (xr, yr, _) = make_regression(&mut e, 40, 4, 0.1);
+    let q5 = DenseTable::<f64>::zeros(3, 5);
+
+    let km = KMeans::params().k(2).train(&c, &x4).unwrap();
+    assert_shape("kmeans.infer", no_panic("kmeans", || km.infer(&c, &q5)));
+    let knn = KnnClassifier::params().k(3).train(&c, &x4, &y).unwrap();
+    assert_shape("knn.kneighbors", no_panic("knn", || knn.kneighbors(&c, &q5)));
+    let svc = Svc::params().train(&c, &xc, &yc).unwrap();
+    assert_shape("svm.decision_function", no_panic("svm", || svc.decision_function(&c, &q5)));
+    let lr = LogisticRegression::params().epochs(2).train(&c, &xc, &yc).unwrap();
+    assert_shape("logreg.infer", no_panic("logreg", || lr.predict_proba(&c, &q5)));
+    let lin = LinearRegression::params().train(&c, &xr, &yr).unwrap();
+    assert_shape("linreg.infer", no_panic("linreg", || lin.infer(&c, &q5)));
+    let pca = Pca::params().n_components(2).train(&c, &x4).unwrap();
+    assert_shape("pca.transform", no_panic("pca", || pca.transform(&c, &q5)));
+}
+
+/// NaN feature *data* (as opposed to NaN hyperparameters) must never
+/// panic a training boundary: the call returns a typed result either
+/// way (the NaN total-order comparators of PR 5 make most trainings
+/// simply succeed).
+#[test]
+fn nan_features_never_panic() {
+    let c = ctx();
+    let mut e = Mt19937::new(45);
+    let (mut xd, labels) = make_blobs(&mut e, 60, 4, 3, 1.0);
+    xd.row_mut(7)[2] = f64::NAN;
+    xd.row_mut(31)[0] = f64::NAN;
+    let y: Vec<f64> = labels.iter().map(|&v| v as f64).collect();
+    let _ = no_panic("kmeans", || KMeans::params().k(3).train(&c, &xd));
+    let _ = no_panic("knn", || {
+        KnnClassifier::params().k(3).train(&c, &xd, &y).and_then(|m| m.infer(&c, &xd))
+    });
+    let _ = no_panic("dbscan", || Dbscan::params().eps(1.0).train(&c, &xd));
+    let _ = no_panic("pca", || Pca::params().train(&c, &xd));
+}
+
+/// A budget capped at one Lloyd round returns a usable partial k-means
+/// model tagged `IterLimit`; a zero wall-time deadline returns the
+/// seeding state tagged `DeadlineExceeded`. Both are `Ok`, never errors.
+#[test]
+fn budget_capped_kmeans_returns_partial_model() {
+    let mut e = Mt19937::new(46);
+    let (x, _) = make_blobs(&mut e, 400, 6, 4, 1.0);
+    let params = || KMeans::params().k(4).seed(9).tol(0.0).max_iter(50);
+
+    let capped = budget_ctx(Budget::default().max_iters(1));
+    let m = params().train(&capped, &x).unwrap();
+    assert_eq!(m.status, ConvergenceStatus::IterLimit);
+    assert_eq!(m.iterations, 1);
+    assert_eq!((m.centroids.rows(), m.centroids.cols()), (4, 6));
+    assert!(m.centroids.data().iter().all(|v| v.is_finite()));
+    // The partial model is usable: it assigns every point to a cluster.
+    let assign = m.infer(&capped, &x).unwrap();
+    assert!(assign.iter().all(|&a| a < 4));
+
+    let deadline = budget_ctx(Budget::default().max_wall_time(Duration::ZERO));
+    let m0 = params().train(&deadline, &x).unwrap();
+    assert_eq!(m0.status, ConvergenceStatus::DeadlineExceeded);
+    assert_eq!(m0.iterations, 0, "zero deadline must stop before the first Lloyd round");
+    assert_eq!((m0.centroids.rows(), m0.centroids.cols()), (4, 6));
+}
+
+/// A budget capped at one outer SVM iteration returns a usable partial
+/// `SvcModel` tagged `IterLimit` whose predictions are well-formed.
+#[test]
+fn budget_capped_svm_returns_partial_model() {
+    let mut e = Mt19937::new(47);
+    let (x, y) = make_classification(&mut e, 120, 5, 1.5);
+    let capped = budget_ctx(Budget::default().max_iters(1));
+    let m = Svc::params().train(&capped, &x, &y).unwrap();
+    assert_eq!(m.status, ConvergenceStatus::IterLimit);
+    let pred = m.infer(&capped, &x).unwrap();
+    assert_eq!(pred.len(), 120);
+    assert!(pred.iter().all(|&p| p == 0.0 || p == 1.0));
+
+    // An uncapped run on the same data converges normally.
+    let free = ctx();
+    let full = Svc::params().train(&free, &x, &y).unwrap();
+    assert_eq!(full.status, ConvergenceStatus::Converged);
+}
+
+/// A generous budget must not perturb training: the solver converges
+/// before the cap, the status says `Converged`, and every output bit
+/// matches a context with no budget at all (the unlimited meter never
+/// reads the clock — uncapped runs are bit-identical to pre-budget
+/// behavior).
+#[test]
+fn generous_budget_bit_identical_to_unbudgeted() {
+    let mut e = Mt19937::new(48);
+    let (x, _) = make_blobs(&mut e, 400, 6, 4, 0.8);
+    let params = || KMeans::params().k(4).seed(5);
+    let free = ctx();
+    let roomy = budget_ctx(
+        Budget::default().max_iters(10_000).max_wall_time(Duration::from_secs(3600)),
+    );
+    let a = params().train(&free, &x).unwrap();
+    let b = params().train(&roomy, &x).unwrap();
+    assert_eq!(a.status, ConvergenceStatus::Converged);
+    assert_eq!(b.status, ConvergenceStatus::Converged);
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.inertia.to_bits(), b.inertia.to_bits());
+    assert_eq!(a.centroids.data(), b.centroids.data());
+
+    let (xc, yc) = make_classification(&mut e, 120, 5, 1.5);
+    let sa = Svc::params().train(&free, &xc, &yc).unwrap();
+    let sb = Svc::params().train(&roomy, &xc, &yc).unwrap();
+    assert_eq!(sa.support_idx, sb.support_idx);
+    assert_eq!(sa.bias.to_bits(), sb.bias.to_bits());
+    let da: Vec<u64> = sa.dual_coef.iter().map(|v| v.to_bits()).collect();
+    let db: Vec<u64> = sb.dual_coef.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(da, db);
+}
