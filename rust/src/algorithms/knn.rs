@@ -65,8 +65,15 @@ impl KnnParams {
         validate::non_empty(x.rows(), x.cols(), "knn")?;
         validate::labels_match(x.rows(), y.len(), "knn")?;
         validate::k_in_range(self.k, x.rows(), "k", "knn")?;
-        let classes = y.iter().fold(0.0f64, |a, &b| a.max(b)) as usize + 1;
-        Ok(KnnModel { k: self.k, x: x.to_table(), y: y.to_vec(), classes })
+        // Lazy training does no fan-out today, but the fault contract
+        // (PAL-QUAR) is uniform: every entry-point body past validation
+        // runs quarantined, so a panic in the copy — or in whatever
+        // corpus packing lands here next — is Error::Internal, never an
+        // abort.
+        crate::parallel::quarantine("knn.train", || {
+            let classes = y.iter().fold(0.0f64, |a, &b| a.max(b)) as usize + 1;
+            Ok(KnnModel { k: self.k, x: x.to_table(), y: y.to_vec(), classes })
+        })
     }
 }
 

@@ -87,18 +87,23 @@ impl PcaModel {
     pub fn transform(&self, _ctx: &Context, x: &DenseTable<f64>) -> Result<DenseTable<f64>> {
         let p = self.components.cols();
         validate::dims_match(p, x.cols(), "pca")?;
-        let k = self.components.rows();
-        let mut out = DenseTable::zeros(x.rows(), k);
-        let mut centered = vec![0.0f64; p];
-        for i in 0..x.rows() {
-            for (c, (&v, &m)) in centered.iter_mut().zip(x.row(i).iter().zip(&self.means)) {
-                *c = v - m;
+        // Quarantined past validation (PAL-QUAR): a panic in the
+        // projection loop surfaces as Error::Internal like every other
+        // entry-point body.
+        crate::parallel::quarantine("pca.transform", || {
+            let k = self.components.rows();
+            let mut out = DenseTable::zeros(x.rows(), k);
+            let mut centered = vec![0.0f64; p];
+            for i in 0..x.rows() {
+                for (c, (&v, &m)) in centered.iter_mut().zip(x.row(i).iter().zip(&self.means)) {
+                    *c = v - m;
+                }
+                for j in 0..k {
+                    out.set(i, j, crate::blas::dot(&centered, self.components.row(j)));
+                }
             }
-            for j in 0..k {
-                out.set(i, j, crate::blas::dot(&centered, self.components.row(j)));
-            }
-        }
-        Ok(out)
+            Ok(out)
+        })
     }
 }
 

@@ -9,7 +9,7 @@ use crate::blas::{dot, gemm_prepacked_threads, gemv_threads, sqdist, PackedB, Tr
 use crate::primitives::distances;
 use crate::sparse::{csrmm_threads, CsrMatrix, SparseOp};
 use crate::tables::DenseTable;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 
 /// Kernel function.
@@ -184,10 +184,16 @@ impl SvmKernel {
 /// * [`TileCache::compact`] drops shrunk-out *columns* from every
 ///   cached row in place, so a shrink event keeps the cache warm
 ///   instead of flushing it.
+///
+/// The row store is a `BTreeMap`, not a `HashMap` (PAL-HASH,
+/// docs/INVARIANTS.md): [`TileCache::compact`] and
+/// [`TileCache::purge_missing`] *traverse* the store, and sorted-key
+/// traversal keeps those sweeps — and any future one that accumulates
+/// across rows — deterministic regardless of insertion history.
 pub struct TileCache {
     capacity: usize,
     width: usize,
-    rows: HashMap<usize, Arc<Vec<f64>>>,
+    rows: BTreeMap<usize, Arc<Vec<f64>>>,
     order: VecDeque<usize>,
     pub hits: u64,
     pub misses: u64,
@@ -200,7 +206,7 @@ impl TileCache {
         Self {
             capacity: capacity.max(2),
             width,
-            rows: HashMap::new(),
+            rows: BTreeMap::new(),
             order: VecDeque::new(),
             hits: 0,
             misses: 0,
@@ -327,9 +333,12 @@ impl TileCache {
 /// working-set amortization (§IV-E discussion of `KiBlock`). Rows are
 /// shared out as `Arc`s so the solver holds two rows (i and j) while
 /// updating the gradient without copying O(n) data per iteration.
+///
+/// The row store is a `BTreeMap` for the same PAL-HASH reason as
+/// [`TileCache`].
 pub struct RowCache {
     capacity: usize,
-    rows: HashMap<usize, std::sync::Arc<Vec<f64>>>,
+    rows: BTreeMap<usize, std::sync::Arc<Vec<f64>>>,
     order: VecDeque<usize>,
     pub hits: u64,
     pub misses: u64,
@@ -339,7 +348,7 @@ impl RowCache {
     pub fn new(capacity: usize) -> Self {
         Self {
             capacity: capacity.max(2),
-            rows: HashMap::new(),
+            rows: BTreeMap::new(),
             order: VecDeque::new(),
             hits: 0,
             misses: 0,
@@ -605,6 +614,38 @@ mod tests {
             assert_eq!(miss, &[0]);
             t[0] = 0.5;
         });
+    }
+
+    /// Regression (ISSUE 7, PAL-HASH): `compact` and `purge_missing`
+    /// traverse the row store — behind a hash map that traversal order
+    /// depended on insertion history. The store is a `BTreeMap` now:
+    /// caches built by different insertion orders must agree bit for
+    /// bit after compaction and purge.
+    #[test]
+    fn tile_cache_compaction_is_insertion_order_independent() {
+        let build = |keys: &[usize]| {
+            let mut c = TileCache::new(16, 4);
+            for &k in keys {
+                c.fetch_block(&[k], |miss, tile| {
+                    for (j, v) in tile.iter_mut().enumerate() {
+                        *v = ((miss[0] * 100 + j) as f64).sin();
+                    }
+                });
+            }
+            c.compact(&[1, 3]);
+            c.purge_missing(&[2, 5, 8, 11]);
+            c
+        };
+        let mut a = build(&[2, 5, 8, 11]);
+        let mut b = build(&[11, 8, 2, 5]);
+        assert_eq!(a.len(), b.len());
+        for k in [2usize, 5, 8, 11] {
+            let ra = a.fetch_block(&[k], |_, _| panic!("must be cached"));
+            let rb = b.fetch_block(&[k], |_, _| panic!("must be cached"));
+            let bits_a: Vec<u64> = ra[0].iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u64> = rb[0].iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "k={k}");
+        }
     }
 
     #[test]

@@ -1,0 +1,118 @@
+//! `palint` — CLI front end of `onedal_sve::lint`, the in-repo
+//! determinism & fault-contract static analyzer (zero dependencies,
+//! like everything else in this crate).
+//!
+//! ```text
+//! palint [--root <dir>] [--json] [--list-rules]
+//! ```
+//!
+//! Walks the source tree (default: `src` from the crate root, `rust/src`
+//! from the repo root), enforces the PAL-* rules, and prints findings as
+//! `path:line: RULE message` or as the versioned JSON report. Exit
+//! status: 0 clean, 1 findings, 2 usage or I/O error. CI runs
+//! `cargo run --release --bin palint -- --json` as a required gate.
+
+use onedal_sve::lint;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+palint — determinism & fault-contract static analyzer
+
+USAGE:
+    palint [--root <dir>] [--json] [--list-rules]
+
+OPTIONS:
+    --root <dir>   source tree to scan (default: src, else rust/src)
+    --json         emit the versioned JSON findings report
+    --list-rules   print every rule id with its one-line contract
+    -h, --help     this text
+
+Suppress a single finding with a reasoned directive on the same line
+or the line above: `// palint: allow(PAL-XXX, why this is sound)`.
+Reason-less, unknown-rule or stale directives are PAL-META findings.
+
+EXIT STATUS: 0 clean · 1 findings · 2 usage or I/O error
+";
+
+struct Options {
+    root: Option<PathBuf>,
+    json: bool,
+    list_rules: bool,
+}
+
+fn parse_args(args: &[String]) -> Result<Options, String> {
+    let mut opts = Options { root: None, json: false, list_rules: false };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => opts.json = true,
+            "--list-rules" => opts.list_rules = true,
+            "--root" => {
+                i += 1;
+                let dir = args.get(i).ok_or("--root needs a directory argument")?;
+                opts.root = Some(PathBuf::from(dir));
+            }
+            "-h" | "--help" => return Err(String::new()),
+            other => return Err(format!("unknown argument {other:?}")),
+        }
+        i += 1;
+    }
+    Ok(opts)
+}
+
+fn default_root() -> Option<PathBuf> {
+    for candidate in ["src", "rust/src"] {
+        let path = Path::new(candidate);
+        if path.is_dir() {
+            return Some(path.to_path_buf());
+        }
+    }
+    None
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = match parse_args(&args) {
+        Ok(opts) => opts,
+        Err(msg) => {
+            if msg.is_empty() {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            eprintln!("palint: {msg}");
+            eprint!("{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    if opts.list_rules {
+        for (id, what) in lint::RULE_DESCRIPTIONS {
+            println!("{id:<11} {what}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    let Some(root) = opts.root.or_else(default_root) else {
+        eprintln!("palint: no source tree found (tried src, rust/src); use --root <dir>");
+        return ExitCode::from(2);
+    };
+    let findings = match lint::scan_tree(&root) {
+        Ok(findings) => findings,
+        Err(err) => {
+            eprintln!("palint: failed to scan {}: {err}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if opts.json {
+        print!("{}", lint::json::emit(&findings));
+    } else if findings.is_empty() {
+        println!("palint: clean ({} ok)", root.display());
+    } else {
+        print!("{}", lint::render_human(&findings));
+        eprintln!("palint: {} finding(s)", findings.len());
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -78,6 +78,18 @@
 //!   a retried call is bit-identical to an uninjected run. Disarmed
 //!   cost: one relaxed atomic load per site visit.
 //!
+//! ## Machine-checked invariants
+//!
+//! The contracts above are enforced mechanically, not by convention —
+//! `docs/INVARIANTS.md` is the catalogue (each contract, its PAL rule
+//! ID, the enforcing mechanism, the escape hatch). The [`lint`] module
+//! and its `palint` binary statically check every source file on every
+//! push (no `partial_cmp`, no clock reads outside the budget meter, no
+//! `HashMap` iteration, `SAFETY`-documented `unsafe` only in
+//! [`parallel::pool`], `env::var` only at approved sites, quarantined
+//! entry points), and the debug-build [`parallel::audit::MergeAuditor`]
+//! asserts fixed-order merging on every scheduler drain at test time.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -90,6 +102,15 @@
 //! assert_eq!(labels.len(), 1000);
 //! ```
 
+// House policy (PAL-UNSAFE, docs/INVARIANTS.md): unsafe code is denied
+// crate-wide; `parallel::pool` alone carries a scoped, justified allow
+// for its one job-lifetime transmute. `forbid` would be preferable but
+// cannot be overridden by a scoped allow (E0453), so `deny` is the
+// tightest expressible spelling. Within that one licensed module,
+// every unsafe operation still needs its own explicit `unsafe` block.
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod algorithms;
 pub mod blas;
 pub mod coordinator;
@@ -97,6 +118,7 @@ pub mod dtype;
 pub mod error;
 pub mod failpoint;
 pub mod linalg;
+pub mod lint;
 pub mod metrics;
 pub mod parallel;
 pub mod primitives;

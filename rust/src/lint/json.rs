@@ -1,0 +1,352 @@
+//! Zero-dependency JSON for `palint --json`.
+//!
+//! The emitter produces the machine-readable findings report consumed
+//! by the CI gate; the (deliberately minimal) parser exists so the
+//! round-trip contract — emit, parse, recover the identical findings —
+//! is testable without adding a serde dependency to a crate that has
+//! none.
+//!
+//! Schema, version 1:
+//!
+//! ```json
+//! {
+//!   "palint": 1,
+//!   "findings": [
+//!     { "rule": "PAL-ORD", "path": "algorithms/foo.rs",
+//!       "line": 42, "message": "…" }
+//!   ]
+//! }
+//! ```
+
+use super::rules::Finding;
+
+/// Parsed JSON value. Object keys keep emission order (the emitter is
+/// deterministic, so the parse tree is too).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Render the findings report (stable field order, findings already
+/// sorted by the scanner).
+pub fn emit(findings: &[Finding]) -> String {
+    let mut out = String::from("{\n  \"palint\": 1,\n  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n    { \"rule\": ");
+        emit_str(&mut out, &f.rule);
+        out.push_str(", \"path\": ");
+        emit_str(&mut out, &f.path);
+        out.push_str(", \"line\": ");
+        out.push_str(&f.line.to_string());
+        out.push_str(", \"message\": ");
+        emit_str(&mut out, &f.message);
+        out.push_str(" }");
+    }
+    if findings.is_empty() {
+        out.push_str("]\n}\n");
+    } else {
+        out.push_str("\n  ]\n}\n");
+    }
+    out
+}
+
+fn emit_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str("\\u");
+                let code = c as u32;
+                for shift in [12u32, 8, 4, 0] {
+                    let digit = (code >> shift) & 0xf;
+                    out.push(char::from_digit(digit, 16).unwrap_or('0'));
+                }
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Recover findings from a parsed report; `None` if the shape does not
+/// match the schema.
+pub fn findings_from_value(v: &Value) -> Option<Vec<Finding>> {
+    if v.get("palint")?.as_usize()? != 1 {
+        return None;
+    }
+    let mut out = Vec::new();
+    for item in v.get("findings")?.as_arr()? {
+        out.push(Finding {
+            rule: item.get("rule")?.as_str()?.to_string(),
+            path: item.get("path")?.as_str()?.to_string(),
+            line: item.get("line")?.as_usize()?,
+            message: item.get("message")?.as_str()?.to_string(),
+        });
+    }
+    Some(out)
+}
+
+/// Parse a JSON document. Errors carry the char offset of the problem.
+pub fn parse(input: &str) -> Result<Value, String> {
+    let chars: Vec<char> = input.chars().collect();
+    let mut p = Parser { chars, pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.chars.len() {
+        return Err(format!("trailing characters at offset {}", p.pos));
+    }
+    Ok(v)
+}
+
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+}
+
+impl Parser {
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ' | '\t' | '\n' | '\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<char, String> {
+        let c = self.peek().ok_or_else(|| format!("unexpected end at offset {}", self.pos))?;
+        self.pos += 1;
+        Ok(c)
+    }
+
+    fn expect(&mut self, want: char) -> Result<(), String> {
+        let at = self.pos;
+        let got = self.bump()?;
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("expected {want:?} at offset {at}, got {got:?}"))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Value) -> Result<Value, String> {
+        for want in word.chars() {
+            self.expect(want)?;
+        }
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some('{') => self.object(),
+            Some('[') => self.array(),
+            Some('"') => Ok(Value::Str(self.string()?)),
+            Some('t') => self.literal("true", Value::Bool(true)),
+            Some('f') => self.literal("false", Value::Bool(false)),
+            Some('n') => self.literal("null", Value::Null),
+            Some(c) if c == '-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {other:?} at offset {}", self.pos)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, String> {
+        self.expect('{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some('}') {
+            self.pos += 1;
+            return Ok(Value::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(':')?;
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.bump()? {
+                ',' => continue,
+                '}' => return Ok(Value::Obj(pairs)),
+                c => return Err(format!("expected ',' or '}}', got {c:?}")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, String> {
+        self.expect('[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(']') {
+            self.pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                ',' => continue,
+                ']' => return Ok(Value::Arr(items)),
+                c => return Err(format!("expected ',' or ']', got {c:?}")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect('"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump()? {
+                '"' => return Ok(out),
+                '\\' => match self.bump()? {
+                    '"' => out.push('"'),
+                    '\\' => out.push('\\'),
+                    '/' => out.push('/'),
+                    'n' => out.push('\n'),
+                    'r' => out.push('\r'),
+                    't' => out.push('\t'),
+                    'b' => out.push('\u{0008}'),
+                    'f' => out.push('\u{000c}'),
+                    'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let at = self.pos;
+                            let d = self
+                                .bump()?
+                                .to_digit(16)
+                                .ok_or_else(|| format!("bad \\u digit at offset {at}"))?;
+                            code = (code << 4) | d;
+                        }
+                        // Lone surrogates (which this emitter never
+                        // produces) degrade to U+FFFD.
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    c => return Err(format!("bad escape {c:?}")),
+                },
+                c => out.push(c),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value, String> {
+        let start = self.pos;
+        if self.peek() == Some('-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || "+-.eE".contains(c)) {
+            self.pos += 1;
+        }
+        let text: String = self.chars[start..self.pos].iter().collect();
+        text.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| format!("bad number {text:?} at offset {start}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &str, path: &str, line: usize, message: &str) -> Finding {
+        Finding {
+            rule: rule.to_string(),
+            path: path.to_string(),
+            line,
+            message: message.to_string(),
+        }
+    }
+
+    #[test]
+    fn empty_report_round_trips() {
+        let report = emit(&[]);
+        let v = parse(&report).unwrap();
+        assert_eq!(findings_from_value(&v).unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn findings_round_trip_bit_exact() {
+        let original = vec![
+            finding("PAL-ORD", "algorithms/foo.rs", 12, "sort under total_cmp"),
+            finding("PAL-HASH", "x.rs", 3, "tricky \"quoted\" text\nwith a newline\tand tab"),
+            finding("PAL-META", "y.rs", 1, "backslash \\ and control \u{0001} char"),
+        ];
+        let report = emit(&original);
+        let recovered = findings_from_value(&parse(&report).unwrap()).unwrap();
+        assert_eq!(recovered, original);
+    }
+
+    #[test]
+    fn schema_fields_present() {
+        let report = emit(&[finding("PAL-ENV", "a.rs", 7, "m")]);
+        let v = parse(&report).unwrap();
+        assert_eq!(v.get("palint").and_then(Value::as_usize), Some(1));
+        let arr = v.get("findings").and_then(Value::as_arr).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("line").and_then(Value::as_usize), Some(7));
+        assert_eq!(arr[0].get("rule").and_then(Value::as_str), Some("PAL-ENV"));
+    }
+
+    #[test]
+    fn wrong_shape_is_rejected() {
+        let wrong_version = parse("{\"palint\": 2, \"findings\": []}").unwrap();
+        assert!(findings_from_value(&wrong_version).is_none());
+        assert!(findings_from_value(&parse("{\"findings\": []}").unwrap()).is_none());
+        assert!(findings_from_value(&parse("[1, 2]").unwrap()).is_none());
+    }
+
+    #[test]
+    fn parser_handles_scalars_and_rejects_garbage() {
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse(" -12.5e1 ").unwrap(), Value::Num(-125.0));
+        assert!(parse("{\"a\": }").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("\"open").is_err());
+        assert!(parse("{} trailing").is_err());
+    }
+}

@@ -1,0 +1,365 @@
+//! Comment/string-aware lexical scan for `palint`.
+//!
+//! The rule engine must never fire on a trigger token that only appears
+//! inside a comment or a string literal (`// the old partial_cmp
+//! sort…`, `let s = "Instant::now";`). This module performs one pass
+//! over a source file and splits every line into
+//!
+//! * `code` — the source text with the *contents* of comments, string
+//!   literals and char literals blanked to spaces (column positions are
+//!   preserved, so findings can point at the original text), and
+//! * `comment` — the concatenated comment text of the line, which is
+//!   where `// SAFETY:` contracts and `// palint: allow(..)` directives
+//!   live.
+//!
+//! The scan is a small state machine, not a parser: it understands
+//! line comments, *nested* block comments, plain/byte strings with
+//! escapes, raw strings (`r"…"`, `r#"…"#`, `br##"…"##`), char literals,
+//! and the char-literal/lifetime ambiguity (`'a'` vs `<'a>`). It also
+//! records the first line of a `#[cfg(test)]` item, which every
+//! library-code rule treats as the start of the file's test region (in
+//! this crate the unit-test module is always the final item of a file;
+//! the approximation is documented in docs/INVARIANTS.md).
+
+/// One scanned source line.
+#[derive(Debug, Clone)]
+pub struct ScanLine {
+    /// Source text with comment/string/char-literal contents blanked.
+    pub code: String,
+    /// Comment text carried by this line (line + block comments).
+    pub comment: String,
+}
+
+/// Whole-file scan result.
+#[derive(Debug)]
+pub struct FileScan {
+    pub lines: Vec<ScanLine>,
+    /// 0-based line of the first `#[cfg(test)]` occurrence in code, if
+    /// any; lines at or after it belong to the file's test region.
+    pub test_start: Option<usize>,
+}
+
+impl FileScan {
+    /// 0-based `line` is inside the file's `#[cfg(test)]` region.
+    pub fn in_test_region(&self, line: usize) -> bool {
+        self.test_start.is_some_and(|t| line >= t)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    Normal,
+    /// Nesting depth of `/* … */`.
+    Block(u32),
+    /// Inside `"…"`; `true` when the previous char was a backslash.
+    Str(bool),
+    /// Inside `r##"…"##` with this many hashes.
+    RawStr(u32),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan one file. Never fails: malformed source degrades to blanked
+/// text, which can only *hide* tokens from the rules, never invent
+/// them.
+pub fn scan(source: &str) -> FileScan {
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines: Vec<ScanLine> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Normal;
+    let mut test_start: Option<usize> = None;
+    let mut i = 0usize;
+    let n = chars.len();
+
+    macro_rules! flush_line {
+        () => {{
+            if code.contains("#[cfg(test)]") && test_start.is_none() {
+                test_start = Some(lines.len());
+            }
+            lines.push(ScanLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            // A line comment ends here; every other state persists.
+            flush_line!();
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    // Line comment (covers `///` and `//!`): the rest of
+                    // the physical line is comment text.
+                    let mut j = i + 2;
+                    while j < n && chars[j] != '\n' {
+                        comment.push(chars[j]);
+                        j += 1;
+                    }
+                    code.push_str(&" ".repeat(j - i));
+                    i = j;
+                } else if c == '/' && next == Some('*') {
+                    code.push_str("  ");
+                    state = State::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str(false);
+                    i += 1;
+                } else if (c == 'r' || c == 'b')
+                    && (i == 0 || !is_ident(chars[i - 1]))
+                    && raw_str_hashes(&chars, i).is_some()
+                {
+                    let (skip, hashes) = raw_str_hashes(&chars, i).unwrap_or((1, 0));
+                    code.push_str(&" ".repeat(skip - 1));
+                    code.push('"');
+                    state = State::RawStr(hashes);
+                    i += skip;
+                } else if c == 'b' && next == Some('"') && (i == 0 || !is_ident(chars[i - 1])) {
+                    // Byte string `b"…"` — same body rules as `"…"`.
+                    code.push_str(" \"");
+                    state = State::Str(false);
+                    i += 2;
+                } else if c == '\'' {
+                    i = lex_quote(&chars, i, &mut code);
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::Block(depth + 1);
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 { State::Normal } else { State::Block(depth - 1) };
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Str(escaped) => {
+                if escaped {
+                    state = State::Str(false);
+                    code.push(' ');
+                } else if c == '\\' {
+                    state = State::Str(true);
+                    code.push(' ');
+                } else if c == '"' {
+                    state = State::Normal;
+                    code.push('"');
+                } else {
+                    code.push(' ');
+                }
+                i += 1;
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    code.push('"');
+                    code.push_str(&" ".repeat(hashes as usize));
+                    state = State::Normal;
+                    i += 1 + hashes as usize;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() || lines.is_empty() {
+        flush_line!();
+    }
+    FileScan { lines, test_start }
+}
+
+/// At `chars[i]` ∈ {`r`, `b`}: if this starts a raw-string prefix
+/// (`r"`, `r#"`, `br##"` …), return `(chars_to_consume_through_quote,
+/// hash_count)`.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<(usize, u32)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j - i + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// `chars[i] == '"'` inside a raw string with `hashes` hashes: true
+/// when the quote is followed by exactly the closing hash run.
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Disambiguate `'` at `chars[i]`: lifetime (`'a`, `'_`, `'static`) or
+/// char literal (`'x'`, `'\n'`, `'"'`). Lifetimes pass through as code;
+/// char-literal bodies are blanked. Returns the next scan index.
+fn lex_quote(chars: &[char], i: usize, code: &mut String) -> usize {
+    let next = chars.get(i + 1).copied();
+    let after = chars.get(i + 2).copied();
+    let is_lifetime = match next {
+        Some(c) if c.is_alphabetic() || c == '_' => after != Some('\''),
+        _ => false,
+    };
+    if is_lifetime {
+        code.push('\'');
+        return i + 1;
+    }
+    // Char literal: blank through the closing quote (same line; an
+    // unterminated literal blanks to end of line, which is safe).
+    code.push('\'');
+    let mut j = i + 1;
+    let mut escaped = false;
+    while let Some(&c) = chars.get(j) {
+        if c == '\n' {
+            break;
+        }
+        if escaped {
+            escaped = false;
+        } else if c == '\\' {
+            escaped = true;
+        } else if c == '\'' {
+            code.push('\'');
+            return j + 1;
+        }
+        code.push(' ');
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        scan(src).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_move_to_comment_channel() {
+        let s = scan("let x = 1; // the old partial_cmp sort\n");
+        assert!(!s.lines[0].code.contains("partial_cmp"));
+        assert!(s.lines[0].comment.contains("partial_cmp"));
+        assert!(s.lines[0].code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn doc_and_inner_comments_are_comments() {
+        let s = scan("/// uses Instant::now\n//! env::var notes\nfn f() {}\n");
+        assert!(!s.lines[0].code.contains("Instant"));
+        assert!(s.lines[0].comment.contains("Instant::now"));
+        assert!(s.lines[1].comment.contains("env::var"));
+        assert!(s.lines[2].code.contains("fn f()"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let src = "a /* one /* two */ still */ b\n/* open\nInstant::now()\n*/ c\n";
+        let c = codes(src);
+        assert!(c[0].contains('a') && c[0].contains('b'));
+        assert!(!c[0].contains("still"));
+        assert!(!c[2].contains("Instant"));
+        assert!(c[3].contains('c'));
+        let s = scan(src);
+        assert!(s.lines[2].comment.contains("Instant::now()"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked_quotes_kept() {
+        let c = codes("let s = \"Instant::now \\\" still\"; f(s);\n");
+        assert!(!c[0].contains("Instant"));
+        assert!(!c[0].contains("still"));
+        assert!(c[0].contains("let s = \""));
+        assert!(c[0].contains("f(s);"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let c = codes("let s = r#\"env::var \"quoted\" inside\"#; g();\n");
+        assert!(!c[0].contains("env::var"));
+        assert!(c[0].contains("g();"));
+        let c = codes("let s = br\"HashMap\"; h();\n");
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains("h();"));
+    }
+
+    #[test]
+    fn multiline_strings_persist_state() {
+        let c = codes("let s = \"line one\npartial_cmp inside\nend\"; tail();\n");
+        assert!(!c[1].contains("partial_cmp"));
+        assert!(c[2].contains("tail();"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let c = codes("let a: &'static str = x; let q = '\"'; let z = 'y'; s.split('/');\n");
+        // Lifetime survives as code; char-literal bodies are blanked.
+        assert!(c[0].contains("'static str"));
+        assert!(!c[0].contains("'y'"));
+        // The quote char literal must not open a string state.
+        assert!(c[0].contains("let z ="));
+        assert!(c[0].contains("s.split("));
+    }
+
+    #[test]
+    fn escaped_char_literal() {
+        let c = codes("let nl = '\\n'; let bs = '\\\\'; after();\n");
+        assert!(c[0].contains("after();"));
+    }
+
+    #[test]
+    fn cfg_test_marks_region() {
+        let s = scan("fn lib() {}\n#[cfg(test)]\nmod tests {\n  use super::*;\n}\n");
+        assert_eq!(s.test_start, Some(1));
+        assert!(!s.in_test_region(0));
+        assert!(s.in_test_region(1));
+        assert!(s.in_test_region(3));
+    }
+
+    #[test]
+    fn cfg_test_inside_string_does_not_mark() {
+        let s = scan("let x = \"#[cfg(test)]\";\nfn f() {}\n");
+        assert_eq!(s.test_start, None);
+    }
+
+    #[test]
+    fn columns_are_preserved() {
+        let src = "abc /* xx */ def\n";
+        let s = scan(src);
+        // `def` must sit at the same column as in the original text.
+        assert_eq!(s.lines[0].code.find("def"), src.find("def"));
+    }
+
+    #[test]
+    fn raw_identifier_is_not_a_raw_string() {
+        let c = codes("let r#type = 3; use_it(r#type);\n");
+        assert!(c[0].contains("use_it"));
+        assert!(c[0].contains("= 3;"));
+    }
+}

@@ -1,0 +1,913 @@
+//! The `palint` rule set — the house determinism & fault contracts as
+//! named, numbered, mechanically-checked rules.
+//!
+//! Every rule is grounded in an existing contract (see
+//! docs/INVARIANTS.md for the catalogue and the enforcing-mechanism
+//! table):
+//!
+//! | rule       | contract |
+//! |------------|----------|
+//! | PAL-ORD    | NaN degrades under IEEE `total_cmp` (PR 5): no `.partial_cmp(` in library code. |
+//! | PAL-CLOCK  | unbudgeted runs never read the clock (PR 6): `Instant::now` / `SystemTime::now` only in `coordinator/budget.rs`, `profiling/`, and binary targets. |
+//! | PAL-HASH   | fixed-order merges: no iteration over `HashMap`/`HashSet` bindings in library code (key lookup is fine; traversal must go through sorted keys, an index `Vec`, or a `BTreeMap`). |
+//! | PAL-UNSAFE | every `unsafe` carries a `// SAFETY:` contract comment; `static mut` is banned outright. |
+//! | PAL-ENV    | `std::env::var` confined to the approved config sites (`parallel/`, `failpoint.rs`, `coordinator/`). |
+//! | PAL-QUAR   | panic quarantine (PR 6): every public algorithm entry point (`train`/`infer`/…) runs under `parallel::quarantine` or delegates to an entry point that does. |
+//! | PAL-META   | suppressions are themselves contracts: a malformed, reason-less, unknown-rule or *unused* `// palint: allow(..)` directive is a finding. |
+//!
+//! Scope conventions shared by the path-scoped rules: binary targets
+//! (`main.rs`, `bin/`) are CLI surface, not library code, and the
+//! `#[cfg(test)]` region of a file is exempt (test fixtures measure
+//! wall-time and build adversarial inputs on purpose). PAL-UNSAFE is
+//! the exception — it applies everywhere, tests and binaries included.
+//!
+//! Suppression: `// palint: allow(RULE-ID, reason)` on the finding's
+//! line or the line directly above suppresses **exactly one** finding
+//! of that rule. The reason is mandatory; an allow that suppresses
+//! nothing is flagged by PAL-META so stale escapes cannot linger.
+
+use super::lexer::FileScan;
+
+/// One finding: rule, location, message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: String,
+    /// Path relative to the scanned root, forward slashes.
+    pub path: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub message: String,
+}
+
+/// Rule ids an allow-directive may name (PAL-META itself cannot be
+/// suppressed — the escape hatch must not have an escape hatch).
+pub const RULE_IDS: [&str; 6] =
+    ["PAL-ORD", "PAL-CLOCK", "PAL-HASH", "PAL-UNSAFE", "PAL-ENV", "PAL-QUAR"];
+
+/// (id, one-line description) for `palint --list-rules`.
+pub const RULE_DESCRIPTIONS: [(&str, &str); 7] = [
+    ("PAL-ORD", "no partial_cmp in library code; float comparators sort under total_cmp"),
+    ("PAL-CLOCK", "clock reads only in coordinator/budget.rs, profiling/ and binary targets"),
+    ("PAL-HASH", "no iteration over HashMap/HashSet in library code (nondeterministic order)"),
+    ("PAL-UNSAFE", "every `unsafe` needs a // SAFETY: contract comment; `static mut` is banned"),
+    ("PAL-ENV", "std::env::var confined to parallel/, failpoint.rs and coordinator/"),
+    ("PAL-QUAR", "public algorithm entry points run under parallel::quarantine"),
+    ("PAL-META", "palint allow-directives must be well-formed, reasoned, and actually used"),
+];
+
+/// Everything a rule gets to see about one file.
+pub struct FileCtx<'a> {
+    pub rel_path: &'a str,
+    pub scan: &'a FileScan,
+}
+
+impl FileCtx<'_> {
+    fn is_binary_target(&self) -> bool {
+        self.rel_path == "main.rs" || self.rel_path.starts_with("bin/")
+    }
+
+    fn path_in(&self, prefixes: &[&str]) -> bool {
+        prefixes.iter().any(|p| {
+            if let Some(dir) = p.strip_suffix('/') {
+                self.rel_path == dir || self.rel_path.starts_with(p)
+            } else {
+                self.rel_path == *p
+            }
+        })
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of whole-word occurrences of `needle` in `hay`
+/// (neither neighbor is an identifier char).
+fn word_occurrences(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let at = from + pos;
+        let before_ok = at == 0 || !hay[..at].chars().next_back().is_some_and(is_ident);
+        let after_ok = !hay[at + needle.len()..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + needle.len().max(1);
+    }
+    out
+}
+
+/// Run every rule over one scanned file, then apply the allow
+/// directives. Returned findings are sorted by (line, rule).
+pub fn check_file(ctx: &FileCtx) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    rule_ord(ctx, &mut findings);
+    rule_clock(ctx, &mut findings);
+    rule_hash(ctx, &mut findings);
+    rule_unsafe(ctx, &mut findings);
+    rule_env(ctx, &mut findings);
+    rule_quar(ctx, &mut findings);
+    findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    apply_allows(ctx, findings)
+}
+
+fn push(findings: &mut Vec<Finding>, ctx: &FileCtx, rule: &str, line0: usize, msg: String) {
+    findings.push(Finding {
+        rule: rule.to_string(),
+        path: ctx.rel_path.to_string(),
+        line: line0 + 1,
+        message: msg,
+    });
+}
+
+/// PAL-ORD — the PR 5 total-order contract. `partial_cmp` on floats is
+/// either a latent NaN panic (`.unwrap()`) or a NaN-order hazard; every
+/// library comparator sorts under IEEE `total_cmp`.
+fn rule_ord(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    if ctx.is_binary_target() {
+        return;
+    }
+    for (i, line) in ctx.scan.lines.iter().enumerate() {
+        if ctx.scan.in_test_region(i) {
+            break;
+        }
+        if !word_occurrences(&line.code, "partial_cmp").is_empty() {
+            push(
+                findings,
+                ctx,
+                "PAL-ORD",
+                i,
+                "partial_cmp in library code: sort under IEEE total_cmp (dtype::Float::total_cmp) \
+                 so NaN degrades deterministically instead of panicking"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// PAL-CLOCK — the PR 6 budget contract: unlimited budgets never read
+/// the clock, so uncapped runs stay bit-identical. Wall-clock reads are
+/// confined to the budget meter, the profiling harness, and binaries.
+fn rule_clock(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    if ctx.is_binary_target() || ctx.path_in(&["coordinator/budget.rs", "profiling/"]) {
+        return;
+    }
+    for (i, line) in ctx.scan.lines.iter().enumerate() {
+        if ctx.scan.in_test_region(i) {
+            break;
+        }
+        for tok in ["Instant::now", "SystemTime::now"] {
+            if !word_occurrences(&line.code, tok).is_empty() {
+                push(
+                    findings,
+                    ctx,
+                    "PAL-CLOCK",
+                    i,
+                    format!(
+                        "{tok} outside coordinator/budget.rs, profiling/ and binaries: \
+                         route wall-time through coordinator::Budget so unbudgeted runs \
+                         never read the clock"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Method names whose call on a hash container traverses it in
+/// nondeterministic order.
+const HASH_ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// PAL-HASH — fixed-order-merge contract. Key *lookup* on a hash map is
+/// deterministic; *traversal* is not. The pass first collects the
+/// file's hash-typed bindings (`name: HashMap<..>` fields/params and
+/// `let name = HashMap::new()`-style initializers), then flags
+/// iteration-method calls and `for … in` loops whose receiver is one of
+/// them. This is an approximation (no type inference) — the
+/// debug-build merge-order auditor in `parallel::audit` backstops what
+/// it cannot see.
+fn rule_hash(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    if ctx.is_binary_target() {
+        return;
+    }
+    let bindings = hash_bindings(ctx.scan);
+    if bindings.is_empty() {
+        return;
+    }
+    for (i, line) in ctx.scan.lines.iter().enumerate() {
+        if ctx.scan.in_test_region(i) {
+            break;
+        }
+        let code = &line.code;
+        for m in HASH_ITER_METHODS {
+            let pat = format!(".{m}(");
+            let mut from = 0;
+            while let Some(pos) = code[from..].find(&pat) {
+                let at = from + pos;
+                if let Some(recv) = ident_before(code, at) {
+                    if bindings.iter().any(|b| b == recv) {
+                        push(
+                            findings,
+                            ctx,
+                            "PAL-HASH",
+                            i,
+                            format!(
+                                "`{recv}.{m}(..)` iterates a HashMap/HashSet in library code: \
+                                 traversal order is nondeterministic — iterate sorted keys, an \
+                                 index Vec, or switch the container to BTreeMap"
+                            ),
+                        );
+                    }
+                }
+                from = at + pat.len();
+            }
+        }
+        for_loop_over_binding(ctx, i, code, &bindings, findings);
+    }
+}
+
+/// Collect identifiers bound to `HashMap`/`HashSet` anywhere in the
+/// file (declarations are scanned in the test region too: a lib-region
+/// traversal of a binding declared next to the test boundary must not
+/// escape).
+fn hash_bindings(scan: &FileScan) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for line in &scan.lines {
+        let code = &line.code;
+        for ty in ["HashMap", "HashSet"] {
+            for at in word_occurrences(code, ty) {
+                // `name: HashMap<..>` (field, param, typed let).
+                let before = code[..at].trim_end();
+                if let Some(pre) = before.strip_suffix(':') {
+                    if let Some(name) = last_ident(pre) {
+                        push_unique(&mut out, name);
+                        continue;
+                    }
+                }
+                // `let [mut] name = HashMap::new()` / `= HashMap::from(..)`.
+                if let Some(pre) = before.strip_suffix('=') {
+                    if let Some(name) = last_ident(pre.trim_end()) {
+                        push_unique(&mut out, name);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn push_unique(v: &mut Vec<String>, s: &str) {
+    if !v.iter().any(|x| x == s) {
+        v.push(s.to_string());
+    }
+}
+
+/// Trailing identifier of `s`, if `s` ends with one.
+fn last_ident(s: &str) -> Option<&str> {
+    let end = s.len();
+    let start = s
+        .char_indices()
+        .rev()
+        .take_while(|(_, c)| is_ident(*c))
+        .last()
+        .map(|(i, _)| i)?;
+    if start == end {
+        return None;
+    }
+    let id = &s[start..end];
+    id.chars().next().filter(|c| c.is_alphabetic() || *c == '_').map(|_| id)
+}
+
+/// Identifier directly before byte offset `at` (receiver of a `.m(`
+/// call), if any.
+fn ident_before(code: &str, at: usize) -> Option<&str> {
+    let head = &code[..at];
+    let start = head
+        .char_indices()
+        .rev()
+        .take_while(|(_, c)| is_ident(*c))
+        .last()
+        .map(|(i, _)| i)?;
+    if start == at {
+        return None;
+    }
+    Some(&head[start..])
+}
+
+/// Flag `for … in [&[mut ]]binding` loops.
+fn for_loop_over_binding(
+    ctx: &FileCtx,
+    line0: usize,
+    code: &str,
+    bindings: &[String],
+    findings: &mut Vec<Finding>,
+) {
+    for at in word_occurrences(code, "for") {
+        let Some(in_rel) = code[at..].find(" in ") else { continue };
+        let mut rest = code[at + in_rel + 4..].trim_start();
+        rest = rest.strip_prefix('&').unwrap_or(rest).trim_start();
+        rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+        let ident: String = rest.chars().take_while(|&c| is_ident(c)).collect();
+        let tail = rest[ident.len()..].chars().next();
+        // `for k in map.keys()` is caught by the method pass; here we
+        // only want bare `for x in &map {`-style traversals.
+        if bindings.iter().any(|b| *b == ident) && tail != Some('.') {
+            push(
+                findings,
+                ctx,
+                "PAL-HASH",
+                line0,
+                format!(
+                    "`for … in {ident}` iterates a HashMap/HashSet in library code: \
+                     traversal order is nondeterministic — iterate sorted keys, an index \
+                     Vec, or switch the container to BTreeMap"
+                ),
+            );
+        }
+    }
+}
+
+/// PAL-UNSAFE — applies everywhere (tests and binaries included):
+/// every `unsafe` token must sit under a `// SAFETY:` contract comment
+/// (same line, or the contiguous comment block directly above), and
+/// `static mut` is banned outright — it is UB-prone shared mutable
+/// state no SAFETY comment can license in a parallel library.
+fn rule_unsafe(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    for (i, line) in ctx.scan.lines.iter().enumerate() {
+        let code = &line.code;
+        if !word_occurrences(code, "static").is_empty() {
+            // Tolerate arbitrary spacing between the two keywords.
+            let squashed: String = code.split_whitespace().collect::<Vec<_>>().join(" ");
+            if squashed.contains("static mut ") {
+                push(
+                    findings,
+                    ctx,
+                    "PAL-UNSAFE",
+                    i,
+                    "`static mut` is banned: use an atomic, a Mutex, or OnceLock".to_string(),
+                );
+            }
+        }
+        if word_occurrences(code, "unsafe").is_empty() {
+            continue;
+        }
+        if has_safety_comment(ctx.scan, i) {
+            continue;
+        }
+        push(
+            findings,
+            ctx,
+            "PAL-UNSAFE",
+            i,
+            "`unsafe` without a // SAFETY: contract comment (same line or the comment \
+             block directly above)"
+                .to_string(),
+        );
+    }
+}
+
+/// `// SAFETY:` on the line itself or anywhere in the contiguous run of
+/// comment-only lines directly above it. A bare `//` separator inside a
+/// multi-paragraph contract stays part of the block (its code channel is
+/// the blanked `//`, non-empty); a fully blank source line (both channels
+/// empty) ends it.
+fn has_safety_comment(scan: &FileScan, line0: usize) -> bool {
+    if scan.lines[line0].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut i = line0;
+    while i > 0 {
+        i -= 1;
+        let l = &scan.lines[i];
+        let in_block = l.code.trim().is_empty() && !(l.code.is_empty() && l.comment.is_empty());
+        if !in_block {
+            return false;
+        }
+        if l.comment.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// PAL-ENV — configuration is read at the approved sites only
+/// (`parallel/` worker-count default, `failpoint.rs` registry,
+/// `coordinator/` backend/dispatch switches), so library behavior is a
+/// function of its arguments plus those documented switches.
+fn rule_env(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    if ctx.is_binary_target() || ctx.path_in(&["parallel/", "failpoint.rs", "coordinator/"]) {
+        return;
+    }
+    for (i, line) in ctx.scan.lines.iter().enumerate() {
+        if ctx.scan.in_test_region(i) {
+            break;
+        }
+        for tok in ["env::var", "env::var_os"] {
+            // `env::var` is a prefix of `env::var_os`; demand the exact
+            // call form so each occurrence is reported once.
+            if line.code.contains(&format!("{tok}(")) {
+                push(
+                    findings,
+                    ctx,
+                    "PAL-ENV",
+                    i,
+                    format!(
+                        "{tok} outside the approved config sites (parallel/, failpoint.rs, \
+                         coordinator/): thread configuration through Context instead"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Entry-point names PAL-QUAR audits (and accepts as delegation
+/// targets — `infer` bodies that call `predict_proba` are covered by
+/// the callee's quarantine).
+const QUAR_ENTRY_FNS: [&str; 8] = [
+    "train",
+    "train_with_engine",
+    "infer",
+    "predict",
+    "predict_proba",
+    "kneighbors",
+    "decision_function",
+    "transform",
+];
+
+/// PAL-QUAR — the PR 6 fault contract: pool fan-outs reachable from a
+/// public algorithm entry point surface panics as
+/// `Error::Internal(site)` because the entry body runs under
+/// `parallel::quarantine`. Statically proving reachability is beyond a
+/// lexer, so the rule checks the contract at its boundary: in
+/// `algorithms/`, every `pub fn` named like an entry point must call
+/// `quarantine(` in its brace-matched body, or delegate to another
+/// entry-point name. The debug-build merge-order auditor and the chaos
+/// suite cover the gap between this approximation and true
+/// reachability.
+fn rule_quar(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    if !ctx.rel_path.starts_with("algorithms/") {
+        return;
+    }
+    let joined: Vec<&str> = ctx.scan.lines.iter().map(|l| l.code.as_str()).collect();
+    let code = joined.join("\n");
+    // Byte offset of each line start, for offset → line conversion.
+    let mut line_starts = vec![0usize];
+    for l in &joined {
+        line_starts.push(line_starts[line_starts.len() - 1] + l.len() + 1);
+    }
+    let line_of = |off: usize| line_starts.partition_point(|&s| s <= off) - 1;
+    for at in word_occurrences(&code, "fn") {
+        if !code[..at].trim_end().ends_with("pub") {
+            continue;
+        }
+        let line0 = line_of(at);
+        if ctx.scan.in_test_region(line0) {
+            continue;
+        }
+        let after = &code[at + 2..];
+        let name: String =
+            after.trim_start().chars().take_while(|&c| is_ident(c)).collect();
+        if !QUAR_ENTRY_FNS.contains(&name.as_str()) {
+            continue;
+        }
+        let Some(body) = fn_body(&code, at) else { continue };
+        let quarantined = body.contains("quarantine(");
+        let delegates = QUAR_ENTRY_FNS.iter().any(|e| {
+            *e != name
+                && word_occurrences(body, e)
+                    .iter()
+                    .any(|&p| body[p + e.len()..].trim_start().starts_with('('))
+        });
+        if !quarantined && !delegates {
+            push(
+                findings,
+                ctx,
+                "PAL-QUAR",
+                line0,
+                format!(
+                    "pub fn {name} in algorithms/ neither runs under parallel::quarantine \
+                     nor delegates to an entry point that does: panics from pool fan-outs \
+                     would abort instead of surfacing as Error::Internal"
+                ),
+            );
+        }
+    }
+}
+
+/// Brace-matched body of the fn whose `fn` keyword sits at `at`.
+fn fn_body(code: &str, at: usize) -> Option<&str> {
+    let open_rel = code[at..].find('{')?;
+    let open = at + open_rel;
+    let mut depth = 0usize;
+    for (i, c) in code[open..].char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&code[open + 1..open + i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Allow directives.
+// ---------------------------------------------------------------------
+
+struct Allow {
+    /// 0-based line the directive sits on.
+    line0: usize,
+    rule: String,
+    reason: String,
+}
+
+/// Parse `palint: allow(RULE, reason)` directives out of the comment
+/// channel. Malformed directives become PAL-META findings immediately.
+fn parse_allows(ctx: &FileCtx, findings: &mut Vec<Finding>) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for (i, line) in ctx.scan.lines.iter().enumerate() {
+        // A directive is a comment that *starts* with `palint:` — prose
+        // that merely mentions the syntax mid-sentence is not one.
+        let Some(rest) = line.comment.trim_start().strip_prefix("palint:") else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(args) =
+            rest.strip_prefix("allow(").and_then(|r| r.find(')').map(|close| &r[..close]))
+        else {
+            push(
+                findings,
+                ctx,
+                "PAL-META",
+                i,
+                "malformed palint directive: expected `palint: allow(RULE-ID, reason)`"
+                    .to_string(),
+            );
+            continue;
+        };
+        let (rule, reason) = match args.split_once(',') {
+            Some((r, why)) => (r.trim(), why.trim()),
+            None => (args.trim(), ""),
+        };
+        if !RULE_IDS.contains(&rule) {
+            push(
+                findings,
+                ctx,
+                "PAL-META",
+                i,
+                format!("palint allow names unknown rule {rule:?}"),
+            );
+            continue;
+        }
+        if reason.is_empty() {
+            push(
+                findings,
+                ctx,
+                "PAL-META",
+                i,
+                format!("palint allow({rule}) has no reason: every suppression must say why"),
+            );
+            continue;
+        }
+        allows.push(Allow { line0: i, rule: rule.to_string(), reason: reason.to_string() });
+    }
+    allows
+}
+
+/// Apply allows: each well-formed directive suppresses exactly one
+/// finding of its rule on its own line or the line directly below.
+/// Directives that suppress nothing are stale and become PAL-META
+/// findings themselves.
+fn apply_allows(ctx: &FileCtx, mut findings: Vec<Finding>) -> Vec<Finding> {
+    let mut meta = Vec::new();
+    let allows = parse_allows(ctx, &mut meta);
+    for allow in &allows {
+        let target = findings.iter().position(|f| {
+            f.rule == allow.rule && (f.line == allow.line0 + 1 || f.line == allow.line0 + 2)
+        });
+        match target {
+            Some(idx) => {
+                findings.remove(idx);
+            }
+            None => push(
+                &mut meta,
+                ctx,
+                "PAL-META",
+                allow.line0,
+                format!(
+                    "stale palint allow({}, {}): it suppresses nothing — remove it",
+                    allow.rule, allow.reason
+                ),
+            ),
+        }
+    }
+    findings.extend(meta);
+    findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scan_file;
+
+    fn run(path: &str, src: &str) -> Vec<super::Finding> {
+        scan_file(path, src)
+    }
+
+    fn rules(findings: &[super::Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    // ---- PAL-ORD ----------------------------------------------------
+
+    #[test]
+    fn ord_fires_on_partial_cmp_in_library_code() {
+        let src = "fn s(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        let f = run("algorithms/foo.rs", src);
+        assert_eq!(rules(&f), ["PAL-ORD"]);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn ord_ignores_comments_strings_and_tests() {
+        assert!(run("a.rs", "// the old partial_cmp sort\nfn f() {}\n").is_empty());
+        assert!(run("a.rs", "fn f() -> &'static str { \"partial_cmp\" }\n").is_empty());
+        let in_test =
+            "fn f() {}\n#[cfg(test)]\nmod t { fn g(a: f64, b: f64) { a.partial_cmp(&b); } }\n";
+        assert!(run("a.rs", in_test).is_empty());
+        assert!(run("main.rs", "fn f(a: f64, b: f64) { a.partial_cmp(&b); }\n").is_empty());
+    }
+
+    #[test]
+    fn ord_allow_suppresses_exactly_one() {
+        let src = "\
+// palint: allow(PAL-ORD, ordering a non-float key type)
+fn f(a: K, b: K) { a.partial_cmp(&b); }
+fn g(a: K, b: K) { a.partial_cmp(&b); }
+";
+        let f = run("x.rs", src);
+        assert_eq!(rules(&f), ["PAL-ORD"]);
+        assert_eq!(f[0].line, 3, "the un-allowed second hit must survive");
+    }
+
+    // ---- PAL-CLOCK --------------------------------------------------
+
+    #[test]
+    fn clock_fires_outside_approved_files() {
+        let f = run("algorithms/foo.rs", "fn f() { let t = std::time::Instant::now(); }\n");
+        assert_eq!(rules(&f), ["PAL-CLOCK"]);
+        let f = run("vsl/moments.rs", "fn f() { let t = SystemTime::now(); }\n");
+        assert_eq!(rules(&f), ["PAL-CLOCK"]);
+    }
+
+    #[test]
+    fn clock_approved_sites_and_tests_are_exempt() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert!(run("coordinator/budget.rs", src).is_empty());
+        assert!(run("profiling/timer.rs", src).is_empty());
+        assert!(run("main.rs", src).is_empty());
+        assert!(run("bin/palint.rs", src).is_empty());
+        let wrapped = format!("fn f() {{}}\n#[cfg(test)]\nmod t {{ {src} }}\n");
+        assert!(run("pool.rs", &wrapped).is_empty());
+    }
+
+    // ---- PAL-HASH ---------------------------------------------------
+
+    #[test]
+    fn hash_fires_on_iteration_not_lookup() {
+        let src = "\
+struct C { rows: HashMap<usize, f64> }
+impl C {
+    fn sum(&self) -> f64 { self.rows.values().sum() }
+    fn get(&self, k: usize) -> Option<&f64> { self.rows.get(&k) }
+}
+";
+        let f = run("cache.rs", src);
+        assert_eq!(rules(&f), ["PAL-HASH"]);
+        assert_eq!(f[0].line, 3);
+        assert!(f[0].message.contains("rows.values"));
+    }
+
+    #[test]
+    fn hash_fires_on_for_loop_and_retain() {
+        let src = "\
+fn f() {
+    let mut seen = HashSet::new();
+    for k in &seen { use_it(k); }
+    seen.retain(|k| k.is_live());
+}
+";
+        let f = run("x.rs", src);
+        assert_eq!(rules(&f), ["PAL-HASH", "PAL-HASH"]);
+    }
+
+    #[test]
+    fn hash_ignores_btreemap_and_unrelated_receivers() {
+        let src = "\
+fn f(v: Vec<u32>, m: BTreeMap<u32, u32>) {
+    for x in &v { use_it(x); }
+    for (k, _) in &m { use_it(k); }
+    let total: u32 = v.iter().sum();
+}
+";
+        assert!(run("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_binary_targets_exempt() {
+        let src = "fn f() { let m = HashMap::new(); for k in &m {} }\n";
+        assert!(run("main.rs", src).is_empty());
+        assert_eq!(rules(&run("lib_file.rs", src)), ["PAL-HASH"]);
+    }
+
+    // ---- PAL-UNSAFE -------------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_comment_fires() {
+        let f = run("x.rs", "fn f(p: *const u8) -> u8 { unsafe { *p } }\n");
+        assert_eq!(rules(&f), ["PAL-UNSAFE"]);
+    }
+
+    #[test]
+    fn unsafe_with_safety_block_above_is_clean() {
+        let src = "\
+fn f(p: *const u8) -> u8 {
+    // SAFETY: `p` is non-null and valid for reads — the caller
+    // constructed it from a live reference two lines up.
+    unsafe { *p }
+}
+";
+        assert!(run("x.rs", src).is_empty());
+    }
+
+    /// A multi-paragraph SAFETY contract uses bare `//` separator lines
+    /// (the pool transmute does); they must not break block contiguity.
+    /// A fully blank line still does.
+    #[test]
+    fn unsafe_safety_block_survives_bare_comment_separators() {
+        let src = "\
+fn f(p: *const u8) -> u8 {
+    // SAFETY: three obligations hold:
+    //
+    // 1. the caller keeps `p` alive.
+    unsafe { *p }
+}
+";
+        assert!(run("x.rs", src).is_empty());
+        let broken = "\
+fn f(p: *const u8) -> u8 {
+    // SAFETY: stale contract, detached by the blank line below.
+
+    unsafe { *p }
+}
+";
+        assert_eq!(rules(&run("x.rs", broken)), ["PAL-UNSAFE"]);
+    }
+
+    #[test]
+    fn unsafe_same_line_safety_is_clean_and_tests_are_not_exempt() {
+        let same_line = "fn f() { unsafe { g() } } // SAFETY: g has no preconditions\n";
+        assert!(run("x.rs", same_line).is_empty());
+        let in_test = "fn f() {}\n#[cfg(test)]\nmod t { fn g() { unsafe { h() } } }\n";
+        assert_eq!(rules(&run("x.rs", in_test)), ["PAL-UNSAFE"]);
+    }
+
+    #[test]
+    fn static_mut_is_banned_even_with_safety() {
+        let f = run("x.rs", "// SAFETY: single-threaded init\nstatic mut COUNTER: u32 = 0;\n");
+        assert_eq!(rules(&f), ["PAL-UNSAFE"]);
+        assert!(f[0].message.contains("static mut"));
+    }
+
+    #[test]
+    fn unsafe_in_doc_comment_is_ignored() {
+        assert!(run("x.rs", "/// this API is unsafe to misuse\nfn f() {}\n").is_empty());
+        assert!(run("x.rs", "#[allow(unsafe_code)]\nmod m;\n").is_empty());
+    }
+
+    // ---- PAL-ENV ----------------------------------------------------
+
+    #[test]
+    fn env_fires_outside_approved_sites() {
+        let f = run("tables/csv.rs", "fn f() { let v = std::env::var(\"X\"); }\n");
+        assert_eq!(rules(&f), ["PAL-ENV"]);
+        let f = run("x.rs", "fn f() { let v = std::env::var_os(\"X\"); }\n");
+        assert_eq!(rules(&f), ["PAL-ENV"]);
+    }
+
+    #[test]
+    fn env_approved_sites_are_exempt() {
+        let src = "fn f() { let v = std::env::var(\"ONEDAL_SVE_THREADS\"); }\n";
+        assert!(run("parallel/mod.rs", src).is_empty());
+        assert!(run("failpoint.rs", src).is_empty());
+        assert!(run("coordinator/mod.rs", src).is_empty());
+        assert!(run("main.rs", src).is_empty());
+    }
+
+    // ---- PAL-QUAR ---------------------------------------------------
+
+    #[test]
+    fn quar_fires_on_bare_entry_point() {
+        let src = "\
+impl M {
+    pub fn train(&self, x: &T) -> Result<Model> {
+        heavy_compute(x)
+    }
+}
+";
+        let f = run("algorithms/foo.rs", src);
+        assert_eq!(rules(&f), ["PAL-QUAR"]);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn quar_quarantined_and_delegating_bodies_are_clean() {
+        let direct = "\
+impl M {
+    pub fn train(&self, x: &T) -> Result<Model> {
+        crate::parallel::quarantine(\"m.train\", || heavy_compute(x))
+    }
+}
+";
+        assert!(run("algorithms/foo.rs", direct).is_empty());
+        let delegating = "\
+impl M {
+    pub fn infer(&self, x: &T) -> Result<Vec<f64>> {
+        let p = self.predict_proba(x)?;
+        Ok(argmax_rows(&p))
+    }
+}
+";
+        assert!(run("algorithms/foo.rs", delegating).is_empty());
+    }
+
+    #[test]
+    fn quar_only_applies_to_algorithms_entry_names() {
+        let src = "pub fn train(&self) -> Result<M> { compute() }\n";
+        assert!(run("blas/level3.rs", src).is_empty(), "outside algorithms/");
+        let other = "impl M { pub fn helper(&self) { fan_out() } }\n";
+        assert!(run("algorithms/foo.rs", other).is_empty(), "not an entry-point name");
+    }
+
+    // ---- allow directives / PAL-META --------------------------------
+
+    #[test]
+    fn allow_without_reason_is_meta() {
+        let src = "// palint: allow(PAL-ORD)\nfn f(a: f64, b: f64) { a.partial_cmp(&b); }\n";
+        let f = run("x.rs", src);
+        assert_eq!(rules(&f), ["PAL-META", "PAL-ORD"], "reason-less allow suppresses nothing");
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_is_meta() {
+        let f = run("x.rs", "// palint: allow(PAL-NOPE, because)\nfn f() {}\n");
+        assert_eq!(rules(&f), ["PAL-META"]);
+    }
+
+    #[test]
+    fn stale_allow_is_meta() {
+        let f = run("x.rs", "// palint: allow(PAL-CLOCK, leftover from a refactor)\nfn f() {}\n");
+        assert_eq!(rules(&f), ["PAL-META"]);
+        assert!(f[0].message.contains("stale"));
+    }
+
+    #[test]
+    fn malformed_directive_is_meta() {
+        let f = run("x.rs", "// palint: allow PAL-ORD please\nfn f() {}\n");
+        assert_eq!(rules(&f), ["PAL-META"]);
+    }
+
+    #[test]
+    fn same_line_allow_works() {
+        let src =
+            "fn f() { let t = Instant::now(); } // palint: allow(PAL-CLOCK, bench scaffolding)\n";
+        assert!(run("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn one_allow_one_suppression_two_hits_on_one_line() {
+        let src = "\
+// palint: allow(PAL-CLOCK, first read is licensed)
+fn f() { let a = Instant::now(); let b = SystemTime::now(); }
+";
+        let f = run("x.rs", src);
+        assert_eq!(rules(&f), ["PAL-CLOCK"], "the second hit on the line must survive");
+    }
+}

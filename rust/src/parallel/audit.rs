@@ -1,0 +1,226 @@
+//! Debug-build merge-order auditor — the runtime half of the `palint`
+//! contract checking (see `crate::lint` and docs/INVARIANTS.md).
+//!
+//! The static pass can prove a `HashMap` is never traversed, but it
+//! cannot prove that every *future* reduction combines its partials in
+//! partition order — the "input-keyed chunks, fixed-order merges" rule
+//! that makes parallel results bit-identical at any worker count. This
+//! module turns that rule into a checked property: every batch drain in
+//! `scheduler` opens a [`MergeAuditor`] for its fan-out site and feeds
+//! it the chunk index of each partial as it is merged. Under
+//! `debug_assertions` the auditor asserts the sequence is exactly
+//! `0, 1, …, parts−1` (ascending, gapless, complete — completeness is
+//! enforced on drop, so a refactor cannot silently skip it) and records
+//! the `(site, chunk)` stream in a bounded thread-local ring that tests
+//! inspect via [`recent_merges`]. Because every existing suite
+//! (`parallel_property`, `pool_lifecycle`, `chaos`) runs the schedulers
+//! at 1–4 workers, the property is exercised on every debug test run.
+//!
+//! Under `--release` the whole thing compiles out: the auditor is a
+//! zero-sized type with empty `#[inline(always)]` methods, so the gates
+//! add zero work to production drains.
+
+#[cfg(debug_assertions)]
+use std::cell::RefCell;
+#[cfg(debug_assertions)]
+use std::collections::VecDeque;
+
+/// Bound on the thread-local merge record ring.
+#[cfg(debug_assertions)]
+const RING_CAPACITY: usize = 256;
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Merges always happen on the thread draining the batch (the
+    /// submitter), so a thread-local ring sees a coherent sequence
+    /// without any cross-thread synchronization.
+    static RECENT: RefCell<VecDeque<(&'static str, usize)>> =
+        RefCell::new(VecDeque::with_capacity(RING_CAPACITY));
+}
+
+/// Asserts that one batch's partial results are merged in ascending
+/// fixed chunk order. Construct with [`MergeAuditor::begin`], call
+/// [`MergeAuditor::merged`] per partial, end with
+/// [`MergeAuditor::finish`].
+#[cfg(debug_assertions)]
+#[derive(Debug)]
+pub struct MergeAuditor {
+    site: &'static str,
+    parts: usize,
+    next: usize,
+}
+
+#[cfg(debug_assertions)]
+impl MergeAuditor {
+    /// Open an audit for a fan-out `site` merging `parts` partials.
+    pub fn begin(site: &'static str, parts: usize) -> Self {
+        MergeAuditor { site, parts, next: 0 }
+    }
+
+    /// Record that the partial for `chunk` was merged. Panics (debug
+    /// builds only) unless chunks arrive in exactly ascending order.
+    pub fn merged(&mut self, chunk: usize) {
+        assert_eq!(
+            chunk, self.next,
+            "{}: merge order violation — chunk {chunk} merged where {} was expected \
+             (fixed-order merging is what keeps parallel results bit-identical)",
+            self.site, self.next
+        );
+        assert!(
+            chunk < self.parts,
+            "{}: chunk {chunk} out of range for {} parts",
+            self.site,
+            self.parts
+        );
+        self.next += 1;
+        RECENT.with(|ring| {
+            let mut ring = ring.borrow_mut();
+            if ring.len() == RING_CAPACITY {
+                ring.pop_front();
+            }
+            ring.push_back((self.site, chunk));
+        });
+    }
+
+    /// Explicit end of the batch. The completeness assert lives in
+    /// `Drop`, so even a drain that forgets `finish` is still checked.
+    pub fn finish(self) {}
+}
+
+#[cfg(debug_assertions)]
+impl Drop for MergeAuditor {
+    fn drop(&mut self) {
+        // Skip during unwinding: the batch legitimately stops short
+        // when a job panic is being rethrown to the quarantine.
+        if !std::thread::panicking() {
+            assert_eq!(
+                self.next, self.parts,
+                "{}: batch dropped after merging {} of {} partials",
+                self.site, self.next, self.parts
+            );
+        }
+    }
+}
+
+/// Snapshot of this thread's most recent `(site, chunk)` merge records,
+/// oldest first (bounded to the last [`RING_CAPACITY`]).
+#[cfg(debug_assertions)]
+pub fn recent_merges() -> Vec<(&'static str, usize)> {
+    RECENT.with(|ring| ring.borrow().iter().copied().collect())
+}
+
+/// Clear this thread's merge record ring (test isolation helper).
+#[cfg(debug_assertions)]
+pub fn clear_recent() {
+    RECENT.with(|ring| ring.borrow_mut().clear());
+}
+
+// ---------------------------------------------------------------------
+// Release builds: same API surface, zero size, zero work. Everything
+// inlines to nothing, which is what lets the schedulers call the
+// auditor unconditionally.
+// ---------------------------------------------------------------------
+
+#[cfg(not(debug_assertions))]
+#[derive(Debug)]
+pub struct MergeAuditor;
+
+#[cfg(not(debug_assertions))]
+impl MergeAuditor {
+    #[inline(always)]
+    pub fn begin(_site: &'static str, _parts: usize) -> Self {
+        MergeAuditor
+    }
+
+    #[inline(always)]
+    pub fn merged(&mut self, _chunk: usize) {}
+
+    #[inline(always)]
+    pub fn finish(self) {}
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+pub fn recent_merges() -> Vec<(&'static str, usize)> {
+    Vec::new()
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+pub fn clear_recent() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascending_complete_sequence_passes_and_records() {
+        clear_recent();
+        let mut audit = MergeAuditor::begin("audit.test.ok", 3);
+        for chunk in 0..3 {
+            audit.merged(chunk);
+        }
+        audit.finish();
+        if cfg!(debug_assertions) {
+            let recs = recent_merges();
+            let ours: Vec<usize> = recs
+                .iter()
+                .filter(|(site, _)| *site == "audit.test.ok")
+                .map(|&(_, chunk)| chunk)
+                .collect();
+            assert_eq!(ours, vec![0, 1, 2]);
+        } else {
+            assert!(recent_merges().is_empty(), "release auditor must record nothing");
+        }
+    }
+
+    #[test]
+    fn single_part_batch_passes() {
+        let mut audit = MergeAuditor::begin("audit.test.single", 1);
+        audit.merged(0);
+        audit.finish();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "merge order violation")]
+    fn out_of_order_merge_panics() {
+        let mut audit = MergeAuditor::begin("audit.test.ooo", 2);
+        audit.merged(1);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "merge order violation")]
+    fn repeated_chunk_panics() {
+        let mut audit = MergeAuditor::begin("audit.test.dup", 2);
+        audit.merged(0);
+        audit.merged(0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "after merging 1 of 2")]
+    fn incomplete_batch_panics_on_drop() {
+        let mut audit = MergeAuditor::begin("audit.test.short", 2);
+        audit.merged(0);
+        drop(audit);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn ring_stays_bounded() {
+        clear_recent();
+        let n = RING_CAPACITY + 17;
+        let mut audit = MergeAuditor::begin("audit.test.ring", n);
+        for chunk in 0..n {
+            audit.merged(chunk);
+        }
+        audit.finish();
+        let recs = recent_merges();
+        assert_eq!(recs.len(), RING_CAPACITY);
+        // Oldest entries were evicted; the tail survives in order.
+        assert_eq!(recs[RING_CAPACITY - 1], ("audit.test.ring", n - 1));
+        assert_eq!(recs[0], ("audit.test.ring", n - RING_CAPACITY));
+    }
+}

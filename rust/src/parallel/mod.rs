@@ -23,6 +23,12 @@
 //!   implementation, kept as the launch-overhead baseline.
 //! * [`par_map`] — the read-only variant: jobs see only an index range
 //!   and return partials.
+//! * [`audit::MergeAuditor`] — the debug-build merge-order auditor:
+//!   every scheduler drain above asserts ascending, gapless, complete
+//!   chunk merging under `debug_assertions` (and compiles to nothing
+//!   under `--release`), turning the "input-keyed chunks, fixed-order
+//!   merges" determinism rule into a property checked by every debug
+//!   test run. See docs/INVARIANTS.md.
 //! * [`even_bounds`] / [`aligned_bounds`] / [`triangle_bounds`] — the
 //!   partitioners. `aligned_bounds` keeps cuts on micro-panel boundaries
 //!   so a tile is always computed whole by one worker (this is what
@@ -43,6 +49,14 @@
 //! `std::thread::available_parallelism`, and can be pinned at runtime
 //! with [`set_default_threads`].
 
+pub mod audit;
+// The one `unsafe` in the crate lives in the pool's job-lifetime
+// transmute (see the SAFETY contract at its definition). The crate
+// root carries `#![deny(unsafe_code)]`; only this module is licensed
+// to override it. (`forbid` would be stronger but cannot be overridden
+// by a scoped allow at all — E0453 — so `deny` + this one allow is the
+// tightest expressible policy.)
+#[allow(unsafe_code)]
 pub mod pool;
 mod scheduler;
 

@@ -225,12 +225,34 @@ impl WorkerPool {
                     .err();
                     latch.complete(panic);
                 });
-                // SAFETY: `run_batch` does not return — not even on
-                // panic — until the latch has counted every queued job
-                // complete, and a job signals its latch only after it
-                // has finished running and dropped its captures. The
-                // `'a` borrows therefore strictly outlive the erased
-                // closure's execution on whichever thread runs it.
+                // SAFETY: lifetime erasure (`'a` → `'static`), sound by
+                // three obligations this function upholds:
+                //
+                // 1. Containment — `run_batch` does not return, not
+                //    even on panic, until the latch has counted every
+                //    queued job complete: `help_until_done` loops until
+                //    `remaining == 0`, and the local panic payload is
+                //    rethrown only after that loop. The `'a` borrows
+                //    live in the caller's frame, which is pinned for
+                //    exactly that long.
+                // 2. Ordering — a job signals its latch strictly after
+                //    the erased closure has finished and dropped its
+                //    captures (`job()` consumes the box; the borrows
+                //    are dead before `latch.complete` runs), so the
+                //    latch reaching zero happens-after every access to
+                //    the borrows. Panic payloads cannot smuggle a
+                //    borrow out: `panic_any` requires `Any`, which is
+                //    `'static`.
+                // 3. Exclusivity — the queue hands each `Job` to
+                //    exactly one thread (`pop_front` under the mutex),
+                //    so no `&mut` capture is ever aliased.
+                //
+                // The `'static` in `Job` is taken to mean nothing more
+                // than "outlives its execution", which 1–3 guarantee.
+                // This is the crate's only `unsafe` (the root carries
+                // `#![deny(unsafe_code)]`; `parallel::pool` alone holds
+                // a scoped allow) and the Miri CI job runs these pool
+                // tests to check the erasure and the atomics for UB.
                 let wrapped: Job = unsafe {
                     std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(wrapped)
                 };
@@ -391,6 +413,11 @@ mod tests {
     /// quarantine bypass only raw queue jobs can hit) is reaped and
     /// replaced by the next batch, and results after the respawn match
     /// a fresh pool bit for bit.
+    // Miri: the test polls a 10 s wall-clock deadline around real
+    // thread teardown — minutes under the interpreter for no extra UB
+    // coverage (the transmute and atomics are exercised by the other
+    // pool tests).
+    #[cfg_attr(miri, ignore = "wall-clock deadline poll around thread teardown")]
     #[test]
     fn dead_worker_is_replaced_at_next_batch() {
         let pool = WorkerPool::new(2);
@@ -457,6 +484,11 @@ mod tests {
         drop(pool); // must terminate promptly, not hang
     }
 
+    // Miri: the global pool's workers park for the life of the process
+    // by design, and Miri reports still-running threads at main-thread
+    // exit as an error. Private-pool tests cover the same code paths
+    // with joined threads.
+    #[cfg_attr(miri, ignore = "global pool threads outlive main by design")]
     #[test]
     fn global_pool_is_reusable() {
         for _ in 0..4 {

@@ -15,6 +15,7 @@
 //! [`scope_rows_scoped`], the launch-overhead baseline the
 //! `ablate_threads` bench and the pool lifecycle tests compare against.
 
+use super::audit::MergeAuditor;
 use super::pool::WorkerPool;
 
 /// Evenly split `units` into at most `parts` contiguous ranges.
@@ -114,7 +115,10 @@ fn row_blocks<'d, T>(
 /// (row-major, `stride` elements per row), one persistent-pool job per
 /// part described by `bounds` (as produced by the partitioners above).
 /// Job results are collected **in partition order**, so reductions
-/// combined by the caller are deterministic for a given `bounds`.
+/// combined by the caller are deterministic for a given `bounds`. In
+/// debug builds a [`MergeAuditor`] checks that order on every drain
+/// (including the single-part path), so any future refactor toward
+/// completion-order merging fails the whole test suite immediately.
 ///
 /// With a single part the closure runs inline on the caller's thread —
 /// the 1-thread path never touches the pool.
@@ -139,7 +143,11 @@ where
         data.len()
     );
     if parts == 1 {
-        return vec![f(bounds[0], bounds[1], data)];
+        let mut audit = MergeAuditor::begin("scope_rows", 1);
+        let out = vec![f(bounds[0], bounds[1], data)];
+        audit.merged(0);
+        audit.finish();
+        return out;
     }
     let f = &f;
     let mut results: Vec<Option<R>> = (0..parts).map(|_| None).collect();
@@ -153,13 +161,20 @@ where
         })
         .collect();
     WorkerPool::global().run_batch(jobs);
-    results
+    let mut audit = MergeAuditor::begin("scope_rows", parts);
+    let out = results
         .into_iter()
-        .map(|r| match r {
-            Some(v) => v,
-            None => unreachable!("run_batch executes every job"),
+        .enumerate()
+        .map(|(w, r)| {
+            audit.merged(w);
+            match r {
+                Some(v) => v,
+                None => unreachable!("run_batch executes every job"),
+            }
         })
-        .collect()
+        .collect();
+    audit.finish();
+    out
 }
 
 /// Pre-pool reference implementation of [`scope_rows`]: one
@@ -185,7 +200,11 @@ where
         data.len()
     );
     if parts == 1 {
-        return vec![f(bounds[0], bounds[1], data)];
+        let mut audit = MergeAuditor::begin("scope_rows_scoped", 1);
+        let out = vec![f(bounds[0], bounds[1], data)];
+        audit.merged(0);
+        audit.finish();
+        return out;
     }
     let f = &f;
     std::thread::scope(|s| {
@@ -193,15 +212,22 @@ where
             .into_iter()
             .map(|(lo, hi, block)| s.spawn(move || f(lo, hi, block)))
             .collect();
-        handles
+        let mut audit = MergeAuditor::begin("scope_rows_scoped", parts);
+        let out = handles
             .into_iter()
-            .map(|h| match h.join() {
-                Ok(v) => v,
-                // Re-throw on the caller's thread so the crate-level
-                // quarantine sees the original payload.
-                Err(payload) => std::panic::resume_unwind(payload),
+            .enumerate()
+            .map(|(w, h)| {
+                audit.merged(w);
+                match h.join() {
+                    Ok(v) => v,
+                    // Re-throw on the caller's thread so the crate-level
+                    // quarantine sees the original payload.
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
             })
-            .collect()
+            .collect();
+        audit.finish();
+        out
     })
 }
 
@@ -217,7 +243,11 @@ where
         return Vec::new();
     }
     if parts == 1 {
-        return vec![f(bounds[0], bounds[1])];
+        let mut audit = MergeAuditor::begin("par_map", 1);
+        let out = vec![f(bounds[0], bounds[1])];
+        audit.merged(0);
+        audit.finish();
+        return out;
     }
     let f = &f;
     let mut results: Vec<Option<R>> = (0..parts).map(|_| None).collect();
@@ -232,13 +262,20 @@ where
         })
         .collect();
     WorkerPool::global().run_batch(jobs);
-    results
+    let mut audit = MergeAuditor::begin("par_map", parts);
+    let out = results
         .into_iter()
-        .map(|r| match r {
-            Some(v) => v,
-            None => unreachable!("run_batch executes every job"),
+        .enumerate()
+        .map(|(w, r)| {
+            audit.merged(w);
+            match r {
+                Some(v) => v,
+                None => unreachable!("run_batch executes every job"),
+            }
         })
-        .collect()
+        .collect();
+    audit.finish();
+    out
 }
 
 #[cfg(test)]
@@ -373,5 +410,38 @@ mod tests {
         let mut empty_out2: Vec<f64> = Vec::new();
         let partials = scope_rows_scoped(&mut empty_out2, 4, &[0, 1, 3], |_, _, block| block.len());
         assert_eq!(partials, vec![0, 0]);
+    }
+
+    /// Every drain feeds the debug-build merge auditor: after a
+    /// fan-out, the thread-local record shows the complete ascending
+    /// chunk sequence for the site, at every worker count (the
+    /// single-part inline path included).
+    #[cfg(debug_assertions)]
+    #[test]
+    fn drains_feed_the_merge_auditor_in_order() {
+        use super::super::audit;
+
+        let seq_for = |site: &str| -> Vec<usize> {
+            audit::recent_merges()
+                .iter()
+                .filter(|(s, _)| *s == site)
+                .map(|&(_, chunk)| chunk)
+                .collect()
+        };
+        for parts in 1..=4 {
+            audit::clear_recent();
+            let bounds = even_bounds(40, parts);
+            let n = bounds.len() - 1;
+            let _ = par_map(&bounds, |lo, hi| hi - lo);
+            assert_eq!(seq_for("par_map"), (0..n).collect::<Vec<_>>(), "parts={parts}");
+        }
+        audit::clear_recent();
+        let mut data = vec![0u8; 12];
+        let _ = scope_rows(&mut data, 3, &[0, 2, 4], |_, _, _| 0usize);
+        assert_eq!(seq_for("scope_rows"), vec![0, 1]);
+        audit::clear_recent();
+        let mut data2 = vec![0u8; 12];
+        let _ = scope_rows_scoped(&mut data2, 3, &[0, 2, 4], |_, _, _| 0usize);
+        assert_eq!(seq_for("scope_rows_scoped"), vec![0, 1]);
     }
 }

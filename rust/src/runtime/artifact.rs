@@ -9,7 +9,7 @@
 //! (pick the widest vector unit the hardware offers, mask the rest).
 
 use crate::error::{Error, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 /// One compiled kernel variant.
@@ -36,16 +36,26 @@ impl Artifact {
 }
 
 /// Parsed `manifest.txt`: kernel id → available variants.
+///
+/// The index is a `BTreeMap` (PAL-HASH, docs/INVARIANTS.md): [`len`],
+/// [`kernels`] and any future aggregate traverse it, and sorted-key
+/// order keeps those traversals independent of manifest line order.
+/// Within one kernel, variants keep their manifest order — variant
+/// selection tie-breaks by position, so that order is part of the
+/// dispatch contract.
+///
+/// [`len`]: ArtifactRegistry::len
+/// [`kernels`]: ArtifactRegistry::kernels
 #[derive(Default, Debug)]
 pub struct ArtifactRegistry {
-    by_kernel: HashMap<String, Vec<Artifact>>,
+    by_kernel: BTreeMap<String, Vec<Artifact>>,
 }
 
 impl ArtifactRegistry {
     /// Parse a manifest file. Each non-comment line:
     /// `kernel variant dim0 dim1 …` (whitespace-separated).
     pub fn parse(text: &str) -> Result<Self> {
-        let mut by_kernel: HashMap<String, Vec<Artifact>> = HashMap::new();
+        let mut by_kernel: BTreeMap<String, Vec<Artifact>> = BTreeMap::new();
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -93,6 +103,12 @@ impl ArtifactRegistry {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Registered kernel ids, in sorted order (a pure function of the
+    /// manifest's *contents*, not its line order).
+    pub fn kernels(&self) -> Vec<&str> {
+        self.by_kernel.keys().map(String::as_str).collect()
     }
 
     /// All variants of a kernel.
@@ -169,6 +185,29 @@ wss_select n1024 1024
         let a = r.largest_tile_fit("kmeans_assign", &[5000, 50, 10]).unwrap();
         assert_eq!(a.dims[0], 1024); // biggest row tile with d/k fitting
         assert!(r.largest_tile_fit("kmeans_assign", &[10, 500, 10]).is_none());
+    }
+
+    /// Regression (ISSUE 7, PAL-HASH): the kernel index traversals
+    /// (`len`, `kernels`) must be a pure function of the manifest's
+    /// contents — reordering its lines may not change any aggregate,
+    /// and within one kernel the variant order (a dispatch tie-break)
+    /// must follow the manifest.
+    #[test]
+    fn registry_traversal_is_line_order_independent() {
+        let reordered = "\
+wss_select n1024 1024
+kmeans_assign n1024_d128_k32 1024 128 32
+kmeans_assign n256_d64_k16 256 64 16
+kmeans_assign n1024_d64_k16 1024 64 16
+";
+        let a = ArtifactRegistry::parse(MANIFEST).unwrap();
+        let b = ArtifactRegistry::parse(reordered).unwrap();
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.kernels(), vec!["kmeans_assign", "wss_select"]);
+        assert_eq!(a.kernels(), b.kernels());
+        // Within-kernel variant order follows each manifest.
+        assert_eq!(a.variants("kmeans_assign")[0].name, "kmeans_assign__n256_d64_k16");
+        assert_eq!(b.variants("kmeans_assign")[0].name, "kmeans_assign__n1024_d128_k32");
     }
 
     #[test]
