@@ -1,0 +1,177 @@
+//! Serving-layer ablation — two levers, measured separately:
+//!
+//! * **Coalescing**: the 64×small-batch fixture through an
+//!   [`InferenceSession`] (tile-aligned super-batches) vs naive
+//!   per-request model calls, at 1 and 4 workers. Acceptance:
+//!   coalesced throughput ≥ 1.5× naive at 4 workers.
+//! * **Model-resident packing**: pack-free inference through the
+//!   train-time `ModelPanel` vs a replica of the old per-call path
+//!   (corpus repacked + norms recomputed on every call), for the
+//!   k-means assignment and KNN top-k hot paths.
+//!
+//! Results land in `BENCH_serve.json` (repo root when run from
+//! `rust/`, else the current directory) with the same "pending first
+//! run" scaffold convention as the other BENCH files.
+
+use onedal_sve::prelude::*;
+use onedal_sve::primitives::distances;
+use onedal_sve::profiling::{BenchResult, Bencher};
+use onedal_sve::tables::synth;
+use std::io::Write as _;
+
+const CORPUS_ROWS: usize = 2_000;
+const COLS: usize = 16;
+const K_CENT: usize = 8;
+const K_NN: usize = 5;
+const N_REQUESTS: usize = 64;
+const ROWS_PER_REQUEST: usize = 3;
+const PACK_QUERIES: usize = 512;
+const WORKERS: [usize; 2] = [1, 4];
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Hand-rolled JSON dump (no serde in the offline image).
+fn write_json(results: &[BenchResult]) -> std::io::Result<String> {
+    let path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_serve.json"
+    } else {
+        "BENCH_serve.json"
+    };
+    let mut rows = Vec::new();
+    for r in results {
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"median_ms\": {:.4}, \"mean_ms\": {:.4}, \"samples\": {}}}",
+            json_escape(&r.name),
+            r.median.as_secs_f64() * 1e3,
+            r.mean.as_secs_f64() * 1e3,
+            r.samples
+        ));
+    }
+    let med =
+        |name: &str| results.iter().find(|r| r.name == name).map(|r| r.median.as_secs_f64());
+    let mut speedups = Vec::new();
+    for w in WORKERS {
+        if let (Some(naive), Some(coalesced)) =
+            (med(&format!("serve/w{w}/naive")), med(&format!("serve/w{w}/coalesced")))
+        {
+            speedups.push(format!(
+                "    {{\"case\": \"serve-w{w}/coalesced-vs-naive\", \"speedup\": {:.3}}}",
+                naive / coalesced
+            ));
+        }
+    }
+    for algo in ["kmeans-infer", "knn-topk"] {
+        if let (Some(repack), Some(packfree)) =
+            (med(&format!("pack/{algo}/repack")), med(&format!("pack/{algo}/packfree")))
+        {
+            speedups.push(format!(
+                "    {{\"case\": \"{algo}/packfree-vs-repack\", \"speedup\": {:.3}}}",
+                repack / packfree
+            ));
+        }
+    }
+    let body = format!(
+        "{{\n  \"bench\": \"ablate_serve\",\n  \
+         \"regenerate\": \"cd rust && cargo bench --bench ablate_serve\",\n  \
+         \"fixtures\": {{\"corpus\": \"{CORPUS_ROWS}x{COLS}\", \"kmeans_k\": {K_CENT}, \
+         \"knn_k\": {K_NN}, \"requests\": {N_REQUESTS}, \
+         \"rows_per_request\": {ROWS_PER_REQUEST}, \"pack_queries\": {PACK_QUERIES}, \
+         \"workers\": [1, 4]}},\n  \
+         \"acceptance\": \"coalesced throughput >= 1.5x naive per-request at 4 workers \
+         on the {N_REQUESTS}x{ROWS_PER_REQUEST}-row small-batch fixture\",\n  \
+         \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+        speedups.join(",\n"),
+    );
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(body.as_bytes())?;
+    Ok(path.to_string())
+}
+
+fn ctx_with_threads(threads: usize) -> Context {
+    Context::builder()
+        .artifact_dir("/nonexistent")
+        .backend(Backend::Vectorized)
+        .threads(threads)
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    let mut e = Mt19937::new(10);
+    let mut b = Bencher::new(200, 7);
+
+    let (x, _) = synth::make_blobs(&mut e, CORPUS_ROWS, COLS, K_CENT, 1.0);
+    let labels: Vec<f64> = (0..CORPUS_ROWS).map(|i| (i % 3) as f64).collect();
+
+    // ---- serving: coalesced super-batches vs naive per-request ----
+    let train_ctx = ctx_with_threads(4);
+    let km = KMeans::params().k(K_CENT).max_iter(20).train(&train_ctx, &x).unwrap();
+    let raw: Vec<Vec<f64>> = (0..N_REQUESTS)
+        .map(|i| {
+            let start = (i * ROWS_PER_REQUEST) % (CORPUS_ROWS - ROWS_PER_REQUEST);
+            x.data()[start * COLS..(start + ROWS_PER_REQUEST) * COLS].to_vec()
+        })
+        .collect();
+    let requests: Vec<ServeRequest> = raw
+        .iter()
+        .map(|d| ServeRequest::new(d.clone(), ROWS_PER_REQUEST, COLS).unwrap())
+        .collect();
+    for w in WORKERS {
+        let ctx = ctx_with_threads(w);
+        let session = InferenceSession::new(&km);
+        b.bench(&format!("serve/w{w}/coalesced"), || {
+            let results = session.serve(&ctx, &requests);
+            std::hint::black_box(results.len());
+        });
+        b.bench(&format!("serve/w{w}/naive"), || {
+            for d in &raw {
+                let q = DenseTable::from_vec(d.clone(), ROWS_PER_REQUEST, COLS).unwrap();
+                let out = ServeModel::serve_batch(&km, &ctx, &q).unwrap();
+                std::hint::black_box(out.len());
+            }
+        });
+    }
+
+    // ---- packing: model-resident panel vs per-call repack replica ----
+    let ctx = ctx_with_threads(4);
+    let t = ctx.threads();
+    let q = synth::make_blobs(&mut e, PACK_QUERIES, COLS, K_CENT, 1.0).0;
+
+    // k-means assignment: panel path inside `infer` vs repacking the
+    // centroid corpus (pack + pooled norms) on every call — the
+    // pre-panel per-call behavior.
+    b.bench("pack/kmeans-infer/packfree", || {
+        let assign = km.infer(&ctx, &q).unwrap();
+        std::hint::black_box(assign.len());
+    });
+    let mut assign = vec![0usize; PACK_QUERIES];
+    b.bench("pack/kmeans-infer/repack", || {
+        let corpus = distances::pack_corpus_table(&km.centroids, t);
+        let inertia =
+            distances::argmin_assign(q.data(), PACK_QUERIES, &corpus, true, &mut assign, t);
+        std::hint::black_box(inertia);
+    });
+
+    // KNN top-k: panel path inside `kneighbors` vs repacking the full
+    // training corpus on every call.
+    let knn = KnnClassifier::params().k(K_NN).train(&train_ctx, &x, &labels).unwrap();
+    b.bench("pack/knn-topk/packfree", || {
+        let nn = knn.kneighbors(&ctx, &q).unwrap();
+        std::hint::black_box(nn.len());
+    });
+    b.bench("pack/knn-topk/repack", || {
+        let corpus = distances::pack_corpus_table(&x, t);
+        let nn = distances::top_k(q.data(), PACK_QUERIES, &corpus, K_NN, t);
+        std::hint::black_box(nn.len());
+    });
+
+    b.speedup_table("Coalesced serving vs naive per-request", "naive");
+    b.speedup_table("Pack-free inference vs per-call repack", "repack");
+    match write_json(b.results()) {
+        Ok(path) => println!("\nrecorded: {path}"),
+        Err(err) => eprintln!("\nfailed to write BENCH_serve.json: {err}"),
+    }
+}

@@ -21,12 +21,23 @@
 //! values, and `Backend::Naive` densifies first — the sparse paths'
 //! test oracle. No sparse Pallas kernel exists, so `Artifact` contexts
 //! fall back to the vectorized sparse path for CSR inputs.
+//!
+//! Two pack/compute hoists keep the hot loops lean:
+//!
+//! * the query-side norms `‖x‖²` are constant across Lloyd iterations
+//!   (only the centroids move), so both training loops compute them
+//!   once before the loop and feed the `*_with_norms` engine entry
+//!   points — bit-identical to the per-iteration recompute, tested;
+//! * the final centroids are packed once at `train` time into a
+//!   model-resident [`ModelPanel`], so `infer` is pack-free for both
+//!   query layouts ([`distances::argmin_packed`]).
 
 use crate::blas::sqdist;
 use crate::coordinator::{batch, Backend, Context, ConvergenceStatus};
 use crate::error::{Error, Result};
 use crate::parallel;
 use crate::primitives::distances;
+use crate::primitives::packed::ModelPanel;
 use crate::rng::{distributions::sample_indices, Engine, Mt19937, Uniform};
 use crate::rng::Distribution;
 use crate::sparse::CsrMatrix;
@@ -71,6 +82,10 @@ pub struct KMeansModel {
     /// wall-time deadline expired (`DeadlineExceeded`). The centroids
     /// are the last completed Lloyd iterate in every case.
     pub status: ConvergenceStatus,
+    /// Final centroids prepacked at `train` time (micro-panels +
+    /// pooled norms + transposed view), so [`KMeansModel::infer`] is
+    /// pack-free for both query layouts.
+    panel: ModelPanel,
 }
 
 /// One kmeans++ draw from the D² distribution (uniform fallback when
@@ -217,6 +232,16 @@ impl KMeansParams {
         let mut iterations = 0;
         let mut status = ConvergenceStatus::IterLimit;
         let mut meter = ctx.budget().meter();
+        // The query-side norms are iteration-invariant (only the
+        // centroids move), so hoist them out of the Lloyd loop when the
+        // fused engine will consume them. The dispatch dims are loop
+        // constants, so the rung choice is too.
+        let fused_rung = matches!(
+            ctx.dispatch("kmeans_assign", &[n, x.cols(), self.k]),
+            Backend::Reference | Backend::Vectorized | Backend::Auto
+        );
+        let qnorms = fused_rung
+            .then(|| distances::dense_row_norms(x.data(), n, x.cols(), ctx.threads()));
         for it in 0..self.max_iter {
             if let Some(expired) = meter.check_before_iter() {
                 // Budget spent: return the last completed Lloyd iterate.
@@ -224,7 +249,7 @@ impl KMeansParams {
                 break;
             }
             iterations = it + 1;
-            let new_inertia = assign_step(ctx, x, &centroids, &mut assign)?;
+            let new_inertia = assign_step(ctx, x, &centroids, qnorms.as_deref(), &mut assign)?;
             // Update step: mean of assigned points per cluster,
             // parallelized over fixed input-keyed chunks (see
             // [`update_sums`]).
@@ -237,13 +262,16 @@ impl KMeansParams {
             }
             inertia = new_inertia;
         }
-        Ok(KMeansModel { centroids, inertia, iterations, status })
+        let panel = ModelPanel::from_dense_table(&centroids, ctx.threads());
+        Ok(KMeansModel { centroids, inertia, iterations, status, panel })
     }
 
     /// CSR training loop: the same Lloyd iteration, with the
     /// assignment pass on the engine's sparse query path (centroids
-    /// packed once per pass) and the update scatter accumulating only
-    /// the stored values. Bit-identical at any worker count.
+    /// packed once per pass — the centroids move every iteration; the
+    /// query norms do not, and are hoisted) and the update scatter
+    /// accumulating only the stored values. Bit-identical at any
+    /// worker count.
     fn train_csr(
         &self,
         ctx: &Context,
@@ -260,6 +288,8 @@ impl KMeansParams {
         let mut iterations = 0;
         let mut status = ConvergenceStatus::IterLimit;
         let mut meter = ctx.budget().meter();
+        // Iteration-invariant query norms, hoisted out of the loop.
+        let qnorms = distances::csr_row_norms(x, ctx.threads());
         for it in 0..self.max_iter {
             if let Some(expired) = meter.check_before_iter() {
                 // Budget spent: return the last completed Lloyd iterate.
@@ -268,8 +298,14 @@ impl KMeansParams {
             }
             iterations = it + 1;
             let corpus = distances::CsrCorpus::from_dense(&centroids, ctx.threads());
-            let new_inertia =
-                distances::argmin_assign_csr(x, &corpus, predicated, &mut assign, ctx.threads());
+            let new_inertia = distances::argmin_assign_csr_with_norms(
+                x,
+                &corpus,
+                &qnorms,
+                predicated,
+                &mut assign,
+                ctx.threads(),
+            );
             let (counts, sums) = update_sums_csr(x, &assign, self.k, ctx.threads());
             apply_centroid_means(&mut centroids, &counts, &sums);
             if inertia.is_finite() && (inertia - new_inertia).abs() <= self.tol * inertia.max(1.0) {
@@ -279,7 +315,8 @@ impl KMeansParams {
             }
             inertia = new_inertia;
         }
-        Ok(KMeansModel { centroids, inertia, iterations, status })
+        let panel = ModelPanel::from_dense_table(&centroids, ctx.threads());
+        Ok(KMeansModel { centroids, inertia, iterations, status, panel })
     }
 
     /// Centroid seeding for CSR inputs — the same strategies as the
@@ -332,32 +369,78 @@ impl KMeansParams {
 
 impl KMeansModel {
     /// Assign each row of `x` (either layout) to its nearest centroid.
+    ///
+    /// Pack-free: the fused rungs borrow the model-resident
+    /// [`ModelPanel`] built at `train` time ([`distances::argmin_packed`]);
+    /// only the naive and artifact rungs bypass it.
     pub fn infer<'a>(&self, ctx: &Context, x: impl Into<TableRef<'a>>) -> Result<Vec<usize>> {
         let x = x.into();
         crate::validate::dims_match(self.centroids.cols(), x.cols(), "kmeans")?;
-        parallel::quarantine("kmeans.infer", || match x {
-            TableRef::Dense(d) => {
-                let mut assign = vec![0usize; d.rows()];
-                assign_step(ctx, d, &self.centroids, &mut assign)?;
-                Ok(assign)
-            }
-            TableRef::Csr(s) => {
-                if s.cols() != self.centroids.cols() {
-                    return Err(Error::Shape("kmeans: centroid dim mismatch".into()));
-                }
-                if matches!(ctx.backend(), Backend::Naive) {
+        parallel::quarantine("kmeans.infer", || {
+            let dims = &[x.rows(), x.cols(), self.centroids.rows()];
+            let rung = ctx.dispatch("kmeans_assign", dims);
+            match x {
+                TableRef::Dense(d) => match rung {
+                    Backend::Naive => {
+                        let mut assign = vec![0usize; d.rows()];
+                        assign_naive(d, &self.centroids, &mut assign);
+                        Ok(assign)
+                    }
+                    Backend::Artifact => {
+                        let mut assign = vec![0usize; d.rows()];
+                        assign_artifact(ctx, d, &self.centroids, &mut assign)?;
+                        Ok(assign)
+                    }
+                    other => {
+                        let predicated = !matches!(other, Backend::Reference);
+                        let mut assign = vec![0usize; d.rows()];
+                        distances::argmin_packed(
+                            x,
+                            &self.panel,
+                            predicated,
+                            &mut assign,
+                            ctx.threads(),
+                        )?;
+                        Ok(assign)
+                    }
+                },
+                TableRef::Csr(s) => {
+                    if matches!(ctx.backend(), Backend::Naive) {
+                        let dense = s.to_dense();
+                        let mut assign = vec![0usize; s.rows()];
+                        assign_naive(&dense, &self.centroids, &mut assign);
+                        return Ok(assign);
+                    }
+                    let predicated = !matches!(rung, Backend::Reference);
                     let mut assign = vec![0usize; s.rows()];
-                    assign_step(ctx, &s.to_dense(), &self.centroids, &mut assign)?;
-                    return Ok(assign);
+                    distances::argmin_packed(
+                        x,
+                        &self.panel,
+                        predicated,
+                        &mut assign,
+                        ctx.threads(),
+                    )?;
+                    Ok(assign)
                 }
-                let dims = &[s.rows(), s.cols(), self.centroids.rows()];
-                let predicated = !matches!(ctx.dispatch("kmeans_assign", dims), Backend::Reference);
-                let corpus = distances::CsrCorpus::from_dense(&self.centroids, ctx.threads());
-                let mut assign = vec![0usize; s.rows()];
-                distances::argmin_assign_csr(s, &corpus, predicated, &mut assign, ctx.threads());
-                Ok(assign)
             }
         })
+    }
+
+    /// The model-resident packed centroid panel.
+    pub fn panel(&self) -> &ModelPanel {
+        &self.panel
+    }
+}
+
+impl crate::coordinator::serve::ServeModel for KMeansModel {
+    fn serve_dims(&self) -> usize {
+        self.centroids.cols()
+    }
+
+    fn serve_batch(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>> {
+        // Cluster index per row, widened to the serving wire type;
+        // `infer` is quarantined and pack-free.
+        Ok(self.infer(ctx, q)?.into_iter().map(|c| c as f64).collect())
     }
 }
 
@@ -496,10 +579,14 @@ fn update_sums_csr(
 }
 
 /// One assignment pass; returns the inertia. Dispatches on the ladder.
+/// `qnorms` optionally carries the hoisted query norms (the Lloyd loop
+/// computes them once; one-shot callers pass `None` and the engine
+/// computes them inline with the same bits).
 fn assign_step(
     ctx: &Context,
     x: &DenseTable<f64>,
     centroids: &DenseTable<f64>,
+    qnorms: Option<&[f64]>,
     assign: &mut [usize],
 ) -> Result<f64> {
     let d = x.cols();
@@ -508,9 +595,9 @@ fn assign_step(
     }
     match ctx.dispatch("kmeans_assign", &[x.rows(), d, centroids.rows()]) {
         Backend::Naive => Ok(assign_naive(x, centroids, assign)),
-        Backend::Reference => Ok(assign_gemm(x, centroids, assign, false, ctx.threads())),
+        Backend::Reference => Ok(assign_gemm(x, centroids, qnorms, assign, false, ctx.threads())),
         Backend::Vectorized | Backend::Auto => {
-            Ok(assign_gemm(x, centroids, assign, true, ctx.threads()))
+            Ok(assign_gemm(x, centroids, qnorms, assign, true, ctx.threads()))
         }
         Backend::Artifact => assign_artifact(ctx, x, centroids, assign),
     }
@@ -549,12 +636,13 @@ fn assign_naive(x: &DenseTable<f64>, c: &DenseTable<f64>, assign: &mut [usize]) 
 fn assign_gemm(
     x: &DenseTable<f64>,
     c: &DenseTable<f64>,
+    qnorms: Option<&[f64]>,
     assign: &mut [usize],
     fused: bool,
     threads: usize,
 ) -> f64 {
     let corpus = distances::pack_corpus(c.data(), c.rows(), c.cols(), threads);
-    distances::argmin_assign(x.data(), x.rows(), &corpus, fused, assign, threads)
+    distances::argmin_assign_with_norms(x.data(), x.rows(), &corpus, qnorms, fused, assign, threads)
 }
 
 /// Artifact rung: run the Pallas `kmeans_assign` kernel via PJRT on
@@ -663,13 +751,54 @@ mod tests {
         let ctxv = ctx(Backend::Vectorized);
         let model = KMeans::params().k(6).seed(2).max_iter(5).train(&ctxv, &x).unwrap();
         let mut a1 = vec![0usize; 6_000];
-        let i1 = assign_gemm(&x, &model.centroids, &mut a1, true, 1);
+        let i1 = assign_gemm(&x, &model.centroids, None, &mut a1, true, 1);
         for threads in 2..=4 {
             let mut a = vec![0usize; 6_000];
-            let it = assign_gemm(&x, &model.centroids, &mut a, true, threads);
+            let it = assign_gemm(&x, &model.centroids, None, &mut a, true, threads);
             assert_eq!(a, a1, "threads={threads}");
             assert_eq!(it.to_bits(), i1.to_bits(), "threads={threads}");
         }
+    }
+
+    /// Satellite of the norm hoist: feeding precomputed query norms
+    /// into the assignment pass is bit-identical to the inline
+    /// computation — the hoisted reduction shares the engine's exact
+    /// per-row `dot` bits.
+    #[test]
+    fn hoisted_query_norms_do_not_change_assignment_bits() {
+        let mut e = Mt19937::new(17);
+        let (x, _) = make_blobs(&mut e, 900, 6, 4, 1.0);
+        let ctxv = ctx(Backend::Vectorized);
+        let model = KMeans::params().k(4).seed(6).max_iter(4).train(&ctxv, &x).unwrap();
+        let norms = distances::dense_row_norms(x.data(), x.rows(), x.cols(), 3);
+        for fused in [false, true] {
+            let mut a_inline = vec![0usize; 900];
+            let mut a_hoist = vec![0usize; 900];
+            let i_inline = assign_gemm(&x, &model.centroids, None, &mut a_inline, fused, 3);
+            let i_hoist =
+                assign_gemm(&x, &model.centroids, Some(&norms), &mut a_hoist, fused, 3);
+            assert_eq!(a_inline, a_hoist, "fused={fused}");
+            assert_eq!(i_inline.to_bits(), i_hoist.to_bits(), "fused={fused}");
+        }
+    }
+
+    /// Both query layouts route `infer` through the model-resident
+    /// panel and land on the same assignment. (The strict zero-pack
+    /// counter contract lives in `tests/serve_property.rs`, where a
+    /// file-local lock serializes the counter reads; the process-global
+    /// counter is racy against unrelated unit tests here.)
+    #[test]
+    fn panel_infer_agrees_across_query_layouts() {
+        use crate::sparse::{CsrMatrix, IndexBase};
+        let mut e = Mt19937::new(23);
+        let (x, _) = make_blobs(&mut e, 400, 5, 3, 0.5);
+        let xs = CsrMatrix::from_dense(&x, 0.0, IndexBase::Zero);
+        let cv = ctx(Backend::Vectorized);
+        let model = KMeans::params().k(3).seed(4).max_iter(8).train(&cv, &x).unwrap();
+        let a_dense = model.infer(&cv, &x).unwrap();
+        let a_csr = model.infer(&cv, &xs).unwrap();
+        assert_eq!(a_dense, a_csr);
+        assert_eq!(model.panel().rows(), 3);
     }
 
     /// The centroid *update* step is now parallel too: whole trainings

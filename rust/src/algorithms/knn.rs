@@ -11,17 +11,22 @@
 //! each cache-hot distance tile.
 //!
 //! Both the reference set and the queries may be CSR
-//! ([`crate::tables::TableRef`]): sparse queries run the engine's CSR
-//! sweep against the corpus packed once as a
-//! [`distances::CsrCorpus`] (densified-transposed panel + norms);
-//! a CSR corpus with dense queries densifies the corpus once and runs
-//! the dense engine. Under `Backend::Naive` everything densifies — the
-//! sparse paths' test oracle.
+//! ([`crate::tables::TableRef`]): the corpus is packed **once at
+//! `train` time** into a model-resident
+//! [`crate::primitives::packed::ModelPanel`] (prepacked micro-panels +
+//! transposed view for dense corpora; densified-transposed view + the
+//! `O(nnz)` CSR transpose for sparse ones), so `kneighbors` is
+//! pack-free for every layout pairing — including dense queries
+//! against a CSR corpus, which run the sparse end-to-end
+//! `csrmm(Transpose)` cross term instead of densifying. Under
+//! `Backend::Naive` everything densifies — the sparse paths' test
+//! oracle.
 
 use crate::blas::sqdist;
 use crate::coordinator::{Backend, Context};
 use crate::error::Result;
-use crate::primitives::distances::{self, CsrCorpus};
+use crate::primitives::distances;
+use crate::primitives::packed::ModelPanel;
 use crate::tables::{DenseTable, Table, TableRef};
 use crate::validate;
 
@@ -40,13 +45,15 @@ impl KnnClassifier {
 }
 
 /// "Training" stores the reference set (brute-force KNN is lazy) in
-/// whichever layout it arrived.
+/// whichever layout it arrived, plus the corpus packed once into a
+/// model-resident [`ModelPanel`] so queries never re-pack.
 #[derive(Clone, Debug)]
 pub struct KnnModel {
     pub k: usize,
     pub x: Table,
     pub y: Vec<f64>,
     pub classes: usize,
+    panel: ModelPanel,
 }
 
 impl KnnParams {
@@ -57,7 +64,7 @@ impl KnnParams {
 
     pub fn train<'a>(
         &self,
-        _ctx: &Context,
+        ctx: &Context,
         x: impl Into<TableRef<'a>>,
         y: &[f64],
     ) -> Result<KnnModel> {
@@ -65,14 +72,14 @@ impl KnnParams {
         validate::non_empty(x.rows(), x.cols(), "knn")?;
         validate::labels_match(x.rows(), y.len(), "knn")?;
         validate::k_in_range(self.k, x.rows(), "k", "knn")?;
-        // Lazy training does no fan-out today, but the fault contract
-        // (PAL-QUAR) is uniform: every entry-point body past validation
-        // runs quarantined, so a panic in the copy — or in whatever
-        // corpus packing lands here next — is Error::Internal, never an
-        // abort.
+        // Training is where the pack now happens (PAL-QUAR covers it):
+        // the corpus is packed once into the model-resident panel, and
+        // every later query borrows it.
+        let threads = ctx.threads();
         crate::parallel::quarantine("knn.train", || {
             let classes = y.iter().fold(0.0f64, |a, &b| a.max(b)) as usize + 1;
-            Ok(KnnModel { k: self.k, x: x.to_table(), y: y.to_vec(), classes })
+            let panel = ModelPanel::from_table(x, threads);
+            Ok(KnnModel { k: self.k, x: x.to_table(), y: y.to_vec(), classes, panel })
         })
     }
 }
@@ -113,51 +120,38 @@ impl KnnModel {
         let dims = [q.rows().min(256), self.x.rows(), q.cols()];
         let naive = matches!(ctx.dispatch("pairwise_sqdist", &dims), Backend::Naive);
         let t = ctx.threads();
-        crate::parallel::quarantine("knn.kneighbors", || Ok(match (self.x.view(), q) {
-            (TableRef::Dense(x), TableRef::Dense(qd)) => {
-                if naive {
-                    kneighbors_naive(x, qd, self.k)
-                } else {
-                    self.kneighbors_fused(x, qd, t)
-                }
-            }
-            (corpus, query) => {
-                if naive {
-                    // Densified naive rung — the sparse paths' oracle.
-                    kneighbors_naive(&corpus.to_dense(), &query.to_dense(), self.k)
-                } else {
-                    match (corpus, query) {
-                        (TableRef::Csr(x), TableRef::Csr(qs)) => {
-                            distances::top_k_csr(qs, &CsrCorpus::from_csr(x, t), self.k, t)
-                        }
-                        (TableRef::Dense(x), TableRef::Csr(qs)) => {
-                            distances::top_k_csr(qs, &CsrCorpus::from_dense(x, t), self.k, t)
-                        }
-                        (TableRef::Csr(x), TableRef::Dense(qd)) => {
-                            // Mixed CSR-corpus/dense-query: densify the
-                            // corpus once, then the dense engine.
-                            self.kneighbors_fused(&x.to_dense(), qd, t)
-                        }
-                        _ => unreachable!("dense corpus × dense query handled above"),
+        crate::parallel::quarantine("knn.kneighbors", || {
+            if naive {
+                // Densified naive rung — the packed paths' oracle.
+                return Ok(match (self.x.view(), q) {
+                    (TableRef::Dense(x), TableRef::Dense(qd)) => {
+                        kneighbors_naive(x, qd, self.k)
                     }
-                }
+                    (corpus, query) => {
+                        kneighbors_naive(&corpus.to_dense(), &query.to_dense(), self.k)
+                    }
+                });
             }
-        }))
+            // Every non-naive layout pairing borrows the panel packed
+            // at train time — no per-call corpus packing.
+            distances::top_k_packed(q, &self.panel, self.k, t)
+        })
     }
 
-    /// Fused-engine rung: the training corpus is packed **once per
-    /// call** (the old tiled path re-packed X for every 128-row query
-    /// tile) and re-used by every query M-tile streamed through the
-    /// worker pool; the bounded top-k selection runs on each distance
-    /// tile while it is cache-hot. Bit-identical at any worker count.
-    fn kneighbors_fused(
-        &self,
-        x: &DenseTable<f64>,
-        q: &DenseTable<f64>,
-        threads: usize,
-    ) -> Vec<Vec<(usize, f64)>> {
-        let corpus = distances::pack_corpus_table(x, threads);
-        distances::top_k(q.data(), q.rows(), &corpus, self.k, threads)
+    /// The model-resident packed corpus (built once at `train` time).
+    pub fn panel(&self) -> &ModelPanel {
+        &self.panel
+    }
+}
+
+impl crate::coordinator::serve::ServeModel for KnnModel {
+    fn serve_dims(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn serve_batch(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>> {
+        // Majority-vote class per row; `infer` is quarantined.
+        self.infer(ctx, q)
     }
 }
 

@@ -17,6 +17,7 @@ use crate::blas::{gemv_threads, syrk_threads};
 use crate::coordinator::{Backend, Context};
 use crate::error::{Error, Result};
 use crate::linalg::cholesky_solve;
+use crate::primitives::packed::ModelPanel;
 use crate::sparse::{csrmultd, csrmv_threads, CsrMatrix, IndexBase, SparseOp};
 use crate::tables::{DenseTable, TableRef};
 
@@ -49,6 +50,10 @@ impl RidgeRegression {
 pub struct LinRegModel {
     pub coef: Vec<f64>,
     pub intercept: f64,
+    /// Model-resident weight panel ([`ModelPanel::Weights`]) built at
+    /// `train` time — inference reads the coefficients through it so
+    /// the pack-free contract covers coefficient models uniformly.
+    panel: ModelPanel,
 }
 
 impl LinRegParams {
@@ -141,7 +146,8 @@ impl LinRegParams {
         } else {
             0.0
         };
-        Ok(LinRegModel { coef, intercept })
+        let panel = ModelPanel::from_weights(&coef);
+        Ok(LinRegModel { coef, intercept, panel })
     }
 
     /// Sparse normal equations: `XᵀX` from one `csrmultd(AᵀB)` call
@@ -208,31 +214,49 @@ impl LinRegParams {
         } else {
             0.0
         };
-        Ok(LinRegModel { coef, intercept })
+        let panel = ModelPanel::from_weights(&coef);
+        Ok(LinRegModel { coef, intercept, panel })
     }
 }
 
 impl LinRegModel {
     /// Tall-skinny inference: one threaded gemv (dense) or csrmv (CSR)
-    /// row-partitioned on the context's worker count.
+    /// row-partitioned on the context's worker count. The weights come
+    /// from the model-resident panel (bit-identical to `coef`).
     pub fn infer<'a>(&self, ctx: &Context, x: impl Into<TableRef<'a>>) -> Result<Vec<f64>> {
         let x = x.into();
         crate::validate::dims_match(self.coef.len(), x.cols(), "linreg")?;
         crate::parallel::quarantine("linreg.infer", || {
+            let w: &[f64] = self.panel.weights().unwrap_or(&self.coef);
             let mut out = vec![self.intercept; x.rows()];
             match x {
                 TableRef::Dense(d) => {
                     let (n, p) = (d.rows(), d.cols());
-                    let w = &self.coef;
                     gemv_threads(false, n, p, 1.0, d.data(), w, 1.0, &mut out, ctx.threads());
                 }
                 TableRef::Csr(s) => {
                     let t = ctx.threads();
-                    csrmv_threads(SparseOp::NoTranspose, 1.0, s, &self.coef, 1.0, &mut out, t)?;
+                    csrmv_threads(SparseOp::NoTranspose, 1.0, s, w, 1.0, &mut out, t)?;
                 }
             }
             Ok(out)
         })
+    }
+
+    /// The model-resident weight panel.
+    pub fn panel(&self) -> &ModelPanel {
+        &self.panel
+    }
+}
+
+impl crate::coordinator::serve::ServeModel for LinRegModel {
+    fn serve_dims(&self) -> usize {
+        self.coef.len()
+    }
+
+    fn serve_batch(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>> {
+        // One predicted value per row; `infer` is quarantined.
+        self.infer(ctx, q)
     }
 }
 

@@ -19,6 +19,7 @@ use crate::blas::{axpy, dot, gemv_threads};
 use crate::coordinator::{batch, Backend, BudgetMeter, Context, ConvergenceStatus};
 use crate::error::{Error, Result};
 use crate::parallel;
+use crate::primitives::packed::ModelPanel;
 use crate::sparse::{csrmv_threads, CsrMatrix, SparseOp};
 use crate::tables::{DenseTable, TableRef};
 use crate::validate;
@@ -48,6 +49,10 @@ pub struct LogRegModel {
     /// `DeadlineExceeded` when the context's budget cut the epoch loop
     /// short (the weights are the last completed epoch's iterate).
     pub status: ConvergenceStatus,
+    /// Model-resident weight panel ([`ModelPanel::Weights`]) built at
+    /// `train` time — inference reads the coefficients through it so
+    /// the pack-free contract covers coefficient models uniformly.
+    panel: ModelPanel,
 }
 
 #[inline]
@@ -117,7 +122,8 @@ impl LogRegParams {
                     _ => self.train_batched_csr(s, y, &mut w, &mut b, ctx.threads(), &mut meter)?,
                 },
             };
-            Ok(LogRegModel { coef: w, intercept: b, status })
+            let panel = ModelPanel::from_weights(&w);
+            Ok(LogRegModel { coef: w, intercept: b, status, panel })
         })
     }
 
@@ -318,7 +324,8 @@ impl LogRegParams {
 
 impl LogRegModel {
     /// Probability of the positive class (one threaded csrmv for CSR
-    /// queries).
+    /// queries). The weights come from the model-resident panel
+    /// (bit-identical to `coef`).
     pub fn predict_proba<'a>(
         &self,
         ctx: &Context,
@@ -326,15 +333,18 @@ impl LogRegModel {
     ) -> Result<Vec<f64>> {
         let x = x.into();
         validate::dims_match(self.coef.len(), x.cols(), "logreg")?;
-        parallel::quarantine("logreg.predict_proba", || match x {
-            TableRef::Dense(d) => Ok((0..d.rows())
-                .map(|i| sigmoid(dot(d.row(i), &self.coef) + self.intercept))
-                .collect()),
-            TableRef::Csr(s) => {
-                let mut z = vec![0.0f64; s.rows()];
-                let t = ctx.threads();
-                csrmv_threads(SparseOp::NoTranspose, 1.0, s, &self.coef, 0.0, &mut z, t)?;
-                Ok(z.into_iter().map(|v| sigmoid(v + self.intercept)).collect())
+        parallel::quarantine("logreg.predict_proba", || {
+            let w: &[f64] = self.panel.weights().unwrap_or(&self.coef);
+            match x {
+                TableRef::Dense(d) => Ok((0..d.rows())
+                    .map(|i| sigmoid(dot(d.row(i), w) + self.intercept))
+                    .collect()),
+                TableRef::Csr(s) => {
+                    let mut z = vec![0.0f64; s.rows()];
+                    let t = ctx.threads();
+                    csrmv_threads(SparseOp::NoTranspose, 1.0, s, w, 0.0, &mut z, t)?;
+                    Ok(z.into_iter().map(|v| sigmoid(v + self.intercept)).collect())
+                }
             }
         })
     }
@@ -342,6 +352,23 @@ impl LogRegModel {
     /// Hard 0/1 prediction at threshold 0.5.
     pub fn infer<'a>(&self, ctx: &Context, x: impl Into<TableRef<'a>>) -> Result<Vec<f64>> {
         Ok(self.predict_proba(ctx, x)?.into_iter().map(|p| f64::from(p >= 0.5)).collect())
+    }
+
+    /// The model-resident weight panel.
+    pub fn panel(&self) -> &ModelPanel {
+        &self.panel
+    }
+}
+
+impl crate::coordinator::serve::ServeModel for LogRegModel {
+    fn serve_dims(&self) -> usize {
+        self.coef.len()
+    }
+
+    fn serve_batch(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>> {
+        // Positive-class probability per row; `predict_proba` is
+        // quarantined.
+        self.predict_proba(ctx, q)
     }
 }
 

@@ -20,6 +20,7 @@ use crate::blas::{dot, pack_b_panels, PackedB, Transpose};
 use crate::coordinator::{batch, Backend, BudgetMeter, Context, ConvergenceStatus};
 use crate::error::{Error, Result};
 use crate::primitives::distances;
+use crate::primitives::packed::ModelPanel;
 use crate::sparse::{csrmm_threads, CsrMatrix, SparseOp};
 use crate::tables::{DenseTable, TableRef};
 use std::sync::Arc;
@@ -111,6 +112,10 @@ pub struct SvcModel {
     /// context's budget stopped training first — the model is then the
     /// last completed iterate (bias reconstructed over the full set).
     pub status: ConvergenceStatus,
+    /// Support panel prepacked at `train` time (transposed view +
+    /// pooled norms), so [`SvcModel::decision_function`] never
+    /// re-transposes the support set or recomputes its norms per call.
+    panel: ModelPanel,
 }
 
 /// Solver state shared by both methods (full-length; the gradient lives
@@ -881,6 +886,8 @@ impl SvmParams {
             };
             let dual_coef: Vec<f64> =
                 sv_idx.iter().map(|&t| state.alpha[t] * state.y[t]).collect();
+            // Pack the support panel once; inference borrows it.
+            let panel = ModelPanel::from_dense_table(&support_vectors, threads);
             Ok(SvcModel {
                 support_vectors,
                 support_idx: sv_idx,
@@ -890,6 +897,7 @@ impl SvmParams {
                 iterations: engine.stats.iterations,
                 stats: engine.stats,
                 status: engine.status,
+                panel,
             })
         })
     }
@@ -934,9 +942,11 @@ impl SvcModel {
     }
 
     /// CSR queries: kernel blocks `K(Q_tile × SV)` against the
-    /// densified-transposed support panel — one threaded CSR multiply
-    /// per tile for linear, the shared [`distances::rbf_gram_csr`]
-    /// (csrmm + the fused `exp(−γ·d²)` transform) for RBF — then one
+    /// model-resident support panel (the transposed view + pooled
+    /// norms packed once at `train` time — this path re-transposes and
+    /// re-reduces nothing per call) — one threaded CSR multiply per
+    /// tile for linear, the shared [`distances::rbf_gram_csr`] (csrmm
+    /// + the fused `exp(−γ·d²)` transform) for RBF — then one
     /// dual-coef dot per row. Query rows stream in fixed 256-row tiles
     /// so the kernel-block scratch stays `O(TILE·nsv)` whatever the
     /// query count (the dense path streams per row the same way). Tile
@@ -951,18 +961,13 @@ impl SvcModel {
             return Ok(out);
         }
         let t = ctx.threads();
-        let svt = self.support_vectors.transposed();
-        let (qn, sv_norms) = match self.kernel {
-            SvmKernel::Linear => (Vec::new(), Vec::new()),
-            SvmKernel::Rbf { .. } => {
-                let sv_norms: Vec<f64> = (0..nsv)
-                    .map(|s| {
-                        let r = self.support_vectors.row(s);
-                        dot(r, r)
-                    })
-                    .collect();
-                (distances::csr_row_norms(q, t), sv_norms)
-            }
+        let view = self
+            .panel
+            .csr_corpus()
+            .ok_or_else(|| Error::Internal("svm: support panel missing transposed view".into()))?;
+        let qn = match self.kernel {
+            SvmKernel::Linear => Vec::new(),
+            SvmKernel::Rbf { .. } => distances::csr_row_norms(q, t),
         };
         const TILE: usize = 256;
         let mut cross = vec![0.0f64; TILE.min(m) * nsv];
@@ -971,12 +976,12 @@ impl SvcModel {
             let ctile = &mut cross[..len * nsv];
             match self.kernel {
                 SvmKernel::Linear => {
-                    let b = svt.data();
+                    let b = view.bt();
                     csrmm_threads(SparseOp::NoTranspose, 1.0, &tile, b, nsv, 0.0, ctile, t)?;
                 }
                 SvmKernel::Rbf { gamma } => {
                     let wn = &qn[start..start + len];
-                    distances::rbf_gram_csr(&tile, wn, &sv_norms, svt.data(), gamma, ctile, t);
+                    distances::rbf_gram_csr(&tile, wn, view.norms(), view.bt(), gamma, ctile, t);
                 }
             }
             for (i, f) in out[start..start + len].iter_mut().enumerate() {
@@ -997,6 +1002,23 @@ impl SvcModel {
 
     pub fn n_support(&self) -> usize {
         self.dual_coef.len()
+    }
+
+    /// The model-resident packed support panel.
+    pub fn panel(&self) -> &ModelPanel {
+        &self.panel
+    }
+}
+
+impl crate::coordinator::serve::ServeModel for SvcModel {
+    fn serve_dims(&self) -> usize {
+        self.support_vectors.cols()
+    }
+
+    fn serve_batch(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>> {
+        // Decision values per row (callers threshold at 0 themselves);
+        // `decision_function` is quarantined and pack-free.
+        self.decision_function(ctx, q)
     }
 }
 

@@ -174,7 +174,9 @@ fn microkernel<T: Float>(k: usize, apanel: &[T], bpanel: &[T]) -> [[T; NR]; MR] 
 /// would dominate those thin multiplies. Produced by [`pack_b_panels`],
 /// consumed by [`gemm_prepacked_threads`] — which is bit-identical to
 /// [`gemm_threads`] on the same operands because both run the same
-/// panel sweep over the same packed bytes.
+/// panel sweep over the same packed bytes. `Clone` so fitted models can
+/// own a panel (`primitives::packed::ModelPanel`) and stay `Clone`.
+#[derive(Clone, Debug)]
 pub struct PackedB<T> {
     panels: Vec<T>,
     k: usize,

@@ -22,12 +22,20 @@
 //! `Backend::Auto` resolves at context build time from artifact
 //! availability and the `ONEDAL_SVE_BACKEND` environment override,
 //! mirroring oneDAL's `daal::services::Environment::getCpuId` probe.
+//!
+//! On top of dispatch and batching sits the serving layer
+//! ([`serve`]): an [`InferenceSession`] coalesces many small query
+//! batches into tile-aligned super-batches, scores them through the
+//! fitted models' pack-free panel entry points, and demuxes results in
+//! submission order under per-request [`Budget`]s.
 
 pub mod batch;
 pub mod budget;
+pub mod serve;
 
 pub use batch::{pad_to, PaddedBatch};
 pub use budget::{Budget, BudgetMeter, ConvergenceStatus};
+pub use serve::{InferenceSession, ServeModel, ServeRequest, ServeResult, ServeStatus};
 
 use crate::error::{Error, Result};
 use crate::runtime::{ArtifactRegistry, PjRtRuntime};

@@ -1,0 +1,507 @@
+//! Batched inference serving: many small concurrent query batches,
+//! coalesced into TILE-aligned super-batches, scored through a fitted
+//! model's pack-free entry points, and demuxed back in submission
+//! order.
+//!
+//! ## Session lifecycle
+//!
+//! 1. Train a model; its corpus is packed **once** into the
+//!    model-resident [`crate::primitives::packed::ModelPanel`].
+//! 2. Wrap it in an [`InferenceSession`] (borrows the model).
+//! 3. Submit a slice of [`ServeRequest`]s — each a small dense query
+//!    batch with an optional per-request [`Budget`].
+//! 4. [`InferenceSession::serve`] coalesces them into super-batches
+//!    ([`InferenceSession::plan`]), pads each to a multiple of the
+//!    session tile with zero rows (the [`super::batch`] pad-and-mask
+//!    idiom), runs each super-batch through
+//!    [`ServeModel::serve_batch`] under the `serve.batch` panic
+//!    quarantine, and returns one [`ServeResult`] per request, in
+//!    submission order.
+//!
+//! ## Determinism rules
+//!
+//! * **Input-keyed coalescing**: super-batch cuts depend only on the
+//!   request sequence (row counts and dims) and the session's
+//!   `max_super_rows` — never on timing, worker count, or budget
+//!   state. The same request set always produces the same cuts.
+//! * **Fixed-order demux**: each request's output is the fixed row
+//!   range it occupies in its super-batch, so results demux in
+//!   submission order regardless of the order super-batches complete
+//!   ([`InferenceSession::serve_in_order`] executes them under an
+//!   arbitrary permutation to prove it).
+//! * **Row independence**: every served model scores rows
+//!   independently (the engine's per-row contract), so a request's
+//!   output bits do not depend on which neighbors shared its
+//!   super-batch or on the zero padding rows — coalesced serving is
+//!   bit-identical to sequential per-request calls at any worker
+//!   count.
+//!
+//! ## Typed outcomes
+//!
+//! Each request's budget is metered from submission; a request whose
+//! budget has expired by the time its super-batch executes gets a
+//! [`ServeStatus::DeadlineExceeded`] outcome — its neighbors in the
+//! same super-batch still complete, bit-identical to an all-unlimited
+//! run. A panic or error inside a super-batch (see
+//! [`crate::failpoint::SITE_SERVE_BATCH`]) is quarantined into
+//! [`ServeStatus::Failed`] for that batch's live members only; other
+//! super-batches are untouched and a retry runs clean.
+
+use super::batch;
+use super::budget::Budget;
+use super::Context;
+use crate::error::{Error, Result};
+use crate::failpoint;
+use crate::parallel;
+use crate::tables::DenseTable;
+
+/// Default super-batch row alignment — the fused distance engine's
+/// query M-tile, so one padded super-batch fills whole engine tiles.
+const DEFAULT_TILE: usize = 256;
+/// Default cap on rows per coalesced super-batch.
+const DEFAULT_MAX_SUPER_ROWS: usize = 1024;
+
+/// A fitted model the serving layer can drive. Implementations route
+/// through their quarantined, pack-free inference entry points (the
+/// model-resident panel), and score rows independently — the property
+/// the coalescing determinism contract rests on.
+pub trait ServeModel {
+    /// Feature dimension every query row must have.
+    fn serve_dims(&self) -> usize;
+
+    /// Output values per query row (all current models emit one).
+    fn serve_width(&self) -> usize {
+        1
+    }
+
+    /// Score one dense batch: `rows × serve_width()` values, row-major.
+    fn serve_batch(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>>;
+}
+
+/// One client query batch: a small dense `rows × cols` block plus an
+/// optional per-request [`Budget`] (deadline metered from submission).
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+    budget: Budget,
+}
+
+impl ServeRequest {
+    /// Validate shape up front so malformed requests are rejected at
+    /// submission, not mid-super-batch.
+    pub fn new(data: Vec<f64>, rows: usize, cols: usize) -> Result<Self> {
+        if rows == 0 || cols == 0 || data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "serve: request buffer len {} != rows {rows} × cols {cols}",
+                data.len()
+            )));
+        }
+        Ok(Self { data, rows, cols, budget: Budget::UNLIMITED })
+    }
+
+    /// Attach a per-request budget. The deadline is metered from the
+    /// moment the request set enters [`InferenceSession::serve`].
+    pub fn with_budget(mut self, b: Budget) -> Self {
+        self.budget = b;
+        self
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+}
+
+/// How one request ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeStatus {
+    /// Scored; `output` holds `rows × serve_width()` values.
+    Completed,
+    /// The request's budget expired before its super-batch ran (the
+    /// single scoring pass counts as one budget iteration, so an
+    /// iteration cap of zero also lands here). No output.
+    DeadlineExceeded,
+    /// Shape mismatch at planning time, or a quarantined panic/error
+    /// while this request's super-batch executed. No output.
+    Failed,
+}
+
+/// Per-request outcome, returned in submission order.
+#[derive(Clone, Debug)]
+pub struct ServeResult {
+    pub status: ServeStatus,
+    /// `rows × serve_width()` values for [`ServeStatus::Completed`];
+    /// `None` otherwise. Padded-tail rows are never included.
+    pub output: Option<Vec<f64>>,
+    /// Human-readable cause for [`ServeStatus::Failed`].
+    pub error: Option<String>,
+}
+
+impl ServeResult {
+    fn completed(output: Vec<f64>) -> Self {
+        Self { status: ServeStatus::Completed, output: Some(output), error: None }
+    }
+
+    fn deadline() -> Self {
+        Self { status: ServeStatus::DeadlineExceeded, output: None, error: None }
+    }
+
+    fn failed(msg: String) -> Self {
+        Self { status: ServeStatus::Failed, output: None, error: Some(msg) }
+    }
+
+    pub fn is_completed(&self) -> bool {
+        self.status == ServeStatus::Completed
+    }
+}
+
+/// A serving session over one fitted model. Cheap to construct (borrows
+/// the model; the expensive pack already happened at `train` time).
+pub struct InferenceSession<'m, M: ServeModel> {
+    model: &'m M,
+    tile: usize,
+    max_super_rows: usize,
+}
+
+impl<'m, M: ServeModel> InferenceSession<'m, M> {
+    pub fn new(model: &'m M) -> Self {
+        Self { model, tile: DEFAULT_TILE, max_super_rows: DEFAULT_MAX_SUPER_ROWS }
+    }
+
+    /// Super-batch row alignment (rows are zero-padded up to a multiple
+    /// of this).
+    pub fn tile(mut self, tile: usize) -> Self {
+        assert!(tile > 0, "serve: tile must be positive");
+        self.tile = tile;
+        self
+    }
+
+    /// Cap on (unpadded) rows per coalesced super-batch.
+    pub fn max_super_rows(mut self, rows: usize) -> Self {
+        assert!(rows > 0, "serve: max_super_rows must be positive");
+        self.max_super_rows = rows;
+        self
+    }
+
+    /// Input-keyed coalescing plan: greedy contiguous grouping of the
+    /// well-shaped requests (submission order preserved), cutting a new
+    /// super-batch when the next request would push the current one
+    /// past `max_super_rows`. A single oversized request still forms
+    /// its own super-batch. Mis-shaped requests join no group — they
+    /// fail without executing.
+    pub fn plan(&self, requests: &[ServeRequest]) -> Vec<Vec<usize>> {
+        let dims = self.model.serve_dims();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut cur_rows = 0usize;
+        for (i, r) in requests.iter().enumerate() {
+            if r.cols != dims {
+                continue;
+            }
+            if !cur.is_empty() && cur_rows + r.rows > self.max_super_rows {
+                groups.push(std::mem::take(&mut cur));
+                cur_rows = 0;
+            }
+            cur.push(i);
+            cur_rows += r.rows;
+        }
+        if !cur.is_empty() {
+            groups.push(cur);
+        }
+        groups
+    }
+
+    /// Serve a request set: plan, execute every super-batch in
+    /// ascending order, demux. One [`ServeResult`] per request, in
+    /// submission order.
+    pub fn serve(&self, ctx: &Context, requests: &[ServeRequest]) -> Vec<ServeResult> {
+        let order: Vec<usize> = (0..self.plan(requests).len()).collect();
+        self.serve_in_order(ctx, requests, &order)
+    }
+
+    /// [`InferenceSession::serve`] with an explicit super-batch
+    /// execution permutation — the shuffled-completion harness. Each
+    /// request's output is the fixed row range it occupies in its
+    /// super-batch, so any permutation yields bit-identical results;
+    /// `tests/serve_property.rs` asserts it.
+    ///
+    /// # Panics
+    ///
+    /// If `exec_order` is not a permutation of
+    /// `0..self.plan(requests).len()`.
+    pub fn serve_in_order(
+        &self,
+        ctx: &Context,
+        requests: &[ServeRequest],
+        exec_order: &[usize],
+    ) -> Vec<ServeResult> {
+        let dims = self.model.serve_dims();
+        let width = self.model.serve_width();
+        let groups = self.plan(requests);
+        assert_eq!(
+            exec_order.len(),
+            groups.len(),
+            "serve: exec_order must permute the planned super-batches"
+        );
+        let mut seen = vec![false; groups.len()];
+        for &g in exec_order {
+            assert!(
+                g < groups.len() && !seen[g],
+                "serve: exec_order must permute the planned super-batches"
+            );
+            seen[g] = true;
+        }
+        // Deadlines are metered from submission for every request (the
+        // only clock reads live inside `budget.rs`).
+        let mut meters: Vec<_> = requests.iter().map(|r| r.budget.meter()).collect();
+        let mut results: Vec<Option<ServeResult>> = requests
+            .iter()
+            .map(|r| {
+                (r.cols != dims).then(|| {
+                    ServeResult::failed(format!(
+                        "serve: request dim {} != model dim {dims}",
+                        r.cols
+                    ))
+                })
+            })
+            .collect();
+        for &gi in exec_order {
+            let group = &groups[gi];
+            // Per-request budget check at execution time. Expired
+            // members get their typed outcome now; the rest stay live.
+            let mut alive: Vec<usize> = Vec::with_capacity(group.len());
+            for &ri in group {
+                match meters[ri].check_before_iter() {
+                    Some(_) => results[ri] = Some(ServeResult::deadline()),
+                    None => alive.push(ri),
+                }
+            }
+            if alive.is_empty() {
+                continue;
+            }
+            // Assemble the super-batch from *all* member rows (expired
+            // members included) so its layout stays input-keyed, then
+            // zero-pad up to the tile boundary. Row independence makes
+            // both choices bit-identical for the live members; keeping
+            // the layout input-keyed keeps it auditable.
+            let total_rows: usize = group.iter().map(|&ri| requests[ri].rows).sum();
+            let mut data = Vec::with_capacity(total_rows * dims);
+            for &ri in group {
+                data.extend_from_slice(&requests[ri].data);
+            }
+            let pad_rows = total_rows.div_ceil(self.tile) * self.tile;
+            let padded = batch::pad_to(&data, total_rows, dims, pad_rows, dims);
+            let pdata = padded.data;
+            let outcome = parallel::quarantine("serve.batch", move || {
+                failpoint::check(failpoint::SITE_SERVE_BATCH);
+                let table = DenseTable::from_vec(pdata, pad_rows, dims)?;
+                self.model.serve_batch(ctx, &table)
+            });
+            match outcome {
+                Ok(out) if out.len() == pad_rows * width => {
+                    // Fixed-order demux: each request owns the row range
+                    // it occupies in the super-batch; the padded tail is
+                    // dropped on the floor.
+                    let mut offset = 0usize;
+                    for &ri in group {
+                        let rows = requests[ri].rows;
+                        if results[ri].is_none() {
+                            let slice = &out[offset * width..(offset + rows) * width];
+                            results[ri] = Some(ServeResult::completed(slice.to_vec()));
+                        }
+                        offset += rows;
+                    }
+                }
+                Ok(out) => {
+                    let msg = format!(
+                        "serve: model returned {} values for a {pad_rows}-row super-batch \
+                         (width {width})",
+                        out.len()
+                    );
+                    for &ri in &alive {
+                        results[ri] = Some(ServeResult::failed(msg.clone()));
+                    }
+                }
+                Err(e) => {
+                    // Quarantined panic or typed error: fail this
+                    // batch's live members only.
+                    let msg = e.to_string();
+                    for &ri in &alive {
+                        results[ri] = Some(ServeResult::failed(msg.clone()));
+                    }
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| {
+                r.unwrap_or_else(|| ServeResult::failed("serve: request never scheduled".into()))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Context};
+    use std::time::Duration;
+
+    /// Minimal row-independent model: each output is its row's sum.
+    struct RowSum {
+        d: usize,
+    }
+
+    impl ServeModel for RowSum {
+        fn serve_dims(&self) -> usize {
+            self.d
+        }
+
+        fn serve_batch(&self, _ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>> {
+            Ok((0..q.rows()).map(|i| q.row(i).iter().sum()).collect())
+        }
+    }
+
+    fn ctx() -> Context {
+        Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Vectorized)
+            .build()
+            .unwrap()
+    }
+
+    fn req(rows: usize, cols: usize, fill: f64) -> ServeRequest {
+        ServeRequest::new(vec![fill; rows * cols], rows, cols).unwrap()
+    }
+
+    #[test]
+    fn request_shape_validated_at_submission() {
+        assert!(ServeRequest::new(vec![0.0; 6], 2, 3).is_ok());
+        assert!(ServeRequest::new(vec![0.0; 5], 2, 3).is_err());
+        assert!(ServeRequest::new(vec![], 0, 3).is_err());
+    }
+
+    #[test]
+    fn plan_cuts_are_input_keyed_and_respect_the_row_cap() {
+        let model = RowSum { d: 2 };
+        let session = InferenceSession::new(&model).max_super_rows(10);
+        let requests: Vec<ServeRequest> =
+            [4, 4, 4, 9, 20, 1].iter().map(|&r| req(r, 2, 1.0)).collect();
+        let groups = session.plan(&requests);
+        // 4+4 fits, +4 would exceed 10; 4+9 exceeds; 9+20 exceeds; the
+        // oversized 20 forms its own group; 20+1 exceeds.
+        assert_eq!(groups, vec![vec![0, 1], vec![2], vec![3], vec![4], vec![5]]);
+        // Same inputs ⇒ same cuts, every time.
+        assert_eq!(session.plan(&requests), groups);
+    }
+
+    #[test]
+    fn coalesced_matches_sequential_bitwise() {
+        let model = RowSum { d: 3 };
+        let session = InferenceSession::new(&model).tile(4).max_super_rows(8);
+        let requests: Vec<ServeRequest> =
+            (0..7).map(|i| req(1 + i % 3, 3, 0.5 + i as f64)).collect();
+        let c = ctx();
+        let coalesced = session.serve(&c, &requests);
+        for (r, out) in requests.iter().zip(&coalesced) {
+            // Sequential per-request oracle: score the request alone.
+            let table = DenseTable::from_vec(r.data.clone(), r.rows, r.cols).unwrap();
+            let want = model.serve_batch(&c, &table).unwrap();
+            assert_eq!(out.status, ServeStatus::Completed);
+            let got = out.output.as_deref().unwrap();
+            assert_eq!(got.len(), r.rows, "padded tail must not leak");
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn any_execution_permutation_is_bit_identical() {
+        let model = RowSum { d: 2 };
+        let session = InferenceSession::new(&model).tile(4).max_super_rows(4);
+        let requests: Vec<ServeRequest> = (0..9).map(|i| req(2, 2, i as f64)).collect();
+        let c = ctx();
+        let n_groups = session.plan(&requests).len();
+        assert!(n_groups >= 3);
+        let base = session.serve(&c, &requests);
+        let mut order: Vec<usize> = (0..n_groups).collect();
+        order.reverse();
+        let shuffled = session.serve_in_order(&c, &requests, &order);
+        for (a, b) in base.iter().zip(&shuffled) {
+            assert_eq!(a.status, b.status);
+            match (&a.output, &b.output) {
+                (Some(u), Some(v)) => {
+                    for (x, y) in u.iter().zip(v) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+                (None, None) => {}
+                _ => panic!("outputs diverged under permutation"),
+            }
+        }
+    }
+
+    #[test]
+    fn mis_shaped_requests_fail_without_poisoning_neighbors() {
+        let model = RowSum { d: 2 };
+        let session = InferenceSession::new(&model);
+        let requests = vec![req(2, 2, 1.0), req(2, 5, 1.0), req(3, 2, 2.0)];
+        let results = session.serve(&ctx(), &requests);
+        assert_eq!(results[0].status, ServeStatus::Completed);
+        assert_eq!(results[1].status, ServeStatus::Failed);
+        assert!(results[1].error.as_deref().is_some_and(|e| e.contains("dim")));
+        assert_eq!(results[2].status, ServeStatus::Completed);
+        assert_eq!(results[2].output.as_deref().map(<[f64]>::len), Some(3));
+    }
+
+    #[test]
+    fn expired_budget_yields_typed_outcome_and_leaves_neighbors_clean() {
+        let model = RowSum { d: 2 };
+        let session = InferenceSession::new(&model).max_super_rows(8);
+        let mut requests: Vec<ServeRequest> = (0..4).map(|i| req(2, 2, i as f64)).collect();
+        requests[1] = req(2, 2, 1.0).with_budget(Budget::default().max_wall_time(Duration::ZERO));
+        let c = ctx();
+        let served = session.serve(&c, &requests);
+        assert_eq!(served[1].status, ServeStatus::DeadlineExceeded);
+        assert!(served[1].output.is_none());
+        // Neighbors complete, bit-identical to an all-unlimited run.
+        let unlimited: Vec<ServeRequest> = (0..4).map(|i| req(2, 2, i as f64)).collect();
+        let base = session.serve(&c, &unlimited);
+        for i in [0usize, 2, 3] {
+            assert_eq!(served[i].status, ServeStatus::Completed, "request {i}");
+            let (a, b) = (served[i].output.as_deref(), base[i].output.as_deref());
+            match (a, b) {
+                (Some(u), Some(v)) => {
+                    for (x, y) in u.iter().zip(v) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "request {i}");
+                    }
+                }
+                _ => panic!("neighbor {i} lost its output"),
+            }
+        }
+    }
+
+    #[test]
+    fn model_errors_are_quarantined_per_batch() {
+        struct Broken;
+        impl ServeModel for Broken {
+            fn serve_dims(&self) -> usize {
+                2
+            }
+            fn serve_batch(&self, _ctx: &Context, _q: &DenseTable<f64>) -> Result<Vec<f64>> {
+                Err(Error::Numerical("serve-test: synthetic failure".into()))
+            }
+        }
+        let model = Broken;
+        let session = InferenceSession::new(&model);
+        let results = session.serve(&ctx(), &[req(2, 2, 1.0)]);
+        assert_eq!(results[0].status, ServeStatus::Failed);
+        assert!(results[0].error.as_deref().is_some_and(|e| e.contains("synthetic")));
+    }
+}

@@ -35,6 +35,11 @@ pub const SITE_TILE_SWEEP: &str = "tile-sweep";
 pub const SITE_TILE_CACHE_EVICT: &str = "tile-cache-evict";
 /// Per-record loop of the CSV reader ([`crate::tables::csv::parse_csv`]).
 pub const SITE_CSV_RECORD: &str = "csv-record";
+/// Super-batch execution of the serving layer
+/// ([`crate::coordinator::serve::InferenceSession`]), inside the
+/// `serve.batch` quarantine — a fired batch must surface as a typed
+/// per-request failure without poisoning neighboring batches.
+pub const SITE_SERVE_BATCH: &str = "serve-batch";
 
 /// Fast gate: false ⇒ no failpoint armed ⇒ [`check`] is one relaxed
 /// load and returns immediately.

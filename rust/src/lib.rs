@@ -78,6 +78,24 @@
 //!   a retried call is bit-identical to an uninjected run. Disarmed
 //!   cost: one relaxed atomic load per site visit.
 //!
+//! ## Model-resident packing and batched serving
+//!
+//! Fitted models own their packed compute state: `train` builds a
+//! [`primitives::packed::ModelPanel`] (prepacked dense micro-panels or
+//! a transposed CSR view, plus pooled norms) once, and every inference
+//! entry point — `infer`, `predict`, `kneighbors`,
+//! `decision_function` — reuses it, so the per-call pack/norm work of
+//! the fused distance engine disappears from the serving hot path
+//! (asserted by a pack-event counter, `tests/serve_property.rs`). On
+//! top sits [`coordinator::serve`]: an
+//! [`coordinator::InferenceSession`] coalesces many small query
+//! batches into tile-aligned super-batches (the [`coordinator::batch`]
+//! pad-and-mask idiom), runs them under per-request
+//! [`coordinator::Budget`] deadlines with typed outcomes, and demuxes
+//! results in submission order — deterministically: same request set,
+//! same super-batch cuts, bit-identical per-request outputs at any
+//! worker count (`docs/SERVING.md`).
+//!
 //! ## Machine-checked invariants
 //!
 //! The contracts above are enforced mechanically, not by convention —
@@ -141,7 +159,10 @@ pub mod prelude {
     pub use crate::algorithms::logreg::LogisticRegression;
     pub use crate::algorithms::pca::Pca;
     pub use crate::algorithms::svm::{Svc, SvmSolver};
-    pub use crate::coordinator::{Backend, Budget, Context, ConvergenceStatus};
+    pub use crate::coordinator::{
+        Backend, Budget, Context, ConvergenceStatus, InferenceSession, ServeModel, ServeRequest,
+        ServeResult, ServeStatus,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::rng::{Engine, Mcg59, Mt19937};
     pub use crate::sparse::CsrMatrix;

@@ -6,6 +6,7 @@
 //! onedal-sve info                         # dispatch ladder + artifact status
 //! onedal-sve train  <algo> [options]      # train on synthetic or CSV data
 //! onedal-sve bench-all                    # quick smoke across the suite
+//! onedal-sve bench serve                  # batched serving: coalesced vs naive
 //! ```
 
 use onedal_sve::coordinator::{Backend, Context};
@@ -142,11 +143,123 @@ fn cmd_train(algo: &str, flags: &HashMap<String, String>) {
     }
 }
 
+fn percentile(sorted_us: &[f64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// `bench serve` — the serving-layer scenario: many small query batches
+/// against one fitted model, coalesced through an [`InferenceSession`]
+/// vs served naively one request at a time. Reports throughput and
+/// p50/p99 latency for both. Naive latencies are true per-request
+/// timings; under coalescing every request in a round completes with
+/// its super-batch, so each request's latency is its round's wall time.
+fn cmd_bench_serve(flags: &HashMap<String, String>) {
+    let ctx = build_ctx(flags);
+    let n: usize = get(flags, "n", 2000);
+    let d: usize = get(flags, "d", 16);
+    let n_requests: usize = get(flags, "requests", 64);
+    let rows_per: usize = get(flags, "rows", 3);
+    let reps: usize = get(flags, "reps", 5);
+    let seed: u32 = get(flags, "seed", 42);
+    let mut e = Mt19937::new(seed);
+    let (x, _) = synth::make_blobs(&mut e, n.max(rows_per + 1), d, 8, 1.0);
+    let n = n.max(rows_per + 1);
+    let model = KMeans::params().k(8).max_iter(20).train(&ctx, &x).expect("train");
+    let session = InferenceSession::new(&model);
+
+    // Small query batches carved from the corpus (submission order fixed).
+    let raw: Vec<Vec<f64>> = (0..n_requests)
+        .map(|i| {
+            let start = (i * rows_per) % (n - rows_per);
+            x.data()[start * d..(start + rows_per) * d].to_vec()
+        })
+        .collect();
+    let requests: Vec<ServeRequest> = raw
+        .iter()
+        .map(|data| ServeRequest::new(data.clone(), rows_per, d).expect("request shape"))
+        .collect();
+
+    // Naive baseline: one pack-free model call per request.
+    let mut naive_us: Vec<f64> = Vec::with_capacity(reps * n_requests);
+    let mut naive_total = 0.0f64;
+    let mut naive_first: Vec<Vec<f64>> = Vec::new();
+    for rep in 0..reps {
+        let r0 = Instant::now();
+        let mut outs = Vec::with_capacity(n_requests);
+        for data in &raw {
+            let buf = data.clone();
+            let t0 = Instant::now();
+            let q = DenseTable::from_vec(buf, rows_per, d).expect("query shape");
+            let out = ServeModel::serve_batch(&model, &ctx, &q).expect("naive serve");
+            naive_us.push(t0.elapsed().as_secs_f64() * 1e6);
+            outs.push(out);
+        }
+        naive_total += r0.elapsed().as_secs_f64();
+        if rep == 0 {
+            naive_first = outs;
+        }
+    }
+
+    // Coalesced: the whole request set through the session per round.
+    let mut serve_us: Vec<f64> = Vec::with_capacity(reps * n_requests);
+    let mut serve_total = 0.0f64;
+    let mut serve_first: Vec<ServeResult> = Vec::new();
+    for rep in 0..reps {
+        let t0 = Instant::now();
+        let results = session.serve(&ctx, &requests);
+        let round = t0.elapsed().as_secs_f64();
+        serve_total += round;
+        for _ in 0..n_requests {
+            serve_us.push(round * 1e6);
+        }
+        if rep == 0 {
+            serve_first = results;
+        }
+    }
+
+    // Sanity: coalesced output must be bit-identical to the naive path.
+    for (i, (res, want)) in serve_first.iter().zip(&naive_first).enumerate() {
+        let got = res.output.as_deref().expect("coalesced request must complete");
+        assert_eq!(got.len(), want.len(), "request {i}: output length");
+        for (a, b) in got.iter().zip(want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "request {i}: coalesced != naive");
+        }
+    }
+
+    naive_us.sort_by(|a, b| a.total_cmp(b));
+    serve_us.sort_by(|a, b| a.total_cmp(b));
+    let served = (reps * n_requests) as f64;
+    let naive_thr = served / naive_total;
+    let serve_thr = served / serve_total;
+    println!("serve: corpus={n}x{d} requests={n_requests} rows/req={rows_per} reps={reps}");
+    println!(
+        "  naive     : {naive_thr:9.0} req/s   p50={:8.1}us  p99={:8.1}us",
+        percentile(&naive_us, 0.50),
+        percentile(&naive_us, 0.99)
+    );
+    println!(
+        "  coalesced : {serve_thr:9.0} req/s   p50={:8.1}us  p99={:8.1}us",
+        percentile(&serve_us, 0.50),
+        percentile(&serve_us, 0.99)
+    );
+    println!("  throughput speedup: {:.2}x  (outputs bit-identical)", serve_thr / naive_thr);
+}
+
 fn cmd_bench_all(flags: &HashMap<String, String>) {
     let _t = ScopedTimer::new("bench-all");
     for algo in ["kmeans", "logreg", "linreg", "pca", "knn", "dbscan", "forest", "svm"] {
         cmd_train(algo, flags);
     }
+    // Serving-layer smoke: small fixture so the suite stays quick.
+    let mut serve_flags = flags.clone();
+    for (key, val) in [("n", "500"), ("requests", "16"), ("reps", "2")] {
+        serve_flags.entry(key.to_string()).or_insert_with(|| val.to_string());
+    }
+    cmd_bench_serve(&serve_flags);
     println!("\n{}", onedal_sve::profiling::timer::Metrics::global().report());
 }
 
@@ -157,9 +270,11 @@ fn help() {
          \x20 info                     dispatch ladder + artifact status\n\
          \x20 train <algo>             kmeans|svm|logreg|forest|pca|linreg|dbscan|knn\n\
          \x20 bench-all                smoke the whole suite\n\
+         \x20 bench serve              batched serving: coalesced vs naive\n\
          flags: --backend naive|reference|vectorized|artifact|auto\n\
          \x20      --n <rows> --d <features> --k <clusters> --seed <s>\n\
-         \x20      --csv <path> --artifacts <dir> --solver boser|thunder"
+         \x20      --csv <path> --artifacts <dir> --solver boser|thunder\n\
+         \x20      --requests <n> --rows <rows/request> --reps <r>  (bench serve)"
     );
 }
 
@@ -173,6 +288,10 @@ fn main() {
             cmd_train(&algo, &flags);
         }
         Some("bench-all") => cmd_bench_all(&flags),
+        Some("bench") => match args.get(1).map(String::as_str) {
+            Some("serve") => cmd_bench_serve(&flags),
+            _ => help(),
+        },
         _ => help(),
     }
 }

@@ -65,13 +65,28 @@
 //! use a single-accumulator sweep rather than the 4-way unrolled dense
 //! [`dot`], so distances agree to rounding — discrete outputs match the
 //! oracle exactly away from exact decision boundaries.
+//!
+//! ## Model-resident panels
+//!
+//! Per-call packing amortizes across tiles; serving amortizes across
+//! *requests*. [`crate::primitives::packed::ModelPanel`] wraps a
+//! [`PackedCorpus`] / [`CsrCorpus`] (plus, for CSR corpora, the
+//! `O(nnz)` CSR transpose) built **once at `train` time** and stored
+//! inside the fitted models; [`top_k_packed`] / [`argmin_packed`] are
+//! the borrowed-corpus entry points the algorithm layer calls at
+//! inference time — pack-free, same epilogues, same determinism rules.
+//! The per-call constructors above remain for one-shot callers, and
+//! [`crate::primitives::packed::pack_events`] counts every corpus pack
+//! so tests can assert inference performs none.
 
 use crate::blas::level3::MR;
 use crate::blas::{dot, gemm_prepacked_threads, pack_b_panels, PackedB, Transpose};
 use crate::coordinator::batch;
+use crate::error::{Error, Result};
 use crate::parallel;
+use crate::primitives::packed::ModelPanel;
 use crate::sparse::{csrmm_threads, CsrMatrix, SparseOp};
-use crate::tables::DenseTable;
+use crate::tables::{DenseTable, TableRef};
 
 /// Lanes per predicated epilogue block (a 512-bit SVE vector of f64).
 pub const LANES: usize = 8;
@@ -88,7 +103,9 @@ const NORM_MIN_WORK: usize = 1 << 14;
 
 /// The corpus side of a pairwise-distance sweep, packed once: the
 /// prepacked `op(B) = Yᵀ` micro-panels reused by every query tile plus
-/// the corpus squared row norms from one pooled reduction.
+/// the corpus squared row norms from one pooled reduction. `Clone` so
+/// a [`ModelPanel`] can live inside a `Clone` fitted model.
+#[derive(Clone, Debug)]
 pub struct PackedCorpus {
     pb: PackedB<f64>,
     norms: Vec<f64>,
@@ -121,6 +138,7 @@ impl PackedCorpus {
 /// cross-term GEMM plus pooled squared row norms.
 pub fn pack_corpus(y: &[f64], n: usize, d: usize, threads: usize) -> PackedCorpus {
     debug_assert_eq!(y.len(), n * d);
+    super::packed::note_pack();
     PackedCorpus {
         pb: pack_b_panels(Transpose::Yes, d, n, y),
         norms: corpus_norms(y, n, d, threads),
@@ -151,6 +169,17 @@ fn corpus_norms(y: &[f64], n: usize, d: usize, threads: usize) -> Vec<f64> {
         norms.extend_from_slice(&p);
     }
     norms
+}
+
+/// Per-row `‖x_i‖²` of a dense row-major block — the same pooled
+/// [`dot`]-based reduction the corpus norms use, exposed so iterative
+/// callers (the Lloyd loop) can hoist the query-side norms out of
+/// their loop: only the corpus changes between iterations. Bit-shares
+/// with the inline `dot(qi, qi)` the epilogues would otherwise
+/// compute, so hoisting is bit-identical.
+pub fn dense_row_norms(x: &[f64], n: usize, d: usize, threads: usize) -> Vec<f64> {
+    debug_assert_eq!(x.len(), n * d);
+    corpus_norms(x, n, d, threads)
 }
 
 /// Per-row `‖x_i‖²` of a CSR matrix from **one** sweep of the stored
@@ -184,6 +213,7 @@ pub fn csr_row_norms(x: &CsrMatrix<f64>, threads: usize) -> Vec<f64> {
 /// the corpus densified-*transposed* into a `d × n` row-major buffer —
 /// the dense `B` operand every CSR cross-term multiply consumes — plus
 /// the corpus squared row norms.
+#[derive(Clone, Debug)]
 pub struct CsrCorpus {
     /// `d × n` row-major transposed corpus.
     bt: Vec<f64>,
@@ -198,12 +228,22 @@ impl CsrCorpus {
     /// [`PackedCorpus`] carries).
     pub fn from_dense(y: &DenseTable<f64>, threads: usize) -> Self {
         let norms = corpus_norms(y.data(), y.rows(), y.cols(), threads);
+        Self::from_dense_with_norms(y, norms)
+    }
+
+    /// [`CsrCorpus::from_dense`] with the norms already in hand: the
+    /// dense [`ModelPanel`] shares one pooled reduction between its
+    /// packed and transposed views (same bits either way).
+    pub(crate) fn from_dense_with_norms(y: &DenseTable<f64>, norms: Vec<f64>) -> Self {
+        debug_assert_eq!(norms.len(), y.rows());
+        super::packed::note_pack();
         CsrCorpus { bt: y.transposed().into_vec(), n: y.rows(), d: y.cols(), norms }
     }
 
     /// Pack a CSR corpus for sparse queries: one densifying transpose
     /// scatter plus norms from one sweep of the stored values.
     pub fn from_csr(y: &CsrMatrix<f64>, threads: usize) -> Self {
+        super::packed::note_pack();
         let norms = csr_row_norms(y, threads);
         CsrCorpus { bt: y.to_dense_transposed().into_vec(), n: y.rows(), d: y.cols(), norms }
     }
@@ -435,16 +475,40 @@ pub fn argmin_assign(
     assign: &mut [usize],
     threads: usize,
 ) -> f64 {
+    argmin_assign_with_norms(q, m, corpus, None, predicated, assign, threads)
+}
+
+/// [`argmin_assign`] with the query-side norms precomputed (`None` ⇒
+/// compute `dot(qi, qi)` inline per row). [`dense_row_norms`] runs the
+/// same [`dot`] per row, so hoisting the norms out of an iterative
+/// caller's loop is bit-identical to the inline path.
+pub fn argmin_assign_with_norms(
+    q: &[f64],
+    m: usize,
+    corpus: &PackedCorpus,
+    qnorms: Option<&[f64]>,
+    predicated: bool,
+    assign: &mut [usize],
+    threads: usize,
+) -> f64 {
     let d = corpus.dims();
     let n = corpus.rows();
     assert!(n > 0, "argmin_assign: empty corpus");
     debug_assert_eq!(assign.len(), m);
+    if let Some(v) = qnorms {
+        debug_assert_eq!(v.len(), m);
+    }
     let norms = corpus.norms.as_slice();
     let partials = sweep(q, m, d, corpus, assign, 1, threads, |g0, len, cross, ablock| {
         let mut inertia = 0.0f64;
         for i in 0..len {
-            let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
-            let qn = dot(qi, qi);
+            let qn = match qnorms {
+                Some(v) => v[g0 + i],
+                None => {
+                    let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
+                    dot(qi, qi)
+                }
+            };
             let row = &cross[i * n..(i + 1) * n];
             let (best, bestv) = if predicated {
                 argmin_lanes(qn, row, norms)
@@ -470,16 +534,34 @@ pub fn argmin_assign_csr(
     assign: &mut [usize],
     threads: usize,
 ) -> f64 {
+    if q.rows() == 0 {
+        return 0.0;
+    }
+    let qnorms = csr_row_norms(q, threads);
+    argmin_assign_csr_with_norms(q, corpus, &qnorms, predicated, assign, threads)
+}
+
+/// [`argmin_assign_csr`] with the stored-value query norms
+/// precomputed — the CSR Lloyd loop runs [`csr_row_norms`] once per
+/// training call instead of once per iteration (the query side never
+/// changes between iterations; bit-identical).
+pub fn argmin_assign_csr_with_norms(
+    q: &CsrMatrix<f64>,
+    corpus: &CsrCorpus,
+    qnorms: &[f64],
+    predicated: bool,
+    assign: &mut [usize],
+    threads: usize,
+) -> f64 {
     let m = q.rows();
     let n = corpus.n;
     assert!(n > 0, "argmin_assign_csr: empty corpus");
     debug_assert_eq!(assign.len(), m);
+    debug_assert_eq!(qnorms.len(), m);
     if m == 0 {
         return 0.0;
     }
-    let qnorms = csr_row_norms(q, threads);
     let norms = corpus.norms.as_slice();
-    let qnorms = &qnorms;
     let partials = sweep_csr(q, corpus, assign, 1, threads, |g0, len, cross, ablock| {
         let mut inertia = 0.0f64;
         for i in 0..len {
@@ -590,6 +672,147 @@ pub fn top_k_csr(
         }
     });
     out
+}
+
+/// [`top_k`] for a **dense query × CSR corpus** pairing, sparse end to
+/// end: the cross term is `corpus · Q_tileᵀ` via one
+/// [`crate::sparse::csrmm`] `Transpose` multiply of the corpus's
+/// `O(nnz)` CSR transpose `at` (`d × n`, [`CsrMatrix::transposed`])
+/// against the transposed query tile — no densified corpus buffer is
+/// ever built. Query tiles fan out on `TILE` boundaries through the
+/// pool with the inner multiply single-threaded, so the tile
+/// decomposition is input-keyed and the result is bit-identical at any
+/// worker count. `corpus_norms` are the stored-value norms
+/// ([`csr_row_norms`] of the corpus), so distances agree with the
+/// densified oracle to rounding and index sets match it exactly away
+/// from decision boundaries (the documented CSR approximation).
+pub fn top_k_dense_csr(
+    q: &[f64],
+    m: usize,
+    at: &CsrMatrix<f64>,
+    corpus_norms: &[f64],
+    k: usize,
+    threads: usize,
+) -> Vec<Vec<(usize, f64)>> {
+    let d = at.rows();
+    let n = at.cols();
+    debug_assert_eq!(q.len(), m * d);
+    debug_assert_eq!(corpus_norms.len(), n);
+    let mut out: Vec<Vec<(usize, f64)>> = vec![Vec::new(); m];
+    if k == 0 || n == 0 || m == 0 {
+        return out;
+    }
+    let work = at.nnz().saturating_mul(m).max(m);
+    let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
+    let bounds = parallel::aligned_bounds(m, workers, TILE);
+    parallel::scope_rows(&mut out, 1, &bounds, |r0, r1, oblock| {
+        let cap = TILE.min(r1 - r0);
+        let mut qt = vec![0.0f64; d * cap];
+        let mut ct = vec![0.0f64; n * cap];
+        let mut cross = vec![0.0f64; cap * n];
+        for (start, len) in batch::tiles(r1 - r0, TILE) {
+            crate::failpoint::check(crate::failpoint::SITE_TILE_SWEEP);
+            let g0 = r0 + start;
+            // Transpose the query tile into the dense `d × len` B
+            // operand (every slot written — no clearing needed).
+            let qtile = &mut qt[..d * len];
+            for i in 0..len {
+                let row = &q[(g0 + i) * d..(g0 + i + 1) * d];
+                for (kk, &v) in row.iter().enumerate() {
+                    qtile[kk * len + i] = v;
+                }
+            }
+            // `C = atᵀ · Q_tileᵀ = corpus · Q_tileᵀ` (`n × len`), β == 0
+            // overwrite. Single-threaded: the fan-out already happened
+            // one level up.
+            let ctile = &mut ct[..n * len];
+            if csrmm_threads(SparseOp::Transpose, 1.0, at, qtile, len, 0.0, ctile, 1).is_err() {
+                unreachable!("top_k_dense_csr: shapes checked by the debug asserts above");
+            }
+            // Back to row-major `len × n` for the cache-hot epilogue.
+            let xtile = &mut cross[..len * n];
+            for j in 0..n {
+                for i in 0..len {
+                    xtile[i * n + j] = ctile[j * len + i];
+                }
+            }
+            for i in 0..len {
+                let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
+                let qn = dot(qi, qi);
+                oblock[start + i] = select_k(qn, &xtile[i * n..(i + 1) * n], corpus_norms, k);
+            }
+        }
+    });
+    out
+}
+
+/// Borrowed-corpus KNN entry point: route a query of either layout
+/// against a model-resident [`ModelPanel`] — **pack-free**; every
+/// layout pairing reuses the panel state built at `train` time.
+/// Dense panels serve dense queries from the prepacked micro-panels
+/// and CSR queries from the transposed view; sparse panels serve CSR
+/// queries from the densified-transposed buffer and dense queries
+/// through the sparse-end-to-end [`top_k_dense_csr`] cross term.
+pub fn top_k_packed(
+    q: TableRef<'_>,
+    panel: &ModelPanel,
+    k: usize,
+    threads: usize,
+) -> Result<Vec<Vec<(usize, f64)>>> {
+    if q.cols() != panel.dims() {
+        return Err(Error::Shape(format!(
+            "top_k_packed: query has {} features, panel expects {}",
+            q.cols(),
+            panel.dims()
+        )));
+    }
+    match (panel, q) {
+        (ModelPanel::Dense(p), TableRef::Dense(qd)) => {
+            Ok(top_k(qd.data(), qd.rows(), p.packed(), k, threads))
+        }
+        (ModelPanel::Dense(p), TableRef::Csr(qs)) => Ok(top_k_csr(qs, p.csr_view(), k, threads)),
+        (ModelPanel::Sparse(p), TableRef::Csr(qs)) => Ok(top_k_csr(qs, p.csr_view(), k, threads)),
+        (ModelPanel::Sparse(p), TableRef::Dense(qd)) => Ok(top_k_dense_csr(
+            qd.data(),
+            qd.rows(),
+            p.transposed(),
+            p.csr_view().norms(),
+            k,
+            threads,
+        )),
+        (ModelPanel::Weights(_), _) => {
+            Err(Error::Shape("top_k_packed: weight panel carries no corpus".into()))
+        }
+    }
+}
+
+/// Borrowed-corpus assignment entry point: nearest panel row per query
+/// of either layout against a **dense** model-resident panel (k-means
+/// centroids are always dense) — pack-free, same epilogues and inertia
+/// bits as the per-call [`argmin_assign`] / [`argmin_assign_csr`].
+pub fn argmin_packed(
+    q: TableRef<'_>,
+    panel: &ModelPanel,
+    predicated: bool,
+    assign: &mut [usize],
+    threads: usize,
+) -> Result<f64> {
+    if q.cols() != panel.dims() {
+        return Err(Error::Shape(format!(
+            "argmin_packed: query has {} features, panel expects {}",
+            q.cols(),
+            panel.dims()
+        )));
+    }
+    match (panel, q) {
+        (ModelPanel::Dense(p), TableRef::Dense(qd)) => {
+            Ok(argmin_assign(qd.data(), qd.rows(), p.packed(), predicated, assign, threads))
+        }
+        (ModelPanel::Dense(p), TableRef::Csr(qs)) => {
+            Ok(argmin_assign_csr(qs, p.csr_view(), predicated, assign, threads))
+        }
+        _ => Err(Error::Shape("argmin_packed: requires a dense corpus panel".into())),
+    }
 }
 
 /// Bounded top-k selection over one distance row: distances evaluated
@@ -1109,5 +1332,93 @@ mod tests {
         assert_eq!(a, vec![0, 0]);
         let e = eps_neighbors_csr(&zero_rows, &corpus, 1.0, false, 1);
         assert_eq!(e.to_lists(), vec![vec![0], vec![0]]);
+    }
+
+    #[test]
+    fn hoisted_query_norms_are_bit_identical() {
+        let (m, n, d) = (130, 17, 6);
+        let q = random_rows(21, m, d);
+        let y = random_rows(22, n, d);
+        let c = pack_corpus(&y, n, d, 2);
+        let qn = dense_row_norms(&q, m, d, 3);
+        let mut a0 = vec![0usize; m];
+        let mut a1 = vec![0usize; m];
+        let i0 = argmin_assign(&q, m, &c, true, &mut a0, 2);
+        let i1 = argmin_assign_with_norms(&q, m, &c, Some(&qn), true, &mut a1, 2);
+        assert_eq!(a0, a1);
+        assert_eq!(i0.to_bits(), i1.to_bits());
+        // CSR twin: hoisted stored-value norms share bits with the
+        // per-call sweep inside `argmin_assign_csr`.
+        let qs = csr_from_dense(&q, m, d);
+        let yd = DenseTable::from_vec(y, n, d).unwrap();
+        let cc = CsrCorpus::from_dense(&yd, 2);
+        let qsn = csr_row_norms(&qs, 2);
+        let mut b0 = vec![0usize; m];
+        let mut b1 = vec![0usize; m];
+        let j0 = argmin_assign_csr(&qs, &cc, true, &mut b0, 2);
+        let j1 = argmin_assign_csr_with_norms(&qs, &cc, &qsn, true, &mut b1, 2);
+        assert_eq!(b0, b1);
+        assert_eq!(j0.to_bits(), j1.to_bits());
+    }
+
+    #[test]
+    fn dense_query_csr_corpus_matches_densified_oracle() {
+        let (m, n, d) = (300, 23, 7);
+        let q = random_rows(23, m, d);
+        let mut y = random_rows(24, n, d);
+        for (i, v) in y.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        let ys = csr_from_dense(&y, n, d);
+        let at = ys.transposed();
+        let norms = csr_row_norms(&ys, 1);
+        let got = top_k_dense_csr(&q, m, &at, &norms, 4, 1);
+        // Densified oracle: index sets must match exactly.
+        let c = pack_corpus(&y, n, d, 1);
+        let oracle = top_k(&q, m, &c, 4, 1);
+        for (row, (a, b)) in got.iter().zip(&oracle).enumerate() {
+            let ia: Vec<usize> = a.iter().map(|p| p.0).collect();
+            let ib: Vec<usize> = b.iter().map(|p| p.0).collect();
+            assert_eq!(ia, ib, "row {row}");
+        }
+        // Bit-identical at any worker count.
+        for threads in 2..=4 {
+            let got_t = top_k_dense_csr(&q, m, &at, &norms, 4, threads);
+            for (a, b) in got.iter().zip(&got_t) {
+                assert_eq!(a.len(), b.len());
+                for (p, r) in a.iter().zip(b) {
+                    assert_eq!(p.0, r.0, "threads={threads}");
+                    assert_eq!(p.1.to_bits(), r.1.to_bits(), "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_entry_points_match_per_call_paths() {
+        use crate::primitives::packed::ModelPanel;
+        let (m, n, d) = (90, 21, 5);
+        let q = random_rows(25, m, d);
+        let y = random_rows(26, n, d);
+        let yd = DenseTable::from_vec(y.clone(), n, d).unwrap();
+        let qd = DenseTable::from_vec(q.clone(), m, d).unwrap();
+        let panel = ModelPanel::from_dense_table(&yd, 2);
+        // Dense query against the dense panel == per-call pack path.
+        let per_call = top_k(&q, m, &pack_corpus(&y, n, d, 2), 3, 2);
+        let packed = top_k_packed(TableRef::Dense(&qd), &panel, 3, 2).unwrap();
+        assert_eq!(per_call, packed);
+        // Assignment too, including inertia bits.
+        let mut a0 = vec![0usize; m];
+        let mut a1 = vec![0usize; m];
+        let i0 = argmin_assign(&q, m, &pack_corpus(&y, n, d, 2), true, &mut a0, 2);
+        let i1 = argmin_packed(TableRef::Dense(&qd), &panel, true, &mut a1, 2).unwrap();
+        assert_eq!(a0, a1);
+        assert_eq!(i0.to_bits(), i1.to_bits());
+        // Shape mismatch is a typed error, not a panic.
+        let bad = DenseTable::from_vec(vec![0.0; d + 1], 1, d + 1).unwrap();
+        assert!(top_k_packed(TableRef::Dense(&bad), &panel, 3, 1).is_err());
+        assert!(argmin_packed(TableRef::Dense(&bad), &panel, true, &mut [0usize], 1).is_err());
     }
 }

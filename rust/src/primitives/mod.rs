@@ -12,5 +12,12 @@
 //!   call ([`distances::CsrCorpus`]). ε-neighbourhoods come back as a
 //!   CSR-style [`distances::NeighborTable`] — one flat
 //!   `(offsets, indices)` pair instead of a `Vec` per row.
+//! * [`packed`] — model-resident packed state: a [`packed::ModelPanel`]
+//!   (prepacked corpus + norms, CSR transpose, or weight vector) built
+//!   once at `train` time and stored inside the fitted models, so
+//!   every inference entry point is pack-free. Carries the
+//!   process-global pack counter ([`packed::pack_events`]) tests use
+//!   to assert that contract.
 
 pub mod distances;
+pub mod packed;

@@ -1,0 +1,291 @@
+//! Model-resident packed corpus state — the pack-once ownership layer
+//! under the serving front end (`coordinator::serve`).
+//!
+//! The fused distance engine packs its corpus per call; that amortizes
+//! the pack across the tiles of *one* call. A fitted model answering
+//! many small requests re-pays it on every request. [`ModelPanel`]
+//! moves the packed state into the model: built **once at `train`
+//! time** from the fitted corpus (KNN training set, k-means centroids,
+//! SVM support vectors, linreg/logreg weights) and borrowed by every
+//! inference call thereafter — `kneighbors` / `infer` /
+//! `decision_function` / `predict_proba` are pack-free.
+//!
+//! Three shapes cover the model families:
+//!
+//! * [`DensePanel`] — a dense corpus, carried as **both** views the
+//!   engine can consume: the prepacked micro-panels + norms
+//!   ([`PackedCorpus`], for dense queries) and the
+//!   densified-transposed buffer ([`CsrCorpus`], for CSR queries).
+//!   One pooled norm reduction is shared between them, so both views
+//!   hold bit-identical norms. The deliberate cost is ~2× the corpus
+//!   memory; the win is that either query layout is pack-free.
+//! * [`SparsePanel`] — a CSR corpus: the [`CsrCorpus`] view (stored-
+//!   value norms + densified transpose, for CSR queries) plus the
+//!   `O(nnz)` CSR transpose (for dense queries via the sparse
+//!   end-to-end `csrmm(Transpose)` cross term,
+//!   [`super::distances::top_k_dense_csr`]).
+//! * [`WeightPanel`] — a coefficient vector (linreg/logreg): inference
+//!   is a `gemv`/`csrmv` against the weights, so "packed" state is the
+//!   owned copy itself; the panel exists so the pack-counter contract
+//!   covers every model family uniformly.
+//!
+//! ## The pack counter
+//!
+//! Every corpus-pack constructor ([`super::distances::pack_corpus`],
+//! the [`CsrCorpus`] constructors, the panel builders) bumps a
+//! process-global relaxed counter; [`pack_events`] reads it. Tests
+//! snapshot the counter around inference calls and assert the delta is
+//! zero — the machine-checked form of the "pack-free inference"
+//! contract (`tests/serve_property.rs`).
+
+use crate::primitives::distances::{self, CsrCorpus, PackedCorpus};
+use crate::sparse::CsrMatrix;
+use crate::tables::DenseTable;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-global count of corpus-pack events (see module docs).
+static PACK_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one corpus-pack event. Called by every pack constructor;
+/// relaxed — the counter is test observability, not synchronization.
+pub(crate) fn note_pack() {
+    PACK_EVENTS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total corpus-pack events since process start. Monotone; compare
+/// snapshots around a call to assert it packed nothing.
+pub fn pack_events() -> u64 {
+    PACK_EVENTS.load(Ordering::Relaxed)
+}
+
+/// A dense corpus resident in a fitted model: prepacked micro-panels
+/// for dense queries, the transposed view for CSR queries, one shared
+/// norm vector (bit-identical in both views).
+#[derive(Clone, Debug)]
+pub struct DensePanel {
+    packed: PackedCorpus,
+    csr_view: CsrCorpus,
+}
+
+impl DensePanel {
+    /// The prepacked micro-panels + norms (dense-query path).
+    pub fn packed(&self) -> &PackedCorpus {
+        &self.packed
+    }
+
+    /// The densified-transposed view + norms (CSR-query path).
+    pub fn csr_view(&self) -> &CsrCorpus {
+        &self.csr_view
+    }
+}
+
+/// A CSR corpus resident in a fitted model: the [`CsrCorpus`] view for
+/// CSR queries plus the `O(nnz)` CSR transpose for dense queries.
+#[derive(Clone, Debug)]
+pub struct SparsePanel {
+    csr_view: CsrCorpus,
+    at: CsrMatrix<f64>,
+}
+
+impl SparsePanel {
+    /// The densified-transposed view + stored-value norms.
+    pub fn csr_view(&self) -> &CsrCorpus {
+        &self.csr_view
+    }
+
+    /// The corpus transposed as CSR (`d × n`), the sparse operand of
+    /// the dense-query `csrmm(Transpose)` cross term.
+    pub fn transposed(&self) -> &CsrMatrix<f64> {
+        &self.at
+    }
+}
+
+/// A coefficient vector resident in a fitted model (linreg/logreg).
+#[derive(Clone, Debug)]
+pub struct WeightPanel {
+    weights: Vec<f64>,
+}
+
+impl WeightPanel {
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+/// Packed state owned by a fitted model, built once at `train` time.
+/// Which variant a model holds follows its corpus: dense corpora get a
+/// [`DensePanel`], CSR corpora a [`SparsePanel`], coefficient models a
+/// [`WeightPanel`]. Inference borrows the panel through the
+/// `primitives::distances` `*_packed` entry points (or the accessors
+/// here) and never packs.
+#[derive(Clone, Debug)]
+pub enum ModelPanel {
+    Dense(DensePanel),
+    Sparse(SparsePanel),
+    Weights(WeightPanel),
+}
+
+impl ModelPanel {
+    /// Pack a dense corpus once, sharing one pooled norm reduction
+    /// between the micro-panel and transposed views.
+    pub fn from_dense_table(y: &DenseTable<f64>, threads: usize) -> Self {
+        let packed = distances::pack_corpus_table(y, threads);
+        let csr_view = CsrCorpus::from_dense_with_norms(y, packed.norms().to_vec());
+        ModelPanel::Dense(DensePanel { packed, csr_view })
+    }
+
+    /// Pack a CSR corpus once: the [`CsrCorpus`] view plus the
+    /// `O(nnz)` counting-sort transpose.
+    pub fn from_csr(y: &CsrMatrix<f64>, threads: usize) -> Self {
+        let csr_view = CsrCorpus::from_csr(y, threads);
+        ModelPanel::Sparse(SparsePanel { csr_view, at: y.transposed() })
+    }
+
+    /// Pack a corpus of either table layout (KNN's `train` ingests
+    /// both).
+    pub fn from_table(y: crate::tables::TableRef<'_>, threads: usize) -> Self {
+        match y {
+            crate::tables::TableRef::Dense(t) => Self::from_dense_table(t, threads),
+            crate::tables::TableRef::Csr(m) => Self::from_csr(m, threads),
+        }
+    }
+
+    /// Own a coefficient vector (counted as one pack event so the
+    /// pack-free-inference contract covers coefficient models too).
+    pub fn from_weights(w: &[f64]) -> Self {
+        note_pack();
+        ModelPanel::Weights(WeightPanel { weights: w.to_vec() })
+    }
+
+    /// Corpus row count (`1` for a weight panel).
+    pub fn rows(&self) -> usize {
+        match self {
+            ModelPanel::Dense(p) => p.packed.rows(),
+            ModelPanel::Sparse(p) => p.csr_view.rows(),
+            ModelPanel::Weights(_) => 1,
+        }
+    }
+
+    /// Feature dimension the panel was packed with.
+    pub fn dims(&self) -> usize {
+        match self {
+            ModelPanel::Dense(p) => p.packed.dims(),
+            ModelPanel::Sparse(p) => p.csr_view.dims(),
+            ModelPanel::Weights(p) => p.weights.len(),
+        }
+    }
+
+    /// Corpus squared row norms (`None` for a weight panel).
+    pub fn norms(&self) -> Option<&[f64]> {
+        match self {
+            ModelPanel::Dense(p) => Some(p.packed.norms()),
+            ModelPanel::Sparse(p) => Some(p.csr_view.norms()),
+            ModelPanel::Weights(_) => None,
+        }
+    }
+
+    /// The prepacked dense corpus, if this is a dense panel.
+    pub fn dense(&self) -> Option<&PackedCorpus> {
+        match self {
+            ModelPanel::Dense(p) => Some(&p.packed),
+            _ => None,
+        }
+    }
+
+    /// The transposed corpus view, for panels that carry one.
+    pub fn csr_corpus(&self) -> Option<&CsrCorpus> {
+        match self {
+            ModelPanel::Dense(p) => Some(&p.csr_view),
+            ModelPanel::Sparse(p) => Some(&p.csr_view),
+            ModelPanel::Weights(_) => None,
+        }
+    }
+
+    /// The CSR transpose of a sparse corpus panel.
+    pub fn transposed_csr(&self) -> Option<&CsrMatrix<f64>> {
+        match self {
+            ModelPanel::Sparse(p) => Some(&p.at),
+            _ => None,
+        }
+    }
+
+    /// The coefficient vector of a weight panel.
+    pub fn weights(&self) -> Option<&[f64]> {
+        match self {
+            ModelPanel::Weights(p) => Some(&p.weights),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Gaussian, Mt19937};
+    use crate::sparse::IndexBase;
+
+    fn random_table(seed: u32, n: usize, d: usize) -> DenseTable<f64> {
+        let mut e = Mt19937::new(seed);
+        let mut g = Gaussian::<f64>::standard();
+        let mut v = vec![0.0; n * d];
+        g.fill(&mut e, &mut v);
+        DenseTable::from_vec(v, n, d).unwrap()
+    }
+
+    #[test]
+    fn dense_panel_shares_norm_bits_between_views() {
+        let y = random_table(1, 37, 5);
+        let p = ModelPanel::from_dense_table(&y, 3);
+        assert_eq!(p.rows(), 37);
+        assert_eq!(p.dims(), 5);
+        let packed = p.dense().unwrap();
+        let view = p.csr_corpus().unwrap();
+        for (a, b) in packed.norms().iter().zip(view.norms()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(p.transposed_csr().is_none());
+        assert!(p.weights().is_none());
+    }
+
+    #[test]
+    fn sparse_panel_transpose_round_trips() {
+        let y = random_table(2, 29, 6);
+        let m = CsrMatrix::from_dense(&y, 0.0, IndexBase::Zero);
+        let p = ModelPanel::from_csr(&m, 2);
+        assert_eq!(p.rows(), 29);
+        assert_eq!(p.dims(), 6);
+        let at = p.transposed_csr().unwrap();
+        assert_eq!(at.rows(), 6);
+        assert_eq!(at.cols(), 29);
+        // The transpose densifies back to the same values the view's
+        // `d × n` buffer holds.
+        assert_eq!(at.to_dense().data(), p.csr_corpus().unwrap().bt());
+        assert!(p.dense().is_none());
+    }
+
+    #[test]
+    fn weight_panel_round_trips_and_counts_a_pack() {
+        let before = pack_events();
+        let p = ModelPanel::from_weights(&[1.0, -2.0, 0.5]);
+        // Monotone assertion only: the counter is process-global and
+        // unrelated unit tests pack concurrently. The strict delta
+        // contract lives in `tests/serve_property.rs` under a lock.
+        assert!(pack_events() > before, "from_weights must register a pack event");
+        assert_eq!(p.weights().unwrap(), &[1.0, -2.0, 0.5]);
+        assert_eq!(p.dims(), 3);
+        assert_eq!(p.rows(), 1);
+        assert!(p.norms().is_none());
+    }
+
+    #[test]
+    fn pack_counter_registers_panel_builds() {
+        let y = random_table(3, 16, 4);
+        let before = pack_events();
+        let p = ModelPanel::from_dense_table(&y, 1);
+        assert!(pack_events() > before, "panel build must register pack events");
+        // Borrowing the panel packs nothing (asserted strictly, under a
+        // lock, in `tests/serve_property.rs`).
+        let _ = p.dense().unwrap().norms();
+        let _ = p.csr_corpus().unwrap().bt();
+    }
+}

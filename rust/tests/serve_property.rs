@@ -1,0 +1,303 @@
+//! Serving-layer property suite: the `InferenceSession` determinism
+//! contract and the model-resident packing contract, end to end.
+//!
+//! * Coalesced serving is **bit-identical** to sequential per-request
+//!   calls at 1–4 workers.
+//! * Results demux in **submission order** even when super-batches
+//!   execute under a shuffled permutation.
+//! * Padded-tail rows **never leak** into any request's output.
+//! * A per-request deadline expiry yields a **typed outcome** without
+//!   poisoning neighbors in the same super-batch.
+//! * A failpoint fired inside a super-batch (`serve-batch` site, the
+//!   `ONEDAL_SVE_FAILPOINT` registry) surfaces as a typed failure for
+//!   that batch only; a retry runs clean and bit-identical.
+//! * Serving is **pack-free**: the process-wide pack-event counter does
+//!   not move across inference, and the panel paths are bit-identical
+//!   to replicas of the old per-call pack+norms behavior.
+
+use onedal_sve::failpoint::{self, SITE_SERVE_BATCH};
+use onedal_sve::prelude::*;
+use onedal_sve::primitives::{distances, packed};
+use onedal_sve::tables::synth::make_blobs;
+use std::sync::{Mutex, PoisonError};
+use std::time::Duration;
+
+/// The pack-event counter and the failpoint registry are both
+/// process-global; every test in this binary takes the gate so strict
+/// counter-delta assertions and armed failpoints cannot race.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn ctx(threads: usize) -> Context {
+    Context::builder()
+        .artifact_dir("/nonexistent")
+        .backend(Backend::Vectorized)
+        .threads(threads)
+        .build()
+        .unwrap()
+}
+
+const D: usize = 16;
+
+fn train_kmeans(threads: usize) -> (DenseTable<f64>, onedal_sve::algorithms::kmeans::KMeansModel) {
+    let mut e = Mt19937::new(31);
+    let (x, _) = make_blobs(&mut e, 600, D, 5, 1.0);
+    let m = KMeans::params().k(5).seed(7).max_iter(15).train(&ctx(threads), &x).unwrap();
+    (x, m)
+}
+
+/// Small query batches carved deterministically from the corpus, with
+/// varying row counts so super-batch cuts land mid-request-stream.
+fn requests_from(x: &DenseTable<f64>, count: usize) -> Vec<ServeRequest> {
+    (0..count)
+        .map(|i| {
+            let rows = 1 + i % 4;
+            let start = (i * 7) % (x.rows() - rows);
+            let data = x.data()[start * D..(start + rows) * D].to_vec();
+            ServeRequest::new(data, rows, D).unwrap()
+        })
+        .collect()
+}
+
+fn assert_outputs_bit_identical(a: &[ServeResult], b: &[ServeResult]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.status, rb.status, "request {i}: status diverged");
+        match (ra.output.as_deref(), rb.output.as_deref()) {
+            (Some(u), Some(v)) => {
+                assert_eq!(u.len(), v.len(), "request {i}: output length diverged");
+                for (x, y) in u.iter().zip(v) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "request {i}: output bits diverged");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("request {i}: output presence diverged"),
+        }
+    }
+}
+
+/// Coalesced serving == sequential per-request calls, bitwise, at every
+/// worker count 1–4 (and identical across worker counts).
+#[test]
+fn coalesced_bit_identical_to_sequential_at_1_to_4_workers() {
+    let _g = gate();
+    let (x, model) = train_kmeans(2);
+    let requests = requests_from(&x, 16);
+    let mut across_workers: Option<Vec<ServeResult>> = None;
+    for threads in 1..=4 {
+        let c = ctx(threads);
+        let session = InferenceSession::new(&model).tile(8).max_super_rows(12);
+        let coalesced = session.serve(&c, &requests);
+        for (i, (req, res)) in requests.iter().zip(&coalesced).enumerate() {
+            assert_eq!(res.status, ServeStatus::Completed, "request {i} at {threads} workers");
+            // Sequential oracle: the same request served alone.
+            let alone = session.serve(&c, std::slice::from_ref(req));
+            assert_eq!(alone.len(), 1);
+            let (got, want) = (res.output.as_deref().unwrap(), alone[0].output.as_deref().unwrap());
+            assert_eq!(got.len(), req.rows(), "request {i}: one value per row");
+            for (a, b) in got.iter().zip(want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "request {i} at {threads} workers");
+            }
+        }
+        if let Some(base) = &across_workers {
+            assert_outputs_bit_identical(base, &coalesced);
+        } else {
+            across_workers = Some(coalesced);
+        }
+    }
+}
+
+/// The same request set produces the same super-batch cuts, and any
+/// execution permutation of those super-batches demuxes to bit-identical
+/// submission-ordered results.
+#[test]
+fn demux_is_submission_ordered_under_shuffled_completion() {
+    let _g = gate();
+    let (x, model) = train_kmeans(2);
+    let requests = requests_from(&x, 20);
+    let c = ctx(3);
+    let session = InferenceSession::new(&model).tile(8).max_super_rows(8);
+    let groups = session.plan(&requests);
+    assert!(groups.len() >= 3, "fixture must span several super-batches");
+    assert_eq!(session.plan(&requests), groups, "cuts must be input-keyed");
+    let base = session.serve(&c, &requests);
+    // Reversed and rotated completion orders.
+    let mut reversed: Vec<usize> = (0..groups.len()).collect();
+    reversed.reverse();
+    let mut rotated: Vec<usize> = (0..groups.len()).collect();
+    rotated.rotate_left(groups.len() / 2);
+    for order in [reversed, rotated] {
+        let shuffled = session.serve_in_order(&c, &requests, &order);
+        assert_outputs_bit_identical(&base, &shuffled);
+    }
+}
+
+/// Every output has exactly `rows` values — zero-padded tail rows of the
+/// super-batch are dropped at demux, never attributed to a request.
+#[test]
+fn padded_tail_rows_never_leak() {
+    let _g = gate();
+    let (x, model) = train_kmeans(2);
+    // Odd row counts against a large tile force heavy padding.
+    let requests = requests_from(&x, 9);
+    let c = ctx(2);
+    let session = InferenceSession::new(&model).tile(64).max_super_rows(7);
+    let results = session.serve(&c, &requests);
+    for (i, (req, res)) in requests.iter().zip(&results).enumerate() {
+        assert_eq!(res.status, ServeStatus::Completed, "request {i}");
+        assert_eq!(
+            res.output.as_deref().map(<[f64]>::len),
+            Some(req.rows()),
+            "request {i}: output must be exactly rows × width"
+        );
+    }
+}
+
+/// A request whose deadline has expired gets the typed
+/// `DeadlineExceeded` outcome; its super-batch neighbors complete
+/// bit-identically to an all-unlimited run.
+#[test]
+fn deadline_expiry_is_typed_and_does_not_poison_neighbors() {
+    let _g = gate();
+    let (x, model) = train_kmeans(2);
+    let unlimited = requests_from(&x, 10);
+    let mut mixed = requests_from(&x, 10);
+    // An already-expired wall-time budget: the meter trips on the first
+    // check (`Instant::now() >= deadline` with a zero-length window).
+    mixed[3] = mixed[3].clone().with_budget(Budget::default().max_wall_time(Duration::ZERO));
+    let c = ctx(2);
+    let session = InferenceSession::new(&model).tile(8).max_super_rows(12);
+    let base = session.serve(&c, &unlimited);
+    let served = session.serve(&c, &mixed);
+    assert_eq!(served[3].status, ServeStatus::DeadlineExceeded);
+    assert!(served[3].output.is_none());
+    assert!(served[3].error.is_none(), "deadline expiry is an outcome, not an error");
+    for i in (0..10).filter(|&i| i != 3) {
+        assert_eq!(served[i].status, ServeStatus::Completed, "neighbor {i}");
+        let (got, want) = (served[i].output.as_deref(), base[i].output.as_deref());
+        match (got, want) {
+            (Some(u), Some(v)) => {
+                for (a, b) in u.iter().zip(v) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "neighbor {i} poisoned");
+                }
+            }
+            _ => panic!("neighbor {i} lost its output"),
+        }
+    }
+}
+
+/// A panic injected at the serve-batch failpoint surfaces as a typed
+/// per-request failure for the first super-batch only; later
+/// super-batches complete, and a disarmed retry is bit-identical to an
+/// uninjected baseline.
+#[test]
+fn serve_failpoint_fires_typed_and_retry_runs_clean() {
+    let _g = gate();
+    let (x, model) = train_kmeans(2);
+    let requests = requests_from(&x, 20);
+    let c = ctx(2);
+    let session = InferenceSession::new(&model).tile(8).max_super_rows(8);
+    let n_groups = session.plan(&requests).len();
+    assert!(n_groups >= 2, "fixture must span several super-batches");
+    let baseline = session.serve(&c, &requests);
+    failpoint::arm(&format!("{SITE_SERVE_BATCH}:1"));
+    let injected = session.serve(&c, &requests);
+    assert!(!failpoint::is_armed(), "failpoint must disarm after firing once");
+    // The first super-batch fails typed; every member carries the
+    // quarantine site and the panic payload in its error.
+    let first_group_len = session.plan(&requests)[0].len();
+    for (i, res) in injected.iter().take(first_group_len).enumerate() {
+        assert_eq!(res.status, ServeStatus::Failed, "request {i} in the injected batch");
+        assert!(res.output.is_none());
+        let msg = res.error.as_deref().unwrap();
+        assert!(msg.contains("serve.batch"), "error {msg:?} lacks quarantine site");
+        assert!(msg.contains("failpoint"), "error {msg:?} lacks panic payload");
+    }
+    // Neighboring super-batches are untouched — bit-identical to baseline.
+    for i in first_group_len..requests.len() {
+        assert_eq!(injected[i].status, ServeStatus::Completed, "request {i} outside the batch");
+        let (got, want) =
+            (injected[i].output.as_deref().unwrap(), baseline[i].output.as_deref().unwrap());
+        for (a, b) in got.iter().zip(want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "request {i} poisoned by neighbor batch");
+        }
+    }
+    // Retry after the one-shot failpoint: clean and bit-identical.
+    let retry = session.serve(&c, &requests);
+    assert_outputs_bit_identical(&baseline, &retry);
+    failpoint::disarm();
+}
+
+/// Inference is pack-free: once the models are trained, serving any
+/// amount of traffic leaves the process-wide pack-event counter exactly
+/// where it was. (Strict equality is safe here because every test in
+/// this binary holds the gate.)
+#[test]
+fn serving_is_pack_free() {
+    let _g = gate();
+    let mut e = Mt19937::new(47);
+    let (x, _) = make_blobs(&mut e, 600, D, 5, 1.0);
+    let labels: Vec<f64> = (0..600).map(|i| (i % 3) as f64).collect();
+    let c = ctx(2);
+    let km = KMeans::params().k(5).seed(7).max_iter(10).train(&c, &x).unwrap();
+    let knn = KnnClassifier::params().k(3).train(&c, &x, &labels).unwrap();
+    let lin = {
+        let y: Vec<f64> = (0..600).map(|i| (i % 11) as f64 * 0.3 - 1.0).collect();
+        LinearRegression::params().train(&c, &x, &y).unwrap()
+    };
+    let requests = requests_from(&x, 12);
+    let q = DenseTable::from_vec(x.data()[..40 * D].to_vec(), 40, D).unwrap();
+    let before = packed::pack_events();
+    for threads in 1..=4 {
+        let ct = ctx(threads);
+        let _ = InferenceSession::new(&km).tile(8).serve(&ct, &requests);
+        let _ = InferenceSession::new(&knn).tile(8).serve(&ct, &requests);
+        let _ = InferenceSession::new(&lin).tile(8).serve(&ct, &requests);
+        let _ = km.infer(&ct, &q).unwrap();
+        let _ = knn.kneighbors(&ct, &q).unwrap();
+        let _ = lin.infer(&ct, &q).unwrap();
+    }
+    assert_eq!(
+        packed::pack_events(),
+        before,
+        "inference must not repack — the panel is built once at train time"
+    );
+}
+
+/// The panel-backed paths are bit-identical to replicas of the old
+/// per-call behavior (corpus repacked and norms recomputed every call).
+#[test]
+fn pack_free_paths_match_per_call_pack_replicas() {
+    let _g = gate();
+    let mut e = Mt19937::new(53);
+    let (x, _) = make_blobs(&mut e, 600, D, 5, 1.0);
+    let labels: Vec<f64> = (0..600).map(|i| (i % 3) as f64).collect();
+    let q = DenseTable::from_vec(x.data()[..64 * D].to_vec(), 64, D).unwrap();
+    for threads in 1..=4 {
+        let c = ctx(threads);
+        let t = c.threads();
+        // k-means: panel infer vs per-call pack + fused argmin.
+        let km = KMeans::params().k(5).seed(7).max_iter(10).train(&c, &x).unwrap();
+        let panel_assign = km.infer(&c, &q).unwrap();
+        let corpus = distances::pack_corpus_table(&km.centroids, t);
+        let mut replica = vec![0usize; 64];
+        distances::argmin_assign(q.data(), 64, &corpus, true, &mut replica, t);
+        assert_eq!(panel_assign, replica, "kmeans assignment diverged at {threads} workers");
+        // KNN: panel kneighbors vs per-call pack + bounded top-k.
+        let knn = KnnClassifier::params().k(3).train(&c, &x, &labels).unwrap();
+        let panel_nn = knn.kneighbors(&c, &q).unwrap();
+        let corpus = distances::pack_corpus_table(&x, t);
+        let replica_nn = distances::top_k(q.data(), 64, &corpus, 3, t);
+        assert_eq!(panel_nn.len(), replica_nn.len());
+        for (i, (a, b)) in panel_nn.iter().zip(&replica_nn).enumerate() {
+            assert_eq!(a.len(), b.len(), "query {i}: neighbor count");
+            for ((ia, da), (ib, db)) in a.iter().zip(b) {
+                assert_eq!(ia, ib, "query {i}: neighbor index diverged");
+                assert_eq!(da.to_bits(), db.to_bits(), "query {i}: distance bits diverged");
+            }
+        }
+    }
+}
