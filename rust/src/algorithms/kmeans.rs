@@ -442,6 +442,41 @@ impl crate::coordinator::serve::ServeModel for KMeansModel {
         // `infer` is quarantined and pack-free.
         Ok(self.infer(ctx, q)?.into_iter().map(|c| c as f64).collect())
     }
+
+    fn serve_batch_rung(
+        &self,
+        ctx: &Context,
+        q: &DenseTable<f64>,
+        rung: crate::coordinator::serve::ServeRung,
+    ) -> Result<Vec<f64>> {
+        use crate::coordinator::serve::ServeRung;
+        match rung {
+            ServeRung::Packed => self.serve_batch(ctx, q),
+            ServeRung::Repack => {
+                // Degraded rung: re-pack the centroid panels per call,
+                // bypassing the model-resident panel the circuit
+                // breaker suspects. Same fused kernel, same bits.
+                let corpus = distances::pack_corpus_table(&self.centroids, ctx.threads());
+                let mut assign = vec![0usize; q.rows()];
+                distances::argmin_assign(
+                    q.data(),
+                    q.rows(),
+                    &corpus,
+                    true,
+                    &mut assign,
+                    ctx.threads(),
+                );
+                Ok(assign.into_iter().map(|c| c as f64).collect())
+            }
+            ServeRung::Naive => {
+                // Last rung before fast-reject: the scalar oracle,
+                // no packing, no pool fan-out state.
+                let mut assign = vec![0usize; q.rows()];
+                assign_naive(q, &self.centroids, &mut assign);
+                Ok(assign.into_iter().map(|c| c as f64).collect())
+            }
+        }
+    }
 }
 
 /// Fixed chunk count of the parallel centroid-update scatter. Chunk

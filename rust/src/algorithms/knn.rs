@@ -90,15 +90,21 @@ impl KnnModel {
     pub fn infer<'a>(&self, ctx: &Context, q: impl Into<TableRef<'a>>) -> Result<Vec<f64>> {
         let q = q.into();
         let neighbours = self.kneighbors(ctx, q)?;
-        let mut out = Vec::with_capacity(q.rows());
+        Ok(self.vote(&neighbours))
+    }
+
+    /// Majority vote over neighbour sets, ties to the lower class id —
+    /// deterministic across backends and serving rungs.
+    fn vote(&self, neighbours: &[Vec<(usize, f64)>]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(neighbours.len());
         let mut votes = vec![0usize; self.classes];
-        for row in &neighbours {
+        for row in neighbours {
             votes.iter_mut().for_each(|v| *v = 0);
             for &(idx, _) in row {
                 votes[self.y[idx] as usize] += 1;
             }
-            // Majority vote, ties to the lower class id. `classes >= 1`
-            // always (labels exist), so the fold yields a real argmax.
+            // `classes >= 1` always (labels exist), so the fold yields
+            // a real argmax.
             let best = votes
                 .iter()
                 .enumerate()
@@ -106,7 +112,7 @@ impl KnnModel {
                 .0;
             out.push(best as f64);
         }
-        Ok(out)
+        out
     }
 
     /// The k nearest `(train_index, sqdist)` per query, ascending.
@@ -152,6 +158,35 @@ impl crate::coordinator::serve::ServeModel for KnnModel {
     fn serve_batch(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>> {
         // Majority-vote class per row; `infer` is quarantined.
         self.infer(ctx, q)
+    }
+
+    fn serve_batch_rung(
+        &self,
+        ctx: &Context,
+        q: &DenseTable<f64>,
+        rung: crate::coordinator::serve::ServeRung,
+    ) -> Result<Vec<f64>> {
+        use crate::coordinator::serve::ServeRung;
+        match rung {
+            ServeRung::Packed => self.serve_batch(ctx, q),
+            ServeRung::Repack => {
+                // Degraded rung: re-pack the corpus per call (CSR
+                // corpora densify first), bypassing the model-resident
+                // panel the circuit breaker suspects. Neighbour index
+                // sets — and therefore class labels — match the packed
+                // path.
+                let dense = self.x.view().to_dense();
+                let corpus = distances::pack_corpus_table(&dense, ctx.threads());
+                let nn = distances::top_k(q.data(), q.rows(), &corpus, self.k, ctx.threads());
+                Ok(self.vote(&nn))
+            }
+            ServeRung::Naive => {
+                // Last rung before fast-reject: densified scalar
+                // oracle — full distance vector + total_cmp sort.
+                let dense = self.x.view().to_dense();
+                Ok(self.vote(&kneighbors_naive(&dense, q, self.k)))
+            }
+        }
     }
 }
 

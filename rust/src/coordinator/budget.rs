@@ -11,6 +11,16 @@
 //! it can cut (only between iterations), though *when* it trips depends
 //! on the machine. An unlimited budget (the default) costs nothing on
 //! the hot path: no clock is read unless a deadline is set.
+//!
+//! The serving layer reuses the same meter at a finer grain: a
+//! [`ServeRequest`](super::serve::ServeRequest) budget is checked once
+//! at super-batch entry and once per execution **tile**, so one huge
+//! super-batch cannot blow a deadline unobserved — there, a budget
+//! "iteration" is a tile checkpoint. The resilience layer routes its
+//! backoff and breaker-cooldown time through [`Budget`] too
+//! ([`Budget::spin`], `coordinator/resilience.rs`), which is what
+//! keeps this file the **only** library code that reads the clock
+//! (PAL-CLOCK, `docs/INVARIANTS.md`).
 
 use std::time::{Duration, Instant};
 
@@ -57,6 +67,24 @@ impl Budget {
 
     pub fn is_unlimited(&self) -> bool {
         self.max_wall_time.is_none() && self.max_iters.is_none()
+    }
+
+    /// Block the calling thread until this budget expires — the
+    /// resilience layer's backoff/cooldown-wait primitive
+    /// (`coordinator/resilience.rs` never reads the clock itself;
+    /// PAL-CLOCK). An iteration-cap budget spins its cap deterministic
+    /// and clock-free (`n` yields); a wall-time budget parks in a
+    /// yield loop until the deadline passes. The **unlimited** budget
+    /// returns immediately: "no backoff configured" must wait zero
+    /// time, not forever.
+    pub fn spin(&self) {
+        if self.is_unlimited() {
+            return;
+        }
+        let mut m = self.meter();
+        while m.check_before_iter().is_none() {
+            std::thread::yield_now();
+        }
     }
 
     /// Start metering one training call against this budget.
@@ -151,6 +179,17 @@ mod tests {
         let mut m =
             Budget::default().max_wall_time(Duration::ZERO).max_iters(0).meter();
         assert_eq!(m.check_before_iter(), Some(ConvergenceStatus::IterLimit));
+    }
+
+    #[test]
+    fn spin_terminates_and_unlimited_spin_is_instant() {
+        // Unlimited: must return immediately (a hang here would mean
+        // "no backoff" waits forever).
+        Budget::UNLIMITED.spin();
+        // Iteration cap: deterministic, clock-free termination.
+        Budget::default().max_iters(64).spin();
+        // Wall-time: terminates once the deadline passes.
+        Budget::default().max_wall_time(Duration::from_millis(1)).spin();
     }
 
     #[test]

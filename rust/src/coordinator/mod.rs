@@ -27,15 +27,26 @@
 //! ([`serve`]): an [`InferenceSession`] coalesces many small query
 //! batches into tile-aligned super-batches, scores them through the
 //! fitted models' pack-free panel entry points, and demuxes results in
-//! submission order under per-request [`Budget`]s.
+//! submission order under per-request [`Budget`]s. The resilient front
+//! end ([`resilience`], [`serve::QueuedSession`]) adds admission
+//! control over a bounded queue, deterministic retry of quarantined
+//! faults, a per-model circuit breaker, and the graceful-degradation
+//! rung ladder (`docs/RESILIENCE.md`).
 
 pub mod batch;
 pub mod budget;
+pub mod resilience;
 pub mod serve;
 
 pub use batch::{pad_to, PaddedBatch};
 pub use budget::{Budget, BudgetMeter, ConvergenceStatus};
-pub use serve::{InferenceSession, ServeModel, ServeRequest, ServeResult, ServeStatus};
+pub use resilience::{
+    BreakerPolicy, BreakerSnapshot, ResilienceStats, ResilientSession, RetryPolicy,
+};
+pub use serve::{
+    InferenceSession, QueueStats, QueuedSession, ServeExecutor, ServeModel, ServeRequest,
+    ServeResult, ServeRung, ServeStatus,
+};
 
 use crate::error::{Error, Result};
 use crate::runtime::{ArtifactRegistry, PjRtRuntime};

@@ -1,0 +1,706 @@
+//! Resilient serving: deterministic retry, a per-model circuit
+//! breaker, and the graceful-degradation ladder over
+//! [`InferenceSession`] — the layer that turns the fault primitives of
+//! the fail-safe PR (typed errors, panic quarantine, budgets,
+//! failpoints) into a serving runtime that degrades instead of failing
+//! open (`docs/RESILIENCE.md`).
+//!
+//! ## Retry
+//!
+//! A super-batch that fails with [`Error::Internal`] — the panic
+//! quarantine's verdict, i.e. "a worker blew up, not the input" — is
+//! retried against the respawned pool up to
+//! [`RetryPolicy::max_attempts`]. Any other error is deterministic
+//! (shape, numerical, ...) and is **not** retried. Backoff between
+//! attempts is expressed in *budget time*: attempt `k` spins the
+//! backoff [`Budget`] `k` times ([`Budget::spin`]), so this module
+//! never reads the clock (PAL-CLOCK) and an iteration-cap backoff is
+//! fully deterministic. A retried run is bit-identical to an unfaulted
+//! run: super-batch cuts are input-keyed, and
+//! `InferenceSession::execute_group` writes no live-member result on
+//! failure.
+//!
+//! ## Circuit breaker
+//!
+//! Classed Closed → Open → HalfOpen, keyed on **consecutive**
+//! primary-path super-batch failures (after retries). Count- and
+//! budget-driven, never wall-clock in this file: the Open state holds
+//! a cooldown [`BudgetMeter`] consumed one checkpoint per arriving
+//! super-batch — an iteration-cap cooldown half-opens after exactly
+//! `k` degraded batches; a wall-time cooldown half-opens at the first
+//! batch past the deadline (the clock read lives in `budget.rs`); an
+//! unlimited cooldown never half-opens. The half-open probe runs one
+//! primary attempt: success closes the breaker, an `Internal` failure
+//! re-opens it with a fresh cooldown.
+//!
+//! ## Degradation ladder
+//!
+//! While open, super-batches route down the [`ServeRung`] ladder
+//! instead of being rejected outright:
+//!
+//! ```text
+//! Packed (broken) → Repack (per-call pack) → Naive (scalar oracle)
+//!                 → fast-reject ServeStatus::Unavailable
+//! ```
+//!
+//! Every rung returns the same bits (the naive rung is the crate's
+//! oracle), so degraded service is slower, never different. The
+//! degraded rungs execute under their own failpoint site
+//! ([`crate::failpoint::SITE_SERVE_DEGRADED`]) and quarantine label,
+//! so a persistent fault in the primary path cannot poison the
+//! fallbacks. Each hop is counted in [`ResilienceStats`].
+
+use super::budget::{Budget, BudgetMeter};
+use super::serve::{
+    self, InferenceSession, ServeExecutor, ServeModel, ServeRequest, ServeResult, ServeRung,
+};
+use super::Context;
+use crate::error::Error;
+
+/// Retry policy for quarantined super-batch faults.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total primary-path attempts per super-batch (1 ⇒ no retry).
+    pub max_attempts: usize,
+    /// Backoff between attempts, expressed as a [`Budget`] spun to
+    /// expiry; attempt `k` spins it `k` times (linear backoff). The
+    /// default unlimited budget waits zero time ([`Budget::spin`]).
+    pub backoff: Budget,
+}
+
+impl RetryPolicy {
+    /// `n` total attempts, no backoff.
+    pub fn attempts(n: usize) -> Self {
+        Self { max_attempts: n.max(1), backoff: Budget::UNLIMITED }
+    }
+
+    pub fn with_backoff(mut self, b: Budget) -> Self {
+        self.backoff = b;
+        self
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::attempts(1)
+    }
+}
+
+/// Circuit-breaker policy, keyed on consecutive primary-path failures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BreakerPolicy {
+    /// Consecutive failed super-batches (retries exhausted) that trip
+    /// Closed → Open.
+    pub failure_threshold: usize,
+    /// Cooldown before a half-open probe, metered one checkpoint per
+    /// super-batch arriving while open. `max_iters(k)` ⇒ exactly `k`
+    /// degraded batches before the probe (deterministic);
+    /// `max_wall_time` ⇒ first batch past the deadline probes;
+    /// unlimited ⇒ the breaker never half-opens.
+    pub cooldown: Budget,
+}
+
+impl BreakerPolicy {
+    /// Trip after `n` consecutive failures; probe after one degraded
+    /// batch.
+    pub fn threshold(n: usize) -> Self {
+        Self { failure_threshold: n.max(1), cooldown: Budget::default().max_iters(1) }
+    }
+
+    pub fn with_cooldown(mut self, b: Budget) -> Self {
+        self.cooldown = b;
+        self
+    }
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        Self::threshold(3)
+    }
+}
+
+/// Observable breaker position (the internal state also carries the
+/// cooldown meter).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerSnapshot {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+enum BreakerState {
+    Closed { consecutive_failures: usize },
+    Open { cooldown: BudgetMeter },
+    HalfOpen,
+}
+
+/// Per-session resilience counters (mirroring the SVM `TrainStats`
+/// style): every retry, trip, probe, and degradation hop is counted,
+/// so tests assert exact fault accounting instead of sleeping and
+/// guessing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResilienceStats {
+    /// Super-batches that entered the primary (packed) path.
+    pub batches: usize,
+    /// Primary-path attempts that failed with a quarantined
+    /// [`Error::Internal`] — exactly the injected fault count under
+    /// fault injection.
+    pub faults: usize,
+    /// Re-attempts made after a fault.
+    pub retries: usize,
+    /// Super-batches that completed on a retry after ≥ 1 fault.
+    pub retry_successes: usize,
+    /// Closed → Open transitions.
+    pub breaker_trips: usize,
+    /// Half-open probe attempts.
+    pub half_open_probes: usize,
+    /// HalfOpen → Closed recoveries.
+    pub recoveries: usize,
+    /// Super-batches served by the per-call-pack rung while open.
+    pub degraded_repack: usize,
+    /// Super-batches served by the naive rung while open.
+    pub degraded_naive: usize,
+    /// Super-batches fast-rejected after the whole ladder failed.
+    pub unavailable_batches: usize,
+}
+
+/// [`InferenceSession`] wrapped with retry, circuit breaking, and the
+/// degradation ladder. Breaker state and counters persist across
+/// [`ResilientSession::serve`] calls — the breaker is per model
+/// session, like the panel it guards.
+pub struct ResilientSession<'m, M: ServeModel> {
+    session: InferenceSession<'m, M>,
+    retry: RetryPolicy,
+    breaker: BreakerPolicy,
+    state: BreakerState,
+    stats: ResilienceStats,
+}
+
+/// Which path the breaker gate routed a super-batch to.
+enum Gate {
+    Primary,
+    Probe,
+    Degraded,
+}
+
+impl<'m, M: ServeModel> ResilientSession<'m, M> {
+    pub fn new(session: InferenceSession<'m, M>) -> Self {
+        Self {
+            session,
+            retry: RetryPolicy::default(),
+            breaker: BreakerPolicy::default(),
+            state: BreakerState::Closed { consecutive_failures: 0 },
+            stats: ResilienceStats::default(),
+        }
+    }
+
+    pub fn retry(mut self, p: RetryPolicy) -> Self {
+        self.retry = p;
+        self
+    }
+
+    pub fn breaker(mut self, p: BreakerPolicy) -> Self {
+        self.breaker = p;
+        self
+    }
+
+    pub fn stats(&self) -> ResilienceStats {
+        self.stats
+    }
+
+    pub fn breaker_state(&self) -> BreakerSnapshot {
+        match self.state {
+            BreakerState::Closed { .. } => BreakerSnapshot::Closed,
+            BreakerState::Open { .. } => BreakerSnapshot::Open,
+            BreakerState::HalfOpen => BreakerSnapshot::HalfOpen,
+        }
+    }
+
+    /// The wrapped session (e.g. for planning introspection).
+    pub fn session(&self) -> &InferenceSession<'m, M> {
+        &self.session
+    }
+
+    /// Serve a request set with retry, breaker, and ladder semantics.
+    /// Identical coalescing plan and demux order as
+    /// [`InferenceSession::serve`]; in the absence of faults the
+    /// results are bit-identical to the plain path.
+    pub fn serve(&mut self, ctx: &Context, requests: &[ServeRequest]) -> Vec<ServeResult> {
+        let (groups, mut meters, mut results) = self.session.init_run(requests);
+        for group in &groups {
+            self.serve_group(ctx, requests, group, &mut meters, &mut results);
+        }
+        serve::finalize_results(results)
+    }
+
+    fn serve_group(
+        &mut self,
+        ctx: &Context,
+        requests: &[ServeRequest],
+        group: &[usize],
+        meters: &mut [BudgetMeter],
+        results: &mut [Option<ServeResult>],
+    ) {
+        let gate = match &mut self.state {
+            BreakerState::Closed { .. } => Gate::Primary,
+            BreakerState::Open { cooldown } => {
+                // One cooldown checkpoint per arriving super-batch —
+                // count-/budget-driven, never a clock read here.
+                if cooldown.check_before_iter().is_some() {
+                    self.state = BreakerState::HalfOpen;
+                    Gate::Probe
+                } else {
+                    Gate::Degraded
+                }
+            }
+            BreakerState::HalfOpen => Gate::Probe,
+        };
+        match gate {
+            Gate::Primary => self.serve_primary(ctx, requests, group, meters, results),
+            Gate::Probe => self.serve_probe(ctx, requests, group, meters, results),
+            Gate::Degraded => self.serve_degraded(ctx, requests, group, meters, results),
+        }
+    }
+
+    /// Closed breaker: primary path with deterministic retry.
+    fn serve_primary(
+        &mut self,
+        ctx: &Context,
+        requests: &[ServeRequest],
+        group: &[usize],
+        meters: &mut [BudgetMeter],
+        results: &mut [Option<ServeResult>],
+    ) {
+        self.stats.batches += 1;
+        let mut attempt = 0usize;
+        loop {
+            attempt += 1;
+            let outcome = self.session.execute_group(
+                ctx,
+                requests,
+                group,
+                meters,
+                results,
+                ServeRung::Packed,
+            );
+            match outcome {
+                Ok(()) => {
+                    if attempt > 1 {
+                        self.stats.retry_successes += 1;
+                    }
+                    if let BreakerState::Closed { consecutive_failures } = &mut self.state {
+                        *consecutive_failures = 0;
+                    }
+                    return;
+                }
+                Err(Error::Internal(_)) if attempt < self.retry.max_attempts => {
+                    // Quarantined fault: the pool respawns lazily at
+                    // the next batch, so the retry runs against a
+                    // healthy pool. Back off in budget time, then go
+                    // again.
+                    self.stats.faults += 1;
+                    self.stats.retries += 1;
+                    self.backoff(attempt);
+                }
+                Err(e) => {
+                    let is_fault = matches!(e, Error::Internal(_));
+                    if is_fault {
+                        self.stats.faults += 1;
+                    }
+                    if is_fault && self.note_failure() {
+                        // Retries exhausted AND the trip threshold hit:
+                        // this batch already rides the ladder down.
+                        self.serve_degraded(ctx, requests, group, meters, results);
+                    } else {
+                        // Deterministic (non-Internal) errors fail
+                        // immediately and never count toward the
+                        // breaker — retrying a shape mismatch cannot
+                        // help.
+                        let msg = e.to_string();
+                        serve::settle_unsettled(group, results, || {
+                            ServeResult::failed(msg.clone())
+                        });
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Half-open breaker: one unretried primary probe.
+    fn serve_probe(
+        &mut self,
+        ctx: &Context,
+        requests: &[ServeRequest],
+        group: &[usize],
+        meters: &mut [BudgetMeter],
+        results: &mut [Option<ServeResult>],
+    ) {
+        self.stats.half_open_probes += 1;
+        self.stats.batches += 1;
+        let outcome =
+            self.session.execute_group(ctx, requests, group, meters, results, ServeRung::Packed);
+        match outcome {
+            Ok(()) => {
+                self.state = BreakerState::Closed { consecutive_failures: 0 };
+                self.stats.recoveries += 1;
+            }
+            Err(Error::Internal(_)) => {
+                // Probe failed: re-open with a fresh cooldown; this
+                // batch still gets degraded service.
+                self.stats.faults += 1;
+                self.state = BreakerState::Open { cooldown: self.breaker.cooldown.meter() };
+                self.serve_degraded(ctx, requests, group, meters, results);
+            }
+            Err(e) => {
+                // Deterministic error: not a breaker signal. Fail the
+                // batch; the next one probes again.
+                let msg = e.to_string();
+                serve::settle_unsettled(group, results, || ServeResult::failed(msg.clone()));
+            }
+        }
+    }
+
+    /// Open breaker: walk the degradation ladder —
+    /// per-call-pack → naive → fast-reject.
+    fn serve_degraded(
+        &mut self,
+        ctx: &Context,
+        requests: &[ServeRequest],
+        group: &[usize],
+        meters: &mut [BudgetMeter],
+        results: &mut [Option<ServeResult>],
+    ) {
+        if self
+            .session
+            .execute_group(ctx, requests, group, meters, results, ServeRung::Repack)
+            .is_ok()
+        {
+            self.stats.degraded_repack += 1;
+            return;
+        }
+        match self.session.execute_group(ctx, requests, group, meters, results, ServeRung::Naive)
+        {
+            Ok(()) => self.stats.degraded_naive += 1,
+            Err(e) => {
+                // Ladder exhausted: fast-reject with a typed outcome
+                // instead of burning more attempts.
+                self.stats.unavailable_batches += 1;
+                let msg = format!("serve: circuit open, degradation ladder exhausted ({e})");
+                serve::settle_unsettled(group, results, || {
+                    ServeResult::unavailable(msg.clone())
+                });
+            }
+        }
+    }
+
+    /// Record an exhausted-retries primary failure; returns true iff
+    /// the breaker just tripped.
+    fn note_failure(&mut self) -> bool {
+        if let BreakerState::Closed { consecutive_failures } = &mut self.state {
+            *consecutive_failures += 1;
+            if *consecutive_failures >= self.breaker.failure_threshold {
+                self.state = BreakerState::Open { cooldown: self.breaker.cooldown.meter() };
+                self.stats.breaker_trips += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Linear budget-time backoff before re-attempt `attempt + 1`.
+    fn backoff(&self, attempt: usize) {
+        for _ in 0..attempt {
+            self.retry.backoff.spin();
+        }
+    }
+}
+
+impl<M: ServeModel> ServeExecutor for ResilientSession<'_, M> {
+    fn serve_all(&mut self, ctx: &Context, requests: &[ServeRequest]) -> Vec<ServeResult> {
+        self.serve(ctx, requests)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Context, ServeStatus};
+    use crate::error::Result;
+    use crate::tables::DenseTable;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Row-sum model that fails its first `fail_first` calls on the
+    /// given rungs with `Error::Internal` — a deterministic stand-in
+    /// for the panic quarantine that needs no process-global failpoint
+    /// (those are exercised in `tests/chaos.rs`).
+    struct Flaky {
+        d: usize,
+        fail_packed: usize,
+        fail_repack_always: bool,
+        fail_naive_always: bool,
+        packed_calls: AtomicUsize,
+    }
+
+    impl Flaky {
+        fn new(d: usize, fail_packed: usize) -> Self {
+            Self {
+                d,
+                fail_packed,
+                fail_repack_always: false,
+                fail_naive_always: false,
+                packed_calls: AtomicUsize::new(0),
+            }
+        }
+
+        fn rowsum(q: &DenseTable<f64>) -> Vec<f64> {
+            (0..q.rows()).map(|i| q.row(i).iter().sum()).collect()
+        }
+    }
+
+    impl ServeModel for Flaky {
+        fn serve_dims(&self) -> usize {
+            self.d
+        }
+
+        fn serve_batch(&self, _ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>> {
+            let n = self.packed_calls.fetch_add(1, Ordering::Relaxed);
+            if n < self.fail_packed {
+                return Err(Error::Internal("flaky: injected packed fault".into()));
+            }
+            Ok(Self::rowsum(q))
+        }
+
+        fn serve_batch_rung(
+            &self,
+            ctx: &Context,
+            q: &DenseTable<f64>,
+            rung: ServeRung,
+        ) -> Result<Vec<f64>> {
+            match rung {
+                ServeRung::Packed => self.serve_batch(ctx, q),
+                ServeRung::Repack => {
+                    if self.fail_repack_always {
+                        Err(Error::Internal("flaky: injected repack fault".into()))
+                    } else {
+                        Ok(Self::rowsum(q))
+                    }
+                }
+                ServeRung::Naive => {
+                    if self.fail_naive_always {
+                        Err(Error::Internal("flaky: injected naive fault".into()))
+                    } else {
+                        Ok(Self::rowsum(q))
+                    }
+                }
+            }
+        }
+    }
+
+    fn ctx() -> Context {
+        Context::builder()
+            .artifact_dir("/nonexistent")
+            .backend(Backend::Vectorized)
+            .build()
+            .unwrap()
+    }
+
+    fn req(rows: usize, cols: usize, fill: f64) -> ServeRequest {
+        ServeRequest::new(vec![fill; rows * cols], rows, cols).unwrap()
+    }
+
+    fn assert_bitwise(a: &[ServeResult], b: &[ServeResult]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.status, y.status);
+            match (&x.output, &y.output) {
+                (Some(u), Some(v)) => {
+                    assert_eq!(u.len(), v.len());
+                    for (p, q) in u.iter().zip(v) {
+                        assert_eq!(p.to_bits(), q.to_bits());
+                    }
+                }
+                (None, None) => {}
+                _ => panic!("outputs diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn faulted_then_retried_is_bit_identical_to_unfaulted() {
+        let requests: Vec<ServeRequest> = (0..4).map(|i| req(2, 3, i as f64)).collect();
+        let c = ctx();
+        let clean = Flaky::new(3, 0);
+        let baseline = InferenceSession::new(&clean).tile(4).serve(&c, &requests);
+        // One fault on the first packed call; two attempts allowed.
+        let flaky = Flaky::new(3, 1);
+        let mut rs = ResilientSession::new(InferenceSession::new(&flaky).tile(4))
+            .retry(RetryPolicy::attempts(2).with_backoff(Budget::default().max_iters(4)));
+        let served = rs.serve(&c, &requests);
+        assert_bitwise(&served, &baseline);
+        let st = rs.stats();
+        assert_eq!(st.faults, 1, "exactly the injected fault count");
+        assert_eq!(st.retries, 1);
+        assert_eq!(st.retry_successes, 1);
+        assert_eq!(st.breaker_trips, 0);
+        assert_eq!(rs.breaker_state(), BreakerSnapshot::Closed);
+    }
+
+    #[test]
+    fn non_internal_errors_are_not_retried_and_do_not_trip() {
+        struct Deterministic;
+        impl ServeModel for Deterministic {
+            fn serve_dims(&self) -> usize {
+                2
+            }
+            fn serve_batch(&self, _ctx: &Context, _q: &DenseTable<f64>) -> Result<Vec<f64>> {
+                Err(Error::Numerical("always".into()))
+            }
+        }
+        let model = Deterministic;
+        let mut rs = ResilientSession::new(InferenceSession::new(&model))
+            .retry(RetryPolicy::attempts(5))
+            .breaker(BreakerPolicy::threshold(1));
+        let served = rs.serve(&ctx(), &[req(1, 2, 1.0)]);
+        assert_eq!(served[0].status, ServeStatus::Failed);
+        let st = rs.stats();
+        assert_eq!(st.faults, 0);
+        assert_eq!(st.retries, 0);
+        assert_eq!(st.breaker_trips, 0);
+        assert_eq!(rs.breaker_state(), BreakerSnapshot::Closed);
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold_and_ladder_serves_repack() {
+        // Packed path always fails; repack works. Threshold 2, no
+        // retries.
+        let flaky = Flaky { fail_packed: usize::MAX, ..Flaky::new(2, 0) };
+        let requests: Vec<ServeRequest> = (0..4).map(|i| req(1, 2, i as f64)).collect();
+        let c = ctx();
+        // One request per super-batch so each is one breaker event.
+        let mut rs = ResilientSession::new(InferenceSession::new(&flaky).max_super_rows(1))
+            .breaker(BreakerPolicy::threshold(2).with_cooldown(Budget::default().max_iters(99)));
+        let served = rs.serve(&c, &requests);
+        // Batch 0: fail (1/2). Batch 1: fail → trip → rides ladder.
+        // Batches 2, 3: open → degraded repack.
+        assert_eq!(served[0].status, ServeStatus::Failed);
+        assert_eq!(served[1].status, ServeStatus::Completed);
+        assert_eq!(served[2].status, ServeStatus::Completed);
+        assert_eq!(served[3].status, ServeStatus::Completed);
+        let st = rs.stats();
+        assert_eq!(st.breaker_trips, 1);
+        assert_eq!(st.degraded_repack, 3);
+        assert_eq!(st.faults, 2);
+        assert_eq!(rs.breaker_state(), BreakerSnapshot::Open);
+        // Degraded outputs carry the same bits as a healthy run.
+        let clean = Flaky::new(2, 0);
+        let baseline = InferenceSession::new(&clean).max_super_rows(1).serve(&c, &requests);
+        for i in 1..4 {
+            assert_eq!(
+                served[i].output.as_deref().unwrap(),
+                baseline[i].output.as_deref().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn ladder_escalates_to_naive_then_unavailable() {
+        // Packed and repack both fail; naive works.
+        let mut flaky = Flaky { fail_packed: usize::MAX, ..Flaky::new(2, 0) };
+        flaky.fail_repack_always = true;
+        let c = ctx();
+        let requests: Vec<ServeRequest> = (0..2).map(|i| req(1, 2, i as f64)).collect();
+        let mut rs = ResilientSession::new(InferenceSession::new(&flaky).max_super_rows(1))
+            .breaker(BreakerPolicy::threshold(1).with_cooldown(Budget::default().max_iters(99)));
+        let served = rs.serve(&c, &requests);
+        assert_eq!(served[0].status, ServeStatus::Completed, "trip batch rides the ladder");
+        assert_eq!(served[1].status, ServeStatus::Completed);
+        assert_eq!(rs.stats().degraded_naive, 2);
+        assert_eq!(rs.stats().degraded_repack, 0);
+        // Now break the whole ladder: fast-reject with Unavailable.
+        let mut dead = Flaky { fail_packed: usize::MAX, ..Flaky::new(2, 0) };
+        dead.fail_repack_always = true;
+        dead.fail_naive_always = true;
+        let mut rs = ResilientSession::new(InferenceSession::new(&dead).max_super_rows(1))
+            .breaker(BreakerPolicy::threshold(1).with_cooldown(Budget::default().max_iters(99)));
+        let served = rs.serve(&c, &requests);
+        assert_eq!(served[0].status, ServeStatus::Unavailable);
+        assert_eq!(served[1].status, ServeStatus::Unavailable);
+        assert!(served[1].error.as_deref().is_some_and(|e| e.contains("ladder")));
+        assert_eq!(rs.stats().unavailable_batches, 2);
+    }
+
+    #[test]
+    fn half_open_probe_recovers_after_cooldown() {
+        // Packed fails for the first 2 calls, then heals.
+        let flaky = Flaky::new(2, 2);
+        let c = ctx();
+        let one = |fill: f64| vec![req(1, 2, fill)];
+        let mut rs = ResilientSession::new(InferenceSession::new(&flaky).max_super_rows(1))
+            .breaker(BreakerPolicy::threshold(2).with_cooldown(Budget::default().max_iters(1)));
+        // Two failures trip the breaker (second batch rides the ladder).
+        assert_eq!(rs.serve(&c, &one(1.0))[0].status, ServeStatus::Failed);
+        assert_eq!(rs.serve(&c, &one(2.0))[0].status, ServeStatus::Completed);
+        assert_eq!(rs.breaker_state(), BreakerSnapshot::Open);
+        // Cooldown max_iters(1): exactly one degraded batch, then the
+        // next one probes.
+        assert_eq!(rs.serve(&c, &one(3.0))[0].status, ServeStatus::Completed);
+        assert_eq!(rs.breaker_state(), BreakerSnapshot::Open);
+        assert_eq!(rs.stats().degraded_repack, 2);
+        // Probe batch: the model has healed; primary path serves it.
+        let probed = rs.serve(&c, &one(4.0));
+        assert_eq!(probed[0].status, ServeStatus::Completed);
+        assert_eq!(rs.breaker_state(), BreakerSnapshot::Closed);
+        let st = rs.stats();
+        assert_eq!(st.half_open_probes, 1);
+        assert_eq!(st.recoveries, 1);
+        assert_eq!(st.breaker_trips, 1);
+        assert_eq!(st.faults, 2, "exactly the injected fault count");
+        // Closed again: clean primary service.
+        assert_eq!(rs.serve(&c, &one(5.0))[0].status, ServeStatus::Completed);
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_fresh_cooldown() {
+        // Packed fails for the first 3 calls: the trip batch consumes
+        // one, the two failed probes the rest; the fourth call heals.
+        let flaky = Flaky::new(2, 3);
+        let c = ctx();
+        let one = |fill: f64| vec![req(1, 2, fill)];
+        let mut rs = ResilientSession::new(InferenceSession::new(&flaky).max_super_rows(1))
+            .breaker(BreakerPolicy::threshold(1).with_cooldown(Budget::default().max_iters(0)));
+        // Trip on the first batch (rides the ladder down).
+        assert_eq!(rs.serve(&c, &one(1.0))[0].status, ServeStatus::Completed);
+        assert_eq!(rs.breaker_state(), BreakerSnapshot::Open);
+        // Cooldown max_iters(0) expires immediately ⇒ next batch is a
+        // probe; the model still fails ⇒ re-open, batch degrades.
+        assert_eq!(rs.serve(&c, &one(2.0))[0].status, ServeStatus::Completed);
+        assert_eq!(rs.breaker_state(), BreakerSnapshot::Open);
+        // Second probe consumes the third (last) fault and re-opens;
+        // the probe after it runs against a healed model.
+        assert_eq!(rs.serve(&c, &one(3.0))[0].status, ServeStatus::Completed);
+        assert_eq!(rs.breaker_state(), BreakerSnapshot::Open, "probe 2 failed: reopen");
+        assert_eq!(rs.serve(&c, &one(4.0))[0].status, ServeStatus::Completed);
+        assert_eq!(rs.breaker_state(), BreakerSnapshot::Closed, "probe 3 heals");
+        let st = rs.stats();
+        assert_eq!(st.half_open_probes, 3);
+        assert_eq!(st.recoveries, 1);
+        assert_eq!(st.faults, 3);
+    }
+
+    #[test]
+    fn queued_front_end_composes_with_the_resilient_session() {
+        use crate::coordinator::serve::QueuedSession;
+        let flaky = Flaky::new(2, 1);
+        let c = ctx();
+        let rs = ResilientSession::new(InferenceSession::new(&flaky))
+            .retry(RetryPolicy::attempts(2));
+        let mut q = QueuedSession::new(rs, 4);
+        for i in 0..4 {
+            q.submit(req(1, 2, i as f64)).unwrap();
+        }
+        let results = q.drain(&c);
+        assert!(results.iter().all(|r| r.status == ServeStatus::Completed));
+        assert_eq!(q.into_inner().stats().faults, 1);
+    }
+}

@@ -13,10 +13,20 @@
 //! 4. [`InferenceSession::serve`] coalesces them into super-batches
 //!    ([`InferenceSession::plan`]), pads each to a multiple of the
 //!    session tile with zero rows (the [`super::batch`] pad-and-mask
-//!    idiom), runs each super-batch through
+//!    idiom), runs each super-batch **tile by tile** through
 //!    [`ServeModel::serve_batch`] under the `serve.batch` panic
 //!    quarantine, and returns one [`ServeResult`] per request, in
 //!    submission order.
+//!
+//! Two layers sit on top of the slice-based session:
+//!
+//! * [`QueuedSession`] — the bounded-queue front end: submissions are
+//!   admitted up to a capacity, shed with a typed
+//!   [`ServeStatus::Overloaded`] when the queue is full, drained in
+//!   submission order (bit-identical to the slice path), and settled
+//!   as [`ServeStatus::Cancelled`] if the session shuts down first.
+//! * [`super::resilience::ResilientSession`] — deterministic retry,
+//!   circuit breaking, and the [`ServeRung`] degradation ladder.
 //!
 //! ## Determinism rules
 //!
@@ -32,23 +42,28 @@
 //! * **Row independence**: every served model scores rows
 //!   independently (the engine's per-row contract), so a request's
 //!   output bits do not depend on which neighbors shared its
-//!   super-batch or on the zero padding rows — coalesced serving is
+//!   super-batch, on the zero padding rows, or on where the per-tile
+//!   execution loop cuts — coalesced, tile-wise serving is
 //!   bit-identical to sequential per-request calls at any worker
 //!   count.
 //!
 //! ## Typed outcomes
 //!
-//! Each request's budget is metered from submission; a request whose
-//! budget has expired by the time its super-batch executes gets a
-//! [`ServeStatus::DeadlineExceeded`] outcome — its neighbors in the
-//! same super-batch still complete, bit-identical to an all-unlimited
-//! run. A panic or error inside a super-batch (see
+//! Each request's budget is metered from submission and checked
+//! **cooperatively**: once at super-batch entry and once per execution
+//! tile its rows intersect (so one huge super-batch cannot blow a
+//! deadline unobserved; a budget "iteration" here is a checkpoint
+//! visit). An expired request gets a [`ServeStatus::DeadlineExceeded`]
+//! outcome — its neighbors in the same super-batch still complete,
+//! bit-identical to an all-unlimited run, and tiles in which every
+//! intersecting request has settled (plus the padded tail) are skipped
+//! entirely. A panic or typed error inside a super-batch (see
 //! [`crate::failpoint::SITE_SERVE_BATCH`]) is quarantined into
 //! [`ServeStatus::Failed`] for that batch's live members only; other
 //! super-batches are untouched and a retry runs clean.
 
 use super::batch;
-use super::budget::Budget;
+use super::budget::{Budget, BudgetMeter};
 use super::Context;
 use crate::error::{Error, Result};
 use crate::failpoint;
@@ -60,6 +75,25 @@ use crate::tables::DenseTable;
 const DEFAULT_TILE: usize = 256;
 /// Default cap on rows per coalesced super-batch.
 const DEFAULT_MAX_SUPER_ROWS: usize = 1024;
+
+/// Which execution path a super-batch runs on — the resilience layer's
+/// degradation ladder, ordered fastest first
+/// (`docs/RESILIENCE.md`). The plain session always runs `Packed`;
+/// an open circuit breaker walks down.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeRung {
+    /// The normal pack-free path: score through the model-resident
+    /// packed panel.
+    Packed,
+    /// Re-pack the corpus per call, bypassing the model-resident panel
+    /// — degraded throughput, same bits (the per-call-pack replica of
+    /// `tests/serve_property.rs`).
+    Repack,
+    /// The scalar naive oracle rung ([`super::Backend::Naive`]) —
+    /// slowest, and independent of the packed/pooled machinery
+    /// entirely.
+    Naive,
+}
 
 /// A fitted model the serving layer can drive. Implementations route
 /// through their quarantined, pack-free inference entry points (the
@@ -76,6 +110,23 @@ pub trait ServeModel {
 
     /// Score one dense batch: `rows × serve_width()` values, row-major.
     fn serve_batch(&self, ctx: &Context, q: &DenseTable<f64>) -> Result<Vec<f64>>;
+
+    /// Score one dense batch on an explicit degradation rung. The
+    /// default ignores the rung and runs [`ServeModel::serve_batch`] —
+    /// correct for models whose panel is a plain weight vector (there
+    /// is nothing to degrade to). Distance-engine models override it:
+    /// `Repack` must bypass the model-resident panel, `Naive` must run
+    /// the scalar oracle. Every rung returns the same bits (the naive
+    /// rung is the established oracle).
+    fn serve_batch_rung(
+        &self,
+        ctx: &Context,
+        q: &DenseTable<f64>,
+        rung: ServeRung,
+    ) -> Result<Vec<f64>> {
+        let _ = rung;
+        self.serve_batch(ctx, q)
+    }
 }
 
 /// One client query batch: a small dense `rows × cols` block plus an
@@ -122,13 +173,25 @@ impl ServeRequest {
 pub enum ServeStatus {
     /// Scored; `output` holds `rows × serve_width()` values.
     Completed,
-    /// The request's budget expired before its super-batch ran (the
-    /// single scoring pass counts as one budget iteration, so an
-    /// iteration cap of zero also lands here). No output.
+    /// The request's budget expired at a checkpoint — super-batch
+    /// entry or a per-tile visit — before its rows finished scoring
+    /// (each checkpoint counts as one budget iteration, so an
+    /// iteration cap of zero lands here at entry). No output.
     DeadlineExceeded,
     /// Shape mismatch at planning time, or a quarantined panic/error
     /// while this request's super-batch executed. No output.
     Failed,
+    /// Shed at admission: the [`QueuedSession`] bounded queue was full
+    /// ([`Error::Overloaded`]). No output.
+    Overloaded,
+    /// Fast-rejected by the resilience layer: the circuit breaker is
+    /// open and the whole degradation ladder failed
+    /// (`coordinator/resilience.rs`). No output.
+    Unavailable,
+    /// Cancelled while still queued — [`QueuedSession::shutdown`]
+    /// settles queued-but-unexecuted requests with this instead of
+    /// silently dropping them ([`Error::Cancelled`]). No output.
+    Cancelled,
 }
 
 /// Per-request outcome, returned in submission order.
@@ -138,26 +201,65 @@ pub struct ServeResult {
     /// `rows × serve_width()` values for [`ServeStatus::Completed`];
     /// `None` otherwise. Padded-tail rows are never included.
     pub output: Option<Vec<f64>>,
-    /// Human-readable cause for [`ServeStatus::Failed`].
+    /// Human-readable cause for the non-completed, non-deadline
+    /// statuses.
     pub error: Option<String>,
 }
 
 impl ServeResult {
-    fn completed(output: Vec<f64>) -> Self {
+    pub(crate) fn completed(output: Vec<f64>) -> Self {
         Self { status: ServeStatus::Completed, output: Some(output), error: None }
     }
 
-    fn deadline() -> Self {
+    pub(crate) fn deadline() -> Self {
         Self { status: ServeStatus::DeadlineExceeded, output: None, error: None }
     }
 
-    fn failed(msg: String) -> Self {
+    pub(crate) fn failed(msg: String) -> Self {
         Self { status: ServeStatus::Failed, output: None, error: Some(msg) }
+    }
+
+    pub(crate) fn unavailable(msg: String) -> Self {
+        Self { status: ServeStatus::Unavailable, output: None, error: Some(msg) }
+    }
+
+    fn overloaded(msg: String) -> Self {
+        Self { status: ServeStatus::Overloaded, output: None, error: Some(msg) }
+    }
+
+    fn cancelled(msg: String) -> Self {
+        Self { status: ServeStatus::Cancelled, output: None, error: Some(msg) }
     }
 
     pub fn is_completed(&self) -> bool {
         self.status == ServeStatus::Completed
     }
+}
+
+/// Settle every still-unsettled member of `group` with the result
+/// `mk` builds — the caller's verdict after a failed execution attempt
+/// (plain path: `Failed`; resilience layer: `Unavailable`).
+pub(crate) fn settle_unsettled(
+    group: &[usize],
+    results: &mut [Option<ServeResult>],
+    mk: impl Fn() -> ServeResult,
+) {
+    for &ri in group {
+        if results[ri].is_none() {
+            results[ri] = Some(mk());
+        }
+    }
+}
+
+/// Unwrap the per-request slots into the final submission-order
+/// result vector.
+pub(crate) fn finalize_results(results: Vec<Option<ServeResult>>) -> Vec<ServeResult> {
+    results
+        .into_iter()
+        .map(|r| {
+            r.unwrap_or_else(|| ServeResult::failed("serve: request never scheduled".into()))
+        })
+        .collect()
 }
 
 /// A serving session over one fitted model. Cheap to construct (borrows
@@ -174,7 +276,8 @@ impl<'m, M: ServeModel> InferenceSession<'m, M> {
     }
 
     /// Super-batch row alignment (rows are zero-padded up to a multiple
-    /// of this).
+    /// of this). Also the granularity of the cooperative budget
+    /// checkpoints and of deadline-driven tile skipping.
     pub fn tile(mut self, tile: usize) -> Self {
         assert!(tile > 0, "serve: tile must be positive");
         self.tile = tile;
@@ -216,6 +319,152 @@ impl<'m, M: ServeModel> InferenceSession<'m, M> {
         groups
     }
 
+    /// Shared run setup for the slice path and the resilience layer:
+    /// the coalescing plan, one submission-time [`BudgetMeter`] per
+    /// request, and the per-request result slots with mis-shaped
+    /// requests pre-settled as [`ServeStatus::Failed`].
+    pub(crate) fn init_run(
+        &self,
+        requests: &[ServeRequest],
+    ) -> (Vec<Vec<usize>>, Vec<BudgetMeter>, Vec<Option<ServeResult>>) {
+        let dims = self.model.serve_dims();
+        let groups = self.plan(requests);
+        // Deadlines are metered from submission for every request (the
+        // only clock reads live inside `budget.rs`).
+        let meters = requests.iter().map(|r| r.budget.meter()).collect();
+        let results = requests
+            .iter()
+            .map(|r| {
+                (r.cols != dims).then(|| {
+                    ServeResult::failed(format!(
+                        "serve: request dim {} != model dim {dims}",
+                        r.cols
+                    ))
+                })
+            })
+            .collect();
+        (groups, meters, results)
+    }
+
+    /// Execute one planned super-batch at `rung`: checkpoint budgets,
+    /// assemble + pad, score tile by tile under the quarantine, and
+    /// demux completed outputs into `results`.
+    ///
+    /// Budget expirations observed during the attempt are settled
+    /// immediately (a deadline verdict is final no matter what happens
+    /// to the rest of the batch). On `Err` — a quarantined panic, a
+    /// typed model error, or an injected fault — **no live member's
+    /// result is written**, so the caller decides: the plain path
+    /// settles them [`ServeStatus::Failed`], the resilience layer
+    /// retries or walks the degradation ladder. Members already
+    /// settled by an earlier attempt stay settled; the super-batch is
+    /// always assembled from *all* member rows so its layout stays
+    /// input-keyed across attempts and rungs.
+    pub(crate) fn execute_group(
+        &self,
+        ctx: &Context,
+        requests: &[ServeRequest],
+        group: &[usize],
+        meters: &mut [BudgetMeter],
+        results: &mut [Option<ServeResult>],
+        rung: ServeRung,
+    ) -> Result<()> {
+        let dims = self.model.serve_dims();
+        let width = self.model.serve_width();
+        // Entry checkpoint: settle members whose budget has already
+        // expired before doing any assembly work.
+        let mut any_live = false;
+        for &ri in group {
+            if results[ri].is_some() {
+                continue;
+            }
+            match meters[ri].check_before_iter() {
+                Some(_) => results[ri] = Some(ServeResult::deadline()),
+                None => any_live = true,
+            }
+        }
+        if !any_live {
+            return Ok(());
+        }
+        // Assemble from *all* member rows (settled members included) so
+        // the layout stays input-keyed, then zero-pad up to the tile
+        // boundary. Row independence makes the live members' bits
+        // indifferent to their neighbors either way; keeping the
+        // layout input-keyed keeps it auditable.
+        let total_rows: usize = group.iter().map(|&ri| requests[ri].rows).sum();
+        let mut data = Vec::with_capacity(total_rows * dims);
+        // (request index, first super-batch row, row count) per member.
+        let mut spans: Vec<(usize, usize, usize)> = Vec::with_capacity(group.len());
+        let mut row0 = 0usize;
+        for &ri in group {
+            data.extend_from_slice(&requests[ri].data);
+            spans.push((ri, row0, requests[ri].rows));
+            row0 += requests[ri].rows;
+        }
+        let pad_rows = total_rows.div_ceil(self.tile) * self.tile;
+        let padded = batch::pad_to(&data, total_rows, dims, pad_rows, dims);
+        let pdata = padded.data;
+        // The degraded rungs fault-inject and quarantine under their
+        // own site: a persistent fault armed at the primary path must
+        // leave the fallback rungs working.
+        let (fail_site, quar_site) = match rung {
+            ServeRung::Packed => (failpoint::SITE_SERVE_BATCH, "serve.batch"),
+            ServeRung::Repack | ServeRung::Naive => {
+                (failpoint::SITE_SERVE_DEGRADED, "serve.degraded")
+            }
+        };
+        let model = self.model;
+        let tile = self.tile;
+        let out = parallel::quarantine(quar_site, || {
+            // One failpoint visit per execution *attempt*, not per
+            // tile — fault accounting stays one count per injected
+            // fault (`ResilienceStats::faults`).
+            failpoint::check_result(fail_site)?;
+            let mut out = vec![0.0f64; pad_rows * width];
+            for (t0, tl) in batch::tiles(pad_rows, tile) {
+                let t_end = t0 + tl;
+                // Cooperative checkpoint: meter every still-live
+                // member whose rows intersect this tile.
+                let mut tile_live = false;
+                for &(ri, r0, rn) in &spans {
+                    if r0 >= t_end || r0 + rn <= t0 || results[ri].is_some() {
+                        continue;
+                    }
+                    match meters[ri].check_before_iter() {
+                        Some(_) => results[ri] = Some(ServeResult::deadline()),
+                        None => tile_live = true,
+                    }
+                }
+                // Tiles owning no live rows — the padded tail, or a
+                // stretch whose members all settled — are skipped.
+                if !tile_live {
+                    continue;
+                }
+                let table =
+                    DenseTable::from_vec(pdata[t0 * dims..t_end * dims].to_vec(), tl, dims)?;
+                let t_out = model.serve_batch_rung(ctx, &table, rung)?;
+                if t_out.len() != tl * width {
+                    return Err(Error::Shape(format!(
+                        "serve: model returned {} values for a {tl}-row tile (width {width})",
+                        t_out.len()
+                    )));
+                }
+                out[t0 * width..t_end * width].copy_from_slice(&t_out);
+            }
+            Ok(out)
+        })?;
+        // Fixed-order demux: each request owns the row range it
+        // occupies in the super-batch; the padded tail is dropped on
+        // the floor.
+        for &(ri, r0, rn) in &spans {
+            if results[ri].is_none() {
+                results[ri] =
+                    Some(ServeResult::completed(out[r0 * width..(r0 + rn) * width].to_vec()));
+            }
+        }
+        Ok(())
+    }
+
     /// Serve a request set: plan, execute every super-batch in
     /// ascending order, demux. One [`ServeResult`] per request, in
     /// submission order.
@@ -240,9 +489,7 @@ impl<'m, M: ServeModel> InferenceSession<'m, M> {
         requests: &[ServeRequest],
         exec_order: &[usize],
     ) -> Vec<ServeResult> {
-        let dims = self.model.serve_dims();
-        let width = self.model.serve_width();
-        let groups = self.plan(requests);
+        let (groups, mut meters, mut results) = self.init_run(requests);
         assert_eq!(
             exec_order.len(),
             groups.len(),
@@ -256,93 +503,184 @@ impl<'m, M: ServeModel> InferenceSession<'m, M> {
             );
             seen[g] = true;
         }
-        // Deadlines are metered from submission for every request (the
-        // only clock reads live inside `budget.rs`).
-        let mut meters: Vec<_> = requests.iter().map(|r| r.budget.meter()).collect();
-        let mut results: Vec<Option<ServeResult>> = requests
-            .iter()
-            .map(|r| {
-                (r.cols != dims).then(|| {
-                    ServeResult::failed(format!(
-                        "serve: request dim {} != model dim {dims}",
-                        r.cols
-                    ))
-                })
-            })
-            .collect();
         for &gi in exec_order {
             let group = &groups[gi];
-            // Per-request budget check at execution time. Expired
-            // members get their typed outcome now; the rest stay live.
-            let mut alive: Vec<usize> = Vec::with_capacity(group.len());
-            for &ri in group {
-                match meters[ri].check_before_iter() {
-                    Some(_) => results[ri] = Some(ServeResult::deadline()),
-                    None => alive.push(ri),
-                }
-            }
-            if alive.is_empty() {
-                continue;
-            }
-            // Assemble the super-batch from *all* member rows (expired
-            // members included) so its layout stays input-keyed, then
-            // zero-pad up to the tile boundary. Row independence makes
-            // both choices bit-identical for the live members; keeping
-            // the layout input-keyed keeps it auditable.
-            let total_rows: usize = group.iter().map(|&ri| requests[ri].rows).sum();
-            let mut data = Vec::with_capacity(total_rows * dims);
-            for &ri in group {
-                data.extend_from_slice(&requests[ri].data);
-            }
-            let pad_rows = total_rows.div_ceil(self.tile) * self.tile;
-            let padded = batch::pad_to(&data, total_rows, dims, pad_rows, dims);
-            let pdata = padded.data;
-            let outcome = parallel::quarantine("serve.batch", move || {
-                failpoint::check(failpoint::SITE_SERVE_BATCH);
-                let table = DenseTable::from_vec(pdata, pad_rows, dims)?;
-                self.model.serve_batch(ctx, &table)
-            });
-            match outcome {
-                Ok(out) if out.len() == pad_rows * width => {
-                    // Fixed-order demux: each request owns the row range
-                    // it occupies in the super-batch; the padded tail is
-                    // dropped on the floor.
-                    let mut offset = 0usize;
-                    for &ri in group {
-                        let rows = requests[ri].rows;
-                        if results[ri].is_none() {
-                            let slice = &out[offset * width..(offset + rows) * width];
-                            results[ri] = Some(ServeResult::completed(slice.to_vec()));
-                        }
-                        offset += rows;
-                    }
-                }
-                Ok(out) => {
-                    let msg = format!(
-                        "serve: model returned {} values for a {pad_rows}-row super-batch \
-                         (width {width})",
-                        out.len()
-                    );
-                    for &ri in &alive {
-                        results[ri] = Some(ServeResult::failed(msg.clone()));
-                    }
-                }
-                Err(e) => {
-                    // Quarantined panic or typed error: fail this
-                    // batch's live members only.
-                    let msg = e.to_string();
-                    for &ri in &alive {
-                        results[ri] = Some(ServeResult::failed(msg.clone()));
-                    }
-                }
+            if let Err(e) =
+                self.execute_group(ctx, requests, group, &mut meters, &mut results, ServeRung::Packed)
+            {
+                // Quarantined panic or typed error: fail this batch's
+                // live members only.
+                let msg = e.to_string();
+                settle_unsettled(group, &mut results, || ServeResult::failed(msg.clone()));
             }
         }
-        results
+        finalize_results(results)
+    }
+}
+
+/// Anything that can serve a request slice — the plain
+/// [`InferenceSession`] or the resilience-wrapped
+/// [`super::resilience::ResilientSession`] — so the [`QueuedSession`]
+/// front end composes with either.
+pub trait ServeExecutor {
+    fn serve_all(&mut self, ctx: &Context, requests: &[ServeRequest]) -> Vec<ServeResult>;
+}
+
+impl<M: ServeModel> ServeExecutor for InferenceSession<'_, M> {
+    fn serve_all(&mut self, ctx: &Context, requests: &[ServeRequest]) -> Vec<ServeResult> {
+        self.serve(ctx, requests)
+    }
+}
+
+/// Admission counters of a [`QueuedSession`] (monotonic over the
+/// session's life, mirroring the SVM `TrainStats` style).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Requests admitted into the queue.
+    pub accepted: usize,
+    /// Requests shed at admission (queue full ⇒
+    /// [`ServeStatus::Overloaded`]).
+    pub shed: usize,
+    /// Requests executed by [`QueuedSession::drain`].
+    pub served: usize,
+    /// Queued-but-unexecuted requests settled
+    /// [`ServeStatus::Cancelled`] by [`QueuedSession::shutdown`].
+    pub cancelled: usize,
+}
+
+/// One submission slot, in submission order: still queued, or already
+/// settled at admission (shed) / shutdown (cancelled).
+enum Slot {
+    Queued(ServeRequest),
+    Settled(ServeResult),
+}
+
+/// The bounded-queue serving front end: **admission control** over any
+/// [`ServeExecutor`].
+///
+/// * [`QueuedSession::submit`] admits up to `capacity` queued requests;
+///   beyond that, submissions are **shed** — the caller gets a typed
+///   [`Error::Overloaded`] immediately and the slot settles as
+///   [`ServeStatus::Overloaded`] — so memory stays bounded under
+///   overload instead of growing without limit.
+/// * [`QueuedSession::drain`] executes the queued requests **in
+///   submission order** as one slice, so its outputs are bit-identical
+///   to the slice-based path, and returns one result per *submission*
+///   since the last drain (shed slots included), in submission order.
+/// * [`QueuedSession::shutdown`] settles queued-but-unexecuted
+///   requests as [`ServeStatus::Cancelled`] ([`Error::Cancelled`])
+///   instead of silently dropping them.
+pub struct QueuedSession<E> {
+    exec: E,
+    capacity: usize,
+    slots: Vec<Slot>,
+    queued: usize,
+    stats: QueueStats,
+}
+
+impl<E: ServeExecutor> QueuedSession<E> {
+    /// Front a session (or resilient session) with a bounded queue.
+    ///
+    /// # Panics
+    ///
+    /// If `capacity` is zero (a queue that admits nothing serves
+    /// nothing).
+    pub fn new(exec: E, capacity: usize) -> Self {
+        assert!(capacity > 0, "serve: queue capacity must be positive");
+        Self { exec, capacity, slots: Vec::new(), queued: 0, stats: QueueStats::default() }
+    }
+
+    /// Submit one request. Admitted requests return their slot index;
+    /// when `queued() == capacity` the request is shed: its slot
+    /// settles as [`ServeStatus::Overloaded`] and the same typed error
+    /// is returned to the caller.
+    pub fn submit(&mut self, req: ServeRequest) -> Result<usize> {
+        let ticket = self.slots.len();
+        if self.queued >= self.capacity {
+            let err = Error::Overloaded(format!(
+                "serve: queue full ({} queued, capacity {})",
+                self.queued, self.capacity
+            ));
+            self.stats.shed += 1;
+            self.slots.push(Slot::Settled(ServeResult::overloaded(err.to_string())));
+            return Err(err);
+        }
+        self.queued += 1;
+        self.stats.accepted += 1;
+        self.slots.push(Slot::Queued(req));
+        Ok(ticket)
+    }
+
+    /// Requests currently queued (admitted, not yet drained).
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.stats
+    }
+
+    /// Execute everything queued, in submission order, and return one
+    /// result per submission since the last drain (shed submissions
+    /// surface their [`ServeStatus::Overloaded`] here), in submission
+    /// order. Drain order equals submission order, so outputs are
+    /// bit-identical to handing the admitted requests to the executor
+    /// as one slice.
+    pub fn drain(&mut self, ctx: &Context) -> Vec<ServeResult> {
+        let slots = std::mem::take(&mut self.slots);
+        self.queued = 0;
+        let mut reqs: Vec<ServeRequest> = Vec::new();
+        // One entry per slot: pre-settled result, or None ⇒ take the
+        // next executor result (queued slots, in submission order).
+        let mut settled: Vec<Option<ServeResult>> = Vec::with_capacity(slots.len());
+        for s in slots {
+            match s {
+                Slot::Queued(r) => {
+                    reqs.push(r);
+                    settled.push(None);
+                }
+                Slot::Settled(res) => settled.push(Some(res)),
+            }
+        }
+        let served = self.exec.serve_all(ctx, &reqs);
+        self.stats.served += served.len();
+        let mut it = served.into_iter();
+        settled
             .into_iter()
-            .map(|r| {
-                r.unwrap_or_else(|| ServeResult::failed("serve: request never scheduled".into()))
+            .map(|s| {
+                s.or_else(|| it.next()).unwrap_or_else(|| {
+                    ServeResult::failed("serve: executor returned too few results".into())
+                })
             })
             .collect()
+    }
+
+    /// Shut the queue down without executing: every queued request
+    /// settles as [`ServeStatus::Cancelled`] (carrying the
+    /// [`Error::Cancelled`] text), shed slots keep their
+    /// [`ServeStatus::Overloaded`]. Returns one result per submission
+    /// since the last drain, in submission order.
+    pub fn shutdown(&mut self) -> Vec<ServeResult> {
+        let slots = std::mem::take(&mut self.slots);
+        self.queued = 0;
+        slots
+            .into_iter()
+            .map(|s| match s {
+                Slot::Queued(_) => {
+                    self.stats.cancelled += 1;
+                    let err =
+                        Error::Cancelled("serve: session shut down before execution".into());
+                    ServeResult::cancelled(err.to_string())
+                }
+                Slot::Settled(res) => res,
+            })
+            .collect()
+    }
+
+    /// Unwrap the inner executor (dropping any still-queued requests
+    /// is a caller bug — prefer [`QueuedSession::shutdown`] first).
+    pub fn into_inner(self) -> E {
+        self.exec
     }
 }
 
@@ -487,6 +825,47 @@ mod tests {
         }
     }
 
+    /// The per-tile cooperative checkpoint: an iteration-cap budget is
+    /// consumed once at entry plus once per tile the request's rows
+    /// intersect, so a request spanning many tiles can expire
+    /// *mid-super-batch* — deterministically, since iteration caps
+    /// never read the clock.
+    #[test]
+    fn iteration_cap_expires_mid_super_batch_at_a_tile_boundary() {
+        let model = RowSum { d: 2 };
+        let session = InferenceSession::new(&model).tile(2).max_super_rows(64);
+        // 6 rows ⇒ 3 tiles of 2. Checkpoints: entry + 3 tiles = 4.
+        let starved =
+            vec![req(6, 2, 1.0).with_budget(Budget::default().max_iters(2)), req(2, 2, 3.0)];
+        let c = ctx();
+        let served = session.serve(&c, &starved);
+        // entry(1) + tile0(2) pass, tile1 check expires ⇒ deadline.
+        assert_eq!(served[0].status, ServeStatus::DeadlineExceeded);
+        // The neighbor — sharing the super-batch — still completes,
+        // bit-identical to an unbudgeted run.
+        assert_eq!(served[1].status, ServeStatus::Completed);
+        let base = session.serve(&c, &[req(6, 2, 1.0), req(2, 2, 3.0)]);
+        let (a, b) = (served[1].output.as_deref(), base[1].output.as_deref());
+        match (a, b) {
+            (Some(u), Some(v)) => {
+                for (x, y) in u.iter().zip(v) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            _ => panic!("neighbor lost its output"),
+        }
+        // A cap generous enough for every checkpoint completes whole.
+        let fed = vec![req(6, 2, 1.0).with_budget(Budget::default().max_iters(8))];
+        let served = session.serve(&c, &fed);
+        assert_eq!(served[0].status, ServeStatus::Completed);
+        let base = session.serve(&c, &[req(6, 2, 1.0)]);
+        assert_eq!(
+            served[0].output.as_deref().unwrap(),
+            base[0].output.as_deref().unwrap(),
+            "budgeted-but-unexpired must be bit-identical to unbudgeted"
+        );
+    }
+
     #[test]
     fn model_errors_are_quarantined_per_batch() {
         struct Broken;
@@ -503,5 +882,80 @@ mod tests {
         let results = session.serve(&ctx(), &[req(2, 2, 1.0)]);
         assert_eq!(results[0].status, ServeStatus::Failed);
         assert!(results[0].error.as_deref().is_some_and(|e| e.contains("synthetic")));
+    }
+
+    #[test]
+    fn queued_drain_is_bit_identical_to_the_slice_path() {
+        let model = RowSum { d: 2 };
+        let requests: Vec<ServeRequest> = (0..5).map(|i| req(2, 2, i as f64)).collect();
+        let c = ctx();
+        let base = InferenceSession::new(&model).tile(4).max_super_rows(4).serve(&c, &requests);
+        let mut q =
+            QueuedSession::new(InferenceSession::new(&model).tile(4).max_super_rows(4), 8);
+        for r in &requests {
+            q.submit(r.clone()).unwrap();
+        }
+        assert_eq!(q.queued(), 5);
+        let drained = q.drain(&c);
+        assert_eq!(q.queued(), 0);
+        assert_eq!(drained.len(), base.len());
+        for (a, b) in drained.iter().zip(&base) {
+            assert_eq!(a.status, b.status);
+            let (u, v) = (a.output.as_deref().unwrap(), b.output.as_deref().unwrap());
+            for (x, y) in u.iter().zip(v) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(q.stats().accepted, 5);
+        assert_eq!(q.stats().served, 5);
+        assert_eq!(q.stats().shed, 0);
+    }
+
+    #[test]
+    fn full_queue_sheds_with_typed_overload() {
+        let model = RowSum { d: 2 };
+        let mut q = QueuedSession::new(InferenceSession::new(&model), 1);
+        assert_eq!(q.submit(req(1, 2, 1.0)).unwrap(), 0);
+        // Capacity 1: the second and third submissions shed.
+        for _ in 0..2 {
+            let e = q.submit(req(1, 2, 2.0)).unwrap_err();
+            assert!(matches!(e, Error::Overloaded(_)), "wrong variant: {e:?}");
+            assert!(e.to_string().contains("overloaded"));
+        }
+        assert_eq!(q.queued(), 1);
+        assert_eq!(q.stats().shed, 2);
+        let c = ctx();
+        let results = q.drain(&c);
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].status, ServeStatus::Completed);
+        assert_eq!(results[1].status, ServeStatus::Overloaded);
+        assert_eq!(results[2].status, ServeStatus::Overloaded);
+        assert!(results[1].output.is_none());
+        // The queue is usable again after the drain.
+        q.submit(req(1, 2, 4.0)).unwrap();
+        let again = q.drain(&c);
+        assert_eq!(again[0].status, ServeStatus::Completed);
+    }
+
+    #[test]
+    fn shutdown_cancels_queued_requests_with_typed_outcome() {
+        let model = RowSum { d: 2 };
+        let mut q = QueuedSession::new(InferenceSession::new(&model), 2);
+        q.submit(req(1, 2, 1.0)).unwrap();
+        q.submit(req(1, 2, 2.0)).unwrap();
+        let _ = q.submit(req(1, 2, 3.0)); // shed
+        let results = q.shutdown();
+        assert_eq!(results.len(), 3);
+        for r in &results[..2] {
+            assert_eq!(r.status, ServeStatus::Cancelled);
+            assert!(r.output.is_none());
+            assert!(r.error.as_deref().is_some_and(|e| e.contains("cancelled")));
+        }
+        assert_eq!(results[2].status, ServeStatus::Overloaded);
+        assert_eq!(q.stats().cancelled, 2);
+        assert_eq!(q.queued(), 0);
+        // Shutdown empties the queue; new submissions are admitted.
+        q.submit(req(1, 2, 4.0)).unwrap();
+        assert_eq!(q.queued(), 1);
     }
 }

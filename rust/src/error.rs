@@ -37,6 +37,11 @@ pub enum Error {
     DeadlineExceeded(String),
     /// The operation was cancelled before producing a result.
     Cancelled(String),
+    /// Rejected at admission: the serving front end's bounded queue
+    /// was full ([`crate::coordinator::serve::QueuedSession`]). The
+    /// typed form of load shedding — callers should back off and
+    /// resubmit rather than treat this as a model failure.
+    Overloaded(String),
 }
 
 impl fmt::Display for Error {
@@ -52,6 +57,7 @@ impl fmt::Display for Error {
             Error::Internal(s) => write!(f, "internal error: {s}"),
             Error::DeadlineExceeded(s) => write!(f, "deadline exceeded: {s}"),
             Error::Cancelled(s) => write!(f, "cancelled: {s}"),
+            Error::Overloaded(s) => write!(f, "overloaded: {s}"),
         }
     }
 }
@@ -93,6 +99,7 @@ mod tests {
         assert_eq!(Error::Internal("site: boom".into()).to_string(), "internal error: site: boom");
         assert_eq!(Error::DeadlineExceeded("x".into()).to_string(), "deadline exceeded: x");
         assert_eq!(Error::Cancelled("y".into()).to_string(), "cancelled: y");
+        assert_eq!(Error::Overloaded("z".into()).to_string(), "overloaded: z");
     }
 
     #[test]
@@ -101,6 +108,7 @@ mod tests {
             Error::Internal("a".into()),
             Error::DeadlineExceeded("b".into()),
             Error::Cancelled("c".into()),
+            Error::Overloaded("d".into()),
         ] {
             assert!(std::error::Error::source(&e).is_none());
         }

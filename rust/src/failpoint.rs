@@ -1,26 +1,45 @@
 //! Deterministic fault injection — an env-keyed failpoint registry for
-//! the chaos suite (`tests/chaos.rs`).
+//! the chaos suite (`tests/chaos.rs`) and the resilience layer
+//! (`coordinator/resilience.rs`).
 //!
 //! A failpoint is a named site in the library (worker job entry, tile
-//! sweep, tile-cache eviction, CSV record parse) where a panic can be
-//! injected on demand. Arm one with
+//! sweep, tile-cache eviction, CSV record parse, serve super-batch)
+//! where a fault can be injected on demand. Arm one with
 //!
 //! ```text
-//! ONEDAL_SVE_FAILPOINT=<site>:<nth>
+//! ONEDAL_SVE_FAILPOINT=<site>[:<mode>][:<payload>]
 //! ```
 //!
-//! (or programmatically via [`arm`]); the `nth` visit to that site —
-//! counting from 1, default 1 — panics with a recognizable message,
-//! **exactly once**. The panic is then quarantined at the public
-//! boundary into [`crate::error::Error::Internal`], so the chaos suite
-//! can assert that every site yields a typed error, the worker pool
-//! recovers to full width, and a retried call is bit-identical to an
-//! uninjected run.
+//! (or programmatically via [`arm`]). Visits to a site count from 1.
 //!
-//! Cost when disarmed: one relaxed atomic load per [`check`] call —
-//! the registry holds no lock and allocates nothing unless a site is
-//! armed, so production hot paths are unaffected.
+//! **Firing modes** (default `1`):
+//!
+//! * `<n>` — fire on the `n`th visit, **exactly once**, then disarm
+//!   (the original chaos-suite mode: a retried call runs clean).
+//! * `every:<k>` — fire on every `k`th visit (`k`, `2k`, `3k`, ...)
+//!   and **stay armed** until [`disarm`] — the persistent-fault mode
+//!   that drives retry exhaustion and circuit-breaker trips.
+//! * `times:<n>` — fire on each of the first `n` visits, then disarm —
+//!   the bounded-fault mode: a retry loop with more than `n` attempts
+//!   eventually runs clean.
+//!
+//! **Payloads** (default `panic`):
+//!
+//! * `panic` — the site panics with a recognizable message; the panic
+//!   is quarantined at the public boundary into
+//!   [`crate::error::Error::Internal`].
+//! * `error` — sites visited through [`check_result`] return a typed
+//!   [`crate::error::Error::Internal`] directly, exercising the
+//!   error-path plumbing without unwinding. Sites visited through the
+//!   plain [`check`] cannot return, so there the payload falls back to
+//!   a panic.
+//!
+//! Cost when disarmed: one relaxed atomic load per [`check`] /
+//! [`check_result`] call — the registry holds no lock and allocates
+//! nothing unless a site is armed, so production hot paths are
+//! unaffected.
 
+use crate::error::{Error, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, Once, PoisonError};
 
@@ -38,8 +57,17 @@ pub const SITE_CSV_RECORD: &str = "csv-record";
 /// Super-batch execution of the serving layer
 /// ([`crate::coordinator::serve::InferenceSession`]), inside the
 /// `serve.batch` quarantine — a fired batch must surface as a typed
-/// per-request failure without poisoning neighboring batches.
+/// per-request failure without poisoning neighboring batches. Visited
+/// once per execution *attempt* (not per tile), so the resilience
+/// layer's fault accounting is one count per injected fault.
 pub const SITE_SERVE_BATCH: &str = "serve-batch";
+/// Degraded-rung execution of the resilience layer
+/// ([`crate::coordinator::resilience`]): the per-call-pack and naive
+/// fallback paths an open circuit breaker routes to. A separate site
+/// from [`SITE_SERVE_BATCH`] on purpose — a persistent fault armed at
+/// the primary path must leave the fallback rungs working, and tests
+/// arm this site to force escalation down the ladder.
+pub const SITE_SERVE_DEGRADED: &str = "serve-degraded";
 
 /// Fast gate: false ⇒ no failpoint armed ⇒ [`check`] is one relaxed
 /// load and returns immediately.
@@ -47,10 +75,28 @@ static ARMED: AtomicBool = AtomicBool::new(false);
 static CONFIG: Mutex<Option<Config>> = Mutex::new(None);
 static ENV_INIT: Once = Once::new();
 
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    /// Fire on the `n`th visit, once, then disarm.
+    Nth(u64),
+    /// Fire on every `k`th visit; stays armed until [`disarm`].
+    Every(u64),
+    /// Fire on each of the first `n` visits, then disarm.
+    Times(u64),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Payload {
+    Panic,
+    TypedError,
+}
+
 struct Config {
     site: String,
-    nth: u64,
+    mode: Mode,
+    payload: Payload,
     hits: u64,
+    fired: u64,
 }
 
 fn lock_config() -> std::sync::MutexGuard<'static, Option<Config>> {
@@ -59,14 +105,36 @@ fn lock_config() -> std::sync::MutexGuard<'static, Option<Config>> {
     CONFIG.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-/// Arm a failpoint from a `site[:nth]` spec (`nth` counts visits from
-/// 1; omitted ⇒ 1). Replaces any previously armed site.
+fn parse_count(s: &str) -> u64 {
+    s.parse::<u64>().unwrap_or(1).max(1)
+}
+
+/// Arm a failpoint from a `site[:mode][:payload]` spec (see module
+/// docs for the grammar; malformed mode/payload segments degrade to
+/// the defaults, `1` and `panic`). Replaces any previously armed site.
 pub fn arm(spec: &str) {
-    let (site, nth) = match spec.split_once(':') {
-        Some((s, n)) => (s, n.parse::<u64>().unwrap_or(1).max(1)),
-        None => (spec, 1),
+    let mut segs = spec.split(':');
+    let site = segs.next().unwrap_or("").to_string();
+    let mut rest: Vec<&str> = segs.collect();
+    let payload = match rest.last() {
+        Some(&"error") => {
+            rest.pop();
+            Payload::TypedError
+        }
+        Some(&"panic") => {
+            rest.pop();
+            Payload::Panic
+        }
+        _ => Payload::Panic,
     };
-    *lock_config() = Some(Config { site: site.to_string(), nth, hits: 0 });
+    let mode = match rest.as_slice() {
+        [] => Mode::Nth(1),
+        ["every", k] => Mode::Every(parse_count(k)),
+        ["times", n] => Mode::Times(parse_count(n)),
+        [n] => Mode::Nth(parse_count(n)),
+        _ => Mode::Nth(1),
+    };
+    *lock_config() = Some(Config { site, mode, payload, hits: 0, fired: 0 });
     ARMED.store(true, Ordering::Release);
 }
 
@@ -89,8 +157,9 @@ fn env_init() {
 }
 
 /// Visit the named failpoint site: panics iff an armed spec matches
-/// `site` and this is its `nth` visit. The armed flag clears when the
-/// failpoint fires, so a retried call runs clean.
+/// `site` and the firing mode selects this visit. A typed-error
+/// payload also panics here — only [`check_result`] sites can return
+/// the typed form.
 #[inline]
 pub fn check(site: &str) {
     // Disarmed fast path: a single relaxed load after the one-time env
@@ -99,27 +168,63 @@ pub fn check(site: &str) {
     if !ARMED.load(Ordering::Relaxed) {
         return;
     }
-    check_slow(site);
-}
-
-#[cold]
-fn check_slow(site: &str) {
-    let mut guard = lock_config();
-    let fire = match guard.as_mut() {
-        Some(cfg) if cfg.site == site => {
-            cfg.hits += 1;
-            cfg.hits == cfg.nth
-        }
-        _ => false,
-    };
-    if fire {
-        // Fire exactly once: disarm before panicking so the in-flight
-        // batch (and any retry) completes clean.
-        *guard = None;
-        ARMED.store(false, Ordering::Release);
-        drop(guard);
+    if visit_slow(site).is_some() {
         panic!("failpoint {site} fired");
     }
+}
+
+/// Visit the named failpoint site on a fallible path: a firing with
+/// the `panic` payload panics (to be quarantined at the boundary),
+/// while the `error` payload returns [`Error::Internal`] directly —
+/// same variant the quarantine would produce, without unwinding.
+#[inline]
+pub fn check_result(site: &str) -> Result<()> {
+    env_init();
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    match visit_slow(site) {
+        None => Ok(()),
+        Some(Payload::Panic) => panic!("failpoint {site} fired"),
+        Some(Payload::TypedError) => {
+            Err(Error::Internal(format!("{site}: failpoint fired (typed)")))
+        }
+    }
+}
+
+/// Armed slow path: count the visit, decide whether it fires, and
+/// disarm when the mode's firing budget is spent. Returns the payload
+/// to deliver iff this visit fires.
+#[cold]
+fn visit_slow(site: &str) -> Option<Payload> {
+    let mut guard = lock_config();
+    let cfg = match guard.as_mut() {
+        Some(cfg) if cfg.site == site => cfg,
+        _ => return None,
+    };
+    cfg.hits += 1;
+    let fire = match cfg.mode {
+        Mode::Nth(n) => cfg.hits == n,
+        Mode::Every(k) => cfg.hits % k == 0,
+        Mode::Times(n) => cfg.hits <= n,
+    };
+    if !fire {
+        return None;
+    }
+    cfg.fired += 1;
+    let payload = cfg.payload;
+    let exhausted = match cfg.mode {
+        Mode::Nth(_) => true,
+        Mode::Every(_) => false,
+        Mode::Times(n) => cfg.fired >= n,
+    };
+    if exhausted {
+        // Firing budget spent: disarm before delivering so in-flight
+        // retries (and every later visit) complete clean.
+        *guard = None;
+        ARMED.store(false, Ordering::Release);
+    }
+    Some(payload)
 }
 
 /// Whether any failpoint is currently armed (test observability).
@@ -142,6 +247,7 @@ mod tests {
         disarm();
         check(SITE_POOL_JOB);
         check(SITE_TILE_SWEEP);
+        assert!(check_result(SITE_SERVE_BATCH).is_ok());
         assert!(!is_armed());
     }
 
@@ -179,6 +285,59 @@ mod tests {
         let r = catch_unwind(AssertUnwindSafe(|| check(SITE_POOL_JOB)));
         assert!(r.is_err());
         assert!(!is_armed());
+        disarm();
+    }
+
+    #[test]
+    fn every_mode_fires_periodically_and_stays_armed() {
+        let _g = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+        arm("tile-sweep:every:3");
+        for round in 0..3 {
+            check(SITE_TILE_SWEEP);
+            check(SITE_TILE_SWEEP);
+            let r = catch_unwind(AssertUnwindSafe(|| check(SITE_TILE_SWEEP)));
+            assert!(r.is_err(), "every 3rd visit must fire (round {round})");
+            assert!(is_armed(), "every-mode must stay armed (round {round})");
+        }
+        disarm();
+        check(SITE_TILE_SWEEP);
+    }
+
+    #[test]
+    fn times_mode_fires_n_times_then_disarms() {
+        let _g = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+        arm("serve-batch:times:2");
+        for visit in 0..2 {
+            let r = catch_unwind(AssertUnwindSafe(|| check(SITE_SERVE_BATCH)));
+            assert!(r.is_err(), "visit {visit} must fire");
+        }
+        assert!(!is_armed(), "times:2 must disarm after its second firing");
+        check(SITE_SERVE_BATCH);
+        disarm();
+    }
+
+    #[test]
+    fn typed_error_payload_surfaces_through_check_result() {
+        let _g = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+        arm("serve-batch:times:2:error");
+        let e = check_result(SITE_SERVE_BATCH).unwrap_err();
+        assert!(matches!(e, Error::Internal(_)), "typed payload must be Internal");
+        assert!(e.to_string().contains("failpoint"));
+        // The plain `check` cannot return an error: the payload falls
+        // back to a panic there.
+        let r = catch_unwind(AssertUnwindSafe(|| check(SITE_SERVE_BATCH)));
+        assert!(r.is_err());
+        assert!(!is_armed());
+        disarm();
+    }
+
+    #[test]
+    fn explicit_panic_payload_parses() {
+        let _g = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+        arm("csv-record:2:panic");
+        check(SITE_CSV_RECORD);
+        let r = catch_unwind(AssertUnwindSafe(|| check(SITE_CSV_RECORD)));
+        assert!(r.is_err());
         disarm();
     }
 }

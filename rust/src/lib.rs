@@ -71,12 +71,23 @@
 //!   tagged with [`coordinator::ConvergenceStatus::DeadlineExceeded`]
 //!   (or `IterLimit`) instead of erroring; an unlimited budget — the
 //!   default — is bit-identical to the pre-budget behavior.
-//! * **Deterministic fault injection** — `ONEDAL_SVE_FAILPOINT=site:nth`
-//!   (see [`failpoint`]) arms a named failpoint that panics on its
-//!   `nth` visit, exactly once; the chaos suite (`tests/chaos.rs`)
-//!   proves every site yields `Error::Internal`, the pool recovers, and
-//!   a retried call is bit-identical to an uninjected run. Disarmed
-//!   cost: one relaxed atomic load per site visit.
+//! * **Deterministic fault injection** —
+//!   `ONEDAL_SVE_FAILPOINT=site[:mode][:payload]` (see [`failpoint`])
+//!   arms a named failpoint: mode `nth` (fire once on the nth visit,
+//!   the default), `every:k` (periodic, stays armed), or `times:n`
+//!   (first n visits); payload `panic` (default) or `error` (a typed
+//!   [`error::Error::Internal`] through [`failpoint::check_result`]).
+//!   The chaos suite (`tests/chaos.rs`) proves every site yields
+//!   `Error::Internal`, the pool recovers, and a retried call is
+//!   bit-identical to an uninjected run. Disarmed cost: one relaxed
+//!   atomic load per site visit.
+//! * **Resilient serving** — [`coordinator::resilience`] wraps the
+//!   serving session with admission control (bounded queue, typed
+//!   shed), deterministic retry of quarantined faults, a per-model
+//!   circuit breaker (count/budget-driven, never wall-clock), and a
+//!   graceful-degradation rung ladder (packed → per-call pack → naive
+//!   → fast-reject), with every hop counted in
+//!   [`coordinator::ResilienceStats`] (`docs/RESILIENCE.md`).
 //!
 //! ## Model-resident packing and batched serving
 //!
@@ -91,10 +102,13 @@
 //! [`coordinator::InferenceSession`] coalesces many small query
 //! batches into tile-aligned super-batches (the [`coordinator::batch`]
 //! pad-and-mask idiom), runs them under per-request
-//! [`coordinator::Budget`] deadlines with typed outcomes, and demuxes
+//! [`coordinator::Budget`] deadlines with typed outcomes (checked
+//! cooperatively at every execution tile, dense and CSR), and demuxes
 //! results in submission order — deterministically: same request set,
 //! same super-batch cuts, bit-identical per-request outputs at any
-//! worker count (`docs/SERVING.md`).
+//! worker count (`docs/SERVING.md`). The queued front end
+//! ([`coordinator::QueuedSession`]) adds bounded-capacity admission
+//! with typed `Overloaded` shedding and `Cancelled` shutdown drains.
 //!
 //! ## Machine-checked invariants
 //!
@@ -160,8 +174,9 @@ pub mod prelude {
     pub use crate::algorithms::pca::Pca;
     pub use crate::algorithms::svm::{Svc, SvmSolver};
     pub use crate::coordinator::{
-        Backend, Budget, Context, ConvergenceStatus, InferenceSession, ServeModel, ServeRequest,
-        ServeResult, ServeStatus,
+        Backend, BreakerPolicy, Budget, Context, ConvergenceStatus, InferenceSession, QueueStats,
+        QueuedSession, ResilienceStats, ResilientSession, RetryPolicy, ServeExecutor, ServeModel,
+        ServeRequest, ServeResult, ServeRung, ServeStatus,
     };
     pub use crate::error::{Error, Result};
     pub use crate::rng::{Engine, Mcg59, Mt19937};

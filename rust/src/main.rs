@@ -7,6 +7,7 @@
 //! onedal-sve train  <algo> [options]      # train on synthetic or CSV data
 //! onedal-sve bench-all                    # quick smoke across the suite
 //! onedal-sve bench serve                  # batched serving: coalesced vs naive
+//! onedal-sve bench serve --faults         # resilience: retry/degrade under injection
 //! ```
 
 use onedal_sve::coordinator::{Backend, Context};
@@ -158,6 +159,10 @@ fn percentile(sorted_us: &[f64], q: f64) -> f64 {
 /// timings; under coalescing every request in a round completes with
 /// its super-batch, so each request's latency is its round's wall time.
 fn cmd_bench_serve(flags: &HashMap<String, String>) {
+    if flags.contains_key("faults") {
+        cmd_bench_serve_faults(flags);
+        return;
+    }
     let ctx = build_ctx(flags);
     let n: usize = get(flags, "n", 2000);
     let d: usize = get(flags, "d", 16);
@@ -249,6 +254,79 @@ fn cmd_bench_serve(flags: &HashMap<String, String>) {
     println!("  throughput speedup: {:.2}x  (outputs bit-identical)", serve_thr / naive_thr);
 }
 
+/// `bench serve --faults [spec]` — the resilience scenario: the same
+/// request set served twice, once clean through a plain session and
+/// once with a failpoint armed and a [`ResilientSession`] retrying and
+/// degrading around it. Asserts bit-identity between the two runs and
+/// prints the `ResilienceStats` fault accounting. `--faults` alone
+/// injects a typed fault on every third super-batch attempt; pass a
+/// full `site[:mode][:payload]` spec to override.
+fn cmd_bench_serve_faults(flags: &HashMap<String, String>) {
+    let ctx = build_ctx(flags);
+    let n: usize = get(flags, "n", 2000);
+    let d: usize = get(flags, "d", 16);
+    let n_requests: usize = get(flags, "requests", 64);
+    let rows_per: usize = get(flags, "rows", 3);
+    let attempts: usize = get(flags, "attempts", 3);
+    let seed: u32 = get(flags, "seed", 42);
+    let spec = match flags.get("faults").map(String::as_str) {
+        None | Some("true") => {
+            format!("{}:every:3:error", onedal_sve::failpoint::SITE_SERVE_BATCH)
+        }
+        Some(s) => s.to_string(),
+    };
+    let mut e = Mt19937::new(seed);
+    let n = n.max(rows_per + 1);
+    let (x, _) = synth::make_blobs(&mut e, n, d, 8, 1.0);
+    let model = KMeans::params().k(8).max_iter(20).train(&ctx, &x).expect("train");
+    let requests: Vec<ServeRequest> = (0..n_requests)
+        .map(|i| {
+            let start = (i * rows_per) % (n - rows_per);
+            let data = x.data()[start * d..(start + rows_per) * d].to_vec();
+            ServeRequest::new(data, rows_per, d).expect("request shape")
+        })
+        .collect();
+
+    // Clean baseline through the plain session.
+    let baseline = InferenceSession::new(&model).serve(&ctx, &requests);
+
+    // Faulted run through the resilient session.
+    onedal_sve::failpoint::arm(&spec);
+    let t0 = Instant::now();
+    let mut rs = ResilientSession::new(InferenceSession::new(&model))
+        .retry(RetryPolicy::attempts(attempts));
+    let served = rs.serve(&ctx, &requests);
+    let wall = t0.elapsed().as_secs_f64();
+    onedal_sve::failpoint::disarm();
+
+    for (i, (res, want)) in served.iter().zip(&baseline).enumerate() {
+        let got = res.output.as_deref().expect("faulted request must complete");
+        let want = want.output.as_deref().expect("baseline request must complete");
+        assert_eq!(got.len(), want.len(), "request {i}: output length");
+        for (a, b) in got.iter().zip(want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "request {i}: faulted != clean");
+        }
+    }
+    let st = rs.stats();
+    println!("serve --faults: corpus={n}x{d} requests={n_requests} spec={spec}");
+    println!("  outputs bit-identical to the unfaulted baseline");
+    println!(
+        "  batches={} faults={} retries={} retry_successes={} trips={} probes={} \
+         recoveries={} repack={} naive={} unavailable={}",
+        st.batches,
+        st.faults,
+        st.retries,
+        st.retry_successes,
+        st.breaker_trips,
+        st.half_open_probes,
+        st.recoveries,
+        st.degraded_repack,
+        st.degraded_naive,
+        st.unavailable_batches
+    );
+    println!("  served {n_requests} requests in {:.1}ms under injection", wall * 1e3);
+}
+
 fn cmd_bench_all(flags: &HashMap<String, String>) {
     let _t = ScopedTimer::new("bench-all");
     for algo in ["kmeans", "logreg", "linreg", "pca", "knn", "dbscan", "forest", "svm"] {
@@ -271,10 +349,12 @@ fn help() {
          \x20 train <algo>             kmeans|svm|logreg|forest|pca|linreg|dbscan|knn\n\
          \x20 bench-all                smoke the whole suite\n\
          \x20 bench serve              batched serving: coalesced vs naive\n\
+         \x20 bench serve --faults [spec]   resilience: retry/degrade under injection\n\
          flags: --backend naive|reference|vectorized|artifact|auto\n\
          \x20      --n <rows> --d <features> --k <clusters> --seed <s>\n\
          \x20      --csv <path> --artifacts <dir> --solver boser|thunder\n\
-         \x20      --requests <n> --rows <rows/request> --reps <r>  (bench serve)"
+         \x20      --requests <n> --rows <rows/request> --reps <r>  (bench serve)\n\
+         \x20      --attempts <n>  retry attempts  (bench serve --faults)"
     );
 }
 

@@ -60,7 +60,7 @@ pub mod audit;
 pub mod pool;
 mod scheduler;
 
-pub use pool::WorkerPool;
+pub use pool::{PoolHealth, WorkerPool};
 pub use scheduler::{
     aligned_bounds, even_bounds, par_map, scope_rows, scope_rows_scoped, triangle_bounds,
 };

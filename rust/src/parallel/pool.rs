@@ -46,6 +46,27 @@ use std::time::Duration;
 /// A queued, lifetime-erased batch job.
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Point-in-time liveness snapshot of a [`WorkerPool`] — the probe the
+/// resilience layer and the lifecycle tests use to assert "the pool
+/// respawned after a panic" instead of sleeping and hoping.
+/// `alive + dead` equals [`WorkerPool::worker_count`] at the instant
+/// of the probe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolHealth {
+    /// Workers whose threads are still running their loop.
+    pub alive: usize,
+    /// Workers whose threads have exited (killed by an escaped panic)
+    /// and await reaping — the next batch reaps and respawns them.
+    pub dead: usize,
+}
+
+impl PoolHealth {
+    /// No dead workers awaiting respawn.
+    pub fn is_healthy(&self) -> bool {
+        self.dead == 0
+    }
+}
+
 #[derive(Default)]
 struct Queue {
     jobs: VecDeque<Job>,
@@ -166,6 +187,17 @@ impl WorkerPool {
     /// not yet been reaped).
     pub fn worker_count(&self) -> usize {
         self.workers.lock().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    /// Liveness probe: how many workers are alive vs dead-but-unreaped
+    /// right now. Dead workers are respawned by the next batch
+    /// (`ensure_workers` reaps then regrows), so
+    /// `run_batch(...); health().is_healthy()` is the deterministic
+    /// "respawn completed" assertion — no sleeps.
+    pub fn health(&self) -> PoolHealth {
+        let ws = self.workers.lock().unwrap_or_else(PoisonError::into_inner);
+        let dead = ws.iter().filter(|h| h.is_finished()).count();
+        PoolHealth { alive: ws.len() - dead, dead }
     }
 
     fn ensure_workers(&self, want: usize) {
@@ -457,9 +489,18 @@ mod tests {
                 })
             })
             .collect();
+        // Before that batch, the probe must see the corpses.
+        let sick = pool.health();
+        assert_eq!(sick.dead, width, "probe must count the dead workers");
+        assert!(!sick.is_healthy());
         pool.run_batch(jobs);
         assert_eq!(sum.load(Ordering::Relaxed), 6);
         assert_eq!(pool.worker_count(), width, "pool must be back at full width");
+        // The respawn-completed assertion the resilience layer relies
+        // on: after one batch, no dead worker remains unreaped.
+        let healed = pool.health();
+        assert!(healed.is_healthy(), "respawn must have completed: {healed:?}");
+        assert_eq!(healed.alive, width);
         let fresh = WorkerPool::new(2);
         let a = AtomicUsize::new(0);
         fresh.run_batch(

@@ -7,8 +7,10 @@
 //! an uninjected baseline run.
 
 use onedal_sve::algorithms::svm::kernel::SvmKernel;
+use onedal_sve::coordinator::BreakerSnapshot;
 use onedal_sve::failpoint::{
-    self, SITE_CSV_RECORD, SITE_POOL_JOB, SITE_TILE_CACHE_EVICT, SITE_TILE_SWEEP,
+    self, SITE_CSV_RECORD, SITE_POOL_JOB, SITE_SERVE_BATCH, SITE_SERVE_DEGRADED,
+    SITE_TILE_CACHE_EVICT, SITE_TILE_SWEEP,
 };
 use onedal_sve::prelude::*;
 use onedal_sve::tables::csv::{parse_csv, CsvOptions};
@@ -174,6 +176,86 @@ fn csv_record_panic_quarantined_and_retry_identical() {
     assert_eq!(one_row.rows(), 1);
     assert!(failpoint::is_armed(), "second visit never happened — still armed");
     failpoint::disarm();
+}
+
+/// The full breaker walk under real injection: `times:2` typed faults
+/// trip the breaker (threshold 2, no retries), open-state traffic rides
+/// the repack rung; a second fault at the **degraded** site knocks one
+/// super-batch down to the naive rung; after the cooldown the half-open
+/// probe recovers. Every completed result — packed, repack, or naive —
+/// carries the same bits as the unfaulted baseline.
+#[test]
+fn breaker_trips_degrades_to_naive_and_recovers_under_injection() {
+    let _g = gate();
+    let mut e = Mt19937::new(71);
+    let (x, _) = make_blobs(&mut e, 600, 16, 5, 1.0);
+    let c = ctx(2);
+    let model = KMeans::params().k(5).seed(7).max_iter(10).train(&c, &x).unwrap();
+    // 8 requests × 2 rows, 4 rows per super-batch ⇒ exactly 4 groups.
+    let requests: Vec<ServeRequest> = (0..8)
+        .map(|i| {
+            let start = (i * 5) % (x.rows() - 2);
+            ServeRequest::new(x.data()[start * 16..(start + 2) * 16].to_vec(), 2, 16).unwrap()
+        })
+        .collect();
+    let mk = || InferenceSession::new(&model).tile(4).max_super_rows(4);
+    assert_eq!(mk().plan(&requests).len(), 4, "fixture must cut into 4 super-batches");
+    let baseline = mk().serve(&c, &requests);
+    let bits_equal = |a: &ServeResult, b: &ServeResult, tag: &str| {
+        let (u, v) = (a.output.as_deref().unwrap(), b.output.as_deref().unwrap());
+        assert_eq!(u.len(), v.len(), "{tag}: output length");
+        for (p, q) in u.iter().zip(v) {
+            assert_eq!(p.to_bits(), q.to_bits(), "{tag}: output bits");
+        }
+    };
+    let mut rs = ResilientSession::new(mk())
+        .retry(RetryPolicy::attempts(1))
+        .breaker(BreakerPolicy::threshold(2).with_cooldown(Budget::default().max_iters(6)));
+
+    // Phase 1 — trip: groups 1 and 2 fault typed; group 2 trips the
+    // breaker and rides the ladder; groups 3 and 4 serve degraded.
+    failpoint::arm(&format!("{SITE_SERVE_BATCH}:times:2:error"));
+    let served = rs.serve(&c, &requests);
+    assert!(!failpoint::is_armed(), "times:2 must disarm after its second fire");
+    assert_eq!(served[0].status, ServeStatus::Failed);
+    assert_eq!(served[1].status, ServeStatus::Failed);
+    assert!(served[0].error.as_deref().unwrap().contains("failpoint"));
+    for i in 2..8 {
+        assert_eq!(served[i].status, ServeStatus::Completed, "request {i} must degrade, not die");
+        bits_equal(&served[i], &baseline[i], "phase 1 degraded");
+    }
+    assert_eq!(rs.breaker_state(), BreakerSnapshot::Open);
+    assert_eq!(rs.stats().faults, 2, "exactly the injected fault count");
+    assert_eq!(rs.stats().breaker_trips, 1);
+    assert_eq!(rs.stats().degraded_repack, 3);
+
+    // Phase 2 — ladder escalation: a panic at the degraded site kills
+    // the first group's repack attempt; the naive rung serves it with
+    // the same bits. Later groups repack normally (nth-mode disarms).
+    failpoint::arm(&format!("{SITE_SERVE_DEGRADED}:1"));
+    let served = rs.serve(&c, &requests);
+    assert!(!failpoint::is_armed());
+    for i in 0..8 {
+        assert_eq!(served[i].status, ServeStatus::Completed, "request {i} in phase 2");
+        bits_equal(&served[i], &baseline[i], "phase 2 naive/repack");
+    }
+    assert_eq!(rs.breaker_state(), BreakerSnapshot::Open, "cooldown not exhausted yet");
+    assert_eq!(rs.stats().degraded_naive, 1, "one super-batch fell to the naive rung");
+    assert_eq!(rs.stats().degraded_repack, 6);
+    assert_eq!(rs.stats().faults, 2, "degraded-rung failures are ladder hops, not faults");
+
+    // Phase 3 — recovery: the cooldown (6 checkpoints: 2 in phase 1,
+    // 4 in phase 2) is exhausted, so the next batch probes half-open;
+    // the primary path is healthy again and the breaker closes.
+    let served = rs.serve(&c, &requests);
+    for i in 0..8 {
+        assert_eq!(served[i].status, ServeStatus::Completed, "request {i} after recovery");
+        bits_equal(&served[i], &baseline[i], "phase 3 recovered");
+    }
+    assert_eq!(rs.breaker_state(), BreakerSnapshot::Closed);
+    assert_eq!(rs.stats().half_open_probes, 1);
+    assert_eq!(rs.stats().recoveries, 1);
+    assert_eq!(rs.stats().faults, 2);
 }
 
 /// Sites that are armed but never visited leave every workload

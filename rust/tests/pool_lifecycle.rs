@@ -143,6 +143,27 @@ fn worker_panic_propagates_without_deadlock() {
     }
 }
 
+/// The health probe reports a live pool after real traffic: every
+/// resident worker alive, none finished. (Caught job panics never kill
+/// workers — the panic test above runs in this same binary — so a
+/// healthy verdict here is deterministic; the dead→respawn transition
+/// is asserted by the pool's own unit test, where the worker count is
+/// controlled.)
+#[test]
+fn health_probe_reports_live_workers_after_traffic() {
+    use onedal_sve::parallel::WorkerPool;
+    let mut e = Mt19937::new(405);
+    let (m, n, k) = (96usize, 64usize, 64usize);
+    let a = rand_mat(&mut e, m * k);
+    let b = rand_mat(&mut e, k * n);
+    let mut c = vec![0.0f64; m * n];
+    gemm_threads(Transpose::No, Transpose::No, m, n, k, 1.0, &a, &b, 0.0, &mut c, 4);
+    let health = WorkerPool::global().health();
+    assert!(health.alive >= 1, "pool must have resident workers after a fan-out");
+    assert_eq!(health.dead, 0, "caught job panics must not kill workers");
+    assert!(health.is_healthy());
+}
+
 /// The `ONEDAL_SVE_THREADS` resolution rule still feeds the process
 /// default behind the bare (context-free) entry points, and
 /// `set_default_threads` still re-pins it at runtime. The rule is

@@ -267,6 +267,95 @@ fn serving_is_pack_free() {
     );
 }
 
+/// The PR-9 acceptance property: with a failpoint armed at the
+/// serve-batch site — any mode, panic or typed payload — and a retry
+/// policy with `max_attempts ≥ 2`, the faulted-then-retried run is
+/// **bit-identical** to the unfaulted baseline at 1–4 workers, and
+/// `ResilienceStats` records exactly the injected fault count.
+#[test]
+fn resilient_retry_under_injection_is_bit_identical_at_1_to_4_workers() {
+    let _g = gate();
+    let (x, model) = train_kmeans(2);
+    let requests = requests_from(&x, 20);
+    let mk = || InferenceSession::new(&model).tile(8).max_super_rows(8);
+    let n_groups = mk().plan(&requests).len();
+    assert!(n_groups >= 3, "fixture must span several super-batches");
+    for threads in 1..=4 {
+        let c = ctx(threads);
+        let baseline = mk().serve(&c, &requests);
+        // (spec, expected fault count, attempts) across every mode and
+        // both payloads. `every:2` faults each group's first attempt
+        // from the second group on (retries keep the visit parity
+        // odd); `times:3` burns all three faults on the first group.
+        let cases = [
+            (format!("{SITE_SERVE_BATCH}:2"), 1usize, 2usize),
+            (format!("{SITE_SERVE_BATCH}:every:2:error"), n_groups - 1, 2),
+            (format!("{SITE_SERVE_BATCH}:times:3:error"), 3, 4),
+        ];
+        for (spec, want_faults, attempts) in cases {
+            failpoint::arm(&spec);
+            let mut rs = ResilientSession::new(mk()).retry(
+                RetryPolicy::attempts(attempts).with_backoff(Budget::default().max_iters(8)),
+            );
+            let served = rs.serve(&c, &requests);
+            failpoint::disarm();
+            assert_outputs_bit_identical(&baseline, &served);
+            let st = rs.stats();
+            assert_eq!(st.faults, want_faults, "{spec} at {threads} workers: fault count");
+            assert_eq!(st.retries, want_faults, "{spec} at {threads} workers: retry count");
+            assert_eq!(st.breaker_trips, 0, "{spec} at {threads} workers: no trips");
+        }
+    }
+}
+
+/// Queued front end over the real model: admission control sheds with
+/// the typed overload at capacity 1, the drained result is
+/// bit-identical to the slice path, and shutdown cancels
+/// queued-but-unexecuted requests with the typed `Cancelled` outcome.
+#[test]
+fn queued_front_end_sheds_serves_and_cancels_over_a_real_model() {
+    let _g = gate();
+    let (x, model) = train_kmeans(2);
+    let requests = requests_from(&x, 6);
+    let c = ctx(2);
+    let mk = || InferenceSession::new(&model).tile(8);
+    let baseline = mk().serve(&c, &requests);
+    // Capacity 1: the first request is admitted, the next two shed.
+    let mut q = QueuedSession::new(mk(), 1);
+    assert!(q.submit(requests[0].clone()).is_ok());
+    assert!(matches!(q.submit(requests[1].clone()), Err(Error::Overloaded(_))));
+    assert!(matches!(q.submit(requests[2].clone()), Err(Error::Overloaded(_))));
+    let drained = q.drain(&c);
+    assert_eq!(drained.len(), 3, "shed requests still get a slot in drain order");
+    assert_eq!(drained[0].status, ServeStatus::Completed);
+    let (got, want) =
+        (drained[0].output.as_deref().unwrap(), baseline[0].output.as_deref().unwrap());
+    for (a, b) in got.iter().zip(want) {
+        assert_eq!(a.to_bits(), b.to_bits(), "queued path diverged from slice path");
+    }
+    assert_eq!(drained[1].status, ServeStatus::Overloaded);
+    assert_eq!(drained[2].status, ServeStatus::Overloaded);
+    assert_eq!(q.stats().accepted, 1);
+    assert_eq!(q.stats().shed, 2);
+    // Shutdown: everything queued-but-unexecuted cancels typed.
+    let mut q = QueuedSession::new(mk(), 8);
+    for r in requests.iter().take(3) {
+        q.submit(r.clone()).unwrap();
+    }
+    let cancelled = q.shutdown();
+    assert_eq!(cancelled.len(), 3);
+    for r in &cancelled {
+        assert_eq!(r.status, ServeStatus::Cancelled);
+        assert!(r.output.is_none());
+        assert!(r.error.as_deref().is_some_and(|m| m.contains("cancelled")));
+    }
+    assert_eq!(q.stats().cancelled, 3);
+    // The queue survives shutdown: later traffic is served normally.
+    q.submit(requests[0].clone()).unwrap();
+    let after = q.drain(&c);
+    assert_eq!(after[0].status, ServeStatus::Completed);
+}
+
 /// The panel-backed paths are bit-identical to replicas of the old
 /// per-call behavior (corpus repacked and norms recomputed every call).
 #[test]
