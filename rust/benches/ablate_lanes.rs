@@ -1,0 +1,190 @@
+//! Lane-profile ablation (ISSUE 10): the same predicated kernels
+//! monomorphized at each SVE vector length the runtime dispatcher can
+//! resolve — 128-bit (2 × f64), 256-bit (4 × f64), 512-bit (8 × f64).
+//!
+//! Two questions, per hot kernel:
+//!
+//! * **width scaling** — how much the wider block buys on this host.
+//!   On a scalar-ILP machine the "lanes" are unrolled loop blocks, so
+//!   the sweep measures unroll-depth + panel-geometry effects (`NR`,
+//!   `KC`, `TILE` all derive from the profile); on real SVE silicon
+//!   the same sweep would measure hardware vector-length scaling.
+//! * **fidelity across widths** — discrete outputs (argmin winners,
+//!   top-k sets, ε-membership, WSS picks) must be identical at every
+//!   profile; the gate runs before any timing so a divergence fails
+//!   loudly rather than polluting the numbers.
+//!
+//! Results land in `BENCH_lanes.json` (repo root when run from
+//! `rust/`, else the current directory) with the same "pending first
+//! run" scaffold convention as the other ablation benches.
+
+use onedal_sve::algorithms::svm::simd;
+use onedal_sve::algorithms::svm::wss::{LOW, SIGN_ANY, SIGN_NEG, SIGN_POS, UP};
+use onedal_sve::prelude::*;
+use onedal_sve::primitives::distances;
+use onedal_sve::primitives::lanes::LaneProfile;
+use onedal_sve::profiling::{BenchResult, Bencher};
+use onedal_sve::rng::{Distribution, Gaussian, Uniform};
+use onedal_sve::tables::synth::make_blobs;
+
+const N: usize = 4_096; // corpus rows
+const M: usize = 1_024; // query rows
+const D: usize = 32;
+const K_CENT: usize = 16; // k-means centroids (argmin corpus)
+const K_NN: usize = 10; // top-k neighbours
+const EPS2: f64 = 16.0;
+const WSS_N: usize = 100_000; // WSS scan length
+const THREADS: usize = 4;
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Hand-rolled JSON dump (no serde in the offline image).
+fn write_json(results: &[BenchResult]) -> std::io::Result<String> {
+    let path = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_lanes.json"
+    } else {
+        "BENCH_lanes.json"
+    };
+    let mut rows = Vec::new();
+    for r in results {
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"median_ms\": {:.4}, \"mean_ms\": {:.4}, \"samples\": {}}}",
+            json_escape(&r.name),
+            r.median.as_secs_f64() * 1e3,
+            r.mean.as_secs_f64() * 1e3,
+            r.samples
+        ));
+    }
+    let med =
+        |name: &str| results.iter().find(|r| r.name == name).map(|r| r.median.as_secs_f64());
+    let mut speedups = Vec::new();
+    for kernel in ["argmin", "topk", "eps", "wss-extrema", "wssj"] {
+        if let (Some(narrow), Some(wide)) =
+            (med(&format!("{kernel}/sve128")), med(&format!("{kernel}/sve512")))
+        {
+            speedups.push(format!(
+                "    {{\"case\": \"{kernel}/sve512-vs-sve128\", \"speedup\": {:.3}}}",
+                narrow / wide
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"ablate_lanes\",\n  \"results\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+        speedups.join(",\n")
+    );
+    std::fs::write(path, json)?;
+    Ok(path.to_string())
+}
+
+fn main() {
+    let mut e = Mt19937::new(10);
+    let (x, _) = make_blobs(&mut e, N, D, K_CENT, 1.0);
+    let (c, _) = make_blobs(&mut e, K_CENT, D, K_CENT, 1.0);
+    let q = &x.data()[..M * D];
+
+    // WSS fixture — same shape as the Fig. 4 microbenchmark.
+    let mut g = Gaussian::<f64>::standard();
+    let mut u = Uniform::<f64>::new(0.0, 1.0);
+    let grad: Vec<f64> = (0..WSS_N).map(|_| g.sample(&mut e)).collect();
+    let flags: Vec<u8> = (0..WSS_N)
+        .map(|_| {
+            let mut f = if u.sample(&mut e) < 0.5 { SIGN_POS } else { SIGN_NEG };
+            if u.sample(&mut e) < 0.7 {
+                f |= LOW;
+            }
+            if u.sample(&mut e) < 0.7 {
+                f |= UP;
+            }
+            f
+        })
+        .collect();
+    let diag: Vec<f64> = (0..WSS_N).map(|_| 1.0 + u.sample(&mut e)).collect();
+    let ki: Vec<f64> = (0..WSS_N).map(|_| 0.5 * g.sample(&mut e)).collect();
+
+    // ---- fidelity gate: discrete outputs identical at every width ----
+    let base_corpus = distances::pack_corpus_table_profile(&c, LaneProfile::Sve512, THREADS);
+    let base_knn = distances::pack_corpus_table_profile(&x, LaneProfile::Sve512, THREADS);
+    let mut base_assign = vec![0usize; M];
+    distances::argmin_assign(q, M, &base_corpus, true, &mut base_assign, THREADS);
+    let base_topk = distances::top_k(q, M, &base_knn, K_NN, THREADS);
+    let base_eps = distances::eps_neighbors(q, M, &base_knn, EPS2, false, THREADS);
+    let base_ex = simd::wss_extrema_par(LaneProfile::Sve512, &grad, &flags, THREADS);
+    let base_j = simd::wss_j_par(
+        LaneProfile::Sve512,
+        &grad,
+        &flags,
+        SIGN_ANY,
+        LOW,
+        base_ex.gmin,
+        1.5,
+        &diag,
+        &ki,
+        1e-12,
+        true,
+        THREADS,
+    );
+    for profile in LaneProfile::ALL {
+        let corpus = distances::pack_corpus_table_profile(&c, profile, THREADS);
+        let knn = distances::pack_corpus_table_profile(&x, profile, THREADS);
+        let mut assign = vec![0usize; M];
+        distances::argmin_assign(q, M, &corpus, true, &mut assign, THREADS);
+        assert_eq!(assign, base_assign, "{}: argmin winners diverged", profile.name());
+        let topk = distances::top_k(q, M, &knn, K_NN, THREADS);
+        for (a, b) in topk.iter().zip(&base_topk) {
+            let ia: Vec<usize> = a.iter().map(|p| p.0).collect();
+            let ib: Vec<usize> = b.iter().map(|p| p.0).collect();
+            assert_eq!(ia, ib, "{}: top-k sets diverged", profile.name());
+        }
+        let eps = distances::eps_neighbors(q, M, &knn, EPS2, false, THREADS);
+        assert_eq!(eps.to_lists(), base_eps.to_lists(), "{}: ε-membership diverged", profile.name());
+        let ex = simd::wss_extrema_par(profile, &grad, &flags, THREADS);
+        assert_eq!(ex.bi, base_ex.bi, "{}: WSSi pick diverged", profile.name());
+        let j = simd::wss_j_par(
+            profile, &grad, &flags, SIGN_ANY, LOW, base_ex.gmin, 1.5, &diag, &ki, 1e-12,
+            true, THREADS,
+        );
+        assert_eq!(j.bj, base_j.bj, "{}: WSSj pick diverged", profile.name());
+    }
+    println!("fidelity gate: discrete outputs identical across all three profiles\n");
+
+    // ---- width sweep ----
+    let mut b = Bencher::new(200, 9);
+    for profile in LaneProfile::ALL {
+        let name = profile.name();
+        let corpus = distances::pack_corpus_table_profile(&c, profile, THREADS);
+        let knn = distances::pack_corpus_table_profile(&x, profile, THREADS);
+        let mut assign = vec![0usize; M];
+        b.bench(&format!("argmin/{name}"), || {
+            let inertia = distances::argmin_assign(q, M, &corpus, true, &mut assign, THREADS);
+            std::hint::black_box(inertia);
+        });
+        b.bench(&format!("topk/{name}"), || {
+            let nn = distances::top_k(q, M, &knn, K_NN, THREADS);
+            std::hint::black_box(nn.len());
+        });
+        b.bench(&format!("eps/{name}"), || {
+            let nt = distances::eps_neighbors(q, M, &knn, EPS2, false, THREADS);
+            std::hint::black_box(nt.indices().len());
+        });
+        b.bench(&format!("wss-extrema/{name}"), || {
+            let ex = simd::wss_extrema_par(profile, &grad, &flags, THREADS);
+            std::hint::black_box(ex.gmin);
+        });
+        b.bench(&format!("wssj/{name}"), || {
+            let j = simd::wss_j_par(
+                profile, &grad, &flags, SIGN_ANY, LOW, base_ex.gmin, 1.5, &diag, &ki,
+                1e-12, true, THREADS,
+            );
+            std::hint::black_box(j.obj);
+        });
+    }
+
+    b.speedup_table("Lane-width scaling (vs the 128-bit profile)", "sve128");
+    match write_json(b.results()) {
+        Ok(path) => println!("\nrecorded: {path}"),
+        Err(err) => eprintln!("\nfailed to write BENCH_lanes.json: {err}"),
+    }
+}

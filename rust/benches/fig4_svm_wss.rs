@@ -85,8 +85,11 @@ fn main() {
                 &grad, &flags, SIGN_ANY, LOW, -0.1, 1.5, &diag, &ki, 0, n, 1e-12,
             ));
         });
+        // Monomorphized at the default (sve512) profile's WSS width —
+        // the pre-refactor 16-lane unroll.
+        const WL: usize = onedal_sve::primitives::lanes::LaneProfile::Sve512.wss_lanes();
         micro.bench("fig4/wssj-micro/vectorized", || {
-            std::hint::black_box(wss::wss_j_vectorized(
+            std::hint::black_box(wss::wss_j_vectorized::<WL>(
                 &grad, &flags, SIGN_ANY, LOW, -0.1, 1.5, &diag, &ki, 0, n, 1e-12,
             ));
         });

@@ -8,8 +8,10 @@
 //! * reference  — the shared fused distance engine
 //!                ([`crate::primitives::distances`]) with the branchy
 //!                scalar argmin epilogue;
-//! * vectorized — the same engine with the predicated 8-lane argmin
-//!                epilogue consumed while the tile is cache-hot;
+//! * vectorized — the same engine with the predicated lane-unrolled
+//!                argmin epilogue (lane count from the context's
+//!                [`crate::primitives::lanes::LaneProfile`]) consumed
+//!                while the tile is cache-hot;
 //! * artifact   — the `kmeans_assign` Pallas kernel via PJRT, tiled by
 //!                the coordinator's fixed-shape batcher.
 //!
@@ -37,6 +39,7 @@ use crate::coordinator::{batch, Backend, Context, ConvergenceStatus};
 use crate::error::{Error, Result};
 use crate::parallel;
 use crate::primitives::distances;
+use crate::primitives::lanes::LaneProfile;
 use crate::primitives::packed::ModelPanel;
 use crate::rng::{distributions::sample_indices, Engine, Mt19937, Uniform};
 use crate::rng::Distribution;
@@ -262,7 +265,8 @@ impl KMeansParams {
             }
             inertia = new_inertia;
         }
-        let panel = ModelPanel::from_dense_table(&centroids, ctx.threads());
+        let panel =
+            ModelPanel::from_dense_table_profile(&centroids, ctx.lane_profile(), ctx.threads());
         Ok(KMeansModel { centroids, inertia, iterations, status, panel })
     }
 
@@ -297,7 +301,11 @@ impl KMeansParams {
                 break;
             }
             iterations = it + 1;
-            let corpus = distances::CsrCorpus::from_dense(&centroids, ctx.threads());
+            let corpus = distances::CsrCorpus::from_dense_profile(
+                &centroids,
+                ctx.lane_profile(),
+                ctx.threads(),
+            );
             let new_inertia = distances::argmin_assign_csr_with_norms(
                 x,
                 &corpus,
@@ -315,7 +323,8 @@ impl KMeansParams {
             }
             inertia = new_inertia;
         }
-        let panel = ModelPanel::from_dense_table(&centroids, ctx.threads());
+        let panel =
+            ModelPanel::from_dense_table_profile(&centroids, ctx.lane_profile(), ctx.threads());
         Ok(KMeansModel { centroids, inertia, iterations, status, panel })
     }
 
@@ -456,7 +465,11 @@ impl crate::coordinator::serve::ServeModel for KMeansModel {
                 // Degraded rung: re-pack the centroid panels per call,
                 // bypassing the model-resident panel the circuit
                 // breaker suspects. Same fused kernel, same bits.
-                let corpus = distances::pack_corpus_table(&self.centroids, ctx.threads());
+                let corpus = distances::pack_corpus_table_profile(
+                    &self.centroids,
+                    ctx.lane_profile(),
+                    ctx.threads(),
+                );
                 let mut assign = vec![0usize; q.rows()];
                 distances::argmin_assign(
                     q.data(),
@@ -630,9 +643,11 @@ fn assign_step(
     }
     match ctx.dispatch("kmeans_assign", &[x.rows(), d, centroids.rows()]) {
         Backend::Naive => Ok(assign_naive(x, centroids, assign)),
-        Backend::Reference => Ok(assign_gemm(x, centroids, qnorms, assign, false, ctx.threads())),
+        Backend::Reference => {
+            Ok(assign_gemm(x, centroids, qnorms, assign, false, ctx.lane_profile(), ctx.threads()))
+        }
         Backend::Vectorized | Backend::Auto => {
-            Ok(assign_gemm(x, centroids, qnorms, assign, true, ctx.threads()))
+            Ok(assign_gemm(x, centroids, qnorms, assign, true, ctx.lane_profile(), ctx.threads()))
         }
         Backend::Artifact => assign_artifact(ctx, x, centroids, assign),
     }
@@ -663,8 +678,8 @@ fn assign_naive(x: &DenseTable<f64>, c: &DenseTable<f64>, assign: &mut [usize]) 
 /// centroid corpus is packed once per assignment pass (micro-panels +
 /// pooled norms), query M-tiles stream through the worker pool, and the
 /// argmin epilogue consumes each distance tile while it is cache-hot.
-/// `fused` selects the predicated 8-lane scan (vectorized rung) over
-/// the branchy scalar scan (reference rung) — both produce identical
+/// `fused` selects the predicated lane-profile scan (vectorized rung)
+/// over the branchy scalar scan (reference rung) — both produce identical
 /// assignments and bit-identical inertia, and the engine's fixed-order
 /// tile merge keeps assignments *and* inertia bit-stable across
 /// `Context::threads()` settings.
@@ -674,9 +689,10 @@ fn assign_gemm(
     qnorms: Option<&[f64]>,
     assign: &mut [usize],
     fused: bool,
+    profile: LaneProfile,
     threads: usize,
 ) -> f64 {
-    let corpus = distances::pack_corpus(c.data(), c.rows(), c.cols(), threads);
+    let corpus = distances::pack_corpus_profile(c.data(), c.rows(), c.cols(), profile, threads);
     distances::argmin_assign_with_norms(x.data(), x.rows(), &corpus, qnorms, fused, assign, threads)
 }
 
@@ -786,10 +802,11 @@ mod tests {
         let ctxv = ctx(Backend::Vectorized);
         let model = KMeans::params().k(6).seed(2).max_iter(5).train(&ctxv, &x).unwrap();
         let mut a1 = vec![0usize; 6_000];
-        let i1 = assign_gemm(&x, &model.centroids, None, &mut a1, true, 1);
+        let i1 = assign_gemm(&x, &model.centroids, None, &mut a1, true, LaneProfile::Sve512, 1);
         for threads in 2..=4 {
             let mut a = vec![0usize; 6_000];
-            let it = assign_gemm(&x, &model.centroids, None, &mut a, true, threads);
+            let it =
+                assign_gemm(&x, &model.centroids, None, &mut a, true, LaneProfile::Sve512, threads);
             assert_eq!(a, a1, "threads={threads}");
             assert_eq!(it.to_bits(), i1.to_bits(), "threads={threads}");
         }
@@ -809,9 +826,24 @@ mod tests {
         for fused in [false, true] {
             let mut a_inline = vec![0usize; 900];
             let mut a_hoist = vec![0usize; 900];
-            let i_inline = assign_gemm(&x, &model.centroids, None, &mut a_inline, fused, 3);
-            let i_hoist =
-                assign_gemm(&x, &model.centroids, Some(&norms), &mut a_hoist, fused, 3);
+            let i_inline = assign_gemm(
+                &x,
+                &model.centroids,
+                None,
+                &mut a_inline,
+                fused,
+                LaneProfile::Sve512,
+                3,
+            );
+            let i_hoist = assign_gemm(
+                &x,
+                &model.centroids,
+                Some(&norms),
+                &mut a_hoist,
+                fused,
+                LaneProfile::Sve512,
+                3,
+            );
             assert_eq!(a_inline, a_hoist, "fused={fused}");
             assert_eq!(i_inline.to_bits(), i_hoist.to_bits(), "fused={fused}");
         }

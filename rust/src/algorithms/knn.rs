@@ -76,9 +76,10 @@ impl KnnParams {
         // the corpus is packed once into the model-resident panel, and
         // every later query borrows it.
         let threads = ctx.threads();
+        let profile = ctx.lane_profile();
         crate::parallel::quarantine("knn.train", || {
             let classes = y.iter().fold(0.0f64, |a, &b| a.max(b)) as usize + 1;
-            let panel = ModelPanel::from_table(x, threads);
+            let panel = ModelPanel::from_table_profile(x, profile, threads);
             Ok(KnnModel { k: self.k, x: x.to_table(), y: y.to_vec(), classes, panel })
         })
     }
@@ -176,7 +177,11 @@ impl crate::coordinator::serve::ServeModel for KnnModel {
                 // sets — and therefore class labels — match the packed
                 // path.
                 let dense = self.x.view().to_dense();
-                let corpus = distances::pack_corpus_table(&dense, ctx.threads());
+                let corpus = distances::pack_corpus_table_profile(
+                    &dense,
+                    ctx.lane_profile(),
+                    ctx.threads(),
+                );
                 let nn = distances::top_k(q.data(), q.rows(), &corpus, self.k, ctx.threads());
                 Ok(self.vote(&nn))
             }

@@ -13,7 +13,7 @@
 //! `Xcᵀyc = Xᵀy − n·x̄·ȳ`). Inference is one threaded `csrmv`.
 //! `Backend::Naive` densifies first — the sparse path's test oracle.
 
-use crate::blas::{gemv_threads, syrk_threads};
+use crate::blas::{gemv_threads, syrk_threads_profile};
 use crate::coordinator::{Backend, Context};
 use crate::error::{Error, Result};
 use crate::linalg::cholesky_solve;
@@ -130,9 +130,18 @@ impl LinRegParams {
             }
             _ => {
                 // XᵀX = parallel packed syrk over the transposed (p×n)
-                // layout, on the context's worker count.
+                // layout, on the context's worker count and lane profile.
                 let xt = xc.transposed();
-                syrk_threads(p, n, 1.0, xt.data(), 0.0, &mut xtx, ctx.threads());
+                syrk_threads_profile(
+                    p,
+                    n,
+                    1.0,
+                    xt.data(),
+                    0.0,
+                    &mut xtx,
+                    ctx.threads(),
+                    ctx.lane_profile(),
+                );
             }
         }
         for i in 0..p {

@@ -7,6 +7,7 @@
 
 use crate::blas::{dot, gemm_prepacked_threads, gemv_threads, sqdist, PackedB, Transpose};
 use crate::primitives::distances;
+use crate::primitives::lanes::LaneProfile;
 use crate::sparse::{csrmm_threads, CsrMatrix, SparseOp};
 use crate::tables::DenseTable;
 use std::collections::{BTreeMap, VecDeque};
@@ -113,6 +114,8 @@ impl SvmKernel {
     /// alone. Both are bit-identical at any worker count — and
     /// independent of how the rows are batched into tiles, because each
     /// output element is one dot product plus an elementwise transform.
+    /// The lane profile flows from `pb` (the panel carries the width it
+    /// was packed at), so no separate profile argument is needed.
     pub fn gram_tile(
         &self,
         w: &[f64],
@@ -143,8 +146,12 @@ impl SvmKernel {
     /// shrink generation — the sparse analogue of the prepacked
     /// micro-panels). Linear is one threaded CSR multiply; RBF runs the
     /// fused `exp(−γ·d²)` transform of
-    /// [`crate::primitives::distances::rbf_gram_csr`]. Both partition
-    /// whole output rows per worker — bit-identical at any count.
+    /// [`crate::primitives::distances::rbf_gram_csr_profile`] at the
+    /// caller's lane profile (the densified panel carries no profile of
+    /// its own, so the engine routes its `Context`-resolved one). Both
+    /// partition whole output rows per worker — bit-identical at any
+    /// count, and at any profile (the transform is elementwise).
+    #[allow(clippy::too_many_arguments)]
     pub fn gram_tile_csr(
         &self,
         w: &CsrMatrix<f64>,
@@ -152,6 +159,7 @@ impl SvmKernel {
         p_norms: &[f64],
         bt: &[f64],
         out: &mut [f64],
+        profile: LaneProfile,
         threads: usize,
     ) {
         let na = p_norms.len();
@@ -166,7 +174,9 @@ impl SvmKernel {
                 }
             }
             SvmKernel::Rbf { gamma } => {
-                distances::rbf_gram_csr(w, w_norms, p_norms, bt, gamma, out, threads);
+                distances::rbf_gram_csr_profile(
+                    w, w_norms, p_norms, bt, gamma, out, profile, threads,
+                );
             }
         }
     }
@@ -533,7 +543,7 @@ mod tests {
         let wn: Vec<f64> = ws.iter().map(|&g| norms[g]).collect();
         for k in [SvmKernel::Linear, SvmKernel::Rbf { gamma: 0.4 }] {
             let mut base = vec![0.0f64; ws.len() * na];
-            k.gram_tile_csr(&wcsr, &wn, &pn, &bt, &mut base, 1);
+            k.gram_tile_csr(&wcsr, &wn, &pn, &bt, &mut base, LaneProfile::Sve512, 1);
             for (r, &gi) in ws.iter().enumerate() {
                 for (c, &gj) in active.iter().enumerate() {
                     let expect = k.eval(sp.row(gi), sp.row(gj));
@@ -541,11 +551,20 @@ mod tests {
                     assert!((got - expect).abs() < 1e-10, "{k:?} r={r} c={c}");
                 }
             }
-            for threads in 2..=4 {
-                let mut tile = vec![0.0f64; ws.len() * na];
-                k.gram_tile_csr(&wcsr, &wn, &pn, &bt, &mut tile, threads);
-                for (u, v) in base.iter().zip(&tile) {
-                    assert_eq!(u.to_bits(), v.to_bits(), "{k:?} threads={threads}");
+            // Worker counts and lane profiles must both leave the tile
+            // bit-identical (the sparse epilogue is elementwise).
+            for profile in LaneProfile::ALL {
+                for threads in 1..=4 {
+                    let mut tile = vec![0.0f64; ws.len() * na];
+                    k.gram_tile_csr(&wcsr, &wn, &pn, &bt, &mut tile, profile, threads);
+                    for (u, v) in base.iter().zip(&tile) {
+                        assert_eq!(
+                            u.to_bits(),
+                            v.to_bits(),
+                            "{k:?} {} threads={threads}",
+                            profile.name()
+                        );
+                    }
                 }
             }
         }

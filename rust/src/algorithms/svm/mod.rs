@@ -15,8 +15,10 @@
 //!   Thunder block selection ranks its UP/LOW candidates with (ties
 //!   broken by index; replaces the full per-block sorts);
 //! * [`simd`]   — the predicated hot loops the solver actually runs:
-//!   8-lane branch-free fused extrema / `WSSj` scans and gradient
-//!   updates, parallelized with fixed-order reductions;
+//!   branch-free fused extrema / `WSSj` scans and gradient updates,
+//!   monomorphized per lane profile (128/256/512-bit ⇒ 2/4/8 f64
+//!   lanes, [`crate::primitives::lanes`]) and parallelized with
+//!   fixed-order reductions;
 //! * [`solver`] — the SMO dual solver: **Boser** and **Thunder**, both
 //!   on the shrinking active-set engine.
 //!
@@ -55,12 +57,16 @@
 //! The scans in [`simd`] mirror SVE predicate-driven execution in
 //! portable Rust: every guard becomes a lane mask, dead lanes carry the
 //! neutral element (±∞) via select instead of a branch, blocks are
-//! 8-lane unrolled (one 512-bit SVE vector of f64), and block-local
+//! lane-unrolled at the [`crate::primitives::lanes::LaneProfile`] the
+//! owning `Context` resolved (2/4/8 f64 lanes for a 128/256/512-bit
+//! vector — the paper's vector-length-agnostic loop, dispatched once
+//! per call through [`crate::with_lane_count!`]), and block-local
 //! reductions run in index order so tie-breaks match the scalar
 //! listings bit for bit. Parallel fan-outs merge partials in ascending
 //! partition order; because min/max/argmin carry no floating-point
 //! accumulation, the merged result is bit-identical at any worker
-//! count.
+//! count — and at any lane width, which is what makes the selected
+//! pairs (and therefore whole training runs) profile-invariant.
 //!
 //! ## Sparse inputs
 //!

@@ -9,10 +9,15 @@
 //!   arithmetic by selecting a neutral element (±∞ for min/max scans)
 //!   instead of `continue`-ing, exactly how an SVE predicate deadens
 //!   lanes without a branch;
-//! * **8-lane unrolled blocks** — the stand-in for a 512-bit SVE
-//!   register of f64 lanes; arithmetic runs unconditionally on all
-//!   lanes, a block-local reduction in index order preserves the scalar
-//!   loop's first-index tie-breaking exactly;
+//! * **lane-blocked unrolling at the active profile's width** — the
+//!   scan bodies are const-generic over the lane count and
+//!   monomorphized per [`LaneProfile`] (128/256/512-bit ⇒ 2/4/8 f64
+//!   lanes) through [`crate::with_lane_count!`]; arithmetic runs
+//!   unconditionally on all lanes, and a block-local reduction in
+//!   index order preserves the scalar loop's first-index tie-breaking
+//!   exactly. Because the reductions are exact (compare/select, no
+//!   accumulation), the selected indices and extrema are identical at
+//!   **every** lane width, not just within one profile;
 //! * **fixed-order parallel merge** — scans fan out over
 //!   [`crate::parallel::par_map`] partitions and the partials merge in
 //!   ascending partition order. Min/max/argmin reductions are *exact*
@@ -28,9 +33,13 @@
 
 use super::wss::{self, WssJResult, LOW, UP};
 use crate::parallel;
+use crate::primitives::lanes::LaneProfile;
 
-/// Lanes per predicated block (a 512-bit SVE vector holds 8 f64 lanes).
-pub const LANES: usize = 8;
+// The lane width is no longer a module constant: every entry point
+// takes the caller's [`LaneProfile`] (the solver routes the profile its
+// `Context` resolved) and dispatches once into a body monomorphized for
+// that width. `profile.lanes()` drives the extrema/axpy blocks,
+// `profile.wss_lanes()` (two vectors of headroom) drives the WSSj scan.
 
 /// Minimum scan length before a WSS fan-out pays for itself.
 const PAR_MIN_SCAN: usize = 1 << 12;
@@ -53,16 +62,28 @@ impl WssExtrema {
 /// Branch-free fused extrema scan over `[lo, hi)`: one pass computes
 /// both the `WSSi` argmin over `I_up` and the `GMax2` stopping term
 /// over `I_low`. Guards become lane masks; dead lanes carry ±∞ so the
-/// arithmetic never branches; each 8-lane block reduces in index order
+/// arithmetic never branches; each lane block reduces in index order
 /// (strict comparisons keep the earliest extremum, matching the scalar
-/// [`wss::wss_i`] loop bit for bit).
-pub fn extrema_range(grad: &[f64], flags: &[u8], lo: usize, hi: usize) -> WssExtrema {
+/// [`wss::wss_i`] loop bit for bit at every lane width). Dispatches
+/// once into the body monomorphized for `profile`.
+pub fn extrema_range(
+    profile: LaneProfile,
+    grad: &[f64],
+    flags: &[u8],
+    lo: usize,
+    hi: usize,
+) -> WssExtrema {
+    crate::with_lane_count!(profile, L, { extrema_lanes::<L>(grad, flags, lo, hi) })
+}
+
+/// The const-generic extrema body — `L` lanes per predicated block.
+fn extrema_lanes<const L: usize>(grad: &[f64], flags: &[u8], lo: usize, hi: usize) -> WssExtrema {
     let mut out = WssExtrema::NEUTRAL;
-    let mut up_lane = [f64::INFINITY; LANES];
-    let mut low_lane = [f64::NEG_INFINITY; LANES];
+    let mut up_lane = [f64::INFINITY; L];
+    let mut low_lane = [f64::NEG_INFINITY; L];
     let mut base = lo;
     while base < hi {
-        let len = LANES.min(hi - base);
+        let len = L.min(hi - base);
         // --- predicated block body: every lane, no branches ---
         for l in 0..len {
             let t = base + l;
@@ -102,24 +123,31 @@ fn merge_extrema(partials: Vec<WssExtrema>) -> WssExtrema {
 }
 
 /// Parallel fused extrema scan: partitions fan out on the worker pool,
-/// partials merge in fixed order — bit-identical at any worker count.
-pub fn wss_extrema_par(grad: &[f64], flags: &[u8], threads: usize) -> WssExtrema {
+/// partials merge in fixed order — bit-identical at any worker count
+/// (and, by exactness of the reductions, at any lane profile).
+pub fn wss_extrema_par(
+    profile: LaneProfile,
+    grad: &[f64],
+    flags: &[u8],
+    threads: usize,
+) -> WssExtrema {
     let n = grad.len();
     debug_assert_eq!(flags.len(), n);
     let workers = parallel::effective_threads(threads, n, PAR_MIN_SCAN);
     if workers <= 1 {
-        return extrema_range(grad, flags, 0, n);
+        return extrema_range(profile, grad, flags, 0, n);
     }
     let bounds = parallel::even_bounds(n, workers);
-    merge_extrema(parallel::par_map(&bounds, |lo, hi| extrema_range(grad, flags, lo, hi)))
+    merge_extrema(parallel::par_map(&bounds, |lo, hi| extrema_range(profile, grad, flags, lo, hi)))
 }
 
-/// 8-lane predicated `WSSj` block scan — the [`wss::wss_j_vectorized`]
-/// restructure at the SVE-native lane width, used as the per-partition
-/// body of [`wss_j_par`]. Bitwise identical to [`wss::wss_j_scalar`]
-/// over the same range (the property suite enforces this).
+/// `L`-lane predicated `WSSj` block scan — the [`wss::wss_j_vectorized`]
+/// body used as the per-partition kernel of [`wss_j_par`], which
+/// instantiates it at the active profile's `wss_lanes()` width. Bitwise
+/// identical to [`wss::wss_j_scalar`] over the same range for every `L`
+/// (the property suite enforces this).
 #[allow(clippy::too_many_arguments)]
-pub fn wss_j_lanes(
+pub fn wss_j_lanes<const L: usize>(
     grad: &[f64],
     flags: &[u8],
     sign: u8,
@@ -136,11 +164,11 @@ pub fn wss_j_lanes(
     let mut gmax2 = f64::NEG_INFINITY;
     let mut bj: Option<usize> = None;
     let mut delta = 0.0f64;
-    let mut obj_lane = [f64::NEG_INFINITY; LANES];
-    let mut dt_lane = [0.0f64; LANES];
+    let mut obj_lane = [f64::NEG_INFINITY; L];
+    let mut dt_lane = [0.0f64; L];
     let mut base = j_start;
     while base < j_end {
-        let len = LANES.min(j_end - base);
+        let len = L.min(j_end - base);
         let mut block_gmax2 = f64::NEG_INFINITY;
         for l in 0..len {
             let j = base + l;
@@ -174,14 +202,16 @@ pub fn wss_j_lanes(
 }
 
 /// Parallel `WSSj` over a full compacted gram row: partitions run the
-/// predicated 8-lane scan (or the branchy scalar Listing-1 loop when
-/// `vectorized` is false — the Fig. 4 comparison point), partials merge
-/// in ascending order with strict comparisons. Because the per-lane
-/// objective involves no accumulation, the merged result is bit-equal
-/// to a single-range scan at any worker count — and the scalar and
-/// vectorized bodies are themselves bitwise interchangeable.
+/// predicated lane scan at the profile's `wss_lanes()` width (or the
+/// branchy scalar Listing-1 loop when `vectorized` is false — the
+/// Fig. 4 comparison point), partials merge in ascending order with
+/// strict comparisons. Because the per-lane objective involves no
+/// accumulation, the merged result is bit-equal to a single-range scan
+/// at any worker count — and the scalar and vectorized bodies are
+/// themselves bitwise interchangeable at every lane width.
 #[allow(clippy::too_many_arguments)]
 pub fn wss_j_par(
+    profile: LaneProfile,
     grad: &[f64],
     flags: &[u8],
     sign: u8,
@@ -199,7 +229,23 @@ pub fn wss_j_par(
     let body = |lo: usize, hi: usize| -> WssJResult {
         let block = &ki[lo..hi];
         if vectorized {
-            wss_j_lanes(grad, flags, sign, low, gmin, kii, kernel_diag, block, lo, hi, tau)
+            // `wss_lanes() == 2·lanes()`, so the dispatch instantiates
+            // the scan at twice the bound lane count.
+            crate::with_lane_count!(profile, L, {
+                wss_j_lanes::<{ 2 * L }>(
+                    grad,
+                    flags,
+                    sign,
+                    low,
+                    gmin,
+                    kii,
+                    kernel_diag,
+                    block,
+                    lo,
+                    hi,
+                    tau,
+                )
+            })
         } else {
             wss::wss_j_scalar(grad, flags, sign, low, gmin, kii, kernel_diag, block, lo, hi, tau)
         }
@@ -230,27 +276,37 @@ pub fn wss_j_par(
 }
 
 /// Gradient pair update `g[t] += τ·(Ki[t] − Kj[t])` over the compacted
-/// active set — the Boser per-iteration axpy, 8-lane unrolled and
-/// fanned out over disjoint chunks (each element computed whole by one
-/// worker, so any worker count produces the same bits).
-pub fn update_grad_pair(grad: &mut [f64], row_i: &[f64], row_j: &[f64], tau: f64, threads: usize) {
+/// active set — the Boser per-iteration axpy, lane-unrolled at the
+/// profile's width and fanned out over disjoint chunks. Each element is
+/// computed whole (one `mul_add`) by one worker, so any worker count —
+/// and any lane profile — produces the same bits.
+pub fn update_grad_pair(
+    profile: LaneProfile,
+    grad: &mut [f64],
+    row_i: &[f64],
+    row_j: &[f64],
+    tau: f64,
+    threads: usize,
+) {
     let n = grad.len();
     debug_assert_eq!(row_i.len(), n);
     debug_assert_eq!(row_j.len(), n);
     let workers = parallel::effective_threads(threads, n, PAR_MIN_SCAN);
     let bounds = parallel::even_bounds(n, workers);
-    parallel::scope_rows(grad, 1, &bounds, |lo, hi, block| {
-        let (ri, rj) = (&row_i[lo..hi], &row_j[lo..hi]);
-        let chunks = (hi - lo) / LANES;
-        for c in 0..chunks {
-            let b = c * LANES;
-            for l in 0..LANES {
-                block[b + l] = tau.mul_add(ri[b + l] - rj[b + l], block[b + l]);
+    crate::with_lane_count!(profile, L, {
+        parallel::scope_rows(grad, 1, &bounds, |lo, hi, block| {
+            let (ri, rj) = (&row_i[lo..hi], &row_j[lo..hi]);
+            let chunks = (hi - lo) / L;
+            for c in 0..chunks {
+                let b = c * L;
+                for l in 0..L {
+                    block[b + l] = tau.mul_add(ri[b + l] - rj[b + l], block[b + l]);
+                }
             }
-        }
-        for t in chunks * LANES..hi - lo {
-            block[t] = tau.mul_add(ri[t] - rj[t], block[t]);
-        }
+            for t in chunks * L..hi - lo {
+                block[t] = tau.mul_add(ri[t] - rj[t], block[t]);
+            }
+        });
     });
 }
 
@@ -325,70 +381,95 @@ mod tests {
     }
 
     #[test]
-    fn extrema_matches_scalar_oracle_all_sizes() {
-        for (seed, n) in [(1u32, 1usize), (2, 7), (3, 8), (4, 9), (5, 100), (6, 1023), (7, 4099)] {
-            let (grad, flags, _, _) = random_case(seed, n);
-            let got = extrema_range(&grad, &flags, 0, n);
-            let want = extrema_oracle(&grad, &flags);
-            assert_eq!(got.bi, want.bi, "n={n}");
-            assert_eq!(got.gmin.to_bits(), want.gmin.to_bits(), "n={n}");
-            assert_eq!(got.gmax2.to_bits(), want.gmax2.to_bits(), "n={n}");
+    fn extrema_matches_scalar_oracle_all_sizes_and_profiles() {
+        for profile in LaneProfile::ALL {
+            for (seed, n) in
+                [(1u32, 1usize), (2, 7), (3, 8), (4, 9), (5, 100), (6, 1023), (7, 4099)]
+            {
+                let (grad, flags, _, _) = random_case(seed, n);
+                let got = extrema_range(profile, &grad, &flags, 0, n);
+                let want = extrema_oracle(&grad, &flags);
+                assert_eq!(got.bi, want.bi, "{} n={n}", profile.name());
+                assert_eq!(got.gmin.to_bits(), want.gmin.to_bits(), "{} n={n}", profile.name());
+                assert_eq!(got.gmax2.to_bits(), want.gmax2.to_bits(), "{} n={n}", profile.name());
+            }
         }
     }
 
     #[test]
-    fn extrema_par_bit_identical_across_workers() {
+    fn extrema_par_bit_identical_across_workers_and_profiles() {
         let (grad, flags, _, _) = random_case(11, 9001);
-        let base = wss_extrema_par(&grad, &flags, 1);
-        for threads in 2..=4 {
-            let got = wss_extrema_par(&grad, &flags, threads);
-            assert_eq!(got, base, "threads={threads}");
+        let base = wss_extrema_par(LaneProfile::Sve512, &grad, &flags, 1);
+        for profile in LaneProfile::ALL {
+            for threads in 1..=4 {
+                let got = wss_extrema_par(profile, &grad, &flags, threads);
+                assert_eq!(got, base, "{} threads={threads}", profile.name());
+            }
         }
         assert_eq!(base, extrema_oracle(&grad, &flags));
     }
 
     #[test]
     fn extrema_tie_breaks_to_first_index() {
-        // Equal minima in different 8-lane blocks and lanes.
+        // Equal minima in different lane blocks and lanes — the first
+        // index must win at every lane width.
         let mut grad = vec![1.0; 40];
         grad[3] = -2.0;
         grad[17] = -2.0;
         let flags = vec![UP | LOW; 40];
-        let r = extrema_range(&grad, &flags, 0, 40);
-        assert_eq!(r.bi, Some(3));
+        for profile in LaneProfile::ALL {
+            let r = extrema_range(profile, &grad, &flags, 0, 40);
+            assert_eq!(r.bi, Some(3), "{}", profile.name());
+        }
     }
 
     #[test]
-    fn wss_j_lanes_matches_scalar_bitwise() {
-        for (seed, n) in [(21u32, 1usize), (22, 8), (23, 9), (24, 100), (25, 1023)] {
-            let (grad, flags, diag, ki) = random_case(seed, n);
-            let s = wss::wss_j_scalar(
-                &grad, &flags, SIGN_ANY, LOW, -0.1, 1.5, &diag, &ki, 0, n, 1e-12,
-            );
-            let v = wss_j_lanes(&grad, &flags, SIGN_ANY, LOW, -0.1, 1.5, &diag, &ki, 0, n, 1e-12);
-            assert_eq!(s, v, "n={n}");
+    fn wss_j_lanes_matches_scalar_bitwise_at_every_width() {
+        for profile in LaneProfile::ALL {
+            for (seed, n) in [(21u32, 1usize), (22, 8), (23, 9), (24, 100), (25, 1023)] {
+                let (grad, flags, diag, ki) = random_case(seed, n);
+                let s = wss::wss_j_scalar(
+                    &grad, &flags, SIGN_ANY, LOW, -0.1, 1.5, &diag, &ki, 0, n, 1e-12,
+                );
+                let v = crate::with_lane_count!(profile, L, {
+                    wss_j_lanes::<{ 2 * L }>(
+                        &grad, &flags, SIGN_ANY, LOW, -0.1, 1.5, &diag, &ki, 0, n, 1e-12,
+                    )
+                });
+                assert_eq!(s, v, "{} n={n}", profile.name());
+            }
         }
     }
 
     #[test]
     fn wss_j_par_bit_identical_across_workers_and_bodies() {
         let (grad, flags, diag, ki) = random_case(31, 8191);
-        for vectorized in [false, true] {
-            let base = wss_j_par(
-                &grad, &flags, SIGN_ANY, LOW, -0.05, 1.3, &diag, &ki, 1e-12, vectorized, 1,
-            );
-            for threads in 2..=4 {
-                let got = wss_j_par(
-                    &grad, &flags, SIGN_ANY, LOW, -0.05, 1.3, &diag, &ki, 1e-12, vectorized,
-                    threads,
+        // Scalar reference: one full-range Listing-1 scan.
+        let scalar = wss::wss_j_scalar(
+            &grad, &flags, SIGN_ANY, LOW, -0.05, 1.3, &diag, &ki, 0, 8191, 1e-12,
+        );
+        for profile in LaneProfile::ALL {
+            for vectorized in [false, true] {
+                let base = wss_j_par(
+                    profile, &grad, &flags, SIGN_ANY, LOW, -0.05, 1.3, &diag, &ki, 1e-12,
+                    vectorized, 1,
                 );
-                assert_eq!(got, base, "vectorized={vectorized} threads={threads}");
+                for threads in 2..=4 {
+                    let got = wss_j_par(
+                        profile, &grad, &flags, SIGN_ANY, LOW, -0.05, 1.3, &diag, &ki, 1e-12,
+                        vectorized, threads,
+                    );
+                    assert_eq!(
+                        got,
+                        base,
+                        "{} vectorized={vectorized} threads={threads}",
+                        profile.name()
+                    );
+                }
+                // Scalar and predicated bodies agree bit for bit at
+                // every lane width.
+                assert_eq!(base, scalar, "{} vectorized={vectorized}", profile.name());
             }
-            // Scalar and predicated bodies agree bit for bit.
-            let scalar = wss::wss_j_scalar(
-                &grad, &flags, SIGN_ANY, LOW, -0.05, 1.3, &diag, &ki, 0, 8191, 1e-12,
-            );
-            assert_eq!(base, scalar, "vectorized={vectorized}");
         }
     }
 
@@ -401,12 +482,14 @@ mod tests {
         let ri: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
         let rj: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
         let mut base = g0.clone();
-        update_grad_pair(&mut base, &ri, &rj, 0.37, 1);
-        for threads in 2..=4 {
-            let mut gt = g0.clone();
-            update_grad_pair(&mut gt, &ri, &rj, 0.37, threads);
-            for (u, v) in base.iter().zip(&gt) {
-                assert_eq!(u.to_bits(), v.to_bits(), "threads={threads}");
+        update_grad_pair(LaneProfile::Sve512, &mut base, &ri, &rj, 0.37, 1);
+        for profile in LaneProfile::ALL {
+            for threads in 1..=4 {
+                let mut gt = g0.clone();
+                update_grad_pair(profile, &mut gt, &ri, &rj, 0.37, threads);
+                for (u, v) in base.iter().zip(&gt) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{} threads={threads}", profile.name());
+                }
             }
         }
         // Reconcile: three delta rows, one exactly zero (the multiply-

@@ -16,10 +16,11 @@
 use super::kernel::{SvmKernel, TileCache};
 use super::simd::{self, WssExtrema};
 use super::wss::{self, LOW, SIGN_ANY, SIGN_NEG, SIGN_POS, UP};
-use crate::blas::{dot, pack_b_panels, PackedB, Transpose};
+use crate::blas::{dot, pack_b_panels_profile, PackedB, Transpose};
 use crate::coordinator::{batch, Backend, BudgetMeter, Context, ConvergenceStatus};
 use crate::error::{Error, Result};
 use crate::primitives::distances;
+use crate::primitives::lanes::LaneProfile;
 use crate::primitives::packed::ModelPanel;
 use crate::sparse::{csrmm_threads, CsrMatrix, SparseOp};
 use crate::tables::{DenseTable, TableRef};
@@ -218,10 +219,11 @@ impl<'a> TrainData<'a> {
         }
     }
 
-    /// Pack rows `idx` as the gram panel in the native layout.
-    fn pack_panel(&self, idx: &[usize]) -> ActivePanel {
+    /// Pack rows `idx` as the gram panel in the native layout, at the
+    /// engine's lane profile.
+    fn pack_panel(&self, idx: &[usize], profile: LaneProfile) -> ActivePanel {
         match self {
-            TrainData::Dense(x) => ActivePanel::Packed(pack_active_panel(x, idx)),
+            TrainData::Dense(x) => ActivePanel::Packed(pack_active_panel(x, idx, profile)),
             TrainData::Csr(s) => {
                 let na = idx.len();
                 let mut bt = vec![0.0f64; s.cols() * na];
@@ -247,6 +249,7 @@ impl<'a> TrainData<'a> {
         panel_norms: &[f64],
         panel: &ActivePanel,
         out: &mut [f64],
+        profile: LaneProfile,
         threads: usize,
     ) {
         match (self, panel) {
@@ -258,12 +261,14 @@ impl<'a> TrainData<'a> {
                     w[r * d..(r + 1) * d].copy_from_slice(x.row(g));
                     wn[r] = norms[g];
                 }
+                // The packed panel carries its profile; `gram_tile`
+                // reads the geometry from it.
                 kernel.gram_tile(&w, &wn, panel_norms, pb, out, threads);
             }
             (TrainData::Csr(s), ActivePanel::Densified(bt)) => {
                 let wcsr = s.gather_rows(rows);
                 let wn: Vec<f64> = rows.iter().map(|&g| norms[g]).collect();
-                kernel.gram_tile_csr(&wcsr, &wn, panel_norms, bt, out, threads);
+                kernel.gram_tile_csr(&wcsr, &wn, panel_norms, bt, out, profile, threads);
             }
             _ => unreachable!("panel layout always matches the data layout"),
         }
@@ -292,21 +297,28 @@ struct ActiveSet {
 }
 
 /// Gather rows `idx` of `x` into a dense `|idx| × d` buffer and pack it
-/// as the tile GEMM's `op(B)` panel.
-fn pack_active_panel(x: &DenseTable<f64>, idx: &[usize]) -> PackedB<f64> {
+/// as the tile GEMM's `op(B)` panel at the engine's lane profile.
+fn pack_active_panel(x: &DenseTable<f64>, idx: &[usize], profile: LaneProfile) -> PackedB<f64> {
     let d = x.cols();
     let mut gathered = vec![0.0f64; idx.len() * d];
     for (r, &g) in idx.iter().enumerate() {
         gathered[r * d..(r + 1) * d].copy_from_slice(x.row(g));
     }
-    pack_b_panels(Transpose::Yes, d, idx.len(), &gathered)
+    pack_b_panels_profile(Transpose::Yes, d, idx.len(), &gathered, profile)
 }
 
 impl ActiveSet {
-    fn full(data: TrainData, norms: &[f64], diag: &[f64], grad: Vec<f64>, flags: &[u8]) -> Self {
+    fn full(
+        data: TrainData,
+        norms: &[f64],
+        diag: &[f64],
+        grad: Vec<f64>,
+        flags: &[u8],
+        profile: LaneProfile,
+    ) -> Self {
         let n = data.rows();
         let idx: Vec<usize> = (0..n).collect();
-        let panel = data.pack_panel(&idx);
+        let panel = data.pack_panel(&idx, profile);
         let (norms, diag, flags) = (norms.to_vec(), diag.to_vec(), flags.to_vec());
         Self { idx, panel, norms, diag, grad, flags }
     }
@@ -317,14 +329,14 @@ impl ActiveSet {
 
     /// Keep only the local positions in `keep` (ascending) and re-pack
     /// the tile panel.
-    fn retain(&mut self, keep: &[usize], data: TrainData) {
+    fn retain(&mut self, keep: &[usize], data: TrainData, profile: LaneProfile) {
         let gather = |src: &[f64]| keep.iter().map(|&l| src[l]).collect::<Vec<f64>>();
         self.idx = keep.iter().map(|&l| self.idx[l]).collect();
         self.norms = gather(&self.norms);
         self.diag = gather(&self.diag);
         self.grad = gather(&self.grad);
         self.flags = keep.iter().map(|&l| self.flags[l]).collect();
-        self.panel = data.pack_panel(&self.idx);
+        self.panel = data.pack_panel(&self.idx, profile);
     }
 }
 
@@ -339,6 +351,9 @@ struct Engine<'a> {
     active: ActiveSet,
     tiles: TileCache,
     vectorized: bool,
+    /// The lane profile the owning `Context` resolved — every WSS scan,
+    /// gradient update and panel pack in this engine runs at its width.
+    profile: LaneProfile,
     threads: usize,
     stats: TrainStats,
     shrink_period: usize,
@@ -357,13 +372,14 @@ impl<'a> Engine<'a> {
         diag: &'a [f64],
         y: Vec<f64>,
         vectorized: bool,
+        profile: LaneProfile,
         threads: usize,
         meter: BudgetMeter,
     ) -> Self {
         let n = data.rows();
         let state = SolverState::new(y, params.c);
         let grad0: Vec<f64> = state.y.iter().map(|&yi| -yi).collect();
-        let active = ActiveSet::full(data, norms, diag, grad0, &state.flags);
+        let active = ActiveSet::full(data, norms, diag, grad0, &state.flags, profile);
         let tiles = TileCache::new(params.tile_capacity(n), n);
         let shrink_period = if params.shrink_period > 0 {
             params.shrink_period
@@ -379,6 +395,7 @@ impl<'a> Engine<'a> {
             active,
             tiles,
             vectorized,
+            profile,
             threads,
             stats: TrainStats::default(),
             shrink_period,
@@ -409,12 +426,22 @@ impl<'a> Engine<'a> {
     fn fetch_rows(&mut self, locals: &[usize]) -> Vec<Arc<Vec<f64>>> {
         let globals: Vec<usize> = locals.iter().map(|&l| self.active.idx[l]).collect();
         let (data, norms, threads) = (self.data, self.norms, self.threads);
+        let profile = self.profile;
         let kernel = &self.params.kernel;
         let active = &self.active;
         let stats = &mut self.stats;
         let na = active.idx.len();
         self.tiles.fetch_block(&globals, |miss, tile| {
-            data.gram_block(kernel, miss, norms, &active.norms, &active.panel, tile, threads);
+            data.gram_block(
+                kernel,
+                miss,
+                norms,
+                &active.norms,
+                &active.panel,
+                tile,
+                profile,
+                threads,
+            );
             stats.tile_rows += miss.len() as u64;
             stats.kernel_entries += (miss.len() * na) as u64;
         })
@@ -422,7 +449,7 @@ impl<'a> Engine<'a> {
 
     /// One fused extrema scan over the active set.
     fn extrema(&self) -> WssExtrema {
-        simd::wss_extrema_par(&self.active.grad, &self.active.flags, self.threads)
+        simd::wss_extrema_par(self.profile, &self.active.grad, &self.active.flags, self.threads)
     }
 
     /// LIBSVM's shrink rule on the compacted arrays: drop bound-pinned
@@ -451,7 +478,7 @@ impl<'a> Engine<'a> {
         if keep.len() < 2 || keep.len() == na {
             return;
         }
-        self.active.retain(&keep, self.data);
+        self.active.retain(&keep, self.data, self.profile);
         self.tiles.compact(&keep);
         self.tiles.purge_missing(&self.active.idx);
         self.tiles.set_capacity(self.params.tile_capacity(keep.len()));
@@ -495,7 +522,7 @@ impl<'a> Engine<'a> {
             }
         } else {
             let pn: Vec<f64> = sv.iter().map(|&s| self.norms[s]).collect();
-            let panel = self.data.pack_panel(&sv);
+            let panel = self.data.pack_panel(&sv, self.profile);
             let mut tile = vec![0.0f64; inactive.len() * sv.len()];
             self.data.gram_block(
                 &self.params.kernel,
@@ -504,6 +531,7 @@ impl<'a> Engine<'a> {
                 &pn,
                 &panel,
                 &mut tile,
+                self.profile,
                 self.threads,
             );
             self.stats.tile_rows += inactive.len() as u64;
@@ -515,8 +543,14 @@ impl<'a> Engine<'a> {
                 grad_full[t] = dot(row, &coef) - self.state.y[t];
             }
         }
-        self.active =
-            ActiveSet::full(self.data, self.norms, self.diag, grad_full, &self.state.flags);
+        self.active = ActiveSet::full(
+            self.data,
+            self.norms,
+            self.diag,
+            grad_full,
+            &self.state.flags,
+            self.profile,
+        );
         self.tiles.reset(n);
         self.tiles.set_capacity(self.params.tile_capacity(n));
         self.since_shrink = 0;
@@ -568,6 +602,7 @@ impl<'a> Engine<'a> {
             let gi = self.active.idx[li];
             let row_i = self.fetch_rows(&[li]).remove(0);
             let res = simd::wss_j_par(
+                self.profile,
                 &self.active.grad,
                 &self.active.flags,
                 SIGN_ANY,
@@ -595,8 +630,16 @@ impl<'a> Engine<'a> {
             self.active.flags[lj] = self.state.flags[gj];
             let row_j = self.fetch_rows(&[lj]).remove(0);
             // grad[s] += τ·(K_si − K_sj) — the label-free update,
-            // predicated 8-lane, parallel over disjoint chunks.
-            simd::update_grad_pair(&mut self.active.grad, &row_i, &row_j, tau_step, self.threads);
+            // predicated at the profile's lane width, parallel over
+            // disjoint chunks.
+            simd::update_grad_pair(
+                self.profile,
+                &mut self.active.grad,
+                &row_i,
+                &row_j,
+                tau_step,
+                self.threads,
+            );
             self.since_shrink += 1;
         }
     }
@@ -642,7 +685,7 @@ impl<'a> Engine<'a> {
             while inner < inner_max && self.stats.iterations < self.params.max_iter {
                 inner += 1;
                 self.stats.iterations += 1;
-                let exi = simd::extrema_range(&sub_grad, &sub_flags, 0, ws.len());
+                let exi = simd::extrema_range(self.profile, &sub_grad, &sub_flags, 0, ws.len());
                 let Some(wi) = exi.bi else { break };
                 let li = ws[wi];
                 let gi = self.active.idx[li];
@@ -652,6 +695,7 @@ impl<'a> Engine<'a> {
                     ki_sub[l] = rows[wi][wl];
                 }
                 let res = simd::wss_j_par(
+                    self.profile,
                     &sub_grad,
                     &sub_flags,
                     SIGN_ANY,
@@ -869,12 +913,14 @@ impl SvmParams {
             let norms = data.row_norms();
             let diag = self.kernel.diag_from_norms(&norms);
             let threads = ctx.threads();
+            let profile = ctx.lane_profile();
             let meter = ctx.budget().meter();
-            let mut engine = Engine::new(self, data, &norms, &diag, y, vectorized, threads, meter);
+            let mut engine =
+                Engine::new(self, data, &norms, &diag, y, vectorized, profile, threads, meter);
             engine.solve();
             // Bias: midpoint of the optimality interval, over the full
             // (post-reconstruction) gradient.
-            let ex = simd::extrema_range(&engine.active.grad, &engine.active.flags, 0, n);
+            let ex = simd::extrema_range(profile, &engine.active.grad, &engine.active.flags, 0, n);
             let bias = -(ex.gmin + ex.gmax2) / 2.0;
             // Extract support vectors (densified for CSR training data —
             // the support set is small and inference consumes dense rows).
@@ -886,8 +932,9 @@ impl SvmParams {
             };
             let dual_coef: Vec<f64> =
                 sv_idx.iter().map(|&t| state.alpha[t] * state.y[t]).collect();
-            // Pack the support panel once; inference borrows it.
-            let panel = ModelPanel::from_dense_table(&support_vectors, threads);
+            // Pack the support panel once; inference borrows it (and
+            // inherits the training profile through the panel).
+            let panel = ModelPanel::from_dense_table_profile(&support_vectors, profile, threads);
             Ok(SvcModel {
                 support_vectors,
                 support_idx: sv_idx,
@@ -947,11 +994,12 @@ impl SvcModel {
     /// re-reduces nothing per call) — one threaded CSR multiply per
     /// tile for linear, the shared [`distances::rbf_gram_csr`] (csrmm
     /// + the fused `exp(−γ·d²)` transform) for RBF — then one
-    /// dual-coef dot per row. Query rows stream in fixed 256-row tiles
-    /// so the kernel-block scratch stays `O(TILE·nsv)` whatever the
-    /// query count (the dense path streams per row the same way). Tile
-    /// boundaries are input-keyed and every stage is bit-identical at
-    /// any worker count, so scores are bit-stable across
+    /// dual-coef dot per row. Query rows stream in `tile()`-row tiles
+    /// (derived from the panel's lane profile, 256 at the default
+    /// sve512) so the kernel-block scratch stays `O(tile·nsv)` whatever
+    /// the query count (the dense path streams per row the same way).
+    /// Tile boundaries are input-keyed and every stage is bit-identical
+    /// at any worker count, so scores are bit-stable across
     /// `Context::threads()` settings.
     fn decision_csr(&self, ctx: &Context, q: &CsrMatrix<f64>) -> Result<Vec<f64>> {
         let m = q.rows();
@@ -969,9 +1017,9 @@ impl SvcModel {
             SvmKernel::Linear => Vec::new(),
             SvmKernel::Rbf { .. } => distances::csr_row_norms(q, t),
         };
-        const TILE: usize = 256;
-        let mut cross = vec![0.0f64; TILE.min(m) * nsv];
-        for (start, len) in batch::tiles(m, TILE) {
+        let tile_rows = view.profile().tile();
+        let mut cross = vec![0.0f64; tile_rows.min(m) * nsv];
+        for (start, len) in batch::tiles(m, tile_rows) {
             let tile = q.slice_rows(start, start + len)?;
             let ctile = &mut cross[..len * nsv];
             match self.kernel {
@@ -981,7 +1029,16 @@ impl SvcModel {
                 }
                 SvmKernel::Rbf { gamma } => {
                     let wn = &qn[start..start + len];
-                    distances::rbf_gram_csr(&tile, wn, view.norms(), view.bt(), gamma, ctile, t);
+                    distances::rbf_gram_csr_profile(
+                        &tile,
+                        wn,
+                        view.norms(),
+                        view.bt(),
+                        gamma,
+                        ctile,
+                        view.profile(),
+                        t,
+                    );
                 }
             }
             for (i, f) in out[start..start + len].iter_mut().enumerate() {

@@ -13,11 +13,13 @@
 //!   a threshold guard, each a `continue` that defeats compiler
 //!   auto-vectorization;
 //! * [`wss_j_vectorized`] — Listing 2 restructured for masked lanes:
-//!   fixed-width blocks, every condition evaluated as a lane mask
+//!   const-generic `L`-wide blocks (instantiated at the active
+//!   [`crate::primitives::lanes::LaneProfile`]'s `wss_lanes()` width
+//!   by the dispatch layer), every condition evaluated as a lane mask
 //!   (the Pallas/SVE predicate analogue), arithmetic executed
 //!   unconditionally on all lanes with neutral values (−∞) for dead
 //!   lanes, then a block-local reduction with first-index tie-breaking
-//!   to preserve the scalar loop's semantics exactly.
+//!   to preserve the scalar loop's semantics exactly — at every `L`.
 
 use std::cmp::Ordering;
 
@@ -184,19 +186,20 @@ where
     items.sort_unstable_by(|&a, &b| cmp(a, b));
 }
 
-/// Lane width of the vectorized scan — the stand-in for SVE's runtime
-/// vector length (a 512-bit SVE implementation holds 8 f64 lanes; we use
-/// 16 to give the autovectorizer two registers of headroom).
-pub const WSS_LANES: usize = 16;
+// The scan width is no longer a module constant: `L` is a const
+// generic, bound by the dispatch layer to the active profile's
+// `wss_lanes()` (two vectors of autovectorizer headroom per profile —
+// see `crate::primitives::lanes`).
 
-/// Paper Listing 2: branch-free masked `WSSj`.
+/// Paper Listing 2: branch-free masked `WSSj`, `L` lanes per block.
 ///
 /// All guards become one boolean mask per lane; arithmetic runs on every
 /// lane with dead lanes forced to the neutral element; the final
 /// reduction scans each block in index order so ties resolve exactly as
-/// in the scalar loop (strict `>` keeps the earliest maximizer).
+/// in the scalar loop (strict `>` keeps the earliest maximizer) — the
+/// result is therefore independent of `L`.
 #[allow(clippy::too_many_arguments)]
-pub fn wss_j_vectorized(
+pub fn wss_j_vectorized<const L: usize>(
     grad: &[f64],
     flags: &[u8],
     sign: u8,
@@ -214,12 +217,12 @@ pub fn wss_j_vectorized(
     let mut bj: Option<usize> = None;
     let mut delta = 0.0f64;
 
-    let mut obj_lane = [f64::NEG_INFINITY; WSS_LANES];
-    let mut dt_lane = [0.0f64; WSS_LANES];
+    let mut obj_lane = [f64::NEG_INFINITY; L];
+    let mut dt_lane = [0.0f64; L];
 
     let mut base = j_start;
     while base < j_end {
-        let len = WSS_LANES.min(j_end - base);
+        let len = L.min(j_end - base);
         // --- predicated block body (every lane, no branches) ---
         let mut block_gmax2 = f64::NEG_INFINITY;
         for l in 0..len {
@@ -259,7 +262,11 @@ pub fn wss_j_vectorized(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::primitives::lanes::LaneProfile;
     use crate::rng::{Distribution, Engine, Gaussian, Mt19937, Uniform};
+
+    /// The widest profile's scan width — the pre-profile default.
+    const WL: usize = LaneProfile::Sve512.wss_lanes();
 
     /// Random-but-valid WSS inputs.
     fn random_case(seed: u32, n: usize) -> (Vec<f64>, Vec<u8>, f64, f64, Vec<f64>, Vec<f64>) {
@@ -289,18 +296,25 @@ mod tests {
     #[test]
     fn vectorized_matches_scalar_bitwise() {
         // The paper's key validation claim: the SVE loop is bitwise
-        // identical to the scalar one. Sweep sizes covering full blocks,
-        // ragged tails and sub-block inputs.
+        // identical to the scalar one — at every profile's scan width.
+        // Sweep sizes covering full blocks, ragged tails and sub-block
+        // inputs.
         let cases = [(1u32, 1usize), (2, 7), (3, 16), (4, 17), (5, 100), (6, 1024), (7, 1023)];
-        for (seed, n) in cases {
-            let (grad, flags, gmin, kii, diag, ki) = random_case(seed, n);
-            let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
-            let v =
-                wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
-            assert_eq!(s.bj, v.bj, "n={n}");
-            assert_eq!(s.obj.to_bits(), v.obj.to_bits(), "n={n}");
-            assert_eq!(s.gmax2.to_bits(), v.gmax2.to_bits(), "n={n}");
-            assert_eq!(s.delta.to_bits(), v.delta.to_bits(), "n={n}");
+        for profile in LaneProfile::ALL {
+            for (seed, n) in cases {
+                let (grad, flags, gmin, kii, diag, ki) = random_case(seed, n);
+                let s =
+                    wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
+                let v = crate::with_lane_count!(profile, L, {
+                    wss_j_vectorized::<{ 2 * L }>(
+                        &grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12,
+                    )
+                });
+                assert_eq!(s.bj, v.bj, "{} n={n}", profile.name());
+                assert_eq!(s.obj.to_bits(), v.obj.to_bits(), "{} n={n}", profile.name());
+                assert_eq!(s.gmax2.to_bits(), v.gmax2.to_bits(), "{} n={n}", profile.name());
+                assert_eq!(s.delta.to_bits(), v.delta.to_bits(), "{} n={n}", profile.name());
+            }
         }
     }
 
@@ -311,7 +325,8 @@ mod tests {
         let (j0, j1) = (37, 161);
         let kb = &ki[j0..j1];
         let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, kb, j0, j1, 1e-12);
-        let v = wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, kb, j0, j1, 1e-12);
+        let v =
+            wss_j_vectorized::<WL>(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, kb, j0, j1, 1e-12);
         assert_eq!(s, v);
         if let Some(bj) = s.bj {
             assert!((j0..j1).contains(&bj));
@@ -362,7 +377,8 @@ mod tests {
         let diag = vec![2.0; 2];
         let ki = vec![0.0; 2];
         let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, 0.0, 1.0, &diag, &ki, 0, 2, 1e-12);
-        let v = wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, 0.0, 1.0, &diag, &ki, 0, 2, 1e-12);
+        let v =
+            wss_j_vectorized::<WL>(&grad, &flags, SIGN_ANY, LOW, 0.0, 1.0, &diag, &ki, 0, 2, 1e-12);
         assert_eq!(s.bj, Some(0));
         assert_eq!(v.bj, Some(0));
     }
@@ -421,8 +437,9 @@ mod tests {
             let n = 1 + (meta.next_u32() % 600) as usize;
             let (grad, flags, gmin, kii, diag, ki) = random_case(1000 + trial, n);
             let s = wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
-            let v =
-                wss_j_vectorized(&grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12);
+            let v = wss_j_vectorized::<WL>(
+                &grad, &flags, SIGN_ANY, LOW, gmin, kii, &diag, &ki, 0, n, 1e-12,
+            );
             assert_eq!(s, v, "trial={trial} n={n}");
         }
     }

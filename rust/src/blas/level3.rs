@@ -18,9 +18,25 @@
 //!    workers by [`crate::parallel`]; cuts land only on `MR` boundaries,
 //!    so every tile is computed whole by one worker and the result is
 //!    bit-identical at any worker count.
+//!
+//! The panel geometry is vector-length-agnostic: `NR` (one vector of
+//! output columns) and `KC` (the k-block keeping a `KC×NR` B-panel
+//! slice resident) come from the active
+//! [`LaneProfile`](crate::primitives::lanes::LaneProfile) — `NR = lanes`
+//! and `KC = 2048/NR`, so the B-panel footprint is constant across
+//! profiles and the `sve512` default reproduces the historical
+//! `NR=8/KC=256` engine bit-for-bit. The microkernel monomorphizes per
+//! profile (`const NR`) and is selected once per entry call via
+//! [`crate::with_lane_count!`], never per element. `MR` (the A-side
+//! unroll) is profile-independent. Because every C element accumulates
+//! its own dot product in ascending-`k` order regardless of which
+//! `MR×NR` tile covers it, gemm/syrk values are bit-identical **across
+//! profiles** whenever `k` fits one KC block, and agree to roundoff
+//! (the naive rung is the oracle) when KC regroups the k sweep.
 
 use crate::dtype::Float;
 use crate::parallel;
+use crate::primitives::lanes::{default_profile, LaneProfile};
 
 /// Operation applied to an operand, mirroring the `op(A)` of the paper's
 /// sparse-routine definitions (§IV-B): identity or transpose.
@@ -64,19 +80,19 @@ pub fn gemm_naive<T: Float>(
     }
 }
 
-/// Micro-panel height: rows of `op(A)` / C per register tile.
-pub(crate) const MR: usize = 4;
-/// Micro-panel width: columns of `op(B)` / C per register tile.
-pub(crate) const NR: usize = 8;
-/// k-dimension block of the panel sweep. Full-`k` panels stop being
-/// L2-resident past ~2K, so the compute loops walk `k` in `KC`-sized
-/// blocks: within a block the `KC×NR` B-panel slice stays hot while the
-/// worker's `KC×MR` A-panel slices stream through it. Each C tile
-/// accumulates its α-scaled block partials in ascending-`k` order, so
-/// the k-blocking is identical at every worker count (bit-identity is
-/// preserved) and a single block (`k ≤ KC`) reproduces the unblocked
-/// sweep exactly.
-pub(crate) const KC: usize = 256;
+/// Micro-panel height: rows of `op(A)` / C per register tile —
+/// re-exported from the lane-profile layer (profile-independent).
+pub(crate) use crate::primitives::lanes::MR;
+// Micro-panel width NR (columns of `op(B)` / C per register tile, one
+// vector's worth) and the k-dimension block KC of the panel sweep both
+// come from the active `LaneProfile`: full-`k` panels stop being
+// L2-resident past ~2K values, so the compute loops walk `k` in
+// `KC = 2048/NR`-sized blocks; within a block the `KC×NR` B-panel slice
+// stays hot while the worker's `KC×MR` A-panel slices stream through
+// it. Each C tile accumulates its α-scaled block partials in
+// ascending-`k` order, so the k-blocking is identical at every worker
+// count (bit-identity is preserved) and a single block (`k ≤ KC`)
+// reproduces the unblocked sweep exactly.
 /// Minimum multiply-adds per worker before fan-out pays for itself.
 const PAR_MIN_FLOP: usize = 1 << 16;
 
@@ -117,21 +133,23 @@ fn pack_a<T: Float>(ta: Transpose, m: usize, k: usize, a: &[T]) -> Vec<T> {
     out
 }
 
-/// Pack `op(B)` (`k×n`) into `⌈n/NR⌉` micro-panels of `k×NR` scalars
-/// (`dst[l·NR + jj]`), zero-padded in the column direction.
-fn pack_b<T: Float>(tb: Transpose, k: usize, n: usize, b: &[T]) -> Vec<T> {
-    let panels = n.div_ceil(NR);
-    let mut out = vec![T::ZERO; panels * k * NR];
+/// Pack `op(B)` (`k×n`) into `⌈n/nr⌉` micro-panels of `k×nr` scalars
+/// (`dst[l·nr + jj]`), zero-padded in the column direction. `nr` is the
+/// active profile's micro-panel width; packing is data movement only,
+/// so a runtime width costs nothing over a const one.
+fn pack_b<T: Float>(tb: Transpose, k: usize, n: usize, b: &[T], nr_w: usize) -> Vec<T> {
+    let panels = n.div_ceil(nr_w);
+    let mut out = vec![T::ZERO; panels * k * nr_w];
     for jp in 0..panels {
-        let j0 = jp * NR;
-        let nr = NR.min(n - j0);
-        let dst = &mut out[jp * k * NR..(jp + 1) * k * NR];
+        let j0 = jp * nr_w;
+        let nr = nr_w.min(n - j0);
+        let dst = &mut out[jp * k * nr_w..(jp + 1) * k * nr_w];
         match tb {
             Transpose::No => {
                 for l in 0..k {
                     let src = &b[l * n + j0..l * n + j0 + nr];
                     for (jj, &v) in src.iter().enumerate() {
-                        dst[l * NR + jj] = v;
+                        dst[l * nr_w + jj] = v;
                     }
                 }
             }
@@ -140,7 +158,7 @@ fn pack_b<T: Float>(tb: Transpose, k: usize, n: usize, b: &[T]) -> Vec<T> {
                 for jj in 0..nr {
                     let col = &b[(j0 + jj) * k..(j0 + jj + 1) * k];
                     for (l, &v) in col.iter().enumerate() {
-                        dst[l * NR + jj] = v;
+                        dst[l * nr_w + jj] = v;
                     }
                 }
             }
@@ -149,11 +167,14 @@ fn pack_b<T: Float>(tb: Transpose, k: usize, n: usize, b: &[T]) -> Vec<T> {
     out
 }
 
-/// The `MR×NR` register tile: 32 independent accumulators march down
-/// `k` with `mul_add` on two unit-stride panel streams — no branches,
-/// no writes until the caller stores the tile.
+/// The `MR×NR` register tile: `MR·NR` independent accumulators march
+/// down `k` with `mul_add` on two unit-stride panel streams — no
+/// branches, no writes until the caller stores the tile. `NR` is a
+/// const generic so each lane profile gets its own fully-unrolled
+/// monomorphization (2/4/8 columns ≙ one SVE vector at 128/256/512
+/// bits), selected once per entry call by [`crate::with_lane_count!`].
 #[inline]
-fn microkernel<T: Float>(k: usize, apanel: &[T], bpanel: &[T]) -> [[T; NR]; MR] {
+fn microkernel<T: Float, const NR: usize>(k: usize, apanel: &[T], bpanel: &[T]) -> [[T; NR]; MR] {
     let mut acc = [[T::ZERO; NR]; MR];
     for l in 0..k {
         let av = &apanel[l * MR..l * MR + MR];
@@ -181,6 +202,7 @@ pub struct PackedB<T> {
     panels: Vec<T>,
     k: usize,
     n: usize,
+    profile: LaneProfile,
 }
 
 impl<T: Float> PackedB<T> {
@@ -193,12 +215,35 @@ impl<T: Float> PackedB<T> {
     pub fn n(&self) -> usize {
         self.n
     }
+
+    /// Lane profile the panels were packed under. The packed layout is
+    /// profile-specific (`NR = lanes` columns per micro-panel), so
+    /// consumers ([`gemm_prepacked_threads`], the distances engine)
+    /// read the geometry from the panel itself — a panel can never be
+    /// swept at the wrong width.
+    pub fn profile(&self) -> LaneProfile {
+        self.profile
+    }
 }
 
 /// Pack `op(B)` (`k×n`) once into the micro-panel layout for reuse
-/// across [`gemm_prepacked_threads`] calls.
+/// across [`gemm_prepacked_threads`] calls, under the process-default
+/// lane profile.
 pub fn pack_b_panels<T: Float>(tb: Transpose, k: usize, n: usize, b: &[T]) -> PackedB<T> {
-    PackedB { panels: pack_b(tb, k, n, b), k, n }
+    pack_b_panels_profile(tb, k, n, b, default_profile())
+}
+
+/// [`pack_b_panels`] under an explicit [`LaneProfile`] — the entry the
+/// `Context`-aware layers use so builder-selected profiles reach the
+/// packed layout.
+pub fn pack_b_panels_profile<T: Float>(
+    tb: Transpose,
+    k: usize,
+    n: usize,
+    b: &[T],
+    profile: LaneProfile,
+) -> PackedB<T> {
+    PackedB { panels: pack_b(tb, k, n, b, profile.nr()), k, n, profile }
 }
 
 /// The KC-blocked panel sweep shared by every gemm entry point: compute
@@ -207,12 +252,15 @@ pub fn pack_b_panels<T: Float>(tb: Transpose, k: usize, n: usize, b: &[T]) -> Pa
 /// the worker's A-panel slices stream through it. Each C tile
 /// accumulates its α-scaled block partials in ascending-`k` order, so
 /// the result is bit-identical at every worker count and to the
-/// unblocked sweep when `k ≤ KC`.
+/// unblocked sweep when `k ≤ KC`. `NR` is the profile's lane count
+/// (const-generic, so each profile's sweep is a separate fully-unrolled
+/// monomorphization); `kc` must be the same profile's k-block.
 #[allow(clippy::too_many_arguments)]
-fn panel_sweep<T: Float>(
+fn panel_sweep<T: Float, const NR: usize>(
     m: usize,
     n: usize,
     k: usize,
+    kc: usize,
     alpha: T,
     ap: &[T],
     bp: &[T],
@@ -225,7 +273,7 @@ fn panel_sweep<T: Float>(
     let p1 = r1.div_ceil(MR);
     let mut l0 = 0usize;
     while l0 < k {
-        let lb = KC.min(k - l0);
+        let lb = kc.min(k - l0);
         for jp in 0..npanels {
             let j0 = jp * NR;
             let nr = NR.min(n - j0);
@@ -234,7 +282,7 @@ fn panel_sweep<T: Float>(
                 let i0 = ip * MR;
                 let mr = MR.min(m - i0);
                 let apanel = &ap[ip * k * MR + l0 * MR..ip * k * MR + (l0 + lb) * MR];
-                let acc = microkernel(lb, apanel, bpanel);
+                let acc = microkernel::<T, NR>(lb, apanel, bpanel);
                 for ii in 0..mr {
                     let at = (i0 - r0 + ii) * n + j0;
                     let row = &mut block[at..at + nr];
@@ -249,7 +297,8 @@ fn panel_sweep<T: Float>(
 }
 
 /// `C ← α·op(A)·op(B) + β·C` with an explicit worker count — the entry
-/// the algorithm layer routes `Context::threads()` into.
+/// the algorithm layer routes `Context::threads()` into. Runs under the
+/// process-default lane profile; see [`gemm_threads_profile`].
 ///
 /// op(A) is `m×k`, op(B) is `k×n`, C is `m×n`, all row-major.
 #[allow(clippy::too_many_arguments)]
@@ -266,19 +315,43 @@ pub fn gemm_threads<T: Float>(
     c: &mut [T],
     threads: usize,
 ) {
+    gemm_threads_profile(ta, tb, m, n, k, alpha, a, b, beta, c, threads, default_profile());
+}
+
+/// [`gemm_threads`] under an explicit [`LaneProfile`]: the profile
+/// fixes `NR`/`KC`, the dispatch happens here (once per call, not per
+/// element) via [`crate::with_lane_count!`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_threads_profile<T: Float>(
+    ta: Transpose,
+    tb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    b: &[T],
+    beta: T,
+    c: &mut [T],
+    threads: usize,
+    profile: LaneProfile,
+) {
     debug_assert_eq!(c.len(), m * n);
     scale_c(beta, c);
     if m == 0 || n == 0 || k == 0 {
         return;
     }
     let ap = pack_a(ta, m, k, a);
-    let bp = pack_b(tb, k, n, b);
+    let bp = pack_b(tb, k, n, b, profile.nr());
+    let kc = profile.kc();
     let work = m.saturating_mul(n).saturating_mul(k);
     let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
     let bounds = parallel::aligned_bounds(m, workers, MR);
     let (ap, bp) = (&ap, &bp);
     parallel::scope_rows(c, n, &bounds, |r0, r1, block| {
-        panel_sweep(m, n, k, alpha, ap, bp, r0, r1, block);
+        crate::with_lane_count!(profile, L, {
+            panel_sweep::<T, L>(m, n, k, kc, alpha, ap, bp, r0, r1, block);
+        });
     });
 }
 
@@ -311,13 +384,19 @@ pub fn gemm_prepacked_threads<T: Float>(
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    // The packed layout fixes the geometry: sweep at the profile the
+    // panels were packed under, whatever the process default is now.
+    let profile = bp.profile;
+    let kc = profile.kc();
     let ap = pack_a(ta, m, k, a);
     let work = m.saturating_mul(n).saturating_mul(k);
     let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
     let bounds = parallel::aligned_bounds(m, workers, MR);
     let (ap, bpanels) = (&ap, bp.panels.as_slice());
     parallel::scope_rows(c, n, &bounds, |r0, r1, block| {
-        panel_sweep(m, n, k, alpha, ap, bpanels, r0, r1, block);
+        crate::with_lane_count!(profile, L, {
+            panel_sweep::<T, L>(m, n, k, kc, alpha, ap, bpanels, r0, r1, block);
+        });
     });
 }
 
@@ -357,6 +436,66 @@ pub fn syrk_threads<T: Float>(
     c: &mut [T],
     threads: usize,
 ) {
+    syrk_threads_profile(m, k, alpha, a, beta, c, threads, default_profile());
+}
+
+/// Upper-triangle panel sweep of one worker's row range — the syrk
+/// counterpart of [`panel_sweep`], monomorphized per lane profile.
+#[allow(clippy::too_many_arguments)]
+fn syrk_sweep<T: Float, const NR: usize>(
+    m: usize,
+    k: usize,
+    kc: usize,
+    alpha: T,
+    ap: &[T],
+    bp: &[T],
+    r0: usize,
+    r1: usize,
+    block: &mut [T],
+) {
+    let npanels = m.div_ceil(NR);
+    let p0 = r0 / MR;
+    let p1 = r1.div_ceil(MR);
+    // Same KC-blocked k sweep as the GEMM engine.
+    let mut l0 = 0usize;
+    while l0 < k {
+        let lb = kc.min(k - l0);
+        for ip in p0..p1 {
+            let i0 = ip * MR;
+            let mr = MR.min(m - i0);
+            let apanel = &ap[ip * k * MR + l0 * MR..ip * k * MR + (l0 + lb) * MR];
+            // First column panel that can reach j ≥ i0: its column range
+            // [j0, j0+NR) always straddles i0 when j0 = ⌊i0/NR⌋·NR.
+            for jp in i0 / NR..npanels {
+                let j0 = jp * NR;
+                let nr = NR.min(m - j0);
+                let bpanel = &bp[jp * k * NR + l0 * NR..jp * k * NR + (l0 + lb) * NR];
+                let acc = microkernel::<T, NR>(lb, apanel, bpanel);
+                for ii in 0..mr {
+                    let i = i0 + ii;
+                    let row = &mut block[(i - r0) * m..(i - r0 + 1) * m];
+                    for j in j0.max(i)..j0 + nr {
+                        row[j] = alpha.mul_add(acc[ii][j - j0], row[j]);
+                    }
+                }
+            }
+        }
+        l0 += lb;
+    }
+}
+
+/// [`syrk_threads`] under an explicit [`LaneProfile`].
+#[allow(clippy::too_many_arguments)]
+pub fn syrk_threads_profile<T: Float>(
+    m: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    beta: T,
+    c: &mut [T],
+    threads: usize,
+    profile: LaneProfile,
+) {
     debug_assert_eq!(c.len(), m * m);
     scale_c(beta, c);
     if m == 0 || k == 0 {
@@ -365,41 +504,16 @@ pub fn syrk_threads<T: Float>(
     let ap = pack_a(Transpose::No, m, k, a);
     // Aᵀ is k×m stored as the m×k buffer — exactly the Transpose::Yes
     // packing of a k×m operand.
-    let bp = pack_b(Transpose::Yes, k, m, a);
-    let npanels = m.div_ceil(NR);
+    let bp = pack_b(Transpose::Yes, k, m, a, profile.nr());
+    let kc = profile.kc();
     let work = m.saturating_mul(m).saturating_mul(k) / 2 + 1;
     let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
     let bounds = parallel::triangle_bounds(m, workers, MR);
     let (ap, bp) = (&ap, &bp);
     parallel::scope_rows(c, m, &bounds, |r0, r1, block| {
-        let p0 = r0 / MR;
-        let p1 = r1.div_ceil(MR);
-        // Same KC-blocked k sweep as the GEMM engine (see [`KC`]).
-        let mut l0 = 0usize;
-        while l0 < k {
-            let lb = KC.min(k - l0);
-            for ip in p0..p1 {
-                let i0 = ip * MR;
-                let mr = MR.min(m - i0);
-                let apanel = &ap[ip * k * MR + l0 * MR..ip * k * MR + (l0 + lb) * MR];
-                // First column panel that can reach j ≥ i0: its column range
-                // [j0, j0+NR) always straddles i0 when j0 = ⌊i0/NR⌋·NR.
-                for jp in i0 / NR..npanels {
-                    let j0 = jp * NR;
-                    let nr = NR.min(m - j0);
-                    let bpanel = &bp[jp * k * NR + l0 * NR..jp * k * NR + (l0 + lb) * NR];
-                    let acc = microkernel(lb, apanel, bpanel);
-                    for ii in 0..mr {
-                        let i = i0 + ii;
-                        let row = &mut block[(i - r0) * m..(i - r0 + 1) * m];
-                        for j in j0.max(i)..j0 + nr {
-                            row[j] = alpha.mul_add(acc[ii][j - j0], row[j]);
-                        }
-                    }
-                }
-            }
-            l0 += lb;
-        }
+        crate::with_lane_count!(profile, L, {
+            syrk_sweep::<T, L>(m, k, kc, alpha, ap, bp, r0, r1, block);
+        });
     });
     // Mirror the upper triangle into the lower once.
     for i in 0..m {
@@ -650,6 +764,122 @@ mod tests {
         let mut c = [10.0f64];
         gemm(Transpose::No, Transpose::No, 1, 1, 1, 1.0, &a, &b, 1.0, &mut c);
         assert_eq!(c[0], 16.0);
+    }
+
+    /// Every lane profile must agree with the naive oracle and stay
+    /// bit-identical across worker counts; the shapes put fringe
+    /// columns at every width and straddle each profile's KC edge
+    /// (1024/512/256).
+    #[test]
+    fn all_profiles_match_naive_and_stay_thread_invariant() {
+        let mut e = Mt19937::new(101);
+        for &(m, n, k) in &[(5usize, 3usize, 9usize), (17, 13, 300), (9, 7, 1030)] {
+            let a = rand_mat(&mut e, m * k);
+            let b = rand_mat(&mut e, k * n);
+            let c0 = rand_mat(&mut e, m * n);
+            let mut oracle = c0.clone();
+            gemm_naive(Transpose::No, Transpose::No, m, n, k, 1.2, &a, &b, 0.3, &mut oracle);
+            for p in LaneProfile::ALL {
+                let mut base = c0.clone();
+                gemm_threads_profile(
+                    Transpose::No,
+                    Transpose::No,
+                    m,
+                    n,
+                    k,
+                    1.2,
+                    &a,
+                    &b,
+                    0.3,
+                    &mut base,
+                    1,
+                    p,
+                );
+                for (u, v) in oracle.iter().zip(&base) {
+                    assert!((u - v).abs() < 1e-9, "{} m={m} n={n} k={k}", p.name());
+                }
+                for threads in 2..=4 {
+                    let mut c = c0.clone();
+                    gemm_threads_profile(
+                        Transpose::No,
+                        Transpose::No,
+                        m,
+                        n,
+                        k,
+                        1.2,
+                        &a,
+                        &b,
+                        0.3,
+                        &mut c,
+                        threads,
+                        p,
+                    );
+                    for (u, v) in base.iter().zip(&c) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{} threads={threads}", p.name());
+                    }
+                }
+            }
+        }
+    }
+
+    /// A `PackedB` carries its packing profile and the prepacked sweep
+    /// reads the geometry from the panel, so mixed-profile processes
+    /// can never sweep a panel at the wrong width.
+    #[test]
+    fn prepacked_profile_flows_from_the_panel() {
+        let mut e = Mt19937::new(103);
+        let (m, n, k) = (13usize, 11usize, 37usize);
+        let a = rand_mat(&mut e, m * k);
+        let b = rand_mat(&mut e, k * n);
+        assert_eq!(pack_b_panels(Transpose::No, k, n, &b).profile(), default_profile());
+        for p in LaneProfile::ALL {
+            let packed = pack_b_panels_profile(Transpose::No, k, n, &b, p);
+            assert_eq!(packed.profile(), p);
+            let mut c1 = vec![0.0f64; m * n];
+            gemm_threads_profile(
+                Transpose::No,
+                Transpose::No,
+                m,
+                n,
+                k,
+                1.0,
+                &a,
+                &b,
+                0.0,
+                &mut c1,
+                2,
+                p,
+            );
+            let mut c2 = vec![0.0f64; m * n];
+            gemm_prepacked_threads(Transpose::No, m, 1.0, &a, &packed, 0.0, &mut c2, 2);
+            for (u, v) in c1.iter().zip(&c2) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_profiles_match_oracle_and_stay_thread_invariant() {
+        let mut e = Mt19937::new(107);
+        for &(m, k) in &[(7usize, 3usize), (21, 300), (9, 1030)] {
+            let a = rand_mat(&mut e, m * k);
+            let mut oracle = vec![0.0f64; m * m];
+            gemm_naive(Transpose::No, Transpose::Yes, m, m, k, 1.4, &a, &a, 0.0, &mut oracle);
+            for p in LaneProfile::ALL {
+                let mut base = vec![0.0f64; m * m];
+                syrk_threads_profile(m, k, 1.4, &a, 0.0, &mut base, 1, p);
+                for (u, v) in oracle.iter().zip(&base) {
+                    assert!((u - v).abs() < 1e-9, "{} m={m} k={k}", p.name());
+                }
+                for threads in 2..=4 {
+                    let mut c = vec![0.0f64; m * m];
+                    syrk_threads_profile(m, k, 1.4, &a, 0.0, &mut c, threads, p);
+                    for (u, v) in base.iter().zip(&c) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{} threads={threads}", p.name());
+                    }
+                }
+            }
+        }
     }
 
     #[test]

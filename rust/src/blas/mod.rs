@@ -54,8 +54,8 @@ pub(crate) fn beta_scale<T: Float>(beta: T, out: &mut [T]) {
 pub use level1::{axpy, dot, nrm2, scal, sqdist};
 pub use level2::{gemv, gemv_threads, ger};
 pub use level3::{
-    gemm, gemm_naive, gemm_prepacked_threads, gemm_threads, pack_b_panels, syrk, syrk_threads,
-    PackedB, Transpose,
+    gemm, gemm_naive, gemm_prepacked_threads, gemm_threads, gemm_threads_profile, pack_b_panels,
+    pack_b_panels_profile, syrk, syrk_threads, syrk_threads_profile, PackedB, Transpose,
 };
 
 #[cfg(test)]

@@ -22,6 +22,12 @@
 //! `Backend::Auto` resolves at context build time from artifact
 //! availability and the `ONEDAL_SVE_BACKEND` environment override,
 //! mirroring oneDAL's `daal::services::Environment::getCpuId` probe.
+//! The same variable also carries the **lane-profile** override
+//! (`sve128`/`sve256`/`sve512`, comma-separable with a rung token):
+//! profile tokens are consumed by [`crate::primitives::lanes`] — the
+//! single approved read site — and only the remaining tokens reach
+//! [`Backend::parse`] here. The resolved [`LaneProfile`] rides on the
+//! [`Context`] and is what every kernel's geometry derives from.
 //!
 //! On top of dispatch and batching sits the serving layer
 //! ([`serve`]): an [`InferenceSession`] coalesces many small query
@@ -49,6 +55,7 @@ pub use serve::{
 };
 
 use crate::error::{Error, Result};
+use crate::primitives::lanes::{self, LaneProfile};
 use crate::runtime::{ArtifactRegistry, PjRtRuntime};
 use std::sync::Arc;
 
@@ -94,6 +101,7 @@ pub struct Context {
     registry: ArtifactRegistry,
     threads: usize,
     budget: Budget,
+    lane_profile: LaneProfile,
 }
 
 /// Builder for [`Context`].
@@ -102,6 +110,7 @@ pub struct ContextBuilder {
     artifact_dir: String,
     threads: usize,
     budget: Budget,
+    lane_profile: Option<LaneProfile>,
 }
 
 impl Default for ContextBuilder {
@@ -111,6 +120,7 @@ impl Default for ContextBuilder {
             artifact_dir: "artifacts".into(),
             threads: crate::parallel::default_threads(),
             budget: Budget::UNLIMITED,
+            lane_profile: None,
         }
     }
 }
@@ -138,15 +148,28 @@ impl ContextBuilder {
         self
     }
 
+    /// Pin the SVE lane profile for this context, overriding the
+    /// process default (`ONEDAL_SVE_BACKEND` profile token, else
+    /// sve512). Cross-profile tests build contexts through this instead
+    /// of mutating process state.
+    pub fn lane_profile(mut self, p: LaneProfile) -> Self {
+        self.lane_profile = Some(p);
+        self
+    }
+
     /// Resolve the dispatch ladder and (for the artifact rung) create the
     /// PJRT runtime.
     pub fn build(self) -> Result<Context> {
         // Environment override — the "disable SVE" switch of the paper's
-        // conditional-compilation story, but at runtime.
+        // conditional-compilation story, but at runtime. The profile
+        // tokens of `ONEDAL_SVE_BACKEND` were consumed by the lanes
+        // probe (the one approved env read); only the leftover rung
+        // token, if any, is parsed here.
         let mut requested = self.backend;
-        if let Ok(env) = std::env::var("ONEDAL_SVE_BACKEND") {
+        if let Some(env) = lanes::env_backend_request() {
             requested = Backend::parse(&env)?;
         }
+        let lane_profile = self.lane_profile.unwrap_or_else(lanes::default_profile);
         let registry = ArtifactRegistry::load(&self.artifact_dir);
         let resolved = match requested {
             Backend::Auto => {
@@ -183,6 +206,7 @@ impl ContextBuilder {
             registry,
             threads: self.threads,
             budget: self.budget,
+            lane_profile,
         })
     }
 }
@@ -216,6 +240,15 @@ impl Context {
     /// Iterative trainers draw a fresh [`BudgetMeter`] per call.
     pub fn budget(&self) -> Budget {
         self.budget
+    }
+
+    /// The SVE lane profile every kernel reached through this context
+    /// runs at (lane widths, `MR×NR`/`KC` panel geometry, epilogue tile
+    /// rows all derive from it). Resolved once at build time: builder
+    /// override, else the process default
+    /// ([`crate::primitives::lanes::default_profile`]).
+    pub fn lane_profile(&self) -> LaneProfile {
+        self.lane_profile
     }
 
     /// PJRT runtime, present only on the artifact rung.
@@ -280,6 +313,26 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(ctx.dispatch("kmeans_assign", &[100, 10, 5]), Backend::Vectorized);
+    }
+
+    #[test]
+    fn lane_profile_defaults_and_overrides() {
+        // No builder override → the process default (sve512 unless the
+        // environment said otherwise before first resolution).
+        let ctx =
+            Context::builder().artifact_dir("/nonexistent").backend(Backend::Naive).build().unwrap();
+        assert_eq!(ctx.lane_profile(), lanes::default_profile());
+        // Explicit override wins without touching process state.
+        for p in LaneProfile::ALL {
+            let ctx = Context::builder()
+                .artifact_dir("/nonexistent")
+                .backend(Backend::Naive)
+                .lane_profile(p)
+                .build()
+                .unwrap();
+            assert_eq!(ctx.lane_profile(), p);
+            assert_eq!(lanes::default_profile(), lanes::default_profile());
+        }
     }
 
     #[test]

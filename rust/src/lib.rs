@@ -110,6 +110,26 @@
 //! ([`coordinator::QueuedSession`]) adds bounded-capacity admission
 //! with typed `Overloaded` shedding and `Cancelled` shutdown drains.
 //!
+//! ## Lane-profile kernel layer
+//!
+//! Every predicated kernel (argmin / top-k / ε-threshold / RBF
+//! epilogues, the SVM WSS scans) is written once over a const-generic
+//! lane count and monomorphized at the three SVE vector lengths —
+//! 128/256/512-bit — with the active
+//! [`primitives::lanes::LaneProfile`] resolved exactly once at
+//! [`coordinator::Context`] build time (builder override, else the
+//! `ONEDAL_SVE_BACKEND` profile token, else `sve512`). All derived
+//! geometry — the GEMM `MR × NR` microkernel and `KC` blocking, the
+//! distance-engine `TILE`, the WSS scan width — comes from the same
+//! profile, so the whole stack widens together; packed buffers record
+//! their packing profile and consumers derive the sweep width from the
+//! data. Within a profile results are bit-identical at any worker
+//! count; the default `sve512` is bit-identical to the pre-profile
+//! library; across profiles discrete outputs are identical and
+//! accumulated floats agree to documented tolerance. `docs/KERNELS.md`
+//! is the design note; `tests/lanes_property.rs` and the
+//! three-profile CI matrix enforce the contract.
+//!
 //! ## Machine-checked invariants
 //!
 //! The contracts above are enforced mechanically, not by convention —

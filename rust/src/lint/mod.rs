@@ -107,6 +107,31 @@ mod tests {
         );
     }
 
+    /// ISSUE 10 regression on the raw bytes: PAL-LANE cannot see the
+    /// quoted env name (the lexer blanks string literals), so this
+    /// asserts directly that the one `env::var("ONEDAL_SVE_BACKEND")`
+    /// read in the library lives in `primitives/lanes.rs` — the single
+    /// approved lane-profile/backend probe.
+    #[test]
+    fn sve_backend_env_read_confined_to_lanes_probe() {
+        let root = Path::new("src");
+        let mut files = Vec::new();
+        collect_rs_files(root, &mut files).expect("walk src/");
+        files.sort();
+        let mut readers = Vec::new();
+        for path in &files {
+            let source = std::fs::read_to_string(path).expect("read source");
+            if source.contains("env::var(\"ONEDAL_SVE_BACKEND\"") {
+                readers.push(rel_path(root, path));
+            }
+        }
+        assert_eq!(
+            readers,
+            ["primitives/lanes.rs"],
+            "ONEDAL_SVE_BACKEND must be read only by lanes::env_spec"
+        );
+    }
+
     #[test]
     fn tree_walk_is_deterministic() {
         let root = Path::new("src");

@@ -11,8 +11,9 @@
 //! | PAL-CLOCK  | unbudgeted runs never read the clock (PR 6): `Instant::now` / `SystemTime::now` only in `coordinator/budget.rs`, `profiling/`, and binary targets. |
 //! | PAL-HASH   | fixed-order merges: no iteration over `HashMap`/`HashSet` bindings in library code (key lookup is fine; traversal must go through sorted keys, an index `Vec`, or a `BTreeMap`). |
 //! | PAL-UNSAFE | every `unsafe` carries a `// SAFETY:` contract comment; `static mut` is banned outright. |
-//! | PAL-ENV    | `std::env::var` confined to the approved config sites (`parallel/`, `failpoint.rs`, `coordinator/`). |
+//! | PAL-ENV    | `std::env::var` confined to the approved config sites (`parallel/`, `failpoint.rs`, `coordinator/`, `primitives/lanes.rs`). |
 //! | PAL-QUAR   | panic quarantine (PR 6): every public algorithm entry point (`train`/`infer`/…) runs under `parallel::quarantine` or delegates to an entry point that does. |
+//! | PAL-LANE   | lane-profile confinement (PR 10): no literal lane-count/panel-geometry `const` (`LANES`/`NR`/`KC`/`TILE`/`WSS_LANES`/`MR`) and no `ONEDAL_SVE_BACKEND` token in library code outside `primitives/lanes.rs` — geometry derives from the active `LaneProfile`. |
 //! | PAL-META   | suppressions are themselves contracts: a malformed, reason-less, unknown-rule or *unused* `// palint: allow(..)` directive is a finding. |
 //!
 //! Scope conventions shared by the path-scoped rules: binary targets
@@ -41,17 +42,18 @@ pub struct Finding {
 
 /// Rule ids an allow-directive may name (PAL-META itself cannot be
 /// suppressed — the escape hatch must not have an escape hatch).
-pub const RULE_IDS: [&str; 6] =
-    ["PAL-ORD", "PAL-CLOCK", "PAL-HASH", "PAL-UNSAFE", "PAL-ENV", "PAL-QUAR"];
+pub const RULE_IDS: [&str; 7] =
+    ["PAL-ORD", "PAL-CLOCK", "PAL-HASH", "PAL-UNSAFE", "PAL-ENV", "PAL-QUAR", "PAL-LANE"];
 
 /// (id, one-line description) for `palint --list-rules`.
-pub const RULE_DESCRIPTIONS: [(&str, &str); 7] = [
+pub const RULE_DESCRIPTIONS: [(&str, &str); 8] = [
     ("PAL-ORD", "no partial_cmp in library code; float comparators sort under total_cmp"),
     ("PAL-CLOCK", "clock reads only in coordinator/budget.rs, profiling/ and binary targets"),
     ("PAL-HASH", "no iteration over HashMap/HashSet in library code (nondeterministic order)"),
     ("PAL-UNSAFE", "every `unsafe` needs a // SAFETY: contract comment; `static mut` is banned"),
-    ("PAL-ENV", "std::env::var confined to parallel/, failpoint.rs and coordinator/"),
+    ("PAL-ENV", "std::env::var confined to parallel/, failpoint.rs, coordinator/ and primitives/lanes.rs"),
     ("PAL-QUAR", "public algorithm entry points run under parallel::quarantine"),
+    ("PAL-LANE", "lane/panel geometry consts and ONEDAL_SVE_BACKEND only in primitives/lanes.rs"),
     ("PAL-META", "palint allow-directives must be well-formed, reasoned, and actually used"),
 ];
 
@@ -108,6 +110,7 @@ pub fn check_file(ctx: &FileCtx) -> Vec<Finding> {
     rule_unsafe(ctx, &mut findings);
     rule_env(ctx, &mut findings);
     rule_quar(ctx, &mut findings);
+    rule_lane(ctx, &mut findings);
     findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
     apply_allows(ctx, findings)
 }
@@ -404,10 +407,13 @@ fn has_safety_comment(scan: &FileScan, line0: usize) -> bool {
 
 /// PAL-ENV — configuration is read at the approved sites only
 /// (`parallel/` worker-count default, `failpoint.rs` registry,
-/// `coordinator/` backend/dispatch switches), so library behavior is a
-/// function of its arguments plus those documented switches.
+/// `coordinator/` backend/dispatch switches, `primitives/lanes.rs`
+/// lane-profile probe), so library behavior is a function of its
+/// arguments plus those documented switches.
 fn rule_env(ctx: &FileCtx, findings: &mut Vec<Finding>) {
-    if ctx.is_binary_target() || ctx.path_in(&["parallel/", "failpoint.rs", "coordinator/"]) {
+    if ctx.is_binary_target()
+        || ctx.path_in(&["parallel/", "failpoint.rs", "coordinator/", "primitives/lanes.rs"])
+    {
         return;
     }
     for (i, line) in ctx.scan.lines.iter().enumerate() {
@@ -425,7 +431,8 @@ fn rule_env(ctx: &FileCtx, findings: &mut Vec<Finding>) {
                     i,
                     format!(
                         "{tok} outside the approved config sites (parallel/, failpoint.rs, \
-                         coordinator/): thread configuration through Context instead"
+                         coordinator/, primitives/lanes.rs): thread configuration through \
+                         Context instead"
                     ),
                 );
             }
@@ -502,6 +509,74 @@ fn rule_quar(ctx: &FileCtx, findings: &mut Vec<Finding>) {
                      nor delegates to an entry point that does: panics from pool fan-outs \
                      would abort instead of surfacing as Error::Internal"
                 ),
+            );
+        }
+    }
+}
+
+/// Geometry constant names whose *literal* definition is confined to
+/// `primitives/lanes.rs` — the single source of lane widths and panel
+/// geometry (ISSUE 10). Everywhere else these values must derive from
+/// the active [`crate::primitives::lanes::LaneProfile`].
+const LANE_GEOMETRY_CONSTS: [&str; 6] = ["LANES", "NR", "KC", "TILE", "WSS_LANES", "MR"];
+
+/// PAL-LANE — the lane-profile confinement contract: library code
+/// neither hard-codes a lane-count/panel-geometry constant nor names
+/// the `ONEDAL_SVE_BACKEND` switch outside `primitives/lanes.rs`. A
+/// `const NR: usize = 8` that drifts out of the profile table would
+/// silently pin one width while the rest of the kernel follows the
+/// context's profile — exactly the two-copies drift this PR deduped.
+/// (The lexer blanks string literals, so the env-token check also
+/// catches a stray read reconstructed via a named constant.)
+fn rule_lane(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    if ctx.is_binary_target() || ctx.path_in(&["primitives/lanes.rs"]) {
+        return;
+    }
+    for (i, line) in ctx.scan.lines.iter().enumerate() {
+        if ctx.scan.in_test_region(i) {
+            break;
+        }
+        let code = &line.code;
+        for name in LANE_GEOMETRY_CONSTS {
+            for at in word_occurrences(code, name) {
+                if !code[..at].trim_end().ends_with("const") {
+                    continue;
+                }
+                // `const NAME: usize = <digits>` — a literal geometry
+                // definition outside the profile table. Derived forms
+                // (`= profile.nr()`, `= LaneProfile::Sve512.tile()`)
+                // stay legal.
+                let after = code[at + name.len()..].trim_start();
+                let Some(rest) = after.strip_prefix(':') else { continue };
+                let rest = rest.trim_start();
+                let Some(rest) = rest.strip_prefix("usize") else { continue };
+                let rest = rest.trim_start();
+                let Some(rest) = rest.strip_prefix('=') else { continue };
+                if rest.trim_start().starts_with(|c: char| c.is_ascii_digit()) {
+                    push(
+                        findings,
+                        ctx,
+                        "PAL-LANE",
+                        i,
+                        format!(
+                            "literal `const {name}: usize = …` outside primitives/lanes.rs: \
+                             lane counts and panel geometry derive from the active LaneProfile \
+                             (lanes()/nr()/kc()/tile()/wss_lanes())"
+                        ),
+                    );
+                }
+            }
+        }
+        if !word_occurrences(code, "ONEDAL_SVE_BACKEND").is_empty() {
+            push(
+                findings,
+                ctx,
+                "PAL-LANE",
+                i,
+                "ONEDAL_SVE_BACKEND named in library code outside primitives/lanes.rs: the \
+                 lane/backend switch has one approved probe (lanes::env_spec) — take the \
+                 profile from the Context instead"
+                    .to_string(),
             );
         }
     }
@@ -818,7 +893,75 @@ fn f(p: *const u8) -> u8 {
         assert!(run("parallel/mod.rs", src).is_empty());
         assert!(run("failpoint.rs", src).is_empty());
         assert!(run("coordinator/mod.rs", src).is_empty());
+        assert!(run("primitives/lanes.rs", src).is_empty());
         assert!(run("main.rs", src).is_empty());
+    }
+
+    // ---- PAL-LANE ---------------------------------------------------
+
+    #[test]
+    fn lane_fires_on_literal_geometry_const_outside_lanes() {
+        for decl in [
+            "pub const LANES: usize = 8;",
+            "const NR: usize = 8;",
+            "pub(crate) const KC: usize = 256;",
+            "const TILE: usize = 256;",
+            "const WSS_LANES: usize = 16;",
+            "pub const MR: usize = 4;",
+        ] {
+            let src = format!("{decl}\nfn f() {{}}\n");
+            let f = run("blas/level3.rs", &src);
+            assert_eq!(rules(&f), ["PAL-LANE"], "decl: {decl}");
+            assert_eq!(f[0].line, 1);
+        }
+    }
+
+    #[test]
+    fn lane_derived_consts_and_other_names_are_clean() {
+        // Derived from the profile table — the sanctioned form.
+        let derived = "const TILE: usize = LaneProfile::Sve512.tile();\nfn f() {}\n";
+        assert!(run("primitives/distances.rs", derived).is_empty());
+        // Unlisted names and non-usize types don't match.
+        assert!(run("x.rs", "const LANES_DOC: usize = 8;\nfn f() {}\n").is_empty());
+        assert!(run("x.rs", "const TILER: usize = 3;\nfn f() {}\n").is_empty());
+        assert!(run("x.rs", "const KC: u32 = 256;\nfn f() {}\n").is_empty());
+        // const-generic params are not definitions.
+        let generic = "fn k<T, const NR: usize>(a: &[T]) {}\n";
+        assert!(run("blas/level3.rs", generic).is_empty());
+    }
+
+    #[test]
+    fn lane_exempts_lanes_rs_binaries_and_tests() {
+        let src = "pub const LANES: usize = 8;\nfn f() {}\n";
+        assert!(run("primitives/lanes.rs", src).is_empty());
+        assert!(run("main.rs", src).is_empty());
+        assert!(run("bin/bench.rs", src).is_empty());
+        let in_test = "fn f() {}\n#[cfg(test)]\nmod t { const TILE: usize = 64; }\n";
+        assert!(run("x.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn lane_fires_on_env_token_in_code_channel_only() {
+        let code = "fn f() { let v = read(ONEDAL_SVE_BACKEND); }\n";
+        let f = run("primitives/distances.rs", code);
+        assert_eq!(rules(&f), ["PAL-LANE"]);
+        // Comments and (lexer-blanked) string literals are not findings.
+        assert!(run("x.rs", "// the ONEDAL_SVE_BACKEND switch\nfn f() {}\n").is_empty());
+        assert!(run(
+            "coordinator/mod.rs",
+            "fn f() -> &'static str { \"ONEDAL_SVE_BACKEND\" }\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn lane_allow_suppresses_one_finding() {
+        let src = "\
+// palint: allow(PAL-LANE, ablation scaffold pins the legacy width)
+const TILE: usize = 256;
+fn f() {}
+";
+        assert!(run("profiling/ablate.rs", src).is_empty());
     }
 
     // ---- PAL-QUAR ---------------------------------------------------

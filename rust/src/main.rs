@@ -8,6 +8,7 @@
 //! onedal-sve bench-all                    # quick smoke across the suite
 //! onedal-sve bench serve                  # batched serving: coalesced vs naive
 //! onedal-sve bench serve --faults         # resilience: retry/degrade under injection
+//! onedal-sve bench lanes                  # predicated kernels at each SVE lane profile
 //! ```
 
 use onedal_sve::coordinator::{Backend, Context};
@@ -327,6 +328,94 @@ fn cmd_bench_serve_faults(flags: &HashMap<String, String>) {
     println!("  served {n_requests} requests in {:.1}ms under injection", wall * 1e3);
 }
 
+/// `bench lanes` — the lane-profile scenario (ISSUE 10): the predicated
+/// argmin and WSS scans monomorphized at each SVE vector length the
+/// dispatcher can resolve, timed side by side, with the cross-width
+/// discrete-output identity asserted as it goes. The full sweep (top-k,
+/// ε-scan, JSON record) lives in `cargo bench --bench ablate_lanes`.
+fn cmd_bench_lanes(flags: &HashMap<String, String>) {
+    use onedal_sve::algorithms::svm::simd;
+    use onedal_sve::algorithms::svm::wss::{LOW, SIGN_ANY, SIGN_NEG, SIGN_POS, UP};
+    use onedal_sve::primitives::distances;
+    use onedal_sve::primitives::lanes::LaneProfile;
+    use onedal_sve::rng::{Distribution, Gaussian, Uniform};
+
+    let ctx = build_ctx(flags);
+    let threads = ctx.threads();
+    let n: usize = get(flags, "n", 4096);
+    let d: usize = get(flags, "d", 32);
+    let k: usize = get(flags, "k", 16);
+    let wss_n: usize = get(flags, "wss", 100_000);
+    let reps: usize = get(flags, "reps", 5);
+    let seed: u32 = get(flags, "seed", 42);
+    let m = (n / 4).max(1);
+
+    let mut e = Mt19937::new(seed);
+    let (x, _) = synth::make_blobs(&mut e, n, d, k, 1.0);
+    let (c, _) = synth::make_blobs(&mut e, k, d, k, 1.0);
+    let q = &x.data()[..m * d];
+    let mut u = Uniform::<f64>::new(0.0, 1.0);
+    let mut gs = Gaussian::<f64>::standard();
+    let grad: Vec<f64> = (0..wss_n).map(|_| gs.sample(&mut e)).collect();
+    let flags_v: Vec<u8> = (0..wss_n)
+        .map(|_| {
+            let mut f = if u.sample(&mut e) < 0.5 { SIGN_POS } else { SIGN_NEG };
+            if u.sample(&mut e) < 0.7 {
+                f |= LOW;
+            }
+            if u.sample(&mut e) < 0.7 {
+                f |= UP;
+            }
+            f
+        })
+        .collect();
+    let diag: Vec<f64> = (0..wss_n).map(|_| 1.0 + u.sample(&mut e)).collect();
+    let ki: Vec<f64> = (0..wss_n).map(|_| 0.5 * gs.sample(&mut e)).collect();
+
+    println!("lanes: corpus={k}x{d} queries={m} wss={wss_n} threads={threads} reps={reps}");
+    let mut base: Option<(Vec<usize>, Option<usize>, Option<usize>)> = None;
+    for profile in LaneProfile::ALL {
+        let corpus = distances::pack_corpus_table_profile(&c, profile, threads);
+        let mut assign = vec![0usize; m];
+        let mut best_argmin = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let inertia = distances::argmin_assign(q, m, &corpus, true, &mut assign, threads);
+            best_argmin = best_argmin.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(inertia);
+        }
+        let ex = simd::wss_extrema_par(profile, &grad, &flags_v, threads);
+        let mut best_wssj = f64::INFINITY;
+        let mut bj = None;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let j = simd::wss_j_par(
+                profile, &grad, &flags_v, SIGN_ANY, LOW, ex.gmin, 1.5, &diag, &ki, 1e-12,
+                true, threads,
+            );
+            best_wssj = best_wssj.min(t0.elapsed().as_secs_f64());
+            bj = j.bj;
+        }
+        match &base {
+            None => base = Some((assign.clone(), ex.bi, bj)),
+            Some((a0, bi0, bj0)) => {
+                assert_eq!(&assign, a0, "{}: argmin winners diverged", profile.name());
+                assert_eq!(ex.bi, *bi0, "{}: WSSi pick diverged", profile.name());
+                assert_eq!(bj, *bj0, "{}: WSSj pick diverged", profile.name());
+            }
+        }
+        println!(
+            "  {:<7} ({:>3}-bit, {}xf64): argmin {:8.3} ms   wssj {:8.3} ms",
+            profile.name(),
+            profile.bits(),
+            profile.lanes(),
+            best_argmin * 1e3,
+            best_wssj * 1e3
+        );
+    }
+    println!("  discrete outputs identical across all three profiles");
+}
+
 fn cmd_bench_all(flags: &HashMap<String, String>) {
     let _t = ScopedTimer::new("bench-all");
     for algo in ["kmeans", "logreg", "linreg", "pca", "knn", "dbscan", "forest", "svm"] {
@@ -350,6 +439,7 @@ fn help() {
          \x20 bench-all                smoke the whole suite\n\
          \x20 bench serve              batched serving: coalesced vs naive\n\
          \x20 bench serve --faults [spec]   resilience: retry/degrade under injection\n\
+         \x20 bench lanes              predicated kernels at each SVE lane profile\n\
          flags: --backend naive|reference|vectorized|artifact|auto\n\
          \x20      --n <rows> --d <features> --k <clusters> --seed <s>\n\
          \x20      --csv <path> --artifacts <dir> --solver boser|thunder\n\
@@ -370,6 +460,7 @@ fn main() {
         Some("bench-all") => cmd_bench_all(&flags),
         Some("bench") => match args.get(1).map(String::as_str) {
             Some("serve") => cmd_bench_serve(&flags),
+            Some("lanes") => cmd_bench_lanes(&flags),
             _ => help(),
         },
         _ => help(),

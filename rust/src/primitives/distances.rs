@@ -26,18 +26,28 @@
 //!
 //! Every epilogue consumes the distance tile **while it is cache-hot**,
 //! in the `svm/simd.rs` predication idiom: guards become lane masks
-//! over 8-lane blocks ([`LANES`], one 512-bit SVE vector of f64),
-//! arithmetic runs on all lanes with neutral elements for dead lanes,
-//! and block reductions scan in index order so ties always break to the
-//! **lowest corpus index**. Distances are evaluated as
+//! over `lanes()`-wide blocks — one vector of f64 under the active
+//! [`LaneProfile`](crate::primitives::lanes::LaneProfile) (2/4/8 lanes
+//! for 128/256/512-bit SVE; the corpus carries the profile it was
+//! packed under) — arithmetic runs on all lanes with neutral elements
+//! for dead lanes, and block reductions scan in index order so ties
+//! always break to the **lowest corpus index**. The epilogue bodies are
+//! const-generic over the lane count and monomorphize per profile;
+//! [`crate::with_lane_count!`] selects the instantiation **once per
+//! tile**, never per element. Distances are evaluated as
 //! `qn − 2·cross + corpus_norm` — the one canonical expression order —
 //! so consumers comparing against each other (or against their naive
-//! scalar rungs) see consistent values.
+//! scalar rungs) see consistent values. Because every comparison is on
+//! exact per-element values (no accumulation across lanes), the
+//! discrete outputs — argmin winners, top-k sets, ε-membership — are
+//! identical across profiles; only the blocked GEMM cross terms can
+//! differ across profiles (KC regrouping), to documented rounding.
 //!
 //! ## Determinism rules
 //!
-//! Worker-range cuts land only on `TILE` boundaries (and the RBF entry
-//! on `MR` micro-panel boundaries), so the global tile decomposition is
+//! Worker-range cuts land only on `tile()` boundaries (the profile's
+//! query-tile height; the RBF entry cuts on `MR` micro-panel
+//! boundaries), so the global tile decomposition is
 //! keyed by the input sizes alone — a tile is always computed whole, by
 //! one worker, with the same instruction order, whatever the worker
 //! count. Per-tile partials (e.g. inertia sums) merge in ascending tile
@@ -80,19 +90,20 @@
 //! so tests can assert inference performs none.
 
 use crate::blas::level3::MR;
-use crate::blas::{dot, gemm_prepacked_threads, pack_b_panels, PackedB, Transpose};
+use crate::blas::{dot, gemm_prepacked_threads, pack_b_panels_profile, PackedB, Transpose};
 use crate::coordinator::batch;
 use crate::error::{Error, Result};
 use crate::parallel;
+use crate::primitives::lanes::{default_profile, LaneProfile};
 use crate::primitives::packed::ModelPanel;
 use crate::sparse::{csrmm_threads, CsrMatrix, SparseOp};
 use crate::tables::{DenseTable, TableRef};
 
-/// Lanes per predicated epilogue block (a 512-bit SVE vector of f64).
-pub const LANES: usize = 8;
-/// Query rows per distance tile: the `TILE × n` cross-term block a
-/// worker computes (and its epilogue consumes) in one piece.
-const TILE: usize = 256;
+// Lane and tile geometry comes from the active `LaneProfile`: the
+// predicated epilogue blocks are `lanes()` wide (one SVE vector of
+// f64) and each worker consumes query tiles of `tile() = 32·lanes`
+// rows — the `tile × n` cross-term block it computes and scans in one
+// cache-hot piece.
 /// Minimum multiply-adds per worker before the tile sweep fans out.
 const PAR_MIN_FLOP: usize = 1 << 16;
 /// Fan-out floor of the thin-m RBF gram entry (working sets are small,
@@ -132,15 +143,36 @@ impl PackedCorpus {
     pub fn packed(&self) -> &PackedB<f64> {
         &self.pb
     }
+
+    /// Lane profile the corpus was packed under. Geometry (panel width,
+    /// tile height, epilogue block width) flows from here, so a corpus
+    /// is always swept at the width it was packed with.
+    pub fn profile(&self) -> LaneProfile {
+        self.pb.profile()
+    }
 }
 
 /// Pack an `n × d` row-major corpus once: micro-panel layout for the
-/// cross-term GEMM plus pooled squared row norms.
+/// cross-term GEMM plus pooled squared row norms. Packs under the
+/// process-default lane profile; see [`pack_corpus_profile`].
 pub fn pack_corpus(y: &[f64], n: usize, d: usize, threads: usize) -> PackedCorpus {
+    pack_corpus_profile(y, n, d, default_profile(), threads)
+}
+
+/// [`pack_corpus`] under an explicit [`LaneProfile`] — the entry the
+/// `Context`-aware algorithm layer uses so builder-selected profiles
+/// reach the packed corpus.
+pub fn pack_corpus_profile(
+    y: &[f64],
+    n: usize,
+    d: usize,
+    profile: LaneProfile,
+    threads: usize,
+) -> PackedCorpus {
     debug_assert_eq!(y.len(), n * d);
     super::packed::note_pack();
     PackedCorpus {
-        pb: pack_b_panels(Transpose::Yes, d, n, y),
+        pb: pack_b_panels_profile(Transpose::Yes, d, n, y, profile),
         norms: corpus_norms(y, n, d, threads),
     }
 }
@@ -148,6 +180,15 @@ pub fn pack_corpus(y: &[f64], n: usize, d: usize, threads: usize) -> PackedCorpu
 /// [`pack_corpus`] for a [`DenseTable`].
 pub fn pack_corpus_table(y: &DenseTable<f64>, threads: usize) -> PackedCorpus {
     pack_corpus(y.data(), y.rows(), y.cols(), threads)
+}
+
+/// [`pack_corpus_table`] under an explicit [`LaneProfile`].
+pub fn pack_corpus_table_profile(
+    y: &DenseTable<f64>,
+    profile: LaneProfile,
+    threads: usize,
+) -> PackedCorpus {
+    pack_corpus_profile(y.data(), y.rows(), y.cols(), profile, threads)
 }
 
 /// Pooled corpus-norm reduction: each norm is one whole dot product
@@ -220,37 +261,66 @@ pub struct CsrCorpus {
     n: usize,
     d: usize,
     norms: Vec<f64>,
+    profile: LaneProfile,
 }
 
 impl CsrCorpus {
     /// Pack a dense corpus for sparse queries: one transpose plus the
     /// pooled [`dot`]-based norm reduction (the same norms the dense
-    /// [`PackedCorpus`] carries).
+    /// [`PackedCorpus`] carries). Uses the process-default lane
+    /// profile; see [`CsrCorpus::from_dense_profile`].
     pub fn from_dense(y: &DenseTable<f64>, threads: usize) -> Self {
+        Self::from_dense_profile(y, default_profile(), threads)
+    }
+
+    /// [`CsrCorpus::from_dense`] under an explicit [`LaneProfile`].
+    pub fn from_dense_profile(y: &DenseTable<f64>, profile: LaneProfile, threads: usize) -> Self {
         let norms = corpus_norms(y.data(), y.rows(), y.cols(), threads);
-        Self::from_dense_with_norms(y, norms)
+        Self::from_dense_with_norms(y, norms, profile)
     }
 
     /// [`CsrCorpus::from_dense`] with the norms already in hand: the
     /// dense [`ModelPanel`] shares one pooled reduction between its
     /// packed and transposed views (same bits either way).
-    pub(crate) fn from_dense_with_norms(y: &DenseTable<f64>, norms: Vec<f64>) -> Self {
+    pub(crate) fn from_dense_with_norms(
+        y: &DenseTable<f64>,
+        norms: Vec<f64>,
+        profile: LaneProfile,
+    ) -> Self {
         debug_assert_eq!(norms.len(), y.rows());
         super::packed::note_pack();
-        CsrCorpus { bt: y.transposed().into_vec(), n: y.rows(), d: y.cols(), norms }
+        CsrCorpus { bt: y.transposed().into_vec(), n: y.rows(), d: y.cols(), norms, profile }
     }
 
     /// Pack a CSR corpus for sparse queries: one densifying transpose
-    /// scatter plus norms from one sweep of the stored values.
+    /// scatter plus norms from one sweep of the stored values. Uses the
+    /// process-default lane profile; see [`CsrCorpus::from_csr_profile`].
     pub fn from_csr(y: &CsrMatrix<f64>, threads: usize) -> Self {
+        Self::from_csr_profile(y, default_profile(), threads)
+    }
+
+    /// [`CsrCorpus::from_csr`] under an explicit [`LaneProfile`].
+    pub fn from_csr_profile(y: &CsrMatrix<f64>, profile: LaneProfile, threads: usize) -> Self {
         super::packed::note_pack();
         let norms = csr_row_norms(y, threads);
-        CsrCorpus { bt: y.to_dense_transposed().into_vec(), n: y.rows(), d: y.cols(), norms }
+        CsrCorpus {
+            bt: y.to_dense_transposed().into_vec(),
+            n: y.rows(),
+            d: y.cols(),
+            norms,
+            profile,
+        }
     }
 
     /// Corpus row count `n`.
     pub fn rows(&self) -> usize {
         self.n
+    }
+
+    /// Lane profile the corpus was packed under (fixes the sweep's tile
+    /// height and the epilogues' block width).
+    pub fn profile(&self) -> LaneProfile {
+        self.profile
     }
 
     /// Feature dimension `d`.
@@ -334,9 +404,10 @@ impl NeighborTable {
 /// computing each `len × n` cross-term block with one single-threaded
 /// prepacked GEMM into the worker's private scratch, then hand the
 /// cache-hot block to `tile_fn(tile_start, len, cross, out_rows)`.
-/// Worker cuts land only on `TILE` boundaries, so the tile
-/// decomposition — and the flattened, ascending-tile order of the
-/// returned partials — is identical at any worker count.
+/// Worker cuts land only on tile boundaries (the packing profile's
+/// `tile()` height), so the tile decomposition — and the flattened,
+/// ascending-tile order of the returned partials — is identical at any
+/// worker count.
 #[allow(clippy::too_many_arguments)]
 fn sweep<T, R, F>(
     q: &[f64],
@@ -354,16 +425,17 @@ where
     F: Fn(usize, usize, &[f64], &mut [T]) -> R + Sync,
 {
     let n = corpus.rows();
+    let tile = corpus.profile().tile();
     debug_assert_eq!(q.len(), m * d);
     debug_assert_eq!(out.len(), m * stride);
     let work = m.saturating_mul(n).saturating_mul(d.max(1));
     let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
-    let bounds = parallel::aligned_bounds(m, workers, TILE);
+    let bounds = parallel::aligned_bounds(m, workers, tile);
     let (pb, tile_fn) = (&corpus.pb, &tile_fn);
     let partials = parallel::scope_rows(out, stride, &bounds, |r0, r1, block| {
-        let mut cross = vec![0.0f64; TILE.min(r1 - r0) * n];
-        let mut results = Vec::with_capacity((r1 - r0).div_ceil(TILE));
-        for (start, len) in batch::tiles(r1 - r0, TILE) {
+        let mut cross = vec![0.0f64; tile.min(r1 - r0) * n];
+        let mut results = Vec::with_capacity((r1 - r0).div_ceil(tile));
+        for (start, len) in batch::tiles(r1 - r0, tile) {
             crate::failpoint::check(crate::failpoint::SITE_TILE_SWEEP);
             let g0 = r0 + start;
             let ctile = &mut cross[..len * n];
@@ -420,8 +492,8 @@ fn csr_window_cross(
 /// densified-transposed corpus — [`csr_window_cross`], zero copies)
 /// into the worker's private scratch, then hand the cache-hot block to
 /// `tile_fn(tile_start, len, cross, out_rows)`. Tile cuts land only on
-/// `TILE` boundaries and partials return in ascending tile order —
-/// bit-identical at any worker count.
+/// tile boundaries (the corpus profile's `tile()` height) and partials
+/// return in ascending tile order — bit-identical at any worker count.
 fn sweep_csr<T, R, F>(
     q: &CsrMatrix<f64>,
     corpus: &CsrCorpus,
@@ -437,16 +509,17 @@ where
 {
     let m = q.rows();
     let n = corpus.n;
+    let tile = corpus.profile.tile();
     debug_assert_eq!(q.cols(), corpus.d);
     debug_assert_eq!(out.len(), m * stride);
     let work = q.nnz().saturating_mul(n).max(m);
     let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
-    let bounds = parallel::aligned_bounds(m, workers, TILE);
+    let bounds = parallel::aligned_bounds(m, workers, tile);
     let (bt, tile_fn) = (corpus.bt.as_slice(), &tile_fn);
     let partials = parallel::scope_rows(out, stride, &bounds, |r0, r1, block| {
-        let mut cross = vec![0.0f64; TILE.min(r1 - r0) * n];
-        let mut results = Vec::with_capacity((r1 - r0).div_ceil(TILE));
-        for (start, len) in batch::tiles(r1 - r0, TILE) {
+        let mut cross = vec![0.0f64; tile.min(r1 - r0) * n];
+        let mut results = Vec::with_capacity((r1 - r0).div_ceil(tile));
+        for (start, len) in batch::tiles(r1 - r0, tile) {
             crate::failpoint::check(crate::failpoint::SITE_TILE_SWEEP);
             let g0 = r0 + start;
             let ctile = &mut cross[..len * n];
@@ -464,9 +537,10 @@ where
 /// k-means assignment epilogue: nearest corpus row per query (strict
 /// `<`, ties to the lowest index) written into `assign`; returns the
 /// inertia `Σ max(d²_min, 0)` accumulated in ascending row order.
-/// `predicated` selects the branch-free 8-lane scan over the branchy
-/// scalar one — both produce identical assignments and inertia bits
-/// (the reference-vs-vectorized rung split of the dispatch ladder).
+/// `predicated` selects the branch-free lane scan (block width from the
+/// corpus's packing profile) over the branchy scalar one — both produce
+/// identical assignments and inertia bits (the reference-vs-vectorized
+/// rung split of the dispatch ladder).
 pub fn argmin_assign(
     q: &[f64],
     m: usize,
@@ -499,33 +573,38 @@ pub fn argmin_assign_with_norms(
         debug_assert_eq!(v.len(), m);
     }
     let norms = corpus.norms.as_slice();
+    let profile = corpus.profile();
     let partials = sweep(q, m, d, corpus, assign, 1, threads, |g0, len, cross, ablock| {
-        let mut inertia = 0.0f64;
-        for i in 0..len {
-            let qn = match qnorms {
-                Some(v) => v[g0 + i],
-                None => {
-                    let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
-                    dot(qi, qi)
-                }
-            };
-            let row = &cross[i * n..(i + 1) * n];
-            let (best, bestv) = if predicated {
-                argmin_lanes(qn, row, norms)
-            } else {
-                argmin_scalar(qn, row, norms)
-            };
-            ablock[i] = best;
-            inertia += bestv.max(0.0);
-        }
-        inertia
+        // Profile dispatch happens once per tile; the lane-generic
+        // epilogue body is monomorphized per profile.
+        crate::with_lane_count!(profile, L, {
+            let mut inertia = 0.0f64;
+            for i in 0..len {
+                let qn = match qnorms {
+                    Some(v) => v[g0 + i],
+                    None => {
+                        let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
+                        dot(qi, qi)
+                    }
+                };
+                let row = &cross[i * n..(i + 1) * n];
+                let (best, bestv) = if predicated {
+                    argmin_lanes::<L>(qn, row, norms)
+                } else {
+                    argmin_scalar(qn, row, norms)
+                };
+                ablock[i] = best;
+                inertia += bestv.max(0.0);
+            }
+            inertia
+        })
     });
     partials.into_iter().sum()
 }
 
 /// [`argmin_assign`] for CSR queries: per-row norms from one
 /// [`csr_row_norms`] sweep, cross terms from the tiled CSR multiply,
-/// the **same** argmin epilogues (scalar or predicated 8-lane).
+/// the **same** argmin epilogues (scalar or predicated lanes).
 /// Bit-identical at any worker count.
 pub fn argmin_assign_csr(
     q: &CsrMatrix<f64>,
@@ -562,20 +641,23 @@ pub fn argmin_assign_csr_with_norms(
         return 0.0;
     }
     let norms = corpus.norms.as_slice();
+    let profile = corpus.profile();
     let partials = sweep_csr(q, corpus, assign, 1, threads, |g0, len, cross, ablock| {
-        let mut inertia = 0.0f64;
-        for i in 0..len {
-            let qn = qnorms[g0 + i];
-            let row = &cross[i * n..(i + 1) * n];
-            let (best, bestv) = if predicated {
-                argmin_lanes(qn, row, norms)
-            } else {
-                argmin_scalar(qn, row, norms)
-            };
-            ablock[i] = best;
-            inertia += bestv.max(0.0);
-        }
-        inertia
+        crate::with_lane_count!(profile, L, {
+            let mut inertia = 0.0f64;
+            for i in 0..len {
+                let qn = qnorms[g0 + i];
+                let row = &cross[i * n..(i + 1) * n];
+                let (best, bestv) = if predicated {
+                    argmin_lanes::<L>(qn, row, norms)
+                } else {
+                    argmin_scalar(qn, row, norms)
+                };
+                ablock[i] = best;
+                inertia += bestv.max(0.0);
+            }
+            inertia
+        })
     });
     partials.into_iter().sum()
 }
@@ -593,16 +675,19 @@ fn argmin_scalar(qn: f64, cross: &[f64], norms: &[f64]) -> (usize, f64) {
     (best, bestv)
 }
 
-/// Predicated 8-lane argmin: distances evaluated unconditionally per
+/// Predicated `L`-lane argmin: distances evaluated unconditionally per
 /// lane, then a block reduction in index order (strict `<` keeps the
-/// earliest minimizer — the scalar loop's tie-break exactly).
-fn argmin_lanes(qn: f64, cross: &[f64], norms: &[f64]) -> (usize, f64) {
+/// earliest minimizer — the scalar loop's tie-break exactly). Because
+/// the reduction compares exact per-element values in ascending index
+/// order, the winner is independent of `L`: every profile returns the
+/// scalar loop's answer bit-for-bit.
+fn argmin_lanes<const L: usize>(qn: f64, cross: &[f64], norms: &[f64]) -> (usize, f64) {
     let n = cross.len();
     let (mut best, mut bestv) = (0usize, f64::INFINITY);
-    let mut lane = [f64::INFINITY; LANES];
+    let mut lane = [f64::INFINITY; L];
     let mut base = 0usize;
     while base < n {
-        let len = LANES.min(n - base);
+        let len = L.min(n - base);
         for l in 0..len {
             let j = base + l;
             lane[l] = qn - 2.0 * cross[j] + norms[j];
@@ -636,13 +721,16 @@ pub fn top_k(
         return out;
     }
     let norms = corpus.norms.as_slice();
+    let profile = corpus.profile();
     sweep(q, m, d, corpus, &mut out, 1, threads, |g0, len, cross, oblock| {
-        for i in 0..len {
-            let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
-            let qn = dot(qi, qi);
-            let row = &cross[i * n..(i + 1) * n];
-            oblock[i] = select_k(qn, row, norms, k);
-        }
+        crate::with_lane_count!(profile, L, {
+            for i in 0..len {
+                let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
+                let qn = dot(qi, qi);
+                let row = &cross[i * n..(i + 1) * n];
+                oblock[i] = select_k::<L>(qn, row, norms, k);
+            }
+        })
     });
     out
 }
@@ -663,13 +751,16 @@ pub fn top_k_csr(
     }
     let qnorms = csr_row_norms(q, threads);
     let norms = corpus.norms.as_slice();
+    let profile = corpus.profile();
     let qnorms = &qnorms;
     sweep_csr(q, corpus, &mut out, 1, threads, |g0, len, cross, oblock| {
-        for i in 0..len {
-            let qn = qnorms[g0 + i];
-            let row = &cross[i * n..(i + 1) * n];
-            oblock[i] = select_k(qn, row, norms, k);
-        }
+        crate::with_lane_count!(profile, L, {
+            for i in 0..len {
+                let qn = qnorms[g0 + i];
+                let row = &cross[i * n..(i + 1) * n];
+                oblock[i] = select_k::<L>(qn, row, norms, k);
+            }
+        })
     });
     out
 }
@@ -694,8 +785,24 @@ pub fn top_k_dense_csr(
     k: usize,
     threads: usize,
 ) -> Vec<Vec<(usize, f64)>> {
+    top_k_dense_csr_profile(q, m, at, corpus_norms, k, default_profile(), threads)
+}
+
+/// [`top_k_dense_csr`] under an explicit [`LaneProfile`] (no corpus
+/// struct carries the profile on this pairing — the sparse panel's
+/// stored profile is routed here by [`top_k_packed`]).
+pub fn top_k_dense_csr_profile(
+    q: &[f64],
+    m: usize,
+    at: &CsrMatrix<f64>,
+    corpus_norms: &[f64],
+    k: usize,
+    profile: LaneProfile,
+    threads: usize,
+) -> Vec<Vec<(usize, f64)>> {
     let d = at.rows();
     let n = at.cols();
+    let tile = profile.tile();
     debug_assert_eq!(q.len(), m * d);
     debug_assert_eq!(corpus_norms.len(), n);
     let mut out: Vec<Vec<(usize, f64)>> = vec![Vec::new(); m];
@@ -704,13 +811,13 @@ pub fn top_k_dense_csr(
     }
     let work = at.nnz().saturating_mul(m).max(m);
     let workers = parallel::effective_threads(threads, work, PAR_MIN_FLOP);
-    let bounds = parallel::aligned_bounds(m, workers, TILE);
+    let bounds = parallel::aligned_bounds(m, workers, tile);
     parallel::scope_rows(&mut out, 1, &bounds, |r0, r1, oblock| {
-        let cap = TILE.min(r1 - r0);
+        let cap = tile.min(r1 - r0);
         let mut qt = vec![0.0f64; d * cap];
         let mut ct = vec![0.0f64; n * cap];
         let mut cross = vec![0.0f64; cap * n];
-        for (start, len) in batch::tiles(r1 - r0, TILE) {
+        for (start, len) in batch::tiles(r1 - r0, tile) {
             crate::failpoint::check(crate::failpoint::SITE_TILE_SWEEP);
             let g0 = r0 + start;
             // Transpose the query tile into the dense `d × len` B
@@ -736,11 +843,14 @@ pub fn top_k_dense_csr(
                     xtile[i * n + j] = ctile[j * len + i];
                 }
             }
-            for i in 0..len {
-                let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
-                let qn = dot(qi, qi);
-                oblock[start + i] = select_k(qn, &xtile[i * n..(i + 1) * n], corpus_norms, k);
-            }
+            crate::with_lane_count!(profile, L, {
+                for i in 0..len {
+                    let qi = &q[(g0 + i) * d..(g0 + i + 1) * d];
+                    let qn = dot(qi, qi);
+                    oblock[start + i] =
+                        select_k::<L>(qn, &xtile[i * n..(i + 1) * n], corpus_norms, k);
+                }
+            });
         }
     });
     out
@@ -772,12 +882,13 @@ pub fn top_k_packed(
         }
         (ModelPanel::Dense(p), TableRef::Csr(qs)) => Ok(top_k_csr(qs, p.csr_view(), k, threads)),
         (ModelPanel::Sparse(p), TableRef::Csr(qs)) => Ok(top_k_csr(qs, p.csr_view(), k, threads)),
-        (ModelPanel::Sparse(p), TableRef::Dense(qd)) => Ok(top_k_dense_csr(
+        (ModelPanel::Sparse(p), TableRef::Dense(qd)) => Ok(top_k_dense_csr_profile(
             qd.data(),
             qd.rows(),
             p.transposed(),
             p.csr_view().norms(),
             k,
+            p.csr_view().profile(),
             threads,
         )),
         (ModelPanel::Weights(_), _) => {
@@ -816,17 +927,19 @@ pub fn argmin_packed(
 }
 
 /// Bounded top-k selection over one distance row: distances evaluated
-/// in predicated 8-lane blocks, candidates folded into a sorted bound
+/// in predicated `L`-lane blocks, candidates folded into a sorted bound
 /// list (insertion keeps equal distances in ascending index order, so
-/// the result matches a full `(dist, index)` sort).
-fn select_k(qn: f64, cross: &[f64], norms: &[f64], k: usize) -> Vec<(usize, f64)> {
+/// the result matches a full `(dist, index)` sort). The fold consumes
+/// candidates in ascending index order whatever `L` is, so the selected
+/// set — values and order — is identical across profiles.
+fn select_k<const L: usize>(qn: f64, cross: &[f64], norms: &[f64], k: usize) -> Vec<(usize, f64)> {
     let n = cross.len();
     let mut best: Vec<(usize, f64)> = Vec::with_capacity(k + 1);
     let mut worst = f64::INFINITY;
-    let mut lane = [0.0f64; LANES];
+    let mut lane = [0.0f64; L];
     let mut base = 0usize;
     while base < n {
-        let len = LANES.min(n - base);
+        let len = L.min(n - base);
         for l in 0..len {
             let j = base + l;
             lane[l] = (qn - 2.0 * cross[j] + norms[j]).max(0.0);
@@ -850,11 +963,13 @@ fn select_k(qn: f64, cross: &[f64], norms: &[f64], k: usize) -> Vec<(usize, f64)
 }
 
 /// One row of the ε-threshold epilogue: push every corpus index within
-/// `eps2` of the row (ascending, predicated 8-lane mask blocks) onto
+/// `eps2` of the row (ascending, predicated `L`-lane mask blocks) onto
 /// `list`; return how many were pushed. Shared by the dense and CSR
-/// sweeps so both produce bit-identical lists.
+/// sweeps so both produce bit-identical lists; the membership test is
+/// an exact per-element compare, so the lists are identical across
+/// profiles too.
 #[inline]
-fn eps_scan_row(
+fn eps_scan_row<const L: usize>(
     qn: f64,
     cross: &[f64],
     norms: &[f64],
@@ -864,10 +979,10 @@ fn eps_scan_row(
 ) -> usize {
     let n = cross.len();
     let before = list.len();
-    let mut lane = [false; LANES];
+    let mut lane = [false; L];
     let mut base = 0usize;
     while base < n {
-        let blen = LANES.min(n - base);
+        let blen = L.min(n - base);
         // Predicated block: the threshold compare is the mask.
         for l in 0..blen {
             let j = base + l;
@@ -926,17 +1041,20 @@ pub fn eps_neighbors(
         return NeighborTable { offsets: vec![0; m + 1], indices: Vec::new() };
     }
     let norms = corpus.norms.as_slice();
+    let profile = corpus.profile();
     let partials = sweep(q, m, d, corpus, &mut counts, 1, threads, |g0, len, cross, cblock| {
-        let mut local: Vec<usize> = Vec::new();
-        for i in 0..len {
-            let gi = g0 + i;
-            let qi = &q[gi * d..(gi + 1) * d];
-            let qn = dot(qi, qi);
-            let row = &cross[i * n..(i + 1) * n];
-            let skip = if exclude_self { Some(gi) } else { None };
-            cblock[i] = eps_scan_row(qn, row, norms, eps2, skip, &mut local);
-        }
-        local
+        crate::with_lane_count!(profile, L, {
+            let mut local: Vec<usize> = Vec::new();
+            for i in 0..len {
+                let gi = g0 + i;
+                let qi = &q[gi * d..(gi + 1) * d];
+                let qn = dot(qi, qi);
+                let row = &cross[i * n..(i + 1) * n];
+                let skip = if exclude_self { Some(gi) } else { None };
+                cblock[i] = eps_scan_row::<L>(qn, row, norms, eps2, skip, &mut local);
+            }
+            local
+        })
     });
     assemble_neighbors(&counts, partials)
 }
@@ -958,27 +1076,32 @@ pub fn eps_neighbors_csr(
     }
     let qnorms = csr_row_norms(q, threads);
     let norms = corpus.norms.as_slice();
+    let profile = corpus.profile();
     let qnorms = &qnorms;
     let partials = sweep_csr(q, corpus, &mut counts, 1, threads, |g0, len, cross, cblock| {
-        let mut local: Vec<usize> = Vec::new();
-        for i in 0..len {
-            let gi = g0 + i;
-            let qn = qnorms[gi];
-            let row = &cross[i * n..(i + 1) * n];
-            let skip = if exclude_self { Some(gi) } else { None };
-            cblock[i] = eps_scan_row(qn, row, norms, eps2, skip, &mut local);
-        }
-        local
+        crate::with_lane_count!(profile, L, {
+            let mut local: Vec<usize> = Vec::new();
+            for i in 0..len {
+                let gi = g0 + i;
+                let qn = qnorms[gi];
+                let row = &cross[i * n..(i + 1) * n];
+                let skip = if exclude_self { Some(gi) } else { None };
+                cblock[i] = eps_scan_row::<L>(qn, row, norms, eps2, skip, &mut local);
+            }
+            local
+        })
     });
     assemble_neighbors(&counts, partials)
 }
 
 /// The fused RBF epilogue over a row-major block, in place:
-/// `v ← exp(−γ·max(qn_r − 2·v + cn_j, 0))`, LANES-chunked. One helper
-/// shared by the dense and CSR gram paths so the canonical expression
-/// order (and therefore the documented dense-vs-CSR rounding
-/// agreement) lives in exactly one place.
-fn rbf_transform_rows(
+/// `v ← exp(−γ·max(qn_r − 2·v + cn_j, 0))`, `L`-lane chunked. One
+/// helper shared by the dense and CSR gram paths so the canonical
+/// expression order (and therefore the documented dense-vs-CSR rounding
+/// agreement) lives in exactly one place. Purely elementwise, so the
+/// transform itself is bit-identical for every `L`; only the GEMM cross
+/// terms feeding it can differ across profiles.
+fn rbf_transform_rows<const L: usize>(
     block: &mut [f64],
     r0: usize,
     w_norms: &[f64],
@@ -988,7 +1111,7 @@ fn rbf_transform_rows(
     let n = corpus_norms.len();
     for (r, orow) in block.chunks_mut(n).enumerate() {
         let qn = w_norms[r0 + r];
-        for (vchunk, nchunk) in orow.chunks_mut(LANES).zip(corpus_norms.chunks(LANES)) {
+        for (vchunk, nchunk) in orow.chunks_mut(L).zip(corpus_norms.chunks(L)) {
             for (v, &cn) in vchunk.iter_mut().zip(nchunk) {
                 let d2 = (qn - 2.0 * *v + cn).max(0.0);
                 *v = (-gamma * d2).exp();
@@ -1022,12 +1145,15 @@ pub fn rbf_gram(
     if m == 0 || n == 0 {
         return;
     }
+    let profile = pb.profile();
     let work = m.saturating_mul(n).saturating_mul(d.max(1));
     let workers = parallel::effective_threads(threads, work, RBF_MIN_FLOP);
     let bounds = parallel::aligned_bounds(m, workers, MR);
     parallel::scope_rows(out, n, &bounds, |r0, r1, block| {
         gemm_prepacked_threads(Transpose::No, r1 - r0, 1.0, &w[r0 * d..r1 * d], pb, 0.0, block, 1);
-        rbf_transform_rows(block, r0, w_norms, corpus_norms, gamma);
+        crate::with_lane_count!(profile, L, {
+            rbf_transform_rows::<L>(block, r0, w_norms, corpus_norms, gamma);
+        });
     });
 }
 
@@ -1058,6 +1184,23 @@ pub fn rbf_gram_csr(
     out: &mut [f64],
     threads: usize,
 ) {
+    rbf_gram_csr_profile(w, w_norms, corpus_norms, bt, gamma, out, default_profile(), threads)
+}
+
+/// [`rbf_gram_csr`] under an explicit [`LaneProfile`] (the `bt` buffer
+/// carries no profile of its own — the SVM engine routes its active
+/// profile here).
+#[allow(clippy::too_many_arguments)]
+pub fn rbf_gram_csr_profile(
+    w: &CsrMatrix<f64>,
+    w_norms: &[f64],
+    corpus_norms: &[f64],
+    bt: &[f64],
+    gamma: f64,
+    out: &mut [f64],
+    profile: LaneProfile,
+    threads: usize,
+) {
     let m = w.rows();
     let n = corpus_norms.len();
     debug_assert_eq!(w_norms.len(), m);
@@ -1072,7 +1215,9 @@ pub fn rbf_gram_csr(
     let workers = parallel::effective_threads(threads, m.saturating_mul(n), RBF_MIN_FLOP);
     let bounds = parallel::even_bounds(m, workers);
     parallel::scope_rows(out, n, &bounds, |r0, _r1, block| {
-        rbf_transform_rows(block, r0, w_norms, corpus_norms, gamma);
+        crate::with_lane_count!(profile, L, {
+            rbf_transform_rows::<L>(block, r0, w_norms, corpus_norms, gamma);
+        });
     });
 }
 
@@ -1285,7 +1430,7 @@ mod tests {
         let w_norms = csr_row_norms(&wcsr, 1);
         let yd = DenseTable::from_vec(y.clone(), n, d).unwrap();
         let corpus = CsrCorpus::from_dense(&yd, 1);
-        let pb = pack_b_panels(Transpose::Yes, d, n, &y);
+        let pb = crate::blas::pack_b_panels(Transpose::Yes, d, n, &y);
         let dense_wn: Vec<f64> = (0..ws)
             .map(|i| {
                 let row = &w[i * d..(i + 1) * d];
@@ -1420,5 +1565,43 @@ mod tests {
         let bad = DenseTable::from_vec(vec![0.0; d + 1], 1, d + 1).unwrap();
         assert!(top_k_packed(TableRef::Dense(&bad), &panel, 3, 1).is_err());
         assert!(argmin_packed(TableRef::Dense(&bad), &panel, true, &mut [0usize], 1).is_err());
+    }
+
+    /// Cross-profile contract at the epilogue level: discrete outputs
+    /// (assignments, top-k index sets, ε-lists) are identical at 2/4/8
+    /// lanes; float outputs (inertia, top-k distances) agree to the
+    /// documented tolerance. Shapes are remainder-heavy so every
+    /// profile has a fringe block.
+    #[test]
+    fn profiles_agree_on_discrete_outputs() {
+        use crate::primitives::lanes::LaneProfile;
+        let (m, n, d) = (67, 21, 5);
+        let q = random_rows(31, m, d);
+        let y = random_rows(32, n, d);
+        let base = pack_corpus_profile(&y, n, d, LaneProfile::Sve512, 2);
+        assert_eq!(base.profile(), LaneProfile::Sve512);
+        let mut a_base = vec![0usize; m];
+        let i_base = argmin_assign(&q, m, &base, true, &mut a_base, 2);
+        let nn_base = top_k(&q, m, &base, 4, 2);
+        let e_base = eps_neighbors(&q, m, &base, 6.0, false, 2);
+        for p in [LaneProfile::Sve128, LaneProfile::Sve256] {
+            let c = pack_corpus_profile(&y, n, d, p, 2);
+            assert_eq!(c.profile(), p);
+            let mut a = vec![0usize; m];
+            let inertia = argmin_assign(&q, m, &c, true, &mut a, 2);
+            assert_eq!(a, a_base, "{}", p.name());
+            assert!((inertia - i_base).abs() < 1e-9 * (1.0 + i_base.abs()), "{}", p.name());
+            let nn = top_k(&q, m, &c, 4, 2);
+            for (row, (got, want)) in nn.iter().zip(&nn_base).enumerate() {
+                let ia: Vec<usize> = got.iter().map(|t| t.0).collect();
+                let ib: Vec<usize> = want.iter().map(|t| t.0).collect();
+                assert_eq!(ia, ib, "{} row {row}", p.name());
+                for (u, v) in got.iter().zip(want) {
+                    assert!((u.1 - v.1).abs() < 1e-9 * (1.0 + v.1.abs()), "{}", p.name());
+                }
+            }
+            let e = eps_neighbors(&q, m, &c, 6.0, false, 2);
+            assert_eq!(e.to_lists(), e_base.to_lists(), "{}", p.name());
+        }
     }
 }

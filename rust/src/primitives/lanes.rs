@@ -1,0 +1,378 @@
+//! Vector-length-agnostic lane profiles — the paper's `getCpuId`
+//! runtime-width probe, reproduced as one `LaneProfile` resolved once
+//! and threaded through every predicated kernel.
+//!
+//! SVE's defining property is that one predicated kernel body serves
+//! 128/256/512-bit hardware with the vector length resolved at run
+//! time. This crate's stand-in for a vector register is the fixed-width
+//! unrolled block (`[f64; LANES]` + mask/select), and before this
+//! module the width was hard-coded to the 512-bit case as two drifted
+//! `LANES = 8` constants plus unrelated `MR/NR/KC/TILE` panel-geometry
+//! constants. Now there is exactly one source of truth:
+//!
+//! * [`LaneProfile`] — 128/256/512-bit ⇒ 2/4/8 f64 lanes. Every
+//!   derived geometry constant is a `const fn` of the profile:
+//!   [`LaneProfile::nr`] (GEMM micro-panel width = lanes),
+//!   [`LaneProfile::kc`] (k-blocking depth, constant `KC×NR` B-panel
+//!   footprint), [`LaneProfile::tile`] (distance-sweep query tile
+//!   rows) and [`LaneProfile::wss_lanes`] (the two-registers-of-
+//!   headroom WSS scan width). [`MR`] (register-tile height) is
+//!   profile-independent.
+//! * [`default_profile`] — the process default, resolved **once**
+//!   (lazily, cached in an atomic) from the `ONEDAL_SVE_BACKEND`
+//!   environment variable; this module is the variable's single
+//!   approved read site (PAL-ENV/PAL-LANE). The default is
+//!   [`LaneProfile::Sve512`], bit-compatible with the pre-profile
+//!   outputs. `Context::build` resolves the active profile from the
+//!   builder override or this default and threads it through the
+//!   algorithm layer.
+//! * [`with_lane_count!`](crate::with_lane_count) — the dispatch seam:
+//!   expands a profile into a `const L: usize` binding so the
+//!   const-generic kernel bodies ([`crate::algorithms::svm::simd`],
+//!   the `primitives::distances` epilogues, the `blas::level3`
+//!   microkernel) monomorphize per profile and are selected **once per
+//!   tile**, never per element.
+//!
+//! ## Env grammar
+//!
+//! `ONEDAL_SVE_BACKEND` accepts a comma-separated token list; each
+//! token is either a backend rung name (`naive`, `reference`,
+//! `vectorized`, `artifact`, `auto` — consumed by
+//! `coordinator::Backend::parse`) or a lane-profile name (`sve128`,
+//! `sve256`, `sve512`). Examples: `sve256`, `vectorized,sve128`.
+//! [`resolve_spec`] is the pure parser (testable without touching the
+//! process environment); the first profile token wins, non-profile
+//! tokens are passed through to the backend parser (several of them
+//! are rejoined so `Backend::parse` rejects the ambiguity loudly).
+//!
+//! ## Determinism contract
+//!
+//! Within a profile: every kernel is bit-identical at any worker count
+//! (same tile cuts, same merge order as before), and `sve512` is
+//! bit-identical to the pre-profile implementation. Across profiles:
+//! discrete outputs (argmin winners, top-k index sets, ε-membership,
+//! WSS picks, support-vector sets) are **identical** — the predicated
+//! reductions compare exact per-element values, which do not depend on
+//! the block width — while accumulated floats (GEMM/`syrk` values,
+//! RBF gram entries, inertia) may differ across profiles because
+//! [`LaneProfile::kc`]/[`LaneProfile::tile`] regroup the accumulation;
+//! the scalar naive rungs are the per-profile oracles. See
+//! `docs/KERNELS.md` for the full contract.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Register-tile height of the packed GEMM microkernel (A-side rows
+/// held in the accumulator). Profile-independent: widening the vector
+/// widens the B-side (`nr`), not the unroll over A rows.
+pub const MR: usize = 4;
+
+/// One SVE vector-length profile: how many f64 lanes a predicated
+/// block carries. Resolved once (builder override or
+/// [`default_profile`]) and threaded through packing, kernels and
+/// epilogues so they widen together.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LaneProfile {
+    /// 128-bit vectors — 2 f64 lanes (the NEON-width floor).
+    Sve128,
+    /// 256-bit vectors — 4 f64 lanes.
+    Sve256,
+    /// 512-bit vectors — 8 f64 lanes (the paper's A64FX case and this
+    /// crate's historical hard-coded width; the default).
+    Sve512,
+}
+
+impl LaneProfile {
+    /// f64 lanes per predicated block (2 / 4 / 8).
+    pub const fn lanes(self) -> usize {
+        match self {
+            LaneProfile::Sve128 => 2,
+            LaneProfile::Sve256 => 4,
+            LaneProfile::Sve512 => 8,
+        }
+    }
+
+    /// Vector width in bits (128 / 256 / 512).
+    pub const fn bits(self) -> usize {
+        self.lanes() * 64
+    }
+
+    /// GEMM micro-panel width `NR`: one vector of output columns per
+    /// accumulator row, so the register tile is `MR × lanes`.
+    pub const fn nr(self) -> usize {
+        self.lanes()
+    }
+
+    /// GEMM k-blocking depth `KC`, chosen to keep the resident B-panel
+    /// footprint (`KC × NR` values) constant across profiles:
+    /// 1024 / 512 / 256 for 2 / 4 / 8 lanes. `sve512` ⇒ 256, the
+    /// pre-profile constant.
+    pub const fn kc(self) -> usize {
+        2048 / self.nr()
+    }
+
+    /// Query rows per distance-sweep tile (`32 × lanes`): the
+    /// `tile × n` cross-term block one worker computes and consumes
+    /// cache-hot. `sve512` ⇒ 256, the pre-profile constant.
+    pub const fn tile(self) -> usize {
+        32 * self.lanes()
+    }
+
+    /// Block width of the `wss_j_vectorized` scan — two vectors of
+    /// headroom for the autovectorizer (`2 × lanes`; `sve512` ⇒ 16,
+    /// the pre-profile `WSS_LANES`).
+    pub const fn wss_lanes(self) -> usize {
+        2 * self.lanes()
+    }
+
+    /// Canonical token name (`sve128` / `sve256` / `sve512`).
+    pub const fn name(self) -> &'static str {
+        match self {
+            LaneProfile::Sve128 => "sve128",
+            LaneProfile::Sve256 => "sve256",
+            LaneProfile::Sve512 => "sve512",
+        }
+    }
+
+    /// Parse one profile token; `None` for anything else (backend rung
+    /// names fall through to `coordinator::Backend::parse`, and a bare
+    /// `sve` stays an error there — a width must be named).
+    pub fn parse(token: &str) -> Option<LaneProfile> {
+        match token.trim() {
+            "sve128" => Some(LaneProfile::Sve128),
+            "sve256" => Some(LaneProfile::Sve256),
+            "sve512" => Some(LaneProfile::Sve512),
+            _ => None,
+        }
+    }
+
+    /// All profiles, narrowest first (test matrices iterate this).
+    pub const ALL: [LaneProfile; 3] =
+        [LaneProfile::Sve128, LaneProfile::Sve256, LaneProfile::Sve512];
+}
+
+/// The bit-compatible default: 512-bit vectors, 8 f64 lanes.
+pub const DEFAULT_PROFILE: LaneProfile = LaneProfile::Sve512;
+
+/// Split an `ONEDAL_SVE_BACKEND` value into `(backend_request,
+/// lane_profile)`. Pure — the testable core of the probe. The first
+/// profile token wins; every non-profile token is collected into the
+/// backend request verbatim (rejoined with commas when there are
+/// several, so `Backend::parse` rejects the malformed spec instead of
+/// this layer guessing).
+pub fn resolve_spec(spec: Option<&str>) -> (Option<String>, Option<LaneProfile>) {
+    let Some(spec) = spec else { return (None, None) };
+    let mut backend_tokens: Vec<&str> = Vec::new();
+    let mut profile: Option<LaneProfile> = None;
+    for token in spec.split(',') {
+        let token = token.trim();
+        if token.is_empty() {
+            continue;
+        }
+        match LaneProfile::parse(token) {
+            Some(p) => {
+                if profile.is_none() {
+                    profile = Some(p);
+                }
+            }
+            None => backend_tokens.push(token),
+        }
+    }
+    let backend =
+        if backend_tokens.is_empty() { None } else { Some(backend_tokens.join(",")) };
+    (backend, profile)
+}
+
+/// The single approved read of `ONEDAL_SVE_BACKEND`. Everything else
+/// (the coordinator's backend resolution included) consumes the parsed
+/// result through [`env_backend_request`] / [`default_profile`], so
+/// library behavior stays a function of arguments plus this one
+/// documented switch (PAL-ENV; PAL-LANE pins the variable name to this
+/// file).
+fn env_spec() -> Option<String> {
+    std::env::var("ONEDAL_SVE_BACKEND").ok()
+}
+
+/// Backend rung requested by the environment, if any — the non-profile
+/// remainder of the `ONEDAL_SVE_BACKEND` token list. `Context::build`
+/// feeds this to `Backend::parse` exactly like the old direct read.
+pub fn env_backend_request() -> Option<String> {
+    resolve_spec(env_spec().as_deref()).0
+}
+
+/// Cached process-default profile: 0 = unresolved, else 1 + index into
+/// the resolution table below.
+static DEFAULT_CELL: AtomicU8 = AtomicU8::new(0);
+
+fn encode(p: LaneProfile) -> u8 {
+    match p {
+        LaneProfile::Sve128 => 1,
+        LaneProfile::Sve256 => 2,
+        LaneProfile::Sve512 => 3,
+    }
+}
+
+fn decode(v: u8) -> Option<LaneProfile> {
+    match v {
+        1 => Some(LaneProfile::Sve128),
+        2 => Some(LaneProfile::Sve256),
+        3 => Some(LaneProfile::Sve512),
+        _ => None,
+    }
+}
+
+/// The process-default lane profile: the `ONEDAL_SVE_BACKEND` profile
+/// token if present, else [`DEFAULT_PROFILE`]. Resolved on first call
+/// and cached (one env read per process — the paper's probe-once
+/// `getCpuId` discipline), so every default-profile entry point in a
+/// run agrees on the width. `Context::build` consumes this as the
+/// fallback under an absent builder override.
+pub fn default_profile() -> LaneProfile {
+    if let Some(p) = decode(DEFAULT_CELL.load(Ordering::Relaxed)) {
+        return p;
+    }
+    let resolved = resolve_spec(env_spec().as_deref()).1.unwrap_or(DEFAULT_PROFILE);
+    // Racing first calls resolve from the same environment, so any
+    // winner stores the same value.
+    DEFAULT_CELL.store(encode(resolved), Ordering::Relaxed);
+    resolved
+}
+
+/// Dispatch a [`LaneProfile`] into a `const L: usize` lane count —
+/// the seam where runtime profile selection meets const-generic
+/// monomorphization. `$body` is compiled once per profile with `$L`
+/// bound as a local `const` item (so `kernel::<L>(..)` and even
+/// `kernel::<{ 2 * L }>(..)` are ordinary const-generic calls), and
+/// the match selects one instantiation at run time. Call it at tile
+/// (or coarser) granularity: the whole point is that the profile test
+/// happens once per block of work, never per element.
+///
+/// The three lane-count literals below are the only ones in the
+/// library — PAL-LANE keeps it that way.
+#[macro_export]
+macro_rules! with_lane_count {
+    ($profile:expr, $L:ident, $body:expr) => {
+        match $profile {
+            $crate::primitives::lanes::LaneProfile::Sve128 => {
+                const $L: usize = 2;
+                $body
+            }
+            $crate::primitives::lanes::LaneProfile::Sve256 => {
+                const $L: usize = 4;
+                $body
+            }
+            $crate::primitives::lanes::LaneProfile::Sve512 => {
+                const $L: usize = 8;
+                $body
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_table() {
+        // (profile, lanes, bits, nr, kc, tile, wss_lanes)
+        let rows = [
+            (LaneProfile::Sve128, 2, 128, 2, 1024, 64, 4),
+            (LaneProfile::Sve256, 4, 256, 4, 512, 128, 8),
+            (LaneProfile::Sve512, 8, 512, 8, 256, 256, 16),
+        ];
+        for (p, lanes, bits, nr, kc, tile, wss) in rows {
+            assert_eq!(p.lanes(), lanes);
+            assert_eq!(p.bits(), bits);
+            assert_eq!(p.nr(), nr);
+            assert_eq!(p.kc(), kc);
+            assert_eq!(p.tile(), tile);
+            assert_eq!(p.wss_lanes(), wss);
+            // Constant B-panel footprint across profiles.
+            assert_eq!(p.kc() * p.nr(), 2048);
+            // Tile cuts stay MR- and lane-aligned.
+            assert_eq!(p.tile() % MR, 0);
+            assert_eq!(p.tile() % p.lanes(), 0);
+        }
+    }
+
+    #[test]
+    fn sve512_matches_the_pre_profile_constants() {
+        // The bit-compatibility anchor: the default profile reproduces
+        // the constants the kernels hard-coded before this module.
+        let p = DEFAULT_PROFILE;
+        assert_eq!(p, LaneProfile::Sve512);
+        assert_eq!(p.lanes(), 8);
+        assert_eq!(p.nr(), 8);
+        assert_eq!(p.kc(), 256);
+        assert_eq!(p.tile(), 256);
+        assert_eq!(p.wss_lanes(), 16);
+        assert_eq!(MR, 4);
+    }
+
+    #[test]
+    fn parse_round_trip_and_rejects() {
+        for p in LaneProfile::ALL {
+            assert_eq!(LaneProfile::parse(p.name()), Some(p));
+        }
+        for bad in ["sve", "sve1024", "SVE512", "neon", "", "8"] {
+            assert_eq!(LaneProfile::parse(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn resolve_spec_grammar() {
+        // Absent / empty.
+        assert_eq!(resolve_spec(None), (None, None));
+        assert_eq!(resolve_spec(Some("")), (None, None));
+        assert_eq!(resolve_spec(Some(" , ,")), (None, None));
+        // Pure backend token passes through untouched.
+        assert_eq!(resolve_spec(Some("naive")), (Some("naive".into()), None));
+        // `sve` without a width is NOT a profile — it must reach
+        // Backend::parse and fail there, as it always has.
+        assert_eq!(resolve_spec(Some("sve")), (Some("sve".into()), None));
+        // Pure profile token.
+        assert_eq!(resolve_spec(Some("sve256")), (None, Some(LaneProfile::Sve256)));
+        // Mixed, either order, with spaces.
+        assert_eq!(
+            resolve_spec(Some("vectorized,sve128")),
+            (Some("vectorized".into()), Some(LaneProfile::Sve128))
+        );
+        assert_eq!(
+            resolve_spec(Some(" sve512 , auto ")),
+            (Some("auto".into()), Some(LaneProfile::Sve512))
+        );
+        // First profile token wins.
+        assert_eq!(resolve_spec(Some("sve128,sve512")), (None, Some(LaneProfile::Sve128)));
+        // Multiple backend tokens are rejoined for Backend::parse to
+        // reject loudly, not silently dropped.
+        assert_eq!(
+            resolve_spec(Some("naive,reference")),
+            (Some("naive,reference".into()), None)
+        );
+    }
+
+    #[test]
+    fn default_profile_is_cached_and_consistent() {
+        let a = default_profile();
+        let b = default_profile();
+        assert_eq!(a, b);
+        // Whatever the test environment sets, the result is a valid
+        // profile and the cache holds it.
+        assert!(LaneProfile::ALL.contains(&a));
+        assert_eq!(decode(DEFAULT_CELL.load(Ordering::Relaxed)), Some(a));
+    }
+
+    #[test]
+    fn with_lane_count_binds_a_const() {
+        fn probe<const L: usize>() -> usize {
+            L
+        }
+        for p in LaneProfile::ALL {
+            let got = crate::with_lane_count!(p, L, probe::<L>());
+            assert_eq!(got, p.lanes(), "{}", p.name());
+            // Derived const expressions work too (the WSS width).
+            let wss = crate::with_lane_count!(p, L, probe::<{ 2 * L }>());
+            assert_eq!(wss, p.wss_lanes(), "{}", p.name());
+        }
+    }
+}

@@ -12,6 +12,13 @@
 //!   call ([`distances::CsrCorpus`]). ε-neighbourhoods come back as a
 //!   CSR-style [`distances::NeighborTable`] — one flat
 //!   `(offsets, indices)` pair instead of a `Vec` per row.
+//! * [`lanes`] — the vector-length-agnostic lane-profile layer: one
+//!   [`lanes::LaneProfile`] (128/256/512-bit ⇒ 2/4/8 f64 lanes,
+//!   resolved once per process or per `Context`) from which every
+//!   lane-width and panel-geometry constant (`LANES`, `MR×NR`, `KC`,
+//!   `TILE`, the WSS scan width) is derived, plus the
+//!   [`crate::with_lane_count!`] dispatch macro that monomorphizes the
+//!   predicated kernel bodies per profile at tile granularity.
 //! * [`packed`] — model-resident packed state: a [`packed::ModelPanel`]
 //!   (prepacked corpus + norms, CSR transpose, or weight vector) built
 //!   once at `train` time and stored inside the fitted models, so
@@ -20,4 +27,5 @@
 //!   to assert that contract.
 
 pub mod distances;
+pub mod lanes;
 pub mod packed;

@@ -39,6 +39,7 @@
 //! contract (`tests/serve_property.rs`).
 
 use crate::primitives::distances::{self, CsrCorpus, PackedCorpus};
+use crate::primitives::lanes::{default_profile, LaneProfile};
 use crate::sparse::CsrMatrix;
 use crate::tables::DenseTable;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -127,26 +128,53 @@ pub enum ModelPanel {
 
 impl ModelPanel {
     /// Pack a dense corpus once, sharing one pooled norm reduction
-    /// between the micro-panel and transposed views.
+    /// between the micro-panel and transposed views. Uses the
+    /// process-default lane profile; `train` paths holding a `Context`
+    /// route its profile through the `*_profile` builders.
     pub fn from_dense_table(y: &DenseTable<f64>, threads: usize) -> Self {
-        let packed = distances::pack_corpus_table(y, threads);
-        let csr_view = CsrCorpus::from_dense_with_norms(y, packed.norms().to_vec());
+        Self::from_dense_table_profile(y, default_profile(), threads)
+    }
+
+    /// [`ModelPanel::from_dense_table`] under an explicit
+    /// [`LaneProfile`]: both views carry the same profile, so every
+    /// query layout is served at the width the model was trained with.
+    pub fn from_dense_table_profile(
+        y: &DenseTable<f64>,
+        profile: LaneProfile,
+        threads: usize,
+    ) -> Self {
+        let packed = distances::pack_corpus_table_profile(y, profile, threads);
+        let csr_view = CsrCorpus::from_dense_with_norms(y, packed.norms().to_vec(), profile);
         ModelPanel::Dense(DensePanel { packed, csr_view })
     }
 
     /// Pack a CSR corpus once: the [`CsrCorpus`] view plus the
-    /// `O(nnz)` counting-sort transpose.
+    /// `O(nnz)` counting-sort transpose. Process-default lane profile.
     pub fn from_csr(y: &CsrMatrix<f64>, threads: usize) -> Self {
-        let csr_view = CsrCorpus::from_csr(y, threads);
+        Self::from_csr_profile(y, default_profile(), threads)
+    }
+
+    /// [`ModelPanel::from_csr`] under an explicit [`LaneProfile`].
+    pub fn from_csr_profile(y: &CsrMatrix<f64>, profile: LaneProfile, threads: usize) -> Self {
+        let csr_view = CsrCorpus::from_csr_profile(y, profile, threads);
         ModelPanel::Sparse(SparsePanel { csr_view, at: y.transposed() })
     }
 
     /// Pack a corpus of either table layout (KNN's `train` ingests
-    /// both).
+    /// both). Process-default lane profile.
     pub fn from_table(y: crate::tables::TableRef<'_>, threads: usize) -> Self {
+        Self::from_table_profile(y, default_profile(), threads)
+    }
+
+    /// [`ModelPanel::from_table`] under an explicit [`LaneProfile`].
+    pub fn from_table_profile(
+        y: crate::tables::TableRef<'_>,
+        profile: LaneProfile,
+        threads: usize,
+    ) -> Self {
         match y {
-            crate::tables::TableRef::Dense(t) => Self::from_dense_table(t, threads),
-            crate::tables::TableRef::Csr(m) => Self::from_csr(m, threads),
+            crate::tables::TableRef::Dense(t) => Self::from_dense_table_profile(t, profile, threads),
+            crate::tables::TableRef::Csr(m) => Self::from_csr_profile(m, profile, threads),
         }
     }
 

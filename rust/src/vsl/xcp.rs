@@ -91,7 +91,10 @@ impl<T: Float> XcpState<T> {
 
         // C += X·Xᵀ  (batch raw cross-product; BLAS rank-nb update —
         // `cross` is symmetric by invariant, so the accumulate-and-mirror
-        // contract of the packed syrk holds)
+        // contract of the packed syrk holds). Streaming state carries no
+        // `Context`, so the syrk runs at the process-default lane
+        // profile — fine for determinism: every batch of one state sees
+        // the same profile, and the state never mixes packed buffers.
         syrk_threads(self.p, nb, T::ONE, batch.data(), T::ONE, &mut self.cross, threads);
 
         // S ← S' + row-sums(X)

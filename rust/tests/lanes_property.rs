@@ -1,0 +1,308 @@
+//! Property suite for the vector-length-agnostic kernel layer
+//! (ISSUE 10). The determinism contract, exercised from outside the
+//! crate:
+//!
+//! * **within a profile** — every predicated kernel is bit-identical
+//!   across 1–4 workers and bit-equal to its scalar oracle, including
+//!   on remainder-heavy shapes (`n ≡ 1..7 (mod 8)`, `n < lanes`, empty
+//!   inputs) where the masked tail does the work;
+//! * **across profiles** — discrete outputs (argmin winners, top-k
+//!   index sets, ε-membership, WSS picks, SV sets) are identical at
+//!   128/256/512-bit, while accumulated floats agree to documented
+//!   tolerance (panel regrouping may legally move rounding);
+//! * **dispatch** — the profile rides the `Context`, never process
+//!   globals: every cross-profile case here builds its contexts with
+//!   `Context::builder().lane_profile(p)`.
+
+use onedal_sve::algorithms::svm::simd;
+use onedal_sve::algorithms::svm::wss::{self, LOW, SIGN_ANY, SIGN_NEG, SIGN_POS, UP};
+use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::prelude::*;
+use onedal_sve::primitives::distances;
+use onedal_sve::primitives::lanes::LaneProfile;
+use onedal_sve::rng::{Distribution, Gaussian, Uniform};
+use onedal_sve::tables::synth::{make_blobs, make_classification};
+
+/// Remainder-heavy lengths: every residue class mod 8 (the widest
+/// profile's lane count), the sub-lane sizes 1..4, and a few larger
+/// odd shapes. 0 exercises the empty-input path.
+const SHAPES: [usize; 16] = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 17, 31, 100, 129, 257];
+
+fn wss_inputs(seed: u32, n: usize) -> (Vec<f64>, Vec<u8>, Vec<f64>, Vec<f64>) {
+    let mut e = Mt19937::new(seed);
+    let mut g = Gaussian::<f64>::standard();
+    let mut u = Uniform::new(0.0, 1.0);
+    let grad: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
+    let flags: Vec<u8> = (0..n)
+        .map(|_| {
+            let mut f = if u.sample(&mut e) < 0.5 { SIGN_POS } else { SIGN_NEG };
+            if u.sample(&mut e) < 0.7 {
+                f |= LOW;
+            }
+            if u.sample(&mut e) < 0.7 {
+                f |= UP;
+            }
+            f
+        })
+        .collect();
+    let diag: Vec<f64> = (0..n).map(|_| 1.0 + u.sample(&mut e)).collect();
+    let ki: Vec<f64> = (0..n).map(|_| 0.5 * g.sample(&mut e)).collect();
+    (grad, flags, diag, ki)
+}
+
+/// WSS block scans: per profile, the lane-monomorphized body is
+/// bitwise equal to the scalar Listing-1 loop on every remainder
+/// shape, and the parallel reductions are bit-identical across 1–4
+/// workers.
+#[test]
+fn wss_scans_match_scalar_oracle_at_every_profile_and_shape() {
+    const W128: usize = LaneProfile::Sve128.wss_lanes();
+    const W256: usize = LaneProfile::Sve256.wss_lanes();
+    const W512: usize = LaneProfile::Sve512.wss_lanes();
+    for (si, &n) in SHAPES.iter().enumerate() {
+        let (grad, flags, diag, ki) = wss_inputs(40 + si as u32, n);
+        let gmin = -0.2f64;
+        let scalar =
+            wss::wss_j_scalar(&grad, &flags, SIGN_ANY, LOW, gmin, 1.5, &diag, &ki, 0, n, 1e-12);
+        for profile in LaneProfile::ALL {
+            let vect = match profile {
+                LaneProfile::Sve128 => wss::wss_j_vectorized::<W128>(
+                    &grad, &flags, SIGN_ANY, LOW, gmin, 1.5, &diag, &ki, 0, n, 1e-12,
+                ),
+                LaneProfile::Sve256 => wss::wss_j_vectorized::<W256>(
+                    &grad, &flags, SIGN_ANY, LOW, gmin, 1.5, &diag, &ki, 0, n, 1e-12,
+                ),
+                LaneProfile::Sve512 => wss::wss_j_vectorized::<W512>(
+                    &grad, &flags, SIGN_ANY, LOW, gmin, 1.5, &diag, &ki, 0, n, 1e-12,
+                ),
+            };
+            assert_eq!(vect.bj, scalar.bj, "{} n={n}: bj", profile.name());
+            assert_eq!(vect.obj.to_bits(), scalar.obj.to_bits(), "{} n={n}: obj", profile.name());
+            assert_eq!(
+                vect.gmax2.to_bits(),
+                scalar.gmax2.to_bits(),
+                "{} n={n}: gmax2",
+                profile.name()
+            );
+            let ex1 = simd::wss_extrema_par(profile, &grad, &flags, 1);
+            let j1 = simd::wss_j_par(
+                profile, &grad, &flags, SIGN_ANY, LOW, gmin, 1.5, &diag, &ki, 1e-12, true, 1,
+            );
+            for threads in 2..=4 {
+                let ext = simd::wss_extrema_par(profile, &grad, &flags, threads);
+                assert_eq!(ext.bi, ex1.bi, "{} n={n} t={threads}: bi", profile.name());
+                assert_eq!(ext.gmin.to_bits(), ex1.gmin.to_bits());
+                assert_eq!(ext.gmax2.to_bits(), ex1.gmax2.to_bits());
+                let jt = simd::wss_j_par(
+                    profile, &grad, &flags, SIGN_ANY, LOW, gmin, 1.5, &diag, &ki, 1e-12, true,
+                    threads,
+                );
+                assert_eq!(jt.bj, j1.bj, "{} n={n} t={threads}: bj", profile.name());
+                assert_eq!(jt.obj.to_bits(), j1.obj.to_bits());
+            }
+        }
+    }
+}
+
+/// WSS picks are identical across the three profiles (exact
+/// compare/select — no accumulation to regroup).
+#[test]
+fn wss_picks_identical_across_profiles() {
+    for (si, &n) in SHAPES.iter().enumerate() {
+        let (grad, flags, diag, ki) = wss_inputs(60 + si as u32, n);
+        let base_ex = simd::wss_extrema_par(LaneProfile::Sve512, &grad, &flags, 3);
+        let base_j = simd::wss_j_par(
+            LaneProfile::Sve512,
+            &grad,
+            &flags,
+            SIGN_ANY,
+            LOW,
+            base_ex.gmin,
+            1.5,
+            &diag,
+            &ki,
+            1e-12,
+            true,
+            3,
+        );
+        for profile in LaneProfile::ALL {
+            let ex = simd::wss_extrema_par(profile, &grad, &flags, 3);
+            assert_eq!(ex.bi, base_ex.bi, "{} n={n}: bi", profile.name());
+            assert_eq!(ex.gmin.to_bits(), base_ex.gmin.to_bits(), "{} n={n}", profile.name());
+            let j = simd::wss_j_par(
+                profile, &grad, &flags, SIGN_ANY, LOW, base_ex.gmin, 1.5, &diag, &ki, 1e-12,
+                true, 3,
+            );
+            assert_eq!(j.bj, base_j.bj, "{} n={n}: bj", profile.name());
+            assert_eq!(j.obj.to_bits(), base_j.obj.to_bits(), "{} n={n}: obj", profile.name());
+        }
+    }
+}
+
+/// Argmin assignment: per profile, the predicated scan equals the
+/// branchy scalar epilogue bitwise (same packed corpus) at any worker
+/// count; across profiles the winners are identical, inertia within
+/// tolerance. Corpus sizes sweep the remainder classes so the masked
+/// tail of each lane width is hit.
+#[test]
+fn argmin_matches_scalar_epilogue_and_winners_hold_across_profiles() {
+    let mut e = Mt19937::new(7);
+    let m = 64usize;
+    let d = 11usize;
+    let (q_table, _) = make_blobs(&mut e, m, d, 6, 1.0);
+    let q = q_table.data();
+    for n in [1usize, 2, 3, 5, 7, 8, 9, 15, 17, 33, 100] {
+        let (c, _) = make_blobs(&mut e, n, d, n.min(6), 1.0);
+        let mut base: Option<(Vec<usize>, f64)> = None;
+        for profile in LaneProfile::ALL {
+            let corpus = distances::pack_corpus_table_profile(&c, profile, 2);
+            let mut scalar_assign = vec![0usize; m];
+            let i_scalar = distances::argmin_assign(q, m, &corpus, false, &mut scalar_assign, 1);
+            for threads in 1..=4 {
+                let mut assign = vec![0usize; m];
+                let inertia = distances::argmin_assign(q, m, &corpus, true, &mut assign, threads);
+                assert_eq!(assign, scalar_assign, "{} n={n} t={threads}", profile.name());
+                assert_eq!(
+                    inertia.to_bits(),
+                    i_scalar.to_bits(),
+                    "{} n={n} t={threads}: inertia",
+                    profile.name()
+                );
+            }
+            match &base {
+                None => base = Some((scalar_assign, i_scalar)),
+                Some((a0, i0)) => {
+                    assert_eq!(&scalar_assign, a0, "{} n={n}: cross-profile winners", profile.name());
+                    let rel = (i_scalar - i0).abs() / i0.abs().max(1e-12);
+                    assert!(rel < 1e-12, "{} n={n}: inertia rel={rel}", profile.name());
+                }
+            }
+        }
+    }
+}
+
+/// Bounded top-k and the ε-threshold scan: index sets identical across
+/// profiles and worker counts, including corpora smaller than `k` and
+/// empty query sets.
+#[test]
+fn topk_and_eps_sets_identical_across_profiles() {
+    let mut e = Mt19937::new(11);
+    let d = 9usize;
+    for n in [1usize, 3, 5, 8, 13, 40, 129] {
+        let (x, _) = make_blobs(&mut e, n.max(2), d, 3, 1.0);
+        let n = n.max(2);
+        let m = 32usize.min(n);
+        let q = &x.data()[..m * d];
+        let k = 5usize; // deliberately > n for the smallest corpora
+        let eps2 = 14.0f64;
+        let base_corpus = distances::pack_corpus_table_profile(&x, LaneProfile::Sve512, 1);
+        let base_topk: Vec<Vec<usize>> = distances::top_k(q, m, &base_corpus, k, 1)
+            .iter()
+            .map(|row| row.iter().map(|p| p.0).collect())
+            .collect();
+        let base_eps = distances::eps_neighbors(q, m, &base_corpus, eps2, false, 1).to_lists();
+        for profile in LaneProfile::ALL {
+            let corpus = distances::pack_corpus_table_profile(&x, profile, 3);
+            for threads in 1..=4 {
+                let topk: Vec<Vec<usize>> = distances::top_k(q, m, &corpus, k, threads)
+                    .iter()
+                    .map(|row| row.iter().map(|p| p.0).collect())
+                    .collect();
+                assert_eq!(topk, base_topk, "{} n={n} t={threads}: top-k", profile.name());
+                let eps = distances::eps_neighbors(q, m, &corpus, eps2, false, threads).to_lists();
+                assert_eq!(eps, base_eps, "{} n={n} t={threads}: eps", profile.name());
+            }
+        }
+        // Empty query set: every profile returns the empty table.
+        for profile in LaneProfile::ALL {
+            let corpus = distances::pack_corpus_table_profile(&x, profile, 1);
+            let nt = distances::eps_neighbors(&[], 0, &corpus, eps2, false, 2);
+            assert_eq!(nt.rows(), 0, "{}", profile.name());
+            assert!(distances::top_k(&[], 0, &corpus, k, 2).is_empty(), "{}", profile.name());
+        }
+    }
+}
+
+/// RBF gram epilogue: per profile bit-identical across worker counts;
+/// across profiles within documented tolerance (the cross-product GEMM
+/// may regroup accumulation when `KC` changes).
+#[test]
+fn rbf_gram_stable_within_profile_and_tolerant_across() {
+    let mut e = Mt19937::new(23);
+    let d = 13usize;
+    for n in [2usize, 7, 9, 31, 100] {
+        let (x, _) = make_blobs(&mut e, n, d, 3, 1.0);
+        let ws = n.min(6);
+        let w = &x.data()[..ws * d];
+        let w_norms = distances::dense_row_norms(w, ws, d, 1);
+        let mut base: Option<Vec<f64>> = None;
+        for profile in LaneProfile::ALL {
+            let corpus = distances::pack_corpus_table_profile(&x, profile, 2);
+            let mut g1 = vec![0.0f64; ws * n];
+            distances::rbf_gram_corpus(w, &w_norms, &corpus, 0.07, &mut g1, 1);
+            for threads in 2..=4 {
+                let mut gt = vec![0.0f64; ws * n];
+                distances::rbf_gram_corpus(w, &w_norms, &corpus, 0.07, &mut gt, threads);
+                for (a, b) in gt.iter().zip(&g1) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} n={n} t={threads}", profile.name());
+                }
+            }
+            match &base {
+                None => base = Some(g1),
+                Some(b) => {
+                    for (a, bb) in g1.iter().zip(b) {
+                        assert!((a - bb).abs() < 1e-12, "{} n={n}: |Δ|={}", profile.name(), a - bb);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// End-to-end SVM: the profile rides the `Context`; the support-vector
+/// set (a discrete output of the exact WSS selects) is identical across
+/// profiles, and iteration counts match because the entire pick
+/// sequence is exact.
+#[test]
+fn svm_support_set_identical_across_profiles() {
+    let mut e = Mt19937::new(31);
+    let (x, y) = make_classification(&mut e, 250, 12, 1.2);
+    let mut base: Option<(Vec<usize>, usize)> = None;
+    for profile in LaneProfile::ALL {
+        let ctx = Context::builder()
+            .backend(Backend::Vectorized)
+            .lane_profile(profile)
+            .build()
+            .unwrap();
+        let m = Svc::params().train(&ctx, &x, &y).unwrap();
+        match &base {
+            None => base = Some((m.support_idx.clone(), m.iterations)),
+            Some((sv0, it0)) => {
+                assert_eq!(&m.support_idx, sv0, "{}: SV set", profile.name());
+                assert_eq!(m.iterations, *it0, "{}: iterations", profile.name());
+            }
+        }
+    }
+}
+
+/// The context resolves its profile once at build: explicit builder
+/// override wins, and the geometry every consumer derives from it is
+/// the documented table.
+#[test]
+fn context_profile_drives_derived_geometry() {
+    for (profile, lanes, nr, kc, tile, wl) in [
+        (LaneProfile::Sve128, 2usize, 2usize, 1024usize, 64usize, 4usize),
+        (LaneProfile::Sve256, 4, 4, 512, 128, 8),
+        (LaneProfile::Sve512, 8, 8, 256, 256, 16),
+    ] {
+        let ctx = Context::builder().lane_profile(profile).build().unwrap();
+        assert_eq!(ctx.lane_profile(), profile);
+        assert_eq!(profile.lanes(), lanes);
+        assert_eq!(profile.nr(), nr);
+        assert_eq!(profile.kc(), kc);
+        assert_eq!(profile.tile(), tile);
+        assert_eq!(profile.wss_lanes(), wl);
+        // Constant B-panel footprint: KC × NR is profile-invariant.
+        assert_eq!(profile.kc() * profile.nr(), 2048);
+    }
+}

@@ -126,8 +126,9 @@ fn raw_runtime_wss_select_matches_rust_wss() {
     let gmin = -0.3f64;
     let kii = 1.5f64;
     let tau = 1e-9f64;
-    // Native result.
-    let want = wss::wss_j_vectorized(
+    // Native result (at the default sve512 profile's WSS width).
+    const WL: usize = onedal_sve::primitives::lanes::LaneProfile::Sve512.wss_lanes();
+    let want = wss::wss_j_vectorized::<WL>(
         &grad, &flags, wss::SIGN_ANY, wss::LOW, gmin, kii, &diag, &ki, 0, n, tau,
     );
     // Artifact result (padded; padding lanes masked by n_valid).

@@ -8,6 +8,7 @@
 use onedal_sve::algorithms::svm::simd;
 use onedal_sve::algorithms::svm::wss::{self, LOW, SIGN_ANY, SIGN_NEG, SIGN_POS, UP};
 use onedal_sve::coordinator::{Backend, Context};
+use onedal_sve::primitives::lanes::LaneProfile;
 use onedal_sve::prelude::*;
 use onedal_sve::rng::{Distribution, Gaussian, Uniform};
 use onedal_sve::tables::synth::make_classification;
@@ -35,14 +36,14 @@ fn wss_inputs(seed: u32, n: usize) -> (Vec<f64>, Vec<u8>, Vec<f64>, Vec<f64>) {
 }
 
 /// The fused WSSi/GMax2 extrema scan and the parallel WSSj scan: 1–4
-/// workers, sizes straddling the fan-out threshold and the 8-lane
-/// blocking, checked bitwise against the 1-worker run *and* the scalar
-/// listings.
+/// workers at every lane profile, sizes straddling the fan-out
+/// threshold and the widest lane blocking, checked bitwise against the
+/// 1-worker run *and* the scalar listings.
 #[test]
 fn prop_wss_reductions_bit_identical_1_to_4_workers() {
     for (seed, n) in [(1u32, 4095usize), (2, 4096), (3, 16384), (4, 50_003)] {
         let (grad, flags, diag, ki) = wss_inputs(seed, n);
-        let ex1 = simd::wss_extrema_par(&grad, &flags, 1);
+        let ex1 = simd::wss_extrema_par(LaneProfile::Sve512, &grad, &flags, 1);
         // Scalar oracles.
         let (obi, ogmin) = match wss::wss_i(&grad, &flags) {
             Some((b, g)) => (Some(b), g),
@@ -53,15 +54,20 @@ fn prop_wss_reductions_bit_identical_1_to_4_workers() {
         let sj = wss::wss_j_scalar(
             &grad, &flags, SIGN_ANY, LOW, ex1.gmin, 1.7, &diag, &ki, 0, n, 1e-12,
         );
-        for threads in 1..=4usize {
-            let ex = simd::wss_extrema_par(&grad, &flags, threads);
-            assert_eq!(ex, ex1, "extrema n={n} threads={threads}");
-            for vectorized in [false, true] {
-                let vj = simd::wss_j_par(
-                    &grad, &flags, SIGN_ANY, LOW, ex1.gmin, 1.7, &diag, &ki, 1e-12, vectorized,
-                    threads,
-                );
-                assert_eq!(vj, sj, "wss_j n={n} threads={threads} vectorized={vectorized}");
+        for profile in LaneProfile::ALL {
+            for threads in 1..=4usize {
+                let ex = simd::wss_extrema_par(profile, &grad, &flags, threads);
+                assert_eq!(ex, ex1, "extrema n={n} {profile:?} threads={threads}");
+                for vectorized in [false, true] {
+                    let vj = simd::wss_j_par(
+                        profile, &grad, &flags, SIGN_ANY, LOW, ex1.gmin, 1.7, &diag, &ki, 1e-12,
+                        vectorized, threads,
+                    );
+                    assert_eq!(
+                        vj, sj,
+                        "wss_j n={n} {profile:?} threads={threads} vectorized={vectorized}"
+                    );
+                }
             }
         }
     }
@@ -79,19 +85,23 @@ fn prop_gradient_updates_bit_identical_1_to_4_workers() {
     let ri: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
     let rj: Vec<f64> = (0..n).map(|_| g.sample(&mut e)).collect();
     let mut pair1 = g0.clone();
-    simd::update_grad_pair(&mut pair1, &ri, &rj, 0.8251, 1);
+    simd::update_grad_pair(LaneProfile::Sve512, &mut pair1, &ri, &rj, 0.8251, 1);
     let rows: Vec<std::sync::Arc<Vec<f64>>> = (0..6)
         .map(|_| std::sync::Arc::new((0..n).map(|_| g.sample(&mut e)).collect::<Vec<f64>>()))
         .collect();
     let deltas = [0.31, 0.0, -0.12, 0.0, 0.55, -0.9];
     let mut rec1 = g0.clone();
     simd::reconcile_grad(&mut rec1, &deltas, &rows, 1);
-    for threads in 2..=4usize {
-        let mut pair = g0.clone();
-        simd::update_grad_pair(&mut pair, &ri, &rj, 0.8251, threads);
-        for (i, (u, v)) in pair1.iter().zip(&pair).enumerate() {
-            assert_eq!(u.to_bits(), v.to_bits(), "pair threads={threads} idx={i}");
+    for profile in LaneProfile::ALL {
+        for threads in 1..=4usize {
+            let mut pair = g0.clone();
+            simd::update_grad_pair(profile, &mut pair, &ri, &rj, 0.8251, threads);
+            for (i, (u, v)) in pair1.iter().zip(&pair).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "pair {profile:?} threads={threads} idx={i}");
+            }
         }
+    }
+    for threads in 2..=4usize {
         let mut rec = g0.clone();
         simd::reconcile_grad(&mut rec, &deltas, &rows, threads);
         for (i, (u, v)) in rec1.iter().zip(&rec).enumerate() {
